@@ -1,0 +1,25 @@
+//! End-to-end LM driver (the repo's headline validation): train the
+//! Transformer LM on the synthetic corpus with Quant-Noise, log the
+//! loss curve, iPQ-quantize, and compare against the no-noise baseline
+//! at the same compressed size.
+//!
+//!     make artifacts && cargo run --release --example lm_quantnoise
+//!     # quick smoke: cargo run --release --example lm_quantnoise -- --scale 0.1
+
+use anyhow::Result;
+use quant_noise::bench_harness::common::Workbench;
+use quant_noise::bench_harness::e2e;
+
+fn main() -> Result<()> {
+    quant_noise::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let mut wb = Workbench::new(std::path::Path::new("artifacts"))?;
+    wb.step_scale = scale;
+    e2e::run(&wb, "lm_tiny", None)
+}

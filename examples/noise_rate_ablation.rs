@@ -1,0 +1,24 @@
+//! Mini Fig. 3: sweep the Quant-Noise rate p for the proxy noise and
+//! report quantized perplexity per point — shows the paper's
+//! "moderate p beats both extremes" shape on the tiny LM.
+//!
+//!     make artifacts && cargo run --release --example noise_rate_ablation -- --scale 0.25
+
+use anyhow::Result;
+use quant_noise::bench_harness::common::Workbench;
+use quant_noise::bench_harness::figures;
+
+fn main() -> Result<()> {
+    quant_noise::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let mut wb = Workbench::new(std::path::Path::new("artifacts"))?;
+    wb.step_scale = scale;
+    figures::fig3(&wb, "lm_tiny")?;
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, run one gradient step and one
+//! eval pass, and round-trip a weight matrix through Product
+//! Quantization — the whole public API surface in ~60 lines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use quant_noise::model::tensor::Tensor;
+use quant_noise::quant::pq::{fit, PqConfig};
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
+use quant_noise::runtime::manifest::Manifest;
+use quant_noise::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    quant_noise::util::logging::init();
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+
+    // A session owns persistent device buffers for one model's params.
+    let (mut sess, params) = ModelSession::new(&rt, &manifest, "lm_tiny")?;
+    let meta = sess.meta.clone();
+    println!(
+        "model lm_tiny: {} params across {} tensors",
+        params.total_params(),
+        params.len()
+    );
+
+    // One Quant-Noise gradient step (proxy noise, p = 0.1).
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let (loss, grads) = sess.grad(
+        "grad_mix",
+        &BatchInput::Tokens(&tokens),
+        &targets,
+        &keep,
+        0.1, // noise rate p
+        42,  // mask seed
+    )?;
+    println!("grad step: loss {loss:.4}, {} gradient tensors", grads.len());
+
+    // One eval pass → perplexity.
+    let (sum_nll, _) = sess.eval("eval", &BatchInput::Tokens(&tokens), &targets, &keep)?;
+    println!("eval: ppl {:.2}", (sum_nll / n as f64).exp());
+
+    // Product-quantize one weight matrix (paper Eq. 1/3).
+    let w: &Tensor = params.get("layer00.w1").unwrap();
+    let (rows, cols) = w.view2d();
+    let pq = fit(&w.data, rows, cols, &PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 8 }, &mut Pcg::new(1));
+    let err = pq.objective(&w.data) / w.numel() as f64;
+    println!(
+        "PQ round-trip of layer00.w1: {} -> {} bits ({:.1}x), mse/elem {err:.5}",
+        w.numel() * 32,
+        pq.storage_bits(),
+        (w.numel() * 32) as f64 / pq.storage_bits() as f64,
+    );
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Vision pipeline (EfficientNet/ImageNet stand-in): train MicroConv on
+//! the procedural pattern dataset with Quant-Noise on conv weights
+//! (block sizes 4 for 1×1, 9 for dw3×3 per the paper), iPQ-quantize,
+//! report Table-1-shaped rows.
+//!
+//!     make artifacts && cargo run --release --example vision_quantnoise
+
+use anyhow::Result;
+use quant_noise::bench_harness::common::Workbench;
+use quant_noise::bench_harness::e2e;
+
+fn main() -> Result<()> {
+    quant_noise::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let mut wb = Workbench::new(std::path::Path::new("artifacts"))?;
+    wb.step_scale = scale;
+    e2e::run(&wb, "img_tiny", None)
+}

@@ -1,0 +1,352 @@
+"""AOT export: lower every entry point to HLO *text* + manifest.json.
+
+This is the only place Python touches the pipeline; after `make
+artifacts` the Rust binary is self-contained.  HLO text (NOT
+`.serialize()`): jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Per model config this writes:
+  artifacts/<model>.<entry>.hlo.txt   — one compiled-ready module each
+  artifacts/<model>.init.bin          — initial params, QNP1 format
+  artifacts/manifest.json             — input/output orders, param specs
+
+Entry points (DESIGN.md §1):
+  grad_mix / grad_int8 / grad_int4 / grad_int8_channel /
+  grad_int4_channel / grad_mix_ldste : (params*, params_hat*, tokens,
+      targets, layer_keep, rate, seed) → (loss, grads*)
+  eval / eval_int8act : (params*, tokens, targets, layer_keep)
+      → (sum_nll, sum_correct)
+
+QNP1 format: magic b"QNP1", u32 LE header length, JSON header
+{"params": [{"name", "shape"}...]}, then concatenated f32 LE data in
+header order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import convnet, model
+
+GRAD_ENTRIES = [
+    "grad_mix",
+    "grad_int8",
+    "grad_int4",
+    "grad_int8_channel",
+    "grad_int4_channel",
+]
+LM_ENTRIES = GRAD_ENTRIES + ["grad_mix_ldste", "eval", "eval_int8act"]
+CLS_ENTRIES = ["grad_mix", "eval"]
+IMG_ENTRIES = GRAD_ENTRIES + ["eval", "eval_int8act"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_qnp1(path: str, names, params):
+    header = json.dumps(
+        {"params": [{"name": n, "shape": list(params[n].shape)} for n in names]}
+    ).encode()
+    with open(path, "wb") as f:
+        f.write(b"QNP1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for n in names:
+            f.write(np.asarray(params[n], np.float32).tobytes())
+
+
+# ------------------------------------------------------------------ LM ---
+
+def build_transformer(cfg_dict):
+    cfg = model.TransformerConfig(
+        vocab=cfg_dict["vocab"],
+        d_model=cfg_dict["d_model"],
+        n_layers=cfg_dict["n_layers"],
+        n_heads=cfg_dict["n_heads"],
+        d_ffn=cfg_dict["d_ffn"],
+        seq_len=cfg_dict["seq_len"],
+        batch=cfg_dict["batch"],
+        noise_block_size=cfg_dict.get("noise_block_size", 8),
+        n_classes=cfg_dict.get("n_classes", 0),
+    )
+    task = cfg_dict["task"]
+    names = sorted(model.param_shapes(cfg))
+    shapes = model.param_shapes(cfg)
+    specs = model.quant_specs(cfg)
+
+    tok_shape = (cfg.batch, cfg.seq_len)
+    tgt_shape = tok_shape if task == "lm" else (cfg.batch,)
+
+    def grad_entry(kind, ldste=False):
+        c = (
+            model.TransformerConfig(**{**cfg.__dict__, "layerdrop_ste": True})
+            if ldste
+            else cfg
+        )
+        loss_fn = model.noisy_loss_fn(c, kind, task)
+
+        def fn(*flat):
+            n = len(names)
+            params = dict(zip(names, flat[:n]))
+            params_hat = dict(zip(names, flat[n : 2 * n]))
+            tokens, targets, layer_keep, rate, seed = flat[2 * n :]
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, params_hat, tokens, targets, layer_keep, rate, seed
+            )
+            return (loss,) + tuple(grads[n] for n in names)
+
+        args = (
+            [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names] * 2
+            + [
+                jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+                jax.ShapeDtypeStruct(tgt_shape, jnp.int32),
+                jax.ShapeDtypeStruct((cfg.n_layers,), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ]
+        )
+        return fn, args
+
+    def eval_entry(int8act=False):
+        c = (
+            model.TransformerConfig(**{**cfg.__dict__, "int8_activations": True})
+            if int8act
+            else cfg
+        )
+        ev = model.cls_eval if task == "cls" else model.lm_eval
+
+        def fn(*flat):
+            n = len(names)
+            params = dict(zip(names, flat[:n]))
+            tokens, targets, layer_keep = flat[n:]
+            return ev(c, params, tokens, targets, layer_keep)
+
+        args = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names] + [
+            jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            jax.ShapeDtypeStruct(tgt_shape, jnp.int32),
+            jax.ShapeDtypeStruct((cfg.n_layers,), jnp.float32),
+        ]
+        return fn, args
+
+    entries = {}
+    wanted = LM_ENTRIES if task == "lm" else CLS_ENTRIES
+    for e in wanted:
+        if e.startswith("grad"):
+            kind = "mix" if "mix" in e else e[len("grad_") :]
+            entries[e] = grad_entry(kind, ldste=e.endswith("ldste"))
+        else:
+            entries[e] = eval_entry(int8act=e.endswith("int8act"))
+
+    param_meta = [
+        {
+            "name": n,
+            "shape": list(shapes[n]),
+            "structure": model.structure_of(n),
+            "noised": n in specs,
+            "view": list(specs[n][:2]) if n in specs else None,
+            "block_size": specs[n][2] if n in specs else None,
+        }
+        for n in names
+    ]
+    init = model.init_params(cfg, seed=0)
+    meta = {
+        "task": task,
+        "n_layers": cfg.n_layers,
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "tokens_shape": list(tok_shape),
+        "targets_shape": list(tgt_shape),
+        "vocab": cfg.vocab,
+        "n_classes": cfg.n_classes,
+    }
+    return names, init, entries, param_meta, meta
+
+
+# ----------------------------------------------------------------- IMG ---
+
+def build_convnet(cfg_dict):
+    cfg = convnet.ConvConfig(
+        image_size=cfg_dict["image_size"],
+        in_channels=cfg_dict["in_channels"],
+        stem_channels=cfg_dict["stem_channels"],
+        blocks=tuple(tuple(b) for b in cfg_dict["blocks"]),
+        n_classes=cfg_dict["n_classes"],
+        batch=cfg_dict["batch"],
+    )
+    names = sorted(convnet.param_shapes(cfg))
+    shapes = convnet.param_shapes(cfg)
+    specs = convnet.quant_specs(cfg)
+    img_shape = (cfg.batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    lbl_shape = (cfg.batch,)
+    n_blocks = len(cfg.blocks)
+
+    def grad_entry(kind):
+        loss_fn = convnet.noisy_loss_fn(cfg, kind)
+
+        def fn(*flat):
+            n = len(names)
+            params = dict(zip(names, flat[:n]))
+            params_hat = dict(zip(names, flat[n : 2 * n]))
+            images, labels, block_keep, rate, seed = flat[2 * n :]
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, params_hat, images, labels, block_keep, rate, seed
+            )
+            return (loss,) + tuple(grads[n] for n in names)
+
+        args = (
+            [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names] * 2
+            + [
+                jax.ShapeDtypeStruct(img_shape, jnp.float32),
+                jax.ShapeDtypeStruct(lbl_shape, jnp.int32),
+                jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ]
+        )
+        return fn, args
+
+    def eval_entry(int8act=False):
+        c = (
+            convnet.ConvConfig(**{**cfg.__dict__, "int8_activations": True})
+            if int8act
+            else cfg
+        )
+
+        def fn(*flat):
+            n = len(names)
+            params = dict(zip(names, flat[:n]))
+            images, labels, block_keep = flat[n:]
+            return convnet.img_eval(c, params, images, labels, block_keep)
+
+        args = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names] + [
+            jax.ShapeDtypeStruct(img_shape, jnp.float32),
+            jax.ShapeDtypeStruct(lbl_shape, jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ]
+        return fn, args
+
+    entries = {}
+    for e in IMG_ENTRIES:
+        if e.startswith("grad"):
+            kind = "mix" if "mix" in e else e[len("grad_") :]
+            entries[e] = grad_entry(kind)
+        else:
+            entries[e] = eval_entry(int8act=e.endswith("int8act"))
+
+    param_meta = [
+        {
+            "name": n,
+            "shape": list(shapes[n]),
+            "structure": convnet.structure_of(n),
+            "noised": n in specs,
+            "view": list(specs[n][:2]) if n in specs else None,
+            "block_size": specs[n][2] if n in specs else None,
+        }
+        for n in names
+    ]
+    init = convnet.init_params(cfg, seed=0)
+    meta = {
+        "task": "img",
+        "n_layers": n_blocks,
+        "batch": cfg.batch,
+        "seq_len": 0,
+        "tokens_shape": list(img_shape),
+        "targets_shape": list(lbl_shape),
+        "vocab": 0,
+        "n_classes": cfg.n_classes,
+    }
+    return names, init, entries, param_meta, meta
+
+
+# ---------------------------------------------------------------- main ---
+
+def export_model(cfg_dict, out_dir, only_entries=None, manifest_models=None):
+    name = cfg_dict["name"]
+    task = cfg_dict["task"]
+    build = build_convnet if task == "img" else build_transformer
+    names, init, entries, param_meta, meta = build(cfg_dict)
+
+    wanted = cfg_dict.get("entries") or list(entries)
+    if only_entries:
+        wanted = [e for e in wanted if e in only_entries]
+
+    entry_meta = {}
+    for e in wanted:
+        fn, args = entries[e]
+        # keep_unused: intN-noise grads ignore params_hat; without this
+        # XLA would prune them and every entry would need its own input
+        # layout. A uniform signature keeps the Rust runtime simple.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{e}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # Input layout descriptor the Rust runtime follows verbatim.
+        n = len(names)
+        if e.startswith("grad"):
+            inputs = (
+                [f"param:{p}" for p in names]
+                + [f"param_hat:{p}" for p in names]
+                + ["tokens", "targets", "layer_keep", "rate", "seed"]
+            )
+            outputs = ["loss"] + [f"grad:{p}" for p in names]
+        else:
+            inputs = [f"param:{p}" for p in names] + [
+                "tokens", "targets", "layer_keep",
+            ]
+            outputs = ["sum_nll", "sum_correct"]
+        entry_meta[e] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  [{name}] {e}: {len(text)} chars, {len(inputs)} inputs")
+
+    write_qnp1(os.path.join(out_dir, f"{name}.init.bin"), names, init)
+    manifest_models[name] = {
+        **meta,
+        "config": cfg_dict,
+        "params": param_meta,
+        "entries": entry_meta,
+        "init": f"{name}.init.bin",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", nargs="+", required=True)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--entries", nargs="*", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    models = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            models = json.load(f).get("models", {})
+
+    for cfg_path in args.configs:
+        with open(cfg_path) as f:
+            cfg_dict = json.load(f)
+        print(f"exporting {cfg_dict['name']} ({cfg_dict['task']})")
+        export_model(cfg_dict, args.out_dir, args.entries, models)
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "models": models}, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(models)} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""L2: "MicroConv" — depthwise-separable ConvNet with Quant-Noise.
+
+Stands in for EfficientNet-B3/ImageNet (DESIGN.md §Substitutions): it has
+exactly the conv kinds the paper assigns block sizes to — 1×1 pointwise
+convs (noise/PQ block size 4 along input channels), depthwise 3×3 convs
+(block size 9 = one whole filter) and a linear classifier (block size 4).
+Inverted-residual shape (expand 1×1 → dw3×3 → project 1×1, residual when
+stride 1), SE blocks omitted (the paper excludes them from noise anyway).
+
+NHWC activations, HWIO conv weights.  Each conv weight's canonical 2-D
+view (the one Quant-Noise and coordinator-side PQ share) is:
+  * pointwise 1×1 (1,1,I,O):  (O, I),  blocks of 4 along I
+  * depthwise 3×3 (3,3,C,1):  (C, 9),  one 9-element block per filter
+  * stem 3×3 (3,3,I,O):       (O, 9·I), blocks of 9 (whole 3×3 slice)
+  * classifier (n_classes,D): (n_classes, D), blocks of 4
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import qnoise
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    image_size: int = 16
+    in_channels: int = 3
+    stem_channels: int = 16
+    # (channels, stride, expand) per inverted-residual block
+    blocks: tuple = ((16, 1, 2), (24, 2, 2), (24, 1, 2), (32, 2, 2))
+    n_classes: int = 10
+    batch: int = 32
+    int8_activations: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.blocks[-1][0]
+
+
+# ------------------------------------------------------------- params ---
+
+def param_shapes(cfg: ConvConfig):
+    shapes = {"stem": (3, 3, cfg.in_channels, cfg.stem_channels)}
+    cin = cfg.stem_channels
+    for i, (cout, _stride, expand) in enumerate(cfg.blocks):
+        p = f"block{i:02d}."
+        mid = cin * expand
+        shapes[p + "expand"] = (1, 1, cin, mid)
+        shapes[p + "dw"] = (3, 3, 1, mid)  # HWIO, I=1 for depthwise
+        shapes[p + "project"] = (1, 1, mid, cout)
+        shapes[p + "bn1_g"] = (mid,)
+        shapes[p + "bn1_b"] = (mid,)
+        shapes[p + "bn2_g"] = (mid,)
+        shapes[p + "bn2_b"] = (mid,)
+        shapes[p + "bn3_g"] = (cout,)
+        shapes[p + "bn3_b"] = (cout,)
+        cin = cout
+    shapes["head_g"] = (cin,)
+    shapes["head_b"] = (cin,)
+    shapes["cls"] = (cfg.n_classes, cin)
+    return shapes
+
+
+def quant_specs(cfg: ConvConfig):
+    """2-D view + block size per noised weight (paper §7.6/§7.8 sizes)."""
+    specs = {}
+    stem = param_shapes(cfg)["stem"]
+    # stem 3×3: (O, 9·I) with 9-element blocks (whole 3×3 spatial slice)
+    specs["stem"] = (stem[3], 9 * stem[2], 9)
+    cin = cfg.stem_channels
+    for i, (cout, _stride, expand) in enumerate(cfg.blocks):
+        p = f"block{i:02d}."
+        mid = cin * expand
+        specs[p + "expand"] = (mid, cin, 4)    # 1×1: bs 4 along in-ch
+        specs[p + "dw"] = (mid, 9, 9)          # dw3×3: bs 9 (whole filter)
+        specs[p + "project"] = (cout, mid, 4)  # 1×1: bs 4
+        cin = cout
+    specs["cls"] = (cfg.n_classes, cin, 4)
+    return specs
+
+
+def structure_of(name: str) -> str:
+    if name == "stem":
+        return "stem"
+    if name == "cls":
+        return "cls"
+    if name.endswith("expand") or name.endswith("project"):
+        return "conv1x1"
+    if name.endswith("dw"):
+        return "dw3x3"
+    return "norm"
+
+
+def to2d(name: str, w, cfg: ConvConfig):
+    """Canonical 2-D view used by noise AND coordinator-side PQ."""
+    if w.ndim == 2:
+        return w
+    kh, kw, ci, co = w.shape
+    # depthwise (3,3,1,C) and full/pointwise (kh,kw,I,O) share the same
+    # canonical layout: one row per output channel, kh·kw·I columns.
+    return w.transpose(3, 0, 1, 2).reshape(co, kh * kw * ci)
+
+
+def from2d(name: str, w2d, orig_shape):
+    kh, kw, ci, co = orig_shape
+    return w2d.reshape(co, kh, kw, ci).transpose(1, 2, 3, 0)
+
+
+def init_params(cfg: ConvConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] * shape[1] * shape[2] if len(shape) == 4 else shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+            )
+    return params
+
+
+# ------------------------------------------------------------ forward ---
+
+def _norm_act(x, g, b, act=True, eps=1e-5):
+    # batch-free "layer" normalization over channels (GroupNorm(1)-style):
+    # keeps eval independent of batch statistics, which matters because
+    # the coordinator evaluates quantized weights with batch size 1.
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+    return jax.nn.relu(x) if act else x
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def forward(cfg: ConvConfig, params, images, block_keep):
+    """images (B, H, W, C) f32 → logits (B, n_classes)."""
+    aq = (lambda t: qnoise.fake_quant_activations(t)) if cfg.int8_activations else (lambda t: t)
+    x = aq(_conv(images, params["stem"], stride=1))
+    cin = cfg.stem_channels
+    for i, (cout, stride, expand) in enumerate(cfg.blocks):
+        p = f"block{i:02d}."
+        mid = cin * expand
+        h = _conv(x, params[p + "expand"])
+        h = _norm_act(h, params[p + "bn1_g"], params[p + "bn1_b"])
+        h = _conv(h, params[p + "dw"], stride=stride, groups=mid)
+        h = _norm_act(h, params[p + "bn2_g"], params[p + "bn2_b"])
+        h = _conv(h, params[p + "project"])
+        h = _norm_act(h, params[p + "bn3_g"], params[p + "bn3_b"], act=False)
+        if stride == 1 and cin == cout:
+            # residual block — the LayerDrop/sharing "chunk" unit (§7.6)
+            h = x + block_keep[i] * h
+        x = aq(h)
+        cin = cout
+    x = _norm_act(x, params["head_g"], params["head_b"])
+    pooled = jnp.mean(x, axis=(1, 2))
+    return aq(pooled) @ params["cls"].T
+
+
+def img_loss(cfg: ConvConfig, params, images, labels, block_keep):
+    logits = forward(cfg, params, images, block_keep)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def img_eval(cfg: ConvConfig, params, images, labels, block_keep):
+    logits = forward(cfg, params, images, block_keep)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(correct)
+
+
+# ------------------------------------------------- noise-wrapped grads ---
+
+def noisy_loss_fn(cfg: ConvConfig, kind: str):
+    specs = quant_specs(cfg)
+
+    def fn(params, params_hat, images, labels, block_keep, rate, seed):
+        base = jax.random.PRNGKey(seed)
+        noised = {}
+        for i, name in enumerate(sorted(params)):
+            w = params[name]
+            if name not in specs:
+                noised[name] = w
+                continue
+            rows, cols, bs = specs[name]
+            w2d = to2d(name, w, cfg).reshape(rows, cols)
+            w_hat2d = None
+            if kind == "mix":
+                w_hat2d = to2d(name, params_hat[name], cfg).reshape(rows, cols)
+            key = jax.random.fold_in(base, i)
+            n2d = qnoise.apply_noise(name, w2d, kind, rate, key, bs, w_hat2d)
+            noised[name] = (
+                n2d if w.ndim == 2 else from2d(name, n2d, w.shape)
+            )
+        return img_loss(cfg, noised, images, labels, block_keep)
+
+    return fn

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the Quant-Noise hot-spots (interpret=True —
+# CPU-PJRT executable; see DESIGN.md §Hardware-Adaptation).
+from . import fake_quant, pq_assign, quant_noise, ref  # noqa: F401

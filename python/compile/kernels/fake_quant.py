@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: uniform intN fake-quantization (paper Eq. 2/9).
+
+Two-pass structure: the scale/zero-point depend on the global min/max of
+the tensor (the paper updates s and z during training from the live
+weights), which a tiled kernel cannot see locally.  Pass 1 is a cheap
+jnp reduction (XLA fuses it); pass 2 — the elementwise rounding over the
+whole tensor, the actual hot loop — is the Pallas kernel.  Per-channel
+mode keeps one (s, z) per output row, so the row-tiled kernel computes
+its own reduction per row and needs only one pass.
+
+Memory-bound like the mix kernel: read W once, write W_hat once.
+interpret=True for CPU-PJRT executability (see quant_noise.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 8
+
+
+def _round_kernel(w_ref, sz_ref, o_ref, *, qmax: float):
+    w = w_ref[...]
+    s = sz_ref[0]
+    z = sz_ref[1]
+    q = jnp.clip(jnp.round(w / s) - z, 0.0, qmax)
+    o_ref[...] = (q + z) * s
+
+
+def _round_channel_kernel(w_ref, o_ref, *, qmax: float):
+    """Per-channel: each row computes its own (s, z) then rounds."""
+    w = w_ref[...]
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
+    s = (hi - lo) / qmax
+    s = jnp.where(s <= 0.0, jnp.float32(1.0), s)
+    z = jnp.round(lo / s)
+    q = jnp.clip(jnp.round(w / s) - z, 0.0, qmax)
+    o_ref[...] = (q + z) * s
+
+
+def fake_quant(w, bits: int):
+    """Per-tensor intN fake-quant; forward only (wrap for STE)."""
+    qmax = float(2**bits - 1)
+    lo = jnp.min(w)
+    hi = jnp.max(w)
+    s = (hi - lo) / qmax
+    s = jnp.where(s <= 0.0, jnp.float32(1.0), s)
+    z = jnp.round(lo / s)
+    sz = jnp.stack([s, z])
+    out_rows, in_dim = w.shape
+    tile = TILE_ROWS if out_rows % TILE_ROWS == 0 else 1
+    grid = (out_rows // tile,)
+    return pl.pallas_call(
+        functools.partial(_round_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, in_dim), jnp.float32),
+        interpret=True,
+    )(w, sz)
+
+
+def fake_quant_channel(w, bits: int):
+    """Per-channel intN fake-quant; forward only (wrap for STE)."""
+    qmax = float(2**bits - 1)
+    out_rows, in_dim = w.shape
+    tile = TILE_ROWS if out_rows % TILE_ROWS == 0 else 1
+    grid = (out_rows // tile,)
+    return pl.pallas_call(
+        functools.partial(_round_channel_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, in_dim), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, in_dim), jnp.float32),
+        interpret=True,
+    )(w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant_frozen(w, bits: int, per_channel: bool = False):
+    """fake_quant with ZERO backward.
+
+    Used when the quantized image feeds the mix kernel's ``w_hat`` input:
+    the mix's STE already returns a zero cotangent there, but JAX cannot
+    prove that symbolically and would otherwise try to transpose the
+    Pallas call.  Declaring the vjp as zero cuts the path.
+    """
+    return fake_quant_channel(w, bits) if per_channel else fake_quant(w, bits)
+
+
+def _fqz_vjp_fwd(w, bits, per_channel):
+    return fake_quant_frozen(w, bits, per_channel), None
+
+
+def _fqz_vjp_bwd(bits, per_channel, _res, g):
+    return (jnp.zeros_like(g),)
+
+
+fake_quant_frozen.defvjp(_fqz_vjp_fwd, _fqz_vjp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant_ste(w, bits: int, per_channel: bool = False):
+    """intN fake-quant with straight-through backward (QAT building block).
+
+    custom_vjp (not stop_gradient): pallas_call has no JVP rule, so the
+    linearizer must never see inside the kernel.
+    """
+    return fake_quant_channel(w, bits) if per_channel else fake_quant(w, bits)
+
+
+def _fq_vjp_fwd(w, bits, per_channel):
+    return fake_quant_ste(w, bits, per_channel), None
+
+
+def _fq_vjp_bwd(bits, per_channel, _res, g):
+    return (g,)  # STE: identity cotangent
+
+
+fake_quant_ste.defvjp(_fq_vjp_fwd, _fq_vjp_bwd)

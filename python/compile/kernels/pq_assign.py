@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: PQ nearest-centroid assignment (paper Eq. 10).
+
+The GPU formulation of PQ encode is a per-thread scan over centroids;
+the TPU re-think (DESIGN.md §Hardware-Adaptation) turns the distance
+computation into a matmul on the MXU:
+
+    argmin_c |b - c|^2 = argmin_c (|c|^2 - 2 b.c)
+
+so each (subvector-tile x centroid-set) step is a (T, d) @ (d, K)
+contraction — systolic-array work — followed by a cheap row argmin on
+the VPU.  |b|^2 is constant per row and dropped.
+
+Tiling: subvectors are tiled in chunks of TILE_N rows; the centroid
+matrix (K x d, typically 256 x 8 = 8 KiB) fits entirely in VMEM and is
+re-used by every grid step.  interpret=True as everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+
+
+def _assign_kernel(b_ref, c_ref, o_ref):
+    b = b_ref[...]          # (tile, d)
+    c = c_ref[...]          # (K, d)
+    dots = jnp.dot(b, c.T)  # MXU: (tile, K)
+    c2 = jnp.sum(c * c, axis=1)
+    d2 = c2[None, :] - 2.0 * dots
+    o_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def pq_assign(subvectors, centroids):
+    """Nearest-centroid codes: (n, d), (K, d) -> int32 (n,)."""
+    n, d = subvectors.shape
+    k, d2 = centroids.shape
+    assert d == d2, (d, d2)
+    tile = TILE_N if n % TILE_N == 0 else 1
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(subvectors, centroids)
+
+
+def pq_decode(codes, centroids):
+    """Gather reconstruction; a pure gather, left to XLA (no kernel win)."""
+    return centroids[codes]

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: blockwise Quant-Noise mix (paper Eq. 6/7 + STE).
+
+The compute hot-spot of Quant-Noise training is the per-forward weight
+transformation: for every weight matrix, select a random subset of
+blocks and replace them by their quantized image.  This kernel fuses the
+mask expansion and the select into a single pass over W — each of W,
+W_hat and the per-block uniforms is read exactly once from HBM and
+W_noise is written once (arithmetic intensity ~ 1 op/byte: memory bound,
+so the BlockSpec's job is simply to touch every byte once, streaming
+row-tiles through VMEM).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks row tiles of
+``TILE_ROWS`` rows; each tile holds the full ``in`` dimension so the
+per-block mask broadcast (repeat along the lane axis) stays inside one
+VMEM tile.  f32 tile of (8, in) costs 32*in bytes — for in <= 4096 this
+is ~128 KiB x 3 buffers, well under the ~16 MiB VMEM budget, leaving
+room for double buffering.
+
+interpret=True always: CPU PJRT cannot run Mosaic custom-calls; the
+interpret path lowers to plain HLO which the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 8
+
+
+def _mix_kernel(w_ref, w_hat_ref, unif_ref, rate_ref, o_ref, *, block_size: int):
+    """One row-tile: o = w + mask*(w_hat - w), mask per block of lanes."""
+    w = w_ref[...]
+    w_hat = w_hat_ref[...]
+    unif = unif_ref[...]  # (tile_rows, in // block_size)
+    rate = rate_ref[0]
+    mask = (unif < rate).astype(jnp.float32)
+    # Expand the per-block mask across the block_size lanes it governs.
+    rows, nblocks = unif.shape
+    m = jnp.repeat(mask, block_size, axis=1)
+    o_ref[...] = w + m * (w_hat - w)
+
+
+def quant_noise_mix_fwd(w, w_hat, unif, rate, *, block_size: int):
+    """Forward-only mix; no STE (used inside the custom-vjp wrapper)."""
+    out_rows, in_dim = w.shape
+    assert in_dim % block_size == 0, (in_dim, block_size)
+    nblocks = in_dim // block_size
+    assert unif.shape == (out_rows, nblocks), (unif.shape, out_rows, nblocks)
+    rate = jnp.asarray(rate, jnp.float32).reshape((1,))
+    # Row-tile the grid; pad-free because callers use multiple-of-8 rows
+    # (model dims are multiples of 8) — asserted here for safety.
+    tile = TILE_ROWS if out_rows % TILE_ROWS == 0 else 1
+    grid = (out_rows // tile,)
+    return pl.pallas_call(
+        functools.partial(_mix_kernel, block_size=block_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile, nblocks), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((tile, in_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, in_dim), jnp.float32),
+        interpret=True,
+    )(w, w_hat, unif, rate)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def quant_noise_mix(w, w_hat, unif, rate, block_size: int):
+    """Quant-Noise weight transformation with STE backward.
+
+    Matches ``ref.quant_noise_mix``: forward mixes in the quantized image
+    on selected blocks; backward is the identity w.r.t. ``w`` (straight
+    through estimator) and zero w.r.t. ``w_hat``/``unif``/``rate``.
+    (custom_vjp rather than stop_gradient: pallas_call has no JVP rule,
+    so linearization must never look inside the kernel.)
+    """
+    return quant_noise_mix_fwd(w, w_hat, unif, rate, block_size=block_size)
+
+
+def _mix_vjp_fwd(w, w_hat, unif, rate, block_size):
+    return quant_noise_mix_fwd(w, w_hat, unif, rate, block_size=block_size), None
+
+
+def _mix_vjp_bwd(block_size, _res, g):
+    # STE: pass the cotangent straight through to w; w_hat/unif/rate get 0.
+    rows, in_dim = g.shape
+    zero_unif = jnp.zeros((rows, in_dim // block_size), jnp.float32)
+    return (g, jnp.zeros_like(g), zero_unif, jnp.zeros((), jnp.float32))
+
+
+quant_noise_mix.defvjp(_mix_vjp_fwd, _mix_vjp_bwd)

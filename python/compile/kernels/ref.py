@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement, with no Pallas and no cleverness, the exact math the
+kernels must reproduce:
+
+  * ``quant_noise_mix`` — paper Eq. (6)/(7): replace a randomly selected
+    subset of weight *blocks* by their quantized image, with STE so the
+    backward sees the identity on noised blocks.
+  * ``fake_quant`` — paper Eq. (2)/(9): uniform intN rounding with scale
+    ``s`` and zero-point ``z``.
+  * ``pq_assign`` — paper Eq. (10): nearest-centroid assignment of
+    subvectors under squared L2.
+
+All oracles operate on 2-D weight matrices ``W`` of shape (out, in) with
+blocks of ``block_size`` contiguous elements along the *in* axis (the
+fairseq quant_noise convention; the paper's "block size 8" for linears).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_mask(unif: jnp.ndarray, rate) -> jnp.ndarray:
+    """Per-block Bernoulli(rate) noise mask from uniform(0,1) draws.
+
+    ``unif`` has one entry per block; returns 1.0 where the block is
+    *noised* (selected into J), 0.0 where it is left alone.
+    """
+    return (unif < rate).astype(jnp.float32)
+
+
+def expand_mask(mask_blocks: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Expand a (out, in//bs) block mask to elementwise (out, in)."""
+    return jnp.repeat(mask_blocks, block_size, axis=-1)
+
+
+def quant_noise_mix(w, w_hat, unif, rate, block_size: int):
+    """Eq. (6)/(7) with STE: ``w_noise = w + sg(mask * (w_hat - w))``.
+
+    * Forward: noised blocks take the value of ``w_hat`` (the quantized
+      image — zeros for phi_proxy, PQ-decoded weights for exact phi_PQ,
+      intN-rounded weights for scalar schemes).
+    * Backward: d w_noise / d w = identity everywhere — the straight
+      through estimator on noised blocks, true gradient elsewhere.
+    """
+    m = expand_mask(block_mask(unif, rate), block_size)
+    return w + jax.lax.stop_gradient(m * (w_hat - w))
+
+
+def int_qparams(w, bits: int):
+    """Scale and zero-point from the min/max of ``w`` (paper Eq. 2).
+
+    Degenerate (constant) tensors get s = 1 to avoid division by zero;
+    the round-trip error is then bounded by 1/2 (value rounds to the
+    nearest integer), mirroring PyTorch's scale=1 fallback.
+    """
+    lo = jnp.min(w)
+    hi = jnp.max(w)
+    qmax = jnp.float32(2**bits - 1)
+    s = (hi - lo) / qmax
+    s = jnp.where(s <= 0.0, jnp.float32(1.0), s)
+    z = jnp.round(lo / s)
+    return s, z
+
+
+def fake_quant(w, bits: int):
+    """Uniform intN fake-quantization, Eq. (2)/(9).
+
+    q = clip(round(w/s) - z, 0, 2^N - 1);  w_hat = (q + z) * s
+    (the paper's (round(w/s + z') - z') * s in the opposite sign
+    convention; the clamp is explicit so out-of-range values saturate
+    exactly as integer hardware would).
+    """
+    s, z = int_qparams(w, bits)
+    qmax = jnp.float32(2**bits - 1)
+    q = jnp.clip(jnp.round(w / s) - z, 0.0, qmax)
+    return (q + z) * s
+
+
+def fake_quant_ste(w, bits: int):
+    """fake_quant with a straight-through estimator backward."""
+    return w + jax.lax.stop_gradient(fake_quant(w, bits) - w)
+
+
+def fake_quant_channel(w, bits: int):
+    """Per-channel (axis 0 = output channel) intN fake-quantization."""
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
+    qmax = jnp.float32(2**bits - 1)
+    s = (hi - lo) / qmax
+    s = jnp.where(s <= 0.0, jnp.float32(1.0), s)
+    z = jnp.round(lo / s)
+    q = jnp.clip(jnp.round(w / s) - z, 0.0, qmax)
+    return (q + z) * s
+
+
+def pq_assign(subvectors, centroids):
+    """Nearest centroid per subvector (paper Eq. 10).
+
+    subvectors: (n, d); centroids: (K, d) → int32 (n,) of argmin indices.
+    Ties broken toward the lower index (argmin convention).
+    """
+    # |b - c|^2 = |b|^2 - 2 b.c + |c|^2 ; |b|^2 is constant per row.
+    dots = subvectors @ centroids.T
+    c2 = jnp.sum(centroids * centroids, axis=1)
+    d2 = c2[None, :] - 2.0 * dots
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def pq_decode(codes, centroids):
+    """Reconstruct (n, d) subvectors from codes (n,) and centroids (K, d)."""
+    return centroids[codes]

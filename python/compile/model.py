@@ -1,0 +1,249 @@
+"""L2: Transformer language model / sequence classifier with Quant-Noise.
+
+Pre-norm Transformer (Baevski & Auli-style block structure, adaptive
+input/softmax replaced by a tied full softmax — the synthetic corpus
+vocabulary is small; see DESIGN.md §Substitutions).  All linear weights
+use the (out, in) layout with ``y = x @ W.T``; Quant-Noise blocks run
+along the ``in`` axis (block size 8, the paper's Transformer setting).
+
+The model is a pure function of a params dict so that:
+  * jax.grad gives the grad artifact,
+  * the coordinator owns every parameter (Rust init matches `init_params`),
+  * LayerDrop is an input mask `layer_keep[L]`, weight sharing is the
+    coordinator feeding identical buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import qnoise
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ffn: int = 512
+    seq_len: int = 64
+    batch: int = 8
+    noise_block_size: int = 8
+    # classifier head (sequence classification variant); 0 = LM only
+    n_classes: int = 0
+    layerdrop_ste: bool = False
+    int8_activations: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------- params ---
+
+def param_shapes(cfg: TransformerConfig):
+    """name → shape, in the canonical (sorted-name) order used everywhere."""
+    shapes = {"embed": (cfg.vocab, cfg.d_model)}
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        shapes[p + "wq"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wk"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wv"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wo"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "w1"] = (cfg.d_ffn, cfg.d_model)
+        shapes[p + "w2"] = (cfg.d_model, cfg.d_ffn)
+        shapes[p + "ln1_g"] = (cfg.d_model,)
+        shapes[p + "ln1_b"] = (cfg.d_model,)
+        shapes[p + "ln2_g"] = (cfg.d_model,)
+        shapes[p + "ln2_b"] = (cfg.d_model,)
+    shapes["lnf_g"] = (cfg.d_model,)
+    shapes["lnf_b"] = (cfg.d_model,)
+    if cfg.n_classes:
+        shapes["cls"] = (cfg.n_classes, cfg.d_model)
+    return shapes
+
+
+def quant_specs(cfg: TransformerConfig):
+    """name → (rows, cols, noise_block_size) for every *noised* weight.
+
+    Norm scales/biases are excluded (the paper noise targets FFN,
+    embeddings and attention).  Also doubles as the PQ layout spec the
+    coordinator reads from the manifest: structure group per name.
+    """
+    bs = cfg.noise_block_size
+    specs = {"embed": (cfg.vocab, cfg.d_model, bs)}
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        for w in ("wq", "wk", "wv", "wo"):
+            specs[p + w] = (cfg.d_model, cfg.d_model, bs)
+        specs[p + "w1"] = (cfg.d_ffn, cfg.d_model, bs)
+        specs[p + "w2"] = (cfg.d_model, cfg.d_ffn, bs)
+    if cfg.n_classes:
+        specs["cls"] = (cfg.n_classes, cfg.d_model, 4)
+    return specs
+
+
+def structure_of(name: str) -> str:
+    """Paper §7.11.4 structure groups: emb / attn / ffn / cls / norm."""
+    if name == "embed":
+        return "emb"
+    if name == "cls":
+        return "cls"
+    if name.endswith(("wq", "wk", "wv", "wo")):
+        return "attn"
+    if name.endswith(("w1", "w2")):
+        return "ffn"
+    return "norm"
+
+
+def init_params(cfg: TransformerConfig, seed: int = 0):
+    """Scaled-normal init; the Rust coordinator reproduces this exactly
+    (same PCG stream, see rust/src/model/params.rs) so artifacts and
+    host state always agree."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+            )
+    return params
+
+
+# ------------------------------------------------------------ forward ---
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: TransformerConfig, p, x, causal: bool):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w.T).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, jnp.float32(-1e9))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return ctx @ p["wo"].T
+
+
+def _residual(cfg: TransformerConfig, x, branch, keep):
+    """LayerDrop residual: forward drops the branch when keep==0.
+
+    Default (paper §4.2): no STE — a dropped branch contributes nothing
+    to forward or backward.  layerdrop_ste=True (Table 11 ablation)
+    keeps the backward of the *kept* computation: forward uses
+    x + keep·f(x), backward pretends keep==1.
+    """
+    if cfg.layerdrop_ste:
+        full = x + branch
+        dropped = x + keep * branch
+        return full + jax.lax.stop_gradient(dropped - full)
+    return x + keep * branch
+
+
+def _act_q(cfg: TransformerConfig, x):
+    return qnoise.fake_quant_activations(x) if cfg.int8_activations else x
+
+
+def forward(cfg: TransformerConfig, params, tokens, layer_keep, causal=True):
+    """tokens (B, T) int32 → hidden states (B, T, D)."""
+    x = params["embed"][tokens] * jnp.sqrt(jnp.float32(cfg.d_model))
+    # fixed sinusoidal positions — nothing to quantize, nothing to learn
+    t = jnp.arange(cfg.seq_len, dtype=jnp.float32)[:, None]
+    dims = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)[None, :]
+    freqs = t / jnp.power(10000.0, 2.0 * dims / cfg.d_model)
+    pos = jnp.concatenate([jnp.sin(freqs), jnp.cos(freqs)], axis=-1)
+    x = x + pos[None]
+    x = _act_q(cfg, x)
+    for l in range(cfg.n_layers):
+        p = {k[len(f"layer{l:02d}.") :]: v for k, v in params.items()
+             if k.startswith(f"layer{l:02d}.")}
+        keep = layer_keep[l]
+        h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+        x = _residual(cfg, x, _attention(cfg, p, h, causal), keep)
+        x = _act_q(cfg, x)
+        h = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+        ffn = jax.nn.relu(h @ p["w1"].T) @ p["w2"].T
+        x = _residual(cfg, x, ffn, keep)
+        x = _act_q(cfg, x)
+    return _layer_norm(x, params["lnf_g"], params["lnf_b"])
+
+
+def lm_logits(cfg: TransformerConfig, params, h):
+    # tied output embedding (standard for small-vocab LMs)
+    return h @ params["embed"].T
+
+
+def lm_loss(cfg: TransformerConfig, params, tokens, targets, layer_keep):
+    h = forward(cfg, params, tokens, layer_keep, causal=True)
+    logits = lm_logits(cfg, params, _act_q(cfg, h))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_eval(cfg: TransformerConfig, params, tokens, targets, layer_keep):
+    """(sum_nll, n_correct) — PPL = exp(sum_nll / ntokens), ntokens = B·T."""
+    h = forward(cfg, params, tokens, layer_keep, causal=True)
+    logits = lm_logits(cfg, params, _act_q(cfg, h))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(correct)
+
+
+def cls_loss(cfg: TransformerConfig, params, tokens, labels, layer_keep):
+    h = forward(cfg, params, tokens, layer_keep, causal=False)
+    pooled = jnp.mean(h, axis=1)
+    logits = pooled @ params["cls"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cls_eval(cfg: TransformerConfig, params, tokens, labels, layer_keep):
+    h = forward(cfg, params, tokens, layer_keep, causal=False)
+    pooled = jnp.mean(h, axis=1)
+    logits = pooled @ params["cls"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(correct)
+
+
+# ------------------------------------------------- noise-wrapped grads ---
+
+def noisy_loss_fn(cfg: TransformerConfig, kind: str, task: str):
+    """Returns loss(params, params_hat, tokens, targets, layer_keep,
+    rate, seed) with Quant-Noise `kind` applied to the weights."""
+    specs = quant_specs(cfg)
+    loss = cls_loss if task == "cls" else lm_loss
+
+    def fn(params, params_hat, tokens, targets, layer_keep, rate, seed):
+        noised = qnoise.noise_params(
+            params, specs, kind, rate, seed,
+            params_hat=params_hat if kind == "mix" else None,
+        )
+        return loss(cfg, noised, tokens, targets, layer_keep)
+
+    return fn

@@ -1,0 +1,119 @@
+"""Quant-Noise plumbing for L2 models.
+
+Applies the L1 kernels to a *params dict* according to each parameter's
+quantization spec (its block size and whether it participates — norms and
+biases are never noised, matching the paper's choice of FFN/emb/attn for
+Transformers and conv/classifier weights for ConvNets).
+
+Noise kinds (compile-time constant per artifact — see DESIGN.md):
+  * "mix"          — W_noise = W + sg(mask (Ŵ − W)); Ŵ supplied by the
+                     coordinator (zeros = φ_proxy, PQ decode = exact φ_PQ,
+                     blockwise mean = the mean-subvector variant).
+  * "int8"/"int4"  — φ_intN computed in-graph (Eq. 9, per-tensor, scale
+                     and zero-point live-updated from the weights).
+  * "int8_channel"/"int4_channel" — per-channel variant (Table 10).
+
+Every noised weight is handled in its 2-D (rows, cols) view with blocks
+of ``block_size`` contiguous elements along ``cols``; conv weights are
+reshaped per DESIGN.md (1×1 → (O, I) bs 4; dw3×3 → (C, 9) bs 9).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant, quant_noise, ref
+
+# Perf knob (EXPERIMENTS.md §Perf): QN_KERNEL_IMPL=jnp lowers the noise
+# math through the pure-jnp oracle instead of the Pallas kernels. The
+# two are verified equivalent by pytest; on CPU PJRT the interpret-mode
+# Pallas call becomes a scalar while-loop, so the jnp lowering is the
+# fast CPU build. Pallas remains the reference (TPU-shaped) path.
+_IMPL = os.environ.get("QN_KERNEL_IMPL", "pallas")
+
+
+def apply_noise(
+    name: str,
+    w2d,
+    kind: str,
+    rate,
+    key,
+    block_size: int,
+    w_hat2d=None,
+):
+    """Noise one weight's 2-D view. Returns the noised 2-D view."""
+    rows, cols = w2d.shape
+    assert cols % block_size == 0, (name, w2d.shape, block_size)
+    nblocks = cols // block_size
+    unif = jax.random.uniform(key, (rows, nblocks), jnp.float32)
+    jnp_impl = _IMPL == "jnp"
+    if kind == "mix":
+        assert w_hat2d is not None, name
+        if jnp_impl:
+            return ref.quant_noise_mix(w2d, w_hat2d, unif, rate, block_size)
+        return quant_noise.quant_noise_mix(w2d, w_hat2d, unif, rate, block_size)
+    if kind in ("int8", "int4", "int8_channel", "int4_channel"):
+        bits = 8 if kind.startswith("int8") else 4
+        per_channel = kind.endswith("channel")
+        if jnp_impl:
+            fq = (
+                ref.fake_quant_channel(w2d, bits)
+                if per_channel
+                else ref.fake_quant(w2d, bits)
+            )
+            return ref.quant_noise_mix(
+                w2d, jax.lax.stop_gradient(fq), unif, rate, block_size
+            )
+        # frozen (zero-vjp) image: the mix STE passes gradient to w only
+        w_hat = fake_quant.fake_quant_frozen(w2d, bits, per_channel)
+        return quant_noise.quant_noise_mix(w2d, w_hat, unif, rate, block_size)
+    raise ValueError(f"unknown noise kind {kind!r}")
+
+
+def noise_params(params, specs, kind: str, rate, seed, params_hat=None):
+    """Apply Quant-Noise across a params dict.
+
+    ``specs`` maps name → (rows, cols, block_size) 2-D view spec; names
+    missing from specs (norms, biases) pass through untouched.  Each
+    weight gets an independent rng stream (fold_in on its index) so a
+    single int32 seed drives the whole step.
+    """
+    base = jax.random.PRNGKey(seed)
+    out = {}
+    for i, name in enumerate(sorted(params)):
+        w = params[name]
+        if name not in specs:
+            out[name] = w
+            continue
+        rows, cols, bs = specs[name]
+        w2d = w.reshape(rows, cols)
+        w_hat2d = None
+        if kind == "mix":
+            w_hat2d = params_hat[name].reshape(rows, cols)
+        key = jax.random.fold_in(base, i)
+        out[name] = apply_noise(
+            name, w2d, kind, rate, key, bs, w_hat2d
+        ).reshape(w.shape)
+    return out
+
+
+def fake_quant_activations(x, bits: int = 8):
+    """Dynamic per-tensor intN fake-quant of activations (§3.3 combo).
+
+    Plain jnp (not Pallas): activation tensors are shaped (B, T, D) or
+    (B, H, W, C) and XLA fuses this into the surrounding ops; the paper's
+    static histogram calibration is implemented coordinator-side for
+    weights, while activations use dynamic min/max — the substitution is
+    recorded in DESIGN.md.
+    """
+    qmax = jnp.float32(2**bits - 1)
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    s = (hi - lo) / qmax
+    s = jnp.where(s <= 0.0, jnp.float32(1.0), s)
+    z = jnp.round(lo / s)
+    q = jnp.clip(jnp.round(x / s) - z, 0.0, qmax)
+    return (q + z) * s

@@ -1,0 +1,86 @@
+# AOT export contract tests: manifest structure, QNP1 format, input
+# ordering — the exact things the Rust runtime depends on.
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACTS = os.path.join(os.path.dirname(HERE), "artifacts")
+
+
+def test_qnp1_roundtrip(tmp_path):
+    params = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.array([1.5, -2.5], np.float32),
+    }
+    path = str(tmp_path / "p.bin")
+    aot.write_qnp1(path, ["a", "b"], params)
+    with open(path, "rb") as f:
+        assert f.read(4) == b"QNP1"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        assert header["params"][0] == {"name": "a", "shape": [2, 3]}
+        data = np.frombuffer(f.read(), np.float32)
+    np.testing.assert_array_equal(data[:6], params["a"].ravel())
+    np.testing.assert_array_equal(data[6:], params["b"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_contract():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    models = manifest["models"]
+    assert "lm_tiny" in models
+    m = models["lm_tiny"]
+    names = [p["name"] for p in m["params"]]
+    assert names == sorted(names), "params must be in sorted-name order"
+    # grad input order: params, hats, batch, targets, keep, rate, seed
+    grad = m["entries"]["grad_mix"]
+    n = len(names)
+    assert grad["inputs"][:n] == [f"param:{x}" for x in names]
+    assert grad["inputs"][n : 2 * n] == [f"param_hat:{x}" for x in names]
+    assert grad["inputs"][2 * n :] == ["tokens", "targets", "layer_keep", "rate", "seed"]
+    assert grad["outputs"] == ["loss"] + [f"grad:{x}" for x in names]
+    # eval entry omits hats and scalars
+    ev = m["entries"]["eval"]
+    assert ev["inputs"] == [f"param:{x}" for x in names] + ["tokens", "targets", "layer_keep"]
+    # every referenced file exists
+    for e in m["entries"].values():
+        assert os.path.exists(os.path.join(ARTIFACTS, e["file"])), e["file"]
+    assert os.path.exists(os.path.join(ARTIFACTS, m["init"]))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_hlo_entry_parameter_counts():
+    # ENTRY computations must keep every manifest input (keep_unused)
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)["models"]["lm_tiny"]
+    for ename in ["grad_mix", "grad_int8", "eval"]:
+        e = m["entries"][ename]
+        text = open(os.path.join(ARTIFACTS, e["file"])).read()
+        entry = text.split("ENTRY", 1)[1]
+        count = entry.count("= f32[") + entry.count("= s32[")
+        n_params = sum(
+            1 for line in entry.splitlines() if "parameter(" in line
+        )
+        assert n_params == len(e["inputs"]), f"{ename}: {n_params} vs {len(e['inputs'])}"
+
+
+def test_structure_groups_cover_transformer():
+    cfg = model.TransformerConfig(n_classes=2)
+    names = model.param_shapes(cfg)
+    groups = {model.structure_of(n) for n in names}
+    assert groups == {"emb", "attn", "ffn", "norm", "cls"}

@@ -1,0 +1,205 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE correctness signal.
+# Hypothesis sweeps shapes, rates and bit-widths; every kernel must match
+# its oracle bit-for-bit (or to fp32 round-off for the rounding paths).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, pq_assign, quant_noise, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- mix ---
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 7, 8, 16, 64]),
+    nblocks=st.sampled_from([1, 2, 4, 16]),
+    block_size=st.sampled_from([1, 4, 8]),
+    rate=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_mix_matches_ref(rows, nblocks, block_size, rate, seed):
+    w = rand(seed, (rows, nblocks * block_size))
+    w_hat = rand(seed + 1, (rows, nblocks * block_size))
+    unif = jax.random.uniform(jax.random.PRNGKey(seed + 2), (rows, nblocks))
+    got = quant_noise.quant_noise_mix(w, w_hat, unif, rate, block_size)
+    want = ref.quant_noise_mix(w, w_hat, unif, rate, block_size)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_mix_rate_zero_is_identity():
+    w = rand(0, (16, 32))
+    unif = jax.random.uniform(jax.random.PRNGKey(1), (16, 4))
+    got = quant_noise.quant_noise_mix(w, jnp.zeros_like(w), unif, 0.0, 8)
+    np.testing.assert_array_equal(got, w)
+
+
+def test_mix_rate_one_is_qat():
+    # rate=1 quantizes every block: Quant-Noise degenerates to QAT (§4.1).
+    w = rand(0, (16, 32))
+    w_hat = rand(1, (16, 32))
+    unif = jax.random.uniform(jax.random.PRNGKey(2), (16, 4))
+    got = quant_noise.quant_noise_mix(w, w_hat, unif, 1.0, 8)
+    # w + 1.0*(w_hat - w) equals w_hat only up to fp32 round-off
+    np.testing.assert_allclose(got, w_hat, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_block_granularity():
+    # Within one block, either every element is noised or none is.
+    w = rand(3, (8, 64))
+    unif = jax.random.uniform(jax.random.PRNGKey(4), (8, 8))
+    got = quant_noise.quant_noise_mix(w, jnp.zeros_like(w), unif, 0.5, 8)
+    changed = np.asarray(got != w).reshape(8, 8, 8)
+    per_block = changed.any(axis=2)
+    np.testing.assert_array_equal(changed.all(axis=2), per_block)
+
+
+@settings(**SETTINGS)
+@given(rate=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+def test_mix_ste_gradient_is_identity(rate, seed):
+    # Backward of the noised matmul: dL/dW must ignore the noise (STE).
+    w = rand(seed, (8, 32))
+    w_hat = jnp.zeros_like(w)
+    unif = jax.random.uniform(jax.random.PRNGKey(seed), (8, 4))
+    g = jax.grad(
+        lambda w: quant_noise.quant_noise_mix(
+            w, w_hat, unif, jnp.float32(rate), 8
+        ).sum()
+    )(w)
+    np.testing.assert_array_equal(g, jnp.ones_like(w))
+
+
+def test_mix_expected_noised_fraction():
+    # E[#noised blocks] = rate * #blocks; check within 5 sigma.
+    rows, nblocks, rate = 64, 64, 0.3
+    w = jnp.ones((rows, nblocks * 8))
+    unif = jax.random.uniform(jax.random.PRNGKey(7), (rows, nblocks))
+    got = quant_noise.quant_noise_mix(w, jnp.zeros_like(w), unif, rate, 8)
+    frac = float((got == 0).mean())
+    n = rows * nblocks
+    sigma = (rate * (1 - rate) / n) ** 0.5
+    assert abs(frac - rate) < 5 * sigma
+
+
+# --------------------------------------------------------- fake quant ---
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 5, 8, 32]),
+    cols=st.sampled_from([8, 16, 64]),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_matches_ref(rows, cols, bits, seed):
+    w = rand(seed, (rows, cols)) * 3.0
+    np.testing.assert_allclose(
+        fake_quant.fake_quant(w, bits), ref.fake_quant(w, bits),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 8, 32]),
+    cols=st.sampled_from([8, 64]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_channel_matches_ref(rows, cols, bits, seed):
+    w = rand(seed, (rows, cols)) * 2.0
+    np.testing.assert_allclose(
+        fake_quant.fake_quant_channel(w, bits), ref.fake_quant_channel(w, bits),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_fake_quant_levels(bits, seed):
+    # Output must take at most 2^bits distinct values.
+    w = rand(seed, (16, 64))
+    fq = np.asarray(fake_quant.fake_quant(w, bits))
+    assert len(np.unique(fq)) <= 2**bits
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_fake_quant_error_bound(bits, seed):
+    # Round-trip error is bounded by s/2 per element (uniform rounding).
+    w = rand(seed, (16, 64))
+    s = float((w.max() - w.min()) / (2**bits - 1))
+    err = np.abs(np.asarray(fake_quant.fake_quant(w, bits)) - np.asarray(w))
+    assert err.max() <= s / 2 + 1e-6
+
+
+def test_fake_quant_constant_tensor():
+    # Degenerate input: s falls back to 1 so the error is bounded by s/2,
+    # and the kernel must agree with the oracle exactly.
+    w = jnp.full((8, 16), 0.37, jnp.float32)
+    got = fake_quant.fake_quant(w, 8)
+    np.testing.assert_allclose(got, ref.fake_quant(w, 8), atol=1e-7)
+    assert float(jnp.max(jnp.abs(got - w))) <= 0.5
+
+
+def test_fake_quant_ste_gradient():
+    w = rand(0, (8, 32))
+    for per_channel in (False, True):
+        g = jax.grad(lambda w: fake_quant.fake_quant_ste(w, 4, per_channel).sum())(w)
+        np.testing.assert_array_equal(g, jnp.ones_like(w))
+
+
+def test_fake_quant_idempotent():
+    w = rand(9, (8, 32))
+    fq1 = fake_quant.fake_quant(w, 8)
+    fq2 = fake_quant.fake_quant(fq1, 8)
+    np.testing.assert_allclose(fq1, fq2, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------- pq assign ---
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 100, 128, 256, 300]),
+    d=st.sampled_from([4, 8]),
+    k=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_pq_assign_matches_ref(n, d, k, seed):
+    sub = rand(seed, (n, d))
+    cent = rand(seed + 1, (k, d))
+    np.testing.assert_array_equal(
+        pq_assign.pq_assign(sub, cent), ref.pq_assign(sub, cent)
+    )
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([16, 128]), d=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_pq_assign_is_true_argmin(n, d, seed):
+    # Brute-force distance check: the chosen centroid is never beaten.
+    sub = np.asarray(rand(seed, (n, d)))
+    cent = np.asarray(rand(seed + 1, (32, d)))
+    codes = np.asarray(pq_assign.pq_assign(jnp.asarray(sub), jnp.asarray(cent)))
+    d2 = ((sub[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+    best = d2.min(axis=1)
+    chosen = d2[np.arange(n), codes]
+    np.testing.assert_allclose(chosen, best, rtol=1e-4, atol=1e-5)
+
+
+def test_pq_assign_centroids_map_to_themselves():
+    cent = rand(5, (32, 8))
+    codes = pq_assign.pq_assign(cent, cent)
+    np.testing.assert_array_equal(codes, np.arange(32))
+
+
+def test_pq_decode_roundtrip():
+    cent = rand(6, (16, 8))
+    codes = jnp.asarray(np.random.RandomState(0).randint(0, 16, size=100), jnp.int32)
+    dec = pq_assign.pq_decode(codes, cent)
+    np.testing.assert_array_equal(dec, np.asarray(cent)[np.asarray(codes)])

@@ -1,0 +1,168 @@
+# L2 model tests: shapes, loss sanity, STE gradient identities, noise
+# plumbing, conv canonical-view round-trips, LayerDrop semantics.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import convnet, model, qnoise
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.TransformerConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, d_ffn=64, seq_len=16, batch=2
+)
+
+
+def params_and_batch(seed=0):
+    params = model.init_params(CFG, seed)
+    key = jax.random.PRNGKey(seed + 1)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return params, tokens, targets
+
+
+def test_param_shapes_cover_init():
+    shapes = model.param_shapes(CFG)
+    params = model.init_params(CFG)
+    assert set(shapes) == set(params)
+    for n, s in shapes.items():
+        assert params[n].shape == s
+
+
+def test_quant_specs_only_noised_weights():
+    specs = model.quant_specs(CFG)
+    assert "embed" in specs and "layer00.wq" in specs
+    assert "layer00.ln1_g" not in specs and "lnf_b" not in specs
+    for name, (rows, cols, bs) in specs.items():
+        assert cols % bs == 0, name
+        assert np.prod(model.param_shapes(CFG)[name]) == rows * cols
+
+
+def test_lm_loss_near_uniform_at_init():
+    params, tokens, targets = params_and_batch()
+    keep = jnp.ones(CFG.n_layers)
+    loss = model.lm_loss(CFG, params, tokens, targets, keep)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_lm_eval_matches_loss():
+    params, tokens, targets = params_and_batch()
+    keep = jnp.ones(CFG.n_layers)
+    loss = model.lm_loss(CFG, params, tokens, targets, keep)
+    sum_nll, _ = model.lm_eval(CFG, params, tokens, targets, keep)
+    np.testing.assert_allclose(
+        float(sum_nll) / (CFG.batch * CFG.seq_len), float(loss), rtol=1e-5
+    )
+
+
+def test_causality():
+    # changing a future token must not affect past logits
+    params, tokens, _ = params_and_batch()
+    keep = jnp.ones(CFG.n_layers)
+    h1 = model.forward(CFG, params, tokens, keep)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+    h2 = model.forward(CFG, params, tokens2, keep)
+    np.testing.assert_allclose(h1[:, :-1], h2[:, :-1], atol=1e-5)
+
+
+def test_layerdrop_zero_mask_is_identity_path():
+    params, tokens, targets = params_and_batch()
+    keep_none = jnp.zeros(CFG.n_layers)
+    keep_all = jnp.ones(CFG.n_layers)
+    l0 = model.lm_loss(CFG, params, tokens, targets, keep_none)
+    l1 = model.lm_loss(CFG, params, tokens, targets, keep_all)
+    assert not np.isclose(float(l0), float(l1))
+
+
+def test_noise_grads_flow_to_all_weights():
+    params, tokens, targets = params_and_batch()
+    fn = model.noisy_loss_fn(CFG, "mix", "lm")
+    hats = {k: jnp.zeros_like(v) for k, v in params.items()}
+    keep = jnp.ones(CFG.n_layers)
+    grads = jax.grad(fn)(params, hats, tokens, targets, keep, jnp.float32(0.5), 3)
+    for name, g in grads.items():
+        assert g.shape == params[name].shape
+        assert np.all(np.isfinite(np.asarray(g))), name
+
+
+def test_int_noise_rate_zero_matches_plain_loss():
+    params, tokens, targets = params_and_batch()
+    keep = jnp.ones(CFG.n_layers)
+    fn = model.noisy_loss_fn(CFG, "int8", "lm")
+    hats = {k: jnp.zeros_like(v) for k, v in params.items()}
+    noisy = fn(params, hats, tokens, targets, keep, jnp.float32(0.0), 3)
+    plain = model.lm_loss(CFG, params, tokens, targets, keep)
+    np.testing.assert_allclose(float(noisy), float(plain), rtol=1e-5)
+
+
+def test_cls_heads():
+    cfg = model.TransformerConfig(
+        vocab=32, d_model=32, n_layers=1, n_heads=2, d_ffn=32, seq_len=8,
+        batch=4, n_classes=3,
+    )
+    params = model.init_params(cfg)
+    tokens = jnp.zeros((4, 8), jnp.int32)
+    labels = jnp.array([0, 1, 2, 0], jnp.int32)
+    keep = jnp.ones(1)
+    loss = model.cls_loss(cfg, params, tokens, labels, keep)
+    assert abs(float(loss) - np.log(3)) < 0.5
+    sum_nll, correct = model.cls_eval(cfg, params, tokens, labels, keep)
+    assert 0 <= float(correct) <= 4
+
+
+# ------------------------------------------------------------- conv ---
+
+CCFG = convnet.ConvConfig(image_size=8, blocks=((16, 1, 2), (24, 2, 2)), batch=2)
+
+
+def test_conv_shapes_and_loss():
+    params = convnet.init_params(CCFG)
+    imgs = jnp.ones((2, 8, 8, 3)) * 0.5
+    labels = jnp.array([1, 2], jnp.int32)
+    keep = jnp.ones(len(CCFG.blocks))
+    loss = convnet.img_loss(CCFG, params, imgs, labels, keep)
+    assert abs(float(loss) - np.log(CCFG.n_classes)) < 1.0
+
+
+def test_conv_2d_view_roundtrip():
+    params = convnet.init_params(CCFG)
+    for name in ["stem", "block00.expand", "block00.dw", "block01.project"]:
+        w = params[name]
+        w2d = convnet.to2d(name, w, CCFG)
+        back = convnet.from2d(name, w2d, w.shape)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(back))
+
+
+def test_conv_quant_specs_match_views():
+    params = convnet.init_params(CCFG)
+    specs = convnet.quant_specs(CCFG)
+    for name, (rows, cols, bs) in specs.items():
+        w2d = convnet.to2d(name, params[name], CCFG)
+        assert w2d.reshape(-1).shape[0] == rows * cols, name
+        assert cols % bs == 0, name
+    # paper block sizes: 1x1 -> 4, dw3x3 -> 9
+    assert specs["block00.expand"][2] == 4
+    assert specs["block00.dw"][2] == 9
+    assert specs["cls"][2] == 4
+
+
+def test_conv_noise_grads_finite():
+    params = convnet.init_params(CCFG)
+    fn = convnet.noisy_loss_fn(CCFG, "mix")
+    hats = {k: jnp.zeros_like(v) for k, v in params.items()}
+    imgs = jnp.ones((2, 8, 8, 3)) * 0.3
+    labels = jnp.array([0, 1], jnp.int32)
+    keep = jnp.ones(len(CCFG.blocks))
+    loss, grads = jax.value_and_grad(fn)(
+        params, hats, imgs, labels, keep, jnp.float32(0.3), 5
+    )
+    assert np.isfinite(float(loss))
+    for name, g in grads.items():
+        assert np.all(np.isfinite(np.asarray(g))), name
+
+
+def test_activation_fake_quant_levels():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    q = qnoise.fake_quant_activations(x, bits=8)
+    assert len(np.unique(np.asarray(q))) <= 256
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), atol=float(x.max() - x.min()) / 255)

@@ -1,0 +1,57 @@
+//! Component micro-benchmarks: k-means fit, PQ encode/decode, scalar
+//! round-trips, histogram observer, size accounting. Uses the in-repo
+//! bench harness (criterion is not in the offline registry).
+use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
+use quant_noise::quant::observer::HistogramObserver;
+use quant_noise::quant::pq::{encode, fit, PqConfig};
+use quant_noise::quant::scalar::{self, QParams};
+use quant_noise::util::bench::Bencher;
+use quant_noise::util::rng::Pcg;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg::new(1);
+    // a realistic FFN matrix from the tiny LM: 512×128
+    let w: Vec<f32> = (0..512 * 128).map(|_| rng.next_normal()).collect();
+
+    println!("--- quant_ops (512x128 f32 weight) ---");
+    b.bench("kmeans k=64 d=8 (8192 subvectors, 10 iters)", || {
+        kmeans(&w, 8, &KmeansConfig { k: 64, max_iters: 10, ..Default::default() }, &mut Pcg::new(2))
+    });
+    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 10 };
+    let pq = fit(&w, 512, 128, &cfg, &mut Pcg::new(3));
+    b.bench("pq encode (existing codebook)", || encode(&w, 512, 128, &pq.codebook));
+    b.bench("pq decode", || pq.decode());
+    let qp = QParams::from_minmax(&w, 8);
+    b.bench("int8 roundtrip", || {
+        let mut d = w.clone();
+        scalar::roundtrip(&mut d, &qp);
+        d
+    });
+    b.bench("per-channel int4 roundtrip", || {
+        let mut d = w.clone();
+        scalar::roundtrip_per_channel(&mut d, 512, 128, 4);
+        d
+    });
+    b.bench("histogram observe+qparams (2048 bins)", || {
+        let mut h = HistogramObserver::new(2048);
+        h.observe(&w);
+        h.qparams(8)
+    });
+    b.bench("size accounting (43-param inventory)", || {
+        let infos: Vec<_> = (0..43)
+            .map(|i| quant_noise::quant::size::ParamInfo {
+                name: format!("p{i}"),
+                numel: 65536,
+                rows: 512,
+                cols: 128,
+                quantized: i % 5 != 0,
+                pq_block: 8,
+            })
+            .collect();
+        quant_noise::quant::size::model_bytes(
+            &infos,
+            quant_noise::quant::size::Scheme::Pq { k: 256, int8_centroids: false },
+        )
+    });
+}

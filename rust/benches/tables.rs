@@ -1,0 +1,43 @@
+//! Micro-scale end-to-end pipeline bench: wall-clock of each table1
+//! pipeline stage (train steps, k-means quantization, iPQ finetune
+//! steps, eval) on the tiny LM. Requires `make artifacts`.
+use quant_noise::bench_harness::common::Workbench;
+use quant_noise::bench_harness::specs::{base_train, with_noise};
+use quant_noise::coordinator::ipq::post_pq;
+use quant_noise::coordinator::trainer::Trainer;
+use quant_noise::quant::noise::NoiseKind;
+use quant_noise::util::bench::Bencher;
+
+fn main() {
+    let Ok(wb) = Workbench::new(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP tables bench: run `make artifacts` first");
+        return;
+    };
+    let mut lab = wb.lab("lm_tiny").unwrap();
+    let mut b = Bencher::quick();
+    b.budget = std::time::Duration::from_secs(6);
+    println!("--- table pipeline stages (lm_tiny) ---");
+
+    let cfg = with_noise(base_train("lm", 4), NoiseKind::Proxy, 0.1);
+    let init = lab.init.clone();
+    b.bench("train: 4 QN steps", || {
+        let mut t = Trainer::new(&mut lab.sess, init.clone(), cfg.clone());
+        t.train(lab.train_src.as_mut()).unwrap().final_loss
+    });
+    let params = lab.init.clone();
+    b.bench("quantize: one-shot PQ k=64 (all layers)", || {
+        post_pq(&params, &lab.sess.meta, &Default::default()).unwrap().bytes
+    });
+    let evb = lab.eval_batches.clone();
+    b.bench("eval: 16 batches", || {
+        lab.sess.upload_all_params(&params).unwrap();
+        quant_noise::coordinator::evaluator::evaluate(
+            &mut lab.sess,
+            "eval",
+            &evb,
+            &[1.0, 1.0, 1.0, 1.0],
+        )
+        .unwrap()
+        .ppl
+    });
+}

@@ -1,0 +1,213 @@
+//! Shared experiment machinery: the Workbench (runtime + manifest +
+//! data), operating-point specs/results, and a disk cache of trained
+//! parameter sets so every table/figure that needs "the QN-trained LM"
+//! trains it exactly once.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::evaluator::{self, EvalResult};
+use crate::coordinator::trainer::{
+    BatchSource, ClsSource, ImgSource, LmSource, TrainBatch, TrainConfig, Trainer,
+};
+use crate::data::batcher::{EpochBatcher, LmBatcher};
+use crate::data::corpus::{make_cls_dataset, make_img_dataset, MarkovCorpus};
+use crate::log_info;
+use crate::model::params::ParamStore;
+use crate::runtime::client::Runtime;
+use crate::runtime::executable::ModelSession;
+use crate::runtime::manifest::Manifest;
+
+pub struct Workbench {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub cache_dir: PathBuf,
+    /// global scale on training steps (quick smoke runs: --scale 0.1)
+    pub step_scale: f64,
+}
+
+impl Workbench {
+    pub fn new(artifacts: &Path) -> Result<Workbench> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts)?;
+        let cache_dir = artifacts.join("cache");
+        std::fs::create_dir_all(&cache_dir)?;
+        Ok(Workbench { rt, manifest, cache_dir, step_scale: 1.0 })
+    }
+
+    pub fn scaled(&self, steps: usize) -> usize {
+        ((steps as f64 * self.step_scale) as usize).max(5)
+    }
+
+    /// Open a model lab: session + init params + train/eval data.
+    pub fn lab(&self, model: &str) -> Result<Lab<'_>> {
+        let (sess, init) = ModelSession::new(&self.rt, &self.manifest, model)?;
+        let meta = sess.meta.clone();
+        let (train_src, eval_batches): (Box<dyn BatchSource>, Vec<TrainBatch>) =
+            match meta.task.as_str() {
+                "lm" => {
+                    let corpus = MarkovCorpus::generate(meta.vocab, 400_000, 1234);
+                    let split = corpus.tokens.len() * 9 / 10;
+                    let train = LmBatcher::new(&corpus.tokens[..split], meta.batch, meta.seq_len);
+                    let evalb = evaluator::lm_eval_batches(
+                        &corpus.tokens[split..],
+                        meta.batch,
+                        meta.seq_len,
+                        16,
+                    );
+                    (Box::new(LmSource { batcher: train }), evalb)
+                }
+                "cls" => {
+                    let (tokens, labels) =
+                        make_cls_dataset(4096, meta.seq_len, meta.vocab, meta.n_classes, 77);
+                    let n_eval = meta.batch * 16;
+                    let n_train = labels.len() - n_eval;
+                    let train = EpochBatcher::new(
+                        tokens[..n_train * meta.seq_len].to_vec(),
+                        labels[..n_train].to_vec(),
+                        meta.seq_len,
+                        meta.batch,
+                        5,
+                    );
+                    let evalb = EpochBatcher::new(
+                        tokens[n_train * meta.seq_len..].to_vec(),
+                        labels[n_train..].to_vec(),
+                        meta.seq_len,
+                        meta.batch,
+                        6,
+                    );
+                    let batches = evaluator::cls_eval_batches(&evalb, 16);
+                    (Box::new(ClsSource { batcher: train }), batches)
+                }
+                "img" => {
+                    let size = meta.tokens_shape[1];
+                    let chans = meta.tokens_shape[3];
+                    let (px, labels) = make_img_dataset(4096, size, chans, 99);
+                    let ex_len = size * size * chans;
+                    let n_eval = meta.batch * 16;
+                    let n_train = labels.len() - n_eval;
+                    let train = EpochBatcher::new(
+                        px[..n_train * ex_len].to_vec(),
+                        labels[..n_train].to_vec(),
+                        ex_len,
+                        meta.batch,
+                        7,
+                    );
+                    let evalb = EpochBatcher::new(
+                        px[n_train * ex_len..].to_vec(),
+                        labels[n_train..].to_vec(),
+                        ex_len,
+                        meta.batch,
+                        8,
+                    );
+                    let batches = evaluator::img_eval_batches(&evalb, 16);
+                    (Box::new(ImgSource { batcher: train }), batches)
+                }
+                t => anyhow::bail!("unknown task {t}"),
+            };
+        Ok(Lab { sess, init, train_src, eval_batches, cache_dir: self.cache_dir.clone() })
+    }
+}
+
+pub struct Lab<'rt> {
+    pub sess: ModelSession<'rt>,
+    pub init: ParamStore,
+    pub train_src: Box<dyn BatchSource>,
+    pub eval_batches: Vec<TrainBatch>,
+    cache_dir: PathBuf,
+}
+
+/// Cache key for a training configuration (everything that affects the
+/// final weights).
+fn train_key(model: &str, cfg: &TrainConfig) -> String {
+    let mut h = DefaultHasher::new();
+    model.hash(&mut h);
+    cfg.steps.hash(&mut h);
+    cfg.noise.name().hash(&mut h);
+    (cfg.noise_rate.to_bits(), cfg.layerdrop.to_bits(), cfg.clip.to_bits()).hash(&mut h);
+    (cfg.share_chunk, cfg.ldste, cfg.hat_refresh, cfg.pq_k, cfg.seed).hash(&mut h);
+    format!("{model}-{}-r{}-s{}-{:016x}", cfg.noise.name(), cfg.noise_rate, cfg.steps, h.finish())
+}
+
+impl<'rt> Lab<'rt> {
+    /// Train (or load from cache) a parameter set under `cfg`, starting
+    /// from the shared init. Leaves the trained params uploaded.
+    pub fn train_cached(&mut self, cfg: &TrainConfig) -> Result<ParamStore> {
+        let key = train_key(&self.sess.meta.name, cfg);
+        let path = self.cache_dir.join(format!("{key}.qnp1"));
+        if path.exists() {
+            log_info!("cache hit: {key}");
+            let params = ParamStore::load_qnp1(&path)?;
+            params.check_against(&self.sess.meta)?;
+            self.sess.upload_all_params(&params)?;
+            self.sess.zero_hats()?;
+            return Ok(params);
+        }
+        log_info!("training {key} ({} steps)", cfg.steps);
+        self.sess.upload_all_params(&self.init)?;
+        self.sess.zero_hats()?;
+        let mut trainer = Trainer::new(&mut self.sess, self.init.clone(), cfg.clone());
+        trainer.train(self.train_src.as_mut())?;
+        let params = trainer.into_params();
+        params.save_qnp1(&path)?;
+        // reset hats for subsequent users (trainer may have set PQ hats)
+        self.sess.zero_hats()?;
+        Ok(params)
+    }
+
+    /// Evaluate the given params through `entry`.
+    pub fn eval_params(
+        &mut self,
+        params: &ParamStore,
+        entry: &str,
+        layer_keep: &[f32],
+    ) -> Result<EvalResult> {
+        self.sess.upload_all_params(params)?;
+        evaluator::evaluate(&mut self.sess, entry, &self.eval_batches, layer_keep)
+    }
+
+    pub fn keep_all(&self) -> Vec<f32> {
+        vec![1.0; self.sess.meta.n_layers]
+    }
+}
+
+// -------------------------------------------------------- result rows ---
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub size_mb: f64,
+    pub compression: f64,
+    /// PPL for LM, top-1 % for cls/img
+    pub metric: f64,
+    pub metric_name: &'static str,
+}
+
+impl Row {
+    pub fn print_header(title: &str) {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<44} {:>9} {:>8} {:>10}",
+            "scheme", "size(MB)", "comp.", "metric"
+        );
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>9.3} {:>7.1}x {:>7.2} {}",
+            self.label, self.size_mb, self.compression, self.metric, self.metric_name
+        );
+    }
+}
+
+/// metric for a task: LM reports PPL (lower better), others top-1 %.
+pub fn task_metric(task: &str, ev: &EvalResult) -> (f64, &'static str) {
+    if task == "lm" {
+        (ev.ppl, "ppl")
+    } else {
+        (ev.accuracy * 100.0, "top1%")
+    }
+}

@@ -1,0 +1,332 @@
+//! Figure regeneration (paper Figs. 2–6 and the numeric Tables 6–9
+//! behind them). Prints the series each figure plots.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::bench_harness::common::{task_metric, Row, Workbench};
+use crate::bench_harness::specs::*;
+use crate::bench_harness::tables::post_pq_row;
+use crate::coordinator::ipq::run_ipq;
+use crate::coordinator::quantize::{quantize_params, IntMode, WeightScheme};
+use crate::quant::noise::NoiseKind;
+use crate::quant::prune::every_other_chunk_mask;
+use crate::util::rng::Pcg;
+
+/// Fig. 2 / Tables 6-8: size-vs-quality trade-off. Our measured
+/// operating points next to the paper's cited baselines (constants from
+/// Tables 6/7/8 — we cannot retrain TinyBERT et al.; printed for the
+/// qualitative comparison the figure makes).
+pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+
+    let mut rows = Vec::new();
+
+    // measured points: fp32, iPQ+QN, iPQ+QN+share+prune
+    let plain = lab.train_cached(&base)?;
+    let fp_bytes = crate::coordinator::quantize::scheme_bytes(&lab.sess.meta, &WeightScheme::None);
+    {
+        let keep = lab.keep_all();
+        let ev = lab.eval_params(&plain, "eval", &keep)?;
+        let (m, n) = task_metric(&task, &ev);
+        rows.push(Row {
+            label: "ours: original fp32".into(),
+            size_mb: crate::quant::size::mb(fp_bytes),
+            compression: 1.0,
+            metric: m,
+            metric_name: n,
+        });
+    }
+
+    let qn = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, 0.1))?;
+    lab.sess.upload_all_params(&qn)?;
+    let (q, _) = run_ipq(
+        &mut lab.sess,
+        &qn,
+        lab.train_src.as_mut(),
+        &base_ipq(default_ipq_finetune(&task)),
+    )?;
+    {
+        let keep = lab.keep_all();
+        lab.sess.upload_all_params(&q.store)?;
+        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let (m, n) = task_metric(&task, &ev);
+        rows.push(Row {
+            label: "ours: iPQ + Quant-Noise".into(),
+            size_mb: crate::quant::size::mb(q.bytes),
+            compression: fp_bytes as f64 / q.bytes as f64,
+            metric: m,
+            metric_name: n,
+        });
+    }
+
+    let mut qn_share = with_noise(base, NoiseKind::Proxy, 0.1);
+    qn_share.layerdrop = 0.2;
+    qn_share.share_chunk = 2;
+    let qns = lab.train_cached(&qn_share)?;
+    lab.sess.upload_all_params(&qns)?;
+    let (q2, _) = run_ipq(
+        &mut lab.sess,
+        &qns,
+        lab.train_src.as_mut(),
+        &base_ipq(default_ipq_finetune(&task)),
+    )?;
+    {
+        let n_layers = lab.sess.meta.n_layers;
+        let prune_keep = every_other_chunk_mask(n_layers, 2);
+        lab.sess.upload_all_params(&q2.store)?;
+        let ev = crate::coordinator::evaluator::evaluate(
+            &mut lab.sess,
+            "eval",
+            &lab.eval_batches,
+            &prune_keep,
+        )?;
+        let (m, n) = task_metric(&task, &ev);
+        // share+prune bytes: half the layers stored, half of those kept
+        let stored = crate::quant::prune::stored_layers(n_layers, 2, &prune_keep);
+        let infos = lab.sess.meta.param_infos();
+        let mask: Vec<bool> = lab
+            .sess
+            .meta
+            .params
+            .iter()
+            .map(|p| {
+                for l in 0..n_layers {
+                    if p.name.starts_with(&format!("layer{l:02}."))
+                        || p.name.starts_with(&format!("block{l:02}."))
+                    {
+                        return stored[l];
+                    }
+                }
+                true
+            })
+            .collect();
+        let bytes = crate::quant::size::model_bytes_with_mask(
+            &infos,
+            crate::quant::size::Scheme::Pq { k: 64, int8_centroids: false },
+            &mask,
+        );
+        rows.push(Row {
+            label: "ours: iPQ + QN + share + prune".into(),
+            size_mb: crate::quant::size::mb(bytes),
+            compression: fp_bytes as f64 / bytes as f64,
+            metric: m,
+            metric_name: n,
+        });
+    }
+
+    // cited literature points (paper Tables 6/7/8)
+    let cited: &[(&str, f64, f64)] = match task.as_str() {
+        "lm" => &[
+            ("paper: Trans-XL Large", 970.0, 18.3),
+            ("paper: Compressive Trans", 970.0, 17.1),
+            ("paper: GCNN", 870.0, 37.2),
+            ("paper: Trans-XL Base", 570.0, 24.0),
+            ("paper: Tensorized core-2", 325.0, 18.9),
+            ("paper: Quant-Noise", 38.0, 20.7),
+            ("paper: QN + Share + Prune", 10.0, 24.2),
+        ],
+        "cls" => &[
+            ("paper: RoBERTa Base + LD", 480.0, 84.8),
+            ("paper: BERT Base", 420.0, 84.4),
+            ("paper: DistilBERT", 250.0, 81.8),
+            ("paper: MobileBERT", 96.0, 84.4),
+            ("paper: TinyBERT", 55.0, 82.8),
+            ("paper: ALBERT Base", 45.0, 81.6),
+            ("paper: AdaBERT", 36.0, 81.6),
+            ("paper: Quant-Noise", 38.0, 83.6),
+            ("paper: QN + Share + Prune", 14.0, 82.5),
+        ],
+        _ => &[
+            ("paper: EfficientNet-B7", 260.0, 84.4),
+            ("paper: ResNet-50", 97.5, 76.1),
+            ("paper: EfficientNet-B0", 20.2, 77.3),
+            ("paper: MobileNet-v2", 13.4, 71.9),
+            ("paper: ShuffleNet-v2", 8.7, 69.4),
+            ("paper: HAQ 4 bits", 12.4, 76.2),
+            ("paper: iPQ ResNet-50", 5.09, 76.1),
+            ("paper: Quant-Noise", 3.3, 80.0),
+            ("paper: QN + Share + Prune", 2.3, 77.8),
+        ],
+    };
+    let metric_name = if task == "lm" { "ppl" } else { "top1%" };
+    for &(label, size, metric) in cited {
+        rows.push(Row {
+            label: label.into(),
+            size_mb: size,
+            compression: f64::NAN,
+            metric,
+            metric_name,
+        });
+    }
+
+    Row::print_header(&format!("Fig 2 / Tables 6-8 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+/// Fig. 3 (LM) / Table 9 (IMG): quantized quality as a function of the
+/// Quant-Noise rate p, for the proxy-PQ noise and the intN noise.
+pub fn fig3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+    let rates = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+
+    let mut rows = Vec::new();
+    // proxy noise → iPQ quantization (one-shot PQ for sweep speed,
+    // constant across points so the trend is comparable)
+    for &p in &rates {
+        let noise = if p == 0.0 { NoiseKind::None } else { NoiseKind::Proxy };
+        let params = lab.train_cached(&with_noise(base.clone(), noise, p))?;
+        let mut row = post_pq_row(&mut lab, &format!("proxy p={p}"), &params, 64, BTreeMap::new())?;
+        row.label = format!("proxy p={p} -> PQ");
+        rows.push(row);
+    }
+    // int8 noise → int8 quantization
+    for &p in &rates {
+        let noise = if p == 0.0 { NoiseKind::None } else { NoiseKind::Int8 };
+        let params = lab.train_cached(&with_noise(base.clone(), noise, p))?;
+        let q = quantize_params(
+            &params,
+            &lab.sess.meta,
+            &WeightScheme::Int { bits: 8, mode: IntMode::Histogram },
+            &mut Pcg::new(5),
+        )?;
+        let keep = lab.keep_all();
+        lab.sess.upload_all_params(&q.store)?;
+        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let (m, n) = task_metric(&task, &ev);
+        rows.push(Row {
+            label: format!("int8 p={p} -> int8"),
+            size_mb: crate::quant::size::mb(q.bytes),
+            compression: f64::NAN,
+            metric: m,
+            metric_name: n,
+        });
+    }
+
+    Row::print_header(&format!("Fig 3 / Table 9 — {model} ({task}) noise-rate sweep"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+/// Fig. 4: number of centroids K vs quantized quality and size.
+pub fn fig4(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+
+    let mut rows = Vec::new();
+    for k in [16usize, 32, 64, 128, 256] {
+        rows.push(post_pq_row(&mut lab, &format!("K={k}"), &qn, k, BTreeMap::new())?);
+    }
+
+    Row::print_header(&format!("Fig 4 — {model} ({task}) centroid sweep"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+/// Fig. 5: effect of initial model size (shallower / skinnier LMs):
+/// fp32 vs quantized gap. Needs the fig5 model configs exported.
+pub fn fig5(wb: &Workbench) -> Result<Vec<Row>> {
+    let variants = ["lm_l2", "lm_tiny", "lm_l6", "lm_ffn256", "lm_ffn128"];
+    let mut rows = Vec::new();
+    for v in variants {
+        if wb.manifest.models.get(v).is_none() {
+            println!("fig5: model {v} not exported — run `make artifacts-fig5`");
+            continue;
+        }
+        let mut lab = wb.lab(v)?;
+        let steps = wb.scaled(default_steps("lm"));
+        let qn = lab.train_cached(&with_noise(base_train("lm", steps), NoiseKind::Proxy, 0.1))?;
+        let keep = lab.keep_all();
+        let ev = lab.eval_params(&qn, "eval", &keep)?;
+        let (m, n) = task_metric("lm", &ev);
+        rows.push(Row {
+            label: format!("{v}: fp32"),
+            size_mb: crate::quant::size::mb(crate::coordinator::quantize::scheme_bytes(
+                &lab.sess.meta,
+                &WeightScheme::None,
+            )),
+            compression: 1.0,
+            metric: m,
+            metric_name: n,
+        });
+        rows.push(post_pq_row(&mut lab, &format!("{v}: PQ"), &qn, 64, BTreeMap::new())?);
+    }
+
+    Row::print_header("Fig 5 — model size vs quantizability");
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+/// Fig. 6: (a) quantization order of FFN/emb/attn; (b) per-structure
+/// block-size robustness.
+pub fn fig6(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+
+    let mut rows = Vec::new();
+    // (a) order ablation — full iPQ with different group orders
+    for order in [
+        vec!["ffn", "emb", "attn"],
+        vec!["attn", "ffn", "emb"],
+        vec!["emb", "attn", "ffn"],
+    ] {
+        let mut cfg = base_ipq(default_ipq_finetune(&task));
+        cfg.finetune_steps = cfg.finetune_steps / 2; // ablation budget
+        cfg.order = order.iter().map(|s| s.to_string()).collect();
+        lab.sess.upload_all_params(&qn)?;
+        let (q, _) = run_ipq(&mut lab.sess, &qn, lab.train_src.as_mut(), &cfg)?;
+        let keep = lab.keep_all();
+        lab.sess.upload_all_params(&q.store)?;
+        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let (m, n) = task_metric(&task, &ev);
+        rows.push(Row {
+            label: format!("order {}", order.join("->")),
+            size_mb: crate::quant::size::mb(q.bytes),
+            compression: f64::NAN,
+            metric: m,
+            metric_name: n,
+        });
+    }
+
+    // (b) block-size robustness per structure (others held at default)
+    for structure in ["ffn", "emb", "attn"] {
+        for bs in [4usize, 8, 16, 32] {
+            let overrides = BTreeMap::from([(structure.to_string(), bs)]);
+            rows.push(post_pq_row(
+                &mut lab,
+                &format!("{structure} block={bs}"),
+                &qn,
+                64,
+                overrides,
+            )?);
+        }
+    }
+
+    Row::print_header(&format!("Fig 6 — {model} ({task}) order + block-size"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}

@@ -1,0 +1,8 @@
+//! Regenerates every table and figure of the paper's evaluation
+//! (DESIGN.md §5 experiment index). Entry point: `qn bench --exp <id>`.
+pub mod common;
+pub mod e2e;
+pub mod figures;
+pub mod report;
+pub mod specs;
+pub mod tables;

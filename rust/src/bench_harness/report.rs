@@ -1,0 +1,53 @@
+//! Report sink: collects rows per experiment and appends a markdown
+//! section to a results file (EXPERIMENTS.md sources these).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench_harness::common::Row;
+
+pub fn append_markdown(path: &Path, title: &str, rows: &[Row]) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "\n### {title}\n")?;
+    writeln!(f, "| scheme | size (MB) | comp. | metric |")?;
+    writeln!(f, "|---|---|---|---|")?;
+    for r in rows {
+        let comp = if r.compression.is_nan() {
+            "—".to_string()
+        } else {
+            format!("×{:.1}", r.compression)
+        };
+        writeln!(
+            f,
+            "| {} | {:.3} | {} | {:.2} {} |",
+            r.label, r.size_mb, comp, r.metric, r.metric_name
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::temp_dir;
+
+    #[test]
+    fn writes_markdown_table() {
+        let dir = temp_dir("report");
+        let p = dir.join("r.md");
+        let rows = vec![Row {
+            label: "x".into(),
+            size_mb: 1.5,
+            compression: 4.0,
+            metric: 20.0,
+            metric_name: "ppl",
+        }];
+        append_markdown(&p, "Table 1", &rows).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("### Table 1"));
+        assert!(text.contains("| x | 1.500 | ×4.0 | 20.00 ppl |"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

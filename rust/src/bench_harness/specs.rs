@@ -1,0 +1,110 @@
+//! Canonical training/quantization configurations per task — one place
+//! so every table/figure reuses the same trained models (and thus the
+//! train cache).
+
+use crate::coordinator::ipq::IpqConfig;
+use crate::coordinator::optim::Schedule;
+use crate::coordinator::trainer::{OptKind, TrainConfig};
+use crate::quant::noise::NoiseKind;
+
+/// Steps per task at scale 1.0.
+pub fn default_steps(task: &str) -> usize {
+    match task {
+        "lm" => 240,
+        "cls" => 160,
+        _ => 240,
+    }
+}
+
+/// Base training config for a task (paper §7.6 translated to our scale:
+/// Nesterov SGD + cosine for LM/IMG, Adam + poly-ish for CLS).
+pub fn base_train(task: &str, steps: usize) -> TrainConfig {
+    let (schedule, optimizer, clip) = match task {
+        "cls" => (
+            Schedule::Poly { lr: 3e-3, warmup: steps / 10, total: steps, power: 1.0 },
+            OptKind::Adam,
+            1.0,
+        ),
+        _ => (
+            Schedule::Cosine {
+                lr: 0.3,
+                min_lr: 1e-3,
+                warmup: steps / 10,
+                total: steps,
+            },
+            OptKind::Sgd { momentum: 0.95, nesterov: true },
+            0.25,
+        ),
+    };
+    TrainConfig {
+        steps,
+        schedule,
+        optimizer,
+        clip,
+        noise: NoiseKind::None,
+        noise_rate: 0.0,
+        layerdrop: 0.0,
+        ldste: false,
+        share_chunk: 0,
+        hat_refresh: 60,
+        pq_k: 64,
+        seed: 42,
+        log_every: 40,
+    }
+}
+
+/// With a noise kind at its paper-default rate. Full-rate (QAT) runs
+/// get a damped LR: with every block quantized each forward the STE
+/// bias plus high momentum diverges at the base LR — QAT should be
+/// *bad* (the paper's point), not NaN.
+pub fn with_noise(mut cfg: TrainConfig, noise: NoiseKind, rate: f32) -> TrainConfig {
+    cfg.noise = noise;
+    cfg.noise_rate = rate;
+    if rate >= 0.99 && !matches!(noise, NoiseKind::None) {
+        cfg.schedule = scale_lr(cfg.schedule, 0.2);
+    }
+    cfg
+}
+
+pub fn scale_lr(s: Schedule, f: f32) -> Schedule {
+    match s {
+        Schedule::Constant { lr } => Schedule::Constant { lr: lr * f },
+        Schedule::Cosine { lr, min_lr, warmup, total } => {
+            Schedule::Cosine { lr: lr * f, min_lr: min_lr * f, warmup, total }
+        }
+        Schedule::Poly { lr, warmup, total, power } => {
+            Schedule::Poly { lr: lr * f, warmup, total, power }
+        }
+    }
+}
+
+/// Paper rates: proxy/exact PQ noise at low p; intN noise tolerates
+/// high p (Fig. 3 / Table 9).
+pub fn default_rate(noise: NoiseKind) -> f32 {
+    match noise {
+        NoiseKind::None => 0.0,
+        NoiseKind::Proxy | NoiseKind::ExactPq | NoiseKind::MeanSub => 0.1,
+        _ => 0.5,
+    }
+}
+
+/// iPQ at our scale: K=64 centroids (the models are ~10⁶ weights;
+/// K=256 with d=8 would make many layers trivially losslessly
+/// quantizable — Fig. 4 sweeps K explicitly).
+pub fn base_ipq(steps: usize) -> IpqConfig {
+    IpqConfig {
+        k: 64,
+        kmeans_iters: 10,
+        finetune_steps: steps,
+        codeword_lr: 0.02,
+        float_lr: 5e-3,
+        ..Default::default()
+    }
+}
+
+pub fn default_ipq_finetune(task: &str) -> usize {
+    match task {
+        "cls" => 20,
+        _ => 25,
+    }
+}

@@ -1,0 +1,460 @@
+//! Table regeneration (paper Tables 1–5, 9–11). Each function prints
+//! rows in the paper's format; absolute numbers come from our scaled-
+//! down substrate, the *shape* (who wins, by roughly what factor) is
+//! the reproduction target (see EXPERIMENTS.md).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::bench_harness::common::{task_metric, Lab, Row, Workbench};
+use crate::bench_harness::specs::*;
+use crate::coordinator::ipq::{post_pq, run_ipq};
+use crate::coordinator::quantize::{quantize_params, scheme_bytes, IntMode, WeightScheme};
+use crate::model::params::ParamStore;
+use crate::quant::noise::NoiseKind;
+use crate::quant::prune::{every_other_chunk_mask, stored_layers};
+use crate::quant::size::{mb, model_bytes_with_mask, Scheme};
+use crate::util::rng::Pcg;
+
+fn fp32_bytes(lab: &Lab) -> u64 {
+    scheme_bytes(&lab.sess.meta, &WeightScheme::None)
+}
+
+/// Evaluate `params` and produce a row.
+fn eval_row(
+    lab: &mut Lab,
+    label: &str,
+    params: &ParamStore,
+    bytes: u64,
+    entry: &str,
+    keep: &[f32],
+) -> Result<Row> {
+    let ev = lab.eval_params(params, entry, keep)?;
+    let task = lab.sess.meta.task.clone();
+    let (metric, name) = task_metric(&task, &ev);
+    Ok(Row {
+        label: label.to_string(),
+        size_mb: mb(bytes),
+        compression: fp32_bytes(lab) as f64 / bytes as f64,
+        metric,
+        metric_name: name,
+    })
+}
+
+/// intN quantize + eval.
+fn int_row(
+    lab: &mut Lab,
+    label: &str,
+    params: &ParamStore,
+    bits: u8,
+    mode: IntMode,
+) -> Result<Row> {
+    let q = quantize_params(
+        params,
+        &lab.sess.meta,
+        &WeightScheme::Int { bits, mode },
+        &mut Pcg::new(5),
+    )?;
+    let keep = lab.keep_all();
+    eval_row(lab, label, &q.store, q.bytes, "eval", &keep)
+}
+
+/// Full iPQ (with Eq. 4 finetuning) + eval.
+fn ipq_row(
+    lab: &mut Lab,
+    label: &str,
+    params: &ParamStore,
+    int8_centroids: bool,
+    entry: &str,
+) -> Result<Row> {
+    let mut cfg = base_ipq(default_ipq_finetune(&lab.sess.meta.task));
+    cfg.int8_centroids = int8_centroids;
+    lab.sess.upload_all_params(params)?;
+    lab.sess.zero_hats()?;
+    let (q, _report) = run_ipq(&mut lab.sess, params, lab.train_src.as_mut(), &cfg)?;
+    let keep = lab.keep_all();
+    eval_row(lab, label, &q.store, q.bytes, entry, &keep)
+}
+
+// ================================================================ T1 ===
+
+/// Table 1: quantization schemes × {post, QAT, Quant-Noise} for the LM
+/// and the image model.
+pub fn table1(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+
+    let baseline = lab.train_cached(&base)?;
+    let mut rows = Vec::new();
+    let fp = fp32_bytes(&lab);
+    let keep = lab.keep_all();
+    rows.push(eval_row(&mut lab, "uncompressed", &baseline, fp, "eval", &keep)?);
+
+    for bits in [4u8, 8] {
+        let (noise_q, noise_n) = if bits == 4 {
+            (NoiseKind::Int4, "int4")
+        } else {
+            (NoiseKind::Int8, "int8")
+        };
+        // post-training quantization of the plain model
+        rows.push(int_row(&mut lab, &format!("{noise_n} (post)"), &baseline, bits, IntMode::Histogram)?);
+        // QAT = noise at rate 1.0
+        let qat = lab.train_cached(&with_noise(base.clone(), noise_q, 1.0))?;
+        rows.push(int_row(&mut lab, &format!("{noise_n} + QAT"), &qat, bits, IntMode::Histogram)?);
+        // Quant-Noise at partial rate
+        let qn = lab.train_cached(&with_noise(base.clone(), noise_q, default_rate(noise_q)))?;
+        rows.push(int_row(&mut lab, &format!("{noise_n} + Quant-Noise"), &qn, bits, IntMode::Histogram)?);
+    }
+
+    // iPQ: post / QAT (exact PQ noise at rate 1.0) / QN (proxy)
+    rows.push(ipq_row(&mut lab, "iPQ (post)", &baseline, false, "eval")?);
+    let qat_pq = lab.train_cached(&with_noise(base.clone(), NoiseKind::ExactPq, 1.0))?;
+    rows.push(ipq_row(&mut lab, "iPQ + QAT", &qat_pq, false, "eval")?);
+    let qn_pq = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, default_rate(NoiseKind::Proxy)))?;
+    rows.push(ipq_row(&mut lab, "iPQ + Quant-Noise", &qn_pq, false, "eval")?);
+
+    // §3.3 combination: int8 centroids + int8 activations
+    let combo_entry = if lab.sess.has_entry("eval_int8act") { "eval_int8act" } else { "eval" };
+    rows.push(ipq_row(&mut lab, "iPQ & int8 + Quant-Noise", &qn_pq, true, combo_entry)?);
+
+    Row::print_header(&format!("Table 1 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// ================================================================ T2 ===
+
+/// Size under a scheme with sharing/pruning masks (§7.9: shared layers
+/// stored once, pruned chunks not stored).
+fn masked_bytes(
+    lab: &Lab,
+    scheme: Scheme,
+    share_chunk: usize,
+    keep: &[f32],
+) -> u64 {
+    let meta = &lab.sess.meta;
+    let stored = stored_layers(meta.n_layers, share_chunk.max(1), keep);
+    let infos = meta.param_infos();
+    let mask: Vec<bool> = meta
+        .params
+        .iter()
+        .map(|p| {
+            for l in 0..meta.n_layers {
+                if p.name.starts_with(&format!("layer{l:02}."))
+                    || p.name.starts_with(&format!("block{l:02}."))
+                {
+                    return stored[l];
+                }
+            }
+            true // non-layer params always stored
+        })
+        .collect();
+    model_bytes_with_mask(&infos, scheme, &mask)
+}
+
+/// Table 2: decomposing compression: sharing, pruning, iPQ, Quant-Noise.
+pub fn table2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let n_layers = lab.sess.meta.n_layers;
+    let mut base = base_train(&task, steps);
+    base.layerdrop = 0.2; // Table 2 models train with LayerDrop
+
+    let mut rows = Vec::new();
+    let keep_all = lab.keep_all();
+    let prune_keep = every_other_chunk_mask(n_layers, 2);
+
+    // ---- unquantized block
+    let orig = lab.train_cached(&base)?;
+    let fp = fp32_bytes(&lab);
+    rows.push(eval_row(&mut lab, "original", &orig, fp, "eval", &keep_all)?);
+
+    let mut share_cfg = base.clone();
+    share_cfg.share_chunk = 2;
+    let shared = lab.train_cached(&share_cfg)?;
+    let b = masked_bytes(&lab, Scheme::Fp32, 2, &keep_all);
+    rows.push(eval_row(&mut lab, "+ sharing", &shared, b, "eval", &keep_all)?);
+
+    let b = masked_bytes(&lab, Scheme::Fp32, 2, &prune_keep);
+    rows.push(eval_row(&mut lab, "+ share + prune", &shared, b, "eval", &prune_keep)?);
+
+    // ---- quantized block
+    let ipq_cfg = base_ipq(default_ipq_finetune(&task));
+    lab.sess.upload_all_params(&orig)?;
+    let (q, _) = run_ipq(&mut lab.sess, &orig, lab.train_src.as_mut(), &ipq_cfg)?;
+    rows.push(eval_row(&mut lab, "iPQ", &q.store, q.bytes, "eval", &keep_all)?);
+
+    let qn = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, 0.1))?;
+    lab.sess.upload_all_params(&qn)?;
+    let (q, _) = run_ipq(&mut lab.sess, &qn, lab.train_src.as_mut(), &ipq_cfg)?;
+    rows.push(eval_row(&mut lab, "iPQ + Quant-Noise", &q.store, q.bytes, "eval", &keep_all)?);
+
+    let mut qn_share = with_noise(base.clone(), NoiseKind::Proxy, 0.1);
+    qn_share.share_chunk = 2;
+    let qns = lab.train_cached(&qn_share)?;
+    lab.sess.upload_all_params(&qns)?;
+    let (q, _) = run_ipq(&mut lab.sess, &qns, lab.train_src.as_mut(), &ipq_cfg)?;
+    let pq_scheme = Scheme::Pq { k: ipq_cfg.k, int8_centroids: false };
+    let b = masked_bytes(&lab, pq_scheme, 2, &keep_all);
+    rows.push(eval_row(&mut lab, "iPQ + QN + share", &q.store, b, "eval", &keep_all)?);
+
+    let b = masked_bytes(&lab, pq_scheme, 2, &prune_keep);
+    rows.push(eval_row(&mut lab, "iPQ + QN + share + prune", &q.store, b, "eval", &prune_keep)?);
+
+    Row::print_header(&format!("Table 2 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// ================================================================ T3 ===
+
+/// Table 3: training with Quant-Noise from scratch vs finetuning an
+/// existing model with Quant-Noise (then iPQ).
+pub fn table3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+
+    let mut rows = Vec::new();
+    // (a) no QN at all
+    let plain = lab.train_cached(&base)?;
+    rows.push(ipq_row(&mut lab, "train without Quant-Noise", &plain, false, "eval")?);
+
+    // (b) short QN finetune on top of the plain model (paper: ~10 extra
+    // epochs). Model the finetune by continuing with QN for 25% steps.
+    let mut ft = with_noise(base.clone(), NoiseKind::Proxy, 0.1);
+    ft.steps = (steps / 4).max(10);
+    ft.seed = base.seed ^ 0xF1;
+    // continue from plain (bypass cache: custom continuation)
+    lab.sess.upload_all_params(&plain)?;
+    lab.sess.zero_hats()?;
+    let mut trainer = crate::coordinator::trainer::Trainer::new(&mut lab.sess, plain.clone(), ft);
+    trainer.train(lab.train_src.as_mut())?;
+    let finetuned = trainer.into_params();
+    rows.push(ipq_row(&mut lab, "+ finetune with Quant-Noise", &finetuned, false, "eval")?);
+
+    // (c) QN from scratch
+    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+    rows.push(ipq_row(&mut lab, "train with Quant-Noise", &qn, false, "eval")?);
+
+    Row::print_header(&format!("Table 3 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// ================================================================ T4 ===
+
+/// Table 4: ±Quant-Noise at fixed compression in small-block and
+/// large-block PQ regimes (ResNet-50 stand-in: MicroConv).
+pub fn table4(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+
+    let plain = lab.train_cached(&base)?;
+    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+
+    let mut rows = Vec::new();
+    for (regime, overrides) in [
+        ("small blocks", BTreeMap::new()),
+        (
+            "large blocks",
+            BTreeMap::from([("conv1x1".to_string(), 8usize), ("cls".to_string(), 8)]),
+        ),
+    ] {
+        for (label, params) in [("no QN (Stock et al.)", &plain), ("Quant-Noise", &qn)] {
+            let mut cfg = base_ipq(default_ipq_finetune(&task));
+            cfg.block_override = overrides.clone();
+            lab.sess.upload_all_params(params)?;
+            let (q, _) = run_ipq(&mut lab.sess, params, lab.train_src.as_mut(), &cfg)?;
+            let keep = lab.keep_all();
+            rows.push(eval_row(
+                &mut lab,
+                &format!("{regime}: {label}"),
+                &q.store,
+                q.bytes,
+                "eval",
+                &keep,
+            )?);
+        }
+    }
+
+    Row::print_header(&format!("Table 4 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// ================================================================ T5 ===
+
+/// Table 5: exact φ_PQ vs φ_proxy vs mean-subvector noise (block
+/// selection over subvectors; the paper's cluster-grouped selection is
+/// a documented non-reproduction — the in-graph mask draws blocks
+/// independently).
+pub fn table5(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+
+    let mut rows = Vec::new();
+    for (label, noise) in [
+        ("phi_PQ (exact), subvectors", NoiseKind::ExactPq),
+        ("phi_proxy (zero-out), subvectors", NoiseKind::Proxy),
+        ("phi_mean (subvector mean), subvectors", NoiseKind::MeanSub),
+    ] {
+        let params = lab.train_cached(&with_noise(base.clone(), noise, 0.1))?;
+        // pre-quantization quality
+        let keep = lab.keep_all();
+        let ev = lab.eval_params(&params, "eval", &keep)?;
+        let (m, mname) = task_metric(&task, &ev);
+        println!("  {label}: unquantized {m:.2} {mname}");
+        rows.push(ipq_row(&mut lab, label, &params, false, "eval")?);
+    }
+
+    Row::print_header(&format!("Table 5 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// =============================================================== T10 ===
+
+/// Table 10: Histogram vs per-channel intN, ± Quant-Noise.
+pub fn table10(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let base = base_train(&task, steps);
+    let baseline = lab.train_cached(&base)?;
+
+    let mut rows = Vec::new();
+    for bits in [4u8, 8] {
+        for (mode, mode_label, noise) in [
+            (IntMode::Histogram, "histogram", if bits == 4 { NoiseKind::Int4 } else { NoiseKind::Int8 }),
+            (
+                IntMode::PerChannel,
+                "channel",
+                if bits == 4 { NoiseKind::Int4Channel } else { NoiseKind::Int8Channel },
+            ),
+        ] {
+            rows.push(int_row(
+                &mut lab,
+                &format!("int{bits} {mode_label} (post)"),
+                &baseline,
+                bits,
+                mode,
+            )?);
+            let qn = lab.train_cached(&with_noise(base.clone(), noise, default_rate(noise)))?;
+            rows.push(int_row(
+                &mut lab,
+                &format!("int{bits} {mode_label} + Quant-Noise"),
+                &qn,
+                bits,
+                mode,
+            )?);
+        }
+    }
+
+    Row::print_header(&format!("Table 10 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// =============================================================== T11 ===
+
+/// Table 11: STE through LayerDrop's pruning noise (ablation).
+pub fn table11(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
+    let mut lab = wb.lab(model)?;
+    let task = lab.sess.meta.task.clone();
+    let steps = wb.scaled(default_steps(&task));
+    let n_layers = lab.sess.meta.n_layers;
+    let mut base = with_noise(base_train(&task, steps), NoiseKind::Proxy, 0.1);
+    base.layerdrop = 0.2;
+    base.share_chunk = 2;
+
+    let prune_keep = every_other_chunk_mask(n_layers, 2);
+    let pq_scheme = Scheme::Pq { k: 64, int8_centroids: false };
+    let mut rows = Vec::new();
+    for (label, ldste) in [("QN + share + prune", false), ("QN + share + prune, LayerDrop STE", true)] {
+        let mut cfg = base.clone();
+        cfg.ldste = ldste;
+        let params = lab.train_cached(&cfg)?;
+        lab.sess.upload_all_params(&params)?;
+        let (q, _) = run_ipq(
+            &mut lab.sess,
+            &params,
+            lab.train_src.as_mut(),
+            &base_ipq(default_ipq_finetune(&task)),
+        )?;
+        let b = masked_bytes(&lab, pq_scheme, 2, &prune_keep);
+        rows.push(eval_row(&mut lab, label, &q.store, b, "eval", &prune_keep)?);
+    }
+
+    Row::print_header(&format!("Table 11 — {model} ({task})"));
+    for r in &rows {
+        r.print();
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------- helpers ---
+
+/// One-shot PQ row (no finetuning) — used by figure sweeps where full
+/// iPQ would dominate wall-clock.
+pub fn post_pq_row(
+    lab: &mut Lab,
+    label: &str,
+    params: &ParamStore,
+    k: usize,
+    overrides: BTreeMap<String, usize>,
+) -> Result<Row> {
+    let mut cfg = base_ipq(0);
+    cfg.k = k;
+    cfg.block_override = overrides;
+    let q = post_pq(params, &lab.sess.meta, &cfg)?;
+    let keep = lab.keep_all();
+    eval_row(lab, label, &q.store, q.bytes, "eval", &keep)
+}
+
+/// Sanity check: param_bits arithmetic used in reports.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::{param_bits, ParamInfo};
+
+    #[test]
+    fn masked_and_param_bits_consistent() {
+        let p = ParamInfo {
+            name: "w".into(),
+            numel: 4096,
+            rows: 64,
+            cols: 64,
+            quantized: true,
+            pq_block: 8,
+        };
+        // one stored + one masked == single-param total
+        let both = model_bytes_with_mask(
+            &[p.clone(), p.clone()],
+            Scheme::Int { bits: 8 },
+            &[true, false],
+        );
+        assert_eq!(both, param_bits(&p, Scheme::Int { bits: 8 }) / 8);
+    }
+}

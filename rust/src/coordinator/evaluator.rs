@@ -1,0 +1,123 @@
+//! Evaluation: perplexity (LM) and accuracy (CLS/IMG) over a fixed set
+//! of eval batches, for fp32 or quantized weights, optionally through
+//! the int8-activation artifact (§3.3).
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::TrainBatch;
+use crate::model::params::ParamStore;
+use crate::runtime::executable::ModelSession;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub nll: f64,
+    pub ppl: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Evaluate over `batches` via `entry` ("eval" or "eval_int8act") with
+/// the weights currently uploaded to the session.
+pub fn evaluate(
+    sess: &mut ModelSession,
+    entry: &str,
+    batches: &[TrainBatch],
+    layer_keep: &[f32],
+) -> Result<EvalResult> {
+    anyhow::ensure!(!batches.is_empty(), "no eval batches");
+    let denom = sess.meta.eval_denominator();
+    let mut sum_nll = 0.0;
+    let mut sum_correct = 0.0;
+    for b in batches {
+        let (nll, correct) = sess.eval(entry, &b.input(), b.targets(), layer_keep)?;
+        sum_nll += nll;
+        sum_correct += correct;
+    }
+    let n = denom * batches.len();
+    let nll = sum_nll / n as f64;
+    Ok(EvalResult { nll, ppl: nll.exp(), accuracy: sum_correct / n as f64, n })
+}
+
+/// Evaluate a specific weight set (uploads, evaluates, restores).
+pub fn evaluate_params(
+    sess: &mut ModelSession,
+    params: &ParamStore,
+    restore: &ParamStore,
+    entry: &str,
+    batches: &[TrainBatch],
+    layer_keep: &[f32],
+) -> Result<EvalResult> {
+    sess.upload_all_params(params)?;
+    let r = evaluate(sess, entry, batches, layer_keep);
+    sess.upload_all_params(restore)?;
+    r
+}
+
+/// Build a deterministic eval batch set for an LM token stream
+/// (held-out tail of the corpus).
+pub fn lm_eval_batches(
+    tokens: &[i32],
+    batch: usize,
+    seq_len: usize,
+    n_batches: usize,
+) -> Vec<TrainBatch> {
+    let mut b = crate::data::batcher::LmBatcher::new(tokens, batch, seq_len);
+    let n = n_batches.min(b.batches_per_epoch());
+    (0..n)
+        .map(|_| {
+            let lb = b.next();
+            TrainBatch::Tokens { tokens: lb.tokens, targets: lb.targets }
+        })
+        .collect()
+}
+
+/// Deterministic eval batches from an example/label set.
+pub fn cls_eval_batches(
+    batcher: &crate::data::batcher::EpochBatcher<i32>,
+    n_batches: usize,
+) -> Vec<TrainBatch> {
+    (0..n_batches.min(batcher.batches_per_epoch()))
+        .map(|i| {
+            let (tokens, labels) = batcher.eval_batch(i);
+            TrainBatch::Tokens { tokens, targets: labels }
+        })
+        .collect()
+}
+
+pub fn img_eval_batches(
+    batcher: &crate::data::batcher::EpochBatcher<f32>,
+    n_batches: usize,
+) -> Vec<TrainBatch> {
+    (0..n_batches.min(batcher.batches_per_epoch()))
+        .map(|i| {
+            let (images, labels) = batcher.eval_batch(i);
+            TrainBatch::Images { images, labels }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_eval_batches_deterministic_and_sized() {
+        let tokens: Vec<i32> = (0..2000).map(|i| i % 50).collect();
+        let a = lm_eval_batches(&tokens, 4, 16, 5);
+        let b = lm_eval_batches(&tokens, 4, 16, 5);
+        assert_eq!(a.len(), 5);
+        match (&a[0], &b[0]) {
+            (TrainBatch::Tokens { tokens: t1, .. }, TrainBatch::Tokens { tokens: t2, .. }) => {
+                assert_eq!(t1, t2)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lm_eval_batches_capped_by_epoch() {
+        let tokens: Vec<i32> = (0..500).map(|i| i % 10).collect();
+        let b = lm_eval_batches(&tokens, 2, 16, 1000);
+        assert_eq!(b.len(), (250 - 1) / 16);
+    }
+}

@@ -1,0 +1,296 @@
+//! Iterative Product Quantization (paper §3.2, following Stock et al.).
+//!
+//! Structures are quantized sequentially (default order FFN → emb →
+//! attn, the paper's §7.11.4 choice); after each group is frozen to its
+//! codebook the *remaining* float parameters keep training on the task
+//! loss while the frozen groups' codewords are finetuned with Eq. (4):
+//!
+//! ```text
+//! c ← c − η · mean_{(k,l): I_kl = c} ∂L/∂b_kl
+//! ```
+//!
+//! i.e. each codeword moves by the average gradient of the subvectors
+//! assigned to it. The paper finetunes under the uncompressed teacher;
+//! we finetune on the task loss directly (DESIGN.md §Substitutions).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::optim::{clip_grad_norm, Optimizer};
+use crate::coordinator::quantize::{quantize_params, QuantizedModel, WeightScheme};
+use crate::coordinator::trainer::BatchSource;
+use crate::log_info;
+use crate::model::params::ParamStore;
+use crate::model::tensor::Tensor;
+use crate::quant::pq::PqMatrix;
+use crate::runtime::executable::ModelSession;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct IpqConfig {
+    pub k: usize,
+    pub kmeans_iters: usize,
+    /// finetune steps after each group is quantized
+    pub finetune_steps: usize,
+    /// codeword learning rate η in Eq. (4)
+    pub codeword_lr: f32,
+    /// float-parameter finetune LR (upper layers adapting to drift)
+    pub float_lr: f32,
+    /// structure quantization order; noised structures not listed are
+    /// appended at the end in manifest order
+    pub order: Vec<String>,
+    /// §3.3: int8-compress centroids at the end
+    pub int8_centroids: bool,
+    /// per-structure PQ block-size override (Fig. 6b)
+    pub block_override: BTreeMap<String, usize>,
+    pub seed: u64,
+}
+
+impl Default for IpqConfig {
+    fn default() -> Self {
+        IpqConfig {
+            k: 256,
+            kmeans_iters: 12,
+            finetune_steps: 30,
+            codeword_lr: 0.05,
+            float_lr: 0.01,
+            order: vec!["ffn".into(), "emb".into(), "attn".into()],
+            int8_centroids: false,
+            block_override: BTreeMap::new(),
+            seed: 17,
+        }
+    }
+}
+
+/// Group the noised params by quantization order.
+fn group_order(meta: &crate::model::config::ModelMeta, order: &[String]) -> Vec<Vec<String>> {
+    let mut groups: Vec<Vec<String>> = Vec::new();
+    let mut taken: Vec<String> = Vec::new();
+    for s in order {
+        let names: Vec<String> = meta
+            .params
+            .iter()
+            .filter(|p| p.noised && &p.structure == s)
+            .map(|p| p.name.clone())
+            .collect();
+        taken.extend(names.iter().cloned());
+        if !names.is_empty() {
+            groups.push(names);
+        }
+    }
+    let rest: Vec<String> = meta
+        .params
+        .iter()
+        .filter(|p| p.noised && !taken.contains(&p.name))
+        .map(|p| p.name.clone())
+        .collect();
+    if !rest.is_empty() {
+        groups.push(rest);
+    }
+    groups
+}
+
+/// Eq. (4): one codeword-gradient step for a frozen param, then refresh
+/// the dequantized weights in-place (assignments stay fixed).
+pub fn codeword_step(m: &mut PqMatrix, grad: &Tensor, lr: f32) {
+    let d = m.block_size();
+    let k = m.codebook.k;
+    let mut acc = vec![0.0f64; k * d];
+    let mut counts = vec![0usize; k];
+    for (s, &code) in m.codes.iter().enumerate() {
+        let g = &grad.data[s * d..(s + 1) * d];
+        let c = code as usize;
+        counts[c] += 1;
+        for t in 0..d {
+            acc[c * d + t] += g[t] as f64;
+        }
+    }
+    for c in 0..k {
+        if counts[c] == 0 {
+            continue;
+        }
+        let cw = m.codebook.codeword_mut(c);
+        for t in 0..d {
+            cw[t] -= lr * (acc[c * d + t] / counts[c] as f64) as f32;
+        }
+    }
+}
+
+pub struct IpqReport {
+    pub group_losses: Vec<(String, f32)>,
+    pub bytes: u64,
+    pub sq_error: f64,
+}
+
+/// Run the full iPQ pipeline on trained params. Returns the quantized
+/// model (PQ state + dequantized store) and a report.
+pub fn run_ipq(
+    sess: &mut ModelSession,
+    params: &ParamStore,
+    data: &mut dyn BatchSource,
+    cfg: &IpqConfig,
+) -> Result<(QuantizedModel, IpqReport)> {
+    let meta = sess.meta.clone();
+    let mut rng = Pcg::new(cfg.seed);
+    let mut work = params.clone();
+    let mut pq_state: BTreeMap<String, PqMatrix> = BTreeMap::new();
+    let mut frozen: Vec<bool> = meta.params.iter().map(|_| false).collect();
+    let mut opt = Optimizer::sgd(&work, 0.9, false);
+    let mut group_losses = Vec::new();
+
+    let groups = group_order(&meta, &cfg.order);
+    for (gi, group) in groups.iter().enumerate() {
+        // 1. quantize this group against the *current* weights
+        for name in group {
+            let pm = meta.param(name).unwrap();
+            let (rows, cols) = pm.view.unwrap();
+            let bs = cfg
+                .block_override
+                .get(&pm.structure)
+                .copied()
+                .or(pm.block_size)
+                .unwrap_or(8);
+            let pcfg = crate::quant::pq::PqConfig {
+                block_size: bs,
+                n_centroids: cfg.k,
+                kmeans_iters: cfg.kmeans_iters,
+            };
+            let m = crate::quant::pq::fit(&work.get(name).unwrap().data, rows, cols, &pcfg, &mut rng);
+            let dec = m.decode();
+            *work.get_mut(name).unwrap() = Tensor::from_vec(&pm.shape, dec);
+            let idx = meta.params.iter().position(|p| &p.name == name).unwrap();
+            frozen[idx] = true;
+            pq_state.insert(name.clone(), m);
+        }
+        sess.upload_all_params(&work)?;
+
+        // 2. finetune: float params via SGD, frozen groups via Eq. (4)
+        let mut last_loss = f32::NAN;
+        for _ in 0..cfg.finetune_steps {
+            let batch = data.next_batch();
+            let keep = vec![1.0f32; meta.n_layers];
+            let seed = (rng.next_u32() & 0x7fff_ffff) as i32;
+            let (loss, mut grads) =
+                sess.grad("grad_mix", &batch.input(), batch.targets(), &keep, 0.0, seed)?;
+            last_loss = loss;
+            clip_grad_norm(&mut grads, 0.25);
+            // codeword updates for every frozen param
+            for (idx, pm) in meta.params.iter().enumerate() {
+                if !frozen[idx] || !pq_state.contains_key(&pm.name) {
+                    continue;
+                }
+                let m = pq_state.get_mut(&pm.name).unwrap();
+                codeword_step(m, &grads[idx], cfg.codeword_lr);
+                *work.get_mut(&pm.name).unwrap() = Tensor::from_vec(&pm.shape, m.decode());
+            }
+            // float updates for everything else
+            opt.step(&mut work, &grads, cfg.float_lr, &frozen);
+            sess.upload_all_params(&work)?;
+        }
+        log_info!(
+            "ipq[{}] group {}/{} ({:?}…) frozen, loss {last_loss:.4}",
+            meta.name,
+            gi + 1,
+            groups.len(),
+            group.first()
+        );
+        group_losses.push((group.join(","), last_loss));
+    }
+
+    // 3. optional §3.3 combination: int8-compress all codebooks
+    if cfg.int8_centroids {
+        for (name, m) in pq_state.iter_mut() {
+            m.codebook.compress_int8();
+            let pm = meta.param(name).unwrap();
+            *work.get_mut(name).unwrap() = Tensor::from_vec(&pm.shape, m.decode());
+        }
+        sess.upload_all_params(&work)?;
+    }
+
+    // storage accounting via the scheme machinery
+    let scheme = WeightScheme::Pq {
+        k: cfg.k,
+        kmeans_iters: cfg.kmeans_iters,
+        block_override: cfg.block_override.clone(),
+        int8_centroids: cfg.int8_centroids,
+    };
+    let bytes = crate::coordinator::quantize::scheme_bytes(&meta, &scheme);
+    let sq_error: f64 = meta
+        .params
+        .iter()
+        .filter(|p| p.noised)
+        .map(|p| {
+            params
+                .get(&p.name)
+                .unwrap()
+                .data
+                .iter()
+                .zip(&work.get(&p.name).unwrap().data)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        })
+        .sum();
+
+    Ok((
+        QuantizedModel { store: work, bytes, pq: pq_state, sq_error },
+        IpqReport { group_losses, bytes, sq_error },
+    ))
+}
+
+/// One-shot PQ without finetuning — the "iPQ (post)" baseline rows.
+pub fn post_pq(
+    params: &ParamStore,
+    meta: &crate::model::config::ModelMeta,
+    cfg: &IpqConfig,
+) -> Result<QuantizedModel> {
+    let scheme = WeightScheme::Pq {
+        k: cfg.k,
+        kmeans_iters: cfg.kmeans_iters,
+        block_override: cfg.block_override.clone(),
+        int8_centroids: cfg.int8_centroids,
+    };
+    quantize_params(params, meta, &scheme, &mut Pcg::new(cfg.seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::Codebook;
+
+    #[test]
+    fn codeword_step_moves_by_mean_gradient() {
+        // 2 codewords (d=2), 4 subvectors: codes [0,0,1,1]
+        let cb = Codebook::new(vec![0.0, 0.0, 1.0, 1.0], 2, 2);
+        let mut m = PqMatrix { codebook: cb, codes: vec![0, 0, 1, 1], rows: 2, cols: 4 };
+        let grad = Tensor::from_vec(&[2, 4], vec![1.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0, 4.0]);
+        codeword_step(&mut m, &grad, 0.5);
+        // codeword 0: mean grad (2.0, 0.0) ⇒ 0 - 0.5·2 = -1.0
+        assert_eq!(m.codebook.codeword(0), &[-1.0, 0.0]);
+        // codeword 1: mean grad (0.0, 3.0) ⇒ 1 - 0.5·3 = -0.5
+        assert_eq!(m.codebook.codeword(1), &[1.0, -0.5]);
+    }
+
+    #[test]
+    fn codeword_step_ignores_empty_codewords() {
+        let cb = Codebook::new(vec![5.0, 5.0, 7.0, 7.0], 2, 2);
+        let mut m = PqMatrix { codebook: cb, codes: vec![0, 0], rows: 1, cols: 4 };
+        let grad = Tensor::from_vec(&[1, 4], vec![1.0; 4]);
+        codeword_step(&mut m, &grad, 1.0);
+        assert_eq!(m.codebook.codeword(1), &[7.0, 7.0]); // untouched
+    }
+
+    #[test]
+    fn codeword_step_reduces_linear_loss() {
+        // loss = <G, W>; moving codewords along -G must reduce it
+        let cb = Codebook::new(vec![0.5, -0.5, 1.5, 0.25], 2, 2);
+        let mut m = PqMatrix { codebook: cb, codes: vec![0, 1, 1, 0], rows: 2, cols: 4 };
+        let g = Tensor::from_vec(&[2, 4], (0..8).map(|i| (i as f32 - 3.5) / 4.0).collect());
+        let loss = |m: &PqMatrix| -> f64 {
+            m.decode().iter().zip(&g.data).map(|(&w, &gi)| (w * gi) as f64).sum()
+        };
+        let before = loss(&m);
+        codeword_step(&mut m, &g, 0.1);
+        assert!(loss(&m) < before);
+    }
+}

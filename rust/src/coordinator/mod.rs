@@ -1,0 +1,7 @@
+//! The paper's pipelines: Quant-Noise training loop, post-training
+//! quantization, iPQ with Eq. (4) codeword finetuning, and evaluation.
+pub mod evaluator;
+pub mod ipq;
+pub mod optim;
+pub mod quantize;
+pub mod trainer;

@@ -1,0 +1,226 @@
+//! Optimizers and LR schedules (paper §7.6: Nesterov SGD with momentum
+//! 0.99 + gradient-norm renormalization at 0.1 and a cosine schedule for
+//! the LM; Adam with polynomial decay for RoBERTa-style training).
+
+use crate::model::params::ParamStore;
+use crate::model::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup then cosine decay to `min_lr`.
+    Cosine { lr: f32, min_lr: f32, warmup: usize, total: usize },
+    /// Linear warmup then polynomial decay.
+    Poly { lr: f32, warmup: usize, total: usize, power: f32 },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Cosine { lr, min_lr, warmup, total } => {
+                if step < warmup {
+                    lr * (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = t.min(1.0);
+                    min_lr + 0.5 * (lr - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+            Schedule::Poly { lr, warmup, total, power } => {
+                if step < warmup {
+                    lr * (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    lr * (1.0 - t.min(1.0)).powf(power)
+                }
+            }
+        }
+    }
+}
+
+/// Renormalize gradients if the global norm exceeds `max_norm`
+/// (Pascanu et al., the paper clips at 0.1). Returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|g| g.sq_norm()).sum::<f64>().sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            g.scale(scale);
+        }
+    }
+    norm
+}
+
+pub enum Optimizer {
+    Sgd { momentum: f32, nesterov: bool, velocity: Vec<Tensor> },
+    Adam { beta1: f32, beta2: f32, eps: f32, m: Vec<Tensor>, v: Vec<Tensor>, t: usize },
+}
+
+impl Optimizer {
+    pub fn sgd(params: &ParamStore, momentum: f32, nesterov: bool) -> Optimizer {
+        Optimizer::Sgd {
+            momentum,
+            nesterov,
+            velocity: params.iter().map(|(_, t)| Tensor::zeros(&t.shape)).collect(),
+        }
+    }
+
+    pub fn adam(params: &ParamStore) -> Optimizer {
+        Optimizer::Adam {
+            beta1: 0.9,
+            beta2: 0.98,
+            eps: 1e-8,
+            m: params.iter().map(|(_, t)| Tensor::zeros(&t.shape)).collect(),
+            v: params.iter().map(|(_, t)| Tensor::zeros(&t.shape)).collect(),
+            t: 0,
+        }
+    }
+
+    /// In-place parameter update. `grads` must be in param-store order.
+    /// `frozen[i]` skips parameter i (used by the iPQ pipeline, which
+    /// updates quantized layers through their codewords instead).
+    pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor], lr: f32, frozen: &[bool]) {
+        let names: Vec<String> = params.names().to_vec();
+        assert_eq!(names.len(), grads.len());
+        match self {
+            Optimizer::Sgd { momentum, nesterov, velocity } => {
+                for (i, name) in names.iter().enumerate() {
+                    if frozen[i] {
+                        continue;
+                    }
+                    let g = &grads[i];
+                    let vel = &mut velocity[i];
+                    // v ← μ v − lr g ;  w ← w + v  (+ nesterov lookahead)
+                    vel.scale(*momentum);
+                    vel.axpy(-lr, g);
+                    let p = params.get_mut(name).unwrap();
+                    if *nesterov {
+                        p.axpy(*momentum, vel);
+                        p.axpy(-lr, g);
+                    } else {
+                        p.axpy(1.0, vel);
+                    }
+                }
+            }
+            Optimizer::Adam { beta1, beta2, eps, m, v, t } => {
+                *t += 1;
+                let bc1 = 1.0 - beta1.powi(*t as i32);
+                let bc2 = 1.0 - beta2.powi(*t as i32);
+                for (i, name) in names.iter().enumerate() {
+                    if frozen[i] {
+                        continue;
+                    }
+                    let g = &grads[i];
+                    let mi = &mut m[i];
+                    mi.scale(*beta1);
+                    mi.axpy(1.0 - *beta1, g);
+                    let vi = &mut v[i];
+                    for (vj, &gj) in vi.data.iter_mut().zip(&g.data) {
+                        *vj = *beta2 * *vj + (1.0 - *beta2) * gj * gj;
+                    }
+                    let p = params.get_mut(name).unwrap();
+                    for ((pj, &mj), &vj) in p.data.iter_mut().zip(&mi.data).zip(&vi.data) {
+                        let mhat = mj / bc1;
+                        let vhat = vj / bc2;
+                        *pj -= lr * mhat / (vhat.sqrt() + *eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_params(x0: f32) -> ParamStore {
+        let mut p = ParamStore::new();
+        p.insert("x", Tensor::from_vec(&[2], vec![x0, -x0]));
+        p
+    }
+
+    fn quad_grad(p: &ParamStore) -> Vec<Tensor> {
+        // f = |x|²/2 ⇒ ∇f = x
+        vec![p.get("x").unwrap().clone()]
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut p = quad_params(5.0);
+        let mut opt = Optimizer::sgd(&p, 0.9, true);
+        for _ in 0..200 {
+            let g = quad_grad(&p);
+            opt.step(&mut p, &g, 0.05, &[false]);
+        }
+        assert!(p.get("x").unwrap().max_abs() < 1e-2);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut p = quad_params(3.0);
+        let mut opt = Optimizer::adam(&p);
+        for _ in 0..500 {
+            let g = quad_grad(&p);
+            opt.step(&mut p, &g, 0.05, &[false]);
+        }
+        assert!(p.get("x").unwrap().max_abs() < 1e-2);
+    }
+
+    #[test]
+    fn frozen_params_do_not_move() {
+        let mut p = quad_params(2.0);
+        let before = p.get("x").unwrap().clone();
+        let mut opt = Optimizer::sgd(&p, 0.9, false);
+        let g = quad_grad(&p);
+        opt.step(&mut p, &g, 0.1, &[true]);
+        assert_eq!(p.get("x").unwrap(), &before);
+    }
+
+    #[test]
+    fn clip_rescales_large_gradients() {
+        let mut g = vec![Tensor::from_vec(&[2], vec![3.0, 4.0])];
+        let norm = clip_grad_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let after = g[0].sq_norm().sqrt();
+        assert!((after - 1.0).abs() < 1e-5);
+        // small grads untouched
+        let mut g2 = vec![Tensor::from_vec(&[1], vec![0.05])];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2[0].data[0], 0.05);
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = Schedule::Cosine { lr: 1.0, min_lr: 0.1, warmup: 10, total: 110 };
+        assert!(s.lr(0) < 0.2); // warmup start
+        assert!((s.lr(9) - 1.0).abs() < 0.01); // warmup end
+        assert!(s.lr(60) < 1.0 && s.lr(60) > 0.1); // mid-decay
+        assert!((s.lr(109) - 0.1).abs() < 0.01); // end ≈ min
+        assert!((s.lr(500) - 0.1).abs() < 0.01); // clamped after total
+    }
+
+    #[test]
+    fn poly_schedule_shape() {
+        let s = Schedule::Poly { lr: 1.0, warmup: 5, total: 105, power: 1.0 };
+        assert!((s.lr(4) - 1.0).abs() < 0.01);
+        assert!((s.lr(55) - 0.5).abs() < 0.02);
+        assert!(s.lr(104) < 0.02);
+    }
+
+    #[test]
+    fn sgd_momentum_accelerates() {
+        // with momentum the first two steps move farther than without
+        let run = |mom: f32| {
+            let mut p = quad_params(1.0);
+            let mut opt = Optimizer::sgd(&p, mom, false);
+            for _ in 0..3 {
+                let g = quad_grad(&p);
+                opt.step(&mut p, &g, 0.1, &[false]);
+            }
+            1.0 - p.get("x").unwrap().data[0]
+        };
+        assert!(run(0.9) > run(0.0));
+    }
+}

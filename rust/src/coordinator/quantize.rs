@@ -1,0 +1,323 @@
+//! Post-training weight quantization: apply a compression scheme to a
+//! parameter store, producing the quantized weights the eval artifact
+//! sees plus exact storage accounting.
+//!
+//! Covers: intN per-tensor (MinMax or Histogram observers, §7.7), intN
+//! per-channel (Table 10), one-shot PQ (no finetuning — the "iPQ" rows
+//! *without* finetuning in ablations), and the iPQ ⊕ int8 combination
+//! (§3.3: int8 centroids; activations are handled by the
+//! `eval_int8act` artifact).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::config::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::quant::observer::HistogramObserver;
+use crate::quant::pq::{fit, PqConfig, PqMatrix};
+use crate::quant::scalar;
+use crate::quant::size::{model_bytes, Scheme};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IntMode {
+    MinMax,
+    Histogram,
+    PerChannel,
+}
+
+#[derive(Debug, Clone)]
+pub enum WeightScheme {
+    /// fp32 passthrough (size accounting only)
+    None,
+    Int {
+        bits: u8,
+        mode: IntMode,
+    },
+    Pq {
+        k: usize,
+        kmeans_iters: usize,
+        /// per-structure block-size override (Fig. 6b); falls back to
+        /// the manifest's per-param block size
+        block_override: BTreeMap<String, usize>,
+        int8_centroids: bool,
+    },
+}
+
+impl WeightScheme {
+    pub fn pq(k: usize) -> WeightScheme {
+        WeightScheme::Pq {
+            k,
+            kmeans_iters: 12,
+            block_override: BTreeMap::new(),
+            int8_centroids: false,
+        }
+    }
+}
+
+pub struct QuantizedModel {
+    /// Dequantized weights to feed the eval artifact.
+    pub store: ParamStore,
+    /// Exact storage under the scheme (norms/biases stay fp32).
+    pub bytes: u64,
+    /// PQ state per param (kept for iPQ finetuning / exact-noise reuse).
+    pub pq: BTreeMap<String, PqMatrix>,
+    /// Total squared reconstruction error across quantized params.
+    pub sq_error: f64,
+}
+
+/// Apply `scheme` to every noised parameter.
+pub fn quantize_params(
+    params: &ParamStore,
+    meta: &ModelMeta,
+    scheme: &WeightScheme,
+    rng: &mut Pcg,
+) -> Result<QuantizedModel> {
+    let mut store = ParamStore::new();
+    let mut pq_map = BTreeMap::new();
+    let mut sq_error = 0.0f64;
+
+    for pm in &meta.params {
+        let t = params
+            .get(&pm.name)
+            .ok_or_else(|| anyhow::anyhow!("missing param {}", pm.name))?;
+        if !pm.noised {
+            store.insert(&pm.name, t.clone());
+            continue;
+        }
+        let (rows, cols) = pm.view.unwrap_or((1, t.numel()));
+        let mut data = t.data.clone();
+        match scheme {
+            WeightScheme::None => {}
+            WeightScheme::Int { bits, mode } => match mode {
+                IntMode::MinMax => {
+                    let qp = scalar::QParams::from_minmax(&data, *bits);
+                    scalar::roundtrip(&mut data, &qp);
+                }
+                IntMode::Histogram => {
+                    let mut h = HistogramObserver::new(2048);
+                    h.observe(&data);
+                    let qp = h.qparams(*bits);
+                    scalar::roundtrip(&mut data, &qp);
+                }
+                IntMode::PerChannel => {
+                    scalar::roundtrip_per_channel(&mut data, rows, cols, *bits);
+                }
+            },
+            WeightScheme::Pq { k, kmeans_iters, block_override, int8_centroids } => {
+                let bs = block_override
+                    .get(&pm.structure)
+                    .copied()
+                    .or(pm.block_size)
+                    .unwrap_or(8);
+                anyhow::ensure!(
+                    cols % bs == 0,
+                    "{}: cols {cols} not divisible by PQ block {bs}",
+                    pm.name
+                );
+                let cfg = PqConfig { block_size: bs, n_centroids: *k, kmeans_iters: *kmeans_iters };
+                let mut m = fit(&data, rows, cols, &cfg, rng);
+                if *int8_centroids {
+                    m.codebook.compress_int8();
+                }
+                data = m.decode();
+                pq_map.insert(pm.name.clone(), m);
+            }
+        }
+        sq_error += t
+            .data
+            .iter()
+            .zip(&data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>();
+        store.insert(&pm.name, crate::model::tensor::Tensor::from_vec(&pm.shape, data));
+    }
+
+    let bytes = scheme_bytes(meta, scheme);
+    Ok(QuantizedModel { store, bytes, pq: pq_map, sq_error })
+}
+
+/// Storage accounting for a scheme over this model's inventory.
+pub fn scheme_bytes(meta: &ModelMeta, scheme: &WeightScheme) -> u64 {
+    let infos: Vec<_> = match scheme {
+        WeightScheme::Pq { block_override, .. } => meta
+            .params
+            .iter()
+            .map(|p| p.to_param_info(block_override.get(&p.structure).copied()))
+            .collect(),
+        _ => meta.param_infos(),
+    };
+    let s = match scheme {
+        WeightScheme::None => Scheme::Fp32,
+        WeightScheme::Int { bits, .. } => Scheme::Int { bits: *bits },
+        WeightScheme::Pq { k, int8_centroids, .. } => {
+            Scheme::Pq { k: *k, int8_centroids: *int8_centroids }
+        }
+    };
+    model_bytes(&infos, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ParamMeta;
+    use crate::model::tensor::Tensor;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            task: "lm".into(),
+            n_layers: 1,
+            batch: 1,
+            seq_len: 4,
+            tokens_shape: vec![1, 4],
+            targets_shape: vec![1, 4],
+            vocab: 8,
+            n_classes: 0,
+            params: vec![
+                ParamMeta {
+                    name: "w".into(),
+                    shape: vec![16, 32],
+                    structure: "ffn".into(),
+                    noised: true,
+                    view: Some((16, 32)),
+                    block_size: Some(8),
+                },
+                ParamMeta {
+                    name: "ln".into(),
+                    shape: vec![16],
+                    structure: "norm".into(),
+                    noised: false,
+                    view: None,
+                    block_size: None,
+                },
+            ],
+            entries: vec![],
+            init_file: String::new(),
+        }
+    }
+
+    fn tiny_params() -> ParamStore {
+        let mut rng = Pcg::new(3);
+        let mut p = ParamStore::new();
+        p.insert(
+            "w",
+            Tensor::from_vec(&[16, 32], (0..512).map(|_| rng.next_normal()).collect()),
+        );
+        p.insert("ln", Tensor::from_vec(&[16], vec![1.0; 16]));
+        p
+    }
+
+    #[test]
+    fn int8_roundtrip_close_and_norms_untouched() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let q = quantize_params(
+            &params,
+            &meta,
+            &WeightScheme::Int { bits: 8, mode: IntMode::MinMax },
+            &mut Pcg::new(0),
+        )
+        .unwrap();
+        assert_eq!(q.store.get("ln").unwrap(), params.get("ln").unwrap());
+        let mse = q.store.get("w").unwrap().mse(params.get("w").unwrap());
+        assert!(mse < 1e-3, "{mse}");
+        assert!(q.sq_error > 0.0);
+    }
+
+    #[test]
+    fn int4_worse_than_int8() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let q8 = quantize_params(&params, &meta, &WeightScheme::Int { bits: 8, mode: IntMode::MinMax }, &mut Pcg::new(0)).unwrap();
+        let q4 = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::MinMax }, &mut Pcg::new(0)).unwrap();
+        assert!(q4.sq_error > q8.sq_error);
+        assert!(q4.bytes < q8.bytes);
+    }
+
+    #[test]
+    fn pq_returns_codebooks_and_smaller_size() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let q = quantize_params(&params, &meta, &WeightScheme::pq(16), &mut Pcg::new(1)).unwrap();
+        assert!(q.pq.contains_key("w"));
+        assert!(!q.pq.contains_key("ln"));
+        let fp = scheme_bytes(&meta, &WeightScheme::None);
+        assert!(q.bytes < fp, "{} vs {fp}", q.bytes);
+        // decoded store matches PqMatrix::decode
+        assert_eq!(q.store.get("w").unwrap().data, q.pq["w"].decode());
+    }
+
+    #[test]
+    fn int8_centroids_shrink_codebook() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let plain = quantize_params(&params, &meta, &WeightScheme::pq(16), &mut Pcg::new(2)).unwrap();
+        let mut s = WeightScheme::pq(16);
+        if let WeightScheme::Pq { int8_centroids, .. } = &mut s {
+            *int8_centroids = true;
+        }
+        let combo = quantize_params(&params, &meta, &s, &mut Pcg::new(2)).unwrap();
+        assert!(combo.bytes < plain.bytes);
+        // slightly more error than plain PQ, but same order of magnitude
+        assert!(combo.sq_error >= plain.sq_error);
+        assert!(combo.sq_error < plain.sq_error * 2.0 + 1.0);
+    }
+
+    #[test]
+    fn block_override_changes_size() {
+        // needs a matrix large enough that the index term dominates the
+        // codebook term (as in real models) for bigger blocks to win
+        let mut meta = tiny_meta();
+        meta.params[0].shape = vec![128, 128];
+        meta.params[0].view = Some((128, 128));
+        let mut rng = Pcg::new(9);
+        let mut params = ParamStore::new();
+        params.insert(
+            "w",
+            Tensor::from_vec(&[128, 128], (0..128 * 128).map(|_| rng.next_normal()).collect()),
+        );
+        params.insert("ln", Tensor::from_vec(&[16], vec![1.0; 16]));
+        let mut s = WeightScheme::pq(4);
+        if let WeightScheme::Pq { block_override, .. } = &mut s {
+            block_override.insert("ffn".into(), 16);
+        }
+        let big_blocks = quantize_params(&params, &meta, &s, &mut Pcg::new(3)).unwrap();
+        let small = quantize_params(&params, &meta, &WeightScheme::pq(4), &mut Pcg::new(3)).unwrap();
+        assert!(big_blocks.bytes < small.bytes, "{} vs {}", big_blocks.bytes, small.bytes);
+        assert!(big_blocks.sq_error > small.sq_error);
+    }
+
+    #[test]
+    fn histogram_mode_runs() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let q = quantize_params(
+            &params,
+            &meta,
+            &WeightScheme::Int { bits: 4, mode: IntMode::Histogram },
+            &mut Pcg::new(4),
+        )
+        .unwrap();
+        assert!(q.sq_error.is_finite());
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_scaled_rows() {
+        let meta = tiny_meta();
+        let mut params = tiny_params();
+        // scale half the rows ×50 so per-tensor quantization suffers
+        {
+            let w = params.get_mut("w").unwrap();
+            for r in 0..8 {
+                for c in 0..32 {
+                    w.data[r * 32 + c] *= 50.0;
+                }
+            }
+        }
+        let pt = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::MinMax }, &mut Pcg::new(5)).unwrap();
+        let pc = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::PerChannel }, &mut Pcg::new(5)).unwrap();
+        assert!(pc.sq_error < pt.sq_error);
+    }
+}

@@ -1,0 +1,361 @@
+//! The Quant-Noise training loop (paper §4).
+//!
+//! Each step the coordinator samples a LayerDrop mask, refreshes the
+//! quantized-image ("hat") tensors when the noise kind needs them
+//! (exact φ_PQ: k-means once per refresh interval, per the paper once
+//! per epoch), runs the AOT grad artifact, folds shared-layer
+//! gradients, clips, applies the optimizer and re-uploads parameters.
+
+use anyhow::Result;
+
+use crate::coordinator::optim::{clip_grad_norm, Optimizer, Schedule};
+use crate::log_info;
+use crate::model::params::ParamStore;
+use crate::model::tensor::Tensor;
+use crate::quant::kmeans::{kmeans, KmeansConfig};
+use crate::quant::noise::{build_hat, NoiseKind};
+use crate::quant::pq::mean_subvector_hat;
+use crate::quant::codebook::Codebook;
+use crate::quant::prune::share_map;
+use crate::runtime::executable::{BatchInput, ModelSession};
+use crate::util::rng::Pcg;
+
+/// One training batch (owned — the session borrows it per step).
+#[derive(Debug, Clone)]
+pub enum TrainBatch {
+    Tokens { tokens: Vec<i32>, targets: Vec<i32> },
+    Images { images: Vec<f32>, labels: Vec<i32> },
+}
+
+impl TrainBatch {
+    pub fn input(&self) -> BatchInput<'_> {
+        match self {
+            TrainBatch::Tokens { tokens, .. } => BatchInput::Tokens(tokens),
+            TrainBatch::Images { images, .. } => BatchInput::Images(images),
+        }
+    }
+    pub fn targets(&self) -> &[i32] {
+        match self {
+            TrainBatch::Tokens { targets, .. } => targets,
+            TrainBatch::Images { labels, .. } => labels,
+        }
+    }
+}
+
+pub trait BatchSource {
+    fn next_batch(&mut self) -> TrainBatch;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptKind {
+    Sgd { momentum: f32, nesterov: bool },
+    Adam,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub schedule: Schedule,
+    pub optimizer: OptKind,
+    /// gradient-norm clip; 0 disables (paper uses 0.1 for the LM)
+    pub clip: f32,
+    pub noise: NoiseKind,
+    pub noise_rate: f32,
+    /// LayerDrop probability (paper: 0.2)
+    pub layerdrop: f32,
+    /// STE through LayerDrop (Table 11 ablation) — uses grad_mix_ldste
+    pub ldste: bool,
+    /// adjacent-layer weight sharing chunk size; 0/1 = off (§7.9)
+    pub share_chunk: usize,
+    /// steps between exact-PQ hat refreshes ("once per epoch")
+    pub hat_refresh: usize,
+    /// centroids for the exact-PQ noise codebooks
+    pub pq_k: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            schedule: Schedule::Cosine { lr: 0.05, min_lr: 1e-4, warmup: 30, total: 300 },
+            optimizer: OptKind::Sgd { momentum: 0.9, nesterov: true },
+            clip: 0.1,
+            noise: NoiseKind::Proxy,
+            noise_rate: 0.1,
+            layerdrop: 0.0,
+            ldste: false,
+            share_chunk: 0,
+            hat_refresh: 100,
+            pq_k: 64,
+            seed: 0,
+            log_every: 50,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainStats {
+    /// (step, loss) samples
+    pub history: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+}
+
+pub struct Trainer<'s, 'rt> {
+    pub sess: &'s mut ModelSession<'rt>,
+    pub params: ParamStore,
+    opt: Optimizer,
+    cfg: TrainConfig,
+    rng: Pcg,
+    /// param index → canonical param index under sharing (identity
+    /// when sharing is off)
+    share_idx: Vec<usize>,
+    step: usize,
+}
+
+impl<'s, 'rt> Trainer<'s, 'rt> {
+    pub fn new(sess: &'s mut ModelSession<'rt>, params: ParamStore, cfg: TrainConfig) -> Trainer<'s, 'rt> {
+        let opt = match cfg.optimizer {
+            OptKind::Sgd { momentum, nesterov } => Optimizer::sgd(&params, momentum, nesterov),
+            OptKind::Adam => Optimizer::adam(&params),
+        };
+        let share_idx = Self::build_share_idx(sess, &params, cfg.share_chunk);
+        let rng = Pcg::new(cfg.seed ^ 0x7261_696e);
+        Trainer { sess, params, opt, cfg, rng, share_idx, step: 0 }
+    }
+
+    /// Map each per-layer param to its canonical (shared) sibling.
+    fn build_share_idx(sess: &ModelSession, params: &ParamStore, chunk: usize) -> Vec<usize> {
+        let n_layers = sess.meta.n_layers;
+        let names = params.names();
+        let mut idx: Vec<usize> = (0..names.len()).collect();
+        if chunk <= 1 {
+            return idx;
+        }
+        let map = share_map(n_layers, chunk);
+        for (i, name) in names.iter().enumerate() {
+            for l in 0..n_layers {
+                for prefix in ["layer", "block"] {
+                    let p = format!("{prefix}{l:02}.");
+                    if let Some(suffix) = name.strip_prefix(&p) {
+                        if map[l] != l {
+                            let canon = format!("{prefix}{:02}.{suffix}", map[l]);
+                            if let Some(j) = names.iter().position(|n| n == &canon) {
+                                // only alias when shapes agree (conv
+                                // blocks can change width across layers)
+                                if params.get(&canon).unwrap().shape
+                                    == params.get(name).unwrap().shape
+                                {
+                                    idx[i] = j;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        idx
+    }
+
+    /// Copy canonical params onto their shared siblings (host side).
+    fn sync_shared(&mut self) {
+        let names: Vec<String> = self.params.names().to_vec();
+        for (i, &ci) in self.share_idx.iter().enumerate() {
+            if ci != i {
+                let canon = self.params.get(&names[ci]).unwrap().clone();
+                *self.params.get_mut(&names[i]).unwrap() = canon;
+            }
+        }
+    }
+
+    /// Fold shared-sibling grads into the canonical grad, zero siblings.
+    fn fold_shared_grads(&self, grads: &mut [Tensor]) {
+        for (i, &ci) in self.share_idx.iter().enumerate() {
+            if ci != i {
+                let shape = grads[i].shape.clone();
+                let sib = std::mem::replace(&mut grads[i], Tensor::zeros(&shape));
+                grads[ci].axpy(1.0, &sib);
+            }
+        }
+    }
+
+    fn grad_entry(&self) -> &'static str {
+        if self.cfg.ldste && self.sess.has_entry("grad_mix_ldste") {
+            "grad_mix_ldste"
+        } else {
+            self.cfg.noise.entry()
+        }
+    }
+
+    /// Sample this step's LayerDrop keep mask (chunks drop together
+    /// when sharing is on, matching §7.6's chunk-level LayerDrop).
+    fn sample_keep(&mut self) -> Vec<f32> {
+        let n = self.sess.meta.n_layers;
+        if self.cfg.layerdrop <= 0.0 {
+            return vec![1.0; n];
+        }
+        let chunk = self.cfg.share_chunk.max(1);
+        let map = share_map(n, chunk);
+        let mut chunk_keep = std::collections::HashMap::new();
+        (0..n)
+            .map(|l| {
+                *chunk_keep.entry(map[l]).or_insert_with(|| {
+                    if self.rng.next_f32() < self.cfg.layerdrop {
+                        0.0
+                    } else {
+                        1.0
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Refresh hat tensors for the mix-noise family.
+    pub fn refresh_hats(&mut self) -> Result<()> {
+        if !self.cfg.noise.needs_hat() {
+            return Ok(()); // zero hats uploaded at session creation
+        }
+        let metas = self.sess.meta.params.clone();
+        for (i, pm) in metas.iter().enumerate() {
+            if !pm.noised {
+                continue;
+            }
+            let (rows, cols) = pm.view.unwrap();
+            let bs = pm.block_size.unwrap();
+            let w = &self.params.get(&pm.name).unwrap().data;
+            let hat = match self.cfg.noise {
+                NoiseKind::MeanSub => mean_subvector_hat(w, rows, cols, bs),
+                NoiseKind::ExactPq => {
+                    let km = kmeans(
+                        w,
+                        bs,
+                        &KmeansConfig { k: self.cfg.pq_k, max_iters: 6, ..Default::default() },
+                        &mut self.rng,
+                    );
+                    let cb = Codebook::new(km.centroids, km.k, bs);
+                    build_hat(NoiseKind::ExactPq, w, rows, cols, bs, Some(&cb))
+                }
+                _ => unreachable!(),
+            };
+            self.sess.upload_hat(i, &hat)?;
+        }
+        Ok(())
+    }
+
+    /// One training step; returns the loss.
+    pub fn step_once(&mut self, batch: &TrainBatch) -> Result<f32> {
+        if self.cfg.noise.needs_hat()
+            && self.step % self.cfg.hat_refresh.max(1) == 0
+        {
+            self.refresh_hats()?;
+        }
+        let keep = self.sample_keep();
+        let rate = if self.cfg.noise == NoiseKind::None { 0.0 } else { self.cfg.noise_rate };
+        let seed = (self.rng.next_u32() & 0x7fff_ffff) as i32;
+        let entry = self.grad_entry();
+        let (loss, mut grads) =
+            self.sess
+                .grad(entry, &batch.input(), batch.targets(), &keep, rate, seed)?;
+        self.fold_shared_grads(&mut grads);
+        if self.cfg.clip > 0.0 {
+            clip_grad_norm(&mut grads, self.cfg.clip);
+        }
+        let lr = self.cfg.schedule.lr(self.step);
+        let frozen = vec![false; grads.len()];
+        self.opt.step(&mut self.params, &grads, lr, &frozen);
+        self.sync_shared();
+        self.sess.upload_all_params(&self.params)?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Full training run.
+    pub fn train(&mut self, data: &mut dyn BatchSource) -> Result<TrainStats> {
+        self.sync_shared();
+        self.sess.upload_all_params(&self.params)?;
+        let mut history = Vec::new();
+        let mut last = f32::NAN;
+        for s in 0..self.cfg.steps {
+            let batch = data.next_batch();
+            last = self.step_once(&batch)?;
+            if s % self.cfg.log_every.max(1) == 0 || s + 1 == self.cfg.steps {
+                history.push((s, last));
+                log_info!(
+                    "train[{}] step {s}/{} loss {last:.4} (noise {} rate {})",
+                    self.sess.meta.name,
+                    self.cfg.steps,
+                    self.cfg.noise.name(),
+                    self.cfg.noise_rate
+                );
+            }
+        }
+        Ok(TrainStats { history, final_loss: last, steps: self.cfg.steps })
+    }
+
+    pub fn into_params(self) -> ParamStore {
+        self.params
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+}
+
+// ------------------------------------------------- batch source impls ---
+
+pub struct LmSource {
+    pub batcher: crate::data::batcher::LmBatcher,
+}
+
+impl BatchSource for LmSource {
+    fn next_batch(&mut self) -> TrainBatch {
+        let b = self.batcher.next();
+        TrainBatch::Tokens { tokens: b.tokens, targets: b.targets }
+    }
+}
+
+pub struct ClsSource {
+    pub batcher: crate::data::batcher::EpochBatcher<i32>,
+}
+
+impl BatchSource for ClsSource {
+    fn next_batch(&mut self) -> TrainBatch {
+        let (tokens, labels) = self.batcher.next();
+        TrainBatch::Tokens { tokens, targets: labels }
+    }
+}
+
+pub struct ImgSource {
+    pub batcher: crate::data::batcher::EpochBatcher<f32>,
+}
+
+impl BatchSource for ImgSource {
+    fn next_batch(&mut self) -> TrainBatch {
+        let (images, labels) = self.batcher.next();
+        TrainBatch::Images { images, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_batch_accessors() {
+        let b = TrainBatch::Tokens { tokens: vec![1, 2], targets: vec![2, 3] };
+        assert_eq!(b.targets(), &[2, 3]);
+        match b.input() {
+            BatchInput::Tokens(t) => assert_eq!(t, &[1, 2]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0 && c.noise_rate > 0.0);
+        assert_eq!(c.noise, NoiseKind::Proxy);
+    }
+}

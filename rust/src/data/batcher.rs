@@ -1,0 +1,208 @@
+//! Batchers: LM contiguous-token blocks (the paper trains on blocks of
+//! contiguous tokens ignoring document boundaries, §7.6), plus shuffled
+//! epoch batchers for classification and images.
+
+use crate::util::rng::Pcg;
+
+/// One LM batch: tokens (B·T row-major) and next-token targets.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Splits a token stream into `batch` contiguous lanes (fairseq-style),
+/// then yields windows of `seq_len` per lane. Every token (except the
+/// per-lane final target remainder) appears exactly once per epoch.
+pub struct LmBatcher {
+    lanes: Vec<Vec<i32>>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pos: usize,
+}
+
+impl LmBatcher {
+    pub fn new(tokens: &[i32], batch: usize, seq_len: usize) -> LmBatcher {
+        assert!(batch > 0 && seq_len > 0);
+        let lane_len = tokens.len() / batch;
+        assert!(lane_len > seq_len, "stream too short: {} tokens", tokens.len());
+        let lanes = (0..batch)
+            .map(|b| tokens[b * lane_len..(b + 1) * lane_len].to_vec())
+            .collect();
+        LmBatcher { lanes, batch, seq_len, pos: 0 }
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.lanes[0].len() - 1) / self.seq_len
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Next batch; wraps around at epoch end (callers count epochs via
+    /// `batches_per_epoch`).
+    pub fn next(&mut self) -> LmBatch {
+        if self.pos + self.seq_len + 1 > self.lanes[0].len() {
+            self.pos = 0;
+        }
+        let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
+        let mut targets = Vec::with_capacity(self.batch * self.seq_len);
+        for lane in &self.lanes {
+            tokens.extend_from_slice(&lane[self.pos..self.pos + self.seq_len]);
+            targets.extend_from_slice(&lane[self.pos + 1..self.pos + self.seq_len + 1]);
+        }
+        self.pos += self.seq_len;
+        LmBatch { tokens, targets }
+    }
+}
+
+/// Shuffled epoch batcher over (example, label) pairs where one example
+/// is `example_len` contiguous values. Generic over i32 tokens / f32
+/// pixels via two concrete types below.
+pub struct EpochBatcher<T: Copy> {
+    data: Vec<T>,
+    labels: Vec<i32>,
+    pub example_len: usize,
+    pub batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg,
+}
+
+impl<T: Copy> EpochBatcher<T> {
+    pub fn new(data: Vec<T>, labels: Vec<i32>, example_len: usize, batch: usize, seed: u64) -> Self {
+        assert_eq!(data.len(), labels.len() * example_len);
+        assert!(labels.len() >= batch, "need at least one full batch");
+        let mut rng = Pcg::new(seed);
+        let mut order: Vec<usize> = (0..labels.len()).collect();
+        rng.shuffle(&mut order);
+        EpochBatcher { data, labels, example_len, batch, order, cursor: 0, rng }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.labels.len() / self.batch
+    }
+
+    /// Next batch (examples flat, labels); reshuffles at epoch end.
+    pub fn next(&mut self) -> (Vec<T>, Vec<i32>) {
+        if self.cursor + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+        let mut ex = Vec::with_capacity(self.batch * self.example_len);
+        let mut lb = Vec::with_capacity(self.batch);
+        for &i in &self.order[self.cursor..self.cursor + self.batch] {
+            ex.extend_from_slice(&self.data[i * self.example_len..(i + 1) * self.example_len]);
+            lb.push(self.labels[i]);
+        }
+        self.cursor += self.batch;
+        (ex, lb)
+    }
+
+    /// Deterministic (unshuffled) pass for evaluation: batch `i` of
+    /// `batches_per_epoch`.
+    pub fn eval_batch(&self, i: usize) -> (Vec<T>, Vec<i32>) {
+        let start = i * self.batch;
+        assert!(start + self.batch <= self.labels.len());
+        let mut ex = Vec::with_capacity(self.batch * self.example_len);
+        let mut lb = Vec::with_capacity(self.batch);
+        for j in start..start + self.batch {
+            ex.extend_from_slice(&self.data[j * self.example_len..(j + 1) * self.example_len]);
+            lb.push(self.labels[j]);
+        }
+        (ex, lb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_batch_shapes_and_shift() {
+        let tokens: Vec<i32> = (0..1000).collect();
+        let mut b = LmBatcher::new(&tokens, 4, 16);
+        let batch = b.next();
+        assert_eq!(batch.tokens.len(), 64);
+        assert_eq!(batch.targets.len(), 64);
+        // target is the next token
+        for i in 0..64 {
+            assert_eq!(batch.targets[i], batch.tokens[i] + 1);
+        }
+        // lanes are contiguous stream segments
+        assert_eq!(batch.tokens[0], 0);
+        assert_eq!(batch.tokens[16], 250);
+    }
+
+    #[test]
+    fn lm_epoch_covers_stream_once() {
+        let tokens: Vec<i32> = (0..1000).collect();
+        let mut b = LmBatcher::new(&tokens, 2, 10);
+        let mut seen = Vec::new();
+        for _ in 0..b.batches_per_epoch() {
+            seen.extend(b.next().tokens);
+        }
+        seen.sort();
+        seen.dedup();
+        // each lane of 500 contributes floor(499/10)*10 = 490 tokens
+        assert_eq!(seen.len(), 980);
+    }
+
+    #[test]
+    fn lm_wraps_around() {
+        let tokens: Vec<i32> = (0..100).collect();
+        let mut b = LmBatcher::new(&tokens, 1, 10);
+        let per = b.batches_per_epoch();
+        let first = b.next();
+        for _ in 0..per - 1 {
+            b.next();
+        }
+        let wrapped = b.next();
+        assert_eq!(first.tokens, wrapped.tokens);
+    }
+
+    #[test]
+    fn epoch_batcher_covers_all_and_reshuffles() {
+        let n = 50;
+        let data: Vec<i32> = (0..n * 4).collect();
+        let labels: Vec<i32> = (0..n as i32).collect();
+        let mut b = EpochBatcher::new(data, labels, 4, 10, 1);
+        let mut seen = Vec::new();
+        let mut epoch1_first = None;
+        for i in 0..b.batches_per_epoch() {
+            let (_, lb) = b.next();
+            if i == 0 {
+                epoch1_first = Some(lb.clone());
+            }
+            seen.extend(lb);
+        }
+        seen.sort();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+        let (_, lb2) = b.next(); // epoch 2 reshuffled
+        assert_ne!(Some(lb2), epoch1_first);
+    }
+
+    #[test]
+    fn eval_batch_deterministic() {
+        let data: Vec<f32> = (0..80).map(|x| x as f32).collect();
+        let labels: Vec<i32> = (0..20).collect();
+        let b = EpochBatcher::new(data, labels, 4, 5, 2);
+        let (e0, l0) = b.eval_batch(0);
+        assert_eq!(l0, vec![0, 1, 2, 3, 4]);
+        assert_eq!(e0[0..4], [0.0, 1.0, 2.0, 3.0]);
+        let (_, l3) = b.eval_batch(3);
+        assert_eq!(l3, vec![15, 16, 17, 18, 19]);
+    }
+
+    #[test]
+    #[should_panic(expected = "too short")]
+    fn lm_rejects_short_stream() {
+        LmBatcher::new(&[1, 2, 3], 2, 10);
+    }
+}

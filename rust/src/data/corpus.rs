@@ -1,0 +1,288 @@
+//! Synthetic datasets (DESIGN.md §Substitutions).
+//!
+//! * [`MarkovCorpus`] — WikiText-103 stand-in: Zipf-distributed unigrams
+//!   with first-order Markov structure (each token has a few
+//!   high-probability successors) and document boundaries. A model that
+//!   learns the bigram structure pushes PPL far below the unigram
+//!   entropy, so LM training dynamics are non-trivial.
+//! * [`make_cls_dataset`] — MNLI stand-in: sequence classification where
+//!   the label is determined by which "marker" token pair dominates.
+//! * [`make_img_dataset`] — ImageNet stand-in: 10 procedural pattern
+//!   classes (oriented stripes, checkers, gradients, spots) with noise.
+
+use crate::util::rng::Pcg;
+
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// Zipf weights: p(t) ∝ 1/(t+1)^alpha.
+fn zipf_weights(vocab: usize, alpha: f64) -> Vec<f64> {
+    let w: Vec<f64> = (0..vocab).map(|t| 1.0 / ((t + 1) as f64).powf(alpha)).collect();
+    let s: f64 = w.iter().sum();
+    w.into_iter().map(|x| x / s).collect()
+}
+
+fn sample_from(weights: &[f64], rng: &mut Pcg) -> usize {
+    let mut t = rng.next_f64();
+    for (i, &w) in weights.iter().enumerate() {
+        t -= w;
+        if t <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+impl MarkovCorpus {
+    /// Generate `n_tokens` tokens. Token 0 is reserved as the document
+    /// boundary; docs average `doc_len` tokens. With prob `markov_p` the
+    /// next token comes from the current token's 4-successor table,
+    /// otherwise from the Zipf unigram.
+    pub fn generate(vocab: usize, n_tokens: usize, seed: u64) -> MarkovCorpus {
+        assert!(vocab >= 8);
+        let mut rng = Pcg::new(seed);
+        let unigram = zipf_weights(vocab - 1, 1.2); // excludes boundary 0
+        let markov_p = 0.7;
+        let doc_len = 256usize;
+
+        // fixed successor table: 4 preferred successors per token, drawn
+        // from the Zipf unigram so bigram structure preserves the
+        // head-heavy marginal (like real text)
+        let successors: Vec<[usize; 4]> = (0..vocab)
+            .map(|_| {
+                [
+                    1 + sample_from(&unigram, &mut rng),
+                    1 + sample_from(&unigram, &mut rng),
+                    1 + sample_from(&unigram, &mut rng),
+                    1 + sample_from(&unigram, &mut rng),
+                ]
+            })
+            .collect();
+
+        let mut tokens = Vec::with_capacity(n_tokens);
+        let mut prev = 1usize;
+        for _ in 0..n_tokens {
+            let t = if rng.next_f64() < 1.0 / doc_len as f64 {
+                0 // document boundary
+            } else if rng.next_f64() < markov_p {
+                successors[prev][rng.below(4) as usize]
+            } else {
+                1 + sample_from(&unigram, &mut rng)
+            };
+            tokens.push(t as i32);
+            prev = t.max(1);
+        }
+        MarkovCorpus { vocab, tokens }
+    }
+
+    /// Empirical unigram entropy in nats (upper bound for a structure-
+    /// blind model; the Markov structure makes lower PPL achievable).
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = self.tokens.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+/// Sequence-classification dataset: `n_classes` marker pairs; the label
+/// is the class whose markers appear most often in the sequence.
+/// Returns (tokens flat B·T, labels B).
+pub fn make_cls_dataset(
+    n: usize,
+    seq_len: usize,
+    vocab: usize,
+    n_classes: usize,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
+    assert!(vocab > 2 * n_classes + 2);
+    let mut rng = Pcg::new(seed);
+    let mut tokens = Vec::with_capacity(n * seq_len);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(n_classes as u32) as usize;
+        let mut seq: Vec<i32> = (0..seq_len)
+            .map(|_| (2 * n_classes + 1 + rng.below((vocab - 2 * n_classes - 1) as u32) as usize) as i32)
+            .collect();
+        // plant label markers at random positions (~20% of positions)
+        let n_markers = (seq_len / 5).max(2);
+        for _ in 0..n_markers {
+            let pos = rng.below(seq_len as u32) as usize;
+            let which = rng.below(2) as usize;
+            seq[pos] = (1 + 2 * label + which) as i32;
+        }
+        tokens.extend_from_slice(&seq);
+        labels.push(label as i32);
+    }
+    (tokens, labels)
+}
+
+/// Procedural image classification: 10 pattern classes over H×W×C
+/// images in [0,1] + gaussian noise. Returns (pixels flat, labels).
+pub fn make_img_dataset(
+    n: usize,
+    size: usize,
+    channels: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Pcg::new(seed);
+    let mut pixels = Vec::with_capacity(n * size * size * channels);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(10) as usize;
+        let phase = rng.next_f32() * size as f32;
+        let freq = 2.0 + (label % 5) as f32;
+        for y in 0..size {
+            for x in 0..size {
+                let (fy, fx) = (y as f32, x as f32);
+                let base = match label {
+                    0 => ((fx + phase) * freq * 0.4).sin(),          // vertical stripes
+                    1 => ((fy + phase) * freq * 0.4).sin(),          // horizontal stripes
+                    2 => ((fx + fy + phase) * freq * 0.3).sin(),     // diagonal
+                    3 => ((fx - fy + phase) * freq * 0.3).sin(),     // anti-diagonal
+                    4 => (((fx + phase) * 0.8).sin() * ((fy + phase) * 0.8).sin()).signum(), // checker
+                    5 => fx / size as f32 * 2.0 - 1.0,               // x gradient
+                    6 => fy / size as f32 * 2.0 - 1.0,               // y gradient
+                    7 => {
+                        let cx = fx - size as f32 / 2.0;
+                        let cy = fy - size as f32 / 2.0;
+                        ((cx * cx + cy * cy).sqrt() * 0.8 + phase).sin() // rings
+                    }
+                    8 => {
+                        // spots
+                        let sx = ((fx + phase) * 0.9).sin();
+                        let sy = ((fy + phase * 0.7) * 0.9).sin();
+                        (sx * sy * 2.0).tanh()
+                    }
+                    _ => ((fx * fy * 0.05 + phase) * 0.5).sin(),     // moiré
+                };
+                for c in 0..channels {
+                    let chan_gain = 1.0 - 0.2 * c as f32;
+                    pixels.push(
+                        (0.5 + 0.4 * base * chan_gain + 0.05 * rng.next_normal())
+                            .clamp(0.0, 1.0),
+                    );
+                }
+            }
+        }
+        labels.push(label as i32);
+    }
+    (pixels, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_in_vocab_and_deterministic() {
+        let c1 = MarkovCorpus::generate(64, 5_000, 7);
+        let c2 = MarkovCorpus::generate(64, 5_000, 7);
+        assert_eq!(c1.tokens, c2.tokens);
+        assert!(c1.tokens.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_markov_structure() {
+        // bigram entropy must be clearly below unigram entropy
+        let c = MarkovCorpus::generate(128, 200_000, 1);
+        let uni = c.unigram_entropy();
+        // empirical conditional entropy H(next | prev)
+        let mut pair = std::collections::HashMap::new();
+        let mut prev_counts = vec![0usize; 128];
+        for w in c.tokens.windows(2) {
+            *pair.entry((w[0], w[1])).or_insert(0usize) += 1;
+            prev_counts[w[0] as usize] += 1;
+        }
+        let n = (c.tokens.len() - 1) as f64;
+        let cond: f64 = pair
+            .iter()
+            .map(|(&(p, _), &c_pn)| {
+                let joint = c_pn as f64 / n;
+                let cond_p = c_pn as f64 / prev_counts[p as usize] as f64;
+                -joint * cond_p.ln()
+            })
+            .sum();
+        assert!(cond < uni * 0.8, "cond {cond} vs uni {uni}");
+    }
+
+    #[test]
+    fn corpus_zipf_head_heavy() {
+        let c = MarkovCorpus::generate(256, 100_000, 2);
+        let mut counts = vec![0usize; 256];
+        for &t in &c.tokens {
+            counts[t as usize] += 1;
+        }
+        let head: usize = counts[1..17].iter().sum();
+        let tail: usize = counts[128..].iter().sum();
+        assert!(head > tail * 3, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn cls_dataset_learnable_and_balanced() {
+        let (tokens, labels) = make_cls_dataset(512, 32, 256, 4, 3);
+        assert_eq!(tokens.len(), 512 * 32);
+        assert!(labels.iter().all(|&l| (0..4).contains(&l)));
+        // markers for the true label appear in the sequence
+        for i in 0..64 {
+            let l = labels[i] as usize;
+            let seq = &tokens[i * 32..(i + 1) * 32];
+            let m1 = (1 + 2 * l) as i32;
+            let m2 = (2 + 2 * l) as i32;
+            assert!(
+                seq.iter().any(|&t| t == m1 || t == m2),
+                "example {i} lacks its own markers"
+            );
+        }
+        // roughly balanced classes
+        let mut per = [0usize; 4];
+        for &l in &labels {
+            per[l as usize] += 1;
+        }
+        assert!(per.iter().all(|&c| c > 64), "{per:?}");
+    }
+
+    #[test]
+    fn img_dataset_shapes_and_range() {
+        let (px, labels) = make_img_dataset(20, 16, 3, 4);
+        assert_eq!(px.len(), 20 * 16 * 16 * 3);
+        assert_eq!(labels.len(), 20);
+        assert!(px.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn img_classes_visually_distinct() {
+        // mean intra-class pixel distance < mean inter-class distance
+        let (px, labels) = make_img_dataset(100, 16, 1, 5);
+        let img = |i: usize| &px[i * 256..(i + 1) * 256];
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum()
+        };
+        let (mut intra, mut inter, mut ni, mut ne) = (0.0, 0.0, 0, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d = dist(img(i), img(j));
+                if labels[i] == labels[j] {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    ne += 1;
+                }
+            }
+        }
+        assert!(intra / (ni as f64) < inter / (ne as f64));
+    }
+}

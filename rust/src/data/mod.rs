@@ -1,0 +1,4 @@
+//! Data substrate: synthetic corpora/datasets (WikiText/MNLI/ImageNet
+//! stand-ins per DESIGN.md §Substitutions) and batchers.
+pub mod batcher;
+pub mod corpus;

@@ -1,0 +1,19 @@
+//! Quant-Noise: training with quantization noise for extreme model
+//! compression (Fan*, Stock* et al., ICLR 2021) — Rust coordinator.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`util`] — offline substrates (JSON/CLI/RNG/bench/proptest).
+//! - [`quant`] — quantization: scalar intN, observers, k-means PQ, size
+//!   accounting, pruning/sharing.
+//! - [`model`] — host-side tensors, configs, parameter store.
+//! - [`data`] — synthetic corpora and batchers.
+//! - [`runtime`] — PJRT client; loads AOT HLO-text artifacts.
+//! - [`coordinator`] — training/quantization pipelines (the paper).
+//! - [`bench_harness`] — regenerates every paper table and figure.
+pub mod util;
+pub mod quant;
+pub mod model;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;

@@ -1,0 +1,358 @@
+//! `qn` — Quant-Noise coordinator CLI.
+//!
+//! Subcommands:
+//!   info                       manifest / artifact summary
+//!   train                      one Quant-Noise training run
+//!   quantize                   post-training quantization of saved params
+//!   eval                       evaluate saved params (fp32 or quantized)
+//!   e2e                        end-to-end driver (train → iPQ → report)
+//!   bench --exp <id>           regenerate a paper table/figure
+//!
+//! Python never runs here: all compute flows through the AOT artifacts
+//! in artifacts/ (build them with `make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use quant_noise::bench_harness::common::{Row, Workbench};
+use quant_noise::bench_harness::specs::{base_train, default_rate, default_steps, with_noise};
+use quant_noise::bench_harness::{figures, report, tables};
+use quant_noise::coordinator::ipq::{run_ipq, IpqConfig};
+use quant_noise::coordinator::quantize::{quantize_params, IntMode, WeightScheme};
+use quant_noise::model::params::ParamStore;
+use quant_noise::quant::noise::NoiseKind;
+use quant_noise::util::cli::Command;
+use quant_noise::util::logging;
+use quant_noise::util::rng::Pcg;
+use quant_noise::{log_error, log_info};
+
+fn artifacts_dir(args: &quant_noise::util::cli::Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let code = match run(sub, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            log_error!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(sub: &str, rest: &[String]) -> Result<()> {
+    match sub {
+        "info" => info(rest),
+        "train" => train(rest),
+        "quantize" => quantize(rest),
+        "eval" => eval(rest),
+        "e2e" => e2e(rest),
+        "bench" => bench(rest),
+        _ => {
+            println!(
+                "qn — Quant-Noise (ICLR 2021) coordinator\n\n\
+                 subcommands: info, train, quantize, eval, e2e, bench\n\
+                 run `qn <sub> --help` for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn parse(cmd: Command, rest: &[String]) -> Result<quant_noise::util::cli::Args> {
+    cmd.parse(rest).map_err(|msg| anyhow::anyhow!("{msg}"))
+}
+
+// ------------------------------------------------------------- info ---
+
+fn info(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact / manifest summary")
+        .opt_default("artifacts", "artifacts", "artifact directory");
+    let args = parse(cmd, rest)?;
+    let man = quant_noise::runtime::manifest::Manifest::load(&artifacts_dir(&args))?;
+    for (name, m) in &man.models {
+        let n_params: usize = m.params.iter().map(|p| p.numel()).sum();
+        println!(
+            "{name}: task={} layers={} batch={} seq={} vocab={} classes={} params={} ({:.2} MB fp32)",
+            m.task, m.n_layers, m.batch, m.seq_len, m.vocab, m.n_classes,
+            n_params, n_params as f64 * 4.0 / 1e6
+        );
+        for e in &m.entries {
+            println!("  entry {:<18} {} inputs, {} outputs [{}]", e.name, e.inputs.len(), e.outputs.len(), e.file);
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ train ---
+
+fn train(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train a model with Quant-Noise")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("model", "lm_tiny", "model name from the manifest")
+        .opt_default("noise", "proxy", "none|proxy|exact_pq|mean_sub|int8|int4|int8_channel|int4_channel")
+        .opt("rate", "noise rate p (default: per-kind paper value)")
+        .opt("steps", "training steps (default: per-task)")
+        .opt_default("layerdrop", "0", "LayerDrop probability")
+        .opt_default("share", "0", "weight-sharing chunk (0=off)")
+        .opt("save", "path to save trained params (QNP1)")
+        .flag("ldste", "STE through LayerDrop (Table 11 ablation)");
+    let args = parse(cmd, rest)?;
+
+    let wb = Workbench::new(&artifacts_dir(&args))?;
+    let model = args.get_or("model", "lm_tiny").to_string();
+    let mut lab = wb.lab(&model)?;
+    let task = lab.sess.meta.task.clone();
+    let noise = NoiseKind::parse(args.get_or("noise", "proxy"))
+        .ok_or_else(|| anyhow::anyhow!("bad --noise"))?;
+    let steps = args.num_or("steps", default_steps(&task));
+    let mut cfg = with_noise(
+        base_train(&task, steps),
+        noise,
+        args.num_or("rate", default_rate(noise)),
+    );
+    cfg.layerdrop = args.num_or("layerdrop", 0.0);
+    cfg.share_chunk = args.num_or("share", 0usize);
+    cfg.ldste = args.flag("ldste");
+
+    let params = lab.train_cached(&cfg)?;
+    let keep = lab.keep_all();
+    let ev = lab.eval_params(&params, "eval", &keep)?;
+    log_info!(
+        "final eval: nll {:.4} ppl {:.2} acc {:.2}%",
+        ev.nll, ev.ppl, ev.accuracy * 100.0
+    );
+    if let Some(path) = args.get("save") {
+        params.save_qnp1(Path::new(path))?;
+        log_info!("saved params to {path}");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------- quantize ---
+
+fn quantize(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("quantize", "quantize saved params and report size/quality")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("model", "lm_tiny", "model name")
+        .req("params", "QNP1 file of trained params")
+        .opt_default("scheme", "ipq", "ipq|pq|int8|int4")
+        .opt_default("mode", "histogram", "intN observer: histogram|minmax|channel")
+        .opt_default("k", "64", "PQ centroids")
+        .flag("int8-centroids", "compress PQ centroids to int8 (§3.3)")
+        .opt("save", "path to save quantized (dequantized) params");
+    let args = parse(cmd, rest)?;
+
+    let wb = Workbench::new(&artifacts_dir(&args))?;
+    let model = args.get_or("model", "lm_tiny").to_string();
+    let mut lab = wb.lab(&model)?;
+    let params = ParamStore::load_qnp1(Path::new(args.get("params").unwrap()))?;
+    params.check_against(&lab.sess.meta)?;
+
+    let k: usize = args.num_or("k", 64);
+    let scheme = args.get_or("scheme", "ipq").to_string();
+    let (store, bytes) = match scheme.as_str() {
+        "int8" | "int4" => {
+            let bits = if scheme == "int8" { 8 } else { 4 };
+            let mode = match args.get_or("mode", "histogram") {
+                "minmax" => IntMode::MinMax,
+                "channel" => IntMode::PerChannel,
+                _ => IntMode::Histogram,
+            };
+            let q = quantize_params(&params, &lab.sess.meta, &WeightScheme::Int { bits, mode }, &mut Pcg::new(5))?;
+            (q.store, q.bytes)
+        }
+        "pq" => {
+            let mut s = WeightScheme::pq(k);
+            if let WeightScheme::Pq { int8_centroids, .. } = &mut s {
+                *int8_centroids = args.flag("int8-centroids");
+            }
+            let q = quantize_params(&params, &lab.sess.meta, &s, &mut Pcg::new(5))?;
+            (q.store, q.bytes)
+        }
+        _ => {
+            let mut cfg = IpqConfig { k, ..Default::default() };
+            cfg.int8_centroids = args.flag("int8-centroids");
+            cfg.finetune_steps = 25;
+            lab.sess.upload_all_params(&params)?;
+            let (q, _) = run_ipq(&mut lab.sess, &params, lab.train_src.as_mut(), &cfg)?;
+            (q.store, q.bytes)
+        }
+    };
+
+    let keep = lab.keep_all();
+    let entry = if args.flag("int8-centroids") && lab.sess.has_entry("eval_int8act") {
+        "eval_int8act"
+    } else {
+        "eval"
+    };
+    let fp = quant_noise::coordinator::quantize::scheme_bytes(&lab.sess.meta, &WeightScheme::None);
+    let ev = lab.eval_params(&store, entry, &keep)?;
+    println!(
+        "scheme={scheme} size={:.3}MB compression=×{:.1} nll={:.4} ppl={:.2} acc={:.2}%",
+        bytes as f64 / 1e6,
+        fp as f64 / bytes as f64,
+        ev.nll, ev.ppl, ev.accuracy * 100.0
+    );
+    if let Some(path) = args.get("save") {
+        store.save_qnp1(Path::new(path))?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- eval ---
+
+fn eval(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("eval", "evaluate saved params")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("model", "lm_tiny", "model name")
+        .req("params", "QNP1 file")
+        .opt_default("entry", "eval", "eval|eval_int8act")
+        .flag("prune", "evaluate with every-other-chunk pruning");
+    let args = parse(cmd, rest)?;
+    let wb = Workbench::new(&artifacts_dir(&args))?;
+    let mut lab = wb.lab(args.get_or("model", "lm_tiny"))?;
+    let params = ParamStore::load_qnp1(Path::new(args.get("params").unwrap()))?;
+    let keep = if args.flag("prune") {
+        quant_noise::quant::prune::every_other_chunk_mask(lab.sess.meta.n_layers, 2)
+    } else {
+        lab.keep_all()
+    };
+    let ev = lab.eval_params(&params, args.get_or("entry", "eval"), &keep)?;
+    println!("nll={:.4} ppl={:.2} acc={:.2}% (n={})", ev.nll, ev.ppl, ev.accuracy * 100.0, ev.n);
+    Ok(())
+}
+
+// -------------------------------------------------------------- e2e ---
+
+fn e2e(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("e2e", "end-to-end driver: train with QN, iPQ-quantize, report")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("model", "lm_tiny", "model name")
+        .opt("steps", "training steps")
+        .opt_default("scale", "1.0", "step scale (quick runs: 0.1)");
+    let args = parse(cmd, rest)?;
+    let mut wb = Workbench::new(&artifacts_dir(&args))?;
+    wb.step_scale = args.num_or("scale", 1.0);
+    quant_noise::bench_harness::e2e::run(&wb, args.get_or("model", "lm_tiny"), args.parse_num("steps"))
+}
+
+// ------------------------------------------------------------ bench ---
+
+fn bench(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("bench", "regenerate a paper table/figure")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .req("exp", "table1|table2|table3|table4|table5|table10|table11|fig2|fig3|fig4|fig5|fig6|all")
+        .opt("model", "model override (defaults per experiment)")
+        .opt_default("scale", "1.0", "step scale (quick runs: 0.1)")
+        .opt_default("out", "results/results.md", "markdown results sink");
+    let args = parse(cmd, rest)?;
+    let mut wb = Workbench::new(&artifacts_dir(&args))?;
+    wb.step_scale = args.num_or("scale", 1.0);
+    let out = PathBuf::from(args.get_or("out", "results/results.md"));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+
+    let exp = args.get("exp").unwrap().to_string();
+    let chosen_model = args.get("model").map(String::from);
+    let run_one = |id: &str| -> Result<()> {
+        let rows: Vec<(String, Vec<Row>)> = match id {
+            "table1" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "img_tiny"]) {
+                    out.push((format!("Table 1 — {m}"), tables::table1(&wb, &m)?));
+                }
+                out
+            }
+            "table2" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "cls_tiny", "img_tiny"]) {
+                    out.push((format!("Table 2 — {m}"), tables::table2(&wb, &m)?));
+                }
+                out
+            }
+            "table3" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "cls_tiny"]) {
+                    out.push((format!("Table 3 — {m}"), tables::table3(&wb, &m)?));
+                }
+                out
+            }
+            "table4" => {
+                let m = chosen_model.clone().unwrap_or_else(|| "img_tiny".into());
+                vec![(format!("Table 4 — {m}"), tables::table4(&wb, &m)?)]
+            }
+            "table5" => {
+                let m = chosen_model.clone().unwrap_or_else(|| "lm_tiny".into());
+                vec![(format!("Table 5 — {m}"), tables::table5(&wb, &m)?)]
+            }
+            "table10" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "img_tiny"]) {
+                    out.push((format!("Table 10 — {m}"), tables::table10(&wb, &m)?));
+                }
+                out
+            }
+            "table11" => {
+                let m = chosen_model.clone().unwrap_or_else(|| "lm_tiny".into());
+                vec![(format!("Table 11 — {m}"), tables::table11(&wb, &m)?)]
+            }
+            "fig2" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "cls_tiny", "img_tiny"]) {
+                    out.push((format!("Fig 2 — {m}"), figures::fig2(&wb, &m)?));
+                }
+                out
+            }
+            "fig3" => {
+                let mut out = Vec::new();
+                for m in models_for(&chosen_model, &["lm_tiny", "img_tiny"]) {
+                    out.push((format!("Fig 3 / Table 9 — {m}"), figures::fig3(&wb, &m)?));
+                }
+                out
+            }
+            "fig4" => {
+                let m = chosen_model.clone().unwrap_or_else(|| "lm_tiny".into());
+                vec![(format!("Fig 4 — {m}"), figures::fig4(&wb, &m)?)]
+            }
+            "fig5" => vec![("Fig 5".to_string(), figures::fig5(&wb)?)],
+            "fig6" => {
+                let m = chosen_model.clone().unwrap_or_else(|| "lm_tiny".into());
+                vec![(format!("Fig 6 — {m}"), figures::fig6(&wb, &m)?)]
+            }
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        for (title, r) in rows {
+            report::append_markdown(&out, &title, &r)?;
+        }
+        Ok(())
+    };
+
+    if exp == "all" {
+        for id in [
+            "table1", "table2", "table3", "table4", "table5", "table10", "table11",
+            "fig2", "fig3", "fig4", "fig5", "fig6",
+        ] {
+            log_info!("=== running {id} ===");
+            run_one(id)?;
+        }
+    } else {
+        run_one(&exp)?;
+    }
+    println!("\nresults appended to {}", out.display());
+    Ok(())
+}
+
+fn models_for(chosen: &Option<String>, default: &[&str]) -> Vec<String> {
+    match chosen {
+        Some(m) => vec![m.clone()],
+        None => default.iter().map(|s| s.to_string()).collect(),
+    }
+}

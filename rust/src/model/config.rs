@@ -1,0 +1,238 @@
+//! Model metadata shared between the AOT manifest and the coordinator.
+//! These structs mirror what `python/compile/aot.py` writes into
+//! `artifacts/manifest.json`; the runtime parses JSON into them.
+
+use crate::quant::size::ParamInfo;
+use crate::util::json::Json;
+
+/// One parameter's manifest record.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// structure group: emb / attn / ffn / cls / norm / conv1x1 / dw3x3 / stem
+    pub structure: String,
+    /// participates in Quant-Noise / quantization
+    pub noised: bool,
+    /// canonical 2-D view (rows, cols) — present iff noised
+    pub view: Option<(usize, usize)>,
+    /// noise/PQ block size — present iff noised
+    pub block_size: Option<usize>,
+}
+
+impl ParamMeta {
+    pub fn from_json(j: &Json) -> Option<ParamMeta> {
+        let shape = j
+            .get("shape")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let view = if j.get("view").is_null() {
+            None
+        } else {
+            let a = j.get("view").as_arr()?;
+            Some((a[0].as_usize()?, a[1].as_usize()?))
+        };
+        Some(ParamMeta {
+            name: j.get("name").as_str()?.to_string(),
+            shape,
+            structure: j.get("structure").as_str().unwrap_or("?").to_string(),
+            noised: j.get("noised").as_bool().unwrap_or(false),
+            view,
+            block_size: j.get("block_size").as_usize(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Convert to the size-accounting record (optionally overriding the
+    /// PQ block size, e.g. for Fig. 6's per-structure block sweeps).
+    pub fn to_param_info(&self, pq_block_override: Option<usize>) -> ParamInfo {
+        let (rows, cols) = self.view.unwrap_or((1, self.numel()));
+        ParamInfo {
+            name: self.name.clone(),
+            numel: self.numel(),
+            rows,
+            cols,
+            quantized: self.noised,
+            pq_block: pq_block_override.or(self.block_size).unwrap_or(8),
+        }
+    }
+}
+
+/// One entry point (grad/eval) record.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// One exported model.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub task: String, // lm | cls | img
+    pub n_layers: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens_shape: Vec<usize>,
+    pub targets_shape: Vec<usize>,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub params: Vec<ParamMeta>,
+    pub entries: Vec<EntryMeta>,
+    pub init_file: String,
+}
+
+impl ModelMeta {
+    pub fn from_json(name: &str, j: &Json) -> Option<ModelMeta> {
+        let params = j
+            .get("params")
+            .as_arr()?
+            .iter()
+            .filter_map(ParamMeta::from_json)
+            .collect::<Vec<_>>();
+        let mut entries = Vec::new();
+        if let Some(obj) = j.get("entries").as_obj() {
+            for (ename, e) in obj {
+                entries.push(EntryMeta {
+                    name: ename.clone(),
+                    file: e.get("file").as_str()?.to_string(),
+                    inputs: e
+                        .get("inputs")
+                        .as_arr()?
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    outputs: e
+                        .get("outputs")
+                        .as_arr()?
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                });
+            }
+        }
+        let usv = |key: &str| -> Vec<usize> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        Some(ModelMeta {
+            name: name.to_string(),
+            task: j.get("task").as_str()?.to_string(),
+            n_layers: j.get("n_layers").as_usize()?,
+            batch: j.get("batch").as_usize()?,
+            seq_len: j.get("seq_len").as_usize().unwrap_or(0),
+            tokens_shape: usv("tokens_shape"),
+            targets_shape: usv("targets_shape"),
+            vocab: j.get("vocab").as_usize().unwrap_or(0),
+            n_classes: j.get("n_classes").as_usize().unwrap_or(0),
+            params,
+            entries,
+            init_file: j.get("init").as_str().unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamMeta> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Parameters of one structure group, in manifest order.
+    pub fn params_of(&self, structure: &str) -> Vec<&ParamMeta> {
+        self.params.iter().filter(|p| p.structure == structure).collect()
+    }
+
+    /// Size-accounting inventory (manifest order).
+    pub fn param_infos(&self) -> Vec<ParamInfo> {
+        self.params.iter().map(|p| p.to_param_info(None)).collect()
+    }
+
+    /// Param names belonging to layer `l` (Transformer "layerNN." /
+    /// ConvNet "blockNN." prefixes).
+    pub fn layer_params(&self, l: usize) -> Vec<&ParamMeta> {
+        let p1 = format!("layer{l:02}.");
+        let p2 = format!("block{l:02}.");
+        self.params
+            .iter()
+            .filter(|p| p.name.starts_with(&p1) || p.name.starts_with(&p2))
+            .collect()
+    }
+
+    /// Tokens per eval batch (LM) or examples per batch (cls/img) —
+    /// the denominator for PPL / accuracy.
+    pub fn eval_denominator(&self) -> usize {
+        if self.task == "lm" {
+            self.batch * self.seq_len
+        } else {
+            self.batch
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+            "task": "lm", "n_layers": 2, "batch": 4, "seq_len": 8,
+            "tokens_shape": [4, 8], "targets_shape": [4, 8],
+            "vocab": 100, "n_classes": 0, "init": "m.init.bin",
+            "params": [
+              {"name": "embed", "shape": [100, 16], "structure": "emb",
+               "noised": true, "view": [100, 16], "block_size": 8},
+              {"name": "layer00.wq", "shape": [16, 16], "structure": "attn",
+               "noised": true, "view": [16, 16], "block_size": 8},
+              {"name": "lnf_g", "shape": [16], "structure": "norm",
+               "noised": false, "view": null, "block_size": null}
+            ],
+            "entries": {
+              "eval": {"file": "m.eval.hlo.txt",
+                       "inputs": ["param:embed", "param:layer00.wq", "param:lnf_g",
+                                  "tokens", "targets", "layer_keep"],
+                       "outputs": ["sum_nll", "sum_correct"]}
+            }}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_meta() {
+        let m = ModelMeta::from_json("m", &sample_json()).unwrap();
+        assert_eq!(m.task, "lm");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.param("embed").unwrap().view, Some((100, 16)));
+        assert!(!m.param("lnf_g").unwrap().noised);
+        assert_eq!(m.entry("eval").unwrap().inputs.len(), 6);
+        assert_eq!(m.eval_denominator(), 32);
+    }
+
+    #[test]
+    fn layer_params_by_prefix() {
+        let m = ModelMeta::from_json("m", &sample_json()).unwrap();
+        let l0 = m.layer_params(0);
+        assert_eq!(l0.len(), 1);
+        assert_eq!(l0[0].name, "layer00.wq");
+        assert!(m.layer_params(1).is_empty());
+    }
+
+    #[test]
+    fn param_infos_reflect_quantized_flag() {
+        let m = ModelMeta::from_json("m", &sample_json()).unwrap();
+        let infos = m.param_infos();
+        assert!(infos[0].quantized && !infos[2].quantized);
+        assert_eq!(infos[0].pq_block, 8);
+    }
+}

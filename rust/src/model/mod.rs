@@ -1,0 +1,5 @@
+//! Host-side model state: tensors, manifest-mirroring metadata, and the
+//! named parameter store (QNP1 I/O shared with the AOT exporter).
+pub mod config;
+pub mod params;
+pub mod tensor;

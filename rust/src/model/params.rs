@@ -1,0 +1,223 @@
+//! Named parameter store: the coordinator's single source of truth for
+//! model weights, saved/loaded in the QNP1 format that
+//! `python/compile/aot.py` writes for the initial parameters.
+//!
+//! QNP1: magic `QNP1`, u32 LE header length, JSON header
+//! `{"params": [{"name", "shape"}...]}`, then concatenated f32 LE data
+//! in header order.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelMeta;
+use crate::model::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    /// insertion order = manifest order = artifact input order
+    order: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        ParamStore { order: Vec::new(), map: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.map.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.order.iter().map(move |n| (n, &self.map[n]))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Zero-filled clone (gradient/momentum accumulators).
+    pub fn zeros_like(&self) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (n, t) in self.iter() {
+            out.insert(n, Tensor::zeros(&t.shape));
+        }
+        out
+    }
+
+    /// Verify names/shapes against the manifest (artifact compatibility).
+    pub fn check_against(&self, meta: &ModelMeta) -> Result<()> {
+        if self.len() != meta.params.len() {
+            bail!("param count {} != manifest {}", self.len(), meta.params.len());
+        }
+        for (i, pm) in meta.params.iter().enumerate() {
+            if self.order[i] != pm.name {
+                bail!("param order mismatch at {i}: {} vs {}", self.order[i], pm.name);
+            }
+            let t = &self.map[&pm.name];
+            if t.shape != pm.shape {
+                bail!("shape mismatch for {}: {:?} vs {:?}", pm.name, t.shape, pm.shape);
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ QNP1 I/O ---
+
+    pub fn load_qnp1(path: &Path) -> Result<ParamStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"QNP1" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let mut len_buf = [0u8; 4];
+        f.read_exact(&mut len_buf)?;
+        let hlen = u32::from_le_bytes(len_buf) as usize;
+        let mut header = vec![0u8; hlen];
+        f.read_exact(&mut header)?;
+        let j = Json::parse(std::str::from_utf8(&header)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut store = ParamStore::new();
+        for p in j.get("params").as_arr().context("missing params")? {
+            let name = p.get("name").as_str().context("missing name")?;
+            let shape: Vec<usize> = p
+                .get("shape")
+                .as_arr()
+                .context("missing shape")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let numel: usize = shape.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; numel * 4];
+            f.read_exact(&mut raw)
+                .with_context(|| format!("reading {name} ({numel} f32)"))?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            store.insert(name, Tensor::from_vec(&shape, data));
+        }
+        Ok(store)
+    }
+
+    pub fn save_qnp1(&self, path: &Path) -> Result<()> {
+        let params: Vec<Json> = self
+            .iter()
+            .map(|(n, t)| {
+                Json::obj(vec![
+                    ("name", Json::str(n.clone())),
+                    (
+                        "shape",
+                        Json::Arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let header = Json::obj(vec![("params", Json::Arr(params))]).to_string();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(b"QNP1")?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in self.iter() {
+            let mut raw = Vec::with_capacity(t.data.len() * 4);
+            for &x in &t.data {
+                raw.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&raw)?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for ParamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::temp_dir;
+
+    fn sample() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("a", Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        s.insert("b", Tensor::from_vec(&[4], vec![-1.0, 0.5, 0.0, 9.0]));
+        s
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let mut s = ParamStore::new();
+        s.insert("z", Tensor::zeros(&[1]));
+        s.insert("a", Tensor::zeros(&[1]));
+        assert_eq!(s.names(), &["z".to_string(), "a".to_string()]);
+        // re-insert does not duplicate
+        s.insert("z", Tensor::zeros(&[2]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("z").unwrap().numel(), 2);
+    }
+
+    #[test]
+    fn qnp1_roundtrip() {
+        let dir = temp_dir("qnp1");
+        let path = dir.join("p.bin");
+        let s = sample();
+        s.save_qnp1(&path).unwrap();
+        let l = ParamStore::load_qnp1(&path).unwrap();
+        assert_eq!(l.names(), s.names());
+        for (n, t) in s.iter() {
+            assert_eq!(l.get(n).unwrap(), t);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = temp_dir("qnp1bad");
+        let path = dir.join("x.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(ParamStore::load_qnp1(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let s = sample();
+        let z = s.zeros_like();
+        assert_eq!(z.names(), s.names());
+        assert!(z.get("a").unwrap().data.iter().all(|&x| x == 0.0));
+        assert_eq!(z.total_params(), s.total_params());
+    }
+}

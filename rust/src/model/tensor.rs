@@ -1,0 +1,122 @@
+//! Host-side dense f32 tensor — the coordinator's working currency.
+//! Deliberately small: the heavy math lives in the AOT-compiled HLO;
+//! the host only needs shape bookkeeping plus the vector ops the
+//! optimizer, PQ pipeline and size accounting use.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Canonical 2-D view dims: (rows, cols). 1-D/0-D → (1, numel).
+    pub fn view2d(&self) -> (usize, usize) {
+        match self.shape.len() {
+            0 | 1 => (1, self.numel()),
+            2 => (self.shape[0], self.shape[1]),
+            _ => {
+                // trailing dims folded into cols; callers that need a
+                // different fold (convs) use the manifest's view field
+                let rows = self.shape[0];
+                (rows, self.numel() / rows)
+            }
+        }
+    }
+
+    // ------------------------------------------------ vector ops ---
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.numel(), other.numel());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.numel(), other.numel());
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.numel() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.view2d(), (3, 4));
+        assert_eq!(Tensor::zeros(&[5]).view2d(), (1, 5));
+        assert_eq!(Tensor::scalar(2.0).view2d(), (1, 1));
+        assert_eq!(Tensor::zeros(&[2, 3, 4]).view2d(), (2, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        a.axpy(-1.0, &b);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0]);
+        assert_eq!(a.sq_norm(), 5.0);
+        assert_eq!(a.max_abs(), 2.0);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn mse_basic() {
+        let a = Tensor::from_vec(&[2], vec![0.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![0.0, 0.0]);
+        assert_eq!(a.mse(&b), 2.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! PQ codebook storage, including the int8-compressed variant of §3.3
+//! (iPQ ⊕ int8: centroids stored as int8 codes, dividing the codebook
+//! overhead by 4 while the index matrix stays log2(K) bits per block).
+
+use crate::quant::scalar::{self, QParams};
+
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    /// K × d codewords, row-major, fp32 (possibly already an int8
+    /// round-trip if `int8` is set).
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub d: usize,
+    /// Set when the centroids have been int8-quantized (affects
+    /// storage accounting and marks that values lie on the int8 grid).
+    pub int8: Option<QParams>,
+}
+
+impl Codebook {
+    pub fn new(centroids: Vec<f32>, k: usize, d: usize) -> Codebook {
+        assert_eq!(centroids.len(), k * d);
+        Codebook { centroids, k, d, int8: None }
+    }
+
+    #[inline]
+    pub fn codeword(&self, j: usize) -> &[f32] {
+        &self.centroids[j * self.d..(j + 1) * self.d]
+    }
+
+    pub fn codeword_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.centroids[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Quantize the centroids themselves to int8 (Eq. 2 over the whole
+    /// codebook). Returns the quantization MSE over centroid entries.
+    pub fn compress_int8(&mut self) -> f64 {
+        let qp = QParams::from_minmax(&self.centroids, 8);
+        let before = self.centroids.clone();
+        scalar::roundtrip(&mut self.centroids, &qp);
+        self.int8 = Some(qp);
+        before
+            .iter()
+            .zip(&self.centroids)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / before.len().max(1) as f64
+    }
+
+    /// Codebook storage in bits: 8·K·d when int8-compressed (Eq. 5's
+    /// first term), else 32·K·d for fp32 centroids.
+    pub fn storage_bits(&self) -> u64 {
+        let per = if self.int8.is_some() { 8 } else { 32 };
+        per * (self.k * self.d) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn cb(seed: u64, k: usize, d: usize) -> Codebook {
+        let mut r = Pcg::new(seed);
+        Codebook::new((0..k * d).map(|_| r.next_normal()).collect(), k, d)
+    }
+
+    #[test]
+    fn codeword_slicing() {
+        let c = cb(1, 8, 4);
+        assert_eq!(c.codeword(3), &c.centroids[12..16]);
+    }
+
+    #[test]
+    fn int8_compression_shrinks_storage_4x() {
+        let mut c = cb(2, 256, 8);
+        let fp32 = c.storage_bits();
+        let mse = c.compress_int8();
+        assert_eq!(c.storage_bits() * 4, fp32);
+        assert!(mse > 0.0); // lossy
+        // error per entry bounded by s/2
+        let qp = c.int8.unwrap();
+        assert!(mse.sqrt() <= (qp.scale / 2.0) as f64 + 1e-6);
+    }
+
+    #[test]
+    fn int8_values_on_grid() {
+        let mut c = cb(3, 16, 4);
+        c.compress_int8();
+        let qp = c.int8.unwrap();
+        for &v in &c.centroids {
+            // v must equal its own round-trip (already on the grid)
+            assert!((v - qp.roundtrip_one(v)).abs() < 1e-6);
+        }
+    }
+}

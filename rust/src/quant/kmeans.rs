@@ -1,0 +1,297 @@
+//! k-means for PQ codebook learning (paper §3.2).
+//!
+//! k-means++ seeding, Lloyd iterations with multi-threaded assignment
+//! (std::thread scoped — rayon is not in the offline registry), and
+//! empty-cluster re-seeding to the points farthest from their centroid
+//! (the standard fix that keeps K codewords live at extreme K/n ratios).
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// K × d centroids, row-major.
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub d: usize,
+    /// Assignment of each input point to a centroid.
+    pub assignments: Vec<u32>,
+    /// Objective (sum of squared distances) after each iteration —
+    /// must be non-increasing (tested).
+    pub objective_history: Vec<f64>,
+}
+
+pub struct KmeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative objective improvement below which we stop early.
+    pub tol: f64,
+    pub threads: usize,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig {
+            k: 256,
+            max_iters: 15,
+            tol: 1e-5,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Assign each point to its nearest centroid; returns (assignments,
+/// per-point distances, total objective).
+fn assign(
+    points: &[f32],
+    n: usize,
+    d: usize,
+    centroids: &[f32],
+    k: usize,
+    threads: usize,
+) -> (Vec<u32>, Vec<f32>, f64) {
+    let mut assignments = vec![0u32; n];
+    let mut dists = vec![0.0f32; n];
+    let chunk = n.div_ceil(threads.max(1)).max(1);
+    let obj: f64 = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ci, (a_chunk, d_chunk)) in assignments
+            .chunks_mut(chunk)
+            .zip(dists.chunks_mut(chunk))
+            .enumerate()
+        {
+            let start = ci * chunk;
+            handles.push(s.spawn(move || {
+                let mut local_obj = 0.0f64;
+                for (i, (a, dist)) in a_chunk.iter_mut().zip(d_chunk.iter_mut()).enumerate() {
+                    let p = &points[(start + i) * d..(start + i + 1) * d];
+                    let mut best = f32::INFINITY;
+                    let mut best_j = 0u32;
+                    for j in 0..k {
+                        let c = &centroids[j * d..(j + 1) * d];
+                        let dd = dist2(p, c);
+                        if dd < best {
+                            best = dd;
+                            best_j = j as u32;
+                        }
+                    }
+                    *a = best_j;
+                    *dist = best;
+                    local_obj += best as f64;
+                }
+                local_obj
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    (assignments, dists, obj)
+}
+
+/// k-means++ seeding.
+fn init_pp(points: &[f32], n: usize, d: usize, k: usize, rng: &mut Pcg) -> Vec<f32> {
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n as u32) as usize;
+    centroids.extend_from_slice(&points[first * d..(first + 1) * d]);
+    let mut dists: Vec<f32> = (0..n)
+        .map(|i| dist2(&points[i * d..(i + 1) * d], &centroids[0..d]))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = dists.iter().map(|&x| x as f64).sum();
+        let next = if total <= 0.0 {
+            rng.below(n as u32) as usize
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in dists.iter().enumerate() {
+                target -= w as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let c_start = centroids.len();
+        centroids.extend_from_slice(&points[next * d..(next + 1) * d]);
+        let c = centroids[c_start..c_start + d].to_vec();
+        for i in 0..n {
+            let dd = dist2(&points[i * d..(i + 1) * d], &c);
+            if dd < dists[i] {
+                dists[i] = dd;
+            }
+        }
+    }
+    centroids
+}
+
+/// Run k-means on `n` points of dimension `d` (row-major `points`).
+/// If `n <= k`, every point becomes its own centroid (exact).
+pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig, rng: &mut Pcg) -> KmeansResult {
+    assert!(d > 0 && points.len() % d == 0);
+    let n = points.len() / d;
+    assert!(n > 0, "kmeans on empty input");
+    let k = cfg.k.min(n);
+
+    if n <= k {
+        // exact: each point its own codeword; pad (never read) if n < k
+        let mut centroids = points.to_vec();
+        centroids.resize(k * d, 0.0);
+        return KmeansResult {
+            centroids,
+            k,
+            d,
+            assignments: (0..n as u32).collect(),
+            objective_history: vec![0.0],
+        };
+    }
+
+    let mut centroids = init_pp(points, n, d, k, rng);
+    let mut history = Vec::new();
+    let mut last_obj = f64::INFINITY;
+    let mut assignments = Vec::new();
+
+    for _ in 0..cfg.max_iters {
+        let (assign_now, dists, obj) = assign(points, n, d, &centroids, k, cfg.threads);
+        assignments = assign_now;
+        history.push(obj);
+
+        // update step
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let a = assignments[i] as usize;
+            counts[a] += 1;
+            let p = &points[i * d..(i + 1) * d];
+            for j in 0..d {
+                sums[a * d + j] += p[j] as f64;
+            }
+        }
+        // empty-cluster re-seeding: steal the farthest points
+        let mut far: Vec<usize> = (0..n).collect();
+        far.sort_by(|&a, &b| dists[b].partial_cmp(&dists[a]).unwrap());
+        let mut steal = far.into_iter();
+        for j in 0..k {
+            if counts[j] == 0 {
+                if let Some(p) = steal.next() {
+                    let src = &points[p * d..(p + 1) * d];
+                    centroids[j * d..(j + 1) * d].copy_from_slice(src);
+                }
+            } else {
+                for t in 0..d {
+                    centroids[j * d + t] = (sums[j * d + t] / counts[j] as f64) as f32;
+                }
+            }
+        }
+
+        if last_obj.is_finite() && (last_obj - obj).abs() <= cfg.tol * last_obj.abs() {
+            break;
+        }
+        last_obj = obj;
+    }
+    // final assignment against the last update
+    let (assignments_f, _d, obj) = assign(points, n, d, &centroids, k, cfg.threads);
+    history.push(obj);
+    let _ = assignments;
+    KmeansResult { centroids, k, d, assignments: assignments_f, objective_history: history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data(seed: u64, per_blob: usize, d: usize) -> Vec<f32> {
+        // 4 well-separated gaussian blobs
+        let mut rng = Pcg::new(seed);
+        let mut pts = Vec::new();
+        for b in 0..4 {
+            let center = b as f32 * 10.0;
+            for _ in 0..per_blob {
+                for _ in 0..d {
+                    pts.push(center + rng.next_normal() * 0.1);
+                }
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn objective_nonincreasing() {
+        let pts = blob_data(1, 100, 4);
+        let mut rng = Pcg::new(2);
+        let cfg = KmeansConfig { k: 8, max_iters: 20, tol: 0.0, threads: 2 };
+        let r = kmeans(&pts, 4, &cfg, &mut rng);
+        for w in r.objective_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6 * w[0].abs().max(1.0), "{:?}", r.objective_history);
+        }
+    }
+
+    #[test]
+    fn finds_separated_blobs() {
+        let pts = blob_data(3, 200, 2);
+        let mut rng = Pcg::new(4);
+        let cfg = KmeansConfig { k: 4, max_iters: 25, tol: 1e-9, threads: 4 };
+        let r = kmeans(&pts, 2, &cfg, &mut rng);
+        // objective should be tiny relative to data spread
+        let final_obj = *r.objective_history.last().unwrap();
+        assert!(final_obj / (pts.len() as f64) < 0.1, "{final_obj}");
+    }
+
+    #[test]
+    fn exact_when_n_le_k() {
+        let pts = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 points, d=2
+        let mut rng = Pcg::new(5);
+        let cfg = KmeansConfig { k: 16, ..Default::default() };
+        let r = kmeans(&pts, 2, &cfg, &mut rng);
+        assert_eq!(r.assignments, vec![0, 1]);
+        assert_eq!(*r.objective_history.last().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn assignments_are_nearest() {
+        let pts = blob_data(6, 50, 3);
+        let mut rng = Pcg::new(7);
+        let cfg = KmeansConfig { k: 6, max_iters: 10, tol: 1e-7, threads: 3 };
+        let r = kmeans(&pts, 3, &cfg, &mut rng);
+        let n = pts.len() / 3;
+        for i in 0..n {
+            let p = &pts[i * 3..(i + 1) * 3];
+            let assigned = dist2(p, &r.centroids[r.assignments[i] as usize * 3..][..3]);
+            for j in 0..r.k {
+                let dj = dist2(p, &r.centroids[j * 3..(j + 1) * 3]);
+                assert!(assigned <= dj + 1e-5, "point {i}: {assigned} > {dj}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_empty_clusters_on_degenerate_data() {
+        // all points identical except a couple — re-seeding must keep
+        // assignments valid (all indices < k)
+        let mut pts = vec![0.5f32; 64 * 2];
+        pts[0] = 5.0;
+        pts[3] = -5.0;
+        let mut rng = Pcg::new(8);
+        let cfg = KmeansConfig { k: 4, max_iters: 8, tol: 0.0, threads: 2 };
+        let r = kmeans(&pts, 2, &cfg, &mut rng);
+        assert!(r.assignments.iter().all(|&a| (a as usize) < r.k));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts = blob_data(9, 60, 2);
+        let cfg = KmeansConfig { k: 5, max_iters: 10, tol: 1e-7, threads: 2 };
+        let a = kmeans(&pts, 2, &cfg, &mut Pcg::new(42));
+        let b = kmeans(&pts, 2, &cfg, &mut Pcg::new(42));
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+    }
+}

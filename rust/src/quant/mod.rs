@@ -1,0 +1,12 @@
+//! Quantization substrate: scalar intN (§3.1), observers (§7.7),
+//! k-means + Product Quantization (§3.2), codebooks incl. the int8
+//! combination (§3.3), model-size accounting (Eq. 5), LayerDrop pruning
+//! and weight sharing (§4.2/§7.9), and noise-kind plumbing (§4.2).
+pub mod codebook;
+pub mod kmeans;
+pub mod noise;
+pub mod observer;
+pub mod pq;
+pub mod prune;
+pub mod scalar;
+pub mod size;

@@ -1,0 +1,152 @@
+//! Noise-kind plumbing: maps the paper's noise functions φ (§4.2) to
+//! grad-artifact entry points and host-side "hat" (quantized image)
+//! builders for the mix family.
+
+use crate::quant::codebook::Codebook;
+use crate::quant::pq;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// rate 0 through grad_mix with zero hats (no noise — baseline).
+    None,
+    /// φ_proxy: zero out selected blocks (structured dropout).
+    Proxy,
+    /// exact φ_PQ: blocks snap to their nearest codeword (hats refreshed
+    /// by coordinator-side k-means once per epoch, per the paper).
+    ExactPq,
+    /// mean-subvector intermediate approximation (§4.2 / Table 5).
+    MeanSub,
+    /// φ_intN computed in-graph (per-tensor histogram-free minmax).
+    Int8,
+    Int4,
+    /// per-channel intN variants (Table 10).
+    Int8Channel,
+    Int4Channel,
+}
+
+impl NoiseKind {
+    /// Which grad entry point implements this noise.
+    pub fn entry(&self) -> &'static str {
+        match self {
+            NoiseKind::None | NoiseKind::Proxy | NoiseKind::ExactPq | NoiseKind::MeanSub => {
+                "grad_mix"
+            }
+            NoiseKind::Int8 => "grad_int8",
+            NoiseKind::Int4 => "grad_int4",
+            NoiseKind::Int8Channel => "grad_int8_channel",
+            NoiseKind::Int4Channel => "grad_int4_channel",
+        }
+    }
+
+    /// Does this kind need host-computed hat tensors?
+    pub fn needs_hat(&self) -> bool {
+        matches!(self, NoiseKind::ExactPq | NoiseKind::MeanSub)
+    }
+
+    pub fn parse(s: &str) -> Option<NoiseKind> {
+        Some(match s {
+            "none" => NoiseKind::None,
+            "proxy" => NoiseKind::Proxy,
+            "exact_pq" | "pq" => NoiseKind::ExactPq,
+            "mean_sub" | "mean" => NoiseKind::MeanSub,
+            "int8" => NoiseKind::Int8,
+            "int4" => NoiseKind::Int4,
+            "int8_channel" => NoiseKind::Int8Channel,
+            "int4_channel" => NoiseKind::Int4Channel,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NoiseKind::None => "none",
+            NoiseKind::Proxy => "proxy",
+            NoiseKind::ExactPq => "exact_pq",
+            NoiseKind::MeanSub => "mean_sub",
+            NoiseKind::Int8 => "int8",
+            NoiseKind::Int4 => "int4",
+            NoiseKind::Int8Channel => "int8_channel",
+            NoiseKind::Int4Channel => "int4_channel",
+        }
+    }
+}
+
+/// Build the mix-family hat for one weight's canonical 2-D view.
+/// `codebook` is required for `ExactPq` (the epoch's k-means result).
+pub fn build_hat(
+    kind: NoiseKind,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    block_size: usize,
+    codebook: Option<&Codebook>,
+) -> Vec<f32> {
+    match kind {
+        NoiseKind::None | NoiseKind::Proxy => vec![0.0; w.len()],
+        NoiseKind::MeanSub => pq::mean_subvector_hat(w, rows, cols, block_size),
+        NoiseKind::ExactPq => {
+            let cb = codebook.expect("ExactPq noise needs a codebook");
+            assert_eq!(cb.d, block_size, "codebook dim mismatch");
+            let codes = pq::encode(w, rows, cols, cb);
+            let m = pq::PqMatrix { codebook: cb.clone(), codes, rows, cols };
+            m.decode()
+        }
+        _ => panic!("{kind:?} noise is computed in-graph; no host hat"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pq::{fit, PqConfig};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn entry_mapping() {
+        assert_eq!(NoiseKind::Proxy.entry(), "grad_mix");
+        assert_eq!(NoiseKind::Int4Channel.entry(), "grad_int4_channel");
+        assert!(!NoiseKind::Proxy.needs_hat());
+        assert!(NoiseKind::ExactPq.needs_hat());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            NoiseKind::None,
+            NoiseKind::Proxy,
+            NoiseKind::ExactPq,
+            NoiseKind::MeanSub,
+            NoiseKind::Int8,
+            NoiseKind::Int4,
+            NoiseKind::Int8Channel,
+            NoiseKind::Int4Channel,
+        ] {
+            assert_eq!(NoiseKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(NoiseKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn proxy_hat_is_zero() {
+        let w = vec![1.0f32; 64];
+        assert!(build_hat(NoiseKind::Proxy, &w, 8, 8, 4, None)
+            .iter()
+            .all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exact_pq_hat_equals_decode() {
+        let mut rng = Pcg::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.next_normal()).collect();
+        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 8 };
+        let m = fit(&w, 16, 16, &cfg, &mut Pcg::new(2));
+        let hat = build_hat(NoiseKind::ExactPq, &w, 16, 16, 8, Some(&m.codebook));
+        assert_eq!(hat, m.decode());
+    }
+
+    #[test]
+    #[should_panic(expected = "in-graph")]
+    fn int_kinds_have_no_host_hat() {
+        build_hat(NoiseKind::Int8, &[0.0; 8], 1, 8, 8, None);
+    }
+}

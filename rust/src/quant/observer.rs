@@ -1,0 +1,240 @@
+//! Range observers for scalar quantization (paper §7.7).
+//!
+//! * [`MinMaxObserver`] — running min/max (the baseline scheme).
+//! * [`HistogramObserver`] — accumulates a histogram and searches the
+//!   clip range (lo, hi) that approximately minimizes the L2
+//!   quantization error, "a refinement of the MinMax scheme" exactly as
+//!   the paper describes PyTorch's Histogram method.
+
+use crate::quant::scalar::QParams;
+
+#[derive(Debug, Clone, Default)]
+pub struct MinMaxObserver {
+    lo: f32,
+    hi: f32,
+    seen: bool,
+}
+
+impl MinMaxObserver {
+    pub fn new() -> Self {
+        MinMaxObserver { lo: 0.0, hi: 0.0, seen: false }
+    }
+
+    pub fn observe(&mut self, data: &[f32]) {
+        for &x in data {
+            if !self.seen {
+                self.lo = x;
+                self.hi = x;
+                self.seen = true;
+            } else {
+                self.lo = self.lo.min(x);
+                self.hi = self.hi.max(x);
+            }
+        }
+    }
+
+    pub fn range(&self) -> (f32, f32) {
+        (self.lo, self.hi)
+    }
+
+    pub fn qparams(&self, bits: u8) -> QParams {
+        QParams::from_range(self.lo, self.hi, bits)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HistogramObserver {
+    pub bins: Vec<f64>,
+    pub lo: f32,
+    pub hi: f32,
+    seen: bool,
+    n_bins: usize,
+}
+
+impl HistogramObserver {
+    pub fn new(n_bins: usize) -> Self {
+        HistogramObserver { bins: vec![0.0; n_bins], lo: 0.0, hi: 0.0, seen: false, n_bins }
+    }
+
+    /// Observe a batch. If the data range grows, the existing histogram
+    /// is re-binned into the wider range (mass-preserving).
+    pub fn observe(&mut self, data: &[f32]) {
+        if data.is_empty() {
+            return;
+        }
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !self.seen {
+            self.lo = lo;
+            self.hi = hi.max(lo + 1e-12);
+            self.seen = true;
+        } else if lo < self.lo || hi > self.hi {
+            let new_lo = self.lo.min(lo);
+            let new_hi = self.hi.max(hi);
+            self.rebin(new_lo, new_hi);
+        }
+        let width = (self.hi - self.lo).max(1e-12);
+        for &x in data {
+            let b = (((x - self.lo) / width) * self.n_bins as f32) as usize;
+            self.bins[b.min(self.n_bins - 1)] += 1.0;
+        }
+    }
+
+    fn rebin(&mut self, new_lo: f32, new_hi: f32) {
+        let mut new_bins = vec![0.0; self.n_bins];
+        let old_width = (self.hi - self.lo).max(1e-12) / self.n_bins as f32;
+        let new_width = (new_hi - new_lo).max(1e-12) / self.n_bins as f32;
+        for (i, &mass) in self.bins.iter().enumerate() {
+            if mass == 0.0 {
+                continue;
+            }
+            let center = self.lo + (i as f32 + 0.5) * old_width;
+            let b = (((center - new_lo) / new_width) as usize).min(self.n_bins - 1);
+            new_bins[b] += mass;
+        }
+        self.bins = new_bins;
+        self.lo = new_lo;
+        self.hi = new_hi;
+    }
+
+    /// Expected squared quantization error for a candidate clip range:
+    /// each bin's mass incurs the *actual* round-trip error of its bin
+    /// center under QParams(lo, hi) — clipping and rounding both fall
+    /// out of the same formula, and concentrated distributions (where a
+    /// uniform s²/12 model is badly wrong) are handled correctly.
+    fn l2_error(&self, clip_lo: f32, clip_hi: f32, bits: u8) -> f64 {
+        let qp = QParams::from_range(clip_lo, clip_hi, bits);
+        let bin_w = ((self.hi - self.lo) as f64 / self.n_bins as f64).max(1e-18);
+        let mut err = 0.0f64;
+        for (i, &mass) in self.bins.iter().enumerate() {
+            if mass == 0.0 {
+                continue;
+            }
+            let center = (self.lo as f64 + (i as f64 + 0.5) * bin_w) as f32;
+            let e = (center - qp.roundtrip_one(center)) as f64;
+            err += mass * e * e;
+        }
+        err
+    }
+
+    /// Search a shrinking family of clip ranges for the L2-minimizing
+    /// one (grid over symmetric trims of the observed range).
+    pub fn best_range(&self, bits: u8) -> (f32, f32) {
+        if !self.seen {
+            return (0.0, 0.0);
+        }
+        let width = self.hi - self.lo;
+        let mut best = (self.lo, self.hi);
+        let mut best_err = self.l2_error(self.lo, self.hi, bits);
+        let steps = 64;
+        for i in 0..steps {
+            for j in 0..steps {
+                if i + j >= steps {
+                    break;
+                }
+                let lo = self.lo + width * (i as f32 / steps as f32) * 0.5;
+                let hi = self.hi - width * (j as f32 / steps as f32) * 0.5;
+                if hi <= lo {
+                    continue;
+                }
+                let err = self.l2_error(lo, hi, bits);
+                if err < best_err {
+                    best_err = err;
+                    best = (lo, hi);
+                }
+            }
+        }
+        best
+    }
+
+    pub fn qparams(&self, bits: u8) -> QParams {
+        let (lo, hi) = self.best_range(bits);
+        QParams::from_range(lo, hi, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scalar::quant_mse;
+    use crate::util::rng::Pcg;
+
+    fn heavy_tail(seed: u64, n: usize) -> Vec<f32> {
+        // mostly N(0,1) with a few large outliers — histogram should clip
+        let mut r = Pcg::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 97 == 0 {
+                    r.next_normal() * 30.0
+                } else {
+                    r.next_normal()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn minmax_tracks_range() {
+        let mut o = MinMaxObserver::new();
+        o.observe(&[1.0, -2.0]);
+        o.observe(&[5.0]);
+        assert_eq!(o.range(), (-2.0, 5.0));
+    }
+
+    #[test]
+    fn histogram_beats_minmax_on_outliers() {
+        let data = heavy_tail(1, 20_000);
+        let mut mm = MinMaxObserver::new();
+        mm.observe(&data);
+        let mut h = HistogramObserver::new(2048);
+        h.observe(&data);
+        let mse_mm = quant_mse(&data, &mm.qparams(4));
+        let mse_h = quant_mse(&data, &h.qparams(4));
+        assert!(mse_h < mse_mm, "hist {mse_h} vs minmax {mse_mm}");
+    }
+
+    #[test]
+    fn histogram_matches_minmax_on_uniform() {
+        // No outliers: clipping should not help much; hist ≤ ~2× minmax.
+        let mut r = Pcg::new(2);
+        let data: Vec<f32> = (0..10_000).map(|_| r.next_f32() * 2.0 - 1.0).collect();
+        let mut h = HistogramObserver::new(2048);
+        h.observe(&data);
+        let mut mm = MinMaxObserver::new();
+        mm.observe(&data);
+        let mse_h = quant_mse(&data, &h.qparams(8));
+        let mse_mm = quant_mse(&data, &mm.qparams(8));
+        assert!(mse_h <= mse_mm * 2.0 + 1e-12, "{mse_h} vs {mse_mm}");
+    }
+
+    #[test]
+    fn rebin_preserves_mass() {
+        let mut h = HistogramObserver::new(128);
+        h.observe(&[0.0, 0.5, 1.0]);
+        let before: f64 = h.bins.iter().sum();
+        h.observe(&[10.0]); // forces rebin
+        let after: f64 = h.bins.iter().sum();
+        assert_eq!(before + 1.0, after);
+        assert_eq!(h.hi, 10.0);
+    }
+
+    #[test]
+    fn best_range_within_observed() {
+        let data = heavy_tail(3, 5_000);
+        let mut h = HistogramObserver::new(512);
+        h.observe(&data);
+        let (lo, hi) = h.best_range(8);
+        assert!(lo >= h.lo - 1e-6 && hi <= h.hi + 1e-6 && lo < hi);
+    }
+
+    #[test]
+    fn empty_observer_safe() {
+        let h = HistogramObserver::new(64);
+        assert_eq!(h.best_range(8), (0.0, 0.0));
+        let qp = h.qparams(8);
+        assert_eq!(qp.scale, 1.0); // degenerate fallback
+    }
+}

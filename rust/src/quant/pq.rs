@@ -1,0 +1,248 @@
+//! Product Quantization of weight matrices (paper §3.2, Eq. 1/3).
+//!
+//! A matrix is viewed in its canonical 2-D layout (rows = output units,
+//! cols = input features — the same view the L2 noise uses) and split
+//! into contiguous subvectors of length `block_size` along the columns,
+//! i.e. each row contributes `cols / block_size` subvectors. One shared
+//! codebook of K codewords is learned over all `rows · cols / block_size`
+//! subvectors with k-means; the matrix is stored as (codebook, index
+//! matrix) and reconstructed as `b̂_kl = c[I_kl]` at eval time.
+
+use crate::quant::codebook::Codebook;
+use crate::quant::kmeans::{kmeans, KmeansConfig};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PqConfig {
+    /// Subvector length d (the paper's per-structure "block size").
+    pub block_size: usize,
+    /// Codebook size K (256 ⇒ int8 indices).
+    pub n_centroids: usize,
+    pub kmeans_iters: usize,
+}
+
+impl Default for PqConfig {
+    fn default() -> Self {
+        PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 15 }
+    }
+}
+
+/// A PQ-compressed matrix: codebook + index matrix (row-major, one code
+/// per subvector, `cols/block_size` codes per row).
+#[derive(Debug, Clone)]
+pub struct PqMatrix {
+    pub codebook: Codebook,
+    pub codes: Vec<u32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PqMatrix {
+    pub fn block_size(&self) -> usize {
+        self.codebook.d
+    }
+
+    pub fn subvectors_per_row(&self) -> usize {
+        self.cols / self.block_size()
+    }
+
+    /// Reconstruct the dense matrix (Eq. 1 right-hand side).
+    pub fn decode(&self) -> Vec<f32> {
+        let d = self.block_size();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for (s, &code) in self.codes.iter().enumerate() {
+            let dst = s * d;
+            out[dst..dst + d].copy_from_slice(self.codebook.codeword(code as usize));
+        }
+        out
+    }
+
+    /// Reconstruction error ‖W − Ŵ‖² (Eq. 3).
+    pub fn objective(&self, original: &[f32]) -> f64 {
+        let rec = self.decode();
+        original
+            .iter()
+            .zip(&rec)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    /// Storage in bits: Eq. 5 without the activation term —
+    /// 32·K·d for fp32 centroids (or 8·K·d once int8-compressed) plus
+    /// log2(K) per subvector index.
+    pub fn storage_bits(&self) -> u64 {
+        let centroid_bits = self.codebook.storage_bits();
+        let index_bits = (self.codebook.k.max(2) as f64).log2().ceil() as u64;
+        centroid_bits + index_bits * self.codes.len() as u64
+    }
+}
+
+/// Extract the subvector matrix (n_sub × d) from a (rows × cols) weight.
+pub fn subvectors(w: &[f32], rows: usize, cols: usize, d: usize) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols, "matrix size mismatch");
+    assert!(
+        cols % d == 0,
+        "cols {cols} not divisible by block_size {d}"
+    );
+    // contiguous along cols ⇒ the flat layout already is subvector-major
+    w.to_vec()
+}
+
+/// Fit PQ to a matrix in its canonical 2-D view.
+pub fn fit(w: &[f32], rows: usize, cols: usize, cfg: &PqConfig, rng: &mut Pcg) -> PqMatrix {
+    let d = cfg.block_size;
+    let subs = subvectors(w, rows, cols, d);
+    let km = kmeans(
+        &subs,
+        d,
+        &KmeansConfig { k: cfg.n_centroids, max_iters: cfg.kmeans_iters, ..Default::default() },
+        rng,
+    );
+    PqMatrix {
+        codebook: Codebook::new(km.centroids, km.k, d),
+        codes: km.assignments,
+        rows,
+        cols,
+    }
+}
+
+/// Re-encode a matrix against an *existing* codebook (used after
+/// codeword finetuning steps, and by the exact-noise hat refresh).
+pub fn encode(w: &[f32], rows: usize, cols: usize, cb: &Codebook) -> Vec<u32> {
+    let d = cb.d;
+    assert_eq!(w.len(), rows * cols);
+    assert!(cols % d == 0);
+    let n = rows * cols / d;
+    let mut codes = vec![0u32; n];
+    for i in 0..n {
+        let p = &w[i * d..(i + 1) * d];
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        for j in 0..cb.k {
+            let c = cb.codeword(j);
+            let mut acc = 0.0f32;
+            for t in 0..d {
+                let diff = p[t] - c[t];
+                acc += diff * diff;
+            }
+            if acc < best {
+                best = acc;
+                best_j = j as u32;
+            }
+        }
+        codes[i] = best_j;
+    }
+    codes
+}
+
+/// Blockwise-mean "hat": each subvector replaced by its own mean value
+/// (the paper's intermediate approximation in §4.2).
+pub fn mean_subvector_hat(w: &[f32], rows: usize, cols: usize, d: usize) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols);
+    assert!(cols % d == 0);
+    let mut out = vec![0.0f32; w.len()];
+    for s in 0..w.len() / d {
+        let sv = &w[s * d..(s + 1) * d];
+        let mean = sv.iter().sum::<f32>() / d as f32;
+        out[s * d..(s + 1) * d].fill(mean);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randmat(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+        let mut r = Pcg::new(seed);
+        (0..rows * cols).map(|_| r.next_normal()).collect()
+    }
+
+    #[test]
+    fn decode_shape_and_determinism() {
+        let w = randmat(1, 16, 32);
+        let cfg = PqConfig { block_size: 8, n_centroids: 16, kmeans_iters: 8 };
+        let a = fit(&w, 16, 32, &cfg, &mut Pcg::new(7));
+        let b = fit(&w, 16, 32, &cfg, &mut Pcg::new(7));
+        assert_eq!(a.decode().len(), 16 * 32);
+        assert_eq!(a.decode(), b.decode());
+    }
+
+    #[test]
+    fn more_centroids_lower_error() {
+        let w = randmat(2, 32, 64);
+        let mut errs = Vec::new();
+        for k in [4usize, 16, 64, 256] {
+            let cfg = PqConfig { block_size: 8, n_centroids: k, kmeans_iters: 12 };
+            let pq = fit(&w, 32, 64, &cfg, &mut Pcg::new(3));
+            errs.push(pq.objective(&w));
+        }
+        for pair in errs.windows(2) {
+            assert!(pair[1] <= pair[0] * 1.05, "{errs:?}"); // allow tiny noise
+        }
+        // K = n_subvectors(=256) ⇒ exact reconstruction
+        assert!(errs[3] < 1e-9, "{errs:?}");
+    }
+
+    #[test]
+    fn repeated_rows_reconstruct_exactly() {
+        // a matrix whose subvectors take only 4 distinct values is
+        // reconstructed exactly with K >= 4
+        let pattern = [1.0f32, -1.0, 0.5, 2.0];
+        let mut w = Vec::new();
+        for r in 0..32 {
+            for _ in 0..4 {
+                // subvector = constant 4-vector from the pattern
+                let v = pattern[r % 4];
+                w.extend_from_slice(&[v; 4]);
+            }
+        }
+        let cfg = PqConfig { block_size: 4, n_centroids: 8, kmeans_iters: 10 };
+        let pq = fit(&w, 32, 16, &cfg, &mut Pcg::new(5));
+        assert!(pq.objective(&w) < 1e-10);
+    }
+
+    #[test]
+    fn encode_matches_fit_assignments() {
+        let w = randmat(4, 16, 16);
+        let cfg = PqConfig { block_size: 4, n_centroids: 16, kmeans_iters: 10 };
+        let pq = fit(&w, 16, 16, &cfg, &mut Pcg::new(6));
+        let codes = encode(&w, 16, 16, &pq.codebook);
+        // re-encoding with the same codebook can only improve or match
+        let rec_fit = pq.objective(&w);
+        let pq2 = PqMatrix { codebook: pq.codebook.clone(), codes, rows: 16, cols: 16 };
+        let rec_enc = pq2.objective(&w);
+        assert!(rec_enc <= rec_fit + 1e-9, "{rec_enc} vs {rec_fit}");
+    }
+
+    #[test]
+    fn storage_bits_formula() {
+        let w = randmat(7, 64, 64);
+        let cfg = PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 2 };
+        let pq = fit(&w, 64, 64, &cfg, &mut Pcg::new(8));
+        // fp32 codebook: 32·K·d + 8 bits per code (log2 256)
+        let expect = 32 * 256 * 8 + 8 * (64 * 64 / 8) as u64;
+        assert_eq!(pq.storage_bits(), expect);
+    }
+
+    #[test]
+    fn mean_subvector_hat_is_blockwise_constant() {
+        let w = randmat(9, 8, 16);
+        let hat = mean_subvector_hat(&w, 8, 16, 4);
+        for s in 0..(8 * 16 / 4) {
+            let sv = &hat[s * 4..(s + 1) * 4];
+            assert!(sv.iter().all(|&x| (x - sv[0]).abs() < 1e-6));
+            let orig = &w[s * 4..(s + 1) * 4];
+            let mean = orig.iter().sum::<f32>() / 4.0;
+            assert!((sv[0] - mean).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn rejects_bad_block_size() {
+        let w = randmat(10, 4, 10);
+        subvectors(&w, 4, 10, 8);
+    }
+}

@@ -1,0 +1,110 @@
+//! LayerDrop pruning and weight sharing (paper §4.2 + §7.9).
+//!
+//! * Training-time LayerDrop: each residual layer kept with prob 1−p,
+//!   sampled per step by the coordinator (the mask is an artifact input).
+//! * Inference-time pruning: the "Every Other Layer" strategy applied to
+//!   *chunks* — when sharing is on, adjacent layers are shared in chunks
+//!   of two (A=B, C=D, …) and pruning drops every other chunk.
+
+use crate::util::rng::Pcg;
+
+/// Sample a training LayerDrop mask (1.0 = keep).
+pub fn sample_mask(n_layers: usize, drop_rate: f32, rng: &mut Pcg) -> Vec<f32> {
+    (0..n_layers)
+        .map(|_| if rng.next_f32() < drop_rate { 0.0 } else { 1.0 })
+        .collect()
+}
+
+/// Layer → canonical layer under chunked sharing (chunks of `chunk`
+/// adjacent layers share one set of weights). chunk=1 ⇒ identity.
+pub fn share_map(n_layers: usize, chunk: usize) -> Vec<usize> {
+    assert!(chunk >= 1);
+    (0..n_layers).map(|l| (l / chunk) * chunk).collect()
+}
+
+/// "Every Other Layer" chunk pruning: keep chunks with even index.
+/// Returns the keep mask over layers.
+pub fn every_other_chunk_mask(n_layers: usize, chunk: usize) -> Vec<f32> {
+    (0..n_layers)
+        .map(|l| if (l / chunk) % 2 == 0 { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// Which layers physically store weights, given sharing and a keep mask:
+/// a layer stores iff it is its chunk's canonical layer AND its chunk is
+/// kept. (Pruned chunks cost nothing; shared non-canonical layers alias.)
+pub fn stored_layers(n_layers: usize, chunk: usize, keep: &[f32]) -> Vec<bool> {
+    let map = share_map(n_layers, chunk);
+    (0..n_layers)
+        .map(|l| map[l] == l && keep[l] > 0.0)
+        .collect()
+}
+
+/// FLOPs fraction surviving pruning (paper: "pruning reduces FLOPS by
+/// the same ratio as its compression factor").
+pub fn flops_fraction(keep: &[f32]) -> f64 {
+    if keep.is_empty() {
+        return 1.0;
+    }
+    keep.iter().filter(|&&k| k > 0.0).count() as f64 / keep.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_rate_statistics() {
+        let mut rng = Pcg::new(1);
+        let n = 20_000;
+        let dropped: usize = (0..n)
+            .map(|_| sample_mask(1, 0.2, &mut rng)[0] as usize)
+            .filter(|&k| k == 0)
+            .count();
+        let frac = dropped as f64 / n as f64;
+        assert!((frac - 0.2).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn zero_rate_keeps_everything() {
+        let mut rng = Pcg::new(2);
+        assert_eq!(sample_mask(8, 0.0, &mut rng), vec![1.0; 8]);
+    }
+
+    #[test]
+    fn share_map_chunks_of_two() {
+        assert_eq!(share_map(8, 2), vec![0, 0, 2, 2, 4, 4, 6, 6]);
+        assert_eq!(share_map(5, 2), vec![0, 0, 2, 2, 4]);
+        assert_eq!(share_map(4, 1), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn every_other_chunk() {
+        // 8 layers, chunks of 2: keep {0,1}, drop {2,3}, keep {4,5}, drop {6,7}
+        assert_eq!(
+            every_other_chunk_mask(8, 2),
+            vec![1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn stored_layers_sharing_and_pruning_compose() {
+        let keep = every_other_chunk_mask(8, 2);
+        let stored = stored_layers(8, 2, &keep);
+        // only canonical layers of kept chunks: layers 0 and 4
+        assert_eq!(
+            stored,
+            vec![true, false, false, false, true, false, false, false]
+        );
+        // sharing alone: canonical layers of every chunk
+        let stored_all = stored_layers(8, 2, &vec![1.0; 8]);
+        assert_eq!(stored_all.iter().filter(|&&s| s).count(), 4);
+    }
+
+    #[test]
+    fn flops_fraction_matches_kept_count() {
+        let keep = every_other_chunk_mask(8, 2);
+        assert_eq!(flops_fraction(&keep), 0.5);
+        assert_eq!(flops_fraction(&[1.0, 1.0]), 1.0);
+    }
+}

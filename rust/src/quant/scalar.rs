@@ -1,0 +1,234 @@
+//! Fixed-point scalar quantization (paper §3.1, Eq. 2).
+//!
+//! `q = clip(round(w/s) - z, 0, 2^N - 1)`, `ŵ = (q + z)·s`, with
+//! `s = (max−min)/(2^N−1)` and `z = round(min/s)` — the same convention
+//! as the L1 `fake_quant` kernel and its jnp oracle, so coordinator-side
+//! round-trips match in-graph fake-quantization bit-for-bit (up to fp32
+//! associativity).
+
+/// Scale/zero-point pair for one tensor or one channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero: f32,
+    pub bits: u8,
+}
+
+impl QParams {
+    /// Derive from an explicit range (observers feed clipped ranges here).
+    pub fn from_range(lo: f32, hi: f32, bits: u8) -> QParams {
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let mut scale = (hi - lo) / qmax;
+        if !(scale > 0.0) {
+            scale = 1.0; // degenerate/constant tensor: PyTorch-style fallback
+        }
+        QParams { scale, zero: (lo / scale).round(), bits }
+    }
+
+    pub fn from_minmax(data: &[f32], bits: u8) -> QParams {
+        let (lo, hi) = minmax(data);
+        QParams::from_range(lo, hi, bits)
+    }
+
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    #[inline]
+    pub fn quantize_one(&self, w: f32) -> u8 {
+        ((w / self.scale).round() - self.zero).clamp(0.0, self.qmax()) as u8
+    }
+
+    #[inline]
+    pub fn dequantize_one(&self, q: u8) -> f32 {
+        (q as f32 + self.zero) * self.scale
+    }
+
+    /// Fake-quant round trip of one value.
+    #[inline]
+    pub fn roundtrip_one(&self, w: f32) -> f32 {
+        self.dequantize_one(self.quantize_one(w))
+    }
+}
+
+pub fn minmax(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in data {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Quantize a whole tensor to intN codes.
+pub fn quantize(data: &[f32], qp: &QParams) -> Vec<u8> {
+    data.iter().map(|&w| qp.quantize_one(w)).collect()
+}
+
+/// Dequantize codes back to f32.
+pub fn dequantize(codes: &[u8], qp: &QParams) -> Vec<f32> {
+    codes.iter().map(|&q| qp.dequantize_one(q)).collect()
+}
+
+/// In-place fake-quant round-trip (what the coordinator applies before
+/// evaluating an intN-quantized model through the eval artifact).
+pub fn roundtrip(data: &mut [f32], qp: &QParams) {
+    for w in data.iter_mut() {
+        *w = qp.roundtrip_one(*w);
+    }
+}
+
+/// Per-channel quantization: one QParams per row of a (rows × cols)
+/// matrix (Table 10's "Quant Channel" scheme).
+pub fn quantize_per_channel(data: &[f32], rows: usize, cols: usize, bits: u8) -> (Vec<u8>, Vec<QParams>) {
+    assert_eq!(data.len(), rows * cols);
+    let mut codes = vec![0u8; data.len()];
+    let mut qps = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let qp = QParams::from_minmax(row, bits);
+        for (c, &w) in row.iter().enumerate() {
+            codes[r * cols + c] = qp.quantize_one(w);
+        }
+        qps.push(qp);
+    }
+    (codes, qps)
+}
+
+pub fn roundtrip_per_channel(data: &mut [f32], rows: usize, cols: usize, bits: u8) {
+    assert_eq!(data.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        let qp = QParams::from_minmax(row, bits);
+        for w in row.iter_mut() {
+            *w = qp.roundtrip_one(*w);
+        }
+    }
+}
+
+/// Mean squared quantization error of a round trip (used by observers
+/// and by tests asserting the error bound s²/4 per element).
+pub fn quant_mse(data: &[f32], qp: &QParams) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for &w in data {
+        let e = (w - qp.roundtrip_one(w)) as f64;
+        acc += e * e;
+    }
+    acc / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Pcg::new(seed);
+        (0..n).map(|_| r.next_normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        for bits in [2u8, 4, 8] {
+            let data = randvec(bits as u64, 1000);
+            let qp = QParams::from_minmax(&data, bits);
+            for &w in &data {
+                let err = (w - qp.roundtrip_one(w)).abs();
+                assert!(err <= qp.scale / 2.0 + 1e-5, "bits={bits} err={err} s={}", qp.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn codes_fit_bits() {
+        let data = randvec(1, 500);
+        for bits in [4u8, 8] {
+            let qp = QParams::from_minmax(&data, bits);
+            let codes = quantize(&data, &qp);
+            assert!(codes.iter().all(|&c| (c as u32) < (1 << bits)));
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let data = randvec(2, 300);
+        let qp = QParams::from_minmax(&data, 8);
+        let once = dequantize(&quantize(&data, &qp), &qp);
+        let twice = dequantize(&quantize(&once, &qp), &qp);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn constant_tensor_fallback() {
+        let data = vec![0.37f32; 64];
+        let qp = QParams::from_minmax(&data, 8);
+        assert_eq!(qp.scale, 1.0);
+        // error bounded by 1/2 (rounds to nearest integer)
+        assert!((data[0] - qp.roundtrip_one(data[0])).abs() <= 0.5);
+    }
+
+    #[test]
+    fn extremes_map_to_range_ends() {
+        let data = vec![-1.0f32, 0.0, 2.0];
+        let qp = QParams::from_minmax(&data, 8);
+        let codes = quantize(&data, &qp);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[2], 255);
+        // dequantized extremes match originals closely
+        assert!((qp.dequantize_one(codes[0]) + 1.0).abs() < qp.scale);
+        assert!((qp.dequantize_one(codes[2]) - 2.0).abs() < qp.scale);
+    }
+
+    #[test]
+    fn per_channel_beats_or_matches_per_tensor() {
+        // Rows with very different ranges: per-channel MSE must be lower.
+        let mut data = randvec(3, 256);
+        for (i, w) in data.iter_mut().enumerate() {
+            if i < 128 {
+                *w *= 100.0;
+            }
+        }
+        let qp = QParams::from_minmax(&data, 4);
+        let mse_tensor = quant_mse(&data, &qp);
+        let mut per_ch = data.clone();
+        roundtrip_per_channel(&mut per_ch, 2, 128, 4);
+        let mse_channel: f64 = data
+            .iter()
+            .zip(&per_ch)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / data.len() as f64;
+        assert!(mse_channel < mse_tensor, "{mse_channel} vs {mse_tensor}");
+    }
+
+    #[test]
+    fn matches_python_oracle_convention() {
+        // Fixed vector, compare against values computed by ref.fake_quant
+        // convention: s=(hi-lo)/qmax, z=round(lo/s), q=clip(round(w/s)-z).
+        let data = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let qp = QParams::from_minmax(&data, 4);
+        let s = 2.0 / 15.0;
+        assert!((qp.scale - s).abs() < 1e-6);
+        assert_eq!(qp.zero, (-1.0f32 / s).round());
+        for &w in &data {
+            let q = ((w / s).round() - qp.zero).clamp(0.0, 15.0);
+            let expect = (q + qp.zero) * s;
+            assert!((qp.roundtrip_one(w) - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mse_empty_and_degenerate() {
+        assert_eq!(quant_mse(&[], &QParams::from_range(0.0, 1.0, 8)), 0.0);
+        let (lo, hi) = minmax(&[]);
+        assert_eq!((lo, hi), (0.0, 0.0));
+    }
+}

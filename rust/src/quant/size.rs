@@ -1,0 +1,195 @@
+//! Model-size accounting (paper Table 1 "Size"/"Compression" columns
+//! and Eq. 5 for the iPQ ⊕ int8 combination).
+//!
+//! Sizes are computed from the parameter inventory the manifest
+//! describes, per compression scheme, including the sharing/pruning
+//! adjustments of §7.9 (shared chunks stored once; pruned chunks not
+//! stored at all).
+
+/// One parameter's storage-relevant description.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub numel: usize,
+    /// canonical 2-D view (rows, cols); scalars/vectors use (1, numel)
+    pub rows: usize,
+    pub cols: usize,
+    /// participates in quantization (norms/biases stay fp32)
+    pub quantized: bool,
+    /// PQ subvector length for this structure
+    pub pq_block: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    Fp32,
+    Int { bits: u8 },
+    /// PQ with K centroids; `int8_centroids` applies §3.3 (Eq. 5).
+    Pq { k: usize, int8_centroids: bool },
+}
+
+/// Bits to store one parameter under a scheme.
+pub fn param_bits(p: &ParamInfo, scheme: Scheme) -> u64 {
+    if !p.quantized {
+        return 32 * p.numel as u64;
+    }
+    match scheme {
+        Scheme::Fp32 => 32 * p.numel as u64,
+        // intN: codes + one fp32 scale and zero-point per tensor
+        Scheme::Int { bits } => bits as u64 * p.numel as u64 + 64,
+        Scheme::Pq { k, int8_centroids } => {
+            let d = p.pq_block;
+            let n_sub = (p.numel / d) as u64;
+            let index_bits = (k.max(2) as f64).log2().ceil() as u64;
+            let centroid_bits = if int8_centroids { 8 } else { 32 } * (k * d) as u64;
+            // Eq. 5 (without the activation term, which is not model
+            // storage): centroid table + index matrix (+64 for the
+            // centroid int8 scale/zero when applicable)
+            centroid_bits + index_bits * n_sub + if int8_centroids { 64 } else { 0 }
+        }
+    }
+}
+
+/// Total model bytes under a scheme.
+pub fn model_bytes(params: &[ParamInfo], scheme: Scheme) -> u64 {
+    params.iter().map(|p| param_bits(p, scheme)).sum::<u64>() / 8
+}
+
+/// Layer-sharing/pruning adjustment: `stored` lists whether each param
+/// is physically stored (false for weights aliased to a shared sibling
+/// or living in a pruned chunk).
+pub fn model_bytes_with_mask(params: &[ParamInfo], scheme: Scheme, stored: &[bool]) -> u64 {
+    assert_eq!(params.len(), stored.len());
+    params
+        .iter()
+        .zip(stored)
+        .filter(|(_, &s)| s)
+        .map(|(p, _)| param_bits(p, scheme))
+        .sum::<u64>()
+        / 8
+}
+
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / 1e6
+}
+
+pub fn compression_ratio(params: &[ParamInfo], scheme: Scheme) -> f64 {
+    model_bytes(params, Scheme::Fp32) as f64 / model_bytes(params, scheme) as f64
+}
+
+/// Activation memory term of Eq. 5 for a forward pass with batch 1:
+/// 8 bits × input dimension when activations are int8, else 32 bits.
+pub fn activation_bits(input_dim: usize, int8: bool) -> u64 {
+    (if int8 { 8 } else { 32 }) * input_dim as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inv() -> Vec<ParamInfo> {
+        vec![
+            ParamInfo {
+                name: "w".into(),
+                numel: 1024 * 1024,
+                rows: 1024,
+                cols: 1024,
+                quantized: true,
+                pq_block: 8,
+            },
+            ParamInfo {
+                name: "ln".into(),
+                numel: 1024,
+                rows: 1,
+                cols: 1024,
+                quantized: false,
+                pq_block: 8,
+            },
+        ]
+    }
+
+    #[test]
+    fn fp32_baseline() {
+        let params = inv();
+        assert_eq!(model_bytes(&params, Scheme::Fp32), (1024 * 1024 + 1024) * 4);
+    }
+
+    #[test]
+    fn int8_is_4x_on_quantized_weights() {
+        let params = inv();
+        let fp = model_bytes(&params, Scheme::Fp32) as f64;
+        let i8b = model_bytes(&params, Scheme::Int { bits: 8 }) as f64;
+        let ratio = fp / i8b;
+        assert!((ratio - 4.0).abs() < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn int4_is_8x() {
+        let params = inv();
+        let r = compression_ratio(&params, Scheme::Int { bits: 4 });
+        assert!((r - 8.0).abs() < 0.1, "{r}");
+    }
+
+    #[test]
+    fn pq_matches_eq5_arithmetic() {
+        // 1M weights, d=8, K=256: indices = 8 bits × 131072 subvectors,
+        // centroids = 32×256×8 bits fp32.
+        let params = vec![ParamInfo {
+            name: "w".into(),
+            numel: 1 << 20,
+            rows: 1024,
+            cols: 1024,
+            quantized: true,
+            pq_block: 8,
+        }];
+        let bits = param_bits(&params[0], Scheme::Pq { k: 256, int8_centroids: false });
+        assert_eq!(bits, 32 * 256 * 8 + 8 * (1 << 17));
+        // int8 centroids divide the codebook term by 4 (+64 qparams bits)
+        let bits8 = param_bits(&params[0], Scheme::Pq { k: 256, int8_centroids: true });
+        assert_eq!(bits8, 8 * 256 * 8 + 8 * (1 << 17) + 64);
+    }
+
+    #[test]
+    fn pq_compression_near_30x_for_d8_k256() {
+        // per-weight cost: 8 bits per 8-weight subvector = 1 bit/weight
+        // (+ codebook amortized) ⇒ ratio just under 32×
+        let params = vec![ParamInfo {
+            name: "w".into(),
+            numel: 1 << 22,
+            rows: 2048,
+            cols: 2048,
+            quantized: true,
+            pq_block: 8,
+        }];
+        let r = compression_ratio(&params, Scheme::Pq { k: 256, int8_centroids: false });
+        assert!(r > 28.0 && r < 32.0, "{r}");
+    }
+
+    #[test]
+    fn unquantized_params_always_fp32() {
+        let p = ParamInfo {
+            name: "ln".into(),
+            numel: 100,
+            rows: 1,
+            cols: 100,
+            quantized: false,
+            pq_block: 8,
+        };
+        assert_eq!(param_bits(&p, Scheme::Int { bits: 4 }), 3200);
+        assert_eq!(param_bits(&p, Scheme::Pq { k: 256, int8_centroids: true }), 3200);
+    }
+
+    #[test]
+    fn sharing_mask_halves_shared_layers() {
+        let params = inv();
+        let all = model_bytes_with_mask(&params, Scheme::Fp32, &[true, true]);
+        let masked = model_bytes_with_mask(&params, Scheme::Fp32, &[false, true]);
+        assert_eq!(all - masked, 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn activation_term() {
+        assert_eq!(activation_bits(1024, true), 8 * 1024);
+        assert_eq!(activation_bits(1024, false), 32 * 1024);
+    }
+}

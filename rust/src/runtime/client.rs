@@ -1,0 +1,79 @@
+//! PJRT client wrapper: loads HLO-text artifacts, compiles them (with a
+//! per-path cache), and owns the device handle. The pattern follows
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn compile(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    // ------------------------------------------------ host ⇄ device ---
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+
+    pub fn scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&[v], &[])
+    }
+
+    pub fn scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.upload_i32(&[v], &[])
+    }
+}
+
+/// Download a tuple-output execution result as a vector of f32 vectors
+/// (one per tuple element). All our artifacts return flat f32 tuples.
+pub fn tuple_to_f32(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+    let buf = &result[0][0];
+    let lit = buf.to_literal_sync().context("downloading result")?;
+    let parts = lit.to_tuple().context("decomposing result tuple")?;
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().context("tuple element to f32"))
+        .collect()
+}

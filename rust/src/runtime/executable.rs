@@ -1,0 +1,188 @@
+//! Typed model session over the AOT artifacts.
+//!
+//! Owns persistent device buffers for params and hat tensors so the
+//! training hot loop only uploads what changed each step (L3 perf
+//! plan, DESIGN.md §7): tokens/targets/scalars are tiny, grads come
+//! back in one tuple download.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::model::tensor::Tensor;
+use crate::runtime::client::{tuple_to_f32, Runtime};
+use crate::runtime::manifest::Manifest;
+
+/// Batch input: LM/CLS feed i32 tokens, IMG feeds f32 pixels.
+pub enum BatchInput<'a> {
+    Tokens(&'a [i32]),
+    Images(&'a [f32]),
+}
+
+pub struct ModelSession<'rt> {
+    rt: &'rt Runtime,
+    pub meta: ModelMeta,
+    manifest: Manifest,
+    exes: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    hat_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl<'rt> ModelSession<'rt> {
+    /// Create a session: loads the init params from the artifact dir,
+    /// uploads them, and zero-fills the hat buffers (φ_proxy default).
+    pub fn new(rt: &'rt Runtime, manifest: &Manifest, model: &str) -> Result<(ModelSession<'rt>, ParamStore)> {
+        let meta = manifest.model(model)?.clone();
+        let params = ParamStore::load_qnp1(&manifest.init_path(&meta))
+            .context("loading init params")?;
+        params.check_against(&meta)?;
+        let mut session = ModelSession {
+            rt,
+            meta,
+            manifest: manifest.clone(),
+            exes: HashMap::new(),
+            param_bufs: Vec::new(),
+            hat_bufs: Vec::new(),
+        };
+        session.upload_all_params(&params)?;
+        session.zero_hats()?;
+        Ok((session, params))
+    }
+
+    fn exe(&mut self, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.get(entry) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(&self.meta, entry)?;
+        let e = self.rt.compile(&path)?;
+        self.exes.insert(entry.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Eagerly compile an entry (so timing loops exclude compile cost).
+    pub fn warmup(&mut self, entry: &str) -> Result<()> {
+        self.exe(entry).map(|_| ())
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.meta.entry(entry).is_some()
+    }
+
+    // ------------------------------------------------ param buffers ---
+
+    pub fn upload_all_params(&mut self, params: &ParamStore) -> Result<()> {
+        params.check_against(&self.meta)?;
+        self.param_bufs.clear();
+        for (_, t) in params.iter() {
+            self.param_bufs.push(self.rt.upload_f32(&t.data, &t.shape)?);
+        }
+        Ok(())
+    }
+
+    /// Re-upload a single parameter (by manifest index).
+    pub fn upload_param(&mut self, idx: usize, t: &Tensor) -> Result<()> {
+        anyhow::ensure!(t.shape == self.meta.params[idx].shape, "shape mismatch");
+        self.param_bufs[idx] = self.rt.upload_f32(&t.data, &t.shape)?;
+        Ok(())
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.meta.params.iter().position(|p| p.name == name)
+    }
+
+    /// Zero all hat buffers (φ_proxy / no-noise configuration).
+    pub fn zero_hats(&mut self) -> Result<()> {
+        self.hat_bufs.clear();
+        for p in &self.meta.params {
+            let zeros = vec![0.0f32; p.numel()];
+            self.hat_bufs.push(self.rt.upload_f32(&zeros, &p.shape)?);
+        }
+        Ok(())
+    }
+
+    /// Upload one hat tensor (exact-PQ / mean-subvector noise images).
+    pub fn upload_hat(&mut self, idx: usize, data: &[f32]) -> Result<()> {
+        let p = &self.meta.params[idx];
+        anyhow::ensure!(data.len() == p.numel(), "hat size mismatch for {}", p.name);
+        self.hat_bufs[idx] = self.rt.upload_f32(data, &p.shape)?;
+        Ok(())
+    }
+
+    fn upload_batch(&self, input: &BatchInput) -> Result<xla::PjRtBuffer> {
+        match input {
+            BatchInput::Tokens(t) => self.rt.upload_i32(t, &self.meta.tokens_shape),
+            BatchInput::Images(x) => self.rt.upload_f32(x, &self.meta.tokens_shape),
+        }
+    }
+
+    // ------------------------------------------------------- running ---
+
+    /// One gradient step through a grad entry:
+    /// returns (mean loss, grads in manifest order).
+    pub fn grad(
+        &mut self,
+        entry: &str,
+        input: &BatchInput,
+        targets: &[i32],
+        layer_keep: &[f32],
+        rate: f32,
+        seed: i32,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let exe = self.exe(entry)?;
+        let n = self.meta.params.len();
+        anyhow::ensure!(layer_keep.len() == self.meta.n_layers, "layer_keep len");
+        let batch_buf = self.upload_batch(input)?;
+        let targets_buf = self.rt.upload_i32(targets, &self.meta.targets_shape)?;
+        let keep_buf = self.rt.upload_f32(layer_keep, &[layer_keep.len()])?;
+        let rate_buf = self.rt.scalar_f32(rate)?;
+        let seed_buf = self.rt.scalar_i32(seed)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 * n + 5);
+        args.extend(self.param_bufs.iter());
+        args.extend(self.hat_bufs.iter());
+        args.push(&batch_buf);
+        args.push(&targets_buf);
+        args.push(&keep_buf);
+        args.push(&rate_buf);
+        args.push(&seed_buf);
+
+        let out = exe.execute_b(&args).with_context(|| format!("executing {entry}"))?;
+        let parts = tuple_to_f32(out)?;
+        anyhow::ensure!(parts.len() == n + 1, "grad output arity {}", parts.len());
+        let loss = parts[0][0];
+        let grads = parts[1..]
+            .iter()
+            .zip(&self.meta.params)
+            .map(|(data, p)| Tensor::from_vec(&p.shape, data.clone()))
+            .collect();
+        Ok((loss, grads))
+    }
+
+    /// Evaluation pass: returns (sum_nll, sum_correct) over the batch.
+    pub fn eval(
+        &mut self,
+        entry: &str,
+        input: &BatchInput,
+        targets: &[i32],
+        layer_keep: &[f32],
+    ) -> Result<(f64, f64)> {
+        let exe = self.exe(entry)?;
+        let batch_buf = self.upload_batch(input)?;
+        let targets_buf = self.rt.upload_i32(targets, &self.meta.targets_shape)?;
+        let keep_buf = self.rt.upload_f32(layer_keep, &[layer_keep.len()])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 3);
+        args.extend(self.param_bufs.iter());
+        args.push(&batch_buf);
+        args.push(&targets_buf);
+        args.push(&keep_buf);
+
+        let out = exe.execute_b(&args).with_context(|| format!("executing {entry}"))?;
+        let parts = tuple_to_f32(out)?;
+        anyhow::ensure!(parts.len() == 2, "eval output arity {}", parts.len());
+        Ok((parts[0][0] as f64, parts[1][0] as f64))
+    }
+}

@@ -1,0 +1,91 @@
+//! Loads `artifacts/manifest.json` — the contract between the AOT
+//! exporter and the Rust runtime (entry points, input orders, parameter
+//! inventory, init file).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelMeta;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (name, mj) in obj {
+                let meta = ModelMeta::from_json(name, mj)
+                    .with_context(|| format!("parsing model {name}"))?;
+                models.insert(name.clone(), meta);
+            }
+        }
+        anyhow::ensure!(!models.is_empty(), "manifest has no models");
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, meta: &ModelMeta, entry: &str) -> Result<PathBuf> {
+        let e = meta
+            .entry(entry)
+            .with_context(|| format!("model {} has no entry '{entry}'", meta.name))?;
+        Ok(self.dir.join(&e.file))
+    }
+
+    pub fn init_path(&self, meta: &ModelMeta) -> PathBuf {
+        self.dir.join(&meta.init_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::temp_dir;
+
+    #[test]
+    fn load_rejects_missing() {
+        let dir = temp_dir("man");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_minimal() {
+        let dir = temp_dir("man2");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "models": {"m": {
+                "task": "lm", "n_layers": 1, "batch": 2, "seq_len": 4,
+                "tokens_shape": [2,4], "targets_shape": [2,4],
+                "vocab": 10, "n_classes": 0, "init": "m.init.bin",
+                "params": [], "entries": {"eval": {"file": "m.eval.hlo.txt",
+                    "inputs": ["tokens"], "outputs": ["sum_nll"]}}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let meta = m.model("m").unwrap();
+        assert_eq!(meta.task, "lm");
+        assert!(m.hlo_path(meta, "eval").unwrap().ends_with("m.eval.hlo.txt"));
+        assert!(m.hlo_path(meta, "nope").is_err());
+        assert!(m.model("other").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,6 @@
+//! PJRT runtime: manifest loading, HLO-text compilation (pattern from
+//! /opt/xla-example/load_hlo), and typed grad/eval sessions with
+//! persistent device buffers.
+pub mod client;
+pub mod executable;
+pub mod manifest;

@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Warmup + timed iterations with robust statistics (median, mean, p10,
+//! p90, std); auto-scales the iteration count to a time budget the way
+//! criterion does. `cargo bench` targets use this via `harness = false`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            format!("±{}", fmt_ns(self.std_ns)),
+            format!("p10={}", fmt_ns(self.p10_ns)),
+            format!("p90={}", fmt_ns(self.p90_ns)),
+            self.iters,
+        )
+    }
+
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            ..Default::default()
+        }
+    }
+
+    /// Run `f` repeatedly, print and record stats. The closure should
+    /// return something to keep the optimizer honest (it is black-boxed).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // warmup & calibration
+        let wstart = Instant::now();
+        let mut wcount = 0usize;
+        while wstart.elapsed() < self.warmup || wcount < 2 {
+            std::hint::black_box(f());
+            wcount += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wcount as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let std = (samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64)
+            .sqrt();
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            std_ns: std,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    pub fn find(&self, name: &str) -> Option<&BenchStats> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let s = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut b = Bencher::quick();
+        b.budget = Duration::from_millis(10);
+        b.warmup = Duration::from_millis(2);
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,210 @@
+//! Tiny declarative CLI argument parser (clap is not in the offline
+//! registry). Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+    pub fn num_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.parse_num(name).unwrap_or(default)
+    }
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false, required: false });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &str,
+        help: &'static str,
+    ) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "options:");
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let req = if spec.required { " (required)" } else { "" };
+            let _ = writeln!(s, "  --{}{kind}\t{}{def}{req}", spec.name, spec.help);
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                out.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} is a flag, no value allowed"));
+                    }
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    out.values.insert(name.to_string(), v);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if spec.required && !out.values.contains_key(spec.name) {
+                return Err(format!("missing required --{}\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .req("model", "model name")
+            .opt_default("steps", "100", "steps")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--model", "lm", "--steps=50", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("lm"));
+        assert_eq!(a.num_or::<usize>("steps", 0), 50);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--model", "x"])).unwrap();
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&argv(&["--steps", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&argv(&["--model", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cmd().parse(&argv(&["--model", "x", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("--model"));
+        assert!(e.contains("--steps"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline-substrate utilities: JSON, CLI, RNG, logging, benchmarking,
+//! property testing (the image's crate registry only vendors the xla
+//! closure, so these replace serde/clap/rand/env_logger/criterion/proptest).
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod testing;

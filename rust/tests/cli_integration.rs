@@ -1,0 +1,62 @@
+//! CLI smoke tests: run the qn binary's cheap subcommands end-to-end.
+//! (Training subcommands are covered by trainer_integration; here we
+//! check the binary wiring, help paths and info output.)
+
+use std::process::Command;
+
+fn qn() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_qn"))
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = qn().output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    for sub in ["info", "train", "quantize", "eval", "e2e", "bench"] {
+        assert!(text.contains(sub), "missing {sub} in help: {text}");
+    }
+    assert!(out.status.success());
+}
+
+#[test]
+fn unknown_option_fails_with_usage() {
+    let out = qn().args(["train", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn info_prints_models_and_entries() {
+    if !artifacts_present() {
+        eprintln!("SKIP cli info test");
+        return;
+    }
+    let out = qn()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["info"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("lm_tiny"));
+    assert!(text.contains("grad_mix"));
+    assert!(text.contains("eval"));
+}
+
+#[test]
+fn bench_rejects_unknown_experiment() {
+    if !artifacts_present() {
+        return;
+    }
+    let out = qn()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["bench", "--exp", "table99"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

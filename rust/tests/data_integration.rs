@@ -1,0 +1,55 @@
+//! Data pipeline integration: corpus → batcher → (shapes, coverage,
+//! vocabulary bounds) as the trainer consumes them.
+
+use quant_noise::data::batcher::{EpochBatcher, LmBatcher};
+use quant_noise::data::corpus::{make_cls_dataset, make_img_dataset, MarkovCorpus};
+
+#[test]
+fn lm_corpus_through_batcher() {
+    let c = MarkovCorpus::generate(512, 100_000, 1);
+    let mut b = LmBatcher::new(&c.tokens, 8, 64);
+    for _ in 0..b.batches_per_epoch().min(50) {
+        let batch = b.next();
+        assert_eq!(batch.tokens.len(), 8 * 64);
+        assert!(batch.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(batch.targets.iter().all(|&t| (0..512).contains(&t)));
+    }
+}
+
+#[test]
+fn train_eval_split_has_no_overlap() {
+    let c = MarkovCorpus::generate(64, 10_000, 2);
+    let split = c.tokens.len() * 9 / 10;
+    let (train, eval) = c.tokens.split_at(split);
+    assert_eq!(train.len() + eval.len(), c.tokens.len());
+    // different stream positions: the eval tail differs from train head
+    assert_ne!(&train[..100], &eval[..100]);
+}
+
+#[test]
+fn cls_batches_align_tokens_with_labels() {
+    let (tokens, labels) = make_cls_dataset(200, 32, 256, 4, 3);
+    let b = EpochBatcher::new(tokens.clone(), labels.clone(), 32, 10, 1);
+    let (ex, lb) = b.eval_batch(2);
+    assert_eq!(ex.len(), 10 * 32);
+    // eval batch i is examples [i*10, (i+1)*10)
+    assert_eq!(lb, labels[20..30].to_vec());
+    assert_eq!(&ex[..32], &tokens[20 * 32..21 * 32]);
+}
+
+#[test]
+fn img_batcher_shapes_for_model_input() {
+    let (px, labels) = make_img_dataset(100, 16, 3, 5);
+    let mut b = EpochBatcher::new(px, labels, 16 * 16 * 3, 32, 2);
+    let (ex, lb) = b.next();
+    assert_eq!(ex.len(), 32 * 16 * 16 * 3); // (B,H,W,C) flat
+    assert_eq!(lb.len(), 32);
+}
+
+#[test]
+fn corpus_statistics_stable_across_sizes() {
+    // entropy estimates shouldn't swing wildly with corpus length
+    let small = MarkovCorpus::generate(128, 50_000, 9).unigram_entropy();
+    let large = MarkovCorpus::generate(128, 200_000, 9).unigram_entropy();
+    assert!((small - large).abs() < 0.2, "{small} vs {large}");
+}

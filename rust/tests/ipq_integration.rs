@@ -1,0 +1,71 @@
+//! iPQ pipeline integration: quantization + Eq. (4) finetuning improves
+//! on one-shot PQ; int8-centroid combo sizes check out. Skipped when
+//! artifacts are missing.
+
+use std::path::Path;
+
+use quant_noise::bench_harness::specs::{base_ipq, base_train, with_noise};
+use quant_noise::coordinator::evaluator::{evaluate, lm_eval_batches};
+use quant_noise::coordinator::ipq::{post_pq, run_ipq};
+use quant_noise::coordinator::trainer::{LmSource, Trainer};
+use quant_noise::data::batcher::LmBatcher;
+use quant_noise::data::corpus::MarkovCorpus;
+use quant_noise::quant::noise::NoiseKind;
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::ModelSession;
+use quant_noise::runtime::manifest::Manifest;
+
+#[test]
+fn ipq_finetune_beats_oneshot_pq() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(man) = Manifest::load(&dir) else {
+        eprintln!("SKIP ipq_integration");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, init) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let corpus = MarkovCorpus::generate(meta.vocab, 120_000, 21);
+    let split = corpus.tokens.len() * 9 / 10;
+    let mut src = LmSource {
+        batcher: LmBatcher::new(&corpus.tokens[..split], meta.batch, meta.seq_len),
+    };
+    let evalb = lm_eval_batches(&corpus.tokens[split..], meta.batch, meta.seq_len, 6);
+    let keep = vec![1.0f32; meta.n_layers];
+
+    // quick training so quantization has something to lose
+    let mut tcfg = with_noise(base_train("lm", 60), NoiseKind::Proxy, 0.1);
+    tcfg.log_every = 1000;
+    let mut tr = Trainer::new(&mut sess, init, tcfg);
+    tr.train(&mut src).unwrap();
+    let trained = tr.into_params();
+
+    // one-shot PQ
+    let mut cfg = base_ipq(10);
+    cfg.k = 32;
+    let oneshot = post_pq(&trained, &meta, &cfg).unwrap();
+    sess.upload_all_params(&oneshot.store).unwrap();
+    let ev_one = evaluate(&mut sess, "eval", &evalb, &keep).unwrap();
+
+    // iPQ with Eq. 4 finetuning
+    sess.upload_all_params(&trained).unwrap();
+    sess.zero_hats().unwrap();
+    let (ipq, report) = run_ipq(&mut sess, &trained, &mut src, &cfg).unwrap();
+    sess.upload_all_params(&ipq.store).unwrap();
+    let ev_ipq = evaluate(&mut sess, "eval", &evalb, &keep).unwrap();
+
+    // same storage, finetuned should not be (much) worse
+    assert_eq!(oneshot.bytes, ipq.bytes);
+    assert!(
+        ev_ipq.nll <= ev_one.nll * 1.02,
+        "iPQ {:.4} should beat/match one-shot {:.4}",
+        ev_ipq.nll,
+        ev_one.nll
+    );
+    assert_eq!(report.group_losses.len(), 3); // ffn, emb, attn groups
+
+    // fp32 eval must be better than both (quantization costs something)
+    sess.upload_all_params(&trained).unwrap();
+    let ev_fp = evaluate(&mut sess, "eval", &evalb, &keep).unwrap();
+    assert!(ev_fp.nll <= ev_ipq.nll + 1e-6);
+}

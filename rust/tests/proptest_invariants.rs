@@ -1,0 +1,187 @@
+//! Property-based invariants over the coordinator substrate (in-repo
+//! prop_check runner; proptest is not in the offline registry). Each
+//! property runs over 100+ seeded cases with ramped sizes.
+
+use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
+use quant_noise::quant::pq::{fit, mean_subvector_hat, PqConfig};
+use quant_noise::quant::prune::{every_other_chunk_mask, flops_fraction, share_map, stored_layers};
+use quant_noise::quant::scalar::{quant_mse, QParams};
+use quant_noise::quant::size::{param_bits, ParamInfo, Scheme};
+use quant_noise::util::rng::Pcg;
+use quant_noise::util::testing::{gen_dim, prop_check, PropConfig, Size};
+
+fn gen_weights(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() * (1.0 + rng.next_f32())).collect()
+}
+
+#[test]
+fn prop_scalar_roundtrip_error_bound() {
+    prop_check("scalar bound", PropConfig::default(), |rng, size| {
+        let n = (gen_dim(rng, size) * 8).max(8);
+        let w = gen_weights(rng, n);
+        for bits in [2u8, 4, 8] {
+            let qp = QParams::from_minmax(&w, bits);
+            for &x in &w {
+                let err = (x - qp.roundtrip_one(x)).abs();
+                if err > qp.scale / 2.0 + 1e-4 {
+                    return Err(format!("bits {bits}: err {err} > s/2 {}", qp.scale / 2.0));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scalar_mse_monotone_in_bits() {
+    prop_check("mse monotone", PropConfig { cases: 64, ..Default::default() }, |rng, size| {
+        let n = (gen_dim(rng, size) * 16).max(32);
+        let w = gen_weights(rng, n);
+        let mut last = f64::INFINITY;
+        for bits in [2u8, 4, 6, 8] {
+            let qp = QParams::from_minmax(&w, bits);
+            let mse = quant_mse(&w, &qp);
+            if mse > last + 1e-9 {
+                return Err(format!("mse not monotone at {bits} bits: {mse} > {last}"));
+            }
+            last = mse;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmeans_objective_nonincreasing_and_assignments_valid() {
+    prop_check("kmeans", PropConfig { cases: 40, ..Default::default() }, |rng, size| {
+        let d = [2usize, 4, 8][rng.below(3) as usize];
+        let n = (gen_dim(rng, size) + 2) * 8;
+        let pts = gen_weights(rng, n * d);
+        let k = 1 + rng.below(16) as usize;
+        let r = kmeans(&pts, d, &KmeansConfig { k, max_iters: 6, tol: 0.0, threads: 2 }, rng);
+        for w in r.objective_history.windows(2) {
+            if w[1] > w[0] * (1.0 + 1e-5) + 1e-9 {
+                return Err(format!("objective increased: {:?}", r.objective_history));
+            }
+        }
+        if !r.assignments.iter().all(|&a| (a as usize) < r.k) {
+            return Err("assignment out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pq_decode_error_le_variance() {
+    // PQ with k-means can never be worse than assigning everything to
+    // the mean (within slack): ‖W−Ŵ‖² ≤ Σ‖w−mean‖² · (1+ε)
+    prop_check("pq vs mean", PropConfig { cases: 30, ..Default::default() }, |rng, size| {
+        let rows = (gen_dim(rng, size) + 1) * 4;
+        let cols = 16;
+        let w = gen_weights(rng, rows * cols);
+        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 6 };
+        let m = fit(&w, rows, cols, &cfg, rng);
+        let err = m.objective(&w);
+        let mean = w.iter().sum::<f32>() / w.len() as f32;
+        let var: f64 = w.iter().map(|&x| ((x - mean) as f64).powi(2)).sum();
+        if err > var * 1.01 + 1e-6 {
+            return Err(format!("pq err {err} > total variance {var}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mean_hat_preserves_subvector_means() {
+    prop_check("mean hat", PropConfig { cases: 60, ..Default::default() }, |rng, size| {
+        let rows = gen_dim(rng, size).max(1);
+        let d = [2usize, 4, 8][rng.below(3) as usize];
+        let cols = d * (1 + rng.below(6) as usize);
+        let w = gen_weights(rng, rows * cols);
+        let hat = mean_subvector_hat(&w, rows, cols, d);
+        for s in 0..w.len() / d {
+            let m_orig: f32 = w[s * d..(s + 1) * d].iter().sum::<f32>() / d as f32;
+            let m_hat: f32 = hat[s * d..(s + 1) * d].iter().sum::<f32>() / d as f32;
+            if (m_orig - m_hat).abs() > 1e-4 * (1.0 + m_orig.abs()) {
+                return Err(format!("subvector {s}: mean {m_orig} vs {m_hat}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharing_pruning_composition() {
+    prop_check("share/prune", PropConfig { cases: 100, ..Default::default() }, |rng, _| {
+        let n = 1 + rng.below(16) as usize;
+        let chunk = 1 + rng.below(3) as usize;
+        let map = share_map(n, chunk);
+        // canonical of canonical is itself; canonical ≤ layer
+        for l in 0..n {
+            if map[map[l]] != map[l] || map[l] > l {
+                return Err(format!("bad share map {map:?}"));
+            }
+        }
+        let keep = every_other_chunk_mask(n, chunk);
+        let stored = stored_layers(n, chunk, &keep);
+        // stored layers are exactly the kept canonical layers
+        for l in 0..n {
+            let expect = map[l] == l && keep[l] > 0.0;
+            if stored[l] != expect {
+                return Err(format!("stored {stored:?} keep {keep:?} map {map:?}"));
+            }
+        }
+        let f = flops_fraction(&keep);
+        if !(0.0..=1.0).contains(&f) {
+            return Err(format!("flops fraction {f}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_size_accounting_additive_and_positive() {
+    prop_check("size", PropConfig { cases: 80, ..Default::default() }, |rng, size| {
+        let rows = (gen_dim(rng, size) + 1) * 8;
+        let cols = 64;
+        let p = ParamInfo {
+            name: "w".into(),
+            numel: rows * cols,
+            rows,
+            cols,
+            quantized: true,
+            pq_block: 8,
+        };
+        for scheme in [
+            Scheme::Fp32,
+            Scheme::Int { bits: 4 },
+            Scheme::Int { bits: 8 },
+            Scheme::Pq { k: 64, int8_centroids: false },
+            Scheme::Pq { k: 64, int8_centroids: true },
+        ] {
+            let bits = param_bits(&p, scheme);
+            if bits == 0 {
+                return Err(format!("zero bits under {scheme:?}"));
+            }
+            if bits > 32 * p.numel as u64 && !matches!(scheme, Scheme::Fp32) {
+                // compression never exceeds fp32 except tiny-matrix PQ
+                // codebook overhead, allowed only when numel is small
+                if p.numel > 64 * 8 * 4 {
+                    return Err(format!("{scheme:?} bigger than fp32 on large matrix"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pcg_below_is_in_range() {
+    prop_check("pcg below", PropConfig { cases: 200, ..Default::default() }, |rng, _| {
+        let n = 1 + rng.below(1000);
+        let x = rng.below(n);
+        if x >= n {
+            return Err(format!("below({n}) returned {x}"));
+        }
+        Ok(())
+    });
+}

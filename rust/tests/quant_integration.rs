@@ -1,0 +1,101 @@
+//! Cross-module quantization integration: PQ + codebooks + size
+//! accounting + observers working together on realistic weight shapes.
+
+use quant_noise::quant::codebook::Codebook;
+use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
+use quant_noise::quant::observer::{HistogramObserver, MinMaxObserver};
+use quant_noise::quant::pq::{encode, fit, PqConfig, PqMatrix};
+use quant_noise::quant::scalar::{quant_mse, QParams};
+use quant_noise::quant::size::{compression_ratio, ParamInfo, Scheme};
+use quant_noise::util::rng::Pcg;
+
+fn weight(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    let mut r = Pcg::new(seed);
+    (0..rows * cols).map(|_| r.next_normal() * 0.1).collect()
+}
+
+#[test]
+fn pq_pipeline_end_to_end() {
+    // fit → decode → re-encode must be stable (idempotent assignments)
+    let w = weight(1, 256, 128);
+    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 12 };
+    let m = fit(&w, 256, 128, &cfg, &mut Pcg::new(2));
+    let dec = m.decode();
+    let codes2 = encode(&dec, 256, 128, &m.codebook);
+    assert_eq!(m.codes, codes2, "decoded weights must re-encode to the same codes");
+}
+
+#[test]
+fn pq_then_int8_centroids_error_budget() {
+    // §3.3: int8 centroids add at most the int8 rounding error on top
+    let w = weight(3, 128, 64);
+    let cfg = PqConfig { block_size: 8, n_centroids: 32, kmeans_iters: 10 };
+    let mut m = fit(&w, 128, 64, &cfg, &mut Pcg::new(4));
+    let err_pq = m.objective(&w);
+    let cmse = m.codebook.compress_int8();
+    let err_combo = m.objective(&w);
+    // combined error bounded loosely: PQ error + 2*sqrt(pq*int8) + int8
+    let n = w.len() as f64;
+    let bound = (err_pq.sqrt() + (cmse * n).sqrt()).powi(2) + 1e-6;
+    assert!(err_combo <= bound, "{err_combo} > {bound}");
+}
+
+#[test]
+fn kmeans_objective_equals_pq_objective() {
+    let w = weight(5, 64, 64);
+    let mut rng = Pcg::new(6);
+    let km = kmeans(&w, 8, &KmeansConfig { k: 16, max_iters: 10, ..Default::default() }, &mut rng);
+    let m = PqMatrix {
+        codebook: Codebook::new(km.centroids.clone(), km.k, 8),
+        codes: km.assignments.clone(),
+        rows: 64,
+        cols: 64,
+    };
+    let last = *km.objective_history.last().unwrap();
+    let obj = m.objective(&w);
+    assert!((last - obj).abs() <= 1e-3 * last.max(1.0), "{last} vs {obj}");
+}
+
+#[test]
+fn observers_agree_on_clean_data() {
+    // without outliers the two observers should produce similar MSE
+    let w = weight(7, 64, 64);
+    let mut mm = MinMaxObserver::new();
+    mm.observe(&w);
+    let mut h = HistogramObserver::new(2048);
+    h.observe(&w);
+    let e_mm = quant_mse(&w, &mm.qparams(8));
+    let e_h = quant_mse(&w, &h.qparams(8));
+    assert!(e_h <= e_mm * 2.0, "{e_h} vs {e_mm}");
+}
+
+#[test]
+fn compression_ratios_ordering() {
+    // fp32 < int8 < int4 < PQ(d8,K64) compression on a realistic mix
+    let params: Vec<ParamInfo> = (0..10)
+        .map(|i| ParamInfo {
+            name: format!("w{i}"),
+            numel: 512 * 128,
+            rows: 512,
+            cols: 128,
+            quantized: i % 5 != 4, // some fp32 norms
+            pq_block: 8,
+        })
+        .collect();
+    let r8 = compression_ratio(&params, Scheme::Int { bits: 8 });
+    let r4 = compression_ratio(&params, Scheme::Int { bits: 4 });
+    let rpq = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: false });
+    let rpq8 = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: true });
+    assert!(1.0 < r8 && r8 < r4 && r4 < rpq && rpq < rpq8, "{r8} {r4} {rpq} {rpq8}");
+}
+
+#[test]
+fn qparams_roundtrip_stability_across_magnitudes() {
+    for scale in [1e-4f32, 1.0, 1e4] {
+        let w: Vec<f32> = weight(9, 32, 32).iter().map(|x| x * scale).collect();
+        let qp = QParams::from_minmax(&w, 8);
+        let mse = quant_mse(&w, &qp);
+        // error scales with the square of the range
+        assert!(mse.sqrt() <= (qp.scale / 2.0) as f64 + 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! Runtime integration: load real artifacts, run grad and eval steps,
+//! verify numerics make sense (finite loss near ln(vocab) at init,
+//! grads nonzero, QAT-vs-none noise behaviour, LayerDrop masks).
+//!
+//! Requires `make artifacts` to have produced artifacts/ — these tests
+//! are skipped (with a loud message) when artifacts are missing.
+
+use std::path::Path;
+
+use quant_noise::model::tensor::Tensor;
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
+use quant_noise::runtime::manifest::Manifest;
+
+fn artifacts() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_integration: {e}");
+            None
+        }
+    }
+}
+
+fn lm_batch(meta: &quant_noise::model::config::ModelMeta) -> (Vec<i32>, Vec<i32>) {
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i + 1) % meta.vocab) as i32).collect();
+    (tokens, targets)
+}
+
+#[test]
+fn lm_eval_loss_near_uniform_at_init() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    let (sum_nll, correct) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &targets, &keep)
+        .unwrap();
+    let ntok = sess.meta.eval_denominator() as f64;
+    let nll = sum_nll / ntok;
+    let uniform = (sess.meta.vocab as f64).ln();
+    assert!(
+        (nll - uniform).abs() < 1.0,
+        "init LM nll {nll} should be near ln(V) = {uniform}"
+    );
+    assert!(correct >= 0.0 && correct <= ntok);
+}
+
+#[test]
+fn lm_grad_step_produces_finite_grads() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    let (loss, grads) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.0, 1)
+        .unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert_eq!(grads.len(), params.len());
+    let mut nonzero = 0;
+    for g in &grads {
+        assert!(g.data.iter().all(|x| x.is_finite()));
+        if g.max_abs() > 0.0 {
+            nonzero += 1;
+        }
+    }
+    // every param should receive gradient signal at rate 0
+    assert!(nonzero as f64 > grads.len() as f64 * 0.9, "{nonzero}/{}", grads.len());
+}
+
+#[test]
+fn noise_rate_changes_loss() {
+    // At rate 1.0 with zero hats (proxy/QAT limit), all noised weights
+    // are zeroed in the forward: the loss must differ from rate 0.0,
+    // and be close to ln(V) (embedding zeroed ⇒ near-uniform logits).
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    let (l0, _) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.0, 7)
+        .unwrap();
+    let (l1, _) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 1.0, 7)
+        .unwrap();
+    assert!((l1 - l0).abs() > 1e-6, "rate must affect forward: {l0} vs {l1}");
+    let uniform = (sess.meta.vocab as f32).ln();
+    assert!((l1 - uniform).abs() < 0.2, "all-zero weights ⇒ uniform {l1} vs {uniform}");
+}
+
+#[test]
+fn grad_deterministic_given_seed() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    let (la, ga) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.5, 42)
+        .unwrap();
+    let (lb, gb) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.5, 42)
+        .unwrap();
+    assert_eq!(la, lb);
+    assert_eq!(ga[0].data, gb[0].data);
+    // different seed ⇒ different mask ⇒ different loss (w.h.p.)
+    let (lc, _) = sess
+        .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.5, 43)
+        .unwrap();
+    assert_ne!(la, lc);
+}
+
+#[test]
+fn layerdrop_mask_affects_loss() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let all = vec![1.0f32; sess.meta.n_layers];
+    let mut half = all.clone();
+    half[1] = 0.0;
+    let (s_all, _) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &targets, &all)
+        .unwrap();
+    let (s_half, _) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &targets, &half)
+        .unwrap();
+    assert_ne!(s_all, s_half);
+    assert!(s_half.is_finite());
+}
+
+#[test]
+fn int8_noise_entry_runs() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    // int8 QAT (rate 1.0) at init should stay near the fp32 loss —
+    // int8 rounding is mild (Table 1's int8 row barely degrades).
+    let (l_fp, _) = sess
+        .grad("grad_int8", &BatchInput::Tokens(&tokens), &targets, &keep, 0.0, 3)
+        .unwrap();
+    let (l_q, _) = sess
+        .grad("grad_int8", &BatchInput::Tokens(&tokens), &targets, &keep, 1.0, 3)
+        .unwrap();
+    assert!((l_fp - l_q).abs() < 0.1, "int8 QAT loss jump: {l_fp} vs {l_q}");
+}
+
+#[test]
+fn param_upload_changes_eval() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let (tokens, targets) = lm_batch(&sess.meta);
+    let keep = vec![1.0f32; sess.meta.n_layers];
+    let (before, _) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &targets, &keep)
+        .unwrap();
+    // zero the embedding
+    let idx = sess.param_index("embed").unwrap();
+    let zero = Tensor::zeros(&params.get("embed").unwrap().shape);
+    sess.upload_param(idx, &zero).unwrap();
+    let (after, _) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &targets, &keep)
+        .unwrap();
+    assert_ne!(before, after);
+    let ntok = sess.meta.eval_denominator() as f64;
+    let uniform = (sess.meta.vocab as f64).ln();
+    assert!((after / ntok - uniform).abs() < 0.05);
+}
+
+#[test]
+fn img_model_grad_and_eval() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "img_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let n_px: usize = meta.tokens_shape.iter().product();
+    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
+    let labels: Vec<i32> = (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let (loss, grads) = sess
+        .grad("grad_mix", &BatchInput::Images(&images), &labels, &keep, 0.1, 5)
+        .unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(grads.iter().any(|g| g.max_abs() > 0.0));
+    let (sum_nll, correct) = sess
+        .eval("eval", &BatchInput::Images(&images), &labels, &keep)
+        .unwrap();
+    let per = sum_nll / meta.batch as f64;
+    assert!((per - (meta.n_classes as f64).ln()).abs() < 1.0, "{per}");
+    assert!(correct <= meta.batch as f64);
+}
+
+#[test]
+fn cls_model_eval() {
+    let Some(man) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "cls_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % meta.vocab) as i32).collect();
+    let labels: Vec<i32> = (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let (sum_nll, _) = sess
+        .eval("eval", &BatchInput::Tokens(&tokens), &labels, &keep)
+        .unwrap();
+    let per = sum_nll / meta.batch as f64;
+    assert!((per - (meta.n_classes as f64).ln()).abs() < 0.5, "{per}");
+}

@@ -1,0 +1,93 @@
+//! Trainer integration against real artifacts: loss decreases under
+//! training, Quant-Noise overhead is bounded, sharing keeps siblings
+//! identical, LayerDrop runs. Skipped when artifacts are missing.
+
+use std::path::Path;
+
+use quant_noise::bench_harness::specs::{base_train, with_noise};
+use quant_noise::coordinator::trainer::{BatchSource, LmSource, Trainer};
+use quant_noise::data::batcher::LmBatcher;
+use quant_noise::data::corpus::MarkovCorpus;
+use quant_noise::quant::noise::NoiseKind;
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::ModelSession;
+use quant_noise::runtime::manifest::Manifest;
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some((Runtime::cpu().unwrap(), m)),
+        Err(e) => {
+            eprintln!("SKIP trainer_integration: {e}");
+            None
+        }
+    }
+}
+
+fn lm_source(meta: &quant_noise::model::config::ModelMeta) -> LmSource {
+    let corpus = MarkovCorpus::generate(meta.vocab, 60_000, 11);
+    LmSource { batcher: LmBatcher::new(&corpus.tokens, meta.batch, meta.seq_len) }
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let Some((rt, man)) = setup() else { return };
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let mut src = lm_source(&sess.meta.clone());
+    let mut cfg = with_noise(base_train("lm", 40), NoiseKind::Proxy, 0.1);
+    cfg.log_every = 1000;
+    let mut tr = Trainer::new(&mut sess, params, cfg);
+    let stats = tr.train(&mut src).unwrap();
+    let first = stats.history.first().unwrap().1;
+    assert!(
+        stats.final_loss < first * 0.8,
+        "loss should drop: {first} -> {}",
+        stats.final_loss
+    );
+}
+
+#[test]
+fn sharing_keeps_siblings_identical() {
+    let Some((rt, man)) = setup() else { return };
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let mut src = lm_source(&sess.meta.clone());
+    let mut cfg = with_noise(base_train("lm", 6), NoiseKind::None, 0.0);
+    cfg.share_chunk = 2;
+    cfg.log_every = 1000;
+    let mut tr = Trainer::new(&mut sess, params, cfg);
+    tr.train(&mut src).unwrap();
+    let p = tr.into_params();
+    // layers 0/1 and 2/3 are shared pairs
+    for (a, b) in [("layer00.w1", "layer01.w1"), ("layer02.wq", "layer03.wq")] {
+        assert_eq!(p.get(a).unwrap(), p.get(b).unwrap(), "{a} != {b}");
+    }
+    // canonical layers of different chunks must differ (they trained)
+    assert_ne!(p.get("layer00.w1").unwrap(), p.get("layer02.w1").unwrap());
+}
+
+#[test]
+fn layerdrop_training_runs_and_learns() {
+    let Some((rt, man)) = setup() else { return };
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let mut src = lm_source(&sess.meta.clone());
+    let mut cfg = with_noise(base_train("lm", 20), NoiseKind::Proxy, 0.1);
+    cfg.layerdrop = 0.5;
+    cfg.log_every = 1000;
+    let mut tr = Trainer::new(&mut sess, params, cfg);
+    let stats = tr.train(&mut src).unwrap();
+    assert!(stats.final_loss.is_finite());
+}
+
+#[test]
+fn exact_pq_noise_trains() {
+    let Some((rt, man)) = setup() else { return };
+    let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let mut src = lm_source(&sess.meta.clone());
+    let mut cfg = with_noise(base_train("lm", 10), NoiseKind::ExactPq, 0.3);
+    cfg.hat_refresh = 5;
+    cfg.pq_k = 16;
+    cfg.log_every = 1000;
+    let mut tr = Trainer::new(&mut sess, params, cfg);
+    let stats = tr.train(&mut src).unwrap();
+    assert!(stats.final_loss.is_finite());
+}

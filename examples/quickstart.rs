@@ -49,7 +49,7 @@ fn main() -> Result<()> {
     // Product-quantize one weight matrix (paper Eq. 1/3).
     let w: &Tensor = params.get("layer00.w1").unwrap();
     let (rows, cols) = w.view2d();
-    let pq = fit(&w.data, rows, cols, &PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 8 }, &mut Pcg::new(1));
+    let pq = fit(&w.data, rows, cols, &PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 8, threads: 0 }, &mut Pcg::new(1));
     let err = pq.objective(&w.data) / w.numel() as f64;
     println!(
         "PQ round-trip of layer00.w1: {} -> {} bits ({:.1}x), mse/elem {err:.5}",

@@ -1,9 +1,15 @@
 //! Component micro-benchmarks: k-means fit, PQ encode/decode, scalar
-//! round-trips, histogram observer, size accounting. Uses the in-repo
-//! bench harness (criterion is not in the offline registry).
+//! round-trips, histogram observer, size accounting, and the paper-
+//! scale nearest-codeword assignment engine (seed scalar loop vs the
+//! norm-decomposed parallel engine). Uses the in-repo bench harness
+//! (criterion is not in the offline registry).
+use std::time::Duration;
+
+use quant_noise::quant::assign;
+use quant_noise::quant::codebook::Codebook;
 use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
 use quant_noise::quant::observer::HistogramObserver;
-use quant_noise::quant::pq::{encode, fit, PqConfig};
+use quant_noise::quant::pq::{encode, encode_scalar, encode_with, fit, PqConfig};
 use quant_noise::quant::scalar::{self, QParams};
 use quant_noise::util::bench::Bencher;
 use quant_noise::util::rng::Pcg;
@@ -18,7 +24,7 @@ fn main() {
     b.bench("kmeans k=64 d=8 (8192 subvectors, 10 iters)", || {
         kmeans(&w, 8, &KmeansConfig { k: 64, max_iters: 10, ..Default::default() }, &mut Pcg::new(2))
     });
-    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 10 };
+    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 10, threads: 0 };
     let pq = fit(&w, 512, 128, &cfg, &mut Pcg::new(3));
     b.bench("pq encode (existing codebook)", || encode(&w, 512, 128, &pq.codebook));
     b.bench("pq decode", || pq.decode());
@@ -54,4 +60,38 @@ fn main() {
             quant_noise::quant::size::Scheme::Pq { k: 256, int8_centroids: false },
         )
     });
+
+    // ---- paper-scale encode: the hat-refresh / iPQ hot path ----------
+    // 1024×1024 weights, d=8, K=256 ⇒ 131072 subvectors × 256 codewords.
+    // The seed re-encoded this with a single-threaded scalar loop; the
+    // engine must win by ≥3× on a multi-core runner.
+    let (rows, cols, d, k) = (1024usize, 1024usize, 8usize, 256usize);
+    let mut rng = Pcg::new(42);
+    let big: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
+    let cb = Codebook::new((0..k * d).map(|_| rng.next_normal()).collect(), k, d);
+
+    // (field-by-field: `results` is private, so no struct literal here)
+    let mut be = Bencher::quick();
+    be.warmup = Duration::from_millis(100);
+    be.budget = Duration::from_millis(1500);
+    be.min_iters = 3;
+    println!("\n--- encode 1024x1024, d=8, K=256 ({} cores) ---", assign::default_threads());
+    let slow = be
+        .bench("encode: seed scalar loop (baseline)", || {
+            encode_scalar(&big, rows, cols, &cb)
+        })
+        .median_ns;
+    let one = be
+        .bench("encode: engine, 1 thread", || {
+            encode_with(&big, rows, cols, &cb, 1)
+        })
+        .median_ns;
+    let par = be
+        .bench("encode: engine, all cores", || encode(&big, rows, cols, &cb))
+        .median_ns;
+    println!(
+        "\nengine speedup vs seed scalar encode: {:.2}x single-thread, {:.2}x parallel",
+        slow / one,
+        slow / par
+    );
 }

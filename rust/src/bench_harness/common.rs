@@ -124,6 +124,10 @@ pub struct Lab<'rt> {
 /// final weights).
 fn train_key(model: &str, cfg: &TrainConfig) -> String {
     let mut h = DefaultHasher::new();
+    // algorithm-version salt: bump when the training algorithm changes
+    // output for identical configs (v2 = engine-based hat refresh with
+    // per-matrix split RNG streams), so stale caches never get served
+    "qn-train-v2".hash(&mut h);
     model.hash(&mut h);
     cfg.steps.hash(&mut h);
     cfg.noise.name().hash(&mut h);

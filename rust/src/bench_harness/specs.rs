@@ -48,6 +48,7 @@ pub fn base_train(task: &str, steps: usize) -> TrainConfig {
         share_chunk: 0,
         hat_refresh: 60,
         pq_k: 64,
+        threads: 0,
         seed: 42,
         log_every: 40,
     }

@@ -44,6 +44,8 @@ pub struct IpqConfig {
     pub int8_centroids: bool,
     /// per-structure PQ block-size override (Fig. 6b)
     pub block_override: BTreeMap<String, usize>,
+    /// worker threads for k-means/encode (0 ⇒ default)
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -58,6 +60,7 @@ impl Default for IpqConfig {
             order: vec!["ffn".into(), "emb".into(), "attn".into()],
             int8_centroids: false,
             block_override: BTreeMap::new(),
+            threads: 0,
             seed: 17,
         }
     }
@@ -155,6 +158,7 @@ pub fn run_ipq(
                 block_size: bs,
                 n_centroids: cfg.k,
                 kmeans_iters: cfg.kmeans_iters,
+                threads: cfg.threads,
             };
             let m = crate::quant::pq::fit(&work.get(name).unwrap().data, rows, cols, &pcfg, &mut rng);
             let dec = m.decode();
@@ -214,6 +218,7 @@ pub fn run_ipq(
         kmeans_iters: cfg.kmeans_iters,
         block_override: cfg.block_override.clone(),
         int8_centroids: cfg.int8_centroids,
+        threads: cfg.threads,
     };
     let bytes = crate::coordinator::quantize::scheme_bytes(&meta, &scheme);
     let sq_error: f64 = meta
@@ -249,6 +254,7 @@ pub fn post_pq(
         kmeans_iters: cfg.kmeans_iters,
         block_override: cfg.block_override.clone(),
         int8_centroids: cfg.int8_centroids,
+        threads: cfg.threads,
     };
     quantize_params(params, meta, &scheme, &mut Pcg::new(cfg.seed))
 }

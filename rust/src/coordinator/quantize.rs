@@ -42,6 +42,8 @@ pub enum WeightScheme {
         /// the manifest's per-param block size
         block_override: BTreeMap<String, usize>,
         int8_centroids: bool,
+        /// k-means/encode worker threads (0 ⇒ all cores)
+        threads: usize,
     },
 }
 
@@ -52,6 +54,7 @@ impl WeightScheme {
             kmeans_iters: 12,
             block_override: BTreeMap::new(),
             int8_centroids: false,
+            threads: 0,
         }
     }
 }
@@ -105,7 +108,7 @@ pub fn quantize_params(
                     scalar::roundtrip_per_channel(&mut data, rows, cols, *bits);
                 }
             },
-            WeightScheme::Pq { k, kmeans_iters, block_override, int8_centroids } => {
+            WeightScheme::Pq { k, kmeans_iters, block_override, int8_centroids, threads } => {
                 let bs = block_override
                     .get(&pm.structure)
                     .copied()
@@ -116,7 +119,12 @@ pub fn quantize_params(
                     "{}: cols {cols} not divisible by PQ block {bs}",
                     pm.name
                 );
-                let cfg = PqConfig { block_size: bs, n_centroids: *k, kmeans_iters: *kmeans_iters };
+                let cfg = PqConfig {
+                    block_size: bs,
+                    n_centroids: *k,
+                    kmeans_iters: *kmeans_iters,
+                    threads: *threads,
+                };
                 let mut m = fit(&data, rows, cols, &cfg, rng);
                 if *int8_centroids {
                     m.codebook.compress_int8();

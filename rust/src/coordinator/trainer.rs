@@ -12,9 +12,10 @@ use crate::coordinator::optim::{clip_grad_norm, Optimizer, Schedule};
 use crate::log_info;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
+use crate::quant::assign;
 use crate::quant::kmeans::{kmeans, KmeansConfig};
-use crate::quant::noise::{build_hat, NoiseKind};
-use crate::quant::pq::mean_subvector_hat;
+use crate::quant::noise::NoiseKind;
+use crate::quant::pq::{decode_codes_into, mean_subvector_hat};
 use crate::quant::codebook::Codebook;
 use crate::quant::prune::share_map;
 use crate::runtime::executable::{BatchInput, ModelSession};
@@ -71,6 +72,9 @@ pub struct TrainConfig {
     pub hat_refresh: usize,
     /// centroids for the exact-PQ noise codebooks
     pub pq_k: usize,
+    /// worker threads for the hat refresh / assignment engine
+    /// (0 ⇒ all available cores)
+    pub threads: usize,
     pub seed: u64,
     pub log_every: usize,
 }
@@ -89,6 +93,7 @@ impl Default for TrainConfig {
             share_chunk: 0,
             hat_refresh: 100,
             pq_k: 64,
+            threads: 0,
             seed: 0,
             log_every: 50,
         }
@@ -213,33 +218,125 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
     }
 
     /// Refresh hat tensors for the mix-noise family.
+    ///
+    /// Weight matrices are sharded across scoped workers so the per-
+    /// epoch exact-φ_PQ re-quantization scales with cores twice over:
+    /// across matrices here, and across subvectors inside each k-means
+    /// via the shared assignment engine. Every matrix draws its own RNG
+    /// stream split from the trainer RNG in manifest order, so the
+    /// result is deterministic and independent of scheduling.
     pub fn refresh_hats(&mut self) -> Result<()> {
         if !self.cfg.noise.needs_hat() {
             return Ok(()); // zero hats uploaded at session creation
         }
-        let metas = self.sess.meta.params.clone();
-        for (i, pm) in metas.iter().enumerate() {
+        struct HatJob {
+            idx: usize,
+            rows: usize,
+            cols: usize,
+            bs: usize,
+            rng: Pcg,
+        }
+        let needs_rng = self.cfg.noise == NoiseKind::ExactPq;
+        let mut jobs = Vec::new();
+        for (i, pm) in self.sess.meta.params.iter().enumerate() {
             if !pm.noised {
                 continue;
             }
             let (rows, cols) = pm.view.unwrap();
             let bs = pm.block_size.unwrap();
-            let w = &self.params.get(&pm.name).unwrap().data;
-            let hat = match self.cfg.noise {
-                NoiseKind::MeanSub => mean_subvector_hat(w, rows, cols, bs),
-                NoiseKind::ExactPq => {
-                    let km = kmeans(
-                        w,
-                        bs,
-                        &KmeansConfig { k: self.cfg.pq_k, max_iters: 6, ..Default::default() },
-                        &mut self.rng,
-                    );
-                    let cb = Codebook::new(km.centroids, km.k, bs);
-                    build_hat(NoiseKind::ExactPq, w, rows, cols, bs, Some(&cb))
-                }
-                _ => unreachable!(),
+            // mean-sub hats are RNG-free: don't burn trainer stream draws
+            let rng = if needs_rng { self.rng.split(i as u64) } else { Pcg::new(0) };
+            jobs.push(HatJob { idx: i, rows, cols, bs, rng });
+        }
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let noise = self.cfg.noise;
+        let pq_k = self.cfg.pq_k;
+        let total = assign::resolve_threads(self.cfg.threads);
+        let outer = total.clamp(1, jobs.len());
+        // Largest-first order groups similarly-sized matrices into the
+        // same wave so no worker idles at the join barrier behind one
+        // dominant matrix (ties keep manifest order; uploads are keyed
+        // by idx, and the per-matrix RNG streams were already split
+        // above, so scheduling order cannot change results).
+        jobs.sort_by_key(|j| std::cmp::Reverse(j.rows * j.cols));
+        // Waves of `outer` matrices: each wave computes in parallel (one
+        // worker per matrix) and uploads before the next wave starts, so
+        // peak extra memory is bounded by `outer` hats — not a full copy
+        // of every noised weight at once.
+        for wave in jobs.chunks_mut(outer) {
+            // Give each matrix inner k-means threads proportional to its
+            // share of the wave's work: a skewed wave hands the dominant
+            // matrix most of the machine instead of pinning it to one
+            // core while finished workers idle (engine codes are
+            // thread-count-invariant, so this cannot change results).
+            let wave_work: usize = wave.iter().map(|j| j.rows * j.cols).sum();
+            let wave_len = wave.len();
+            let wave_hats: Vec<(usize, Vec<f32>)> = {
+                let params = &self.params;
+                let metas = &self.sess.meta.params;
+                // allocate inner threads from a shared budget (largest
+                // job first) so Σinner ≤ total — proportional rounding
+                // alone can oversubscribe the machine
+                let mut budget = total;
+                let mut work_left = wave_work;
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = wave
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(pos, job)| {
+                            let work = job.rows * job.cols;
+                            let after = wave_len - 1 - pos;
+                            let cap = budget.saturating_sub(after).max(1);
+                            let prop = (budget as f64 * work as f64
+                                / work_left.max(1) as f64)
+                                .round() as usize;
+                            let inner = prop.clamp(1, cap);
+                            budget = budget.saturating_sub(inner);
+                            work_left = work_left.saturating_sub(work);
+                            s.spawn(move || {
+                                let w = &params.get(&metas[job.idx].name).unwrap().data;
+                                let hat = match noise {
+                                    NoiseKind::MeanSub => {
+                                        mean_subvector_hat(w, job.rows, job.cols, job.bs)
+                                    }
+                                    NoiseKind::ExactPq => {
+                                        let km = kmeans(
+                                            w,
+                                            job.bs,
+                                            &KmeansConfig {
+                                                k: pq_k,
+                                                max_iters: 6,
+                                                threads: inner,
+                                                ..Default::default()
+                                            },
+                                            &mut job.rng,
+                                        );
+                                        // k-means' final assignments come
+                                        // from the same engine kernel
+                                        // pq::encode uses, so decoding them
+                                        // directly is bit-identical to a
+                                        // re-encode — and skips the
+                                        // redundant O(n·K·d) pass.
+                                        let cb =
+                                            Codebook::new(km.centroids, km.k, job.bs);
+                                        let mut hat = vec![0.0f32; w.len()];
+                                        decode_codes_into(&cb, &km.assignments, &mut hat);
+                                        hat
+                                    }
+                                    _ => unreachable!(),
+                                };
+                                (job.idx, hat)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                })
             };
-            self.sess.upload_hat(i, &hat)?;
+            for (i, hat) in &wave_hats {
+                self.sess.upload_hat(*i, hat)?;
+            }
         }
         Ok(())
     }

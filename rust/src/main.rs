@@ -101,6 +101,7 @@ fn train(rest: &[String]) -> Result<()> {
         .opt("steps", "training steps (default: per-task)")
         .opt_default("layerdrop", "0", "LayerDrop probability")
         .opt_default("share", "0", "weight-sharing chunk (0=off)")
+        .opt_default("threads", "0", "hat-refresh / PQ worker threads (0=all cores)")
         .opt("save", "path to save trained params (QNP1)")
         .flag("ldste", "STE through LayerDrop (Table 11 ablation)");
     let args = parse(cmd, rest)?;
@@ -119,6 +120,7 @@ fn train(rest: &[String]) -> Result<()> {
     );
     cfg.layerdrop = args.num_or("layerdrop", 0.0);
     cfg.share_chunk = args.num_or("share", 0usize);
+    cfg.threads = args.num_or("threads", 0usize);
     cfg.ldste = args.flag("ldste");
 
     let params = lab.train_cached(&cfg)?;
@@ -145,6 +147,7 @@ fn quantize(rest: &[String]) -> Result<()> {
         .opt_default("scheme", "ipq", "ipq|pq|int8|int4")
         .opt_default("mode", "histogram", "intN observer: histogram|minmax|channel")
         .opt_default("k", "64", "PQ centroids")
+        .opt_default("threads", "0", "PQ/k-means worker threads (0=all cores)")
         .flag("int8-centroids", "compress PQ centroids to int8 (§3.3)")
         .opt("save", "path to save quantized (dequantized) params");
     let args = parse(cmd, rest)?;
@@ -170,8 +173,9 @@ fn quantize(rest: &[String]) -> Result<()> {
         }
         "pq" => {
             let mut s = WeightScheme::pq(k);
-            if let WeightScheme::Pq { int8_centroids, .. } = &mut s {
+            if let WeightScheme::Pq { int8_centroids, threads, .. } = &mut s {
                 *int8_centroids = args.flag("int8-centroids");
+                *threads = args.num_or("threads", 0usize);
             }
             let q = quantize_params(&params, &lab.sess.meta, &s, &mut Pcg::new(5))?;
             (q.store, q.bytes)
@@ -179,6 +183,7 @@ fn quantize(rest: &[String]) -> Result<()> {
         _ => {
             let mut cfg = IpqConfig { k, ..Default::default() };
             cfg.int8_centroids = args.flag("int8-centroids");
+            cfg.threads = args.num_or("threads", 0usize);
             cfg.finetune_steps = 25;
             lab.sess.upload_all_params(&params)?;
             let (q, _) = run_ipq(&mut lab.sess, &params, lab.train_src.as_mut(), &cfg)?;

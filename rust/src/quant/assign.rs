@@ -1,0 +1,385 @@
+//! Shared nearest-codeword assignment engine.
+//!
+//! Every nearest-codeword search in the repo — k-means Lloyd
+//! iterations, `pq::encode` re-encoding against an existing codebook
+//! (the exact-φ_PQ hat refresh and iPQ eval both live on it), and the
+//! `noise::build_hat` decode path — funnels through this module.
+//!
+//! The kernel uses the classic decomposition
+//!
+//! ```text
+//! argmin_j ‖p − c_j‖²  =  argmin_j ‖c_j‖² − 2⟨p, c_j⟩
+//! ```
+//!
+//! with per-codeword squared norms precomputed once per call, a blocked
+//! inner loop (each centroid row is streamed once per block of points),
+//! and points sharded across `std::thread::scope` workers.
+//!
+//! Determinism contract: `codes` and `dists` are computed per point by
+//! the same scalar kernel regardless of sharding, so they are
+//! bit-identical across thread counts (tested). The `objective` is a
+//! sum of per-shard partial sums and is only guaranteed identical for a
+//! fixed thread count.
+
+/// Points per block in the inner loop. Small enough that the per-point
+/// running best/argmin state stays in registers, large enough that each
+/// centroid row is reused across the whole block.
+const POINT_BLOCK: usize = 8;
+
+/// Result of one assignment pass.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// Nearest-codeword index per point (ties: lowest index wins).
+    pub codes: Vec<u32>,
+    /// Squared distance to the assigned codeword per point
+    /// (reconstructed as `‖c‖² − 2⟨p,c⟩ + ‖p‖²`, clamped at 0).
+    pub dists: Vec<f32>,
+    /// Sum of `dists` in f64.
+    pub objective: f64,
+}
+
+/// Default worker count (`0` in configs means "use this").
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map a configured thread count to an effective one (0 ⇒ default).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// Deterministic 4-way-unrolled dot product. One kernel shared by the
+/// parallel engine and the single-threaded reference so results match
+/// bit-for-bit.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let b = &b[..n];
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let n4 = n - n % 4;
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while i < n {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// Per-codeword squared norms ‖c_j‖², j = 0..k.
+pub fn sq_norms(centroids: &[f32], k: usize, d: usize) -> Vec<f32> {
+    (0..k)
+        .map(|j| {
+            let c = &centroids[j * d..(j + 1) * d];
+            dot(c, c)
+        })
+        .collect()
+}
+
+/// Scalar kernel over one shard of points. `dists`, when present, must
+/// be the same length as `codes`. Returns the shard's objective.
+fn assign_shard(
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    k: usize,
+    norms: &[f32],
+    codes: &mut [u32],
+    mut dists: Option<&mut [f32]>,
+) -> f64 {
+    let n = codes.len();
+    let mut objective = 0.0f64;
+    let mut base = 0;
+    while base < n {
+        let block = POINT_BLOCK.min(n - base);
+        let mut best = [f32::INFINITY; POINT_BLOCK];
+        let mut best_j = [0u32; POINT_BLOCK];
+        for j in 0..k {
+            let c = &centroids[j * d..(j + 1) * d];
+            let nj = norms[j];
+            for bi in 0..block {
+                let p = &points[(base + bi) * d..(base + bi + 1) * d];
+                let v = nj - 2.0 * dot(p, c);
+                if v < best[bi] {
+                    best[bi] = v;
+                    best_j[bi] = j as u32;
+                }
+            }
+        }
+        for bi in 0..block {
+            codes[base + bi] = best_j[bi];
+        }
+        if let Some(out) = dists.as_deref_mut() {
+            for bi in 0..block {
+                let p = &points[(base + bi) * d..(base + bi + 1) * d];
+                let dist = (best[bi] + dot(p, p)).max(0.0);
+                out[base + bi] = dist;
+                objective += dist as f64;
+            }
+        }
+        base += block;
+    }
+    objective
+}
+
+fn check_dims(points: &[f32], d: usize, centroids: &[f32], k: usize) -> usize {
+    assert!(d > 0, "assign: zero subvector length");
+    assert!(k > 0, "assign: empty codebook");
+    assert_eq!(points.len() % d, 0, "assign: points not a multiple of d");
+    assert_eq!(centroids.len(), k * d, "assign: centroid matrix shape");
+    points.len() / d
+}
+
+fn run_sharded(
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    k: usize,
+    threads: usize,
+    codes: &mut [u32],
+    dists: Option<&mut [f32]>,
+) -> f64 {
+    let n = codes.len();
+    let norms = sq_norms(centroids, k, d);
+    let threads = resolve_threads(threads).clamp(1, n.max(1));
+    if threads <= 1 || n < 2 * POINT_BLOCK {
+        return assign_shard(points, d, centroids, k, &norms, codes, dists);
+    }
+    // Shard on block boundaries so blocking never changes per-point
+    // results between thread counts (it cannot anyway — each point's
+    // comparisons are independent — but aligned shards also keep the
+    // work distribution even).
+    let blocks = n.div_ceil(POINT_BLOCK);
+    let chunk = blocks.div_ceil(threads).max(1) * POINT_BLOCK;
+    let norms_ref = &norms;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        match dists {
+            Some(dists) => {
+                for ((code_c, dist_c), pts_c) in codes
+                    .chunks_mut(chunk)
+                    .zip(dists.chunks_mut(chunk))
+                    .zip(points.chunks(chunk * d))
+                {
+                    handles.push(s.spawn(move || {
+                        assign_shard(pts_c, d, centroids, k, norms_ref, code_c, Some(dist_c))
+                    }));
+                }
+            }
+            None => {
+                for (code_c, pts_c) in codes.chunks_mut(chunk).zip(points.chunks(chunk * d)) {
+                    handles.push(s.spawn(move || {
+                        assign_shard(pts_c, d, centroids, k, norms_ref, code_c, None)
+                    }));
+                }
+            }
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
+/// Assign every point to its nearest codeword; returns codes, exact-ish
+/// squared distances and their sum. `threads == 0` uses the default.
+pub fn assign(points: &[f32], d: usize, centroids: &[f32], k: usize, threads: usize) -> Assignment {
+    let n = check_dims(points, d, centroids, k);
+    let mut codes = vec![0u32; n];
+    let mut dists = vec![0.0f32; n];
+    let objective = run_sharded(points, d, centroids, k, threads, &mut codes, Some(&mut dists));
+    Assignment { codes, dists, objective }
+}
+
+/// Codes-only variant for `pq::encode`-style callers: skips the ‖p‖²
+/// reconstruction work entirely.
+pub fn assign_codes(
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    k: usize,
+    threads: usize,
+) -> Vec<u32> {
+    let n = check_dims(points, d, centroids, k);
+    let mut codes = vec![0u32; n];
+    run_sharded(points, d, centroids, k, threads, &mut codes, None);
+    codes
+}
+
+/// Single-threaded reference: the exact same scalar kernel, no
+/// sharding. Tests assert the parallel paths match this bit-for-bit.
+pub fn assign_reference(points: &[f32], d: usize, centroids: &[f32], k: usize) -> Assignment {
+    let n = check_dims(points, d, centroids, k);
+    let norms = sq_norms(centroids, k, d);
+    let mut codes = vec![0u32; n];
+    let mut dists = vec![0.0f32; n];
+    let objective = assign_shard(points, d, centroids, k, &norms, &mut codes, Some(&mut dists));
+    Assignment { codes, dists, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randv(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Pcg::new(seed);
+        (0..n).map(|_| r.next_normal()).collect()
+    }
+
+    /// Plain O(n·K·d) dist2 loop — the semantic oracle.
+    fn naive(points: &[f32], d: usize, centroids: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        let n = points.len() / d;
+        let mut codes = vec![0u32; n];
+        let mut dists = vec![0.0f32; n];
+        for i in 0..n {
+            let p = &points[i * d..(i + 1) * d];
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..k {
+                let c = &centroids[j * d..(j + 1) * d];
+                let mut acc = 0.0f32;
+                for t in 0..d {
+                    let diff = p[t] - c[t];
+                    acc += diff * diff;
+                }
+                if acc < best {
+                    best = acc;
+                    best_j = j as u32;
+                }
+            }
+            codes[i] = best_j;
+            dists[i] = best;
+        }
+        (codes, dists)
+    }
+
+    #[test]
+    fn matches_reference_across_thread_counts() {
+        for (n, d, k) in [(3usize, 2usize, 5usize), (100, 8, 16), (257, 4, 3), (64, 8, 256)] {
+            let pts = randv(n as u64 + 1, n * d);
+            let cbs = randv(n as u64 + 100, k * d);
+            let reference = assign_reference(&pts, d, &cbs, k);
+            for threads in [1usize, 2, 3, 7, 64] {
+                let got = assign(&pts, d, &cbs, k, threads);
+                assert_eq!(got.codes, reference.codes, "n={n} d={d} k={k} t={threads}");
+                assert_eq!(got.dists, reference.dists, "n={n} d={d} k={k} t={threads}");
+                let codes_only = assign_codes(&pts, d, &cbs, k, threads);
+                assert_eq!(codes_only, reference.codes);
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_naive_dist2_up_to_ties() {
+        let (n, d, k) = (300usize, 8usize, 32usize);
+        let pts = randv(7, n * d);
+        let cbs = randv(8, k * d);
+        let got = assign(&pts, d, &cbs, k, 4);
+        let (ncodes, ndists) = naive(&pts, d, &cbs, k);
+        for i in 0..n {
+            if got.codes[i] != ncodes[i] {
+                // only acceptable on a numerical near-tie
+                let p = &pts[i * d..(i + 1) * d];
+                let c = &cbs[got.codes[i] as usize * d..][..d];
+                let dd: f32 = p.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                assert!(
+                    (dd - ndists[i]).abs() <= 1e-4 * (1.0 + ndists[i]),
+                    "point {i}: engine code {} (d²={dd}) vs naive {} (d²={})",
+                    got.codes[i],
+                    ncodes[i],
+                    ndists[i]
+                );
+            } else {
+                assert!((got.dists[i] - ndists[i]).abs() <= 1e-3 * (1.0 + ndists[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn well_separated_codebook_matches_naive_exactly() {
+        // Codewords on a coarse integer lattice, points jittered around
+        // them: every decision margin is O(1), far beyond fp noise, so
+        // the decomposed metric must reproduce naive dist2 exactly.
+        let d = 4;
+        let k = 16;
+        let mut rng = Pcg::new(3);
+        let centroids: Vec<f32> = (0..k * d)
+            .map(|i| (i / d) as f32 * 10.0 + (i % d) as f32)
+            .collect();
+        let pts: Vec<f32> = (0..200)
+            .flat_map(|i| {
+                let j = i % k;
+                let base = &centroids[j * d..(j + 1) * d];
+                let noise: Vec<f32> =
+                    (0..d).map(|t| base[t] + rng.next_normal() * 0.05).collect();
+                noise
+            })
+            .collect();
+        let got = assign(&pts, d, &centroids, k, 3);
+        let (ncodes, _) = naive(&pts, d, &centroids, k);
+        assert_eq!(got.codes, ncodes);
+    }
+
+    #[test]
+    fn ties_pick_lowest_index() {
+        // duplicate codewords: the first must win, like the scalar loops
+        let centroids = vec![1.0f32, 1.0, 1.0, 1.0, 5.0, 5.0];
+        let pts = vec![1.1f32, 0.9, 4.9, 5.2];
+        let a = assign(&pts, 2, &centroids, 3, 2);
+        assert_eq!(a.codes, vec![0, 2]);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // single point, k > n
+        let a = assign(&[0.5, 0.5], 2, &randv(1, 64 * 2), 64, 8);
+        assert_eq!(a.codes.len(), 1);
+        // n smaller than any thread count
+        let pts = randv(2, 3 * 4);
+        let r = assign_reference(&pts, 4, &randv(3, 2 * 4), 2);
+        let p = assign(&pts, 4, &randv(3, 2 * 4), 2, 32);
+        assert_eq!(r.codes, p.codes);
+        // d == 1
+        let a1 = assign(&[0.0, 0.9, 2.1], 1, &[0.0, 1.0, 2.0], 3, 2);
+        assert_eq!(a1.codes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dists_are_true_squared_distances() {
+        let pts = randv(11, 50 * 8);
+        let cbs = randv(12, 16 * 8);
+        let a = assign(&pts, 8, &cbs, 16, 2);
+        let mut sum = 0.0f64;
+        for i in 0..50 {
+            let p = &pts[i * 8..(i + 1) * 8];
+            let c = &cbs[a.codes[i] as usize * 8..][..8];
+            let exact: f32 = p.iter().zip(c).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!(
+                (a.dists[i] - exact).abs() <= 1e-3 * (1.0 + exact),
+                "point {i}: {} vs {exact}",
+                a.dists[i]
+            );
+            sum += a.dists[i] as f64;
+        }
+        assert!((a.objective - sum).abs() <= 1e-6 * sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_handles_all_lengths() {
+        for len in 0..12 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32 + 1.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 2.0 * i as f32 - 3.0).collect();
+            let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - expect).abs() < 1e-4, "len {len}");
+        }
+    }
+}

@@ -1,10 +1,13 @@
 //! k-means for PQ codebook learning (paper §3.2).
 //!
-//! k-means++ seeding, Lloyd iterations with multi-threaded assignment
-//! (std::thread scoped — rayon is not in the offline registry), and
-//! empty-cluster re-seeding to the points farthest from their centroid
-//! (the standard fix that keeps K codewords live at extreme K/n ratios).
+//! k-means++ seeding, Lloyd iterations whose assignment step runs on
+//! the shared [`crate::quant::assign`] engine (precomputed codeword
+//! norms, blocked inner loops, scoped-thread sharding — rayon is not in
+//! the offline registry), and empty-cluster re-seeding to the points
+//! farthest from their centroid (the standard fix that keeps K
+//! codewords live at extreme K/n ratios).
 
+use crate::quant::assign;
 use crate::util::rng::Pcg;
 
 #[derive(Debug, Clone)]
@@ -34,7 +37,8 @@ impl Default for KmeansConfig {
             k: 256,
             max_iters: 15,
             tol: 1e-5,
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            // 0 ⇒ resolved to all cores by the assign engine
+            threads: 0,
         }
     }
 }
@@ -49,51 +53,35 @@ fn dist2(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
-/// Assign each point to its nearest centroid; returns (assignments,
-/// per-point distances, total objective).
-fn assign(
+/// Assign each point to its nearest centroid via the shared engine;
+/// returns (assignments, per-point squared distances, total objective).
+///
+/// The engine only picks the argmin; distances and the objective are
+/// recomputed here with the exact `Σ(p−c)²` form in one sequential
+/// O(n·d) pass. Two reasons: the engine's decomposed reconstruction
+/// carries a cancellation error up to ~2⁻²⁴·‖p‖² that could mask tiny
+/// true decreases late in Lloyd iterations (breaking the documented
+/// non-increasing history), and the tol-based early stop must not
+/// depend on thread-count-sensitive partial-sum association — this
+/// way the whole trajectory is deterministic for a seed regardless of
+/// sharding.
+fn assign_step(
     points: &[f32],
-    n: usize,
     d: usize,
     centroids: &[f32],
     k: usize,
     threads: usize,
 ) -> (Vec<u32>, Vec<f32>, f64) {
-    let mut assignments = vec![0u32; n];
-    let mut dists = vec![0.0f32; n];
-    let chunk = n.div_ceil(threads.max(1)).max(1);
-    let obj: f64 = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (ci, (a_chunk, d_chunk)) in assignments
-            .chunks_mut(chunk)
-            .zip(dists.chunks_mut(chunk))
-            .enumerate()
-        {
-            let start = ci * chunk;
-            handles.push(s.spawn(move || {
-                let mut local_obj = 0.0f64;
-                for (i, (a, dist)) in a_chunk.iter_mut().zip(d_chunk.iter_mut()).enumerate() {
-                    let p = &points[(start + i) * d..(start + i + 1) * d];
-                    let mut best = f32::INFINITY;
-                    let mut best_j = 0u32;
-                    for j in 0..k {
-                        let c = &centroids[j * d..(j + 1) * d];
-                        let dd = dist2(p, c);
-                        if dd < best {
-                            best = dd;
-                            best_j = j as u32;
-                        }
-                    }
-                    *a = best_j;
-                    *dist = best;
-                    local_obj += best as f64;
-                }
-                local_obj
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).sum()
-    });
-    (assignments, dists, obj)
+    let codes = assign::assign_codes(points, d, centroids, k, threads);
+    let mut dists = vec![0.0f32; codes.len()];
+    let mut obj = 0.0f64;
+    for (i, (&code, dv)) in codes.iter().zip(dists.iter_mut()).enumerate() {
+        let p = &points[i * d..(i + 1) * d];
+        let c = &centroids[code as usize * d..(code as usize + 1) * d];
+        *dv = dist2(p, c);
+        obj += *dv as f64;
+    }
+    (codes, dists, obj)
 }
 
 /// k-means++ seeding.
@@ -160,7 +148,7 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig, rng: &mut Pcg) -> Km
     let mut assignments = Vec::new();
 
     for _ in 0..cfg.max_iters {
-        let (assign_now, dists, obj) = assign(points, n, d, &centroids, k, cfg.threads);
+        let (assign_now, dists, obj) = assign_step(points, d, &centroids, k, cfg.threads);
         assignments = assign_now;
         history.push(obj);
 
@@ -198,7 +186,7 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig, rng: &mut Pcg) -> Km
         last_obj = obj;
     }
     // final assignment against the last update
-    let (assignments_f, _d, obj) = assign(points, n, d, &centroids, k, cfg.threads);
+    let (assignments_f, _d, obj) = assign_step(points, d, &centroids, k, cfg.threads);
     history.push(obj);
     let _ = assignments;
     KmeansResult { centroids, k, d, assignments: assignments_f, objective_history: history }

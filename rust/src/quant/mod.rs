@@ -1,7 +1,9 @@
 //! Quantization substrate: scalar intN (§3.1), observers (§7.7),
-//! k-means + Product Quantization (§3.2), codebooks incl. the int8
+//! k-means + Product Quantization (§3.2) on the shared parallel
+//! nearest-codeword [`assign`] engine, codebooks incl. the int8
 //! combination (§3.3), model-size accounting (Eq. 5), LayerDrop pruning
 //! and weight sharing (§4.2/§7.9), and noise-kind plumbing (§4.2).
+pub mod assign;
 pub mod codebook;
 pub mod kmeans;
 pub mod noise;

@@ -87,9 +87,12 @@ pub fn build_hat(
         NoiseKind::ExactPq => {
             let cb = codebook.expect("ExactPq noise needs a codebook");
             assert_eq!(cb.d, block_size, "codebook dim mismatch");
+            // encode on the shared engine and decode straight into the
+            // hat buffer — no codebook clone, no temporary PqMatrix
             let codes = pq::encode(w, rows, cols, cb);
-            let m = pq::PqMatrix { codebook: cb.clone(), codes, rows, cols };
-            m.decode()
+            let mut hat = vec![0.0f32; w.len()];
+            pq::decode_codes_into(cb, &codes, &mut hat);
+            hat
         }
         _ => panic!("{kind:?} noise is computed in-graph; no host hat"),
     }
@@ -138,7 +141,7 @@ mod tests {
     fn exact_pq_hat_equals_decode() {
         let mut rng = Pcg::new(1);
         let w: Vec<f32> = (0..256).map(|_| rng.next_normal()).collect();
-        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 8 };
+        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 8, threads: 0 };
         let m = fit(&w, 16, 16, &cfg, &mut Pcg::new(2));
         let hat = build_hat(NoiseKind::ExactPq, &w, 16, 16, 8, Some(&m.codebook));
         assert_eq!(hat, m.decode());
@@ -148,5 +151,46 @@ mod tests {
     #[should_panic(expected = "in-graph")]
     fn int_kinds_have_no_host_hat() {
         build_hat(NoiseKind::Int8, &[0.0; 8], 1, 8, 8, None);
+    }
+
+    #[test]
+    fn exact_pq_hat_deterministic_for_fixed_seed() {
+        // fixed-seed regression: the hat refresh path must be
+        // byte-stable run to run (sharding must not leak into results)
+        let mut rng = Pcg::new(9);
+        let w: Vec<f32> = (0..32 * 32).map(|_| rng.next_normal()).collect();
+        let cfg = PqConfig { block_size: 8, n_centroids: 16, kmeans_iters: 6, threads: 0 };
+        let m = fit(&w, 32, 32, &cfg, &mut Pcg::new(4));
+        let a = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m.codebook));
+        let b = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m.codebook));
+        assert_eq!(a, b);
+        // and a differently-sharded fit of the same seed agrees too
+        let cfg1 = PqConfig { threads: 1, ..cfg };
+        let m1 = fit(&w, 32, 32, &cfg1, &mut Pcg::new(4));
+        let c = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m1.codebook));
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn trainer_hat_path_equals_reencode_path() {
+        // Trainer::refresh_hats decodes the k-means assignments
+        // directly into the hat buffer; the seed's path re-encoded the
+        // weights against the fitted codebook first. Both run the same
+        // engine kernel, so the hats must be byte-identical.
+        use crate::quant::kmeans::{kmeans, KmeansConfig};
+        use crate::quant::pq::decode_codes_into;
+        let mut rng = Pcg::new(5);
+        let w: Vec<f32> = (0..48 * 32).map(|_| rng.next_normal()).collect();
+        let km = kmeans(
+            &w,
+            8,
+            &KmeansConfig { k: 16, max_iters: 6, ..Default::default() },
+            &mut Pcg::new(6),
+        );
+        let cb = Codebook::new(km.centroids.clone(), km.k, 8);
+        let mut direct = vec![0.0f32; w.len()];
+        decode_codes_into(&cb, &km.assignments, &mut direct);
+        let reencoded = build_hat(NoiseKind::ExactPq, &w, 48, 32, 8, Some(&cb));
+        assert_eq!(direct, reencoded);
     }
 }

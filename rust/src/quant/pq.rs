@@ -8,6 +8,7 @@
 //! subvectors with k-means; the matrix is stored as (codebook, index
 //! matrix) and reconstructed as `b̂_kl = c[I_kl]` at eval time.
 
+use crate::quant::assign;
 use crate::quant::codebook::Codebook;
 use crate::quant::kmeans::{kmeans, KmeansConfig};
 use crate::util::rng::Pcg;
@@ -19,11 +20,14 @@ pub struct PqConfig {
     /// Codebook size K (256 ⇒ int8 indices).
     pub n_centroids: usize,
     pub kmeans_iters: usize,
+    /// Worker threads for k-means assignment and re-encoding
+    /// (0 ⇒ [`assign::default_threads`]).
+    pub threads: usize,
 }
 
 impl Default for PqConfig {
     fn default() -> Self {
-        PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 15 }
+        PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 15, threads: 0 }
     }
 }
 
@@ -48,13 +52,14 @@ impl PqMatrix {
 
     /// Reconstruct the dense matrix (Eq. 1 right-hand side).
     pub fn decode(&self) -> Vec<f32> {
-        let d = self.block_size();
         let mut out = vec![0.0f32; self.rows * self.cols];
-        for (s, &code) in self.codes.iter().enumerate() {
-            let dst = s * d;
-            out[dst..dst + d].copy_from_slice(self.codebook.codeword(code as usize));
-        }
+        self.decode_into(&mut out);
         out
+    }
+
+    /// Reconstruct into a caller-provided buffer.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        decode_codes_into(&self.codebook, &self.codes, out);
     }
 
     /// Reconstruction error ‖W − Ŵ‖² (Eq. 3).
@@ -77,15 +82,18 @@ impl PqMatrix {
     }
 }
 
-/// Extract the subvector matrix (n_sub × d) from a (rows × cols) weight.
-pub fn subvectors(w: &[f32], rows: usize, cols: usize, d: usize) -> Vec<f32> {
+/// View a (rows × cols) weight as its subvector matrix (n_sub × d).
+/// The flat row-major layout already is subvector-major (subvectors are
+/// contiguous along cols), so this validates the shape and returns the
+/// borrow — no copy (the seed cloned the full matrix here, once per
+/// `fit`).
+pub fn subvectors(w: &[f32], rows: usize, cols: usize, d: usize) -> &[f32] {
     assert_eq!(w.len(), rows * cols, "matrix size mismatch");
     assert!(
         cols % d == 0,
         "cols {cols} not divisible by block_size {d}"
     );
-    // contiguous along cols ⇒ the flat layout already is subvector-major
-    w.to_vec()
+    w
 }
 
 /// Fit PQ to a matrix in its canonical 2-D view.
@@ -93,9 +101,14 @@ pub fn fit(w: &[f32], rows: usize, cols: usize, cfg: &PqConfig, rng: &mut Pcg) -
     let d = cfg.block_size;
     let subs = subvectors(w, rows, cols, d);
     let km = kmeans(
-        &subs,
+        subs,
         d,
-        &KmeansConfig { k: cfg.n_centroids, max_iters: cfg.kmeans_iters, ..Default::default() },
+        &KmeansConfig {
+            k: cfg.n_centroids,
+            max_iters: cfg.kmeans_iters,
+            threads: assign::resolve_threads(cfg.threads),
+            ..Default::default()
+        },
         rng,
     );
     PqMatrix {
@@ -108,7 +121,28 @@ pub fn fit(w: &[f32], rows: usize, cols: usize, cfg: &PqConfig, rng: &mut Pcg) -
 
 /// Re-encode a matrix against an *existing* codebook (used after
 /// codeword finetuning steps, and by the exact-noise hat refresh).
+/// Runs on the shared parallel assignment engine with the default
+/// thread count; use [`encode_with`] to control sharding.
 pub fn encode(w: &[f32], rows: usize, cols: usize, cb: &Codebook) -> Vec<u32> {
+    encode_with(w, rows, cols, cb, 0)
+}
+
+/// [`encode`] with an explicit worker count (0 ⇒ default).
+pub fn encode_with(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    cb: &Codebook,
+    threads: usize,
+) -> Vec<u32> {
+    assert_eq!(w.len(), rows * cols);
+    assert!(cols % cb.d == 0);
+    assign::assign_codes(w, cb.d, &cb.centroids, cb.k, threads)
+}
+
+/// The seed's single-threaded O(n·K·d) scalar loop, kept as the
+/// benchmark baseline and as a semantic oracle in regression tests.
+pub fn encode_scalar(w: &[f32], rows: usize, cols: usize, cb: &Codebook) -> Vec<u32> {
     let d = cb.d;
     assert_eq!(w.len(), rows * cols);
     assert!(cols % d == 0);
@@ -133,6 +167,16 @@ pub fn encode(w: &[f32], rows: usize, cols: usize, cb: &Codebook) -> Vec<u32> {
         codes[i] = best_j;
     }
     codes
+}
+
+/// Decode a code sequence through a codebook into a caller buffer.
+pub fn decode_codes_into(cb: &Codebook, codes: &[u32], out: &mut [f32]) {
+    let d = cb.d;
+    assert_eq!(out.len(), codes.len() * d, "decode buffer size mismatch");
+    for (s, &code) in codes.iter().enumerate() {
+        let dst = s * d;
+        out[dst..dst + d].copy_from_slice(cb.codeword(code as usize));
+    }
 }
 
 /// Blockwise-mean "hat": each subvector replaced by its own mean value
@@ -162,7 +206,7 @@ mod tests {
     #[test]
     fn decode_shape_and_determinism() {
         let w = randmat(1, 16, 32);
-        let cfg = PqConfig { block_size: 8, n_centroids: 16, kmeans_iters: 8 };
+        let cfg = PqConfig { block_size: 8, n_centroids: 16, kmeans_iters: 8, threads: 0 };
         let a = fit(&w, 16, 32, &cfg, &mut Pcg::new(7));
         let b = fit(&w, 16, 32, &cfg, &mut Pcg::new(7));
         assert_eq!(a.decode().len(), 16 * 32);
@@ -174,7 +218,7 @@ mod tests {
         let w = randmat(2, 32, 64);
         let mut errs = Vec::new();
         for k in [4usize, 16, 64, 256] {
-            let cfg = PqConfig { block_size: 8, n_centroids: k, kmeans_iters: 12 };
+            let cfg = PqConfig { block_size: 8, n_centroids: k, kmeans_iters: 12, threads: 0 };
             let pq = fit(&w, 32, 64, &cfg, &mut Pcg::new(3));
             errs.push(pq.objective(&w));
         }
@@ -198,7 +242,7 @@ mod tests {
                 w.extend_from_slice(&[v; 4]);
             }
         }
-        let cfg = PqConfig { block_size: 4, n_centroids: 8, kmeans_iters: 10 };
+        let cfg = PqConfig { block_size: 4, n_centroids: 8, kmeans_iters: 10, threads: 0 };
         let pq = fit(&w, 32, 16, &cfg, &mut Pcg::new(5));
         assert!(pq.objective(&w) < 1e-10);
     }
@@ -206,7 +250,7 @@ mod tests {
     #[test]
     fn encode_matches_fit_assignments() {
         let w = randmat(4, 16, 16);
-        let cfg = PqConfig { block_size: 4, n_centroids: 16, kmeans_iters: 10 };
+        let cfg = PqConfig { block_size: 4, n_centroids: 16, kmeans_iters: 10, threads: 0 };
         let pq = fit(&w, 16, 16, &cfg, &mut Pcg::new(6));
         let codes = encode(&w, 16, 16, &pq.codebook);
         // re-encoding with the same codebook can only improve or match
@@ -219,7 +263,7 @@ mod tests {
     #[test]
     fn storage_bits_formula() {
         let w = randmat(7, 64, 64);
-        let cfg = PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 2 };
+        let cfg = PqConfig { block_size: 8, n_centroids: 256, kmeans_iters: 2, threads: 0 };
         let pq = fit(&w, 64, 64, &cfg, &mut Pcg::new(8));
         // fp32 codebook: 32·K·d + 8 bits per code (log2 256)
         let expect = 32 * 256 * 8 + 8 * (64 * 64 / 8) as u64;

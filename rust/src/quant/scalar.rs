@@ -19,10 +19,14 @@ impl QParams {
     pub fn from_range(lo: f32, hi: f32, bits: u8) -> QParams {
         let qmax = ((1u32 << bits) - 1) as f32;
         let mut scale = (hi - lo) / qmax;
-        if !(scale > 0.0) {
-            scale = 1.0; // degenerate/constant tensor: PyTorch-style fallback
+        if !(scale > 0.0 && scale.is_finite()) {
+            scale = 1.0; // degenerate/constant/±inf range: PyTorch-style fallback
         }
-        QParams { scale, zero: (lo / scale).round(), bits }
+        let mut zero = (lo / scale).round();
+        if !zero.is_finite() {
+            zero = 0.0; // NaN/±inf bound would poison every dequantized value
+        }
+        QParams { scale, zero, bits }
     }
 
     pub fn from_minmax(data: &[f32], bits: u8) -> QParams {
@@ -230,5 +234,69 @@ mod tests {
         assert_eq!(quant_mse(&[], &QParams::from_range(0.0, 1.0, 8)), 0.0);
         let (lo, hi) = minmax(&[]);
         assert_eq!((lo, hi), (0.0, 0.0));
+    }
+
+    #[test]
+    fn from_range_degenerate_ranges_fall_back() {
+        // constant tensor: zero width ⇒ PyTorch-style scale-1 fallback,
+        // and the constant value must round-trip to within 1/2
+        for v in [0.0f32, 5.0, -3.25] {
+            let qp = QParams::from_range(v, v, 8);
+            assert_eq!(qp.scale, 1.0, "value {v}");
+            assert!((qp.roundtrip_one(v) - v).abs() <= 0.5);
+        }
+        // inverted range (hi < lo): negative scale must also fall back
+        let qp = QParams::from_range(2.0, -3.0, 4);
+        assert_eq!(qp.scale, 1.0);
+        // NaN bound: both scale AND zero must fall back, or every
+        // dequantized value would be NaN
+        let qp = QParams::from_range(f32::NAN, 1.0, 8);
+        assert_eq!(qp.scale, 1.0);
+        assert_eq!(qp.zero, 0.0);
+        assert!(qp.roundtrip_one(0.5).is_finite());
+        // infinite bound: scale would be +inf and dequantize to NaN
+        let qp = QParams::from_range(-1.0, f32::INFINITY, 8);
+        assert_eq!(qp.scale, 1.0);
+        assert!(qp.roundtrip_one(0.5).is_finite());
+    }
+
+    #[test]
+    fn minmax_ignores_nan_values() {
+        // NaN-containing slices: min/max skip NaNs (f32::min/max
+        // semantics), including a NaN in the first position
+        assert_eq!(minmax(&[f32::NAN, 1.0, -2.0, 0.5]), (-2.0, 1.0));
+        assert_eq!(minmax(&[1.0, f32::NAN]), (1.0, 1.0));
+        // all-NaN behaves like empty: degenerate (0, 0) range
+        assert_eq!(minmax(&[f32::NAN, f32::NAN]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn nan_inputs_quantize_without_panicking() {
+        let data = vec![f32::NAN, 1.0, -1.0];
+        let qp = QParams::from_minmax(&data, 8);
+        // NaN rounds through the clamp to a finite grid value
+        assert!(qp.roundtrip_one(f32::NAN).is_finite());
+        let codes = quantize(&data, &qp);
+        assert!((codes[0] as u32) < 256);
+        assert!(dequantize(&codes, &qp).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn per_channel_equals_per_tensor_on_single_row() {
+        // a 1-row matrix has exactly one channel: both schemes must
+        // produce identical round-trips bit-for-bit
+        let data = randvec(7, 96);
+        for bits in [2u8, 4, 8] {
+            let qp = QParams::from_minmax(&data, bits);
+            let mut pt = data.clone();
+            roundtrip(&mut pt, &qp);
+            let mut pc = data.clone();
+            roundtrip_per_channel(&mut pc, 1, data.len(), bits);
+            assert_eq!(pt, pc, "bits {bits}");
+            let (codes, qps) = quantize_per_channel(&data, 1, data.len(), bits);
+            assert_eq!(qps.len(), 1);
+            assert_eq!(qps[0], qp);
+            assert_eq!(codes, quantize(&data, &qp));
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! prop_check runner; proptest is not in the offline registry). Each
 //! property runs over 100+ seeded cases with ramped sizes.
 
+use quant_noise::quant::assign::{assign, assign_codes, assign_reference};
 use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
 use quant_noise::quant::pq::{fit, mean_subvector_hat, PqConfig};
 use quant_noise::quant::prune::{every_other_chunk_mask, flops_fraction, share_map, stored_layers};
@@ -78,7 +79,7 @@ fn prop_pq_decode_error_le_variance() {
         let rows = (gen_dim(rng, size) + 1) * 4;
         let cols = 16;
         let w = gen_weights(rng, rows * cols);
-        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 6 };
+        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 6, threads: 0 };
         let m = fit(&w, rows, cols, &cfg, rng);
         let err = m.objective(&w);
         let mean = w.iter().sum::<f32>() / w.len() as f32;
@@ -168,6 +169,74 @@ fn prop_size_accounting_additive_and_positive() {
                 if p.numel > 64 * 8 * 4 {
                     return Err(format!("{scheme:?} bigger than fp32 on large matrix"));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum()
+}
+
+#[test]
+fn prop_assign_engine_bit_identical_across_thread_counts() {
+    // The parallel engine must reproduce the single-threaded scalar
+    // reference exactly — codes and distances — for any sharding,
+    // including n < threads and K > n.
+    prop_check("assign engine", PropConfig { cases: 60, ..Default::default() }, |rng, size| {
+        let d = [1usize, 2, 3, 4, 7, 8][rng.below(6) as usize];
+        let n = 1 + gen_dim(rng, size) * 3;
+        let k = 1 + rng.below(80) as usize;
+        let pts = gen_weights(rng, n * d);
+        let cbs = gen_weights(rng, k * d);
+        let reference = assign_reference(&pts, d, &cbs, k);
+        for threads in [1usize, 2, 5, 16, 64] {
+            let got = assign(&pts, d, &cbs, k, threads);
+            if got.codes != reference.codes {
+                return Err(format!("codes diverge: n={n} d={d} k={k} threads={threads}"));
+            }
+            if got.dists != reference.dists {
+                return Err(format!("dists diverge: n={n} d={d} k={k} threads={threads}"));
+            }
+            if assign_codes(&pts, d, &cbs, k, threads) != reference.codes {
+                return Err(format!(
+                    "codes-only path diverges: n={n} d={d} k={k} threads={threads}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assign_engine_picks_nearest_codeword() {
+    // Against the naive O(n·K·d) dist2 loop: the assigned codeword's
+    // true squared distance must match the true minimum up to fp noise
+    // (the decomposed metric may legitimately flip exact near-ties).
+    prop_check("assign nearest", PropConfig { cases: 60, ..Default::default() }, |rng, size| {
+        let d = [2usize, 4, 8][rng.below(3) as usize];
+        let n = 1 + gen_dim(rng, size) * 2;
+        let k = 1 + rng.below(32) as usize;
+        let pts = gen_weights(rng, n * d);
+        let cbs = gen_weights(rng, k * d);
+        let got = assign(&pts, d, &cbs, k, 3);
+        for i in 0..n {
+            let p = &pts[i * d..(i + 1) * d];
+            let assigned = dist2(p, &cbs[got.codes[i] as usize * d..][..d]);
+            let best = (0..k)
+                .map(|j| dist2(p, &cbs[j * d..(j + 1) * d]))
+                .fold(f32::INFINITY, f32::min);
+            if assigned > best + 1e-4 * (1.0 + best) {
+                return Err(format!(
+                    "point {i}: assigned d²={assigned} but true min is {best} (n={n} d={d} k={k})"
+                ));
+            }
+            if (got.dists[i] - assigned).abs() > 1e-3 * (1.0 + assigned) {
+                return Err(format!(
+                    "point {i}: reported d²={} vs recomputed {assigned}",
+                    got.dists[i]
+                ));
             }
         }
         Ok(())

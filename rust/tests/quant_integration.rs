@@ -3,8 +3,9 @@
 
 use quant_noise::quant::codebook::Codebook;
 use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
+use quant_noise::quant::noise::{build_hat, NoiseKind};
 use quant_noise::quant::observer::{HistogramObserver, MinMaxObserver};
-use quant_noise::quant::pq::{encode, fit, PqConfig, PqMatrix};
+use quant_noise::quant::pq::{encode, encode_scalar, fit, PqConfig, PqMatrix};
 use quant_noise::quant::scalar::{quant_mse, QParams};
 use quant_noise::quant::size::{compression_ratio, ParamInfo, Scheme};
 use quant_noise::util::rng::Pcg;
@@ -18,7 +19,7 @@ fn weight(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
 fn pq_pipeline_end_to_end() {
     // fit → decode → re-encode must be stable (idempotent assignments)
     let w = weight(1, 256, 128);
-    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 12 };
+    let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 12, threads: 0 };
     let m = fit(&w, 256, 128, &cfg, &mut Pcg::new(2));
     let dec = m.decode();
     let codes2 = encode(&dec, 256, 128, &m.codebook);
@@ -29,7 +30,7 @@ fn pq_pipeline_end_to_end() {
 fn pq_then_int8_centroids_error_budget() {
     // §3.3: int8 centroids add at most the int8 rounding error on top
     let w = weight(3, 128, 64);
-    let cfg = PqConfig { block_size: 8, n_centroids: 32, kmeans_iters: 10 };
+    let cfg = PqConfig { block_size: 8, n_centroids: 32, kmeans_iters: 10, threads: 0 };
     let mut m = fit(&w, 128, 64, &cfg, &mut Pcg::new(4));
     let err_pq = m.objective(&w);
     let cmse = m.codebook.compress_int8();
@@ -87,6 +88,38 @@ fn compression_ratios_ordering() {
     let rpq = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: false });
     let rpq8 = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: true });
     assert!(1.0 < r8 && r8 < r4 && r4 < rpq && rpq < rpq8, "{r8} {r4} {rpq} {rpq8}");
+}
+
+#[test]
+fn engine_encode_matches_seed_scalar_loop() {
+    // Regression for the assignment-engine refactor: on a codebook
+    // whose decision margins dwarf fp noise (codewords on a coarse
+    // lattice, points jittered around them), the norm-decomposed
+    // parallel encode must reproduce the seed's scalar dist2 loop
+    // bit-for-bit — which makes the exact-PQ hat byte-identical across
+    // the refactor.
+    let d = 8usize;
+    let k = 32usize;
+    let (rows, cols) = (64usize, 64usize);
+    let centroids: Vec<f32> = (0..k * d)
+        .map(|i| (i / d) as f32 * 4.0 - 2.0 * (i % d) as f32)
+        .collect();
+    let cb = Codebook::new(centroids.clone(), k, d);
+    let mut rng = Pcg::new(11);
+    let w: Vec<f32> = (0..rows * cols)
+        .map(|i| {
+            let sv = i / d;
+            let j = sv % k;
+            centroids[j * d + i % d] + rng.next_normal() * 0.05
+        })
+        .collect();
+    let fast = encode(&w, rows, cols, &cb);
+    let slow = encode_scalar(&w, rows, cols, &cb);
+    assert_eq!(fast, slow);
+    // the hat built through the engine equals the scalar decode
+    let hat = build_hat(NoiseKind::ExactPq, &w, rows, cols, d, Some(&cb));
+    let m = PqMatrix { codebook: cb, codes: slow, rows, cols };
+    assert_eq!(hat, m.decode());
 }
 
 #[test]

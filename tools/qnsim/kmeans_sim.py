@@ -1,0 +1,142 @@
+"""Exact-f32 simulation of quant::assign engine + quant::kmeans + pq::fit."""
+import numpy as np
+from pcg import Pcg
+
+F32 = np.float32
+
+
+def dist2_seed(P, C):
+    """Seed's sequential f32 dist2 for all (point, centroid) pairs.
+    P: (n, d) f32, C: (k, d) f32 -> (n, k) f32, accumulation in t order."""
+    n, d = P.shape
+    k = C.shape[0]
+    acc = np.zeros((n, k), dtype=np.float32)
+    for t in range(d):
+        diff = (P[:, None, t] - C[None, :, t]).astype(np.float32)
+        acc = (acc + (diff * diff).astype(np.float32)).astype(np.float32)
+    return acc
+
+
+def dot_engine_pair(A, B):
+    """Engine's 4-way unrolled f32 dot along the last axis, broadcast.
+    A: (..., d), B: (..., d) -> (...) f32 with exact accumulation order."""
+    d = A.shape[-1]
+    n4 = d - d % 4
+    s = [np.zeros(np.broadcast_shapes(A.shape[:-1], B.shape[:-1]), dtype=np.float32)
+         for _ in range(4)]
+    i = 0
+    while i < n4:
+        for lane in range(4):
+            prod = (A[..., i + lane] * B[..., i + lane]).astype(np.float32)
+            s[lane] = (s[lane] + prod).astype(np.float32)
+        i += 4
+    acc = ((s[0] + s[1]).astype(np.float32) + (s[2] + s[3]).astype(np.float32)).astype(np.float32)
+    while i < d:
+        acc = (acc + (A[..., i] * B[..., i]).astype(np.float32)).astype(np.float32)
+        i += 1
+    return acc
+
+
+def engine_assign(P, C, want_dists=True):
+    """assign::assign — codes, dists, objective. P: (n,d), C: (k,d)."""
+    norms = dot_engine_pair(C, C)                      # (k,)
+    dots = dot_engine_pair(P[:, None, :], C[None, :, :])  # (n, k)
+    v = (norms[None, :] - (F32(2.0) * dots).astype(np.float32)).astype(np.float32)
+    codes = np.argmin(v, axis=1)  # first-min, matches strict < scan
+    best = v[np.arange(len(codes)), codes]
+    if not want_dists:
+        return codes.astype(np.uint32), None, None
+    pn = dot_engine_pair(P, P)
+    dists = np.maximum((best + pn).astype(np.float32), F32(0.0))
+    objective = float(np.sum(dists.astype(np.float64)))
+    return codes.astype(np.uint32), dists, objective
+
+
+def init_pp(P, k, rng):
+    n, d = P.shape
+    first = rng.below(n)
+    cents = [P[first].copy()]
+    dists = dist2_seed(P, np.array([cents[0]]))[:, 0].copy()
+    for _ in range(1, k):
+        total = 0.0
+        for x in dists:           # sequential f64 sum, iterator order
+            total += float(x)
+        if total <= 0.0:
+            nxt = rng.below(n)
+        else:
+            target = rng.next_f64() * total
+            pick = n - 1
+            for i, w in enumerate(dists):
+                target -= float(w)
+                if target <= 0.0:
+                    pick = i
+                    break
+            nxt = pick
+        c = P[nxt].copy()
+        cents.append(c)
+        dd = dist2_seed(P, np.array([c]))[:, 0]
+        mask = dd < dists
+        dists[mask] = dd[mask]
+    return np.array(cents, dtype=np.float32)
+
+
+def kmeans(P, k_req, max_iters, tol, rng, collect_assign_checks=False):
+    n, d = P.shape
+    k = min(k_req, n)
+    if n <= k:
+        cents = np.zeros((k, d), dtype=np.float32)
+        cents[:n] = P
+        return dict(centroids=cents, k=k, assignments=np.arange(n, dtype=np.uint32),
+                    history=[0.0])
+    C = init_pp(P, k, rng)
+    history = []
+    last_obj = float("inf")
+
+    def assign_step(P, C):
+        # engine argmin; dists/objective recomputed with exact dist2
+        # (mirrors kmeans::assign_step post-review)
+        codes, _, _ = engine_assign(P, C, want_dists=False)
+        true_d = dist2_seed(P, C)
+        dists = true_d[np.arange(len(codes)), codes]
+        obj = float(np.sum(dists.astype(np.float64)))
+        return codes, dists, obj
+
+    for _ in range(max_iters):
+        codes, dists, obj = assign_step(P, C)
+        history.append(obj)
+        # update: f64 sums in point order
+        sums = np.zeros((k, d), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        np.add.at(sums, codes, P.astype(np.float64))
+        np.add.at(counts, codes, 1)
+        order = sorted(range(n), key=lambda i: dists[i], reverse=True)  # stable desc
+        steal = iter(order)
+        for j in range(k):
+            if counts[j] == 0:
+                p = next(steal, None)
+                if p is not None:
+                    C[j] = P[p]
+            else:
+                C[j] = (sums[j] / counts[j]).astype(np.float32)
+        if np.isfinite(last_obj) and abs(last_obj - obj) <= tol * abs(last_obj):
+            break
+        last_obj = obj
+    codes, dists, obj = assign_step(P, C)
+    history.append(obj)
+    return dict(centroids=C, k=k, assignments=codes, history=history, dists=dists)
+
+
+def decode(centroids, d, codes):
+    return centroids.reshape(-1, d)[codes].reshape(-1)
+
+
+def pq_fit(w, rows, cols, block, k, iters, rng, tol=1e-5):
+    P = np.asarray(w, dtype=np.float32).reshape(-1, block)
+    km = kmeans(P, k, iters, tol, rng)
+    return km
+
+
+def objective_vs(w, centroids, block, codes):
+    rec = decode(centroids, block, codes)
+    e = np.asarray(w, dtype=np.float64) - rec.astype(np.float64)
+    return float((e * e).sum())

@@ -1,0 +1,72 @@
+"""Exact Python port of rust/src/util/rng.rs (PCG-XSH-RR 64/32)."""
+import numpy as np
+
+M64 = (1 << 64) - 1
+MUL = 6364136223846793005
+
+
+def ror32(x, r):
+    r &= 31
+    return ((x >> r) | (x << (32 - r))) & 0xFFFFFFFF
+
+
+class Pcg:
+    def __init__(self, seed, stream=0xDA3E39CB94B95BDB):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + seed) & M64
+        self.next_u32()
+
+    def split(self, tag):
+        seed = ((self.next_u32() << 32) | self.next_u32()) & M64
+        t = (tag * 0x9E3779B97F4A7C15) & M64
+        return Pcg(seed ^ t, tag)
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * MUL + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = (old >> 59) & 0xFFFFFFFF
+        return ror32(xorshifted, rot)
+
+    def next_u64(self):
+        return ((self.next_u32() << 32) | self.next_u32()) & M64
+
+    def next_f32(self):
+        # (u32 >> 8) as f32 * (1/2^24) as f32
+        return np.float32(self.next_u32() >> 8) * np.float32(1.0 / (1 << 24))
+
+    def next_f64(self):
+        return float(self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        neg_mod = ((1 << 32) - n) % n  # n.wrapping_neg() % n for u32
+        while True:
+            x = self.next_u32()
+            m = x * n
+            l = m & 0xFFFFFFFF
+            if l >= n or l >= neg_mod:
+                return m >> 32
+
+    def next_normal(self):
+        u1 = max(self.next_f64(), 1e-12)
+        u2 = self.next_f64()
+        import math
+        return np.float32(math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2))
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample_indices(self, n, k):
+        chosen = set()
+        out = []
+        for j in range(n - k, n):
+            t = self.below(j + 1)
+            v = j if t in chosen else t
+            chosen.add(v)
+            out.append(v)
+        return out

@@ -1,0 +1,194 @@
+"""Verify engine-affected kmeans/pq test assertions with exact-f32 sim."""
+import numpy as np
+from pcg import Pcg
+from kmeans_sim import (dist2_seed, dot_engine_pair, engine_assign, kmeans,
+                        pq_fit, decode, objective_vs)
+
+F32 = np.float32
+ok, bad = [], []
+
+
+def check(name, cond, detail=""):
+    (ok if cond else bad).append((name, detail))
+    print(("PASS " if cond else "FAIL ") + name + (" — " + str(detail) if detail else ""))
+
+
+def blob_data(seed, per_blob, d):
+    rng = Pcg(seed)
+    pts = []
+    for b in range(4):
+        center = F32(b * 10.0)
+        for _ in range(per_blob):
+            for _ in range(d):
+                pts.append(F32(center + F32(rng.next_normal() * F32(0.1))))
+    return np.array(pts, dtype=np.float32).reshape(-1, d)
+
+
+# --- kmeans::objective_nonincreasing (k=8, iters=20, tol=0, threads=2) ---
+pts = blob_data(1, 100, 4)
+r = kmeans(pts, 8, 20, 0.0, Pcg(2))
+h = r["history"]
+viol = [(a, b) for a, b in zip(h, h[1:]) if b > a + 1e-6 * max(abs(a), 1.0)]
+check("kmeans::objective_nonincreasing", not viol, viol or h[:3])
+
+# --- kmeans::finds_separated_blobs (k=4, 25 iters, tol=1e-9) ---
+pts = blob_data(3, 200, 2)
+r = kmeans(pts, 4, 25, 1e-9, Pcg(4))
+final = r["history"][-1]
+ratio = final / (pts.size)
+check("kmeans::finds_separated_blobs", ratio < 0.1, ratio)
+
+# --- kmeans::assignments_are_nearest (k=6, 10 iters, tol=1e-7, d=3) ---
+pts = blob_data(6, 50, 3)
+r = kmeans(pts, 6, 10, 1e-7, Pcg(7))
+C = r["centroids"]
+true_d = dist2_seed(pts, C)  # naive f32 dist2, same as test's dist2
+assigned = true_d[np.arange(len(pts)), r["assignments"]]
+best = true_d.min(axis=1)
+worst = float((assigned.astype(np.float64) - best.astype(np.float64)).max())
+check("kmeans::assignments_are_nearest slack (seed slack 1e-5)", worst <= 1e-5, worst)
+print("   max |assigned - best| =", worst)
+
+# --- kmeans::deterministic_given_seed: structural (same code path) ---
+
+# --- kmeans::no_empty_clusters_on_degenerate_data ---
+pts = np.full(64 * 2, 0.5, dtype=np.float32)
+pts[0] = 5.0
+pts[3] = -5.0
+pts = pts.reshape(-1, 2)
+r = kmeans(pts, 4, 8, 0.0, Pcg(8))
+check("kmeans::no_empty_clusters", all(a < r["k"] for a in r["assignments"]))
+
+# --- pq::decode_shape_and_determinism: structural ---
+# --- pq::more_centroids_lower_error (32x64, d=8, k in 4,16,64,256) ---
+rng = Pcg(2)
+w = np.array([rng.next_normal() for _ in range(32 * 64)], dtype=np.float32)
+errs = []
+for k in [4, 16, 64, 256]:
+    km = pq_fit(w, 32, 64, 8, k, 12, Pcg(3))
+    errs.append(objective_vs(w, km["centroids"], 8, km["assignments"]))
+mono = all(b <= a * 1.05 for a, b in zip(errs, errs[1:]))
+check("pq::more_centroids_lower_error", mono and errs[3] < 1e-9, errs)
+
+# --- pq::repeated_rows_reconstruct_exactly ---
+pattern = [1.0, -1.0, 0.5, 2.0]
+w = []
+for r_ in range(32):
+    for _ in range(4):
+        w.extend([pattern[r_ % 4]] * 4)
+w = np.array(w, dtype=np.float32)
+km = pq_fit(w, 32, 16, 4, 8, 10, Pcg(5))
+err = objective_vs(w, km["centroids"], 4, km["assignments"])
+check("pq::repeated_rows_reconstruct_exactly", err < 1e-10, err)
+
+# --- pq::encode_matches_fit_assignments (16x16, d=4, k=16) ---
+rng = Pcg(4)
+w = np.array([rng.next_normal() for _ in range(16 * 16)], dtype=np.float32)
+km = pq_fit(w, 16, 16, 4, 16, 10, Pcg(6))
+codes2, _, _ = engine_assign(w.reshape(-1, 4), km["centroids"], want_dists=False)
+rec_fit = objective_vs(w, km["centroids"], 4, km["assignments"])
+rec_enc = objective_vs(w, km["centroids"], 4, codes2)
+check("pq::encode_matches_fit_assignments", rec_enc <= rec_fit + 1e-9, (rec_enc, rec_fit))
+check("pq::fit/encode same kernel -> identical codes",
+      np.array_equal(codes2, km["assignments"]))
+
+# --- quant_integration::pq_pipeline_end_to_end (256x128, d=8, k=64, 12 iters) ---
+rng = Pcg(1)
+w = np.array([F32(rng.next_normal() * F32(0.1)) for _ in range(256 * 128)], dtype=np.float32)
+km = pq_fit(w, 256, 128, 8, 64, 12, Pcg(2))
+dec = decode(km["centroids"], 8, km["assignments"])
+codes2, _, _ = engine_assign(dec.reshape(-1, 8), km["centroids"], want_dists=False)
+check("quant_integration::pq_pipeline_end_to_end",
+      np.array_equal(codes2, km["assignments"]))
+
+# --- quant_integration::kmeans_objective_equals_pq_objective (64x64, d=8, k=16) ---
+rng = Pcg(5)
+w = np.array([F32(rng.next_normal() * F32(0.1)) for _ in range(64 * 64)], dtype=np.float32)
+km = kmeans(w.reshape(-1, 8), 16, 10, 1e-5, Pcg(6))
+last = km["history"][-1]
+obj = objective_vs(w, km["centroids"], 8, km["assignments"])
+check("quant_integration::kmeans_objective_equals_pq_objective",
+      abs(last - obj) <= 1e-3 * max(last, 1.0), (last, obj))
+
+# --- quant_integration::pq_then_int8_centroids_error_budget (128x64, d=8, k=32) ---
+def from_minmax(data, bits):
+    lo, hi = F32(data.min()), F32(data.max())
+    qmax = F32((1 << bits) - 1)
+    scale = F32((hi - lo) / qmax)
+    if not (scale > 0.0):
+        scale = F32(1.0)
+    zero = F32(np.round(lo / scale))
+    return scale, zero, qmax
+
+
+rng = Pcg(3)
+w = np.array([F32(rng.next_normal() * F32(0.1)) for _ in range(128 * 64)], dtype=np.float32)
+km = pq_fit(w, 128, 64, 8, 32, 10, Pcg(4))
+err_pq = objective_vs(w, km["centroids"], 8, km["assignments"])
+cents = km["centroids"].reshape(-1)
+scale, zero, qmax = from_minmax(cents, 8)
+q = np.clip(np.round(cents / scale) - zero, F32(0.0), qmax).astype(np.float32)
+cents8 = ((q + zero) * scale).astype(np.float32)
+cmse = float(((cents.astype(np.float64) - cents8.astype(np.float64)) ** 2).mean())
+err_combo = objective_vs(w, cents8, 8, km["assignments"])
+n = w.size
+bound = (err_pq ** 0.5 + (cmse * n) ** 0.5) ** 2 + 1e-6
+check("quant_integration::pq_then_int8_budget", err_combo <= bound, (err_combo, bound))
+
+# --- proptest: prop_kmeans (40 cases) ---
+CASES_SEED = 0xC0FFEE
+M64 = (1 << 64) - 1
+
+
+def case_rng(case):
+    return Pcg(CASES_SEED ^ ((case * 0x9E3779B97F4A7C15) & M64))
+
+
+def gen_dim(rng, size):
+    caps = [1, 2, 3, 4, 7, 8, 12, 16, 31, 32, 64]
+    mx = min(size + 1, len(caps))
+    return caps[rng.below(mx)]
+
+
+def gen_weights(rng, n):
+    return np.array([F32(rng.next_normal() * (F32(1.0) + rng.next_f32()))
+                     for _ in range(n)], dtype=np.float32)
+
+
+fails = []
+for case in range(40):
+    rng = case_rng(case)
+    size = 1 + case * 64 // 40
+    d = [2, 4, 8][rng.below(3)]
+    n = (gen_dim(rng, size) + 2) * 8
+    pts = gen_weights(rng, n * d).reshape(-1, d)
+    k = 1 + rng.below(16)
+    r = kmeans(pts, k, 6, 0.0, rng)
+    h = r["history"]
+    for a, b in zip(h, h[1:]):
+        if b > a * (1 + 1e-5) + 1e-9:
+            fails.append((case, a, b))
+    if not all(x < r["k"] for x in r["assignments"]):
+        fails.append((case, "assign-range"))
+check("proptest::prop_kmeans (40 cases)", not fails, fails[:3])
+
+# --- proptest: prop_pq_decode_error_le_variance (30 cases) ---
+fails = []
+for case in range(30):
+    rng = case_rng(case)
+    size = 1 + case * 64 // 30
+    rows = (gen_dim(rng, size) + 1) * 4
+    cols = 16
+    w = gen_weights(rng, rows * cols)
+    km = pq_fit(w, rows, cols, 8, 8, 6, rng)
+    err = objective_vs(w, km["centroids"], 8, km["assignments"])
+    mean = F32(np.sum(w, dtype=np.float32) / F32(w.size))  # Rust f32 iter().sum()
+    var = float(((w.astype(np.float64) - float(mean)) ** 2).sum())
+    if err > var * 1.01 + 1e-6:
+        fails.append((case, err, var))
+check("proptest::prop_pq_decode_error_le_variance (30 cases)", not fails, fails[:3])
+
+print()
+print(f"{len(ok)} pass, {len(bad)} FAIL")
+for name, d in bad:
+    print("  FAIL:", name, d)

@@ -1,0 +1,148 @@
+"""Verify the NEW tests added in this PR: engine prop slacks, lattice
+regression, fixed-seed hat determinism margins."""
+import numpy as np
+from pcg import Pcg
+from kmeans_sim import dist2_seed, engine_assign, kmeans
+
+F32 = np.float32
+ok, bad = [], []
+
+
+def check(name, cond, detail=""):
+    (ok if cond else bad).append((name, detail))
+    print(("PASS " if cond else "FAIL ") + name + (" — " + str(detail) if detail else ""))
+
+
+CASES_SEED = 0xC0FFEE
+M64 = (1 << 64) - 1
+
+
+def case_rng(case):
+    return Pcg(CASES_SEED ^ ((case * 0x9E3779B97F4A7C15) & M64))
+
+
+def gen_dim(rng, size):
+    caps = [1, 2, 3, 4, 7, 8, 12, 16, 31, 32, 64]
+    return caps[rng.below(min(size + 1, len(caps)))]
+
+
+def gen_weights(rng, n):
+    return np.array([F32(rng.next_normal() * (F32(1.0) + rng.next_f32()))
+                     for _ in range(n)], dtype=np.float32)
+
+
+# --- prop_assign_engine_picks_nearest (60 cases) ---
+worst_sel, worst_dist = 0.0, 0.0
+fails = []
+for case in range(60):
+    rng = case_rng(case)
+    size = 1 + case * 64 // 60
+    d = [2, 4, 8][rng.below(3)]
+    n = 1 + gen_dim(rng, size) * 2
+    k = 1 + rng.below(32)
+    pts = gen_weights(rng, n * d).reshape(-1, d)
+    cbs = gen_weights(rng, k * d).reshape(-1, d)
+    codes, dists, _ = engine_assign(pts, cbs)
+    true_d = dist2_seed(pts, cbs)
+    assigned = true_d[np.arange(n), codes].astype(np.float64)
+    best = true_d.min(axis=1).astype(np.float64)
+    sel = ((assigned - best) / (1.0 + best)).max()
+    dd = (np.abs(dists.astype(np.float64) - assigned) / (1.0 + assigned)).max()
+    worst_sel = max(worst_sel, sel)
+    worst_dist = max(worst_dist, dd)
+    if sel > 1e-4 or dd > 1e-3:
+        fails.append((case, sel, dd))
+check("new::prop_assign_engine_picks_nearest", not fails,
+      f"worst sel={worst_sel:.2e} dist={worst_dist:.2e}")
+
+# --- prop_assign_engine_bit_identical: also sanity the generator shapes ---
+shapes = set()
+for case in range(60):
+    rng = case_rng(case)
+    size = 1 + case * 64 // 60
+    d = [1, 2, 3, 4, 7, 8][rng.below(6)]
+    n = 1 + gen_dim(rng, size) * 3
+    k = 1 + rng.below(80)
+    shapes.add((n < 16, k > n, d))
+check("new::prop_bit_identical covers n<threads and k>n",
+      any(s[0] for s in shapes) and any(s[1] for s in shapes), sorted(shapes)[:4])
+
+# --- assign.rs::agrees_with_naive_dist2_up_to_ties (n=300,d=8,k=32, seeds 7/8) ---
+def randv(seed, n):
+    r = Pcg(seed)
+    return np.array([r.next_normal() for _ in range(n)], dtype=np.float32)
+
+
+pts = randv(7, 300 * 8).reshape(-1, 8)
+cbs = randv(8, 32 * 8).reshape(-1, 8)
+codes, dists, _ = engine_assign(pts, cbs)
+true_d = dist2_seed(pts, cbs)
+ncodes = np.argmin(true_d, axis=1)
+ndists = true_d.min(axis=1)
+failed = []
+for i in range(300):
+    if codes[i] != ncodes[i]:
+        dd = float(true_d[i, codes[i]])
+        if abs(dd - float(ndists[i])) > 1e-4 * (1.0 + float(ndists[i])):
+            failed.append(i)
+    else:
+        if abs(float(dists[i]) - float(ndists[i])) > 1e-3 * (1.0 + float(ndists[i])):
+            failed.append(i)
+mismatches = int((codes != ncodes).sum())
+check("new::agrees_with_naive_dist2_up_to_ties", not failed,
+      f"{mismatches} tie-flips, 0 violations" if not failed else failed[:5])
+
+# --- assign.rs::dists_are_true_squared_distances (seeds 11/12, 50x8, k=16) ---
+pts = randv(11, 50 * 8).reshape(-1, 8)
+cbs = randv(12, 16 * 8).reshape(-1, 8)
+codes, dists, obj = engine_assign(pts, cbs)
+true_d = dist2_seed(pts, cbs)
+exact = true_d[np.arange(50), codes].astype(np.float64)
+rel = (np.abs(dists.astype(np.float64) - exact) / (1.0 + exact)).max()
+ssum = float(dists.astype(np.float64).sum())
+check("new::dists_are_true_squared_distances", rel <= 1e-3 and abs(obj - ssum) <= 1e-6 * max(abs(ssum), 1.0),
+      f"rel={rel:.2e}")
+
+# --- assign.rs::well_separated lattice (d=4,k=16, seed 3) ---
+d, k = 4, 16
+rng = Pcg(3)
+centroids = np.array([(i // d) * 10.0 + (i % d) for i in range(k * d)],
+                     dtype=np.float32).reshape(k, d)
+pts = []
+for i in range(200):
+    j = i % k
+    pts.append([F32(centroids[j, t] + F32(rng.next_normal() * F32(0.05))) for t in range(d)])
+pts = np.array(pts, dtype=np.float32)
+codes, _, _ = engine_assign(pts, centroids)
+ncodes = np.argmin(dist2_seed(pts, centroids), axis=1)
+check("new::well_separated_codebook_matches_naive", np.array_equal(codes, ncodes))
+
+# --- quant_integration::engine_encode_matches_seed_scalar_loop ---
+d, k, rows, cols = 8, 32, 64, 64
+centroids = np.array([(i // d) * 4.0 - 2.0 * (i % d) for i in range(k * d)],
+                     dtype=np.float32).reshape(k, d)
+rng = Pcg(11)
+w = np.empty(rows * cols, dtype=np.float32)
+for i in range(rows * cols):
+    sv = i // d
+    j = sv % k
+    w[i] = F32(centroids[j, i % d] + F32(rng.next_normal() * F32(0.05)))
+P = w.reshape(-1, d)
+codes, _, _ = engine_assign(P, centroids)
+ncodes = np.argmin(dist2_seed(P, centroids), axis=1)
+check("new::engine_encode_matches_seed_scalar_loop", np.array_equal(codes, ncodes),
+      int((codes != ncodes).sum()))
+
+# --- noise::exact_pq_hat_deterministic: break-margin analysis ---
+rng = Pcg(9)
+w = np.array([rng.next_normal() for _ in range(32 * 32)], dtype=np.float32)
+km = kmeans(w.reshape(-1, 8), 16, 6, 1e-5, Pcg(4))
+h = km["history"]
+margins = [abs(abs(a - b) / max(abs(a), 1e-30) - 1e-5) for a, b in zip(h, h[1:])]
+check("new::hat_deterministic break margins far from tol", min(margins) > 1e-7,
+      [f"{m:.1e}" for m in margins])
+
+print()
+print(f"{len(ok)} pass, {len(bad)} FAIL")
+for name, dd in bad:
+    print("  FAIL:", name, dd)

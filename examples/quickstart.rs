@@ -1,12 +1,14 @@
 //! Quickstart: load the AOT artifacts, run one gradient step and one
-//! eval pass, and round-trip a weight matrix through Product
-//! Quantization — the whole public API surface in ~60 lines.
+//! eval pass, and round-trip a weight matrix through the unified
+//! `QuantSpec` / `Quantizer` API — the whole public surface in ~60
+//! lines. Any scheme is one parseable string: `pq:k=64,d=8`,
+//! `pq:k=256,cb=int8` (§3.3), `int8:per_channel` (Table 10), …
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 use quant_noise::model::tensor::Tensor;
-use quant_noise::quant::pq::{fit, PqConfig};
+use quant_noise::quant::scheme::{QuantSpec, Quantizer};
 use quant_noise::runtime::client::Runtime;
 use quant_noise::runtime::executable::{BatchInput, ModelSession};
 use quant_noise::runtime::manifest::Manifest;
@@ -46,16 +48,27 @@ fn main() -> Result<()> {
     let (sum_nll, _) = sess.eval("eval", &BatchInput::Tokens(&tokens), &targets, &keep)?;
     println!("eval: ppl {:.2}", (sum_nll / n as f64).exp());
 
-    // Product-quantize one weight matrix (paper Eq. 1/3).
+    // Product-quantize one weight matrix (paper Eq. 1/3) through the
+    // unified scheme API: parse a spec, resolve it for the parameter,
+    // fit, and read the storage bill off the same object.
+    let spec: QuantSpec = "pq:k=64,d=8,iters=8".parse()?;
     let w: &Tensor = params.get("layer00.w1").unwrap();
     let (rows, cols) = w.view2d();
-    let pq = fit(&w.data, rows, cols, &PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 8, threads: 0 }, &mut Pcg::new(1));
-    let err = pq.objective(&w.data) / w.numel() as f64;
+    let info = meta.param("layer00.w1").unwrap().to_param_info(None);
+    let quantizer = spec.resolve(&info);
+    let qt = quantizer.fit(&w.data, rows, cols, &mut Pcg::new(1))?;
+    let bits = quantizer.storage_bits(&info);
+    let err = w
+        .data
+        .iter()
+        .zip(&qt.data)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / w.numel() as f64;
     println!(
-        "PQ round-trip of layer00.w1: {} -> {} bits ({:.1}x), mse/elem {err:.5}",
+        "`{spec}` round-trip of layer00.w1: {} -> {bits} bits ({:.1}x), mse/elem {err:.5}",
         w.numel() * 32,
-        pq.storage_bits(),
-        (w.numel() * 32) as f64 / pq.storage_bits() as f64,
+        (w.numel() * 32) as f64 / bits as f64,
     );
     Ok(())
 }

@@ -22,7 +22,8 @@ fn main() {
 
     println!("--- quant_ops (512x128 f32 weight) ---");
     b.bench("kmeans k=64 d=8 (8192 subvectors, 10 iters)", || {
-        kmeans(&w, 8, &KmeansConfig { k: 64, max_iters: 10, ..Default::default() }, &mut Pcg::new(2))
+        let cfg = KmeansConfig { k: 64, max_iters: 10, ..Default::default() };
+        kmeans(&w, 8, &cfg, &mut Pcg::new(2))
     });
     let cfg = PqConfig { block_size: 8, n_centroids: 64, kmeans_iters: 10, threads: 0 };
     let pq = fit(&w, 512, 128, &cfg, &mut Pcg::new(3));
@@ -48,6 +49,7 @@ fn main() {
         let infos: Vec<_> = (0..43)
             .map(|i| quant_noise::quant::size::ParamInfo {
                 name: format!("p{i}"),
+                structure: "ffn".to_string(),
                 numel: 65536,
                 rows: 512,
                 cols: 128,
@@ -57,7 +59,7 @@ fn main() {
             .collect();
         quant_noise::quant::size::model_bytes(
             &infos,
-            quant_noise::quant::size::Scheme::Pq { k: 256, int8_centroids: false },
+            &quant_noise::quant::scheme::QuantSpec::pq(256),
         )
     });
 

@@ -5,7 +5,7 @@ use quant_noise::bench_harness::common::Workbench;
 use quant_noise::bench_harness::specs::{base_train, with_noise};
 use quant_noise::coordinator::ipq::post_pq;
 use quant_noise::coordinator::trainer::Trainer;
-use quant_noise::quant::noise::NoiseKind;
+use quant_noise::quant::scheme::QuantSpec;
 use quant_noise::util::bench::Bencher;
 
 fn main() {
@@ -18,7 +18,7 @@ fn main() {
     b.budget = std::time::Duration::from_secs(6);
     println!("--- table pipeline stages (lm_tiny) ---");
 
-    let cfg = with_noise(base_train("lm", 4), NoiseKind::Proxy, 0.1);
+    let cfg = with_noise(base_train("lm", 4), QuantSpec::Proxy, 0.1);
     let init = lab.init.clone();
     b.bench("train: 4 QN steps", || {
         let mut t = Trainer::new(&mut lab.sess, init.clone(), cfg.clone());

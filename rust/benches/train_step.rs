@@ -29,7 +29,10 @@ fn main() {
 
     let mut b = Bencher::default();
     b.budget = std::time::Duration::from_secs(4);
-    println!("--- train_step (lm_tiny, B={} T={}, artifacts={dir_s}) ---", meta.batch, meta.seq_len);
+    println!(
+        "--- train_step (lm_tiny, B={} T={}, artifacts={dir_s}) ---",
+        meta.batch, meta.seq_len
+    );
     let mut seed = 0;
     let base = b
         .bench("grad: noise off (rate 0)", || {

@@ -17,6 +17,7 @@ use crate::data::batcher::{EpochBatcher, LmBatcher};
 use crate::data::corpus::{make_cls_dataset, make_img_dataset, MarkovCorpus};
 use crate::log_info;
 use crate::model::params::ParamStore;
+use crate::quant::scheme::QuantizerFactory;
 use crate::runtime::client::Runtime;
 use crate::runtime::executable::ModelSession;
 use crate::runtime::manifest::Manifest;
@@ -125,15 +126,26 @@ pub struct Lab<'rt> {
 fn train_key(model: &str, cfg: &TrainConfig) -> String {
     let mut h = DefaultHasher::new();
     // algorithm-version salt: bump when the training algorithm changes
-    // output for identical configs (v2 = engine-based hat refresh with
-    // per-matrix split RNG streams), so stale caches never get served
-    "qn-train-v2".hash(&mut h);
+    // output for identical configs (v3 = QuantSpec-described noise; the
+    // spec string now carries K/iters/blocks), so stale caches never
+    // get served
+    "qn-train-v3".hash(&mut h);
     model.hash(&mut h);
     cfg.steps.hash(&mut h);
-    cfg.noise.name().hash(&mut h);
+    // spec_string normalizes the thread knob out of the key: worker
+    // counts cannot change training output (engine results are
+    // thread-invariant and refresh_hats overrides them per wave anyway)
+    let spec = cfg.noise.spec_string();
+    spec.hash(&mut h);
     (cfg.noise_rate.to_bits(), cfg.layerdrop.to_bits(), cfg.clip.to_bits()).hash(&mut h);
-    (cfg.share_chunk, cfg.ldste, cfg.hat_refresh, cfg.pq_k, cfg.seed).hash(&mut h);
-    format!("{model}-{}-r{}-s{}-{:016x}", cfg.noise.name(), cfg.noise_rate, cfg.steps, h.finish())
+    (cfg.share_chunk, cfg.ldste, cfg.hat_refresh, cfg.seed).hash(&mut h);
+    // keep cache filenames filesystem-friendly: the hash carries the
+    // exact spec, the prefix is only a human-readable hint
+    let tag: String = spec
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("{model}-{tag}-r{}-s{}-{:016x}", cfg.noise_rate, cfg.steps, h.finish())
 }
 
 impl<'rt> Lab<'rt> {

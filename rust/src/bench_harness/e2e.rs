@@ -8,10 +8,10 @@ use anyhow::Result;
 use crate::bench_harness::common::{task_metric, Row, Workbench};
 use crate::bench_harness::specs::*;
 use crate::coordinator::ipq::run_ipq;
-use crate::coordinator::quantize::{scheme_bytes, WeightScheme};
+use crate::coordinator::quantize::scheme_bytes;
 use crate::coordinator::trainer::Trainer;
 use crate::log_info;
-use crate::quant::noise::NoiseKind;
+use crate::quant::scheme::QuantSpec;
 
 pub fn run(wb: &Workbench, model: &str, steps_override: Option<usize>) -> Result<()> {
     let mut lab = wb.lab(model)?;
@@ -30,7 +30,7 @@ pub fn run(wb: &Workbench, model: &str, steps_override: Option<usize>) -> Result
     log_info!("baseline trained in {:.1}s", t0.elapsed().as_secs_f64());
 
     // ---- 2. Quant-Noise training with loss curve ---------------------
-    let qn_cfg = with_noise(base.clone(), NoiseKind::Proxy, 0.1);
+    let qn_cfg = with_noise(base.clone(), QuantSpec::Proxy, 0.1);
     let key_exists = {
         // train manually (not via cache) when we want the loss curve
         let mut cfg = qn_cfg.clone();
@@ -57,7 +57,7 @@ pub fn run(wb: &Workbench, model: &str, steps_override: Option<usize>) -> Result
 
     // ---- 3. evaluate fp32 / post-PQ / iPQ ----------------------------
     let keep = lab.keep_all();
-    let fp = scheme_bytes(&lab.sess.meta, &WeightScheme::None);
+    let fp = scheme_bytes(&lab.sess.meta, &QuantSpec::None);
     let mut rows: Vec<Row> = Vec::new();
 
     for (label, params) in [("baseline fp32", &baseline), ("Quant-Noise fp32", &qn)] {

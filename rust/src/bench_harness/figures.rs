@@ -9,9 +9,9 @@ use crate::bench_harness::common::{task_metric, Row, Workbench};
 use crate::bench_harness::specs::*;
 use crate::bench_harness::tables::post_pq_row;
 use crate::coordinator::ipq::run_ipq;
-use crate::coordinator::quantize::{quantize_params, IntMode, WeightScheme};
-use crate::quant::noise::NoiseKind;
+use crate::coordinator::quantize::quantize_params;
 use crate::quant::prune::every_other_chunk_mask;
+use crate::quant::scheme::{IntObserver, QuantSpec};
 use crate::util::rng::Pcg;
 
 /// Fig. 2 / Tables 6-8: size-vs-quality trade-off. Our measured
@@ -28,7 +28,7 @@ pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
 
     // measured points: fp32, iPQ+QN, iPQ+QN+share+prune
     let plain = lab.train_cached(&base)?;
-    let fp_bytes = crate::coordinator::quantize::scheme_bytes(&lab.sess.meta, &WeightScheme::None);
+    let fp_bytes = crate::coordinator::quantize::scheme_bytes(&lab.sess.meta, &QuantSpec::None);
     {
         let keep = lab.keep_all();
         let ev = lab.eval_params(&plain, "eval", &keep)?;
@@ -42,7 +42,7 @@ pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
         });
     }
 
-    let qn = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base.clone(), QuantSpec::Proxy, 0.1))?;
     lab.sess.upload_all_params(&qn)?;
     let (q, _) = run_ipq(
         &mut lab.sess,
@@ -53,7 +53,12 @@ pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     {
         let keep = lab.keep_all();
         lab.sess.upload_all_params(&q.store)?;
-        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let ev = crate::coordinator::evaluator::evaluate(
+            &mut lab.sess,
+            "eval",
+            &lab.eval_batches,
+            &keep,
+        )?;
         let (m, n) = task_metric(&task, &ev);
         rows.push(Row {
             label: "ours: iPQ + Quant-Noise".into(),
@@ -64,7 +69,7 @@ pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
         });
     }
 
-    let mut qn_share = with_noise(base, NoiseKind::Proxy, 0.1);
+    let mut qn_share = with_noise(base, QuantSpec::Proxy, 0.1);
     qn_share.layerdrop = 0.2;
     qn_share.share_chunk = 2;
     let qns = lab.train_cached(&qn_share)?;
@@ -105,11 +110,7 @@ pub fn fig2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
                 true
             })
             .collect();
-        let bytes = crate::quant::size::model_bytes_with_mask(
-            &infos,
-            crate::quant::size::Scheme::Pq { k: 64, int8_centroids: false },
-            &mask,
-        );
+        let bytes = crate::quant::size::model_bytes_with_mask(&infos, &QuantSpec::pq(64), &mask);
         rows.push(Row {
             label: "ours: iPQ + QN + share + prune".into(),
             size_mb: crate::quant::size::mb(bytes),
@@ -184,7 +185,7 @@ pub fn fig3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     // proxy noise → iPQ quantization (one-shot PQ for sweep speed,
     // constant across points so the trend is comparable)
     for &p in &rates {
-        let noise = if p == 0.0 { NoiseKind::None } else { NoiseKind::Proxy };
+        let noise = if p == 0.0 { QuantSpec::None } else { QuantSpec::Proxy };
         let params = lab.train_cached(&with_noise(base.clone(), noise, p))?;
         let mut row = post_pq_row(&mut lab, &format!("proxy p={p}"), &params, 64, BTreeMap::new())?;
         row.label = format!("proxy p={p} -> PQ");
@@ -192,17 +193,26 @@ pub fn fig3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     }
     // int8 noise → int8 quantization
     for &p in &rates {
-        let noise = if p == 0.0 { NoiseKind::None } else { NoiseKind::Int8 };
+        let noise = if p == 0.0 {
+            QuantSpec::None
+        } else {
+            QuantSpec::int(8, IntObserver::MinMax)
+        };
         let params = lab.train_cached(&with_noise(base.clone(), noise, p))?;
         let q = quantize_params(
             &params,
             &lab.sess.meta,
-            &WeightScheme::Int { bits: 8, mode: IntMode::Histogram },
+            &QuantSpec::int(8, IntObserver::Histogram),
             &mut Pcg::new(5),
         )?;
         let keep = lab.keep_all();
         lab.sess.upload_all_params(&q.store)?;
-        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let ev = crate::coordinator::evaluator::evaluate(
+            &mut lab.sess,
+            "eval",
+            &lab.eval_batches,
+            &keep,
+        )?;
         let (m, n) = task_metric(&task, &ev);
         rows.push(Row {
             label: format!("int8 p={p} -> int8"),
@@ -226,7 +236,7 @@ pub fn fig4(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let task = lab.sess.meta.task.clone();
     let steps = wb.scaled(default_steps(&task));
     let base = base_train(&task, steps);
-    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base, QuantSpec::Proxy, 0.1))?;
 
     let mut rows = Vec::new();
     for k in [16usize, 32, 64, 128, 256] {
@@ -252,7 +262,7 @@ pub fn fig5(wb: &Workbench) -> Result<Vec<Row>> {
         }
         let mut lab = wb.lab(v)?;
         let steps = wb.scaled(default_steps("lm"));
-        let qn = lab.train_cached(&with_noise(base_train("lm", steps), NoiseKind::Proxy, 0.1))?;
+        let qn = lab.train_cached(&with_noise(base_train("lm", steps), QuantSpec::Proxy, 0.1))?;
         let keep = lab.keep_all();
         let ev = lab.eval_params(&qn, "eval", &keep)?;
         let (m, n) = task_metric("lm", &ev);
@@ -260,7 +270,7 @@ pub fn fig5(wb: &Workbench) -> Result<Vec<Row>> {
             label: format!("{v}: fp32"),
             size_mb: crate::quant::size::mb(crate::coordinator::quantize::scheme_bytes(
                 &lab.sess.meta,
-                &WeightScheme::None,
+                &QuantSpec::None,
             )),
             compression: 1.0,
             metric: m,
@@ -283,7 +293,7 @@ pub fn fig6(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let task = lab.sess.meta.task.clone();
     let steps = wb.scaled(default_steps(&task));
     let base = base_train(&task, steps);
-    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base, QuantSpec::Proxy, 0.1))?;
 
     let mut rows = Vec::new();
     // (a) order ablation — full iPQ with different group orders
@@ -299,7 +309,12 @@ pub fn fig6(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
         let (q, _) = run_ipq(&mut lab.sess, &qn, lab.train_src.as_mut(), &cfg)?;
         let keep = lab.keep_all();
         lab.sess.upload_all_params(&q.store)?;
-        let ev = crate::coordinator::evaluator::evaluate(&mut lab.sess, "eval", &lab.eval_batches, &keep)?;
+        let ev = crate::coordinator::evaluator::evaluate(
+            &mut lab.sess,
+            "eval",
+            &lab.eval_batches,
+            &keep,
+        )?;
         let (m, n) = task_metric(&task, &ev);
         rows.push(Row {
             label: format!("order {}", order.join("->")),

@@ -1,11 +1,11 @@
 //! Canonical training/quantization configurations per task — one place
 //! so every table/figure reuses the same trained models (and thus the
-//! train cache).
+//! train cache). Noise functions are plain [`QuantSpec`]s.
 
 use crate::coordinator::ipq::IpqConfig;
 use crate::coordinator::optim::Schedule;
 use crate::coordinator::trainer::{OptKind, TrainConfig};
-use crate::quant::noise::NoiseKind;
+use crate::quant::scheme::QuantSpec;
 
 /// Steps per task at scale 1.0.
 pub fn default_steps(task: &str) -> usize {
@@ -41,27 +41,27 @@ pub fn base_train(task: &str, steps: usize) -> TrainConfig {
         schedule,
         optimizer,
         clip,
-        noise: NoiseKind::None,
+        noise: QuantSpec::None,
         noise_rate: 0.0,
         layerdrop: 0.0,
         ldste: false,
         share_chunk: 0,
         hat_refresh: 60,
-        pq_k: 64,
         threads: 0,
         seed: 42,
         log_every: 40,
     }
 }
 
-/// With a noise kind at its paper-default rate. Full-rate (QAT) runs
-/// get a damped LR: with every block quantized each forward the STE
-/// bias plus high momentum diverges at the base LR — QAT should be
-/// *bad* (the paper's point), not NaN.
-pub fn with_noise(mut cfg: TrainConfig, noise: NoiseKind, rate: f32) -> TrainConfig {
+/// With a noise scheme at the given rate. Full-rate (QAT) runs get a
+/// damped LR: with every block quantized each forward the STE bias plus
+/// high momentum diverges at the base LR — QAT should be *bad* (the
+/// paper's point), not NaN.
+pub fn with_noise(mut cfg: TrainConfig, noise: QuantSpec, rate: f32) -> TrainConfig {
+    let damp = rate >= 0.99 && !matches!(noise, QuantSpec::None);
     cfg.noise = noise;
     cfg.noise_rate = rate;
-    if rate >= 0.99 && !matches!(noise, NoiseKind::None) {
+    if damp {
         cfg.schedule = scale_lr(cfg.schedule, 0.2);
     }
     cfg
@@ -81,12 +81,18 @@ pub fn scale_lr(s: Schedule, f: f32) -> Schedule {
 
 /// Paper rates: proxy/exact PQ noise at low p; intN noise tolerates
 /// high p (Fig. 3 / Table 9).
-pub fn default_rate(noise: NoiseKind) -> f32 {
+pub fn default_rate(noise: &QuantSpec) -> f32 {
     match noise {
-        NoiseKind::None => 0.0,
-        NoiseKind::Proxy | NoiseKind::ExactPq | NoiseKind::MeanSub => 0.1,
-        _ => 0.5,
+        QuantSpec::None => 0.0,
+        QuantSpec::Proxy | QuantSpec::Pq(_) | QuantSpec::MeanSub => 0.1,
+        QuantSpec::Int { .. } => 0.5,
     }
+}
+
+/// The exact-φ_PQ training noise at the table defaults: K=64 codewords
+/// at our model scale, 6 Lloyd iterations per hat refresh.
+pub fn exact_pq_noise() -> QuantSpec {
+    QuantSpec::pq_noise(64)
 }
 
 /// iPQ at our scale: K=64 centroids (the models are ~10⁶ weights;

@@ -10,15 +10,15 @@ use anyhow::Result;
 use crate::bench_harness::common::{task_metric, Lab, Row, Workbench};
 use crate::bench_harness::specs::*;
 use crate::coordinator::ipq::{post_pq, run_ipq};
-use crate::coordinator::quantize::{quantize_params, scheme_bytes, IntMode, WeightScheme};
+use crate::coordinator::quantize::{quantize_params, scheme_bytes};
 use crate::model::params::ParamStore;
-use crate::quant::noise::NoiseKind;
 use crate::quant::prune::{every_other_chunk_mask, stored_layers};
-use crate::quant::size::{mb, model_bytes_with_mask, Scheme};
+use crate::quant::scheme::{IntObserver, QuantSpec};
+use crate::quant::size::{mb, model_bytes_with_mask};
 use crate::util::rng::Pcg;
 
 fn fp32_bytes(lab: &Lab) -> u64 {
-    scheme_bytes(&lab.sess.meta, &WeightScheme::None)
+    scheme_bytes(&lab.sess.meta, &QuantSpec::None)
 }
 
 /// Evaluate `params` and produce a row.
@@ -48,12 +48,12 @@ fn int_row(
     label: &str,
     params: &ParamStore,
     bits: u8,
-    mode: IntMode,
+    observer: IntObserver,
 ) -> Result<Row> {
     let q = quantize_params(
         params,
         &lab.sess.meta,
-        &WeightScheme::Int { bits, mode },
+        &QuantSpec::int(bits, observer),
         &mut Pcg::new(5),
     )?;
     let keep = lab.keep_all();
@@ -94,26 +94,29 @@ pub fn table1(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     rows.push(eval_row(&mut lab, "uncompressed", &baseline, fp, "eval", &keep)?);
 
     for bits in [4u8, 8] {
-        let (noise_q, noise_n) = if bits == 4 {
-            (NoiseKind::Int4, "int4")
-        } else {
-            (NoiseKind::Int8, "int8")
-        };
+        let noise_q = QuantSpec::int(bits, IntObserver::MinMax);
+        let noise_n = format!("int{bits}");
         // post-training quantization of the plain model
-        rows.push(int_row(&mut lab, &format!("{noise_n} (post)"), &baseline, bits, IntMode::Histogram)?);
+        let hist = IntObserver::Histogram;
+        rows.push(int_row(&mut lab, &format!("{noise_n} (post)"), &baseline, bits, hist)?);
         // QAT = noise at rate 1.0
-        let qat = lab.train_cached(&with_noise(base.clone(), noise_q, 1.0))?;
-        rows.push(int_row(&mut lab, &format!("{noise_n} + QAT"), &qat, bits, IntMode::Histogram)?);
+        let qat = lab.train_cached(&with_noise(base.clone(), noise_q.clone(), 1.0))?;
+        rows.push(int_row(&mut lab, &format!("{noise_n} + QAT"), &qat, bits, hist)?);
         // Quant-Noise at partial rate
-        let qn = lab.train_cached(&with_noise(base.clone(), noise_q, default_rate(noise_q)))?;
-        rows.push(int_row(&mut lab, &format!("{noise_n} + Quant-Noise"), &qn, bits, IntMode::Histogram)?);
+        let rate = default_rate(&noise_q);
+        let qn = lab.train_cached(&with_noise(base.clone(), noise_q, rate))?;
+        rows.push(int_row(&mut lab, &format!("{noise_n} + Quant-Noise"), &qn, bits, hist)?);
     }
 
     // iPQ: post / QAT (exact PQ noise at rate 1.0) / QN (proxy)
     rows.push(ipq_row(&mut lab, "iPQ (post)", &baseline, false, "eval")?);
-    let qat_pq = lab.train_cached(&with_noise(base.clone(), NoiseKind::ExactPq, 1.0))?;
+    let qat_pq = lab.train_cached(&with_noise(base.clone(), exact_pq_noise(), 1.0))?;
     rows.push(ipq_row(&mut lab, "iPQ + QAT", &qat_pq, false, "eval")?);
-    let qn_pq = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, default_rate(NoiseKind::Proxy)))?;
+    let qn_pq = lab.train_cached(&with_noise(
+        base.clone(),
+        QuantSpec::Proxy,
+        default_rate(&QuantSpec::Proxy),
+    ))?;
     rows.push(ipq_row(&mut lab, "iPQ + Quant-Noise", &qn_pq, false, "eval")?);
 
     // §3.3 combination: int8 centroids + int8 activations
@@ -133,7 +136,7 @@ pub fn table1(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
 /// stored once, pruned chunks not stored).
 fn masked_bytes(
     lab: &Lab,
-    scheme: Scheme,
+    scheme: &QuantSpec,
     share_chunk: usize,
     keep: &[f32],
 ) -> u64 {
@@ -178,10 +181,10 @@ pub fn table2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let mut share_cfg = base.clone();
     share_cfg.share_chunk = 2;
     let shared = lab.train_cached(&share_cfg)?;
-    let b = masked_bytes(&lab, Scheme::Fp32, 2, &keep_all);
+    let b = masked_bytes(&lab, &QuantSpec::None, 2, &keep_all);
     rows.push(eval_row(&mut lab, "+ sharing", &shared, b, "eval", &keep_all)?);
 
-    let b = masked_bytes(&lab, Scheme::Fp32, 2, &prune_keep);
+    let b = masked_bytes(&lab, &QuantSpec::None, 2, &prune_keep);
     rows.push(eval_row(&mut lab, "+ share + prune", &shared, b, "eval", &prune_keep)?);
 
     // ---- quantized block
@@ -190,21 +193,21 @@ pub fn table2(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let (q, _) = run_ipq(&mut lab.sess, &orig, lab.train_src.as_mut(), &ipq_cfg)?;
     rows.push(eval_row(&mut lab, "iPQ", &q.store, q.bytes, "eval", &keep_all)?);
 
-    let qn = lab.train_cached(&with_noise(base.clone(), NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base.clone(), QuantSpec::Proxy, 0.1))?;
     lab.sess.upload_all_params(&qn)?;
     let (q, _) = run_ipq(&mut lab.sess, &qn, lab.train_src.as_mut(), &ipq_cfg)?;
     rows.push(eval_row(&mut lab, "iPQ + Quant-Noise", &q.store, q.bytes, "eval", &keep_all)?);
 
-    let mut qn_share = with_noise(base.clone(), NoiseKind::Proxy, 0.1);
+    let mut qn_share = with_noise(base.clone(), QuantSpec::Proxy, 0.1);
     qn_share.share_chunk = 2;
     let qns = lab.train_cached(&qn_share)?;
     lab.sess.upload_all_params(&qns)?;
     let (q, _) = run_ipq(&mut lab.sess, &qns, lab.train_src.as_mut(), &ipq_cfg)?;
-    let pq_scheme = Scheme::Pq { k: ipq_cfg.k, int8_centroids: false };
-    let b = masked_bytes(&lab, pq_scheme, 2, &keep_all);
+    let pq_scheme = QuantSpec::pq(ipq_cfg.k);
+    let b = masked_bytes(&lab, &pq_scheme, 2, &keep_all);
     rows.push(eval_row(&mut lab, "iPQ + QN + share", &q.store, b, "eval", &keep_all)?);
 
-    let b = masked_bytes(&lab, pq_scheme, 2, &prune_keep);
+    let b = masked_bytes(&lab, &pq_scheme, 2, &prune_keep);
     rows.push(eval_row(&mut lab, "iPQ + QN + share + prune", &q.store, b, "eval", &prune_keep)?);
 
     Row::print_header(&format!("Table 2 — {model} ({task})"));
@@ -231,7 +234,7 @@ pub fn table3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
 
     // (b) short QN finetune on top of the plain model (paper: ~10 extra
     // epochs). Model the finetune by continuing with QN for 25% steps.
-    let mut ft = with_noise(base.clone(), NoiseKind::Proxy, 0.1);
+    let mut ft = with_noise(base.clone(), QuantSpec::Proxy, 0.1);
     ft.steps = (steps / 4).max(10);
     ft.seed = base.seed ^ 0xF1;
     // continue from plain (bypass cache: custom continuation)
@@ -243,7 +246,7 @@ pub fn table3(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     rows.push(ipq_row(&mut lab, "+ finetune with Quant-Noise", &finetuned, false, "eval")?);
 
     // (c) QN from scratch
-    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base, QuantSpec::Proxy, 0.1))?;
     rows.push(ipq_row(&mut lab, "train with Quant-Noise", &qn, false, "eval")?);
 
     Row::print_header(&format!("Table 3 — {model} ({task})"));
@@ -264,7 +267,7 @@ pub fn table4(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let base = base_train(&task, steps);
 
     let plain = lab.train_cached(&base)?;
-    let qn = lab.train_cached(&with_noise(base, NoiseKind::Proxy, 0.1))?;
+    let qn = lab.train_cached(&with_noise(base, QuantSpec::Proxy, 0.1))?;
 
     let mut rows = Vec::new();
     for (regime, overrides) in [
@@ -312,9 +315,9 @@ pub fn table5(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
 
     let mut rows = Vec::new();
     for (label, noise) in [
-        ("phi_PQ (exact), subvectors", NoiseKind::ExactPq),
-        ("phi_proxy (zero-out), subvectors", NoiseKind::Proxy),
-        ("phi_mean (subvector mean), subvectors", NoiseKind::MeanSub),
+        ("phi_PQ (exact), subvectors", exact_pq_noise()),
+        ("phi_proxy (zero-out), subvectors", QuantSpec::Proxy),
+        ("phi_mean (subvector mean), subvectors", QuantSpec::MeanSub),
     ] {
         let params = lab.train_cached(&with_noise(base.clone(), noise, 0.1))?;
         // pre-quantization quality
@@ -344,28 +347,27 @@ pub fn table10(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
 
     let mut rows = Vec::new();
     for bits in [4u8, 8] {
-        for (mode, mode_label, noise) in [
-            (IntMode::Histogram, "histogram", if bits == 4 { NoiseKind::Int4 } else { NoiseKind::Int8 }),
-            (
-                IntMode::PerChannel,
-                "channel",
-                if bits == 4 { NoiseKind::Int4Channel } else { NoiseKind::Int8Channel },
-            ),
+        for (observer, mode_label, noise) in [
+            // no in-graph histogram kernel exists, so histogram PTQ
+            // trains against the per-tensor MinMax noise (as before)
+            (IntObserver::Histogram, "histogram", QuantSpec::int(bits, IntObserver::MinMax)),
+            (IntObserver::PerChannel, "channel", QuantSpec::int(bits, IntObserver::PerChannel)),
         ] {
             rows.push(int_row(
                 &mut lab,
                 &format!("int{bits} {mode_label} (post)"),
                 &baseline,
                 bits,
-                mode,
+                observer,
             )?);
-            let qn = lab.train_cached(&with_noise(base.clone(), noise, default_rate(noise)))?;
+            let rate = default_rate(&noise);
+            let qn = lab.train_cached(&with_noise(base.clone(), noise, rate))?;
             rows.push(int_row(
                 &mut lab,
                 &format!("int{bits} {mode_label} + Quant-Noise"),
                 &qn,
                 bits,
-                mode,
+                observer,
             )?);
         }
     }
@@ -385,14 +387,16 @@ pub fn table11(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
     let task = lab.sess.meta.task.clone();
     let steps = wb.scaled(default_steps(&task));
     let n_layers = lab.sess.meta.n_layers;
-    let mut base = with_noise(base_train(&task, steps), NoiseKind::Proxy, 0.1);
+    let mut base = with_noise(base_train(&task, steps), QuantSpec::Proxy, 0.1);
     base.layerdrop = 0.2;
     base.share_chunk = 2;
 
     let prune_keep = every_other_chunk_mask(n_layers, 2);
-    let pq_scheme = Scheme::Pq { k: 64, int8_centroids: false };
+    let pq_scheme = QuantSpec::pq(64);
     let mut rows = Vec::new();
-    for (label, ldste) in [("QN + share + prune", false), ("QN + share + prune, LayerDrop STE", true)] {
+    for (label, ldste) in
+        [("QN + share + prune", false), ("QN + share + prune, LayerDrop STE", true)]
+    {
         let mut cfg = base.clone();
         cfg.ldste = ldste;
         let params = lab.train_cached(&cfg)?;
@@ -403,7 +407,7 @@ pub fn table11(wb: &Workbench, model: &str) -> Result<Vec<Row>> {
             lab.train_src.as_mut(),
             &base_ipq(default_ipq_finetune(&task)),
         )?;
-        let b = masked_bytes(&lab, pq_scheme, 2, &prune_keep);
+        let b = masked_bytes(&lab, &pq_scheme, 2, &prune_keep);
         rows.push(eval_row(&mut lab, label, &q.store, b, "eval", &prune_keep)?);
     }
 
@@ -443,6 +447,7 @@ mod tests {
     fn masked_and_param_bits_consistent() {
         let p = ParamInfo {
             name: "w".into(),
+            structure: "ffn".into(),
             numel: 4096,
             rows: 64,
             cols: 64,
@@ -450,11 +455,8 @@ mod tests {
             pq_block: 8,
         };
         // one stored + one masked == single-param total
-        let both = model_bytes_with_mask(
-            &[p.clone(), p.clone()],
-            Scheme::Int { bits: 8 },
-            &[true, false],
-        );
-        assert_eq!(both, param_bits(&p, Scheme::Int { bits: 8 }) / 8);
+        let spec = QuantSpec::int(8, IntObserver::MinMax);
+        let both = model_bytes_with_mask(&[p.clone(), p.clone()], &spec, &[true, false]);
+        assert_eq!(both, param_bits(&p, &spec) / 8);
     }
 }

@@ -18,12 +18,13 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::coordinator::optim::{clip_grad_norm, Optimizer};
-use crate::coordinator::quantize::{quantize_params, QuantizedModel, WeightScheme};
+use crate::coordinator::quantize::{quantize_params, QuantizedModel};
 use crate::coordinator::trainer::BatchSource;
 use crate::log_info;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
 use crate::quant::pq::PqMatrix;
+use crate::quant::scheme::{PqSpec, QuantSpec};
 use crate::runtime::executable::ModelSession;
 use crate::util::rng::Pcg;
 
@@ -42,7 +43,9 @@ pub struct IpqConfig {
     pub order: Vec<String>,
     /// §3.3: int8-compress centroids at the end
     pub int8_centroids: bool,
-    /// per-structure PQ block-size override (Fig. 6b)
+    /// global PQ block-size override; `None` ⇒ per-param manifest block
+    pub block: Option<usize>,
+    /// per-structure PQ block-size override (Fig. 6b; wins over `block`)
     pub block_override: BTreeMap<String, usize>,
     /// worker threads for k-means/encode (0 ⇒ default)
     pub threads: usize,
@@ -59,10 +62,26 @@ impl Default for IpqConfig {
             float_lr: 0.01,
             order: vec!["ffn".into(), "emb".into(), "attn".into()],
             int8_centroids: false,
+            block: None,
             block_override: BTreeMap::new(),
             threads: 0,
             seed: 17,
         }
+    }
+}
+
+impl IpqConfig {
+    /// The storage/PTQ spec equivalent of this iPQ run (what the model
+    /// looks like once the finetuning procedure is done).
+    pub fn spec(&self) -> QuantSpec {
+        QuantSpec::Pq(PqSpec {
+            k: self.k,
+            block: self.block,
+            kmeans_iters: self.kmeans_iters,
+            int8_codebook: self.int8_centroids,
+            block_override: self.block_override.clone(),
+            threads: self.threads,
+        })
     }
 }
 
@@ -152,17 +171,23 @@ pub fn run_ipq(
                 .block_override
                 .get(&pm.structure)
                 .copied()
+                .or(cfg.block)
                 .or(pm.block_size)
                 .unwrap_or(8);
+            anyhow::ensure!(
+                bs > 0 && cols % bs == 0,
+                "{}: cols {cols} not divisible by PQ block {bs}",
+                pm.name
+            );
             let pcfg = crate::quant::pq::PqConfig {
                 block_size: bs,
                 n_centroids: cfg.k,
                 kmeans_iters: cfg.kmeans_iters,
                 threads: cfg.threads,
             };
-            let m = crate::quant::pq::fit(&work.get(name).unwrap().data, rows, cols, &pcfg, &mut rng);
-            let dec = m.decode();
-            *work.get_mut(name).unwrap() = Tensor::from_vec(&pm.shape, dec);
+            let m =
+                crate::quant::pq::fit(&work.get(name).unwrap().data, rows, cols, &pcfg, &mut rng);
+            m.decode_into(&mut work.get_mut(name).unwrap().data);
             let idx = meta.params.iter().position(|p| &p.name == name).unwrap();
             frozen[idx] = true;
             pq_state.insert(name.clone(), m);
@@ -186,7 +211,10 @@ pub fn run_ipq(
                 }
                 let m = pq_state.get_mut(&pm.name).unwrap();
                 codeword_step(m, &grads[idx], cfg.codeword_lr);
-                *work.get_mut(&pm.name).unwrap() = Tensor::from_vec(&pm.shape, m.decode());
+                // refresh the dequantized weights straight from the
+                // stored assignments on the engine's decode kernel —
+                // no re-encode, no per-step temporary buffer
+                m.decode_into(&mut work.get_mut(&pm.name).unwrap().data);
             }
             // float updates for everything else
             opt.step(&mut work, &grads, cfg.float_lr, &frozen);
@@ -206,21 +234,13 @@ pub fn run_ipq(
     if cfg.int8_centroids {
         for (name, m) in pq_state.iter_mut() {
             m.codebook.compress_int8();
-            let pm = meta.param(name).unwrap();
-            *work.get_mut(name).unwrap() = Tensor::from_vec(&pm.shape, m.decode());
+            m.decode_into(&mut work.get_mut(name).unwrap().data);
         }
         sess.upload_all_params(&work)?;
     }
 
-    // storage accounting via the scheme machinery
-    let scheme = WeightScheme::Pq {
-        k: cfg.k,
-        kmeans_iters: cfg.kmeans_iters,
-        block_override: cfg.block_override.clone(),
-        int8_centroids: cfg.int8_centroids,
-        threads: cfg.threads,
-    };
-    let bytes = crate::coordinator::quantize::scheme_bytes(&meta, &scheme);
+    // storage accounting via the unified scheme machinery
+    let bytes = crate::coordinator::quantize::scheme_bytes(&meta, &cfg.spec());
     let sq_error: f64 = meta
         .params
         .iter()
@@ -249,14 +269,7 @@ pub fn post_pq(
     meta: &crate::model::config::ModelMeta,
     cfg: &IpqConfig,
 ) -> Result<QuantizedModel> {
-    let scheme = WeightScheme::Pq {
-        k: cfg.k,
-        kmeans_iters: cfg.kmeans_iters,
-        block_override: cfg.block_override.clone(),
-        int8_centroids: cfg.int8_centroids,
-        threads: cfg.threads,
-    };
-    quantize_params(params, meta, &scheme, &mut Pcg::new(cfg.seed))
+    quantize_params(params, meta, &cfg.spec(), &mut Pcg::new(cfg.seed))
 }
 
 #[cfg(test)]

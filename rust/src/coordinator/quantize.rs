@@ -2,11 +2,13 @@
 //! parameter store, producing the quantized weights the eval artifact
 //! sees plus exact storage accounting.
 //!
-//! Covers: intN per-tensor (MinMax or Histogram observers, §7.7), intN
-//! per-channel (Table 10), one-shot PQ (no finetuning — the "iPQ" rows
-//! *without* finetuning in ablations), and the iPQ ⊕ int8 combination
-//! (§3.3: int8 centroids; activations are handled by the
-//! `eval_int8act` artifact).
+//! The pipeline is one loop over per-parameter [`Quantizer`] objects
+//! resolved from a [`QuantSpec`] (or any [`QuantizerFactory`] — new
+//! schemes plug in without touching this module). Covers: intN
+//! per-tensor (MinMax or Histogram observers, §7.7), intN per-channel
+//! (Table 10), one-shot PQ (the "iPQ" rows *without* finetuning in
+//! ablations), and the iPQ ⊕ int8 combination (§3.3: int8 centroids;
+//! activations are handled by the `eval_int8act` artifact).
 
 use std::collections::BTreeMap;
 
@@ -14,50 +16,10 @@ use anyhow::Result;
 
 use crate::model::config::ModelMeta;
 use crate::model::params::ParamStore;
-use crate::quant::observer::HistogramObserver;
-use crate::quant::pq::{fit, PqConfig, PqMatrix};
-use crate::quant::scalar;
-use crate::quant::size::{model_bytes, Scheme};
+use crate::quant::pq::PqMatrix;
+use crate::quant::scheme::{QuantSpec, Quantizer as _, QuantizerFactory};
+use crate::quant::size::model_bytes_with;
 use crate::util::rng::Pcg;
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum IntMode {
-    MinMax,
-    Histogram,
-    PerChannel,
-}
-
-#[derive(Debug, Clone)]
-pub enum WeightScheme {
-    /// fp32 passthrough (size accounting only)
-    None,
-    Int {
-        bits: u8,
-        mode: IntMode,
-    },
-    Pq {
-        k: usize,
-        kmeans_iters: usize,
-        /// per-structure block-size override (Fig. 6b); falls back to
-        /// the manifest's per-param block size
-        block_override: BTreeMap<String, usize>,
-        int8_centroids: bool,
-        /// k-means/encode worker threads (0 ⇒ all cores)
-        threads: usize,
-    },
-}
-
-impl WeightScheme {
-    pub fn pq(k: usize) -> WeightScheme {
-        WeightScheme::Pq {
-            k,
-            kmeans_iters: 12,
-            block_override: BTreeMap::new(),
-            int8_centroids: false,
-            threads: 0,
-        }
-    }
-}
 
 pub struct QuantizedModel {
     /// Dequantized weights to feed the eval artifact.
@@ -70,11 +32,23 @@ pub struct QuantizedModel {
     pub sq_error: f64,
 }
 
-/// Apply `scheme` to every noised parameter.
+/// Apply a spec to every noised parameter.
 pub fn quantize_params(
     params: &ParamStore,
     meta: &ModelMeta,
-    scheme: &WeightScheme,
+    spec: &QuantSpec,
+    rng: &mut Pcg,
+) -> Result<QuantizedModel> {
+    quantize_params_with(params, meta, spec, rng)
+}
+
+/// [`quantize_params`] over any quantizer family — the extension point
+/// a new scheme implements ([`QuantizerFactory`] + `Quantizer`) to get
+/// the whole PTQ pipeline and storage accounting for free.
+pub fn quantize_params_with(
+    params: &ParamStore,
+    meta: &ModelMeta,
+    scheme: &dyn QuantizerFactory,
     rng: &mut Pcg,
 ) -> Result<QuantizedModel> {
     let mut store = ParamStore::new();
@@ -90,80 +64,34 @@ pub fn quantize_params(
             continue;
         }
         let (rows, cols) = pm.view.unwrap_or((1, t.numel()));
-        let mut data = t.data.clone();
-        match scheme {
-            WeightScheme::None => {}
-            WeightScheme::Int { bits, mode } => match mode {
-                IntMode::MinMax => {
-                    let qp = scalar::QParams::from_minmax(&data, *bits);
-                    scalar::roundtrip(&mut data, &qp);
-                }
-                IntMode::Histogram => {
-                    let mut h = HistogramObserver::new(2048);
-                    h.observe(&data);
-                    let qp = h.qparams(*bits);
-                    scalar::roundtrip(&mut data, &qp);
-                }
-                IntMode::PerChannel => {
-                    scalar::roundtrip_per_channel(&mut data, rows, cols, *bits);
-                }
-            },
-            WeightScheme::Pq { k, kmeans_iters, block_override, int8_centroids, threads } => {
-                let bs = block_override
-                    .get(&pm.structure)
-                    .copied()
-                    .or(pm.block_size)
-                    .unwrap_or(8);
-                anyhow::ensure!(
-                    cols % bs == 0,
-                    "{}: cols {cols} not divisible by PQ block {bs}",
-                    pm.name
-                );
-                let cfg = PqConfig {
-                    block_size: bs,
-                    n_centroids: *k,
-                    kmeans_iters: *kmeans_iters,
-                    threads: *threads,
-                };
-                let mut m = fit(&data, rows, cols, &cfg, rng);
-                if *int8_centroids {
-                    m.codebook.compress_int8();
-                }
-                data = m.decode();
-                pq_map.insert(pm.name.clone(), m);
-            }
-        }
+        let info = pm.to_param_info(None);
+        let qt = scheme
+            .for_param(&info)
+            .fit(&t.data, rows, cols, rng)
+            .map_err(|e| anyhow::anyhow!("{} ({}): {e}", pm.name, scheme.spec_string()))?;
         sq_error += t
             .data
             .iter()
-            .zip(&data)
+            .zip(&qt.data)
             .map(|(&a, &b)| ((a - b) as f64).powi(2))
             .sum::<f64>();
-        store.insert(&pm.name, crate::model::tensor::Tensor::from_vec(&pm.shape, data));
+        if let Some(m) = qt.pq {
+            pq_map.insert(pm.name.clone(), m);
+        }
+        store.insert(&pm.name, crate::model::tensor::Tensor::from_vec(&pm.shape, qt.data));
     }
 
-    let bytes = scheme_bytes(meta, scheme);
+    let bytes = inventory_bytes(meta, scheme);
     Ok(QuantizedModel { store, bytes, pq: pq_map, sq_error })
 }
 
-/// Storage accounting for a scheme over this model's inventory.
-pub fn scheme_bytes(meta: &ModelMeta, scheme: &WeightScheme) -> u64 {
-    let infos: Vec<_> = match scheme {
-        WeightScheme::Pq { block_override, .. } => meta
-            .params
-            .iter()
-            .map(|p| p.to_param_info(block_override.get(&p.structure).copied()))
-            .collect(),
-        _ => meta.param_infos(),
-    };
-    let s = match scheme {
-        WeightScheme::None => Scheme::Fp32,
-        WeightScheme::Int { bits, .. } => Scheme::Int { bits: *bits },
-        WeightScheme::Pq { k, int8_centroids, .. } => {
-            Scheme::Pq { k: *k, int8_centroids: *int8_centroids }
-        }
-    };
-    model_bytes(&infos, s)
+/// Storage accounting for a spec over this model's inventory.
+pub fn scheme_bytes(meta: &ModelMeta, spec: &QuantSpec) -> u64 {
+    inventory_bytes(meta, spec)
+}
+
+fn inventory_bytes(meta: &ModelMeta, scheme: &dyn QuantizerFactory) -> u64 {
+    model_bytes_with(&meta.param_infos(), scheme)
 }
 
 #[cfg(test)]
@@ -171,6 +99,7 @@ mod tests {
     use super::*;
     use crate::model::config::ParamMeta;
     use crate::model::tensor::Tensor;
+    use crate::quant::scheme::IntObserver;
 
     fn tiny_meta() -> ModelMeta {
         ModelMeta {
@@ -224,7 +153,7 @@ mod tests {
         let q = quantize_params(
             &params,
             &meta,
-            &WeightScheme::Int { bits: 8, mode: IntMode::MinMax },
+            &QuantSpec::int(8, IntObserver::MinMax),
             &mut Pcg::new(0),
         )
         .unwrap();
@@ -238,8 +167,20 @@ mod tests {
     fn int4_worse_than_int8() {
         let meta = tiny_meta();
         let params = tiny_params();
-        let q8 = quantize_params(&params, &meta, &WeightScheme::Int { bits: 8, mode: IntMode::MinMax }, &mut Pcg::new(0)).unwrap();
-        let q4 = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::MinMax }, &mut Pcg::new(0)).unwrap();
+        let q8 = quantize_params(
+            &params,
+            &meta,
+            &QuantSpec::int(8, IntObserver::MinMax),
+            &mut Pcg::new(0),
+        )
+        .unwrap();
+        let q4 = quantize_params(
+            &params,
+            &meta,
+            &QuantSpec::int(4, IntObserver::MinMax),
+            &mut Pcg::new(0),
+        )
+        .unwrap();
         assert!(q4.sq_error > q8.sq_error);
         assert!(q4.bytes < q8.bytes);
     }
@@ -248,10 +189,10 @@ mod tests {
     fn pq_returns_codebooks_and_smaller_size() {
         let meta = tiny_meta();
         let params = tiny_params();
-        let q = quantize_params(&params, &meta, &WeightScheme::pq(16), &mut Pcg::new(1)).unwrap();
+        let q = quantize_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(1)).unwrap();
         assert!(q.pq.contains_key("w"));
         assert!(!q.pq.contains_key("ln"));
-        let fp = scheme_bytes(&meta, &WeightScheme::None);
+        let fp = scheme_bytes(&meta, &QuantSpec::None);
         assert!(q.bytes < fp, "{} vs {fp}", q.bytes);
         // decoded store matches PqMatrix::decode
         assert_eq!(q.store.get("w").unwrap().data, q.pq["w"].decode());
@@ -261,10 +202,10 @@ mod tests {
     fn int8_centroids_shrink_codebook() {
         let meta = tiny_meta();
         let params = tiny_params();
-        let plain = quantize_params(&params, &meta, &WeightScheme::pq(16), &mut Pcg::new(2)).unwrap();
-        let mut s = WeightScheme::pq(16);
-        if let WeightScheme::Pq { int8_centroids, .. } = &mut s {
-            *int8_centroids = true;
+        let plain = quantize_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(2)).unwrap();
+        let mut s = QuantSpec::pq(16);
+        if let QuantSpec::Pq(p) = &mut s {
+            p.int8_codebook = true;
         }
         let combo = quantize_params(&params, &meta, &s, &mut Pcg::new(2)).unwrap();
         assert!(combo.bytes < plain.bytes);
@@ -287,12 +228,12 @@ mod tests {
             Tensor::from_vec(&[128, 128], (0..128 * 128).map(|_| rng.next_normal()).collect()),
         );
         params.insert("ln", Tensor::from_vec(&[16], vec![1.0; 16]));
-        let mut s = WeightScheme::pq(4);
-        if let WeightScheme::Pq { block_override, .. } = &mut s {
-            block_override.insert("ffn".into(), 16);
+        let mut s = QuantSpec::pq(4);
+        if let QuantSpec::Pq(p) = &mut s {
+            p.block_override.insert("ffn".into(), 16);
         }
         let big_blocks = quantize_params(&params, &meta, &s, &mut Pcg::new(3)).unwrap();
-        let small = quantize_params(&params, &meta, &WeightScheme::pq(4), &mut Pcg::new(3)).unwrap();
+        let small = quantize_params(&params, &meta, &QuantSpec::pq(4), &mut Pcg::new(3)).unwrap();
         assert!(big_blocks.bytes < small.bytes, "{} vs {}", big_blocks.bytes, small.bytes);
         assert!(big_blocks.sq_error > small.sq_error);
     }
@@ -304,7 +245,7 @@ mod tests {
         let q = quantize_params(
             &params,
             &meta,
-            &WeightScheme::Int { bits: 4, mode: IntMode::Histogram },
+            &QuantSpec::int(4, IntObserver::Histogram),
             &mut Pcg::new(4),
         )
         .unwrap();
@@ -324,8 +265,33 @@ mod tests {
                 }
             }
         }
-        let pt = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::MinMax }, &mut Pcg::new(5)).unwrap();
-        let pc = quantize_params(&params, &meta, &WeightScheme::Int { bits: 4, mode: IntMode::PerChannel }, &mut Pcg::new(5)).unwrap();
+        let pt = quantize_params(
+            &params,
+            &meta,
+            &QuantSpec::int(4, IntObserver::MinMax),
+            &mut Pcg::new(5),
+        )
+        .unwrap();
+        let pc = quantize_params(
+            &params,
+            &meta,
+            &QuantSpec::int(4, IntObserver::PerChannel),
+            &mut Pcg::new(5),
+        )
+        .unwrap();
         assert!(pc.sq_error < pt.sq_error);
+    }
+
+    #[test]
+    fn bad_block_size_is_a_user_error_not_a_panic() {
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let mut s = QuantSpec::pq(4);
+        if let QuantSpec::Pq(p) = &mut s {
+            p.block = Some(7); // 32 cols not divisible by 7
+        }
+        let e = quantize_params(&params, &meta, &s, &mut Pcg::new(6)).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains('w') && msg.contains("divisible"), "{msg}");
     }
 }

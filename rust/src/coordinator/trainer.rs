@@ -13,11 +13,9 @@ use crate::log_info;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
 use crate::quant::assign;
-use crate::quant::kmeans::{kmeans, KmeansConfig};
-use crate::quant::noise::NoiseKind;
-use crate::quant::pq::{decode_codes_into, mean_subvector_hat};
-use crate::quant::codebook::Codebook;
 use crate::quant::prune::share_map;
+use crate::quant::scheme::{HatKind, QuantSpec, Quantizer as _, SchemeError};
+use crate::quant::size::ParamInfo;
 use crate::runtime::executable::{BatchInput, ModelSession};
 use crate::util::rng::Pcg;
 
@@ -60,7 +58,9 @@ pub struct TrainConfig {
     pub optimizer: OptKind,
     /// gradient-norm clip; 0 disables (paper uses 0.1 for the LM)
     pub clip: f32,
-    pub noise: NoiseKind,
+    /// the noise function φ (§4.2) — any [`QuantSpec`]; PQ specs carry
+    /// their own K/iteration/block options
+    pub noise: QuantSpec,
     pub noise_rate: f32,
     /// LayerDrop probability (paper: 0.2)
     pub layerdrop: f32,
@@ -70,8 +70,6 @@ pub struct TrainConfig {
     pub share_chunk: usize,
     /// steps between exact-PQ hat refreshes ("once per epoch")
     pub hat_refresh: usize,
-    /// centroids for the exact-PQ noise codebooks
-    pub pq_k: usize,
     /// worker threads for the hat refresh / assignment engine
     /// (0 ⇒ all available cores)
     pub threads: usize,
@@ -86,13 +84,12 @@ impl Default for TrainConfig {
             schedule: Schedule::Cosine { lr: 0.05, min_lr: 1e-4, warmup: 30, total: 300 },
             optimizer: OptKind::Sgd { momentum: 0.9, nesterov: true },
             clip: 0.1,
-            noise: NoiseKind::Proxy,
+            noise: QuantSpec::Proxy,
             noise_rate: 0.1,
             layerdrop: 0.0,
             ldste: false,
             share_chunk: 0,
             hat_refresh: 100,
-            pq_k: 64,
             threads: 0,
             seed: 0,
             log_every: 50,
@@ -121,7 +118,11 @@ pub struct Trainer<'s, 'rt> {
 }
 
 impl<'s, 'rt> Trainer<'s, 'rt> {
-    pub fn new(sess: &'s mut ModelSession<'rt>, params: ParamStore, cfg: TrainConfig) -> Trainer<'s, 'rt> {
+    pub fn new(
+        sess: &'s mut ModelSession<'rt>,
+        params: ParamStore,
+        cfg: TrainConfig,
+    ) -> Trainer<'s, 'rt> {
         let opt = match cfg.optimizer {
             OptKind::Sgd { momentum, nesterov } => Optimizer::sgd(&params, momentum, nesterov),
             OptKind::Adam => Optimizer::adam(&params),
@@ -186,12 +187,11 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         }
     }
 
-    fn grad_entry(&self) -> &'static str {
+    fn grad_entry(&self) -> Result<&'static str> {
         if self.cfg.ldste && self.sess.has_entry("grad_mix_ldste") {
-            "grad_mix_ldste"
-        } else {
-            self.cfg.noise.entry()
+            return Ok("grad_mix_ldste");
         }
+        Ok(self.cfg.noise.grad_entry()?)
     }
 
     /// Sample this step's LayerDrop keep mask (chunks drop together
@@ -231,28 +231,28 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         }
         struct HatJob {
             idx: usize,
-            rows: usize,
-            cols: usize,
-            bs: usize,
+            info: ParamInfo,
             rng: Pcg,
         }
-        let needs_rng = self.cfg.noise == NoiseKind::ExactPq;
+        impl HatJob {
+            fn work(&self) -> usize {
+                self.info.rows * self.info.cols
+            }
+        }
+        let needs_rng = matches!(self.cfg.noise, QuantSpec::Pq(_));
         let mut jobs = Vec::new();
         for (i, pm) in self.sess.meta.params.iter().enumerate() {
             if !pm.noised {
                 continue;
             }
-            let (rows, cols) = pm.view.unwrap();
-            let bs = pm.block_size.unwrap();
             // mean-sub hats are RNG-free: don't burn trainer stream draws
             let rng = if needs_rng { self.rng.split(i as u64) } else { Pcg::new(0) };
-            jobs.push(HatJob { idx: i, rows, cols, bs, rng });
+            jobs.push(HatJob { idx: i, info: pm.to_param_info(None), rng });
         }
         if jobs.is_empty() {
             return Ok(());
         }
-        let noise = self.cfg.noise;
-        let pq_k = self.cfg.pq_k;
+        let noise = self.cfg.noise.clone();
         let total = assign::resolve_threads(self.cfg.threads);
         let outer = total.clamp(1, jobs.len());
         // Largest-first order groups similarly-sized matrices into the
@@ -260,7 +260,7 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         // dominant matrix (ties keep manifest order; uploads are keyed
         // by idx, and the per-matrix RNG streams were already split
         // above, so scheduling order cannot change results).
-        jobs.sort_by_key(|j| std::cmp::Reverse(j.rows * j.cols));
+        jobs.sort_by_key(|j| std::cmp::Reverse(j.work()));
         // Waves of `outer` matrices: each wave computes in parallel (one
         // worker per matrix) and uploads before the next wave starts, so
         // peak extra memory is bounded by `outer` hats — not a full copy
@@ -271,11 +271,12 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
             // matrix most of the machine instead of pinning it to one
             // core while finished workers idle (engine codes are
             // thread-count-invariant, so this cannot change results).
-            let wave_work: usize = wave.iter().map(|j| j.rows * j.cols).sum();
+            let wave_work: usize = wave.iter().map(|j| j.work()).sum();
             let wave_len = wave.len();
-            let wave_hats: Vec<(usize, Vec<f32>)> = {
+            let wave_hats: Vec<Result<(usize, Vec<f32>), SchemeError>> = {
                 let params = &self.params;
                 let metas = &self.sess.meta.params;
+                let noise = &noise;
                 // allocate inner threads from a shared budget (largest
                 // job first) so Σinner ≤ total — proportional rounding
                 // alone can oversubscribe the machine
@@ -286,7 +287,7 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
                         .iter_mut()
                         .enumerate()
                         .map(|(pos, job)| {
-                            let work = job.rows * job.cols;
+                            let work = job.work();
                             let after = wave_len - 1 - pos;
                             let cap = budget.saturating_sub(after).max(1);
                             let prop = (budget as f64 * work as f64
@@ -297,45 +298,29 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
                             work_left = work_left.saturating_sub(work);
                             s.spawn(move || {
                                 let w = &params.get(&metas[job.idx].name).unwrap().data;
-                                let hat = match noise {
-                                    NoiseKind::MeanSub => {
-                                        mean_subvector_hat(w, job.rows, job.cols, job.bs)
-                                    }
-                                    NoiseKind::ExactPq => {
-                                        let km = kmeans(
-                                            w,
-                                            job.bs,
-                                            &KmeansConfig {
-                                                k: pq_k,
-                                                max_iters: 6,
-                                                threads: inner,
-                                                ..Default::default()
-                                            },
-                                            &mut job.rng,
-                                        );
-                                        // k-means' final assignments come
-                                        // from the same engine kernel
-                                        // pq::encode uses, so decoding them
-                                        // directly is bit-identical to a
-                                        // re-encode — and skips the
-                                        // redundant O(n·K·d) pass.
-                                        let cb =
-                                            Codebook::new(km.centroids, km.k, job.bs);
-                                        let mut hat = vec![0.0f32; w.len()];
-                                        decode_codes_into(&cb, &km.assignments, &mut hat);
-                                        hat
-                                    }
-                                    _ => unreachable!(),
-                                };
-                                (job.idx, hat)
+                                // PQ hats refit with a short k-means whose
+                                // final assignments come from the same
+                                // engine kernel pq::encode uses, so the
+                                // decoded hat is bit-identical to a
+                                // re-encode — minus the redundant
+                                // O(n·K·d) pass.
+                                let q = noise.clone().with_threads(inner).resolve(&job.info);
+                                match q.hat(w, job.info.rows, job.info.cols, &mut job.rng)? {
+                                    HatKind::Host(hat) => Ok((job.idx, hat)),
+                                    HatKind::InGraph { entry } => Err(SchemeError::InGraphOnly {
+                                        scheme: noise.to_string(),
+                                        entry,
+                                    }),
+                                }
                             })
                         })
                         .collect();
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 })
             };
-            for (i, hat) in &wave_hats {
-                self.sess.upload_hat(*i, hat)?;
+            for r in wave_hats {
+                let (i, hat) = r?;
+                self.sess.upload_hat(i, &hat)?;
             }
         }
         Ok(())
@@ -349,9 +334,13 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
             self.refresh_hats()?;
         }
         let keep = self.sample_keep();
-        let rate = if self.cfg.noise == NoiseKind::None { 0.0 } else { self.cfg.noise_rate };
+        let rate = if matches!(self.cfg.noise, QuantSpec::None) {
+            0.0
+        } else {
+            self.cfg.noise_rate
+        };
         let seed = (self.rng.next_u32() & 0x7fff_ffff) as i32;
-        let entry = self.grad_entry();
+        let entry = self.grad_entry()?;
         let (loss, mut grads) =
             self.sess
                 .grad(entry, &batch.input(), batch.targets(), &keep, rate, seed)?;
@@ -383,7 +372,7 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
                     "train[{}] step {s}/{} loss {last:.4} (noise {} rate {})",
                     self.sess.meta.name,
                     self.cfg.steps,
-                    self.cfg.noise.name(),
+                    self.cfg.noise,
                     self.cfg.noise_rate
                 );
             }
@@ -453,6 +442,6 @@ mod tests {
     fn default_config_sane() {
         let c = TrainConfig::default();
         assert!(c.steps > 0 && c.noise_rate > 0.0);
-        assert_eq!(c.noise, NoiseKind::Proxy);
+        assert_eq!(c.noise, QuantSpec::Proxy);
     }
 }

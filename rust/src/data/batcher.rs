@@ -72,7 +72,13 @@ pub struct EpochBatcher<T: Copy> {
 }
 
 impl<T: Copy> EpochBatcher<T> {
-    pub fn new(data: Vec<T>, labels: Vec<i32>, example_len: usize, batch: usize, seed: u64) -> Self {
+    pub fn new(
+        data: Vec<T>,
+        labels: Vec<i32>,
+        example_len: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
         assert_eq!(data.len(), labels.len() * example_len);
         assert!(labels.len() >= batch, "need at least one full batch");
         let mut rng = Pcg::new(seed);

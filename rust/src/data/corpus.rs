@@ -113,7 +113,9 @@ pub fn make_cls_dataset(
     for _ in 0..n {
         let label = rng.below(n_classes as u32) as usize;
         let mut seq: Vec<i32> = (0..seq_len)
-            .map(|_| (2 * n_classes + 1 + rng.below((vocab - 2 * n_classes - 1) as u32) as usize) as i32)
+            .map(|_| {
+                (2 * n_classes + 1 + rng.below((vocab - 2 * n_classes - 1) as u32) as usize) as i32
+            })
             .collect();
         // plant label markers at random positions (~20% of positions)
         let n_markers = (seq_len / 5).max(2);
@@ -151,7 +153,8 @@ pub fn make_img_dataset(
                     1 => ((fy + phase) * freq * 0.4).sin(),          // horizontal stripes
                     2 => ((fx + fy + phase) * freq * 0.3).sin(),     // diagonal
                     3 => ((fx - fy + phase) * freq * 0.3).sin(),     // anti-diagonal
-                    4 => (((fx + phase) * 0.8).sin() * ((fy + phase) * 0.8).sin()).signum(), // checker
+                    // checker
+                    4 => (((fx + phase) * 0.8).sin() * ((fy + phase) * 0.8).sin()).signum(),
                     5 => fx / size as f32 * 2.0 - 1.0,               // x gradient
                     6 => fy / size as f32 * 2.0 - 1.0,               // y gradient
                     7 => {

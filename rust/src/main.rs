@@ -19,13 +19,19 @@ use quant_noise::bench_harness::common::{Row, Workbench};
 use quant_noise::bench_harness::specs::{base_train, default_rate, default_steps, with_noise};
 use quant_noise::bench_harness::{figures, report, tables};
 use quant_noise::coordinator::ipq::{run_ipq, IpqConfig};
-use quant_noise::coordinator::quantize::{quantize_params, IntMode, WeightScheme};
+use quant_noise::coordinator::quantize::quantize_params;
 use quant_noise::model::params::ParamStore;
-use quant_noise::quant::noise::NoiseKind;
+use quant_noise::quant::scheme::{IntObserver, PqSpec, QuantSpec, SchemeError};
 use quant_noise::util::cli::Command;
 use quant_noise::util::logging;
 use quant_noise::util::rng::Pcg;
 use quant_noise::{log_error, log_info};
+
+/// Parse a `--scheme` spec string into a user-facing error on failure
+/// (no panics, no backtraces — just the parser's message).
+fn parse_scheme(s: &str) -> Result<QuantSpec> {
+    s.parse().map_err(|e: SchemeError| anyhow::anyhow!("--scheme: {e}"))
+}
 
 fn artifacts_dir(args: &quant_noise::util::cli::Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
@@ -79,12 +85,19 @@ fn info(rest: &[String]) -> Result<()> {
     for (name, m) in &man.models {
         let n_params: usize = m.params.iter().map(|p| p.numel()).sum();
         println!(
-            "{name}: task={} layers={} batch={} seq={} vocab={} classes={} params={} ({:.2} MB fp32)",
+            "{name}: task={} layers={} batch={} seq={} vocab={} classes={} params={} \
+             ({:.2} MB fp32)",
             m.task, m.n_layers, m.batch, m.seq_len, m.vocab, m.n_classes,
             n_params, n_params as f64 * 4.0 / 1e6
         );
         for e in &m.entries {
-            println!("  entry {:<18} {} inputs, {} outputs [{}]", e.name, e.inputs.len(), e.outputs.len(), e.file);
+            println!(
+                "  entry {:<18} {} inputs, {} outputs [{}]",
+                e.name,
+                e.inputs.len(),
+                e.outputs.len(),
+                e.file
+            );
         }
     }
     Ok(())
@@ -96,8 +109,13 @@ fn train(rest: &[String]) -> Result<()> {
     let cmd = Command::new("train", "train a model with Quant-Noise")
         .opt_default("artifacts", "artifacts", "artifact directory")
         .opt_default("model", "lm_tiny", "model name from the manifest")
-        .opt_default("noise", "proxy", "none|proxy|exact_pq|mean_sub|int8|int4|int8_channel|int4_channel")
-        .opt("rate", "noise rate p (default: per-kind paper value)")
+        .opt_default(
+            "scheme",
+            "proxy",
+            "noise scheme spec: none|proxy|mean_sub|exact_pq|pq:k=..|int8[:per_channel]|int4",
+        )
+        .alias("noise")
+        .opt("rate", "noise rate p (default: per-scheme paper value)")
         .opt("steps", "training steps (default: per-task)")
         .opt_default("layerdrop", "0", "LayerDrop probability")
         .opt_default("share", "0", "weight-sharing chunk (0=off)")
@@ -110,14 +128,13 @@ fn train(rest: &[String]) -> Result<()> {
     let model = args.get_or("model", "lm_tiny").to_string();
     let mut lab = wb.lab(&model)?;
     let task = lab.sess.meta.task.clone();
-    let noise = NoiseKind::parse(args.get_or("noise", "proxy"))
-        .ok_or_else(|| anyhow::anyhow!("bad --noise"))?;
+    let noise = parse_scheme(args.get_or("scheme", "proxy"))?;
+    // fail fast on PTQ-only specs (e.g. int8:histogram has no in-graph
+    // grad kernel) instead of erroring at the first training step
+    noise.grad_entry().map_err(|e| anyhow::anyhow!("--scheme: {e}"))?;
     let steps = args.num_or("steps", default_steps(&task));
-    let mut cfg = with_noise(
-        base_train(&task, steps),
-        noise,
-        args.num_or("rate", default_rate(noise)),
-    );
+    let rate = args.num_or("rate", default_rate(&noise));
+    let mut cfg = with_noise(base_train(&task, steps), noise, rate);
     cfg.layerdrop = args.num_or("layerdrop", 0.0);
     cfg.share_chunk = args.num_or("share", 0usize);
     cfg.threads = args.num_or("threads", 0usize);
@@ -144,7 +161,11 @@ fn quantize(rest: &[String]) -> Result<()> {
         .opt_default("artifacts", "artifacts", "artifact directory")
         .opt_default("model", "lm_tiny", "model name")
         .req("params", "QNP1 file of trained params")
-        .opt_default("scheme", "ipq", "ipq|pq|int8|int4")
+        .opt_default(
+            "scheme",
+            "ipq",
+            "ipq[:k=..,..]|pq|int8|int4 shorthands, or any spec string",
+        )
         .opt_default("mode", "histogram", "intN observer: histogram|minmax|channel")
         .opt_default("k", "64", "PQ centroids")
         .opt_default("threads", "0", "PQ/k-means worker threads (0=all cores)")
@@ -160,44 +181,112 @@ fn quantize(rest: &[String]) -> Result<()> {
 
     let k: usize = args.num_or("k", 64);
     let scheme = args.get_or("scheme", "ipq").to_string();
-    let (store, bytes) = match scheme.as_str() {
-        "int8" | "int4" => {
-            let bits = if scheme == "int8" { 8 } else { 4 };
-            let mode = match args.get_or("mode", "histogram") {
-                "minmax" => IntMode::MinMax,
-                "channel" => IntMode::PerChannel,
-                _ => IntMode::Histogram,
-            };
-            let q = quantize_params(&params, &lab.sess.meta, &WeightScheme::Int { bits, mode }, &mut Pcg::new(5))?;
-            (q.store, q.bytes)
-        }
-        "pq" => {
-            let mut s = WeightScheme::pq(k);
-            if let WeightScheme::Pq { int8_centroids, threads, .. } = &mut s {
-                *int8_centroids = args.flag("int8-centroids");
-                *threads = args.num_or("threads", 0usize);
+    let (store, bytes, int8_cb) = if scheme == "ipq" || scheme.starts_with("ipq:") {
+        // iPQ is a finetuning *procedure*, not just a storage scheme —
+        // its options reuse the pq spec grammar (`ipq:k=128,cb=int8`)
+        let mut cfg = IpqConfig { k, ..Default::default() };
+        cfg.int8_centroids = args.flag("int8-centroids");
+        cfg.threads = args.num_or("threads", 0usize);
+        cfg.finetune_steps = 25;
+        if let Some(opts) = scheme.strip_prefix("ipq:") {
+            // apply only the keys the user actually typed: PqSpec's
+            // defaults (K=256, iters=12) are not the iPQ CLI defaults
+            let explicit: Vec<&str> = opts
+                .split(',')
+                .filter_map(|kv| kv.split_once('=').map(|(key, _)| key))
+                .collect();
+            let parsed = QuantSpec::parse(&format!("pq:{opts}")).map_err(|e| {
+                let reason = match e {
+                    SchemeError::Parse { reason, .. } => reason,
+                    other => other.to_string(),
+                };
+                anyhow::anyhow!("--scheme {scheme}: {reason}")
+            })?;
+            if let QuantSpec::Pq(p) = parsed {
+                if explicit.contains(&"k") {
+                    cfg.k = p.k;
+                }
+                if explicit.contains(&"iters") {
+                    cfg.kmeans_iters = p.kmeans_iters;
+                }
+                if explicit.contains(&"cb") {
+                    // an explicitly typed cb= wins over --int8-centroids
+                    cfg.int8_centroids = p.int8_codebook;
+                }
+                cfg.block = p.block;
+                cfg.block_override = p.block_override;
+                if explicit.contains(&"threads") {
+                    cfg.threads = p.threads;
+                }
             }
-            let q = quantize_params(&params, &lab.sess.meta, &s, &mut Pcg::new(5))?;
-            (q.store, q.bytes)
         }
-        _ => {
-            let mut cfg = IpqConfig { k, ..Default::default() };
-            cfg.int8_centroids = args.flag("int8-centroids");
-            cfg.threads = args.num_or("threads", 0usize);
-            cfg.finetune_steps = 25;
-            lab.sess.upload_all_params(&params)?;
-            let (q, _) = run_ipq(&mut lab.sess, &params, lab.train_src.as_mut(), &cfg)?;
-            (q.store, q.bytes)
-        }
+        let int8_cb = cfg.int8_centroids;
+        lab.sess.upload_all_params(&params)?;
+        let (q, _) = run_ipq(&mut lab.sess, &params, lab.train_src.as_mut(), &cfg)?;
+        (q.store, q.bytes, int8_cb)
+    } else {
+        // one-shot PTQ: legacy shorthands keep their flag-driven
+        // defaults; anything else is a full spec string
+        let spec = match scheme.as_str() {
+            "int8" | "int4" => {
+                let bits = if scheme == "int8" { 8 } else { 4 };
+                let observer = match args.get_or("mode", "histogram") {
+                    "minmax" => IntObserver::MinMax,
+                    "channel" => IntObserver::PerChannel,
+                    "histogram" => IntObserver::Histogram,
+                    other => anyhow::bail!(
+                        "--mode: unknown observer '{other}' (histogram|minmax|channel)"
+                    ),
+                };
+                QuantSpec::int(bits, observer)
+            }
+            "pq" => {
+                let mut p = PqSpec::new(k);
+                p.int8_codebook = args.flag("int8-centroids");
+                p.threads = args.num_or("threads", 0usize);
+                QuantSpec::Pq(p)
+            }
+            other => {
+                // full spec strings carry their own options (--k/--mode
+                // apply to the shorthands only), but --int8-centroids and
+                // --threads compose rather than being silently dropped —
+                // with explicitly typed spec keys winning over flags,
+                // matching the ipq: precedence rule above
+                let mut spec = parse_scheme(other)?;
+                let explicit_cb = other
+                    .split_once(':')
+                    .map(|(_, opts)| {
+                        opts.split(',')
+                            .filter_map(|kv| kv.split_once('='))
+                            .any(|(key, _)| key == "cb")
+                    })
+                    .unwrap_or(false);
+                if args.flag("int8-centroids") && !explicit_cb {
+                    if let QuantSpec::Pq(p) = &mut spec {
+                        p.int8_codebook = true;
+                    }
+                }
+                let threads = args.num_or("threads", 0usize);
+                if threads != 0 {
+                    spec = spec.with_threads(threads);
+                }
+                spec
+            }
+        };
+        let int8_cb = matches!(&spec, QuantSpec::Pq(p) if p.int8_codebook);
+        let q = quantize_params(&params, &lab.sess.meta, &spec, &mut Pcg::new(5))?;
+        (q.store, q.bytes, int8_cb)
     };
 
     let keep = lab.keep_all();
-    let entry = if args.flag("int8-centroids") && lab.sess.has_entry("eval_int8act") {
+    // §3.3 evaluation entry follows the scheme actually applied (an
+    // int8 codebook requested via `cb=int8` counts, not just the flag)
+    let entry = if int8_cb && lab.sess.has_entry("eval_int8act") {
         "eval_int8act"
     } else {
         "eval"
     };
-    let fp = quant_noise::coordinator::quantize::scheme_bytes(&lab.sess.meta, &WeightScheme::None);
+    let fp = quant_noise::coordinator::quantize::scheme_bytes(&lab.sess.meta, &QuantSpec::None);
     let ev = lab.eval_params(&store, entry, &keep)?;
     println!(
         "scheme={scheme} size={:.3}MB compression=×{:.1} nll={:.4} ppl={:.2} acc={:.2}%",
@@ -245,7 +334,8 @@ fn e2e(rest: &[String]) -> Result<()> {
     let args = parse(cmd, rest)?;
     let mut wb = Workbench::new(&artifacts_dir(&args))?;
     wb.step_scale = args.num_or("scale", 1.0);
-    quant_noise::bench_harness::e2e::run(&wb, args.get_or("model", "lm_tiny"), args.parse_num("steps"))
+    let model = args.get_or("model", "lm_tiny").to_string();
+    quant_noise::bench_harness::e2e::run(&wb, &model, args.parse_num("steps"))
 }
 
 // ------------------------------------------------------------ bench ---
@@ -253,7 +343,7 @@ fn e2e(rest: &[String]) -> Result<()> {
 fn bench(rest: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "regenerate a paper table/figure")
         .opt_default("artifacts", "artifacts", "artifact directory")
-        .req("exp", "table1|table2|table3|table4|table5|table10|table11|fig2|fig3|fig4|fig5|fig6|all")
+        .req("exp", "table1..5|table10|table11|fig2..fig6|all")
         .opt("model", "model override (defaults per experiment)")
         .opt_default("scale", "1.0", "step scale (quick runs: 0.1)")
         .opt_default("out", "results/results.md", "markdown results sink");

@@ -54,6 +54,7 @@ impl ParamMeta {
         let (rows, cols) = self.view.unwrap_or((1, self.numel()));
         ParamInfo {
             name: self.name.clone(),
+            structure: self.structure.clone(),
             numel: self.numel(),
             rows,
             cols,
@@ -234,5 +235,7 @@ mod tests {
         let infos = m.param_infos();
         assert!(infos[0].quantized && !infos[2].quantized);
         assert_eq!(infos[0].pq_block, 8);
+        assert_eq!(infos[0].structure, "emb");
+        assert_eq!(infos[1].structure, "attn");
     }
 }

@@ -1,8 +1,28 @@
-//! Quantization substrate: scalar intN (§3.1), observers (§7.7),
-//! k-means + Product Quantization (§3.2) on the shared parallel
-//! nearest-codeword [`assign`] engine, codebooks incl. the int8
-//! combination (§3.3), model-size accounting (Eq. 5), LayerDrop pruning
-//! and weight sharing (§4.2/§7.9), and noise-kind plumbing (§4.2).
+//! Quantization substrate, unified behind the [`scheme`] module's
+//! [`scheme::QuantSpec`] / [`scheme::Quantizer`] API: every operator φ
+//! is described once and reused for post-training quantization,
+//! training noise (§4.2), and storage accounting (Eq. 5).
+//!
+//! Paper-section → spec-string map:
+//!
+//! | paper               | spec                   | notes                             |
+//! |---------------------|------------------------|-----------------------------------|
+//! | §3.1 intN           | `int8`, `int4`         | per-tensor MinMax (Eq. 2)         |
+//! | §7.7 observers      | `int8:histogram`       | clipped range search (PTQ only)   |
+//! | Table 10 channel    | `int8:per_channel`     | per-row scale/zero                |
+//! | §3.2 PQ / iPQ       | `pq:k=256,d=8`         | shared codebook over subvectors   |
+//! | §3.3 iPQ ⊕ int8     | `pq:k=256,d=8,cb=int8` | int8 codebook (Eq. 5)             |
+//! | §4.2 φ_proxy        | `proxy`                | zero-out noise (grad_mix)         |
+//! | §4.2 φ_mean / T5    | `mean_sub`             | blockwise-mean approximation      |
+//! | §4.2 exact φ_PQ     | `pq:k=64,iters=6`      | alias `exact_pq` (hat refresh)    |
+//! | Fig. 6b blocks      | `pq:k=64,block.ffn=16` | per-structure block override      |
+//!
+//! Supporting modules: scalar intN kernels ([`scalar`]), range
+//! observers ([`observer`]), k-means + Product Quantization
+//! ([`kmeans`], [`pq`]) on the shared parallel nearest-codeword
+//! [`assign`] engine, codebooks incl. the int8 combination
+//! ([`codebook`]), model-size accounting ([`size`]), LayerDrop pruning
+//! and weight sharing ([`prune`]), and hat builders ([`noise`]).
 pub mod assign;
 pub mod codebook;
 pub mod kmeans;
@@ -11,4 +31,5 @@ pub mod observer;
 pub mod pq;
 pub mod prune;
 pub mod scalar;
+pub mod scheme;
 pub mod size;

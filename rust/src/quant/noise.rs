@@ -1,156 +1,121 @@
-//! Noise-kind plumbing: maps the paper's noise functions φ (§4.2) to
-//! grad-artifact entry points and host-side "hat" (quantized image)
-//! builders for the mix family.
+//! Training-noise plumbing (§4.2): host-side "hat" (quantized image)
+//! builders for the grad_mix family, expressed through the unified
+//! [`Quantizer`] API.
+//!
+//! The old `NoiseKind` enum (a third, hand-synced copy of the scheme
+//! list) is gone: a noise function φ *is* a [`QuantSpec`], and the
+//! grad-artifact entry point comes from [`QuantSpec::grad_entry`].
+//! Kinds computed in-graph report [`HatKind::InGraph`] instead of
+//! panicking, and every failure is a typed [`SchemeError`].
 
-use crate::quant::codebook::Codebook;
-use crate::quant::pq;
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum NoiseKind {
-    /// rate 0 through grad_mix with zero hats (no noise — baseline).
-    None,
-    /// φ_proxy: zero out selected blocks (structured dropout).
-    Proxy,
-    /// exact φ_PQ: blocks snap to their nearest codeword (hats refreshed
-    /// by coordinator-side k-means once per epoch, per the paper).
-    ExactPq,
-    /// mean-subvector intermediate approximation (§4.2 / Table 5).
-    MeanSub,
-    /// φ_intN computed in-graph (per-tensor histogram-free minmax).
-    Int8,
-    Int4,
-    /// per-channel intN variants (Table 10).
-    Int8Channel,
-    Int4Channel,
-}
-
-impl NoiseKind {
-    /// Which grad entry point implements this noise.
-    pub fn entry(&self) -> &'static str {
-        match self {
-            NoiseKind::None | NoiseKind::Proxy | NoiseKind::ExactPq | NoiseKind::MeanSub => {
-                "grad_mix"
-            }
-            NoiseKind::Int8 => "grad_int8",
-            NoiseKind::Int4 => "grad_int4",
-            NoiseKind::Int8Channel => "grad_int8_channel",
-            NoiseKind::Int4Channel => "grad_int4_channel",
-        }
-    }
-
-    /// Does this kind need host-computed hat tensors?
-    pub fn needs_hat(&self) -> bool {
-        matches!(self, NoiseKind::ExactPq | NoiseKind::MeanSub)
-    }
-
-    pub fn parse(s: &str) -> Option<NoiseKind> {
-        Some(match s {
-            "none" => NoiseKind::None,
-            "proxy" => NoiseKind::Proxy,
-            "exact_pq" | "pq" => NoiseKind::ExactPq,
-            "mean_sub" | "mean" => NoiseKind::MeanSub,
-            "int8" => NoiseKind::Int8,
-            "int4" => NoiseKind::Int4,
-            "int8_channel" => NoiseKind::Int8Channel,
-            "int4_channel" => NoiseKind::Int4Channel,
-            _ => return None,
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            NoiseKind::None => "none",
-            NoiseKind::Proxy => "proxy",
-            NoiseKind::ExactPq => "exact_pq",
-            NoiseKind::MeanSub => "mean_sub",
-            NoiseKind::Int8 => "int8",
-            NoiseKind::Int4 => "int4",
-            NoiseKind::Int8Channel => "int8_channel",
-            NoiseKind::Int4Channel => "int4_channel",
-        }
-    }
-}
+use crate::quant::scheme::{HatKind, QuantSpec, Quantizer as _, SchemeError};
+use crate::quant::size::ParamInfo;
+use crate::util::rng::Pcg;
 
 /// Build the mix-family hat for one weight's canonical 2-D view.
-/// `codebook` is required for `ExactPq` (the epoch's k-means result).
+/// `block_size` is the parameter's manifest noise-block size. This
+/// helper has no structure context, so a spec's per-structure
+/// `block.<structure>=` overrides do not apply here — callers that need
+/// them (like `Trainer::refresh_hats`) resolve the spec against a real
+/// `ParamInfo` and call [`Quantizer::hat`] directly. Schemes whose
+/// noise runs inside the grad artifact return
+/// [`SchemeError::InGraphOnly`] — they have no host hat.
 pub fn build_hat(
-    kind: NoiseKind,
+    spec: &QuantSpec,
     w: &[f32],
     rows: usize,
     cols: usize,
     block_size: usize,
-    codebook: Option<&Codebook>,
-) -> Vec<f32> {
-    match kind {
-        NoiseKind::None | NoiseKind::Proxy => vec![0.0; w.len()],
-        NoiseKind::MeanSub => pq::mean_subvector_hat(w, rows, cols, block_size),
-        NoiseKind::ExactPq => {
-            let cb = codebook.expect("ExactPq noise needs a codebook");
-            assert_eq!(cb.d, block_size, "codebook dim mismatch");
-            // encode on the shared engine and decode straight into the
-            // hat buffer — no codebook clone, no temporary PqMatrix
-            let codes = pq::encode(w, rows, cols, cb);
-            let mut hat = vec![0.0f32; w.len()];
-            pq::decode_codes_into(cb, &codes, &mut hat);
-            hat
+    rng: &mut Pcg,
+) -> Result<Vec<f32>, SchemeError> {
+    let info = ParamInfo {
+        name: String::new(),
+        structure: String::new(),
+        numel: w.len(),
+        rows,
+        cols,
+        quantized: true,
+        pq_block: block_size,
+    };
+    match spec.resolve(&info).hat(w, rows, cols, rng)? {
+        HatKind::Host(hat) => Ok(hat),
+        HatKind::InGraph { entry } => {
+            Err(SchemeError::InGraphOnly { scheme: spec.to_string(), entry })
         }
-        _ => panic!("{kind:?} noise is computed in-graph; no host hat"),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::pq::{fit, PqConfig};
-    use crate::util::rng::Pcg;
+    use crate::quant::codebook::Codebook;
+    use crate::quant::kmeans::{kmeans, KmeansConfig};
+    use crate::quant::pq::{decode_codes_into, encode, fit, PqConfig};
+    use crate::quant::scheme::IntObserver;
 
     #[test]
     fn entry_mapping() {
-        assert_eq!(NoiseKind::Proxy.entry(), "grad_mix");
-        assert_eq!(NoiseKind::Int4Channel.entry(), "grad_int4_channel");
-        assert!(!NoiseKind::Proxy.needs_hat());
-        assert!(NoiseKind::ExactPq.needs_hat());
+        assert_eq!(QuantSpec::Proxy.grad_entry().unwrap(), "grad_mix");
+        assert_eq!(
+            QuantSpec::int(4, IntObserver::PerChannel).grad_entry().unwrap(),
+            "grad_int4_channel"
+        );
+        assert!(!QuantSpec::Proxy.needs_hat());
+        assert!(QuantSpec::pq_noise(16).needs_hat());
     }
 
     #[test]
-    fn parse_roundtrip() {
-        for k in [
-            NoiseKind::None,
-            NoiseKind::Proxy,
-            NoiseKind::ExactPq,
-            NoiseKind::MeanSub,
-            NoiseKind::Int8,
-            NoiseKind::Int4,
-            NoiseKind::Int8Channel,
-            NoiseKind::Int4Channel,
+    fn parse_covers_legacy_noise_names() {
+        // the old `--noise` vocabulary keeps parsing
+        for (name, spec) in [
+            ("none", QuantSpec::None),
+            ("proxy", QuantSpec::Proxy),
+            ("exact_pq", QuantSpec::pq_noise(64)),
+            ("pq", QuantSpec::pq_noise(64)),
+            ("mean_sub", QuantSpec::MeanSub),
+            ("int8", QuantSpec::int(8, IntObserver::MinMax)),
+            ("int4", QuantSpec::int(4, IntObserver::MinMax)),
+            ("int8_channel", QuantSpec::int(8, IntObserver::PerChannel)),
+            ("int4_channel", QuantSpec::int(4, IntObserver::PerChannel)),
         ] {
-            assert_eq!(NoiseKind::parse(k.name()), Some(k));
+            assert_eq!(QuantSpec::parse(name).unwrap(), spec, "{name}");
         }
-        assert_eq!(NoiseKind::parse("bogus"), None);
+        assert!(QuantSpec::parse("bogus").is_err());
     }
 
     #[test]
     fn proxy_hat_is_zero() {
         let w = vec![1.0f32; 64];
-        assert!(build_hat(NoiseKind::Proxy, &w, 8, 8, 4, None)
-            .iter()
-            .all(|&x| x == 0.0));
+        let hat = build_hat(&QuantSpec::Proxy, &w, 8, 8, 4, &mut Pcg::new(0)).unwrap();
+        assert!(hat.iter().all(|&x| x == 0.0));
     }
 
     #[test]
-    fn exact_pq_hat_equals_decode() {
+    fn exact_pq_hat_equals_fit_decode() {
+        // the spec-built hat runs the same fit the PTQ path runs: same
+        // seed ⇒ identical codebook ⇒ identical decoded image
         let mut rng = Pcg::new(1);
         let w: Vec<f32> = (0..256).map(|_| rng.next_normal()).collect();
-        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 8, threads: 0 };
+        let cfg = PqConfig { block_size: 8, n_centroids: 8, kmeans_iters: 6, threads: 0 };
         let m = fit(&w, 16, 16, &cfg, &mut Pcg::new(2));
-        let hat = build_hat(NoiseKind::ExactPq, &w, 16, 16, 8, Some(&m.codebook));
+        let hat = build_hat(&QuantSpec::pq_noise(8), &w, 16, 16, 8, &mut Pcg::new(2)).unwrap();
         assert_eq!(hat, m.decode());
     }
 
     #[test]
-    #[should_panic(expected = "in-graph")]
     fn int_kinds_have_no_host_hat() {
-        build_hat(NoiseKind::Int8, &[0.0; 8], 1, 8, 8, None);
+        // typed error instead of the old panic
+        let e = build_hat(
+            &QuantSpec::int(8, IntObserver::MinMax),
+            &[0.0; 8],
+            1,
+            8,
+            8,
+            &mut Pcg::new(0),
+        )
+        .unwrap_err();
+        assert!(matches!(e, SchemeError::InGraphOnly { entry: "grad_int8", .. }), "{e}");
+        assert!(e.to_string().contains("in-graph"));
     }
 
     #[test]
@@ -159,15 +124,12 @@ mod tests {
         // byte-stable run to run (sharding must not leak into results)
         let mut rng = Pcg::new(9);
         let w: Vec<f32> = (0..32 * 32).map(|_| rng.next_normal()).collect();
-        let cfg = PqConfig { block_size: 8, n_centroids: 16, kmeans_iters: 6, threads: 0 };
-        let m = fit(&w, 32, 32, &cfg, &mut Pcg::new(4));
-        let a = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m.codebook));
-        let b = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m.codebook));
+        let spec = QuantSpec::pq_noise(16);
+        let a = build_hat(&spec, &w, 32, 32, 8, &mut Pcg::new(4)).unwrap();
+        let b = build_hat(&spec, &w, 32, 32, 8, &mut Pcg::new(4)).unwrap();
         assert_eq!(a, b);
-        // and a differently-sharded fit of the same seed agrees too
-        let cfg1 = PqConfig { threads: 1, ..cfg };
-        let m1 = fit(&w, 32, 32, &cfg1, &mut Pcg::new(4));
-        let c = build_hat(NoiseKind::ExactPq, &w, 32, 32, 8, Some(&m1.codebook));
+        // and a differently-sharded run of the same seed agrees too
+        let c = build_hat(&spec.clone().with_threads(1), &w, 32, 32, 8, &mut Pcg::new(4)).unwrap();
         assert_eq!(a, c);
     }
 
@@ -177,8 +139,6 @@ mod tests {
         // directly into the hat buffer; the seed's path re-encoded the
         // weights against the fitted codebook first. Both run the same
         // engine kernel, so the hats must be byte-identical.
-        use crate::quant::kmeans::{kmeans, KmeansConfig};
-        use crate::quant::pq::decode_codes_into;
         let mut rng = Pcg::new(5);
         let w: Vec<f32> = (0..48 * 32).map(|_| rng.next_normal()).collect();
         let km = kmeans(
@@ -190,7 +150,17 @@ mod tests {
         let cb = Codebook::new(km.centroids.clone(), km.k, 8);
         let mut direct = vec![0.0f32; w.len()];
         decode_codes_into(&cb, &km.assignments, &mut direct);
-        let reencoded = build_hat(NoiseKind::ExactPq, &w, 48, 32, 8, Some(&cb));
+        let codes = encode(&w, 48, 32, &cb);
+        let mut reencoded = vec![0.0f32; w.len()];
+        decode_codes_into(&cb, &codes, &mut reencoded);
         assert_eq!(direct, reencoded);
+    }
+
+    #[test]
+    fn mean_sub_hat_matches_direct_kernel() {
+        let mut rng = Pcg::new(7);
+        let w: Vec<f32> = (0..8 * 16).map(|_| rng.next_normal()).collect();
+        let hat = build_hat(&QuantSpec::MeanSub, &w, 8, 16, 4, &mut Pcg::new(0)).unwrap();
+        assert_eq!(hat, crate::quant::pq::mean_subvector_hat(&w, 8, 16, 4));
     }
 }

@@ -89,7 +89,12 @@ pub fn roundtrip(data: &mut [f32], qp: &QParams) {
 
 /// Per-channel quantization: one QParams per row of a (rows × cols)
 /// matrix (Table 10's "Quant Channel" scheme).
-pub fn quantize_per_channel(data: &[f32], rows: usize, cols: usize, bits: u8) -> (Vec<u8>, Vec<QParams>) {
+pub fn quantize_per_channel(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: u8,
+) -> (Vec<u8>, Vec<QParams>) {
     assert_eq!(data.len(), rows * cols);
     let mut codes = vec![0u8; data.len()];
     let mut qps = Vec::with_capacity(rows);

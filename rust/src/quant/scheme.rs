@@ -1,0 +1,929 @@
+//! The unified quantization-scheme API: one [`QuantSpec`] description
+//! and one [`Quantizer`] trait for every quantization operator φ the
+//! paper applies — as partial noise during training (§4.2) and as the
+//! real compressor afterwards (§3).
+//!
+//! Before this module the same set of schemes was enumerated three
+//! times (PTQ `WeightScheme`, training `NoiseKind`, size accounting
+//! `size::Scheme`) with hand-kept sync. Now every consumer — the
+//! post-training quantizer, the trainer's hat refresh, the storage
+//! accounting, the CLI — resolves a [`QuantSpec`] (or any other
+//! [`QuantizerFactory`]) into per-parameter [`Quantizer`] objects, so a
+//! new scheme is one new implementation of the trait, registered in
+//! exactly one place.
+//!
+//! Canonical string forms (round-trip via [`QuantSpec::parse`] /
+//! `Display`):
+//!
+//! | spec                    | paper      | meaning                                   |
+//! |-------------------------|------------|-------------------------------------------|
+//! | `none`                  | —          | fp32 passthrough                          |
+//! | `proxy`                 | §4.2       | φ_proxy zero-out noise (in grad_mix)      |
+//! | `mean_sub`              | §4.2/T5    | blockwise-mean intermediate approximation |
+//! | `int8` / `int4`         | §3.1       | intN per-tensor MinMax                    |
+//! | `int8:histogram`        | §7.7       | intN with histogram-clipped range (PTQ)   |
+//! | `int8:per_channel`      | Table 10   | intN with per-row scale/zero              |
+//! | `pq:k=256,d=8`          | §3.2       | Product Quantization, K codewords, d-dim  |
+//! | `pq:k=256,d=8,cb=int8`  | §3.3/Eq. 5 | iPQ ⊕ int8 codebook combination           |
+//!
+//! `pq` options: `k=` codebook size, `d=`/`block=` global subvector
+//! length (defaults to each parameter's manifest block size),
+//! `iters=` k-means iterations (default 12), `cb=int8|fp32` codebook
+//! storage, `threads=` workers (0 ⇒ all cores), `block.<structure>=`
+//! per-structure block override (Fig. 6b). `exact_pq` — and a bare `pq`
+//! with no options, matching the old `--noise pq` — are legacy aliases
+//! for the trainer's φ_PQ noise defaults (`pq:k=64,iters=6`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::quant::observer::HistogramObserver;
+use crate::quant::pq::{self, PqConfig, PqMatrix};
+use crate::quant::scalar;
+use crate::quant::size::ParamInfo;
+use crate::util::rng::Pcg;
+
+// ---------------------------------------------------------- errors ---
+
+/// Typed error for spec parsing and quantizer operations — the
+/// `build_hat` panic paths of the old `NoiseKind` API surface here
+/// instead, and the `qn` CLI prints them as user errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchemeError {
+    /// A spec string did not parse.
+    Parse { spec: String, reason: String },
+    /// Matrix shape incompatible with the scheme's subvector length.
+    BlockMismatch { cols: usize, block: usize },
+    /// A host hat was requested for a scheme whose noise runs inside
+    /// the grad artifact.
+    InGraphOnly { scheme: String, entry: &'static str },
+    /// The scheme has no in-graph grad entry (post-training only).
+    NoGradEntry { scheme: String },
+    /// `decode_into` was handed a tensor without the state it needs.
+    MissingState { scheme: String },
+}
+
+impl fmt::Display for SchemeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchemeError::Parse { spec, reason } => {
+                write!(f, "bad scheme spec '{spec}': {reason}")
+            }
+            SchemeError::BlockMismatch { cols, block } => {
+                write!(f, "cols {cols} not divisible by PQ block {block}")
+            }
+            SchemeError::InGraphOnly { scheme, entry } => {
+                write!(
+                    f,
+                    "{scheme} noise is computed in-graph (entry {entry}); it has no host-side hat"
+                )
+            }
+            SchemeError::NoGradEntry { scheme } => {
+                write!(f, "{scheme} has no in-graph grad entry (post-training quantization only)")
+            }
+            SchemeError::MissingState { scheme } => {
+                write!(f, "{scheme}: quantized tensor carries no codebook state to decode")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchemeError {}
+
+// ------------------------------------------------------------ spec ---
+
+/// Range observer / calibration mode for scalar intN quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntObserver {
+    /// Per-tensor min/max range (the in-graph fake-quant convention).
+    MinMax,
+    /// Histogram-searched clip range (§7.7); PTQ only — no grad entry.
+    Histogram,
+    /// One scale/zero per output row (Table 10's "Quant Channel").
+    PerChannel,
+}
+
+/// Options of a Product-Quantization scheme (§3.2, §3.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PqSpec {
+    /// Codebook size K (256 ⇒ int8 indices).
+    pub k: usize,
+    /// Global subvector length d; `None` ⇒ each parameter's manifest
+    /// block size.
+    pub block: Option<usize>,
+    pub kmeans_iters: usize,
+    /// §3.3: store the codebook int8-quantized (Eq. 5's 8·K·d term).
+    pub int8_codebook: bool,
+    /// Per-structure block override (Fig. 6b).
+    pub block_override: BTreeMap<String, usize>,
+    /// k-means/encode worker threads (0 ⇒ all cores).
+    pub threads: usize,
+}
+
+impl Default for PqSpec {
+    fn default() -> Self {
+        PqSpec {
+            k: 256,
+            block: None,
+            kmeans_iters: 12,
+            int8_codebook: false,
+            block_override: BTreeMap::new(),
+            threads: 0,
+        }
+    }
+}
+
+impl PqSpec {
+    pub fn new(k: usize) -> PqSpec {
+        PqSpec { k, ..Default::default() }
+    }
+}
+
+/// Canonical, parseable description of one quantization scheme.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QuantSpec {
+    /// fp32 passthrough (size accounting / zero-rate noise).
+    None,
+    /// φ_proxy: zero out selected blocks (structured dropout, §4.2).
+    Proxy,
+    /// Blockwise-mean intermediate approximation (§4.2 / Table 5).
+    MeanSub,
+    /// Scalar intN fixed-point quantization (§3.1, Eq. 2).
+    Int { bits: u8, observer: IntObserver },
+    /// Product Quantization (§3.2), optionally ⊕ int8 codebook (§3.3).
+    Pq(PqSpec),
+}
+
+impl QuantSpec {
+    pub fn int(bits: u8, observer: IntObserver) -> QuantSpec {
+        QuantSpec::Int { bits, observer }
+    }
+
+    /// PQ with K codewords at the PTQ defaults (12 k-means iterations).
+    pub fn pq(k: usize) -> QuantSpec {
+        QuantSpec::Pq(PqSpec::new(k))
+    }
+
+    /// PQ at the trainer's per-epoch hat-refresh budget (6 Lloyd
+    /// iterations — the hat is refit every `hat_refresh` steps, so a
+    /// short k-means per refresh matches the paper's once-per-epoch
+    /// re-quantization).
+    pub fn pq_noise(k: usize) -> QuantSpec {
+        QuantSpec::Pq(PqSpec { k, kmeans_iters: 6, ..Default::default() })
+    }
+
+    /// Short kind name ("none" / "proxy" / "mean_sub" / "int" / "pq").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            QuantSpec::None => "none",
+            QuantSpec::Proxy => "proxy",
+            QuantSpec::MeanSub => "mean_sub",
+            QuantSpec::Int { .. } => "int",
+            QuantSpec::Pq(_) => "pq",
+        }
+    }
+
+    /// Does training with this scheme need host-computed hat tensors?
+    pub fn needs_hat(&self) -> bool {
+        matches!(self, QuantSpec::MeanSub | QuantSpec::Pq(_))
+    }
+
+    /// The grad-artifact entry point implementing this scheme's noise.
+    pub fn grad_entry(&self) -> Result<&'static str, SchemeError> {
+        match self {
+            QuantSpec::None | QuantSpec::Proxy | QuantSpec::MeanSub | QuantSpec::Pq(_) => {
+                Ok("grad_mix")
+            }
+            QuantSpec::Int { bits, observer } => int_entry(*bits, *observer)
+                .ok_or_else(|| SchemeError::NoGradEntry { scheme: self.to_string() }),
+        }
+    }
+
+    /// Same spec with the worker-thread knob overridden (no-op for
+    /// schemes without one).
+    pub fn with_threads(mut self, threads: usize) -> QuantSpec {
+        if let QuantSpec::Pq(p) = &mut self {
+            p.threads = threads;
+        }
+        self
+    }
+
+    /// Resolve this spec against one parameter, yielding a ready-to-run
+    /// quantizer (per-structure/manifest block sizes applied here).
+    pub fn resolve(&self, p: &ParamInfo) -> Box<dyn Quantizer> {
+        match self {
+            QuantSpec::None => Box::new(NoneQuant),
+            QuantSpec::Proxy => Box::new(ProxyQuant),
+            QuantSpec::MeanSub => Box::new(MeanSubQuant { block: p.pq_block }),
+            QuantSpec::Int { bits, observer } => {
+                Box::new(ScalarQuant { bits: *bits, observer: *observer })
+            }
+            QuantSpec::Pq(s) => {
+                let d = s
+                    .block_override
+                    .get(&p.structure)
+                    .copied()
+                    .or(s.block)
+                    .unwrap_or(p.pq_block);
+                Box::new(PqQuant {
+                    cfg: PqConfig {
+                        block_size: d,
+                        n_centroids: s.k,
+                        kmeans_iters: s.kmeans_iters,
+                        threads: s.threads,
+                    },
+                    int8_codebook: s.int8_codebook,
+                })
+            }
+        }
+    }
+
+    /// Parse a canonical spec string (see the module docs for the
+    /// grammar). Inverse of `Display`.
+    pub fn parse(s: &str) -> Result<QuantSpec, SchemeError> {
+        let s = s.trim();
+        let err = |reason: String| SchemeError::Parse { spec: s.to_string(), reason };
+        let (head, opts) = match s.split_once(':') {
+            Some((h, o)) => (h, Some(o)),
+            None => (s, None),
+        };
+        let no_opts = |spec: QuantSpec| -> Result<QuantSpec, SchemeError> {
+            match opts {
+                Some(o) => Err(err(format!("'{head}' takes no options, got '{o}'"))),
+                None => Ok(spec),
+            }
+        };
+        match head {
+            "none" | "fp32" => no_opts(QuantSpec::None),
+            "proxy" => no_opts(QuantSpec::Proxy),
+            "mean_sub" | "mean" => no_opts(QuantSpec::MeanSub),
+            // legacy noise-kind names; a bare `pq` (no options) keeps
+            // the old `--noise pq` meaning — exact-φ_PQ at the trainer
+            // defaults — while `pq:<opts>` uses the full grammar below
+            "exact_pq" => no_opts(QuantSpec::pq_noise(64)),
+            "pq" if opts.is_none() => Ok(QuantSpec::pq_noise(64)),
+            "int8_channel" => no_opts(QuantSpec::int(8, IntObserver::PerChannel)),
+            "int4_channel" => no_opts(QuantSpec::int(4, IntObserver::PerChannel)),
+            "pq" => {
+                let mut p = PqSpec::default();
+                for kv in opts.iter().flat_map(|o| o.split(',')) {
+                    let (key, val) = kv
+                        .split_once('=')
+                        .ok_or_else(|| err(format!("expected key=value, got '{kv}'")))?;
+                    let usize_val = || -> Result<usize, SchemeError> {
+                        val.parse::<usize>()
+                            .map_err(|_| err(format!("'{key}' needs an integer, got '{val}'")))
+                    };
+                    match key {
+                        "k" => p.k = usize_val()?,
+                        "d" | "block" => p.block = Some(usize_val()?),
+                        "iters" => p.kmeans_iters = usize_val()?,
+                        "threads" => p.threads = usize_val()?,
+                        "cb" => {
+                            p.int8_codebook = match val {
+                                "int8" => true,
+                                "fp32" => false,
+                                _ => return Err(err(format!("cb must be int8|fp32, got '{val}'"))),
+                            }
+                        }
+                        _ => match key.strip_prefix("block.") {
+                            Some(structure) if !structure.is_empty() => {
+                                p.block_override.insert(structure.to_string(), usize_val()?);
+                            }
+                            _ => return Err(err(format!("unknown pq option '{key}'"))),
+                        },
+                    }
+                }
+                if p.k == 0 {
+                    return Err(err("k must be >= 1".to_string()));
+                }
+                if p.block == Some(0) || p.block_override.values().any(|&b| b == 0) {
+                    return Err(err("block size must be >= 1".to_string()));
+                }
+                Ok(QuantSpec::Pq(p))
+            }
+            _ => {
+                if let Some(bits_str) = head.strip_prefix("int") {
+                    let bits: u8 = bits_str
+                        .parse()
+                        .map_err(|_| err(format!("bad intN bit-width '{bits_str}'")))?;
+                    if !(1..=8).contains(&bits) {
+                        return Err(err(format!("intN bits must be 1..=8, got {bits}")));
+                    }
+                    let observer = match opts {
+                        None => IntObserver::MinMax,
+                        Some("minmax") => IntObserver::MinMax,
+                        Some("histogram") => IntObserver::Histogram,
+                        Some("per_channel") | Some("channel") => IntObserver::PerChannel,
+                        Some(o) => return Err(err(format!("unknown intN observer '{o}'"))),
+                    };
+                    Ok(QuantSpec::Int { bits, observer })
+                } else {
+                    Err(err(format!("unknown scheme '{head}'")))
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for QuantSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantSpec::None => write!(f, "none"),
+            QuantSpec::Proxy => write!(f, "proxy"),
+            QuantSpec::MeanSub => write!(f, "mean_sub"),
+            QuantSpec::Int { bits, observer } => {
+                write!(f, "int{bits}")?;
+                match observer {
+                    IntObserver::MinMax => Ok(()),
+                    IntObserver::Histogram => write!(f, ":histogram"),
+                    IntObserver::PerChannel => write!(f, ":per_channel"),
+                }
+            }
+            QuantSpec::Pq(p) => {
+                write!(f, "pq:k={}", p.k)?;
+                if let Some(d) = p.block {
+                    write!(f, ",d={d}")?;
+                }
+                if p.kmeans_iters != 12 {
+                    write!(f, ",iters={}", p.kmeans_iters)?;
+                }
+                if p.int8_codebook {
+                    write!(f, ",cb=int8")?;
+                }
+                if p.threads != 0 {
+                    write!(f, ",threads={}", p.threads)?;
+                }
+                for (s, b) in &p.block_override {
+                    write!(f, ",block.{s}={b}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for QuantSpec {
+    type Err = SchemeError;
+
+    fn from_str(s: &str) -> Result<QuantSpec, SchemeError> {
+        QuantSpec::parse(s)
+    }
+}
+
+/// In-graph grad entry for an intN noise configuration, when one exists.
+fn int_entry(bits: u8, observer: IntObserver) -> Option<&'static str> {
+    match (bits, observer) {
+        (8, IntObserver::MinMax) => Some("grad_int8"),
+        (4, IntObserver::MinMax) => Some("grad_int4"),
+        (8, IntObserver::PerChannel) => Some("grad_int8_channel"),
+        (4, IntObserver::PerChannel) => Some("grad_int4_channel"),
+        _ => None,
+    }
+}
+
+// ----------------------------------------------------------- trait ---
+
+/// One parameter's quantization result: the dequantized image plus any
+/// codebook state kept for finetuning / exact-noise reuse.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// Dequantized weights (what the eval artifact sees).
+    pub data: Vec<f32>,
+    /// PQ state when the scheme keeps a codebook.
+    pub pq: Option<PqMatrix>,
+}
+
+/// How a scheme injects training noise.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HatKind {
+    /// Host-computed quantized image ("hat") for the grad_mix family.
+    Host(Vec<f32>),
+    /// Noise computed inside the grad artifact; no host tensor.
+    InGraph { entry: &'static str },
+}
+
+/// A quantization operator φ, resolved for one parameter. Implementing
+/// this trait (plus a [`QuantizerFactory`]) is all a new scheme needs —
+/// PTQ, storage accounting, and training noise come along for free.
+pub trait Quantizer {
+    /// Short static kind name for logs.
+    fn name(&self) -> &'static str;
+
+    /// Quantize-dequantize one weight matrix in its canonical 2-D view.
+    fn fit(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError>;
+
+    /// Reconstruct a fitted tensor into a caller-provided buffer.
+    fn decode_into(&self, qt: &QuantizedTensor, out: &mut [f32]) -> Result<(), SchemeError> {
+        assert_eq!(out.len(), qt.data.len(), "decode buffer size mismatch");
+        out.copy_from_slice(&qt.data);
+        Ok(())
+    }
+
+    /// Build this scheme's training-noise hat (§4.2). In-graph kinds
+    /// return [`HatKind::InGraph`] with their grad entry instead of a
+    /// string side-channel. Every user-reachable failure (bad spec,
+    /// incompatible block size, missing grad entry) is a typed
+    /// [`SchemeError`]; caller-side shape invariants (buffer length vs
+    /// `rows·cols`) still assert, like the rest of the quant substrate.
+    fn hat(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError>;
+
+    /// Bits to store one parameter under this scheme (Eq. 5 without the
+    /// activation term; unquantized params stay fp32).
+    fn storage_bits(&self, p: &ParamInfo) -> u64;
+}
+
+/// A family of quantizers resolvable per parameter. [`QuantSpec`] is
+/// the built-in implementation; external schemes implement this to plug
+/// into `quantize_params_with` / `model_bytes_with` without touching
+/// any consumer module.
+pub trait QuantizerFactory {
+    fn for_param(&self, p: &ParamInfo) -> Box<dyn Quantizer>;
+
+    /// Canonical label for logs / cache keys. Implementations must
+    /// normalize out execution-only knobs that cannot affect results
+    /// (e.g. worker-thread counts), so equal workloads get equal keys.
+    fn spec_string(&self) -> String;
+}
+
+impl QuantizerFactory for QuantSpec {
+    fn for_param(&self, p: &ParamInfo) -> Box<dyn Quantizer> {
+        self.resolve(p)
+    }
+
+    /// `Display` with the thread knob zeroed: engine results are
+    /// thread-count-invariant, so `pq:k=64` and `pq:k=64,threads=8`
+    /// are the same workload and must key identically.
+    fn spec_string(&self) -> String {
+        self.clone().with_threads(0).to_string()
+    }
+}
+
+// ----------------------------------------------------- built-in φs ---
+
+fn fp32_bits(p: &ParamInfo) -> u64 {
+    32 * p.numel as u64
+}
+
+/// fp32 passthrough.
+pub struct NoneQuant;
+
+impl Quantizer for NoneQuant {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn fit(
+        &self,
+        w: &[f32],
+        _rows: usize,
+        _cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError> {
+        Ok(QuantizedTensor { data: w.to_vec(), pq: None })
+    }
+
+    fn hat(
+        &self,
+        w: &[f32],
+        _rows: usize,
+        _cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError> {
+        Ok(HatKind::Host(vec![0.0; w.len()]))
+    }
+
+    fn storage_bits(&self, p: &ParamInfo) -> u64 {
+        fp32_bits(p)
+    }
+}
+
+/// φ_proxy: the grad artifact zeroes selected blocks; as a compressor
+/// it is the identity (it exists to *train* for PQ, not to store).
+pub struct ProxyQuant;
+
+impl Quantizer for ProxyQuant {
+    fn name(&self) -> &'static str {
+        "proxy"
+    }
+
+    fn fit(
+        &self,
+        w: &[f32],
+        _rows: usize,
+        _cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError> {
+        Ok(QuantizedTensor { data: w.to_vec(), pq: None })
+    }
+
+    fn hat(
+        &self,
+        w: &[f32],
+        _rows: usize,
+        _cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError> {
+        Ok(HatKind::Host(vec![0.0; w.len()]))
+    }
+
+    fn storage_bits(&self, p: &ParamInfo) -> u64 {
+        fp32_bits(p)
+    }
+}
+
+/// Blockwise-mean approximation: each subvector stored as its mean.
+pub struct MeanSubQuant {
+    pub block: usize,
+}
+
+impl MeanSubQuant {
+    fn check(&self, w: &[f32], rows: usize, cols: usize) -> Result<(), SchemeError> {
+        assert_eq!(w.len(), rows * cols, "matrix size mismatch");
+        if self.block == 0 || cols % self.block != 0 {
+            return Err(SchemeError::BlockMismatch { cols, block: self.block });
+        }
+        Ok(())
+    }
+}
+
+impl Quantizer for MeanSubQuant {
+    fn name(&self) -> &'static str {
+        "mean_sub"
+    }
+
+    fn fit(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError> {
+        self.check(w, rows, cols)?;
+        Ok(QuantizedTensor { data: pq::mean_subvector_hat(w, rows, cols, self.block), pq: None })
+    }
+
+    fn hat(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError> {
+        self.check(w, rows, cols)?;
+        Ok(HatKind::Host(pq::mean_subvector_hat(w, rows, cols, self.block)))
+    }
+
+    /// One fp32 mean per subvector.
+    fn storage_bits(&self, p: &ParamInfo) -> u64 {
+        if !p.quantized {
+            return fp32_bits(p);
+        }
+        32 * (p.numel / self.block.max(1)) as u64
+    }
+}
+
+/// Scalar intN fixed-point quantization (§3.1), with the observer
+/// choices of §7.7 / Table 10.
+pub struct ScalarQuant {
+    pub bits: u8,
+    pub observer: IntObserver,
+}
+
+impl ScalarQuant {
+    fn spec_string(&self) -> String {
+        QuantSpec::int(self.bits, self.observer).to_string()
+    }
+}
+
+impl Quantizer for ScalarQuant {
+    fn name(&self) -> &'static str {
+        "int"
+    }
+
+    fn fit(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError> {
+        let mut data = w.to_vec();
+        match self.observer {
+            IntObserver::MinMax => {
+                let qp = scalar::QParams::from_minmax(&data, self.bits);
+                scalar::roundtrip(&mut data, &qp);
+            }
+            IntObserver::Histogram => {
+                let mut h = HistogramObserver::new(2048);
+                h.observe(&data);
+                let qp = h.qparams(self.bits);
+                scalar::roundtrip(&mut data, &qp);
+            }
+            IntObserver::PerChannel => {
+                scalar::roundtrip_per_channel(&mut data, rows, cols, self.bits);
+            }
+        }
+        Ok(QuantizedTensor { data, pq: None })
+    }
+
+    fn hat(
+        &self,
+        _w: &[f32],
+        _rows: usize,
+        _cols: usize,
+        _rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError> {
+        match int_entry(self.bits, self.observer) {
+            Some(entry) => Ok(HatKind::InGraph { entry }),
+            None => Err(SchemeError::NoGradEntry { scheme: self.spec_string() }),
+        }
+    }
+
+    /// Codes plus one fp32 scale and zero-point per tensor. (Kept
+    /// identical for all observers — per-channel qparams are not
+    /// charged — matching the accounting the paper tables use.)
+    fn storage_bits(&self, p: &ParamInfo) -> u64 {
+        if !p.quantized {
+            return fp32_bits(p);
+        }
+        self.bits as u64 * p.numel as u64 + 64
+    }
+}
+
+/// Product Quantization (§3.2), optionally with the §3.3 int8-codebook
+/// combination. The block size is already resolved for one parameter.
+pub struct PqQuant {
+    pub cfg: PqConfig,
+    pub int8_codebook: bool,
+}
+
+impl Quantizer for PqQuant {
+    fn name(&self) -> &'static str {
+        "pq"
+    }
+
+    fn fit(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Pcg,
+    ) -> Result<QuantizedTensor, SchemeError> {
+        assert_eq!(w.len(), rows * cols, "matrix size mismatch");
+        let d = self.cfg.block_size;
+        if d == 0 || cols % d != 0 {
+            return Err(SchemeError::BlockMismatch { cols, block: d });
+        }
+        let mut m = pq::fit(w, rows, cols, &self.cfg, rng);
+        if self.int8_codebook {
+            m.codebook.compress_int8();
+        }
+        let data = m.decode();
+        Ok(QuantizedTensor { data, pq: Some(m) })
+    }
+
+    /// Decode straight from the stored assignments on the shared
+    /// engine's decode kernel — no re-encode, no temporary copy.
+    fn decode_into(&self, qt: &QuantizedTensor, out: &mut [f32]) -> Result<(), SchemeError> {
+        match &qt.pq {
+            Some(m) => {
+                pq::decode_codes_into(&m.codebook, &m.codes, out);
+                Ok(())
+            }
+            None => Err(SchemeError::MissingState { scheme: "pq".to_string() }),
+        }
+    }
+
+    /// The exact φ_PQ hat: refit against the current weights and decode
+    /// the assignments (bit-identical to encode-then-decode, minus the
+    /// redundant O(n·K·d) pass).
+    fn hat(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Pcg,
+    ) -> Result<HatKind, SchemeError> {
+        Ok(HatKind::Host(self.fit(w, rows, cols, rng)?.data))
+    }
+
+    /// Eq. 5 without the activation term: codebook (8·K·d int8 or
+    /// 32·K·d fp32, +64 qparam bits when int8) plus log2(K) bits per
+    /// subvector index.
+    fn storage_bits(&self, p: &ParamInfo) -> u64 {
+        if !p.quantized {
+            return fp32_bits(p);
+        }
+        let d = self.cfg.block_size;
+        let k = self.cfg.n_centroids;
+        let n_sub = (p.numel / d) as u64;
+        let index_bits = (k.max(2) as f64).log2().ceil() as u64;
+        let centroid_bits = if self.int8_codebook { 8 } else { 32 } * (k * d) as u64;
+        centroid_bits + index_bits * n_sub + if self.int8_codebook { 64 } else { 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(numel: usize, rows: usize, cols: usize) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            structure: "ffn".into(),
+            numel,
+            rows,
+            cols,
+            quantized: true,
+            pq_block: 8,
+        }
+    }
+
+    #[test]
+    fn parse_canonical_forms() {
+        assert_eq!(QuantSpec::parse("none").unwrap(), QuantSpec::None);
+        assert_eq!(QuantSpec::parse("proxy").unwrap(), QuantSpec::Proxy);
+        assert_eq!(QuantSpec::parse("mean_sub").unwrap(), QuantSpec::MeanSub);
+        assert_eq!(QuantSpec::parse("mean").unwrap(), QuantSpec::MeanSub);
+        assert_eq!(
+            QuantSpec::parse("int8").unwrap(),
+            QuantSpec::int(8, IntObserver::MinMax)
+        );
+        assert_eq!(
+            QuantSpec::parse("int4:per_channel").unwrap(),
+            QuantSpec::int(4, IntObserver::PerChannel)
+        );
+        assert_eq!(
+            QuantSpec::parse("int8:histogram").unwrap(),
+            QuantSpec::int(8, IntObserver::Histogram)
+        );
+        let pq = QuantSpec::parse("pq:k=256,d=8,cb=int8").unwrap();
+        match &pq {
+            QuantSpec::Pq(p) => {
+                assert_eq!((p.k, p.block, p.int8_codebook), (256, Some(8), true));
+                assert_eq!(p.kmeans_iters, 12);
+            }
+            other => panic!("{other:?}"),
+        }
+        // legacy noise names (bare `pq` kept the old `--noise pq` meaning)
+        assert_eq!(QuantSpec::parse("exact_pq").unwrap(), QuantSpec::pq_noise(64));
+        assert_eq!(QuantSpec::parse("pq").unwrap(), QuantSpec::pq_noise(64));
+        assert_eq!(
+            QuantSpec::parse("int8_channel").unwrap(),
+            QuantSpec::int(8, IntObserver::PerChannel)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "bogus",
+            "int99",
+            "int8:foo",
+            "pq:k",
+            "pq:k=abc",
+            "pq:wat=1",
+            "pq:k=0",
+            "pq:block.=4",
+            "none:opt",
+            "proxy:x",
+            "intx",
+        ] {
+            let e = QuantSpec::parse(bad).unwrap_err();
+            assert!(matches!(e, SchemeError::Parse { .. }), "{bad}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_options() {
+        let mut p = PqSpec::new(64);
+        p.block = Some(4);
+        p.kmeans_iters = 6;
+        p.int8_codebook = true;
+        p.threads = 3;
+        p.block_override.insert("emb".into(), 4);
+        p.block_override.insert("ffn".into(), 16);
+        let spec = QuantSpec::Pq(p);
+        let s = spec.to_string();
+        assert_eq!(s, "pq:k=64,d=4,iters=6,cb=int8,threads=3,block.emb=4,block.ffn=16");
+        assert_eq!(QuantSpec::parse(&s).unwrap(), spec);
+    }
+
+    #[test]
+    fn grad_entries_match_artifact_names() {
+        assert_eq!(QuantSpec::Proxy.grad_entry().unwrap(), "grad_mix");
+        assert_eq!(QuantSpec::pq(64).grad_entry().unwrap(), "grad_mix");
+        assert_eq!(QuantSpec::MeanSub.grad_entry().unwrap(), "grad_mix");
+        assert_eq!(QuantSpec::int(8, IntObserver::MinMax).grad_entry().unwrap(), "grad_int8");
+        assert_eq!(
+            QuantSpec::int(4, IntObserver::PerChannel).grad_entry().unwrap(),
+            "grad_int4_channel"
+        );
+        // histogram observer and odd bit-widths are PTQ-only
+        assert!(matches!(
+            QuantSpec::int(8, IntObserver::Histogram).grad_entry(),
+            Err(SchemeError::NoGradEntry { .. })
+        ));
+        assert!(matches!(
+            QuantSpec::int(2, IntObserver::MinMax).grad_entry(),
+            Err(SchemeError::NoGradEntry { .. })
+        ));
+        assert!(!QuantSpec::Proxy.needs_hat());
+        assert!(QuantSpec::pq(64).needs_hat());
+        assert!(QuantSpec::MeanSub.needs_hat());
+    }
+
+    #[test]
+    fn resolve_applies_block_overrides() {
+        let mut p = PqSpec::new(16);
+        p.block_override.insert("ffn".into(), 16);
+        let spec = QuantSpec::Pq(p);
+        let q = spec.resolve(&info(256, 16, 16));
+        // structure override (16) wins over the manifest block (8)
+        let bits = q.storage_bits(&info(256, 16, 16));
+        let expect = 32 * (16 * 16) as u64 + 4 * (256 / 16) as u64;
+        assert_eq!(bits, expect);
+        // a different structure falls back to the manifest block
+        let mut other = info(256, 16, 16);
+        other.structure = "attn".into();
+        let q2 = spec.resolve(&other);
+        let expect2 = 32 * (16 * 8) as u64 + 4 * (256 / 8) as u64;
+        assert_eq!(q2.storage_bits(&other), expect2);
+    }
+
+    #[test]
+    fn pq_fit_reports_block_mismatch_as_typed_error() {
+        let spec = QuantSpec::Pq(PqSpec { block: Some(7), ..PqSpec::new(4) });
+        let w = vec![0.0f32; 4 * 10];
+        let e = spec.resolve(&info(40, 4, 10)).fit(&w, 4, 10, &mut Pcg::new(0)).unwrap_err();
+        assert_eq!(e, SchemeError::BlockMismatch { cols: 10, block: 7 });
+    }
+
+    #[test]
+    fn int_hat_is_in_graph_and_histogram_is_typed_error() {
+        let mut rng = Pcg::new(1);
+        let w = vec![1.0f32; 32];
+        match QuantSpec::int(8, IntObserver::MinMax)
+            .resolve(&info(32, 4, 8))
+            .hat(&w, 4, 8, &mut rng)
+            .unwrap()
+        {
+            HatKind::InGraph { entry } => assert_eq!(entry, "grad_int8"),
+            other => panic!("{other:?}"),
+        }
+        let e = QuantSpec::int(8, IntObserver::Histogram)
+            .resolve(&info(32, 4, 8))
+            .hat(&w, 4, 8, &mut rng)
+            .unwrap_err();
+        assert!(matches!(e, SchemeError::NoGradEntry { .. }), "{e}");
+    }
+
+    #[test]
+    fn pq_decode_into_matches_fit_data() {
+        let mut rng = Pcg::new(3);
+        let w: Vec<f32> = (0..32 * 16).map(|_| rng.next_normal()).collect();
+        let spec = QuantSpec::pq(8);
+        let q = spec.resolve(&info(32 * 16, 32, 16));
+        let qt = q.fit(&w, 32, 16, &mut Pcg::new(4)).unwrap();
+        let mut out = vec![0.0f32; w.len()];
+        q.decode_into(&qt, &mut out).unwrap();
+        assert_eq!(out, qt.data);
+        // a PQ tensor stripped of its state is a typed error
+        let bare = QuantizedTensor { data: qt.data.clone(), pq: None };
+        assert!(matches!(
+            q.decode_into(&bare, &mut out),
+            Err(SchemeError::MissingState { .. })
+        ));
+    }
+
+    #[test]
+    fn spec_string_normalizes_thread_knob() {
+        let a = QuantSpec::pq(64);
+        let b = QuantSpec::pq(64).with_threads(8);
+        assert_ne!(b.to_string(), a.to_string()); // Display round-trips it
+        assert_eq!(b.spec_string(), a.spec_string()); // keys ignore it
+        assert_eq!(b.spec_string(), "pq:k=64");
+    }
+
+    #[test]
+    fn error_messages_are_user_readable() {
+        let e = QuantSpec::parse("pq:k=oops").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("pq:k=oops") && msg.contains("integer"), "{msg}");
+        let e = SchemeError::InGraphOnly { scheme: "int8".into(), entry: "grad_int8" };
+        assert!(e.to_string().contains("in-graph"));
+    }
+}

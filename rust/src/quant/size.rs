@@ -2,14 +2,21 @@
 //! and Eq. 5 for the iPQ ⊕ int8 combination).
 //!
 //! Sizes are computed from the parameter inventory the manifest
-//! describes, per compression scheme, including the sharing/pruning
-//! adjustments of §7.9 (shared chunks stored once; pruned chunks not
-//! stored at all).
+//! describes by summing each parameter's [`Quantizer::storage_bits`]
+//! under a [`QuantSpec`] (or any other [`QuantizerFactory`]), including
+//! the sharing/pruning adjustments of §7.9 (shared chunks stored once;
+//! pruned chunks not stored at all). The old [`Scheme`] enum survives
+//! one release as a deprecated shim over [`QuantSpec`].
+
+use crate::quant::scheme::{QuantSpec, Quantizer, QuantizerFactory};
 
 /// One parameter's storage-relevant description.
 #[derive(Debug, Clone)]
 pub struct ParamInfo {
     pub name: String,
+    /// structure group (emb / attn / ffn / …) — drives per-structure
+    /// PQ block overrides
+    pub structure: String,
     pub numel: usize,
     /// canonical 2-D view (rows, cols); scalars/vectors use (1, numel)
     pub rows: usize,
@@ -20,51 +27,36 @@ pub struct ParamInfo {
     pub pq_block: usize,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Scheme {
-    Fp32,
-    Int { bits: u8 },
-    /// PQ with K centroids; `int8_centroids` applies §3.3 (Eq. 5).
-    Pq { k: usize, int8_centroids: bool },
+/// Bits to store one parameter under a scheme.
+pub fn param_bits(p: &ParamInfo, spec: &QuantSpec) -> u64 {
+    spec.for_param(p).storage_bits(p)
 }
 
-/// Bits to store one parameter under a scheme.
-pub fn param_bits(p: &ParamInfo, scheme: Scheme) -> u64 {
-    if !p.quantized {
-        return 32 * p.numel as u64;
-    }
-    match scheme {
-        Scheme::Fp32 => 32 * p.numel as u64,
-        // intN: codes + one fp32 scale and zero-point per tensor
-        Scheme::Int { bits } => bits as u64 * p.numel as u64 + 64,
-        Scheme::Pq { k, int8_centroids } => {
-            let d = p.pq_block;
-            let n_sub = (p.numel / d) as u64;
-            let index_bits = (k.max(2) as f64).log2().ceil() as u64;
-            let centroid_bits = if int8_centroids { 8 } else { 32 } * (k * d) as u64;
-            // Eq. 5 (without the activation term, which is not model
-            // storage): centroid table + index matrix (+64 for the
-            // centroid int8 scale/zero when applicable)
-            centroid_bits + index_bits * n_sub + if int8_centroids { 64 } else { 0 }
-        }
-    }
+/// Total model bits under any quantizer family.
+pub fn model_bits_with(params: &[ParamInfo], family: &dyn QuantizerFactory) -> u64 {
+    params.iter().map(|p| family.for_param(p).storage_bits(p)).sum()
+}
+
+/// Total model bytes under any quantizer family.
+pub fn model_bytes_with(params: &[ParamInfo], family: &dyn QuantizerFactory) -> u64 {
+    model_bits_with(params, family) / 8
 }
 
 /// Total model bytes under a scheme.
-pub fn model_bytes(params: &[ParamInfo], scheme: Scheme) -> u64 {
-    params.iter().map(|p| param_bits(p, scheme)).sum::<u64>() / 8
+pub fn model_bytes(params: &[ParamInfo], spec: &QuantSpec) -> u64 {
+    model_bytes_with(params, spec)
 }
 
 /// Layer-sharing/pruning adjustment: `stored` lists whether each param
 /// is physically stored (false for weights aliased to a shared sibling
 /// or living in a pruned chunk).
-pub fn model_bytes_with_mask(params: &[ParamInfo], scheme: Scheme, stored: &[bool]) -> u64 {
+pub fn model_bytes_with_mask(params: &[ParamInfo], spec: &QuantSpec, stored: &[bool]) -> u64 {
     assert_eq!(params.len(), stored.len());
     params
         .iter()
         .zip(stored)
         .filter(|(_, &s)| s)
-        .map(|(p, _)| param_bits(p, scheme))
+        .map(|(p, _)| param_bits(p, spec))
         .sum::<u64>()
         / 8
 }
@@ -73,8 +65,8 @@ pub fn mb(bytes: u64) -> f64 {
     bytes as f64 / 1e6
 }
 
-pub fn compression_ratio(params: &[ParamInfo], scheme: Scheme) -> f64 {
-    model_bytes(params, Scheme::Fp32) as f64 / model_bytes(params, scheme) as f64
+pub fn compression_ratio(params: &[ParamInfo], spec: &QuantSpec) -> f64 {
+    model_bytes(params, &QuantSpec::None) as f64 / model_bytes(params, spec) as f64
 }
 
 /// Activation memory term of Eq. 5 for a forward pass with batch 1:
@@ -83,14 +75,66 @@ pub fn activation_bits(input_dim: usize, int8: bool) -> u64 {
     (if int8 { 8 } else { 32 }) * input_dim as u64
 }
 
+// -------------------------------------------------- deprecated shim ---
+
+/// Legacy size-accounting scheme enum, superseded by [`QuantSpec`].
+#[deprecated(
+    note = "use quant::scheme::QuantSpec (e.g. QuantSpec::pq(k) or \"pq:k=256\".parse()); \
+            convert existing values with Scheme::to_spec()"
+)]
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    Fp32,
+    Int { bits: u8 },
+    /// PQ with K centroids; `int8_centroids` applies §3.3 (Eq. 5).
+    Pq { k: usize, int8_centroids: bool },
+}
+
+#[allow(deprecated)]
+impl Scheme {
+    /// Convert to the unified spec. Per-param block sizes still come
+    /// from each [`ParamInfo::pq_block`], exactly as before.
+    pub fn to_spec(&self) -> QuantSpec {
+        use crate::quant::scheme::{IntObserver, PqSpec};
+        match self {
+            Scheme::Fp32 => QuantSpec::None,
+            Scheme::Int { bits } => QuantSpec::int(*bits, IntObserver::MinMax),
+            Scheme::Pq { k, int8_centroids } => QuantSpec::Pq(PqSpec {
+                k: *k,
+                int8_codebook: *int8_centroids,
+                ..Default::default()
+            }),
+        }
+    }
+}
+
+/// The shim stays a drop-in quantizer family for one release: legacy
+/// values plug straight into `model_bytes_with` / `quantize_params_with`.
+#[allow(deprecated)]
+impl QuantizerFactory for Scheme {
+    fn for_param(&self, p: &ParamInfo) -> Box<dyn Quantizer> {
+        self.to_spec().resolve(p)
+    }
+
+    fn spec_string(&self) -> String {
+        self.to_spec().spec_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::scheme::{IntObserver, PqSpec};
+
+    fn pq_spec(k: usize, int8: bool) -> QuantSpec {
+        QuantSpec::Pq(PqSpec { k, int8_codebook: int8, ..Default::default() })
+    }
 
     fn inv() -> Vec<ParamInfo> {
         vec![
             ParamInfo {
                 name: "w".into(),
+                structure: "ffn".into(),
                 numel: 1024 * 1024,
                 rows: 1024,
                 cols: 1024,
@@ -99,6 +143,7 @@ mod tests {
             },
             ParamInfo {
                 name: "ln".into(),
+                structure: "norm".into(),
                 numel: 1024,
                 rows: 1,
                 cols: 1024,
@@ -111,14 +156,14 @@ mod tests {
     #[test]
     fn fp32_baseline() {
         let params = inv();
-        assert_eq!(model_bytes(&params, Scheme::Fp32), (1024 * 1024 + 1024) * 4);
+        assert_eq!(model_bytes(&params, &QuantSpec::None), (1024 * 1024 + 1024) * 4);
     }
 
     #[test]
     fn int8_is_4x_on_quantized_weights() {
         let params = inv();
-        let fp = model_bytes(&params, Scheme::Fp32) as f64;
-        let i8b = model_bytes(&params, Scheme::Int { bits: 8 }) as f64;
+        let fp = model_bytes(&params, &QuantSpec::None) as f64;
+        let i8b = model_bytes(&params, &QuantSpec::int(8, IntObserver::MinMax)) as f64;
         let ratio = fp / i8b;
         assert!((ratio - 4.0).abs() < 0.05, "{ratio}");
     }
@@ -126,8 +171,20 @@ mod tests {
     #[test]
     fn int4_is_8x() {
         let params = inv();
-        let r = compression_ratio(&params, Scheme::Int { bits: 4 });
+        let r = compression_ratio(&params, &QuantSpec::int(4, IntObserver::MinMax));
         assert!((r - 8.0).abs() < 0.1, "{r}");
+    }
+
+    #[test]
+    fn int_accounting_is_observer_independent() {
+        // size never depended on the observer mode; the unified API
+        // must keep that (Table 10 compares observers at equal size)
+        let params = inv();
+        let a = model_bytes(&params, &QuantSpec::int(4, IntObserver::MinMax));
+        let b = model_bytes(&params, &QuantSpec::int(4, IntObserver::Histogram));
+        let c = model_bytes(&params, &QuantSpec::int(4, IntObserver::PerChannel));
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 
     #[test]
@@ -136,16 +193,17 @@ mod tests {
         // centroids = 32×256×8 bits fp32.
         let params = vec![ParamInfo {
             name: "w".into(),
+            structure: "ffn".into(),
             numel: 1 << 20,
             rows: 1024,
             cols: 1024,
             quantized: true,
             pq_block: 8,
         }];
-        let bits = param_bits(&params[0], Scheme::Pq { k: 256, int8_centroids: false });
+        let bits = param_bits(&params[0], &pq_spec(256, false));
         assert_eq!(bits, 32 * 256 * 8 + 8 * (1 << 17));
         // int8 centroids divide the codebook term by 4 (+64 qparams bits)
-        let bits8 = param_bits(&params[0], Scheme::Pq { k: 256, int8_centroids: true });
+        let bits8 = param_bits(&params[0], &pq_spec(256, true));
         assert_eq!(bits8, 8 * 256 * 8 + 8 * (1 << 17) + 64);
     }
 
@@ -155,13 +213,14 @@ mod tests {
         // (+ codebook amortized) ⇒ ratio just under 32×
         let params = vec![ParamInfo {
             name: "w".into(),
+            structure: "ffn".into(),
             numel: 1 << 22,
             rows: 2048,
             cols: 2048,
             quantized: true,
             pq_block: 8,
         }];
-        let r = compression_ratio(&params, Scheme::Pq { k: 256, int8_centroids: false });
+        let r = compression_ratio(&params, &pq_spec(256, false));
         assert!(r > 28.0 && r < 32.0, "{r}");
     }
 
@@ -169,21 +228,23 @@ mod tests {
     fn unquantized_params_always_fp32() {
         let p = ParamInfo {
             name: "ln".into(),
+            structure: "norm".into(),
             numel: 100,
             rows: 1,
             cols: 100,
             quantized: false,
             pq_block: 8,
         };
-        assert_eq!(param_bits(&p, Scheme::Int { bits: 4 }), 3200);
-        assert_eq!(param_bits(&p, Scheme::Pq { k: 256, int8_centroids: true }), 3200);
+        assert_eq!(param_bits(&p, &QuantSpec::int(4, IntObserver::MinMax)), 3200);
+        assert_eq!(param_bits(&p, &pq_spec(256, true)), 3200);
+        assert_eq!(param_bits(&p, &QuantSpec::MeanSub), 3200);
     }
 
     #[test]
     fn sharing_mask_halves_shared_layers() {
         let params = inv();
-        let all = model_bytes_with_mask(&params, Scheme::Fp32, &[true, true]);
-        let masked = model_bytes_with_mask(&params, Scheme::Fp32, &[false, true]);
+        let all = model_bytes_with_mask(&params, &QuantSpec::None, &[true, true]);
+        let masked = model_bytes_with_mask(&params, &QuantSpec::None, &[false, true]);
         assert_eq!(all - masked, 4 * 1024 * 1024);
     }
 
@@ -191,5 +252,22 @@ mod tests {
     fn activation_term() {
         assert_eq!(activation_bits(1024, true), 8 * 1024);
         assert_eq!(activation_bits(1024, false), 32 * 1024);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_scheme_shim_matches_spec_accounting() {
+        let params = inv();
+        for (old, new) in [
+            (Scheme::Fp32, QuantSpec::None),
+            (Scheme::Int { bits: 8 }, QuantSpec::int(8, IntObserver::MinMax)),
+            (Scheme::Pq { k: 64, int8_centroids: false }, pq_spec(64, false)),
+            (Scheme::Pq { k: 64, int8_centroids: true }, pq_spec(64, true)),
+        ] {
+            assert_eq!(old.to_spec(), new);
+            assert_eq!(model_bytes(&params, &old.to_spec()), model_bytes(&params, &new));
+            // and the shim is itself a drop-in QuantizerFactory
+            assert_eq!(model_bytes_with(&params, &old), model_bytes(&params, &new));
+        }
     }
 }

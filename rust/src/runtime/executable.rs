@@ -34,7 +34,11 @@ pub struct ModelSession<'rt> {
 impl<'rt> ModelSession<'rt> {
     /// Create a session: loads the init params from the artifact dir,
     /// uploads them, and zero-fills the hat buffers (φ_proxy default).
-    pub fn new(rt: &'rt Runtime, manifest: &Manifest, model: &str) -> Result<(ModelSession<'rt>, ParamStore)> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        model: &str,
+    ) -> Result<(ModelSession<'rt>, ParamStore)> {
         let meta = manifest.model(model)?.clone();
         let params = ParamStore::load_qnp1(&manifest.init_path(&meta))
             .context("loading init params")?;

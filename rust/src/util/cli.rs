@@ -12,6 +12,8 @@ pub struct ArgSpec {
     pub default: Option<String>,
     pub is_flag: bool,
     pub required: bool,
+    /// accepted alternative spelling; values are stored under `name`
+    pub alias: Option<&'static str>,
 }
 
 #[derive(Debug, Default)]
@@ -51,7 +53,14 @@ impl Command {
     }
 
     pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, help, default: None, is_flag: false, required: false });
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: false,
+            alias: None,
+        });
         self
     }
 
@@ -67,17 +76,41 @@ impl Command {
             default: Some(default.to_string()),
             is_flag: false,
             required: false,
+            alias: None,
         });
         self
     }
 
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+            alias: None,
+        });
         self
     }
 
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+            required: false,
+            alias: None,
+        });
+        self
+    }
+
+    /// Accept `--alias` as another spelling of the most recently added
+    /// option (values land under the canonical name).
+    pub fn alias(mut self, alias: &'static str) -> Self {
+        if let Some(last) = self.specs.last_mut() {
+            last.alias = Some(alias);
+        }
         self
     }
 
@@ -93,7 +126,11 @@ impl Command {
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
             let req = if spec.required { " (required)" } else { "" };
-            let _ = writeln!(s, "  --{}{kind}\t{}{def}{req}", spec.name, spec.help);
+            let alias = spec
+                .alias
+                .map(|a| format!(" (alias --{a})"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{kind}\t{}{def}{req}{alias}", spec.name, spec.help);
         }
         s
     }
@@ -120,13 +157,13 @@ impl Command {
                 let spec = self
                     .specs
                     .iter()
-                    .find(|s| s.name == name)
+                    .find(|s| s.name == name || s.alias == Some(name))
                     .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
                 if spec.is_flag {
                     if inline.is_some() {
                         return Err(format!("--{name} is a flag, no value allowed"));
                     }
-                    out.flags.push(name.to_string());
+                    out.flags.push(spec.name.to_string());
                 } else {
                     let v = match inline {
                         Some(v) => v,
@@ -137,7 +174,7 @@ impl Command {
                                 .ok_or_else(|| format!("--{name} needs a value"))?
                         }
                     };
-                    out.values.insert(name.to_string(), v);
+                    out.values.insert(spec.name.to_string(), v);
                 }
             } else {
                 out.positionals.push(a.clone());
@@ -165,6 +202,7 @@ mod tests {
         Command::new("t", "test")
             .req("model", "model name")
             .opt_default("steps", "100", "steps")
+            .alias("iters")
             .flag("verbose", "chatty")
     }
 
@@ -206,5 +244,15 @@ mod tests {
         let e = cmd().parse(&argv(&["--help"])).unwrap_err();
         assert!(e.contains("--model"));
         assert!(e.contains("--steps"));
+        assert!(e.contains("alias --iters"));
+    }
+
+    #[test]
+    fn alias_resolves_to_canonical_name() {
+        let a = cmd().parse(&argv(&["--model", "lm", "--iters", "7"])).unwrap();
+        assert_eq!(a.get("steps"), Some("7"));
+        assert_eq!(a.get("iters"), None);
+        let a = cmd().parse(&argv(&["--model", "lm", "--iters=9"])).unwrap();
+        assert_eq!(a.num_or::<usize>("steps", 0), 9);
     }
 }

@@ -10,7 +10,7 @@ use quant_noise::coordinator::ipq::{post_pq, run_ipq};
 use quant_noise::coordinator::trainer::{LmSource, Trainer};
 use quant_noise::data::batcher::LmBatcher;
 use quant_noise::data::corpus::MarkovCorpus;
-use quant_noise::quant::noise::NoiseKind;
+use quant_noise::quant::scheme::QuantSpec;
 use quant_noise::runtime::client::Runtime;
 use quant_noise::runtime::executable::ModelSession;
 use quant_noise::runtime::manifest::Manifest;
@@ -34,7 +34,7 @@ fn ipq_finetune_beats_oneshot_pq() {
     let keep = vec![1.0f32; meta.n_layers];
 
     // quick training so quantization has something to lose
-    let mut tcfg = with_noise(base_train("lm", 60), NoiseKind::Proxy, 0.1);
+    let mut tcfg = with_noise(base_train("lm", 60), QuantSpec::Proxy, 0.1);
     tcfg.log_every = 1000;
     let mut tr = Trainer::new(&mut sess, init, tcfg);
     tr.train(&mut src).unwrap();

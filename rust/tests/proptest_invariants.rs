@@ -7,7 +7,8 @@ use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
 use quant_noise::quant::pq::{fit, mean_subvector_hat, PqConfig};
 use quant_noise::quant::prune::{every_other_chunk_mask, flops_fraction, share_map, stored_layers};
 use quant_noise::quant::scalar::{quant_mse, QParams};
-use quant_noise::quant::size::{param_bits, ParamInfo, Scheme};
+use quant_noise::quant::scheme::{IntObserver, PqSpec, QuantSpec};
+use quant_noise::quant::size::{param_bits, ParamInfo};
 use quant_noise::util::rng::Pcg;
 use quant_noise::util::testing::{gen_dim, prop_check, PropConfig, Size};
 
@@ -146,6 +147,7 @@ fn prop_size_accounting_additive_and_positive() {
         let cols = 64;
         let p = ParamInfo {
             name: "w".into(),
+            structure: "ffn".into(),
             numel: rows * cols,
             rows,
             cols,
@@ -153,17 +155,17 @@ fn prop_size_accounting_additive_and_positive() {
             pq_block: 8,
         };
         for scheme in [
-            Scheme::Fp32,
-            Scheme::Int { bits: 4 },
-            Scheme::Int { bits: 8 },
-            Scheme::Pq { k: 64, int8_centroids: false },
-            Scheme::Pq { k: 64, int8_centroids: true },
+            QuantSpec::None,
+            QuantSpec::int(4, IntObserver::MinMax),
+            QuantSpec::int(8, IntObserver::MinMax),
+            QuantSpec::pq(64),
+            QuantSpec::Pq(PqSpec { int8_codebook: true, ..PqSpec::new(64) }),
         ] {
-            let bits = param_bits(&p, scheme);
+            let bits = param_bits(&p, &scheme);
             if bits == 0 {
                 return Err(format!("zero bits under {scheme:?}"));
             }
-            if bits > 32 * p.numel as u64 && !matches!(scheme, Scheme::Fp32) {
+            if bits > 32 * p.numel as u64 && !matches!(scheme, QuantSpec::None) {
                 // compression never exceeds fp32 except tiny-matrix PQ
                 // codebook overhead, allowed only when numel is small
                 if p.numel > 64 * 8 * 4 {

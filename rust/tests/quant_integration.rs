@@ -3,11 +3,11 @@
 
 use quant_noise::quant::codebook::Codebook;
 use quant_noise::quant::kmeans::{kmeans, KmeansConfig};
-use quant_noise::quant::noise::{build_hat, NoiseKind};
 use quant_noise::quant::observer::{HistogramObserver, MinMaxObserver};
-use quant_noise::quant::pq::{encode, encode_scalar, fit, PqConfig, PqMatrix};
+use quant_noise::quant::pq::{decode_codes_into, encode, encode_scalar, fit, PqConfig, PqMatrix};
 use quant_noise::quant::scalar::{quant_mse, QParams};
-use quant_noise::quant::size::{compression_ratio, ParamInfo, Scheme};
+use quant_noise::quant::scheme::{IntObserver, PqSpec, QuantSpec};
+use quant_noise::quant::size::{compression_ratio, ParamInfo};
 use quant_noise::util::rng::Pcg;
 
 fn weight(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
@@ -76,6 +76,7 @@ fn compression_ratios_ordering() {
     let params: Vec<ParamInfo> = (0..10)
         .map(|i| ParamInfo {
             name: format!("w{i}"),
+            structure: "ffn".into(),
             numel: 512 * 128,
             rows: 512,
             cols: 128,
@@ -83,10 +84,11 @@ fn compression_ratios_ordering() {
             pq_block: 8,
         })
         .collect();
-    let r8 = compression_ratio(&params, Scheme::Int { bits: 8 });
-    let r4 = compression_ratio(&params, Scheme::Int { bits: 4 });
-    let rpq = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: false });
-    let rpq8 = compression_ratio(&params, Scheme::Pq { k: 64, int8_centroids: true });
+    let pq8 = QuantSpec::Pq(PqSpec { int8_codebook: true, ..PqSpec::new(64) });
+    let r8 = compression_ratio(&params, &QuantSpec::int(8, IntObserver::MinMax));
+    let r4 = compression_ratio(&params, &QuantSpec::int(4, IntObserver::MinMax));
+    let rpq = compression_ratio(&params, &QuantSpec::pq(64));
+    let rpq8 = compression_ratio(&params, &pq8);
     assert!(1.0 < r8 && r8 < r4 && r4 < rpq && rpq < rpq8, "{r8} {r4} {rpq} {rpq8}");
 }
 
@@ -116,8 +118,9 @@ fn engine_encode_matches_seed_scalar_loop() {
     let fast = encode(&w, rows, cols, &cb);
     let slow = encode_scalar(&w, rows, cols, &cb);
     assert_eq!(fast, slow);
-    // the hat built through the engine equals the scalar decode
-    let hat = build_hat(NoiseKind::ExactPq, &w, rows, cols, d, Some(&cb));
+    // decoding the engine's codes equals the scalar path's decode
+    let mut hat = vec![0.0f32; w.len()];
+    decode_codes_into(&cb, &fast, &mut hat);
     let m = PqMatrix { codebook: cb, codes: slow, rows, cols };
     assert_eq!(hat, m.decode());
 }

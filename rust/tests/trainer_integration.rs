@@ -8,7 +8,7 @@ use quant_noise::bench_harness::specs::{base_train, with_noise};
 use quant_noise::coordinator::trainer::{BatchSource, LmSource, Trainer};
 use quant_noise::data::batcher::LmBatcher;
 use quant_noise::data::corpus::MarkovCorpus;
-use quant_noise::quant::noise::NoiseKind;
+use quant_noise::quant::scheme::QuantSpec;
 use quant_noise::runtime::client::Runtime;
 use quant_noise::runtime::executable::ModelSession;
 use quant_noise::runtime::manifest::Manifest;
@@ -34,7 +34,7 @@ fn loss_decreases_over_training() {
     let Some((rt, man)) = setup() else { return };
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
-    let mut cfg = with_noise(base_train("lm", 40), NoiseKind::Proxy, 0.1);
+    let mut cfg = with_noise(base_train("lm", 40), QuantSpec::Proxy, 0.1);
     cfg.log_every = 1000;
     let mut tr = Trainer::new(&mut sess, params, cfg);
     let stats = tr.train(&mut src).unwrap();
@@ -51,7 +51,7 @@ fn sharing_keeps_siblings_identical() {
     let Some((rt, man)) = setup() else { return };
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
-    let mut cfg = with_noise(base_train("lm", 6), NoiseKind::None, 0.0);
+    let mut cfg = with_noise(base_train("lm", 6), QuantSpec::None, 0.0);
     cfg.share_chunk = 2;
     cfg.log_every = 1000;
     let mut tr = Trainer::new(&mut sess, params, cfg);
@@ -70,7 +70,7 @@ fn layerdrop_training_runs_and_learns() {
     let Some((rt, man)) = setup() else { return };
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
-    let mut cfg = with_noise(base_train("lm", 20), NoiseKind::Proxy, 0.1);
+    let mut cfg = with_noise(base_train("lm", 20), QuantSpec::Proxy, 0.1);
     cfg.layerdrop = 0.5;
     cfg.log_every = 1000;
     let mut tr = Trainer::new(&mut sess, params, cfg);
@@ -83,9 +83,9 @@ fn exact_pq_noise_trains() {
     let Some((rt, man)) = setup() else { return };
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
-    let mut cfg = with_noise(base_train("lm", 10), NoiseKind::ExactPq, 0.3);
+    // exact-φ_PQ noise via its spec: K=16 codewords, refresh budget
+    let mut cfg = with_noise(base_train("lm", 10), QuantSpec::pq_noise(16), 0.3);
     cfg.hat_refresh = 5;
-    cfg.pq_k = 16;
     cfg.log_every = 1000;
     let mut tr = Trainer::new(&mut sess, params, cfg);
     let stats = tr.train(&mut src).unwrap();

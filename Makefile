@@ -1,0 +1,39 @@
+# Quant-Noise reproduction — top-level targets.
+#
+#   make verify     tier-1 gate: build + test the Rust coordinator
+#   make artifacts  export all model artifacts (needs python + jax)
+#   make fixture    regenerate the checked-in interpreter test fixture
+#   make lint       rustfmt + clippy (what CI enforces)
+#   make doc        rustdoc with warnings denied (what CI enforces)
+#
+# The Rust side never needs Python at build or test time: the
+# interpreter fixture under rust/tests/fixtures/interp/ is checked in.
+# QN_KERNEL_IMPL=jnp lowers the noise math through the pure-jnp oracle,
+# the fast path on CPU PJRT (see python/compile/qnoise.py).
+
+PY ?= python3
+CONFIGS := python/configs/lm_tiny.json \
+           python/configs/cls_tiny.json \
+           python/configs/img_tiny.json
+
+.PHONY: verify artifacts fixture lint doc
+
+verify:
+	cd rust && cargo build --release && cargo test -q
+
+artifacts:
+	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \
+		--configs $(patsubst python/%,%,$(CONFIGS)) \
+		--out-dir ../rust/artifacts
+
+fixture:
+	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \
+		--configs configs/lm_tiny.json \
+		--entries grad_mix eval \
+		--out-dir ../rust/tests/fixtures/interp
+
+lint:
+	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
+
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

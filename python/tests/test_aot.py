@@ -12,7 +12,9 @@ import pytest
 from compile import aot, model
 
 HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ARTIFACTS = os.path.join(os.path.dirname(HERE), "artifacts")
+# `make artifacts` exports here — the same tree the Rust integration
+# tests (CARGO_MANIFEST_DIR/artifacts) and the `qn` CLI default read.
+ARTIFACTS = os.path.join(os.path.dirname(HERE), "rust", "artifacts")
 
 
 def test_qnp1_roundtrip(tmp_path):

@@ -2,7 +2,8 @@
 //! parameter store, producing the quantized weights the eval artifact
 //! sees plus exact storage accounting.
 //!
-//! The pipeline is one loop over per-parameter [`Quantizer`] objects
+//! The pipeline is one loop over per-parameter
+//! [`Quantizer`](crate::quant::scheme::Quantizer) objects
 //! resolved from a [`QuantSpec`] (or any [`QuantizerFactory`] — new
 //! schemes plug in without touching this module). Covers: intN
 //! per-tensor (MinMax or Histogram observers, §7.7), intN per-channel

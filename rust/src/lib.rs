@@ -1,13 +1,15 @@
 //! Quant-Noise: training with quantization noise for extreme model
 //! compression (Fan*, Stock* et al., ICLR 2021) — Rust coordinator.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md §2):
 //! - [`util`] — offline substrates (JSON/CLI/RNG/bench/proptest).
 //! - [`quant`] — quantization: scalar intN, observers, k-means PQ, size
 //!   accounting, pruning/sharing.
 //! - [`model`] — host-side tensors, configs, parameter store.
 //! - [`data`] — synthetic corpora and batchers.
-//! - [`runtime`] — PJRT client; loads AOT HLO-text artifacts.
+//! - [`runtime`] — loads AOT HLO-text artifacts and executes them on a
+//!   selectable backend: the pure-Rust interpreter
+//!   ([`runtime::interp`], the default) or PJRT.
 //! - [`coordinator`] — training/quantization pipelines (the paper).
 //! - [`bench_harness`] — regenerates every paper table and figure.
 pub mod util;

@@ -6,7 +6,7 @@
 //!   quantize                   post-training quantization of saved params
 //!   eval                       evaluate saved params (fp32 or quantized)
 //!   e2e                        end-to-end driver (train → iPQ → report)
-//!   bench --exp <id>           regenerate a paper table/figure
+//!   bench --exp `<id>`         regenerate a paper table/figure
 //!
 //! Python never runs here: all compute flows through the AOT artifacts
 //! in artifacts/ (build them with `make artifacts`).

@@ -1,6 +1,6 @@
 //! Training-noise plumbing (§4.2): host-side "hat" (quantized image)
 //! builders for the grad_mix family, expressed through the unified
-//! [`Quantizer`] API.
+//! [`Quantizer`](crate::quant::scheme::Quantizer) API.
 //!
 //! The old `NoiseKind` enum (a third, hand-synced copy of the scheme
 //! list) is gone: a noise function φ *is* a [`QuantSpec`], and the
@@ -17,7 +17,8 @@ use crate::util::rng::Pcg;
 /// helper has no structure context, so a spec's per-structure
 /// `block.<structure>=` overrides do not apply here — callers that need
 /// them (like `Trainer::refresh_hats`) resolve the spec against a real
-/// `ParamInfo` and call [`Quantizer::hat`] directly. Schemes whose
+/// `ParamInfo` and call [`Quantizer::hat`](crate::quant::scheme::Quantizer::hat)
+/// directly. Schemes whose
 /// noise runs inside the grad artifact return
 /// [`SchemeError::InGraphOnly`] — they have no host hat.
 pub fn build_hat(

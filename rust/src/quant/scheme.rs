@@ -33,6 +33,19 @@
 //! per-structure block override (Fig. 6b). `exact_pq` — and a bare `pq`
 //! with no options, matching the old `--noise pq` — are legacy aliases
 //! for the trainer's φ_PQ noise defaults (`pq:k=64,iters=6`).
+//!
+//! Every canonical string above round-trips (this runs as a doctest,
+//! so the table cannot rot):
+//!
+//! ```
+//! use quant_noise::quant::scheme::QuantSpec;
+//! for s in ["none", "proxy", "mean_sub", "int8", "int4",
+//!           "int8:histogram", "int8:per_channel",
+//!           "pq:k=256,d=8", "pq:k=256,d=8,cb=int8"] {
+//!     assert_eq!(QuantSpec::parse(s)?.to_string(), s, "{s} must round-trip");
+//! }
+//! # Ok::<(), quant_noise::quant::scheme::SchemeError>(())
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -240,6 +253,28 @@ impl QuantSpec {
 
     /// Parse a canonical spec string (see the module docs for the
     /// grammar). Inverse of `Display`.
+    ///
+    /// ```
+    /// use quant_noise::quant::scheme::{QuantSpec, SchemeError};
+    ///
+    /// let spec = QuantSpec::parse("pq:k=256,d=8,cb=int8")?;
+    /// assert_eq!(spec.to_string(), "pq:k=256,d=8,cb=int8");
+    ///
+    /// // non-default options round-trip in canonical order
+    /// let full = QuantSpec::parse("pq:k=64,d=4,iters=6,cb=int8,block.ffn=16")?;
+    /// assert_eq!(full.to_string(), "pq:k=64,d=4,iters=6,cb=int8,block.ffn=16");
+    ///
+    /// // legacy aliases parse but display canonically
+    /// assert_eq!(QuantSpec::parse("exact_pq")?.to_string(), "pq:k=64,iters=6");
+    /// assert_eq!(QuantSpec::parse("pq")?.to_string(), "pq:k=64,iters=6");
+    /// assert_eq!(QuantSpec::parse("int8_channel")?.to_string(), "int8:per_channel");
+    /// assert_eq!(QuantSpec::parse("mean")?.to_string(), "mean_sub");
+    ///
+    /// // malformed specs are typed errors, not panics
+    /// assert!(matches!(QuantSpec::parse("pq:k=oops"),
+    ///                  Err(SchemeError::Parse { .. })));
+    /// # Ok::<(), SchemeError>(())
+    /// ```
     pub fn parse(s: &str) -> Result<QuantSpec, SchemeError> {
         let s = s.trim();
         let err = |reason: String| SchemeError::Parse { spec: s.to_string(), reason };

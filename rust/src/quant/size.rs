@@ -5,8 +5,9 @@
 //! describes by summing each parameter's [`Quantizer::storage_bits`]
 //! under a [`QuantSpec`] (or any other [`QuantizerFactory`]), including
 //! the sharing/pruning adjustments of §7.9 (shared chunks stored once;
-//! pruned chunks not stored at all). The old [`Scheme`] enum survives
-//! one release as a deprecated shim over [`QuantSpec`].
+//! pruned chunks not stored at all). The legacy `Scheme` enum shipped
+//! one release as a deprecated shim and is gone — parse a spec string
+//! (`"pq:k=256"`) or construct a [`QuantSpec`] directly.
 
 use crate::quant::scheme::{QuantSpec, Quantizer, QuantizerFactory};
 
@@ -73,52 +74,6 @@ pub fn compression_ratio(params: &[ParamInfo], spec: &QuantSpec) -> f64 {
 /// 8 bits × input dimension when activations are int8, else 32 bits.
 pub fn activation_bits(input_dim: usize, int8: bool) -> u64 {
     (if int8 { 8 } else { 32 }) * input_dim as u64
-}
-
-// -------------------------------------------------- deprecated shim ---
-
-/// Legacy size-accounting scheme enum, superseded by [`QuantSpec`].
-#[deprecated(
-    note = "use quant::scheme::QuantSpec (e.g. QuantSpec::pq(k) or \"pq:k=256\".parse()); \
-            convert existing values with Scheme::to_spec()"
-)]
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Scheme {
-    Fp32,
-    Int { bits: u8 },
-    /// PQ with K centroids; `int8_centroids` applies §3.3 (Eq. 5).
-    Pq { k: usize, int8_centroids: bool },
-}
-
-#[allow(deprecated)]
-impl Scheme {
-    /// Convert to the unified spec. Per-param block sizes still come
-    /// from each [`ParamInfo::pq_block`], exactly as before.
-    pub fn to_spec(&self) -> QuantSpec {
-        use crate::quant::scheme::{IntObserver, PqSpec};
-        match self {
-            Scheme::Fp32 => QuantSpec::None,
-            Scheme::Int { bits } => QuantSpec::int(*bits, IntObserver::MinMax),
-            Scheme::Pq { k, int8_centroids } => QuantSpec::Pq(PqSpec {
-                k: *k,
-                int8_codebook: *int8_centroids,
-                ..Default::default()
-            }),
-        }
-    }
-}
-
-/// The shim stays a drop-in quantizer family for one release: legacy
-/// values plug straight into `model_bytes_with` / `quantize_params_with`.
-#[allow(deprecated)]
-impl QuantizerFactory for Scheme {
-    fn for_param(&self, p: &ParamInfo) -> Box<dyn Quantizer> {
-        self.to_spec().resolve(p)
-    }
-
-    fn spec_string(&self) -> String {
-        self.to_spec().spec_string()
-    }
 }
 
 #[cfg(test)]
@@ -255,19 +210,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_scheme_shim_matches_spec_accounting() {
+    fn spec_strings_cover_legacy_scheme_surface() {
+        // the deprecated `Scheme` shim is gone; its three variants map
+        // to spec strings, which must keep producing identical sizes
         let params = inv();
-        for (old, new) in [
-            (Scheme::Fp32, QuantSpec::None),
-            (Scheme::Int { bits: 8 }, QuantSpec::int(8, IntObserver::MinMax)),
-            (Scheme::Pq { k: 64, int8_centroids: false }, pq_spec(64, false)),
-            (Scheme::Pq { k: 64, int8_centroids: true }, pq_spec(64, true)),
+        for (spec_str, new) in [
+            ("none", QuantSpec::None),
+            ("int8", QuantSpec::int(8, IntObserver::MinMax)),
+            ("pq:k=64", pq_spec(64, false)),
+            ("pq:k=64,cb=int8", pq_spec(64, true)),
         ] {
-            assert_eq!(old.to_spec(), new);
-            assert_eq!(model_bytes(&params, &old.to_spec()), model_bytes(&params, &new));
-            // and the shim is itself a drop-in QuantizerFactory
-            assert_eq!(model_bytes_with(&params, &old), model_bytes(&params, &new));
+            let parsed = QuantSpec::parse(spec_str).unwrap();
+            // parsed defaults may differ in non-size knobs (iters); the
+            // storage accounting must agree regardless
+            assert_eq!(model_bytes(&params, &parsed), model_bytes(&params, &new));
+            assert_eq!(model_bytes_with(&params, &parsed), model_bytes(&params, &new));
         }
     }
 }

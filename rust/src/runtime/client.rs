@@ -1,79 +1,285 @@
-//! PJRT client wrapper: loads HLO-text artifacts, compiles them (with a
-//! per-path cache), and owns the device handle. The pattern follows
-//! /opt/xla-example/load_hlo — HLO *text* is the interchange format.
+//! Runtime client: loads HLO-text artifacts and executes them on a
+//! selectable backend (DESIGN.md §4).
+//!
+//! Two backends sit behind one `Runtime` handle:
+//!
+//! * **Interp** — the pure-Rust HLO interpreter
+//!   ([`crate::runtime::interp`]). Works offline, deterministic,
+//!   covers the tiny Transformer op set. The default.
+//! * **Pjrt** — the vendored `xla` PJRT binding. In this offline build
+//!   it is a compile-time stub whose compile/execute paths error at
+//!   runtime; with a real `xla` crate dropped into `rust/vendor/xla`
+//!   the same seam runs compiled XLA.
+//!
+//! Selection: `Runtime::cpu()` honours the `QN_BACKEND` environment
+//! variable (`interp` default, `pjrt` opt-in); tests that must execute
+//! the fixture use `Runtime::interp()` explicitly.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::interp::{self, ArrayValue, Buf, Interp, Value};
+
+/// Which execution engine a [`Runtime`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust HLO-text interpreter (offline, deterministic).
+    Interp,
+    /// PJRT via the vendored `xla` crate (stubbed in offline builds).
+    Pjrt,
+}
+
+impl Backend {
+    /// Backend choice from `QN_BACKEND`: `interp` (default when unset)
+    /// or `pjrt`. Anything else is an error — a typo must not silently
+    /// hand back the interpreter.
+    pub fn from_env() -> Result<Backend> {
+        match std::env::var("QN_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("interp") => Ok(Backend::Interp),
+            Ok("pjrt") => Ok(Backend::Pjrt),
+            Ok(other) => bail!("QN_BACKEND must be 'interp' or 'pjrt', got '{other}'"),
+        }
+    }
+}
+
+/// A loaded, executable artifact on some backend.
+pub enum Executable {
+    Interp(interp::HloModule),
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+impl Executable {
+    /// Execute and download the result. Every artifact entry returns a
+    /// flat tuple of f32 arrays (loss+grads, or eval sums) — see the
+    /// entry-point contract in DESIGN.md §1 — so that is the one
+    /// download shape this seam needs.
+    pub fn execute_f32(&self, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Executable::Interp(module) => {
+                let vals: Vec<Value> = args
+                    .iter()
+                    .map(|b| match b {
+                        Buffer::Host(a) => Ok(Value::Array(a.clone())),
+                        Buffer::Pjrt(_) => bail!("PJRT buffer passed to the interpreter backend"),
+                    })
+                    .collect::<Result<_>>()?;
+                let out = Interp::new(module).run_entry(&vals)?;
+                out.tuple()
+                    .context("artifact entry did not return a tuple")?
+                    .iter()
+                    .map(|v| Ok(v.array()?.as_f32()?.to_vec()))
+                    .collect()
+            }
+            Executable::Pjrt(exe) => {
+                let bufs: Vec<&xla::PjRtBuffer> = args
+                    .iter()
+                    .map(|b| match b {
+                        Buffer::Pjrt(p) => Ok(p),
+                        Buffer::Host(_) => bail!("interpreter buffer passed to the PJRT backend"),
+                    })
+                    .collect::<Result<_>>()?;
+                let result = exe.execute_b(&bufs).context("executing on PJRT")?;
+                let lit = result[0][0].to_literal_sync().context("downloading result")?;
+                lit.to_tuple()
+                    .context("decomposing result tuple")?
+                    .into_iter()
+                    .map(|p| p.to_vec::<f32>().context("tuple element to f32"))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// A device (or host) buffer on some backend.
+pub enum Buffer {
+    Host(ArrayValue),
+    Pjrt(xla::PjRtBuffer),
+}
 
 pub struct Runtime {
-    pub client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Backend,
+    pjrt: Option<xla::PjRtClient>,
+    cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
 }
 
 impl Runtime {
+    /// Default runtime: backend selected by `QN_BACKEND` (interp unless
+    /// overridden).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+        Runtime::with_backend(Backend::from_env()?)
+    }
+
+    /// The interpreter backend, unconditionally (what the fixture-driven
+    /// integration tests use).
+    pub fn interp() -> Runtime {
+        Runtime { backend: Backend::Interp, pjrt: None, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn with_backend(backend: Backend) -> Result<Runtime> {
+        let pjrt = match backend {
+            Backend::Interp => None,
+            Backend::Pjrt => Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?),
+        };
+        Ok(Runtime { backend, pjrt, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match (&self.backend, &self.pjrt) {
+            (Backend::Interp, _) => "interp-cpu".to_string(),
+            (Backend::Pjrt, Some(c)) => c.platform_name(),
+            (Backend::Pjrt, None) => unreachable!("PJRT backend without client"),
+        }
     }
 
     /// Load + compile an HLO text file (cached by path).
-    pub fn compile(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn compile(&self, path: &Path) -> Result<Rc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(path) {
             return Ok(exe.clone());
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?,
-        );
+        let exe = Rc::new(match self.backend {
+            Backend::Interp => Executable::Interp(interp::HloModule::parse_file(path)?),
+            Backend::Pjrt => {
+                let client = self.pjrt.as_ref().expect("PJRT backend without client");
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Executable::Pjrt(
+                    client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {}", path.display()))?,
+                )
+            }
+        });
         self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
         Ok(exe)
     }
 
     // ------------------------------------------------ host ⇄ device ---
 
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("uploading f32 buffer")
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        match self.backend {
+            Backend::Interp => Ok(Buffer::Host(
+                ArrayValue::new(dims.to_vec(), Buf::F32(data.to_vec()))
+                    .context("uploading f32 buffer")?,
+            )),
+            Backend::Pjrt => {
+                let client = self.pjrt.as_ref().expect("PJRT backend without client");
+                Ok(Buffer::Pjrt(
+                    client
+                        .buffer_from_host_buffer(data, dims, None)
+                        .context("uploading f32 buffer")?,
+                ))
+            }
+        }
     }
 
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("uploading i32 buffer")
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        match self.backend {
+            Backend::Interp => Ok(Buffer::Host(
+                ArrayValue::new(dims.to_vec(), Buf::S32(data.to_vec()))
+                    .context("uploading i32 buffer")?,
+            )),
+            Backend::Pjrt => {
+                let client = self.pjrt.as_ref().expect("PJRT backend without client");
+                Ok(Buffer::Pjrt(
+                    client
+                        .buffer_from_host_buffer(data, dims, None)
+                        .context("uploading i32 buffer")?,
+                ))
+            }
+        }
     }
 
-    pub fn scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+    pub fn scalar_f32(&self, v: f32) -> Result<Buffer> {
         self.upload_f32(&[v], &[])
     }
 
-    pub fn scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+    pub fn scalar_i32(&self, v: i32) -> Result<Buffer> {
         self.upload_i32(&[v], &[])
     }
 }
 
-/// Download a tuple-output execution result as a vector of f32 vectors
-/// (one per tuple element). All our artifacts return flat f32 tuples.
-pub fn tuple_to_f32(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
-    let buf = &result[0][0];
-    let lit = buf.to_literal_sync().context("downloading result")?;
-    let parts = lit.to_tuple().context("decomposing result tuple")?;
-    parts
-        .into_iter()
-        .map(|p| p.to_vec::<f32>().context("tuple element to f32"))
-        .collect()
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_backend_is_default_and_uploads() {
+        let rt = Runtime::interp();
+        assert_eq!(rt.backend(), Backend::Interp);
+        assert_eq!(rt.platform(), "interp-cpu");
+        let b = rt.upload_f32(&[1.0, 2.0], &[2]).unwrap();
+        match b {
+            Buffer::Host(a) => assert_eq!(a.as_f32().unwrap(), &[1.0, 2.0]),
+            Buffer::Pjrt(_) => panic!("interp runtime produced a PJRT buffer"),
+        }
+        // shape mismatches are rejected at upload time
+        assert!(rt.upload_f32(&[1.0; 5], &[2, 2]).is_err());
+        // scalars are rank-0 one-element arrays
+        match rt.scalar_i32(7).unwrap() {
+            Buffer::Host(a) => {
+                assert!(a.dims.is_empty());
+                assert_eq!(a.buf, Buf::S32(vec![7]));
+            }
+            Buffer::Pjrt(_) => panic!(),
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_still_constructs() {
+        // the stub client builds; real compile/execute paths error — the
+        // seam itself must stay usable for a future real xla crate
+        let rt = Runtime::with_backend(Backend::Pjrt).unwrap();
+        // don't assert the exact platform string: a real vendored xla
+        // reports its own name, and this test must keep passing then
+        assert!(!rt.platform().is_empty() && rt.platform() != "interp-cpu");
+        assert!(rt.upload_f32(&[0.5], &[1]).is_ok());
+        assert!(rt.compile(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn compile_caches_by_path() {
+        let dir = crate::util::testing::temp_dir("interp_cache");
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(
+            &path,
+            "HloModule m\n\nENTRY main.1 {\n  x.1 = f32[2]{0} parameter(0)\n  \
+             ROOT d.2 = f32[2]{0} add(x.1, x.1)\n}\n",
+        )
+        .unwrap();
+        let rt = Runtime::interp();
+        let a = rt.compile(&path).unwrap();
+        let b = rt.compile(&path).unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "second compile must hit the cache");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn execute_f32_runs_tuple_entry() {
+        let dir = crate::util::testing::temp_dir("interp_exec");
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(
+            &path,
+            "HloModule m\n\nENTRY main.1 {\n  x.1 = f32[2]{0} parameter(0)\n  \
+             s.2 = f32[2]{0} multiply(x.1, x.1)\n  \
+             ROOT t.3 = (f32[2]{0}, f32[2]{0}) tuple(x.1, s.2)\n}\n",
+        )
+        .unwrap();
+        let rt = Runtime::interp();
+        let exe = rt.compile(&path).unwrap();
+        let arg = rt.upload_f32(&[3.0, -2.0], &[2]).unwrap();
+        let out = exe.execute_f32(&[&arg]).unwrap();
+        assert_eq!(out, vec![vec![3.0, -2.0], vec![9.0, 4.0]]);
+        std::fs::remove_dir_all(dir).ok();
+    }
 }

@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use crate::model::config::ModelMeta;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
-use crate::runtime::client::{tuple_to_f32, Runtime};
+use crate::runtime::client::{Buffer, Executable, Runtime};
 use crate::runtime::manifest::Manifest;
 
 /// Batch input: LM/CLS feed i32 tokens, IMG feeds f32 pixels.
@@ -26,9 +26,9 @@ pub struct ModelSession<'rt> {
     rt: &'rt Runtime,
     pub meta: ModelMeta,
     manifest: Manifest,
-    exes: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
-    param_bufs: Vec<xla::PjRtBuffer>,
-    hat_bufs: Vec<xla::PjRtBuffer>,
+    exes: HashMap<String, Rc<Executable>>,
+    param_bufs: Vec<Buffer>,
+    hat_bufs: Vec<Buffer>,
 }
 
 impl<'rt> ModelSession<'rt> {
@@ -56,7 +56,7 @@ impl<'rt> ModelSession<'rt> {
         Ok((session, params))
     }
 
-    fn exe(&mut self, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    fn exe(&mut self, entry: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.exes.get(entry) {
             return Ok(e.clone());
         }
@@ -115,7 +115,7 @@ impl<'rt> ModelSession<'rt> {
         Ok(())
     }
 
-    fn upload_batch(&self, input: &BatchInput) -> Result<xla::PjRtBuffer> {
+    fn upload_batch(&self, input: &BatchInput) -> Result<Buffer> {
         match input {
             BatchInput::Tokens(t) => self.rt.upload_i32(t, &self.meta.tokens_shape),
             BatchInput::Images(x) => self.rt.upload_f32(x, &self.meta.tokens_shape),
@@ -144,7 +144,7 @@ impl<'rt> ModelSession<'rt> {
         let rate_buf = self.rt.scalar_f32(rate)?;
         let seed_buf = self.rt.scalar_i32(seed)?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 * n + 5);
+        let mut args: Vec<&Buffer> = Vec::with_capacity(2 * n + 5);
         args.extend(self.param_bufs.iter());
         args.extend(self.hat_bufs.iter());
         args.push(&batch_buf);
@@ -153,8 +153,7 @@ impl<'rt> ModelSession<'rt> {
         args.push(&rate_buf);
         args.push(&seed_buf);
 
-        let out = exe.execute_b(&args).with_context(|| format!("executing {entry}"))?;
-        let parts = tuple_to_f32(out)?;
+        let parts = exe.execute_f32(&args).with_context(|| format!("executing {entry}"))?;
         anyhow::ensure!(parts.len() == n + 1, "grad output arity {}", parts.len());
         let loss = parts[0][0];
         let grads = parts[1..]
@@ -178,14 +177,13 @@ impl<'rt> ModelSession<'rt> {
         let targets_buf = self.rt.upload_i32(targets, &self.meta.targets_shape)?;
         let keep_buf = self.rt.upload_f32(layer_keep, &[layer_keep.len()])?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 3);
+        let mut args: Vec<&Buffer> = Vec::with_capacity(self.param_bufs.len() + 3);
         args.extend(self.param_bufs.iter());
         args.push(&batch_buf);
         args.push(&targets_buf);
         args.push(&keep_buf);
 
-        let out = exe.execute_b(&args).with_context(|| format!("executing {entry}"))?;
-        let parts = tuple_to_f32(out)?;
+        let parts = exe.execute_f32(&args).with_context(|| format!("executing {entry}"))?;
         anyhow::ensure!(parts.len() == 2, "eval output arity {}", parts.len());
         Ok((parts[0][0] as f64, parts[1][0] as f64))
     }

@@ -1,0 +1,481 @@
+//! The HLO evaluator: walks a computation's instructions in SSA order,
+//! recursing into sub-computations for `call` / `while` / `reduce` /
+//! `scatter` regions.
+//!
+//! Determinism: evaluation is single-threaded and every loop (including
+//! reduction folds) visits elements in ascending row-major order, so a
+//! (module, args) pair always produces bit-identical results — across
+//! runs, machines, and whatever thread count the surrounding
+//! coordinator uses. jax's threefry PRNG lowers to plain integer HLO
+//! (`while` loops over u32 lanes), so even in-graph randomness is exact
+//! replay — no `rng-bit-generator` substitute is needed (DESIGN.md §4).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::interp::ops;
+use crate::runtime::interp::parser::{HloModule, Instr, Op, ScatterDims};
+use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, Shape, Value};
+
+/// Operand `k` of `ins`, which must be an array.
+fn operand<'e>(env: &'e [Value], ins: &Instr, k: usize) -> Result<&'e ArrayValue> {
+    env[ins.operands[k]].array()
+}
+
+pub struct Interp<'m> {
+    m: &'m HloModule,
+}
+
+impl<'m> Interp<'m> {
+    pub fn new(m: &'m HloModule) -> Interp<'m> {
+        Interp { m }
+    }
+
+    /// Run the ENTRY computation on `args` (one value per parameter).
+    pub fn run_entry(&self, args: &[Value]) -> Result<Value> {
+        self.run(self.m.entry, args)
+    }
+
+    fn run(&self, comp_idx: usize, args: &[Value]) -> Result<Value> {
+        let comp = &self.m.comps[comp_idx];
+        ensure!(
+            args.len() == comp.n_params,
+            "computation '{}' takes {} parameters, got {}",
+            comp.name,
+            comp.n_params,
+            args.len()
+        );
+        let mut env: Vec<Value> = Vec::with_capacity(comp.instrs.len());
+        for ins in &comp.instrs {
+            let v = self
+                .eval_instr(ins, &env, args)
+                .with_context(|| format!("evaluating {}::{}", comp.name, ins.name))?;
+            env.push(v);
+        }
+        Ok(env.swap_remove(comp.root))
+    }
+
+    fn eval_instr(&self, ins: &Instr, env: &[Value], args: &[Value]) -> Result<Value> {
+        let arr = |k: usize| operand(env, ins, k);
+        Ok(match &ins.op {
+            Op::Parameter(i) => args[*i].clone(),
+            Op::Constant(c) => Value::Array(c.clone()),
+            Op::Tuple => Value::Tuple(ins.operands.iter().map(|&j| env[j].clone()).collect()),
+            Op::GetTupleElement(i) => {
+                let t = env[ins.operands[0]].tuple()?;
+                ensure!(*i < t.len(), "tuple index {i} out of range");
+                t[*i].clone()
+            }
+            Op::Call { comp: target } => {
+                let cargs: Vec<Value> = ins.operands.iter().map(|&j| env[j].clone()).collect();
+                self.run(*target, &cargs)?
+            }
+            Op::While { cond, body } => {
+                let mut state = env[ins.operands[0]].clone();
+                loop {
+                    let p = self.run(*cond, std::slice::from_ref(&state))?;
+                    if !p.pred_scalar()? {
+                        break;
+                    }
+                    state = self.run(*body, std::slice::from_ref(&state))?;
+                }
+                state
+            }
+            Op::Iota { dim } => {
+                let (ty, dims) = ins.shape.array()?;
+                Value::Array(ops::iota(ty, dims, *dim)?)
+            }
+            Op::Broadcast { dims } => {
+                let (_, out_dims) = ins.shape.array()?;
+                Value::Array(ops::broadcast(arr(0)?, out_dims, dims)?)
+            }
+            Op::Reshape => {
+                let (_, out_dims) = ins.shape.array()?;
+                let a = arr(0)?;
+                ensure!(
+                    a.numel() == out_dims.iter().product::<usize>(),
+                    "reshape element count mismatch"
+                );
+                Value::Array(ArrayValue { dims: out_dims.to_vec(), buf: a.buf.clone() })
+            }
+            Op::Transpose { perm } => Value::Array(ops::transpose(arr(0)?, perm)?),
+            Op::Slice { spec } => Value::Array(ops::slice(arr(0)?, spec)?),
+            Op::Concatenate { dim } => {
+                let parts: Vec<&ArrayValue> = ins
+                    .operands
+                    .iter()
+                    .map(|&j| env[j].array())
+                    .collect::<Result<_>>()?;
+                Value::Array(ops::concatenate(&parts, *dim)?)
+            }
+            Op::Select => Value::Array(ops::select(arr(0)?, arr(1)?, arr(2)?)?),
+            Op::Compare { dir } => Value::Array(ops::compare(*dir, arr(0)?, arr(1)?)?),
+            Op::Convert => {
+                let (ty, _) = ins.shape.array()?;
+                Value::Array(ops::convert(arr(0)?, ty)?)
+            }
+            Op::BitcastConvert => {
+                let (ty, _) = ins.shape.array()?;
+                Value::Array(ops::bitcast_convert(arr(0)?, ty)?)
+            }
+            Op::Unary(u) => Value::Array(ops::unary(*u, arr(0)?)?),
+            Op::Binary(b) => Value::Array(ops::binary(*b, arr(0)?, arr(1)?)?),
+            Op::Dot(nums) => Value::Array(ops::dot(arr(0)?, arr(1)?, nums)?),
+            Op::Gather(g) => {
+                let (_, out_dims) = ins.shape.array()?;
+                Value::Array(ops::gather(arr(0)?, arr(1)?, g, out_dims)?)
+            }
+            Op::Reduce { dims, comp: target } => self.reduce(ins, env, dims, *target)?,
+            Op::Scatter { dims, comp: target } => {
+                ensure!(ins.operands.len() == 3, "variadic scatter unsupported");
+                self.scatter(arr(0)?, arr(1)?, arr(2)?, dims, *target)?
+            }
+        })
+    }
+
+    /// (Variadic) reduce: operands are N inputs followed by N scalar
+    /// inits; the region folds `(acc..., element...)` pairs. Elements
+    /// are visited in row-major order over the reduced dimensions.
+    fn reduce(&self, ins: &Instr, env: &[Value], dims: &[usize], target: usize) -> Result<Value> {
+        let nops = ins.operands.len();
+        ensure!(nops >= 2 && nops % 2 == 0, "reduce needs N inputs + N inits");
+        let nin = nops / 2;
+        let inputs: Vec<&ArrayValue> = ins.operands[..nin]
+            .iter()
+            .map(|&j| env[j].array())
+            .collect::<Result<_>>()?;
+        let inits: Vec<&ArrayValue> = ins.operands[nin..]
+            .iter()
+            .map(|&j| env[j].array())
+            .collect::<Result<_>>()?;
+        let x0 = inputs[0];
+        for x in &inputs {
+            ensure!(x.dims == x0.dims, "reduce input shape mismatch");
+        }
+        let kept: Vec<usize> = (0..x0.dims.len()).filter(|d| !dims.contains(d)).collect();
+        let out_dims: Vec<usize> = kept.iter().map(|&d| x0.dims[d]).collect();
+        let red_dims: Vec<usize> = dims.iter().map(|&d| x0.dims[d]).collect();
+        let xst = strides_of(&x0.dims);
+        let ost = strides_of(&out_dims);
+        let rst = strides_of(&red_dims);
+        let rn: usize = red_dims.iter().product();
+        let n: usize = out_dims.iter().product();
+
+        let mut outs: Vec<Buf> = inits.iter().map(|a| Buf::with_capacity(a.ty(), n)).collect();
+        let mut oi = vec![0usize; out_dims.len()];
+        let mut ri = vec![0usize; red_dims.len()];
+        for f in 0..n {
+            unflatten(f, &ost, &mut oi);
+            let mut base = 0;
+            for (k, &d) in kept.iter().enumerate() {
+                base += oi[k] * xst[d];
+            }
+            let mut accs: Vec<Value> = inits.iter().map(|a| Value::Array(a.scalar_at(0))).collect();
+            for rf in 0..rn {
+                unflatten(rf, &rst, &mut ri);
+                let mut xi = base;
+                for (k, &d) in dims.iter().enumerate() {
+                    xi += ri[k] * xst[d];
+                }
+                let mut cargs = accs;
+                for x in &inputs {
+                    cargs.push(Value::Array(x.scalar_at(xi)));
+                }
+                let res = self.run(target, &cargs)?;
+                accs = match res {
+                    Value::Tuple(vs) => vs,
+                    v => vec![v],
+                };
+                ensure!(accs.len() == nin, "reduce region arity mismatch");
+            }
+            for (o, acc) in outs.iter_mut().zip(&accs) {
+                o.push_from(&acc.array()?.buf, 0);
+            }
+        }
+        let mut results: Vec<Value> = outs
+            .into_iter()
+            .map(|buf| ArrayValue::new(out_dims.clone(), buf).map(Value::Array))
+            .collect::<Result<_>>()?;
+        if matches!(ins.shape, Shape::Tuple(_)) {
+            Ok(Value::Tuple(results))
+        } else {
+            ensure!(results.len() == 1, "reduce arity/shape mismatch");
+            Ok(results.swap_remove(0))
+        }
+    }
+
+    /// StableHLO scatter (single input), including the batching dims
+    /// jax emits for vmapped one-hot updates. Updates whose full index
+    /// falls out of bounds are dropped, matching XLA.
+    fn scatter(
+        &self,
+        operand: &ArrayValue,
+        indices: &ArrayValue,
+        updates: &ArrayValue,
+        s: &ScatterDims,
+        target: usize,
+    ) -> Result<Value> {
+        let orank = operand.dims.len();
+        let sdims: Vec<usize> =
+            (0..indices.dims.len()).filter(|&d| d != s.index_vector_dim).collect();
+        let scatter_u: Vec<usize> = (0..updates.dims.len())
+            .filter(|d| !s.update_window_dims.contains(d))
+            .collect();
+        let window_operand: Vec<usize> = (0..orank)
+            .filter(|d| {
+                !s.inserted_window_dims.contains(d) && !s.input_batching_dims.contains(d)
+            })
+            .collect();
+        ensure!(
+            window_operand.len() == s.update_window_dims.len(),
+            "scatter window dims arity mismatch"
+        );
+        ensure!(scatter_u.len() == sdims.len(), "scatter batch rank mismatch");
+
+        let mut out = operand.buf.clone();
+        let pst = strides_of(&operand.dims);
+        let ust = strides_of(&updates.dims);
+        let sst = strides_of(&indices.dims);
+        let n = updates.numel();
+        let mut ui = vec![0usize; updates.dims.len()];
+        let mut full = vec![0i64; orank];
+        for f in 0..n {
+            unflatten(f, &ust, &mut ui);
+            let mut sbase = 0;
+            for (j, &sd) in sdims.iter().enumerate() {
+                sbase += ui[scatter_u[j]] * sst[sd];
+            }
+            full.iter_mut().for_each(|v| *v = 0);
+            for (k, &od) in s.scatter_dims_to_operand_dims.iter().enumerate() {
+                let si = if s.index_vector_dim < indices.dims.len() {
+                    sbase + k * sst[s.index_vector_dim]
+                } else {
+                    sbase
+                };
+                full[od] = indices.buf.index_at(si)?;
+            }
+            for (&od, &sd) in s.input_batching_dims.iter().zip(&s.scatter_indices_batching_dims) {
+                let j = sdims.iter().position(|&x| x == sd).unwrap();
+                full[od] = ui[scatter_u[j]] as i64;
+            }
+            for (k, &d) in window_operand.iter().enumerate() {
+                full[d] += ui[s.update_window_dims[k]] as i64;
+            }
+            let in_bounds = full
+                .iter()
+                .zip(&operand.dims)
+                .all(|(&v, &d)| v >= 0 && (v as usize) < d);
+            if !in_bounds {
+                continue; // out-of-bounds updates are discarded
+            }
+            let pi: usize = full.iter().zip(&pst).map(|(&v, &s)| v as usize * s).sum();
+            let cur = Value::Array(ArrayValue {
+                dims: vec![],
+                buf: {
+                    let mut b = Buf::with_capacity(operand.ty(), 1);
+                    b.push_from(&out, pi);
+                    b
+                },
+            });
+            let upd = Value::Array(updates.scalar_at(f));
+            let res = self.run(target, &[cur, upd])?;
+            out.set_from(pi, &res.array()?.buf, 0);
+        }
+        Ok(Value::Array(ArrayValue { dims: operand.dims.clone(), buf: out }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::parser::parse_module;
+    use crate::runtime::interp::value::ElemType;
+
+    fn run(text: &str, args: &[Value]) -> Value {
+        let m = parse_module(text).unwrap();
+        Interp::new(&m).run_entry(args).unwrap()
+    }
+
+    fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+        Value::Array(ArrayValue::f32(dims, data).unwrap())
+    }
+
+    #[test]
+    fn sum_reduce_hand_checked() {
+        let text = "HloModule t\n\nregion_0.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[2,3]{1,0} parameter(0)\n  \
+                    c.2 = f32[] constant(0)\n  ROOT r.3 = f32[2]{0} reduce(x.1, c.2), \
+                    dimensions={1}, to_apply=region_0.1\n}\n";
+        let out = run(text, &[f32v(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])]);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[6.0, 15.0]);
+    }
+
+    #[test]
+    fn variadic_argmax_reduce() {
+        // jax's argmax lowering: reduce over (value, index) pairs
+        let text = "HloModule t\n\nregion_0.1 {\n  av.1 = f32[] parameter(0)\n  \
+                    ai.2 = s32[] parameter(1)\n  bv.3 = f32[] parameter(2)\n  \
+                    bi.4 = s32[] parameter(3)\n  ge.5 = pred[] compare(av.1, bv.3), \
+                    direction=GE\n  mv.6 = f32[] select(ge.5, av.1, bv.3)\n  \
+                    mi.7 = s32[] select(ge.5, ai.2, bi.4)\n  \
+                    ROOT t.8 = (f32[], s32[]) tuple(mv.6, mi.7)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+                    i.2 = s32[4]{0} iota(), iota_dimension=0\n  \
+                    ninf.3 = f32[] constant(-inf)\n  z.4 = s32[] constant(0)\n  \
+                    ROOT r.5 = (f32[], s32[]) reduce(x.1, i.2, ninf.3, z.4), \
+                    dimensions={0}, to_apply=region_0.1\n}\n";
+        let out = run(text, &[f32v(&[4], vec![1.0, 9.0, 3.0, 9.0])]);
+        let parts = out.tuple().unwrap();
+        assert_eq!(parts[0].array().unwrap().as_f32().unwrap(), &[9.0]);
+        // first max wins under GE folding in visit order
+        match &parts[1].array().unwrap().buf {
+            Buf::S32(v) => assert_eq!(v.as_slice(), &[1]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn while_loop_counts() {
+        // while (i < 5) i += 1, acc *= 2 — checks tuple state threading
+        let text = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], s32[]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    five.3 = s32[] constant(5)\n  ROOT lt.4 = pred[] compare(i.2, five.3), \
+                    direction=LT\n}\n\nbody.1 {\n  s.1 = (s32[], s32[]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    a.3 = s32[] get-tuple-element(s.1), index=1\n  \
+                    one.4 = s32[] constant(1)\n  two.5 = s32[] constant(2)\n  \
+                    i2.6 = s32[] add(i.2, one.4)\n  a2.7 = s32[] multiply(a.3, two.5)\n  \
+                    ROOT t.8 = (s32[], s32[]) tuple(i2.6, a2.7)\n}\n\n\
+                    ENTRY main.1 {\n  z.1 = s32[] constant(0)\n  one.2 = s32[] constant(1)\n  \
+                    st.3 = (s32[], s32[]) tuple(z.1, one.2)\n  \
+                    ROOT w.4 = (s32[], s32[]) while(st.3), condition=cond.1, body=body.1\n}\n";
+        let out = run(text, &[]);
+        let parts = out.tuple().unwrap();
+        match (&parts[0].array().unwrap().buf, &parts[1].array().unwrap().buf) {
+            (Buf::S32(i), Buf::S32(a)) => {
+                assert_eq!(i.as_slice(), &[5]);
+                assert_eq!(a.as_slice(), &[32]); // 2^5
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicates() {
+        // embedding-grad pattern: add updates into rows, duplicate index
+        let text = "HloModule t\n\nadd_region.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  op.1 = f32[3,2]{1,0} parameter(0)\n  \
+                    idx.2 = s32[2,1]{1,0} parameter(1)\n  \
+                    up.3 = f32[2,2]{1,0} parameter(2)\n  \
+                    ROOT sc.4 = f32[3,2]{1,0} scatter(op.1, idx.2, up.3), \
+                    update_window_dims={1}, inserted_window_dims={0}, \
+                    scatter_dims_to_operand_dims={0}, index_vector_dim=1, \
+                    to_apply=add_region.1\n}\n";
+        let operand = f32v(&[3, 2], vec![0.0; 6]);
+        let idx = Value::Array(ArrayValue::i32(&[2, 1], vec![1, 1]).unwrap());
+        let upd = f32v(&[2, 2], vec![1.0, 2.0, 10.0, 20.0]);
+        let out = run(text, &[operand, idx, upd]);
+        assert_eq!(
+            out.array().unwrap().as_f32().unwrap(),
+            &[0.0, 0.0, 11.0, 22.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn scatter_drops_out_of_bounds() {
+        let text = "HloModule t\n\nov.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT r.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  op.1 = f32[2]{0} parameter(0)\n  \
+                    idx.2 = s32[2,1]{1,0} parameter(1)\n  up.3 = f32[2]{0} parameter(2)\n  \
+                    ROOT sc.4 = f32[2]{0} scatter(op.1, idx.2, up.3), \
+                    update_window_dims={}, inserted_window_dims={0}, \
+                    scatter_dims_to_operand_dims={0}, index_vector_dim=1, \
+                    to_apply=ov.1\n}\n";
+        let operand = f32v(&[2], vec![1.0, 1.0]);
+        let idx = Value::Array(ArrayValue::i32(&[2, 1], vec![0, 7]).unwrap());
+        let upd = f32v(&[2], vec![5.0, 9.0]);
+        let out = run(text, &[operand, idx, upd]);
+        // index 7 is out of bounds: dropped, not clamped
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[6.0, 1.0]);
+    }
+
+    #[test]
+    fn call_and_nested_computations() {
+        let text = "HloModule t\n\ndouble.1 {\n  x.1 = f32[2]{0} parameter(0)\n  \
+                    ROOT d.2 = f32[2]{0} add(x.1, x.1)\n}\n\n\
+                    ENTRY main.1 {\n  p.1 = f32[2]{0} parameter(0)\n  \
+                    c.2 = f32[2]{0} call(p.1), to_apply=double.1\n  \
+                    ROOT c2.3 = f32[2]{0} call(c.2), to_apply=double.1\n}\n";
+        let out = run(text, &[f32v(&[2], vec![1.5, -2.0])]);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[6.0, -8.0]);
+    }
+
+    #[test]
+    fn softmax_cross_entropy_numerics() {
+        // exp/log/divide/reduce together: softmax of a 1x3 row then log
+        let text = "HloModule t\n\nsum.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[3]{0} parameter(0)\n  \
+                    e.2 = f32[3]{0} exponential(x.1)\n  z.3 = f32[] constant(0)\n  \
+                    s.4 = f32[] reduce(e.2, z.3), dimensions={0}, to_apply=sum.1\n  \
+                    sb.5 = f32[3]{0} broadcast(s.4), dimensions={}\n  \
+                    ROOT p.6 = f32[3]{0} divide(e.2, sb.5)\n}\n";
+        let out = run(text, &[f32v(&[3], vec![0.0, 1.0, 2.0])]);
+        let p = out.array().unwrap().as_f32().unwrap().to_vec();
+        let want = {
+            let e: Vec<f32> = [0.0f32, 1.0, 2.0].iter().map(|x| x.exp()).collect();
+            let s: f32 = e.iter().sum();
+            e.iter().map(|x| x / s).collect::<Vec<f32>>()
+        };
+        for (a, b) in p.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{p:?} vs {want:?}");
+        }
+        let total: f32 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+                    e.2 = f32[4]{0} exponential(x.1)\n  s.3 = f32[4]{0} sine(e.2)\n  \
+                    ROOT m.4 = f32[4]{0} multiply(s.3, e.2)\n}\n";
+        let m = parse_module(text).unwrap();
+        let args = vec![f32v(&[4], vec![0.1, 0.7, -1.3, 2.9])];
+        let a = Interp::new(&m).run_entry(&args).unwrap();
+        let b = Interp::new(&m).run_entry(&args).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iota_compare_select_tril_pattern() {
+        // the causal-mask construction the LM uses (tril via iota GE)
+        let text = "HloModule t\n\nENTRY main.1 {\n  i0.1 = s32[3]{0} iota(), \
+                    iota_dimension=0\n  r.2 = s32[3,3]{1,0} broadcast(i0.1), \
+                    dimensions={0}\n  i1.3 = s32[3]{0} iota(), iota_dimension=0\n  \
+                    c.4 = s32[3,3]{1,0} broadcast(i1.3), dimensions={1}\n  \
+                    ROOT ge.5 = pred[3,3]{1,0} compare(r.2, c.4), direction=GE\n}\n";
+        let out = run(text, &[]);
+        assert_eq!(
+            out.array().unwrap().as_pred().unwrap(),
+            &[true, false, false, true, true, false, true, true, true]
+        );
+    }
+
+    #[test]
+    fn convert_between_all_artifact_types() {
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = s32[2]{0} parameter(0)\n  \
+                    ROOT f.2 = f32[2]{0} convert(x.1)\n}\n";
+        let out = run(
+            text,
+            &[Value::Array(ArrayValue::i32(&[2], vec![-3, 7]).unwrap())],
+        );
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[-3.0, 7.0]);
+        let r = ops::convert(
+            &ArrayValue::new(vec![2], Buf::Pred(vec![true, false])).unwrap(),
+            ElemType::F32,
+        )
+        .unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[1.0, 0.0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Pure-Rust HLO-text interpreter backend.
+//!
+//! Parses the HLO text modules that `python/compile/aot.py` exports and
+//! evaluates them directly — no PJRT plugin, no XLA shared library —
+//! so the trainer/iPQ integration tests execute real grad/eval entries
+//! in CI on the checked-in tiny-model fixture
+//! (`rust/tests/fixtures/interp/`). See DESIGN.md §4 for the backend
+//! split, the supported op inventory, and the determinism contract.
+//!
+//! Scope: the op set the tiny *Transformer* models lower to (dot,
+//! elementwise arithmetic and bit ops, reduce, broadcast, reshape,
+//! transpose, slice, concatenate, select, compare, exp/log/rsqrt,
+//! sin/cos, iota, gather/scatter with batching dims, tuples, call,
+//! while, constants). jax's threefry PRNG lowers to plain integer HLO,
+//! so in-graph noise sampling replays exactly. ConvNet artifacts use
+//! convolution ops outside this set and still require a real PJRT
+//! backend; the interpreter reports them as unsupported opcodes.
+//!
+//! ```text
+//!   HLO text ──parser──▶ HloModule ──Interp::run_entry──▶ Value tuple
+//! ```
+
+pub mod eval;
+pub mod ops;
+pub mod parser;
+pub mod value;
+
+pub use eval::Interp;
+pub use parser::HloModule;
+pub use value::{ArrayValue, Buf, ElemType, Shape, Value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature end-to-end module exercising parse → eval together:
+    /// mean((x @ w) + b) — the core shape of every artifact entry.
+    #[test]
+    fn parse_and_run_linear_mean() {
+        let text = "HloModule smoke, entry_computation_layout={(f32[2,2]{1,0},\
+                    f32[2,2]{1,0},f32[2]{0})->f32[]}\n\n\
+                    sum.1 {\n  a.1 = f32[] parameter(0)\n  b.2 = f32[] parameter(1)\n  \
+                    ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[2,2]{1,0} parameter(0)\n  \
+                    w.2 = f32[2,2]{1,0} parameter(1)\n  b.3 = f32[2]{0} parameter(2)\n  \
+                    d.4 = f32[2,2]{1,0} dot(x.1, w.2), lhs_contracting_dims={1}, \
+                    rhs_contracting_dims={0}\n  \
+                    bb.5 = f32[2,2]{1,0} broadcast(b.3), dimensions={1}\n  \
+                    s.6 = f32[2,2]{1,0} add(d.4, bb.5)\n  z.7 = f32[] constant(0)\n  \
+                    r.8 = f32[] reduce(s.6, z.7), dimensions={0,1}, to_apply=sum.1\n  \
+                    four.9 = f32[] constant(4)\n  \
+                    ROOT m.10 = f32[] divide(r.8, four.9)\n}\n";
+        let m = HloModule::parse_str(text).unwrap();
+        let x = Value::Array(ArrayValue::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let w = Value::Array(ArrayValue::f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap());
+        let b = Value::Array(ArrayValue::f32(&[2], vec![0.5, -0.5]).unwrap());
+        let out = Interp::new(&m).run_entry(&[x, w, b]).unwrap();
+        // x@I + b = [[1.5,1.5],[3.5,3.5]]; mean = 2.5
+        let got = out.array().unwrap().as_f32().unwrap()[0];
+        assert!((got - 2.5).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn unsupported_op_reports_name() {
+        let text = "HloModule bad\n\nENTRY main.1 {\n  x.1 = f32[2,2]{1,0} parameter(0)\n  \
+                    ROOT c.2 = f32[2,2]{1,0} convolution(x.1, x.1), \
+                    dim_labels=b01f_01io->b01f\n}\n";
+        let err = format!("{:#}", HloModule::parse_str(text).unwrap_err());
+        assert!(err.contains("convolution"), "{err}");
+    }
+}

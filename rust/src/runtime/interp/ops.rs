@@ -1,0 +1,718 @@
+//! Pure array operations for the HLO evaluator (everything that does
+//! not need to apply a sub-computation). All index math works on
+//! logical row-major layouts; every loop iterates output positions in
+//! ascending flat order, so results are bit-deterministic regardless of
+//! platform or thread count (the interpreter is single-threaded by
+//! design — see DESIGN.md §4).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::interp::parser::{BinaryOp, CmpDir, DotDims, GatherDims, UnaryOp};
+use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, ElemType};
+
+// -------------------------------------------------------- elementwise ---
+
+pub fn unary(op: UnaryOp, a: &ArrayValue) -> Result<ArrayValue> {
+    let buf = match (&a.buf, op) {
+        (Buf::F32(x), UnaryOp::Negate) => Buf::F32(x.iter().map(|&v| -v).collect()),
+        (Buf::S32(x), UnaryOp::Negate) => Buf::S32(x.iter().map(|&v| v.wrapping_neg()).collect()),
+        (Buf::F32(x), UnaryOp::Exp) => Buf::F32(x.iter().map(|&v| v.exp()).collect()),
+        (Buf::F32(x), UnaryOp::Log) => Buf::F32(x.iter().map(|&v| v.ln()).collect()),
+        (Buf::F32(x), UnaryOp::Rsqrt) => Buf::F32(x.iter().map(|&v| 1.0 / v.sqrt()).collect()),
+        (Buf::F32(x), UnaryOp::Sine) => Buf::F32(x.iter().map(|&v| v.sin()).collect()),
+        (Buf::F32(x), UnaryOp::Cosine) => Buf::F32(x.iter().map(|&v| v.cos()).collect()),
+        (Buf::F32(x), UnaryOp::RoundNearestEven) => {
+            Buf::F32(x.iter().map(|&v| v.round_ties_even()).collect())
+        }
+        (b, o) => bail!("unary {o:?} unsupported for {}", b.ty().name()),
+    };
+    Ok(ArrayValue { dims: a.dims.clone(), buf })
+}
+
+/// NaN-propagating max/min (XLA semantics; `f32::max` would drop NaN).
+fn fmax(a: f32, b: f32) -> f32 {
+    if a.is_nan() || b.is_nan() {
+        f32::NAN
+    } else if a >= b {
+        a
+    } else {
+        b
+    }
+}
+
+fn fmin(a: f32, b: f32) -> f32 {
+    if a.is_nan() || b.is_nan() {
+        f32::NAN
+    } else if a <= b {
+        a
+    } else {
+        b
+    }
+}
+
+fn f32_bin(op: BinaryOp, a: f32, b: f32) -> Result<f32> {
+    Ok(match op {
+        BinaryOp::Add => a + b,
+        BinaryOp::Sub => a - b,
+        BinaryOp::Mul => a * b,
+        BinaryOp::Div => a / b,
+        BinaryOp::Max => fmax(a, b),
+        BinaryOp::Min => fmin(a, b),
+        BinaryOp::Pow => a.powf(b),
+        other => bail!("binary {other:?} unsupported for f32"),
+    })
+}
+
+fn u32_bin(op: BinaryOp, a: u32, b: u32) -> Result<u32> {
+    Ok(match op {
+        BinaryOp::Add => a.wrapping_add(b),
+        BinaryOp::Sub => a.wrapping_sub(b),
+        BinaryOp::Mul => a.wrapping_mul(b),
+        BinaryOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        BinaryOp::Max => a.max(b),
+        BinaryOp::Min => a.min(b),
+        BinaryOp::And => a & b,
+        BinaryOp::Or => a | b,
+        BinaryOp::Xor => a ^ b,
+        // XLA: logical shifts by >= bit width produce 0
+        BinaryOp::Shl => {
+            if b >= 32 {
+                0
+            } else {
+                a << b
+            }
+        }
+        BinaryOp::ShrLogical => {
+            if b >= 32 {
+                0
+            } else {
+                a >> b
+            }
+        }
+        BinaryOp::Pow => bail!("binary Pow unsupported for u32"),
+    })
+}
+
+fn s32_bin(op: BinaryOp, a: i32, b: i32) -> Result<i32> {
+    Ok(match op {
+        BinaryOp::Add => a.wrapping_add(b),
+        BinaryOp::Sub => a.wrapping_sub(b),
+        BinaryOp::Mul => a.wrapping_mul(b),
+        BinaryOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a.wrapping_div(b)
+            }
+        }
+        BinaryOp::Max => a.max(b),
+        BinaryOp::Min => a.min(b),
+        BinaryOp::And => a & b,
+        BinaryOp::Or => a | b,
+        BinaryOp::Xor => a ^ b,
+        BinaryOp::Shl => {
+            if !(0..32).contains(&b) {
+                0
+            } else {
+                a.wrapping_shl(b as u32)
+            }
+        }
+        BinaryOp::ShrLogical => {
+            if !(0..32).contains(&b) {
+                0
+            } else {
+                ((a as u32) >> b as u32) as i32
+            }
+        }
+        BinaryOp::Pow => bail!("binary Pow unsupported for s32"),
+    })
+}
+
+pub fn binary(op: BinaryOp, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue> {
+    ensure!(
+        a.dims == b.dims,
+        "binary {op:?} shape mismatch {:?} vs {:?} (HLO has no implicit broadcast)",
+        a.dims,
+        b.dims
+    );
+    let buf = match (&a.buf, &b.buf) {
+        (Buf::F32(x), Buf::F32(y)) => Buf::F32(
+            x.iter().zip(y).map(|(&p, &q)| f32_bin(op, p, q)).collect::<Result<_>>()?,
+        ),
+        (Buf::U32(x), Buf::U32(y)) => Buf::U32(
+            x.iter().zip(y).map(|(&p, &q)| u32_bin(op, p, q)).collect::<Result<_>>()?,
+        ),
+        (Buf::S32(x), Buf::S32(y)) => Buf::S32(
+            x.iter().zip(y).map(|(&p, &q)| s32_bin(op, p, q)).collect::<Result<_>>()?,
+        ),
+        (Buf::Pred(x), Buf::Pred(y)) => {
+            let f: fn(bool, bool) -> bool = match op {
+                BinaryOp::And => |p, q| p & q,
+                BinaryOp::Or => |p, q| p | q,
+                BinaryOp::Xor => |p, q| p ^ q,
+                other => bail!("binary {other:?} unsupported for pred"),
+            };
+            Buf::Pred(x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect())
+        }
+        _ => bail!("binary {op:?} operand type mismatch"),
+    };
+    Ok(ArrayValue { dims: a.dims.clone(), buf })
+}
+
+pub fn compare(dir: CmpDir, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue> {
+    ensure!(a.dims == b.dims, "compare shape mismatch");
+    fn cmp<T: PartialOrd + PartialEq>(dir: CmpDir, x: &[T], y: &[T]) -> Vec<bool> {
+        x.iter()
+            .zip(y)
+            .map(|(p, q)| match dir {
+                CmpDir::Eq => p == q,
+                CmpDir::Ne => p != q,
+                CmpDir::Lt => p < q,
+                CmpDir::Le => p <= q,
+                CmpDir::Gt => p > q,
+                CmpDir::Ge => p >= q,
+            })
+            .collect()
+    }
+    let out = match (&a.buf, &b.buf) {
+        (Buf::F32(x), Buf::F32(y)) => cmp(dir, x, y),
+        (Buf::S32(x), Buf::S32(y)) => cmp(dir, x, y),
+        (Buf::U32(x), Buf::U32(y)) => cmp(dir, x, y),
+        (Buf::Pred(x), Buf::Pred(y)) => cmp(dir, x, y),
+        _ => bail!("compare operand type mismatch"),
+    };
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Buf::Pred(out) })
+}
+
+pub fn select(p: &ArrayValue, t: &ArrayValue, f: &ArrayValue) -> Result<ArrayValue> {
+    ensure!(p.dims == t.dims && t.dims == f.dims, "select shape mismatch");
+    ensure!(t.ty() == f.ty(), "select branch type mismatch");
+    let pred = p.as_pred()?;
+    let mut buf = Buf::with_capacity(t.ty(), t.numel());
+    for (i, &take_t) in pred.iter().enumerate() {
+        buf.push_from(if take_t { &t.buf } else { &f.buf }, i);
+    }
+    Ok(ArrayValue { dims: t.dims.clone(), buf })
+}
+
+pub fn convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
+    let buf = match (&a.buf, to) {
+        (Buf::F32(x), ElemType::F32) => Buf::F32(x.clone()),
+        (Buf::F32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v as i32).collect()),
+        (Buf::F32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v as u32).collect()),
+        (Buf::F32(x), ElemType::Pred) => Buf::Pred(x.iter().map(|&v| v != 0.0).collect()),
+        (Buf::S32(x), ElemType::F32) => Buf::F32(x.iter().map(|&v| v as f32).collect()),
+        (Buf::S32(x), ElemType::S32) => Buf::S32(x.clone()),
+        (Buf::S32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v as u32).collect()),
+        (Buf::S32(x), ElemType::Pred) => Buf::Pred(x.iter().map(|&v| v != 0).collect()),
+        (Buf::U32(x), ElemType::F32) => Buf::F32(x.iter().map(|&v| v as f32).collect()),
+        (Buf::U32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v as i32).collect()),
+        (Buf::U32(x), ElemType::U32) => Buf::U32(x.clone()),
+        (Buf::U32(x), ElemType::Pred) => Buf::Pred(x.iter().map(|&v| v != 0).collect()),
+        (Buf::Pred(x), ElemType::F32) => {
+            Buf::F32(x.iter().map(|&v| if v { 1.0 } else { 0.0 }).collect())
+        }
+        (Buf::Pred(x), ElemType::S32) => {
+            Buf::S32(x.iter().map(|&v| if v { 1 } else { 0 }).collect())
+        }
+        (Buf::Pred(x), ElemType::U32) => {
+            Buf::U32(x.iter().map(|&v| if v { 1 } else { 0 }).collect())
+        }
+        (Buf::Pred(x), ElemType::Pred) => Buf::Pred(x.clone()),
+    };
+    Ok(ArrayValue { dims: a.dims.clone(), buf })
+}
+
+pub fn bitcast_convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
+    let buf = match (&a.buf, to) {
+        (Buf::F32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v.to_bits()).collect()),
+        (Buf::F32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v.to_bits() as i32).collect()),
+        (Buf::U32(x), ElemType::F32) => Buf::F32(x.iter().map(|&v| f32::from_bits(v)).collect()),
+        (Buf::S32(x), ElemType::F32) => {
+            Buf::F32(x.iter().map(|&v| f32::from_bits(v as u32)).collect())
+        }
+        (Buf::U32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v as i32).collect()),
+        (Buf::S32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v as u32).collect()),
+        (b, t) if b.ty() == t => b.clone(),
+        (b, t) => bail!("bitcast-convert {} -> {} unsupported", b.ty().name(), t.name()),
+    };
+    Ok(ArrayValue { dims: a.dims.clone(), buf })
+}
+
+// ---------------------------------------------------------- shape ops ---
+
+pub fn iota(ty: ElemType, dims: &[usize], dim: usize) -> Result<ArrayValue> {
+    ensure!(dim < dims.len(), "iota dimension {dim} out of range for {dims:?}");
+    let st = strides_of(dims);
+    let n: usize = dims.iter().product();
+    let coord = |f: usize| (f / st[dim]) % dims[dim];
+    let buf = match ty {
+        ElemType::F32 => Buf::F32((0..n).map(|f| coord(f) as f32).collect()),
+        ElemType::S32 => Buf::S32((0..n).map(|f| coord(f) as i32).collect()),
+        ElemType::U32 => Buf::U32((0..n).map(|f| coord(f) as u32).collect()),
+        ElemType::Pred => bail!("iota of pred unsupported"),
+    };
+    Ok(ArrayValue { dims: dims.to_vec(), buf })
+}
+
+/// `dimensions[k]` names the output dimension that operand dimension
+/// `k` maps to; all other output dimensions replicate.
+pub fn broadcast(a: &ArrayValue, out_dims: &[usize], mapping: &[usize]) -> Result<ArrayValue> {
+    ensure!(mapping.len() == a.dims.len(), "broadcast mapping rank mismatch");
+    let xst = strides_of(&a.dims);
+    let ost = strides_of(out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut oi = vec![0usize; out_dims.len()];
+    let mut buf = Buf::with_capacity(a.ty(), n);
+    for f in 0..n {
+        unflatten(f, &ost, &mut oi);
+        let mut xi = 0;
+        for (k, &d) in mapping.iter().enumerate() {
+            xi += oi[d] * xst[k];
+        }
+        buf.push_from(&a.buf, xi);
+    }
+    Ok(ArrayValue { dims: out_dims.to_vec(), buf })
+}
+
+pub fn transpose(a: &ArrayValue, perm: &[usize]) -> Result<ArrayValue> {
+    ensure!(perm.len() == a.dims.len(), "transpose permutation rank mismatch");
+    let out_dims: Vec<usize> = perm.iter().map(|&p| a.dims[p]).collect();
+    let xst = strides_of(&a.dims);
+    let ost = strides_of(&out_dims);
+    let n = a.numel();
+    let mut oi = vec![0usize; out_dims.len()];
+    let mut buf = Buf::with_capacity(a.ty(), n);
+    for f in 0..n {
+        unflatten(f, &ost, &mut oi);
+        let mut xi = 0;
+        for (d, &p) in perm.iter().enumerate() {
+            xi += oi[d] * xst[p];
+        }
+        buf.push_from(&a.buf, xi);
+    }
+    Ok(ArrayValue { dims: out_dims, buf })
+}
+
+pub fn slice(a: &ArrayValue, spec: &[(usize, usize, usize)]) -> Result<ArrayValue> {
+    ensure!(spec.len() == a.dims.len(), "slice rank mismatch");
+    let out_dims: Vec<usize> = spec
+        .iter()
+        .map(|&(s, l, st)| {
+            ensure!(st > 0 && s <= l, "bad slice bounds [{s}:{l}:{st}]");
+            Ok((l - s).div_ceil(st))
+        })
+        .collect::<Result<_>>()?;
+    let xst = strides_of(&a.dims);
+    let ost = strides_of(&out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut oi = vec![0usize; out_dims.len()];
+    let mut buf = Buf::with_capacity(a.ty(), n);
+    for f in 0..n {
+        unflatten(f, &ost, &mut oi);
+        let mut xi = 0;
+        for (d, &(s, _, st)) in spec.iter().enumerate() {
+            xi += (s + oi[d] * st) * xst[d];
+        }
+        buf.push_from(&a.buf, xi);
+    }
+    Ok(ArrayValue { dims: out_dims, buf })
+}
+
+pub fn concatenate(parts: &[&ArrayValue], dim: usize) -> Result<ArrayValue> {
+    ensure!(!parts.is_empty(), "concatenate of nothing");
+    let first = parts[0];
+    ensure!(dim < first.dims.len(), "concatenate dim out of range");
+    let mut out_dims = first.dims.clone();
+    out_dims[dim] = parts.iter().map(|p| p.dims[dim]).sum();
+    // view every operand as [outer, k_p, inner] and copy contiguous runs
+    let outer: usize = first.dims[..dim].iter().product();
+    let inner: usize = first.dims[dim + 1..].iter().product();
+    let n: usize = out_dims.iter().product();
+    let mut buf = Buf::with_capacity(first.ty(), n);
+    for o in 0..outer {
+        for p in parts {
+            ensure!(p.ty() == first.ty(), "concatenate type mismatch");
+            let run = p.dims[dim] * inner;
+            for i in 0..run {
+                buf.push_from(&p.buf, o * run + i);
+            }
+        }
+    }
+    Ok(ArrayValue { dims: out_dims, buf })
+}
+
+// ----------------------------------------------------------------- dot ---
+
+/// General dot product: output dims are (batch…, lhs free…, rhs free…).
+/// f32 only (the artifacts never lower integer dots); accumulates in
+/// f32 like XLA's CPU backend.
+pub fn dot(lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayValue> {
+    let x = lhs.as_f32()?;
+    let y = rhs.as_f32()?;
+    let lfree: Vec<usize> = (0..lhs.dims.len())
+        .filter(|d| !nums.lhs_batch.contains(d) && !nums.lhs_contracting.contains(d))
+        .collect();
+    let rfree: Vec<usize> = (0..rhs.dims.len())
+        .filter(|d| !nums.rhs_batch.contains(d) && !nums.rhs_contracting.contains(d))
+        .collect();
+    let mut out_dims: Vec<usize> = nums.lhs_batch.iter().map(|&d| lhs.dims[d]).collect();
+    out_dims.extend(lfree.iter().map(|&d| lhs.dims[d]));
+    out_dims.extend(rfree.iter().map(|&d| rhs.dims[d]));
+
+    let lst = strides_of(&lhs.dims);
+    let rst = strides_of(&rhs.dims);
+    let ost = strides_of(&out_dims);
+    let kdims: Vec<usize> = nums.lhs_contracting.iter().map(|&d| lhs.dims[d]).collect();
+    for (i, &d) in nums.rhs_contracting.iter().enumerate() {
+        ensure!(rhs.dims[d] == kdims[i], "dot contracting dim mismatch");
+    }
+    let kst = strides_of(&kdims);
+    let kn: usize = kdims.iter().product();
+    let n: usize = out_dims.iter().product();
+    let nb = nums.lhs_batch.len();
+    let nlf = lfree.len();
+    let mut oi = vec![0usize; out_dims.len()];
+    let mut ki = vec![0usize; kdims.len()];
+    let mut out = Vec::with_capacity(n);
+    for f in 0..n {
+        unflatten(f, &ost, &mut oi);
+        let mut lbase = 0;
+        let mut rbase = 0;
+        for k in 0..nb {
+            lbase += oi[k] * lst[nums.lhs_batch[k]];
+            rbase += oi[k] * rst[nums.rhs_batch[k]];
+        }
+        for (k, &d) in lfree.iter().enumerate() {
+            lbase += oi[nb + k] * lst[d];
+        }
+        for (k, &d) in rfree.iter().enumerate() {
+            rbase += oi[nb + nlf + k] * rst[d];
+        }
+        let mut acc = 0.0f32;
+        for kf in 0..kn {
+            unflatten(kf, &kst, &mut ki);
+            let mut li = lbase;
+            let mut ri = rbase;
+            for (t, &kc) in ki.iter().enumerate() {
+                li += kc * lst[nums.lhs_contracting[t]];
+                ri += kc * rst[nums.rhs_contracting[t]];
+            }
+            acc += x[li] * y[ri];
+        }
+        out.push(acc);
+    }
+    Ok(ArrayValue { dims: out_dims, buf: Buf::F32(out) })
+}
+
+// -------------------------------------------------------------- gather ---
+
+/// StableHLO gather, including the batching dims jax 0.4.3x emits for
+/// vmapped `take_along_axis`.
+pub fn gather(
+    operand: &ArrayValue,
+    start: &ArrayValue,
+    g: &GatherDims,
+    out_dims: &[usize],
+) -> Result<ArrayValue> {
+    let orank = operand.dims.len();
+    // start_indices dims excluding index_vector_dim, in order
+    let sdims: Vec<usize> = (0..start.dims.len()).filter(|&d| d != g.index_vector_dim).collect();
+    let batch_out: Vec<usize> =
+        (0..out_dims.len()).filter(|d| !g.offset_dims.contains(d)).collect();
+    let off_operand: Vec<usize> = (0..orank)
+        .filter(|d| {
+            !g.collapsed_slice_dims.contains(d) && !g.operand_batching_dims.contains(d)
+        })
+        .collect();
+    ensure!(off_operand.len() == g.offset_dims.len(), "gather offset_dims arity mismatch");
+    ensure!(g.slice_sizes.len() == orank, "gather slice_sizes arity mismatch");
+    ensure!(batch_out.len() == sdims.len(), "gather batch rank mismatch");
+    for (d, (&sz, &od)) in g.slice_sizes.iter().zip(&operand.dims).enumerate() {
+        ensure!(sz <= od, "gather slice_sizes[{d}] = {sz} exceeds operand dim {od}");
+    }
+
+    let ost = strides_of(out_dims);
+    let pst = strides_of(&operand.dims);
+    let sst = strides_of(&start.dims);
+    let n: usize = out_dims.iter().product();
+    let mut oi = vec![0usize; out_dims.len()];
+    let mut full = vec![0usize; orank];
+    let mut buf = Buf::with_capacity(operand.ty(), n);
+    for f in 0..n {
+        unflatten(f, &ost, &mut oi);
+        // flat position of this output cell's index vector (minus the
+        // index_vector_dim component, added per start_index_map entry)
+        let mut sbase = 0;
+        for (j, &sd) in sdims.iter().enumerate() {
+            sbase += oi[batch_out[j]] * sst[sd];
+        }
+        full.iter_mut().for_each(|v| *v = 0);
+        for (k, &od) in g.start_index_map.iter().enumerate() {
+            let si = if g.index_vector_dim < start.dims.len() {
+                sbase + k * sst[g.index_vector_dim]
+            } else {
+                sbase
+            };
+            let idx = start.buf.index_at(si)?;
+            let hi = (operand.dims[od] - g.slice_sizes[od]) as i64;
+            full[od] = idx.clamp(0, hi) as usize;
+        }
+        for (&od, &sd) in g.operand_batching_dims.iter().zip(&g.start_indices_batching_dims) {
+            let j = sdims.iter().position(|&x| x == sd).unwrap();
+            full[od] = oi[batch_out[j]];
+        }
+        let mut pi: usize = full.iter().zip(&pst).map(|(&v, &s)| v * s).sum();
+        for (k, &d) in off_operand.iter().enumerate() {
+            pi += oi[g.offset_dims[k]] * pst[d];
+        }
+        buf.push_from(&operand.buf, pi);
+    }
+    Ok(ArrayValue { dims: out_dims.to_vec(), buf })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(dims: &[usize], data: Vec<f32>) -> ArrayValue {
+        ArrayValue::f32(dims, data).unwrap()
+    }
+
+    #[test]
+    fn elementwise_f32() {
+        let a = f(&[3], vec![1.0, -2.0, 4.0]);
+        let b = f(&[3], vec![0.5, 2.0, -1.0]);
+        let add = binary(BinaryOp::Add, &a, &b).unwrap();
+        assert_eq!(add.as_f32().unwrap(), &[1.5, 0.0, 3.0]);
+        let mx = binary(BinaryOp::Max, &a, &b).unwrap();
+        assert_eq!(mx.as_f32().unwrap(), &[1.0, 2.0, 4.0]);
+        let neg = unary(UnaryOp::Negate, &a).unwrap();
+        assert_eq!(neg.as_f32().unwrap(), &[-1.0, 2.0, -4.0]);
+        // round halves to even (the intN fake-quant convention)
+        let r = unary(
+            UnaryOp::RoundNearestEven,
+            &f(&[4], vec![0.5, 1.5, 2.5, -0.5]),
+        )
+        .unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[0.0, 2.0, 2.0, -0.0]);
+        // NaN propagates through maximum (unlike f32::max)
+        let nan = binary(BinaryOp::Max, &f(&[1], vec![f32::NAN]), &f(&[1], vec![0.0])).unwrap();
+        assert!(nan.as_f32().unwrap()[0].is_nan());
+    }
+
+    #[test]
+    fn u32_wrapping_and_shifts() {
+        let a = ArrayValue::new(vec![2], Buf::U32(vec![u32::MAX, 0x89abcdef])).unwrap();
+        let b = ArrayValue::new(vec![2], Buf::U32(vec![1, 13])).unwrap();
+        let add = binary(BinaryOp::Add, &a, &b).unwrap();
+        assert_eq!(add.buf, Buf::U32(vec![0, 0x89abcdef + 13]));
+        let shl = binary(BinaryOp::Shl, &a, &b).unwrap();
+        assert_eq!(shl.buf, Buf::U32(vec![u32::MAX << 1, 0x89abcdef << 13]));
+        let shr = binary(BinaryOp::ShrLogical, &a, &b).unwrap();
+        assert_eq!(shr.buf, Buf::U32(vec![u32::MAX >> 1, 0x89abcdef >> 13]));
+        // shift amounts >= 32 produce 0 (jax's threefry fold-in relies on it)
+        let big = ArrayValue::new(vec![2], Buf::U32(vec![32, 40])).unwrap();
+        let z = binary(BinaryOp::ShrLogical, &a, &big).unwrap();
+        assert_eq!(z.buf, Buf::U32(vec![0, 0]));
+    }
+
+    #[test]
+    fn compare_and_select() {
+        let a = f(&[3], vec![1.0, 2.0, 3.0]);
+        let b = f(&[3], vec![2.0, 2.0, 2.0]);
+        let lt = compare(CmpDir::Lt, &a, &b).unwrap();
+        assert_eq!(lt.as_pred().unwrap(), &[true, false, false]);
+        let ge = compare(CmpDir::Ge, &a, &b).unwrap();
+        assert_eq!(ge.as_pred().unwrap(), &[false, true, true]);
+        let sel = select(&lt, &a, &b).unwrap();
+        assert_eq!(sel.as_f32().unwrap(), &[1.0, 2.0, 2.0]);
+        // NaN compares false except NE
+        let n = f(&[1], vec![f32::NAN]);
+        let m = f(&[1], vec![0.0]);
+        assert_eq!(compare(CmpDir::Eq, &n, &m).unwrap().as_pred().unwrap(), &[false]);
+        assert_eq!(compare(CmpDir::Ne, &n, &m).unwrap().as_pred().unwrap(), &[true]);
+    }
+
+    #[test]
+    fn convert_and_bitcast() {
+        let a = f(&[2], vec![1.9, -2.9]);
+        let s = convert(&a, ElemType::S32).unwrap(); // truncation toward zero
+        assert_eq!(s.buf, Buf::S32(vec![1, -2]));
+        let neg = ArrayValue::new(vec![1], Buf::S32(vec![-1])).unwrap();
+        let u = convert(&neg, ElemType::U32).unwrap(); // wraps mod 2^32
+        assert_eq!(u.buf, Buf::U32(vec![u32::MAX]));
+        let one = f(&[1], vec![1.0]);
+        let bits = bitcast_convert(&one, ElemType::U32).unwrap();
+        assert_eq!(bits.buf, Buf::U32(vec![0x3f80_0000]));
+        let back = bitcast_convert(&bits, ElemType::F32).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn iota_multidim() {
+        let a = iota(ElemType::S32, &[2, 3], 0).unwrap();
+        assert_eq!(a.buf, Buf::S32(vec![0, 0, 0, 1, 1, 1]));
+        let b = iota(ElemType::S32, &[2, 3], 1).unwrap();
+        assert_eq!(b.buf, Buf::S32(vec![0, 1, 2, 0, 1, 2]));
+    }
+
+    #[test]
+    fn broadcast_scalar_and_vector() {
+        let s = f(&[], vec![7.0]);
+        let b = broadcast(&s, &[2, 2], &[]).unwrap();
+        assert_eq!(b.as_f32().unwrap(), &[7.0; 4]);
+        let v = f(&[2], vec![1.0, 2.0]);
+        // map operand dim 0 to output dim 0: rows replicate
+        let rows = broadcast(&v, &[2, 3], &[0]).unwrap();
+        assert_eq!(rows.as_f32().unwrap(), &[1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        // map operand dim 0 to output dim 1: cols replicate
+        let cols = broadcast(&v, &[3, 2], &[1]).unwrap();
+        assert_eq!(cols.as_f32().unwrap(), &[1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_2d_and_4d() {
+        let a = f(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = transpose(&a, &[1, 0]).unwrap();
+        assert_eq!(t.dims, vec![3, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // the attention pattern: (B,T,H,D) -> (B,H,T,D)
+        let x = f(&[1, 2, 2, 1], vec![0.0, 1.0, 2.0, 3.0]);
+        let y = transpose(&x, &[0, 2, 1, 3]).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[0.0, 2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn slice_with_stride() {
+        let a = f(&[6], (0..6).map(|i| i as f32).collect());
+        let s = slice(&a, &[(1, 5, 2)]).unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 3.0]);
+        let m = f(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s2 = slice(&m, &[(0, 2, 1), (1, 2, 1)]).unwrap();
+        assert_eq!(s2.dims, vec![2, 1]);
+        assert_eq!(s2.as_f32().unwrap(), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn concatenate_axes() {
+        let a = f(&[1, 2], vec![1.0, 2.0]);
+        let b = f(&[1, 2], vec![3.0, 4.0]);
+        let c0 = concatenate(&[&a, &b], 0).unwrap();
+        assert_eq!(c0.dims, vec![2, 2]);
+        assert_eq!(c0.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        let c1 = concatenate(&[&a, &b], 1).unwrap();
+        assert_eq!(c1.dims, vec![1, 4]);
+        assert_eq!(c1.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_matmul_hand_checked() {
+        // [2x3] @ [3x2], plain contraction on the inner dim
+        let a = f(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = f(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let nums = DotDims {
+            lhs_contracting: vec![1],
+            rhs_contracting: vec![0],
+            ..Default::default()
+        };
+        let c = dot(&a, &b, &nums).unwrap();
+        assert_eq!(c.dims, vec![2, 2]);
+        assert_eq!(c.as_f32().unwrap(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn dot_batched_hand_checked() {
+        // batch dim 0 (size 2), contract dim 2 of lhs with dim 2 of rhs:
+        // the attention-score einsum bhtd,bhsd->bhts collapsed to 3-D
+        let a = f(&[2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = f(&[2, 1, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let nums = DotDims {
+            lhs_batch: vec![0],
+            rhs_batch: vec![0],
+            lhs_contracting: vec![2],
+            rhs_contracting: vec![2],
+        };
+        let c = dot(&a, &b, &nums).unwrap();
+        assert_eq!(c.dims, vec![2, 1, 1]);
+        // batch 0: 1*5+2*6 = 17; batch 1: 3*7+4*8 = 53
+        assert_eq!(c.as_f32().unwrap(), &[17.0, 53.0]);
+    }
+
+    #[test]
+    fn gather_embedding_rows() {
+        // embedding lookup: operand [4,2], indices [3,1] -> [3,2]
+        let table = f(&[4, 2], vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1, 3.0, 3.1]);
+        let idx = ArrayValue::new(vec![3, 1], Buf::S32(vec![2, 0, 3])).unwrap();
+        let g = GatherDims {
+            offset_dims: vec![1],
+            collapsed_slice_dims: vec![0],
+            start_index_map: vec![0],
+            index_vector_dim: 1,
+            slice_sizes: vec![1, 2],
+            ..Default::default()
+        };
+        let out = gather(&table, &idx, &g, &[3, 2]).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[2.0, 2.1, 0.0, 0.1, 3.0, 3.1]);
+    }
+
+    #[test]
+    fn gather_clamps_out_of_range_starts() {
+        let table = f(&[4, 2], vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1, 3.0, 3.1]);
+        let idx = ArrayValue::new(vec![2, 1], Buf::S32(vec![-5, 99])).unwrap();
+        let g = GatherDims {
+            offset_dims: vec![1],
+            collapsed_slice_dims: vec![0],
+            start_index_map: vec![0],
+            index_vector_dim: 1,
+            slice_sizes: vec![1, 2],
+            ..Default::default()
+        };
+        let out = gather(&table, &idx, &g, &[2, 2]).unwrap();
+        // clamped to rows 0 and 3
+        assert_eq!(out.as_f32().unwrap(), &[0.0, 0.1, 3.0, 3.1]);
+    }
+
+    #[test]
+    fn gather_rejects_oversized_slice() {
+        // malformed module: slice larger than the operand dim must be a
+        // typed error, not an arithmetic panic
+        let table = f(&[4, 2], vec![0.0; 8]);
+        let idx = ArrayValue::new(vec![1, 1], Buf::S32(vec![0])).unwrap();
+        let g = GatherDims {
+            offset_dims: vec![1],
+            collapsed_slice_dims: vec![0],
+            start_index_map: vec![0],
+            index_vector_dim: 1,
+            slice_sizes: vec![5, 2],
+            ..Default::default()
+        };
+        assert!(gather(&table, &idx, &g, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn gather_with_batching_dims() {
+        // per-batch scalar pick: operand [2,3], indices [2,1]; batch dim
+        // 0 of the operand pairs with dim 0 of the indices
+        let x = f(&[2, 3], vec![10.0, 11.0, 12.0, 20.0, 21.0, 22.0]);
+        let idx = ArrayValue::new(vec![2, 1], Buf::S32(vec![2, 0])).unwrap();
+        let g = GatherDims {
+            offset_dims: vec![],
+            collapsed_slice_dims: vec![1],
+            operand_batching_dims: vec![0],
+            start_indices_batching_dims: vec![0],
+            start_index_map: vec![1],
+            index_vector_dim: 1,
+            slice_sizes: vec![1, 1],
+        };
+        let out = gather(&x, &idx, &g, &[2]).unwrap();
+        // batch 0 picks column 2 (12), batch 1 picks column 0 (20)
+        assert_eq!(out.as_f32().unwrap(), &[12.0, 20.0]);
+    }
+}

@@ -1,0 +1,827 @@
+//! Parser for the HLO *text* format that `python/compile/aot.py` emits
+//! (`HloModule` header, named computations, one instruction per line).
+//!
+//! The grammar subset matches what jax 0.4.x lowers the tiny models to —
+//! see DESIGN.md §4 for the op inventory. Layout annotations (`{1,0}`)
+//! are consumed and ignored (physical-only); `/*index=N*/`-style
+//! comments are treated as whitespace. Instruction operands always
+//! refer to earlier instructions of the same computation; computations
+//! referenced by `to_apply`/`condition`/`body` are resolved module-wide
+//! in a fixup pass after all computations have been parsed.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::interp::value::{ArrayValue, Buf, ElemType, Shape};
+
+// ------------------------------------------------------------- model ---
+
+/// Comparison directions (`compare(..), direction=LT`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Negate,
+    Exp,
+    Log,
+    Rsqrt,
+    Sine,
+    Cosine,
+    RoundNearestEven,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    And,
+    Or,
+    Xor,
+    Shl,
+    ShrLogical,
+}
+
+/// `dot` dimension numbers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DotDims {
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub lhs_contracting: Vec<usize>,
+    pub rhs_contracting: Vec<usize>,
+}
+
+/// `gather` dimension numbers (StableHLO semantics, incl. batching dims).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GatherDims {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub operand_batching_dims: Vec<usize>,
+    pub start_indices_batching_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+/// `scatter` dimension numbers (StableHLO semantics, incl. batching dims).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScatterDims {
+    pub update_window_dims: Vec<usize>,
+    pub inserted_window_dims: Vec<usize>,
+    pub input_batching_dims: Vec<usize>,
+    pub scatter_indices_batching_dims: Vec<usize>,
+    pub scatter_dims_to_operand_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+}
+
+/// One parsed instruction's operation, with attributes already typed.
+/// Computation references start as `usize::MAX` and are patched by the
+/// module-level fixup pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Parameter(usize),
+    Constant(ArrayValue),
+    Tuple,
+    GetTupleElement(usize),
+    Call { comp: usize },
+    While { cond: usize, body: usize },
+    Iota { dim: usize },
+    Broadcast { dims: Vec<usize> },
+    Reshape,
+    Transpose { perm: Vec<usize> },
+    /// Per output dimension: (start, limit, stride).
+    Slice { spec: Vec<(usize, usize, usize)> },
+    Concatenate { dim: usize },
+    Select,
+    Compare { dir: CmpDir },
+    Convert,
+    BitcastConvert,
+    Unary(UnaryOp),
+    Binary(BinaryOp),
+    Dot(DotDims),
+    Reduce { dims: Vec<usize>, comp: usize },
+    Gather(GatherDims),
+    Scatter { dims: ScatterDims, comp: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub op: Op,
+    /// Indices of operand instructions within the same computation.
+    pub operands: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub root: usize,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub comps: Vec<Computation>,
+    pub entry: usize,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.comps[self.entry]
+    }
+
+    pub fn parse_str(text: &str) -> Result<HloModule> {
+        parse_module(text)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<HloModule> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        parse_module(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+// ------------------------------------------------------------ cursor ---
+
+struct Cursor<'a> {
+    s: &'a str,
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(s: &'a str) -> Cursor<'a> {
+        Cursor { s, i: 0 }
+    }
+
+    fn eof(&self) -> bool {
+        self.i >= self.s.len()
+    }
+
+    fn peek(&self) -> u8 {
+        if self.eof() {
+            0
+        } else {
+            self.s.as_bytes()[self.i]
+        }
+    }
+
+    fn context(&self) -> &str {
+        let end = (self.i + 40).min(self.s.len());
+        &self.s[self.i..end]
+    }
+
+    /// Skip spaces/tabs (and newlines when `nl`), plus `/* ... */`.
+    fn skip_ws(&mut self, nl: bool) -> Result<()> {
+        loop {
+            match self.peek() {
+                b' ' | b'\t' => self.i += 1,
+                b'\r' | b'\n' if nl => self.i += 1,
+                b'/' if self.s[self.i..].starts_with("/*") => {
+                    match self.s[self.i + 2..].find("*/") {
+                        Some(j) => self.i += 2 + j + 2,
+                        None => bail!("unterminated /* comment"),
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn try_eat(&mut self, tok: &str) -> bool {
+        if self.s[self.i..].starts_with(tok) {
+            self.i += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat(&mut self, tok: &str) -> Result<()> {
+        ensure!(self.try_eat(tok), "expected '{tok}' at '{}…'", self.context());
+        Ok(())
+    }
+
+    /// HLO identifier: letters, digits, `_`, `.`, `-` (opcode and
+    /// instruction names like `shift-right-logical.12`).
+    fn ident(&mut self) -> Result<&'a str> {
+        let start = self.i;
+        while !self.eof() {
+            let c = self.peek();
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'-' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        ensure!(self.i > start, "expected identifier at '{}…'", self.context());
+        Ok(&self.s[start..self.i])
+    }
+
+    /// Scan to the next top-level occurrence of a stop byte (or a `}`
+    /// closing an outer brace), tracking `{}` nesting.
+    fn scan_until(&mut self, stops: &[u8]) -> &'a str {
+        let start = self.i;
+        let mut depth = 0usize;
+        while !self.eof() {
+            let c = self.peek();
+            if c == b'{' {
+                depth += 1;
+            } else if c == b'}' {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            } else if depth == 0 && stops.contains(&c) {
+                break;
+            }
+            self.i += 1;
+        }
+        &self.s[start..self.i]
+    }
+}
+
+// ------------------------------------------------------- sub-parsers ---
+
+fn parse_shape(c: &mut Cursor) -> Result<Shape> {
+    c.skip_ws(true)?;
+    if c.try_eat("(") {
+        let mut elems = Vec::new();
+        loop {
+            c.skip_ws(true)?;
+            if c.try_eat(")") {
+                break;
+            }
+            elems.push(parse_shape(c)?);
+            c.skip_ws(true)?;
+            c.try_eat(",");
+        }
+        return Ok(Shape::Tuple(elems));
+    }
+    let tyname = c.ident()?;
+    let ty = ElemType::parse(tyname)
+        .with_context(|| format!("unsupported element type '{tyname}'"))?;
+    c.eat("[")?;
+    let mut dims = Vec::new();
+    loop {
+        c.skip_ws(true)?;
+        if c.try_eat("]") {
+            break;
+        }
+        let tok = c.scan_until(b",]");
+        let tok = tok.trim();
+        if !tok.is_empty() {
+            dims.push(tok.parse::<usize>().with_context(|| format!("bad dim '{tok}'"))?);
+        }
+        c.try_eat(",");
+    }
+    // optional physical layout `{1,0}` — ignored (logical row-major)
+    c.skip_ws(false)?;
+    if c.peek() == b'{' {
+        c.eat("{")?;
+        c.scan_until(b"");
+        c.eat("}")?;
+    }
+    Ok(Shape::Array { ty, dims })
+}
+
+/// Parse a `constant(...)` literal payload into a flat row-major buffer.
+fn parse_literal(c: &mut Cursor, ty: ElemType, numel: usize) -> Result<Buf> {
+    let mut buf = Buf::with_capacity(ty, numel);
+    parse_literal_nested(c, ty, &mut buf)?;
+    ensure!(buf.len() == numel, "constant literal has {} elements, shape wants {numel}", buf.len());
+    Ok(buf)
+}
+
+fn parse_literal_nested(c: &mut Cursor, ty: ElemType, out: &mut Buf) -> Result<()> {
+    c.skip_ws(true)?;
+    if c.try_eat("{") {
+        loop {
+            c.skip_ws(true)?;
+            if c.try_eat("}") {
+                return Ok(());
+            }
+            parse_literal_nested(c, ty, out)?;
+            c.skip_ws(true)?;
+            c.try_eat(",");
+        }
+    }
+    let tok = c.scan_until(b",)").trim();
+    match (ty, out) {
+        (ElemType::F32, Buf::F32(v)) => {
+            v.push(tok.parse::<f32>().with_context(|| format!("bad f32 literal '{tok}'"))?)
+        }
+        (ElemType::S32, Buf::S32(v)) => {
+            v.push(tok.parse::<i32>().with_context(|| format!("bad s32 literal '{tok}'"))?)
+        }
+        (ElemType::U32, Buf::U32(v)) => {
+            v.push(tok.parse::<u32>().with_context(|| format!("bad u32 literal '{tok}'"))?)
+        }
+        (ElemType::Pred, Buf::Pred(v)) => match tok {
+            "true" | "1" => v.push(true),
+            "false" | "0" => v.push(false),
+            _ => bail!("bad pred literal '{tok}'"),
+        },
+        _ => unreachable!("literal buffer type mismatch"),
+    }
+    Ok(())
+}
+
+fn int_list(s: &str) -> Result<Vec<usize>> {
+    let s = s.trim().trim_start_matches('{').trim_end_matches('}').trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|x| x.trim().parse::<usize>().with_context(|| format!("bad int list '{s}'")))
+        .collect()
+}
+
+/// `{[0:1], [2:8:2]}` → per-dimension (start, limit, stride).
+fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let mut out = Vec::new();
+    for part in s.trim().trim_start_matches('{').trim_end_matches('}').split(']') {
+        let part = part.trim().trim_start_matches(',').trim().trim_start_matches('[');
+        if part.is_empty() {
+            continue;
+        }
+        let nums: Vec<usize> = part
+            .split(':')
+            .map(|x| x.trim().parse::<usize>().with_context(|| format!("bad slice '{part}'")))
+            .collect::<Result<_>>()?;
+        match nums.len() {
+            2 => out.push((nums[0], nums[1], 1)),
+            3 => out.push((nums[0], nums[1], nums[2])),
+            _ => bail!("bad slice spec '{part}'"),
+        }
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------- attributes ---
+
+/// Raw `key=value` attributes of one instruction line.
+struct Attrs<'a> {
+    kv: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Attrs<'a> {
+    fn get(&self, key: &str) -> Option<&'a str> {
+        self.kv.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+
+    fn req(&self, key: &str) -> Result<&'a str> {
+        self.get(key).with_context(|| format!("missing attribute '{key}'"))
+    }
+
+    fn ints(&self, key: &str) -> Result<Vec<usize>> {
+        match self.get(key) {
+            Some(v) => int_list(v),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    fn int(&self, key: &str) -> Result<usize> {
+        self.req(key)?
+            .trim()
+            .parse::<usize>()
+            .with_context(|| format!("bad integer attribute '{key}'"))
+    }
+}
+
+fn parse_attrs<'a>(c: &mut Cursor<'a>) -> Result<Attrs<'a>> {
+    let mut kv = Vec::new();
+    loop {
+        c.skip_ws(false)?;
+        let save = c.i;
+        if !c.try_eat(",") {
+            break;
+        }
+        c.skip_ws(false)?;
+        // a line break inside the operand list would land here; only
+        // `ident=` continues the attribute list
+        let Ok(key) = c.ident() else {
+            c.i = save;
+            break;
+        };
+        if !c.try_eat("=") {
+            c.i = save;
+            break;
+        }
+        c.skip_ws(false)?;
+        let val = if c.peek() == b'{' {
+            let start = c.i;
+            c.eat("{")?;
+            c.scan_until(b"");
+            c.eat("}")?;
+            &c.s[start..c.i]
+        } else {
+            c.scan_until(b",\n").trim()
+        };
+        kv.push((key, val));
+    }
+    Ok(Attrs { kv })
+}
+
+// ------------------------------------------------------ instructions ---
+
+/// Pending computation-name reference to patch after the whole module
+/// is parsed: (computation idx, instruction idx, slot, name).
+enum FixSlot {
+    Call,
+    WhileCond,
+    WhileBody,
+    Reduce,
+    Scatter,
+}
+
+struct Fixup {
+    comp: usize,
+    instr: usize,
+    slot: FixSlot,
+    target: String,
+}
+
+fn build_op(
+    opcode: &str,
+    shape: &Shape,
+    attrs: &Attrs,
+    literal: Option<Buf>,
+    param_num: Option<usize>,
+    fix: &mut Vec<(FixSlot, String)>,
+) -> Result<Op> {
+    let comp_ref = |fix: &mut Vec<(FixSlot, String)>, slot: FixSlot, name: &str| {
+        fix.push((slot, name.to_string()));
+        usize::MAX
+    };
+    Ok(match opcode {
+        "parameter" => Op::Parameter(param_num.context("parameter without number")?),
+        "constant" => {
+            let (ty, dims) = shape.array()?;
+            let buf = literal.context("constant without literal")?;
+            ensure!(buf.ty() == ty, "constant literal type mismatch");
+            Op::Constant(ArrayValue::new(dims.to_vec(), buf)?)
+        }
+        "tuple" => Op::Tuple,
+        "get-tuple-element" => Op::GetTupleElement(attrs.int("index")?),
+        "call" => Op::Call { comp: comp_ref(fix, FixSlot::Call, attrs.req("to_apply")?) },
+        "while" => {
+            let cond = comp_ref(fix, FixSlot::WhileCond, attrs.req("condition")?);
+            let body = comp_ref(fix, FixSlot::WhileBody, attrs.req("body")?);
+            Op::While { cond, body }
+        }
+        "iota" => Op::Iota { dim: attrs.int("iota_dimension")? },
+        "broadcast" => Op::Broadcast { dims: attrs.ints("dimensions")? },
+        "reshape" => Op::Reshape,
+        "transpose" => Op::Transpose { perm: attrs.ints("dimensions")? },
+        "slice" => Op::Slice { spec: parse_slice_spec(attrs.req("slice")?)? },
+        "concatenate" => {
+            let dims = attrs.ints("dimensions")?;
+            ensure!(dims.len() == 1, "concatenate needs exactly one dimension");
+            Op::Concatenate { dim: dims[0] }
+        }
+        "select" => Op::Select,
+        "compare" => {
+            let dir = match attrs.req("direction")? {
+                "EQ" => CmpDir::Eq,
+                "NE" => CmpDir::Ne,
+                "LT" => CmpDir::Lt,
+                "LE" => CmpDir::Le,
+                "GT" => CmpDir::Gt,
+                "GE" => CmpDir::Ge,
+                other => bail!("unknown compare direction '{other}'"),
+            };
+            Op::Compare { dir }
+        }
+        "convert" => Op::Convert,
+        "bitcast-convert" => Op::BitcastConvert,
+        "negate" => Op::Unary(UnaryOp::Negate),
+        "exponential" => Op::Unary(UnaryOp::Exp),
+        "log" => Op::Unary(UnaryOp::Log),
+        "rsqrt" => Op::Unary(UnaryOp::Rsqrt),
+        "sine" => Op::Unary(UnaryOp::Sine),
+        "cosine" => Op::Unary(UnaryOp::Cosine),
+        "round-nearest-even" => Op::Unary(UnaryOp::RoundNearestEven),
+        "add" => Op::Binary(BinaryOp::Add),
+        "subtract" => Op::Binary(BinaryOp::Sub),
+        "multiply" => Op::Binary(BinaryOp::Mul),
+        "divide" => Op::Binary(BinaryOp::Div),
+        "maximum" => Op::Binary(BinaryOp::Max),
+        "minimum" => Op::Binary(BinaryOp::Min),
+        "power" => Op::Binary(BinaryOp::Pow),
+        "and" => Op::Binary(BinaryOp::And),
+        "or" => Op::Binary(BinaryOp::Or),
+        "xor" => Op::Binary(BinaryOp::Xor),
+        "shift-left" => Op::Binary(BinaryOp::Shl),
+        "shift-right-logical" => Op::Binary(BinaryOp::ShrLogical),
+        "dot" => Op::Dot(DotDims {
+            lhs_batch: attrs.ints("lhs_batch_dims")?,
+            rhs_batch: attrs.ints("rhs_batch_dims")?,
+            lhs_contracting: attrs.ints("lhs_contracting_dims")?,
+            rhs_contracting: attrs.ints("rhs_contracting_dims")?,
+        }),
+        "reduce" => Op::Reduce {
+            dims: attrs.ints("dimensions")?,
+            comp: comp_ref(fix, FixSlot::Reduce, attrs.req("to_apply")?),
+        },
+        "gather" => Op::Gather(GatherDims {
+            offset_dims: attrs.ints("offset_dims")?,
+            collapsed_slice_dims: attrs.ints("collapsed_slice_dims")?,
+            operand_batching_dims: attrs.ints("operand_batching_dims")?,
+            start_indices_batching_dims: attrs.ints("start_indices_batching_dims")?,
+            start_index_map: attrs.ints("start_index_map")?,
+            index_vector_dim: attrs.int("index_vector_dim")?,
+            slice_sizes: attrs.ints("slice_sizes")?,
+        }),
+        "scatter" => Op::Scatter {
+            dims: ScatterDims {
+                update_window_dims: attrs.ints("update_window_dims")?,
+                inserted_window_dims: attrs.ints("inserted_window_dims")?,
+                input_batching_dims: attrs.ints("input_batching_dims")?,
+                scatter_indices_batching_dims: attrs.ints("scatter_indices_batching_dims")?,
+                scatter_dims_to_operand_dims: attrs.ints("scatter_dims_to_operand_dims")?,
+                index_vector_dim: attrs.int("index_vector_dim")?,
+            },
+            comp: comp_ref(fix, FixSlot::Scatter, attrs.req("to_apply")?),
+        },
+        other => bail!("unsupported HLO opcode '{other}'"),
+    })
+}
+
+// ------------------------------------------------------------ module ---
+
+fn parse_computation(
+    c: &mut Cursor,
+    name: &str,
+    fixups: &mut Vec<Fixup>,
+    comp_idx: usize,
+) -> Result<Computation> {
+    let mut comp = Computation {
+        name: name.to_string(),
+        instrs: Vec::new(),
+        root: usize::MAX,
+        n_params: 0,
+    };
+    let mut index: HashMap<String, usize> = HashMap::new();
+    loop {
+        c.skip_ws(true)?;
+        if c.try_eat("}") {
+            break;
+        }
+        let is_root = c.try_eat("ROOT ");
+        c.skip_ws(false)?;
+        let iname = c.ident()?;
+        c.skip_ws(false)?;
+        c.eat("=")?;
+        let shape = parse_shape(c)?;
+        c.skip_ws(false)?;
+        let opcode = c.ident()?;
+        c.eat("(")?;
+        let mut operands = Vec::new();
+        let mut literal = None;
+        let mut param_num = None;
+        if opcode == "constant" {
+            let (ty, _) = shape.array()?;
+            literal = Some(parse_literal(c, ty, shape.numel())?);
+            c.skip_ws(true)?;
+            c.eat(")")?;
+        } else if opcode == "parameter" {
+            let tok = c.scan_until(b")").trim();
+            let n = tok.parse::<usize>().with_context(|| format!("bad parameter '{tok}'"))?;
+            param_num = Some(n);
+            // parameters may appear in any textual (use) order
+            comp.n_params = comp.n_params.max(n + 1);
+            c.eat(")")?;
+        } else {
+            loop {
+                c.skip_ws(true)?;
+                if c.try_eat(")") {
+                    break;
+                }
+                let oname = c.ident()?;
+                let oi = *index
+                    .get(oname)
+                    .with_context(|| format!("{iname}: operand '{oname}' not yet defined"))?;
+                operands.push(oi);
+                c.skip_ws(true)?;
+                c.try_eat(",");
+            }
+        }
+        let attrs = parse_attrs(c)?;
+        let mut fix = Vec::new();
+        let op = build_op(opcode, &shape, &attrs, literal, param_num, &mut fix)
+            .with_context(|| format!("instruction '{iname}'"))?;
+        let ii = comp.instrs.len();
+        for (slot, target) in fix {
+            fixups.push(Fixup { comp: comp_idx, instr: ii, slot, target });
+        }
+        index.insert(iname.to_string(), ii);
+        comp.instrs.push(Instr { name: iname.to_string(), shape, op, operands });
+        if is_root {
+            comp.root = ii;
+        }
+    }
+    ensure!(comp.root != usize::MAX, "computation '{name}' has no ROOT");
+    Ok(comp)
+}
+
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut c = Cursor::new(text);
+    c.skip_ws(true)?;
+    c.eat("HloModule")?;
+    c.skip_ws(false)?;
+    let mod_name = c.ident()?.to_string();
+    // skip the rest of the header line (entry_computation_layout, …)
+    match c.s[c.i..].find('\n') {
+        Some(j) => c.i += j + 1,
+        None => c.i = c.s.len(),
+    }
+
+    let mut comps: Vec<Computation> = Vec::new();
+    let mut fixups: Vec<Fixup> = Vec::new();
+    let mut entry = None;
+    loop {
+        c.skip_ws(true)?;
+        if c.eof() {
+            break;
+        }
+        let is_entry = c.try_eat("ENTRY ");
+        c.skip_ws(false)?;
+        let cname = c.ident()?.to_string();
+        c.skip_ws(false)?;
+        c.eat("{")?;
+        let comp = parse_computation(&mut c, &cname, &mut fixups, comps.len())
+            .with_context(|| format!("computation '{cname}'"))?;
+        if is_entry {
+            entry = Some(comps.len());
+        }
+        comps.push(comp);
+    }
+    let entry = entry.context("module has no ENTRY computation")?;
+
+    // resolve computation references
+    let by_name: HashMap<String, usize> =
+        comps.iter().enumerate().map(|(i, cm)| (cm.name.clone(), i)).collect();
+    for f in fixups {
+        let target = *by_name
+            .get(&f.target)
+            .with_context(|| format!("unknown computation '{}'", f.target))?;
+        let op = &mut comps[f.comp].instrs[f.instr].op;
+        match (&mut *op, f.slot) {
+            (Op::Call { comp }, FixSlot::Call) => *comp = target,
+            (Op::While { cond, .. }, FixSlot::WhileCond) => *cond = target,
+            (Op::While { body, .. }, FixSlot::WhileBody) => *body = target,
+            (Op::Reduce { comp, .. }, FixSlot::Reduce) => *comp = target,
+            (Op::Scatter { comp, .. }, FixSlot::Scatter) => *comp = target,
+            _ => bail!("fixup slot mismatch for '{}'", f.target),
+        }
+    }
+    Ok(HloModule { name: mod_name, comps, entry })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "HloModule test, entry_computation_layout={(f32[2]{0})->f32[2]{0}}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.9 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = f32[] constant(0)
+  ROOT reduce.3 = f32[] reduce(Arg_0.1, constant.2), dimensions={0}, to_apply=region_0.1
+}
+";
+
+    #[test]
+    fn parses_tiny_module() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.comps.len(), 2);
+        assert_eq!(m.entry, 1);
+        let e = m.entry_computation();
+        assert_eq!(e.n_params, 1);
+        assert_eq!(e.instrs.len(), 3);
+        match &e.instrs[2].op {
+            Op::Reduce { dims, comp } => {
+                assert_eq!(dims, &[0]);
+                assert_eq!(*comp, 0); // resolved to region_0.1
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(e.root, 2);
+    }
+
+    #[test]
+    fn parses_shapes_and_layouts() {
+        let mut c = Cursor::new("f32[2,4]{1,0} ");
+        let s = parse_shape(&mut c).unwrap();
+        assert_eq!(s, Shape::Array { ty: ElemType::F32, dims: vec![2, 4] });
+        let mut c = Cursor::new("pred[] ");
+        assert_eq!(
+            parse_shape(&mut c).unwrap(),
+            Shape::Array { ty: ElemType::Pred, dims: vec![] }
+        );
+        // tuple shape with /*index=N*/ comments
+        let mut c = Cursor::new("(s32[], /*index=1*/u32[4]{0}) ");
+        match parse_shape(&mut c).unwrap() {
+            Shape::Tuple(elems) => {
+                assert_eq!(elems.len(), 2);
+                assert_eq!(elems[1], Shape::Array { ty: ElemType::U32, dims: vec![4] });
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_constants_incl_special_floats() {
+        let parse_const = |text: &str, ty, numel| {
+            let mut c = Cursor::new(text);
+            parse_literal(&mut c, ty, numel).unwrap()
+        };
+        assert_eq!(parse_const("3.5)", ElemType::F32, 1), Buf::F32(vec![3.5]));
+        assert_eq!(
+            parse_const("{13, 15, 26, 6})", ElemType::U32, 4),
+            Buf::U32(vec![13, 15, 26, 6])
+        );
+        assert_eq!(parse_const("false)", ElemType::Pred, 1), Buf::Pred(vec![false]));
+        assert_eq!(parse_const("-1e+09)", ElemType::F32, 1), Buf::F32(vec![-1e9]));
+        match parse_const("-inf)", ElemType::F32, 1) {
+            Buf::F32(v) => assert!(v[0].is_infinite() && v[0] < 0.0),
+            other => panic!("{other:?}"),
+        }
+        match parse_const("nan)", ElemType::F32, 1) {
+            Buf::F32(v) => assert!(v[0].is_nan()),
+            other => panic!("{other:?}"),
+        }
+        // nested 2-D literal flattens row-major
+        assert_eq!(
+            parse_const("{{1, 2}, {3, 4}})", ElemType::S32, 4),
+            Buf::S32(vec![1, 2, 3, 4])
+        );
+    }
+
+    #[test]
+    fn parses_slice_specs() {
+        assert_eq!(parse_slice_spec("{[0:1]}").unwrap(), vec![(0, 1, 1)]);
+        assert_eq!(
+            parse_slice_spec("{[0:2], [1:8:2]}").unwrap(),
+            vec![(0, 2, 1), (1, 8, 2)]
+        );
+    }
+
+    #[test]
+    fn parses_gather_attrs() {
+        let text = "HloModule g\n\nENTRY main.1 {\n  p0 = f32[4,8]{1,0} parameter(0)\n  \
+                    p1 = s32[2,1]{1,0} parameter(1)\n  ROOT g.1 = f32[2,8]{1,0} \
+                    gather(p0, p1), offset_dims={1}, collapsed_slice_dims={0}, \
+                    start_index_map={0}, index_vector_dim=1, slice_sizes={1,8}\n}\n";
+        let m = parse_module(text).unwrap();
+        match &m.entry_computation().instrs[2].op {
+            Op::Gather(g) => {
+                assert_eq!(g.offset_dims, vec![1]);
+                assert_eq!(g.slice_sizes, vec![1, 8]);
+                assert_eq!(g.index_vector_dim, 1);
+                assert!(g.operand_batching_dims.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_ops_and_missing_operands() {
+        let bad = "HloModule b\n\nENTRY main.1 {\n  ROOT x.1 = f32[] frobnicate()\n}\n";
+        let err = format!("{:#}", parse_module(bad).unwrap_err());
+        assert!(err.contains("frobnicate"), "{err}");
+        let fwd = "HloModule b\n\nENTRY main.1 {\n  ROOT x.1 = f32[] add(y.2, y.2)\n}\n";
+        assert!(parse_module(fwd).is_err());
+    }
+
+    #[test]
+    fn out_of_order_parameters_count() {
+        let text = "HloModule p\n\nENTRY main.1 {\n  b.1 = f32[] parameter(1)\n  \
+                    a.2 = f32[] parameter(0)\n  ROOT s.3 = f32[] add(b.1, a.2)\n}\n";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry_computation().n_params, 2);
+    }
+}

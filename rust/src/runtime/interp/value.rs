@@ -1,0 +1,306 @@
+//! Runtime values for the HLO interpreter: typed flat arrays and tuples.
+//!
+//! Arrays are stored in *logical row-major* order. The `{1,0}`-style
+//! layout annotations in HLO text describe physical placement only and
+//! never change an op's semantics, so the interpreter ignores them —
+//! every index computation below works on logical dimensions.
+
+use anyhow::{bail, ensure, Result};
+
+/// Element types the exported artifacts use (see DESIGN.md §4: the
+/// tiny-model entry points only ever lower to these four).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    S32,
+    U32,
+    Pred,
+}
+
+impl ElemType {
+    pub fn parse(s: &str) -> Option<ElemType> {
+        match s {
+            "f32" => Some(ElemType::F32),
+            "s32" => Some(ElemType::S32),
+            "u32" => Some(ElemType::U32),
+            "pred" => Some(ElemType::Pred),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::S32 => "s32",
+            ElemType::U32 => "u32",
+            ElemType::Pred => "pred",
+        }
+    }
+}
+
+/// The shape of one instruction result: an array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array { ty: ElemType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(_) => 0,
+        }
+    }
+
+    pub fn array(&self) -> Result<(ElemType, &[usize])> {
+        match self {
+            Shape::Array { ty, dims } => Ok((*ty, dims)),
+            Shape::Tuple(_) => bail!("expected array shape, got tuple"),
+        }
+    }
+}
+
+/// Typed flat element storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    U32(Vec<u32>),
+    Pred(Vec<bool>),
+}
+
+impl Buf {
+    pub fn ty(&self) -> ElemType {
+        match self {
+            Buf::F32(_) => ElemType::F32,
+            Buf::S32(_) => ElemType::S32,
+            Buf::U32(_) => ElemType::U32,
+            Buf::Pred(_) => ElemType::Pred,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::S32(v) => v.len(),
+            Buf::U32(v) => v.len(),
+            Buf::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn with_capacity(ty: ElemType, n: usize) -> Buf {
+        match ty {
+            ElemType::F32 => Buf::F32(Vec::with_capacity(n)),
+            ElemType::S32 => Buf::S32(Vec::with_capacity(n)),
+            ElemType::U32 => Buf::U32(Vec::with_capacity(n)),
+            ElemType::Pred => Buf::Pred(Vec::with_capacity(n)),
+        }
+    }
+
+    /// Append `src[i]` to `self` (same element type required).
+    pub fn push_from(&mut self, src: &Buf, i: usize) {
+        match (self, src) {
+            (Buf::F32(d), Buf::F32(s)) => d.push(s[i]),
+            (Buf::S32(d), Buf::S32(s)) => d.push(s[i]),
+            (Buf::U32(d), Buf::U32(s)) => d.push(s[i]),
+            (Buf::Pred(d), Buf::Pred(s)) => d.push(s[i]),
+            (d, s) => panic!("push_from type mismatch: {:?} vs {:?}", d.ty(), s.ty()),
+        }
+    }
+
+    /// Overwrite `self[di]` with `src[si]` (same element type required).
+    pub fn set_from(&mut self, di: usize, src: &Buf, si: usize) {
+        match (self, src) {
+            (Buf::F32(d), Buf::F32(s)) => d[di] = s[si],
+            (Buf::S32(d), Buf::S32(s)) => d[di] = s[si],
+            (Buf::U32(d), Buf::U32(s)) => d[di] = s[si],
+            (Buf::Pred(d), Buf::Pred(s)) => d[di] = s[si],
+            (d, s) => panic!("set_from type mismatch: {:?} vs {:?}", d.ty(), s.ty()),
+        }
+    }
+
+    /// Element `i` as an index (integer types only).
+    pub fn index_at(&self, i: usize) -> Result<i64> {
+        match self {
+            Buf::S32(v) => Ok(v[i] as i64),
+            Buf::U32(v) => Ok(v[i] as i64),
+            other => bail!("index element must be integer, got {}", other.ty().name()),
+        }
+    }
+}
+
+/// A typed n-dimensional array (flat row-major data + dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayValue {
+    pub dims: Vec<usize>,
+    pub buf: Buf,
+}
+
+impl ArrayValue {
+    pub fn new(dims: Vec<usize>, buf: Buf) -> Result<ArrayValue> {
+        let numel: usize = dims.iter().product();
+        ensure!(
+            buf.len() == numel,
+            "array data length {} does not match dims {:?}",
+            buf.len(),
+            dims
+        );
+        Ok(ArrayValue { dims, buf })
+    }
+
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Result<ArrayValue> {
+        ArrayValue::new(dims.to_vec(), Buf::F32(data))
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Result<ArrayValue> {
+        ArrayValue::new(dims.to_vec(), Buf::S32(data))
+    }
+
+    pub fn scalar_f32(v: f32) -> ArrayValue {
+        ArrayValue { dims: vec![], buf: Buf::F32(vec![v]) }
+    }
+
+    pub fn ty(&self) -> ElemType {
+        self.buf.ty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.buf {
+            Buf::F32(v) => Ok(v),
+            other => bail!("expected f32 array, got {}", other.ty().name()),
+        }
+    }
+
+    pub fn as_pred(&self) -> Result<&[bool]> {
+        match &self.buf {
+            Buf::Pred(v) => Ok(v),
+            other => bail!("expected pred array, got {}", other.ty().name()),
+        }
+    }
+
+    /// One element as a scalar (rank-0) array of the same type.
+    pub fn scalar_at(&self, i: usize) -> ArrayValue {
+        let mut buf = Buf::with_capacity(self.ty(), 1);
+        buf.push_from(&self.buf, i);
+        ArrayValue { dims: vec![], buf }
+    }
+}
+
+/// An instruction result: array or tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Array(ArrayValue),
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn array(&self) -> Result<&ArrayValue> {
+        match self {
+            Value::Array(a) => Ok(a),
+            Value::Tuple(_) => bail!("expected array value, got tuple"),
+        }
+    }
+
+    pub fn tuple(&self) -> Result<&[Value]> {
+        match self {
+            Value::Tuple(vs) => Ok(vs),
+            Value::Array(_) => bail!("expected tuple value, got array"),
+        }
+    }
+
+    pub fn pred_scalar(&self) -> Result<bool> {
+        let a = self.array()?;
+        ensure!(a.numel() == 1, "expected scalar pred");
+        Ok(a.as_pred()?[0])
+    }
+}
+
+// ----------------------------------------------------- index helpers ---
+
+/// Row-major strides for `dims`.
+pub fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        st[i] = st[i + 1] * dims[i + 1];
+    }
+    st
+}
+
+/// Decompose flat index `f` into per-dimension coordinates.
+pub fn unflatten(mut f: usize, strides: &[usize], out: &mut [usize]) {
+    for (o, &s) in out.iter_mut().zip(strides) {
+        *o = f / s;
+        f %= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_of(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_of(&[5]), vec![1]);
+        assert!(strides_of(&[]).is_empty());
+    }
+
+    #[test]
+    fn unflatten_roundtrip() {
+        let dims = [2usize, 3, 4];
+        let st = strides_of(&dims);
+        let mut idx = [0usize; 3];
+        unflatten(17, &st, &mut idx);
+        assert_eq!(idx, [1, 1, 1]);
+        let back: usize = idx.iter().zip(&st).map(|(&i, &s)| i * s).sum();
+        assert_eq!(back, 17);
+    }
+
+    #[test]
+    fn array_value_validates_length() {
+        assert!(ArrayValue::f32(&[2, 2], vec![0.0; 4]).is_ok());
+        assert!(ArrayValue::f32(&[2, 2], vec![0.0; 3]).is_err());
+        // rank-0 scalar holds exactly one element
+        assert!(ArrayValue::f32(&[], vec![1.0]).is_ok());
+        assert!(ArrayValue::f32(&[], vec![]).is_err());
+    }
+
+    #[test]
+    fn buf_push_and_set() {
+        let src = Buf::S32(vec![10, 20, 30]);
+        let mut dst = Buf::with_capacity(ElemType::S32, 2);
+        dst.push_from(&src, 2);
+        dst.push_from(&src, 0);
+        assert_eq!(dst, Buf::S32(vec![30, 10]));
+        dst.set_from(1, &src, 1);
+        assert_eq!(dst, Buf::S32(vec![30, 20]));
+        assert_eq!(src.index_at(1).unwrap(), 20);
+    }
+
+    #[test]
+    fn scalar_at_extracts_typed_scalar() {
+        let a = ArrayValue::f32(&[3], vec![1.5, 2.5, 3.5]).unwrap();
+        let s = a.scalar_at(1);
+        assert!(s.dims.is_empty());
+        assert_eq!(s.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn value_accessors() {
+        let a = Value::Array(ArrayValue { dims: vec![], buf: Buf::Pred(vec![true]) });
+        assert!(a.pred_scalar().unwrap());
+        assert!(a.tuple().is_err());
+        let t = Value::Tuple(vec![a.clone()]);
+        assert_eq!(t.tuple().unwrap().len(), 1);
+        assert!(t.array().is_err());
+    }
+}

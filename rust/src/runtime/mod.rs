@@ -1,6 +1,7 @@
-//! PJRT runtime: manifest loading, HLO-text compilation (pattern from
-//! /opt/xla-example/load_hlo), and typed grad/eval sessions with
-//! persistent device buffers.
+//! Runtime layer: manifest loading, HLO-text compilation, and typed
+//! grad/eval sessions with persistent buffers, on a selectable backend
+//! (pure-Rust interpreter or PJRT — see DESIGN.md §4).
 pub mod client;
 pub mod executable;
+pub mod interp;
 pub mod manifest;

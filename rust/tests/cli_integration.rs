@@ -31,6 +31,20 @@ fn unknown_option_fails_with_usage() {
 }
 
 #[test]
+fn info_reads_interp_fixture() {
+    // `qn info` against the checked-in interpreter fixture: exercises
+    // manifest loading through the binary with no artifacts present.
+    let out = qn()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["info", "--artifacts", "tests/fixtures/interp"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("lm_tiny"), "{text}");
+}
+
+#[test]
 fn info_prints_models_and_entries() {
     if !artifacts_present() {
         eprintln!("SKIP cli info test");

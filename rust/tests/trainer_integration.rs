@@ -1,6 +1,8 @@
-//! Trainer integration against real artifacts: loss decreases under
-//! training, Quant-Noise overhead is bounded, sharing keeps siblings
-//! identical, LayerDrop runs. Skipped when artifacts are missing.
+//! Trainer integration on the checked-in interpreter fixture: loss
+//! decreases under training, sharing keeps siblings identical,
+//! LayerDrop and exact-PQ noise train. These execute real grad entries
+//! through the pure-Rust HLO interpreter — no artifacts, no skips
+//! (DESIGN.md §4; the fixture regenerates with `make fixture`).
 
 use std::path::Path;
 
@@ -13,15 +15,10 @@ use quant_noise::runtime::client::Runtime;
 use quant_noise::runtime::executable::ModelSession;
 use quant_noise::runtime::manifest::Manifest;
 
-fn setup() -> Option<(Runtime, Manifest)> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    match Manifest::load(&dir) {
-        Ok(m) => Some((Runtime::cpu().unwrap(), m)),
-        Err(e) => {
-            eprintln!("SKIP trainer_integration: {e}");
-            None
-        }
-    }
+fn fixture() -> (Runtime, Manifest) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp");
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    (Runtime::interp(), man)
 }
 
 fn lm_source(meta: &quant_noise::model::config::ModelMeta) -> LmSource {
@@ -31,7 +28,7 @@ fn lm_source(meta: &quant_noise::model::config::ModelMeta) -> LmSource {
 
 #[test]
 fn loss_decreases_over_training() {
-    let Some((rt, man)) = setup() else { return };
+    let (rt, man) = fixture();
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
     let mut cfg = with_noise(base_train("lm", 40), QuantSpec::Proxy, 0.1);
@@ -48,7 +45,7 @@ fn loss_decreases_over_training() {
 
 #[test]
 fn sharing_keeps_siblings_identical() {
-    let Some((rt, man)) = setup() else { return };
+    let (rt, man) = fixture();
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
     let mut cfg = with_noise(base_train("lm", 6), QuantSpec::None, 0.0);
@@ -67,7 +64,7 @@ fn sharing_keeps_siblings_identical() {
 
 #[test]
 fn layerdrop_training_runs_and_learns() {
-    let Some((rt, man)) = setup() else { return };
+    let (rt, man) = fixture();
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
     let mut cfg = with_noise(base_train("lm", 20), QuantSpec::Proxy, 0.1);
@@ -80,7 +77,7 @@ fn layerdrop_training_runs_and_learns() {
 
 #[test]
 fn exact_pq_noise_trains() {
-    let Some((rt, man)) = setup() else { return };
+    let (rt, man) = fixture();
     let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
     let mut src = lm_source(&sess.meta.clone());
     // exact-φ_PQ noise via its spec: K=16 codewords, refresh budget
@@ -90,4 +87,26 @@ fn exact_pq_noise_trains() {
     let mut tr = Trainer::new(&mut sess, params, cfg);
     let stats = tr.train(&mut src).unwrap();
     assert!(stats.final_loss.is_finite());
+}
+
+#[test]
+fn training_is_deterministic_across_runs() {
+    // Same fixture, same seeds ⇒ bit-identical trained parameters. The
+    // interpreter is single-threaded and the coordinator's parallelism
+    // is thread-count-invariant, so this holds on any machine.
+    let run = || {
+        let (rt, man) = fixture();
+        let (mut sess, params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+        let mut src = lm_source(&sess.meta.clone());
+        let mut cfg = with_noise(base_train("lm", 5), QuantSpec::Proxy, 0.2);
+        cfg.log_every = 1000;
+        let mut tr = Trainer::new(&mut sess, params, cfg);
+        tr.train(&mut src).unwrap();
+        tr.into_params()
+    };
+    let a = run();
+    let b = run();
+    for name in a.names() {
+        assert_eq!(a.get(name).unwrap(), b.get(name).unwrap(), "{name} diverged");
+    }
 }

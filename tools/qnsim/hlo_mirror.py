@@ -1,0 +1,745 @@
+"""Python mirror of the planned rust/src/runtime/interp/ design.
+
+Structure mirrors the Rust 1:1 (cursor parser, flat row-major arrays,
+explicit index math in the big ops) so that validating this file against
+jax validates the algorithms that will be translated to Rust.
+"""
+import math
+import numpy as np
+
+# --------------------------------------------------------------- shapes ---
+
+ELEM = ("f32", "s32", "u32", "pred")
+
+
+class Shape:
+    __slots__ = ("ty", "dims", "elems")
+
+    def __init__(self, ty, dims=None, elems=None):
+        self.ty = ty          # element type, or "tuple"
+        self.dims = dims or []
+        self.elems = elems    # for tuples: list[Shape]
+
+    def numel(self):
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    def __repr__(self):
+        if self.ty == "tuple":
+            return "(" + ", ".join(map(repr, self.elems)) + ")"
+        return f"{self.ty}{self.dims}"
+
+
+class Instr:
+    __slots__ = ("name", "opcode", "shape", "operands", "attrs", "literal")
+
+    def __init__(self, name, opcode, shape, operands, attrs, literal):
+        self.name = name
+        self.opcode = opcode
+        self.shape = shape
+        self.operands = operands  # indices into computation instrs
+        self.attrs = attrs        # dict key -> raw string
+        self.literal = literal    # parsed constant payload (flat list) or None
+
+
+class Computation:
+    __slots__ = ("name", "instrs", "root", "n_params", "index")
+
+    def __init__(self, name):
+        self.name = name
+        self.instrs = []
+        self.root = None
+        self.n_params = 0
+        self.index = {}  # instr name -> position
+
+
+class Module:
+    def __init__(self):
+        self.comps = {}   # name -> Computation
+        self.entry = None
+
+
+# --------------------------------------------------------------- parser ---
+
+class Cursor:
+    def __init__(self, text):
+        self.t = text
+        self.i = 0
+
+    def eof(self):
+        return self.i >= len(self.t)
+
+    def skip_ws(self, newlines=True):
+        while not self.eof():
+            c = self.t[self.i]
+            if c in " \t" or (newlines and c in "\r\n"):
+                self.i += 1
+            elif self.t.startswith("/*", self.i):
+                j = self.t.find("*/", self.i + 2)
+                assert j >= 0, "unterminated comment"
+                self.i = j + 2
+            else:
+                break
+
+    def peek(self):
+        return self.t[self.i] if not self.eof() else ""
+
+    def eat(self, s):
+        assert self.t.startswith(s, self.i), (
+            f"expected {s!r} at ...{self.t[self.i:self.i+40]!r}")
+        self.i += len(s)
+
+    def try_eat(self, s):
+        if self.t.startswith(s, self.i):
+            self.i += len(s)
+            return True
+        return False
+
+    def ident(self):
+        # HLO instruction/computation names: letters digits _ . - %
+        j = self.i
+        while j < len(self.t) and (self.t[j].isalnum() or self.t[j] in "_.-%"):
+            j += 1
+        assert j > self.i, f"expected ident at {self.t[self.i:self.i+40]!r}"
+        s = self.t[self.i:j]
+        self.i = j
+        return s.lstrip("%")
+
+    def until_any(self, stops):
+        j = self.i
+        depth = 0
+        while j < len(self.t):
+            c = self.t[j]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                if depth == 0:
+                    break
+                depth -= 1
+            elif c in stops and depth == 0:
+                break
+            j += 1
+        s = self.t[self.i:j]
+        self.i = j
+        return s
+
+
+def parse_shape(c: Cursor):
+    c.skip_ws()
+    if c.peek() == "(":
+        c.eat("(")
+        elems = []
+        while True:
+            c.skip_ws()
+            if c.try_eat(")"):
+                break
+            elems.append(parse_shape(c))
+            c.skip_ws()
+            c.try_eat(",")
+        return Shape("tuple", elems=elems)
+    ty = c.ident()
+    assert ty in ELEM, f"unsupported element type {ty}"
+    c.eat("[")
+    dims = []
+    while True:
+        c.skip_ws()
+        if c.try_eat("]"):
+            break
+        d = c.until_any(",]").strip()
+        if d:
+            dims.append(int(d))
+        c.try_eat(",")
+    # optional layout {1,0} — physical only, ignored (logical row-major)
+    c.skip_ws(newlines=False)
+    if c.peek() == "{":
+        c.eat("{")
+        c.until_any("}")  # consume digits/commas
+        c.eat("}")
+    return Shape(ty, dims=list(dims))
+
+
+def parse_literal(c: Cursor, shape: Shape):
+    """Parse a constant(...) payload into a flat row-major list."""
+    def scalar():
+        c.skip_ws()
+        tok = c.until_any(",})").strip()
+        if shape.ty == "f32":
+            return float(tok)  # handles inf/-inf/nan/exponents
+        if shape.ty == "pred":
+            return {"false": 0, "true": 1}[tok]
+        return int(tok)
+
+    def nested():
+        c.skip_ws()
+        if c.try_eat("{"):
+            out = []
+            while True:
+                c.skip_ws()
+                if c.try_eat("}"):
+                    return out
+                out.extend(nested())
+                c.skip_ws()
+                c.try_eat(",")
+        return [scalar()]
+
+    flat = nested()
+    assert len(flat) == shape.numel(), (len(flat), shape)
+    return flat
+
+
+def parse_module(text):
+    m = Module()
+    c = Cursor(text)
+    # header line: HloModule <name>[, attr...]  — skip the whole line
+    c.skip_ws()
+    c.eat("HloModule")
+    nl = c.t.find("\n", c.i)
+    c.i = nl + 1
+    while True:
+        c.skip_ws()
+        if c.eof():
+            break
+        is_entry = c.try_eat("ENTRY")
+        c.skip_ws()
+        name = c.ident()
+        c.skip_ws()
+        c.eat("{")
+        comp = parse_computation(c, name)
+        m.comps[name] = comp
+        if is_entry:
+            m.entry = name
+    assert m.entry, "no ENTRY computation"
+    return m
+
+
+def parse_computation(c: Cursor, name):
+    comp = Computation(name)
+    while True:
+        c.skip_ws()
+        if c.try_eat("}"):
+            break
+        is_root = c.try_eat("ROOT")
+        c.skip_ws()
+        iname = c.ident()
+        c.skip_ws()
+        c.eat("=")
+        shape = parse_shape(c)
+        c.skip_ws()
+        opcode = c.ident()
+        c.eat("(")
+        operands = []
+        literal = None
+        if opcode == "constant":
+            literal = parse_literal(c, shape)
+            c.skip_ws()
+            c.eat(")")
+        elif opcode == "parameter":
+            num = int(c.until_any(")").strip())
+            c.eat(")")
+            operands = [("param", num)]
+        else:
+            while True:
+                c.skip_ws()
+                if c.try_eat(")"):
+                    break
+                oname = c.ident()
+                assert oname in comp.index, f"{opcode} operand {oname} undefined"
+                operands.append(comp.index[oname])
+                c.skip_ws()
+                c.try_eat(",")
+        # attrs: ", key=value" until end of line
+        attrs = {}
+        while True:
+            c.skip_ws(newlines=False)
+            if not c.try_eat(","):
+                break
+            c.skip_ws(newlines=False)
+            key = c.ident()
+            c.skip_ws(newlines=False)
+            c.eat("=")
+            c.skip_ws(newlines=False)
+            if c.peek() == "{":
+                c.eat("{")
+                val = "{" + c.until_any("") + "}"
+                c.eat("}")
+            else:
+                val = c.until_any(",\n").strip()
+            attrs[key] = val
+        if opcode == "parameter":
+            pnum = operands[0][1]
+            # parameters may appear in any textual order (use order)
+            comp.n_params = max(comp.n_params, pnum + 1)
+            operands = []
+            attrs["parameter_number"] = str(pnum)
+        idx = len(comp.instrs)
+        comp.instrs.append(Instr(iname, opcode, shape, operands, attrs, literal))
+        comp.index[iname] = idx
+        if is_root:
+            comp.root = idx
+    assert comp.root is not None, f"{name}: no ROOT"
+    return comp
+
+
+# ---------------------------------------------------------- attr helpers ---
+
+def int_list(s):
+    s = s.strip().lstrip("{").rstrip("}").strip()
+    if not s:
+        return []
+    return [int(x) for x in s.split(",")]
+
+
+def parse_slice_attr(s):
+    # {[0:1], [2:8:2]} -> list of (start, limit, stride)
+    out = []
+    for part in s.strip().lstrip("{").rstrip("}").split("]"):
+        part = part.strip().lstrip(",").strip().lstrip("[")
+        if not part:
+            continue
+        nums = [int(x) for x in part.split(":")]
+        if len(nums) == 2:
+            nums.append(1)
+        out.append(tuple(nums))
+    return out
+
+
+# ---------------------------------------------------------------- values ---
+
+NP_TY = {"f32": np.float32, "s32": np.int32, "u32": np.uint32, "pred": np.bool_}
+
+
+class Arr:
+    __slots__ = ("ty", "dims", "data")
+
+    def __init__(self, ty, dims, data):
+        self.ty = ty
+        self.dims = list(dims)
+        self.data = np.asarray(data, NP_TY[ty]).ravel()
+        assert self.data.size == int(np.prod(dims)) if dims else self.data.size == 1
+
+    def numel(self):
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+
+def strides_of(dims):
+    st = [1] * len(dims)
+    for i in range(len(dims) - 2, -1, -1):
+        st[i] = st[i + 1] * dims[i + 1]
+    return st
+
+
+def unflatten(flat, dims, st):
+    idx = []
+    for s in st:
+        idx.append(flat // s)
+        flat %= s
+    return idx
+
+
+# -------------------------------------------------------------- evaluator ---
+
+class Interp:
+    def __init__(self, module: Module):
+        self.m = module
+
+    def run_entry(self, args):
+        return self.run(self.m.comps[self.m.entry], args)
+
+    def run(self, comp: Computation, args):
+        env = [None] * len(comp.instrs)
+        for i, ins in enumerate(comp.instrs):
+            env[i] = self.eval_instr(comp, ins, env, args)
+        return env[comp.root]
+
+    def eval_instr(self, comp, ins, env, args):
+        op = ins.opcode
+        a = ins.attrs
+        sh = ins.shape
+        opv = [env[j] for j in ins.operands]
+
+        if op == "parameter":
+            return args[int(a["parameter_number"])]
+        if op == "constant":
+            return Arr(sh.ty, sh.dims, ins.literal)
+        if op == "tuple":
+            return ("tuple", opv)
+        if op == "get-tuple-element":
+            t = opv[0]
+            assert t[0] == "tuple"
+            return t[1][int(a["index"])]
+        if op == "call":
+            return self.run(self.m.comps[a["to_apply"]], opv)
+        if op == "while":
+            cond = self.m.comps[a["condition"]]
+            body = self.m.comps[a["body"]]
+            state = opv[0]
+            while True:
+                p = self.run(cond, [state])
+                if not bool(p.data[0]):
+                    break
+                state = self.run(body, [state])
+            return state
+
+        if op == "iota":
+            dim = int(a["iota_dimension"])
+            st = strides_of(sh.dims)
+            n = sh.numel()
+            out = np.empty(n, NP_TY[sh.ty])
+            for f in range(n):
+                out[f] = (f // st[dim]) % sh.dims[dim]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "broadcast":
+            x = opv[0]
+            dims = int_list(a.get("dimensions", "{}"))
+            xst = strides_of(x.dims)
+            ost = strides_of(sh.dims)
+            n = sh.numel()
+            out = np.empty(n, NP_TY[sh.ty])
+            for f in range(n):
+                oi = unflatten(f, sh.dims, ost)
+                xi = 0
+                for k, d in enumerate(dims):
+                    xi += oi[d] * xst[k]
+                out[f] = x.data[xi]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "reshape":
+            return Arr(sh.ty, sh.dims, opv[0].data)
+
+        if op == "transpose":
+            x = opv[0]
+            perm = int_list(a["dimensions"])
+            xst = strides_of(x.dims)
+            ost = strides_of(sh.dims)
+            n = sh.numel()
+            out = np.empty(n, NP_TY[sh.ty])
+            for f in range(n):
+                oi = unflatten(f, sh.dims, ost)
+                xi = 0
+                for d in range(len(perm)):
+                    xi += oi[d] * xst[perm[d]]
+                out[f] = x.data[xi]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "slice":
+            x = opv[0]
+            spec = parse_slice_attr(a["slice"])
+            xst = strides_of(x.dims)
+            ost = strides_of(sh.dims)
+            n = sh.numel()
+            out = np.empty(n, NP_TY[sh.ty])
+            for f in range(n):
+                oi = unflatten(f, sh.dims, ost)
+                xi = 0
+                for d, (s0, _, stp) in enumerate(spec):
+                    xi += (s0 + oi[d] * stp) * xst[d]
+                out[f] = x.data[xi]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "concatenate":
+            dim = int_list(a["dimensions"])[0]
+            n = sh.numel()
+            ost = strides_of(sh.dims)
+            out = np.empty(n, NP_TY[sh.ty])
+            # offsets along dim
+            starts = []
+            acc = 0
+            for x in opv:
+                starts.append(acc)
+                acc += x.dims[dim]
+            for f in range(n):
+                oi = unflatten(f, sh.dims, ost)
+                k = 0
+                while k + 1 < len(opv) and oi[dim] >= starts[k + 1]:
+                    k += 1
+                x = opv[k]
+                xst = strides_of(x.dims)
+                xi = 0
+                for d in range(len(sh.dims)):
+                    c = oi[d] - (starts[k] if d == dim else 0)
+                    xi += c * xst[d]
+                out[f] = x.data[xi]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "select":
+            p, t, fv = opv
+            out = np.where(p.data.astype(bool), t.data, fv.data)
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "compare":
+            l, r = opv
+            d = a["direction"]
+            fn = {
+                "EQ": np.equal, "NE": np.not_equal, "LT": np.less,
+                "LE": np.less_equal, "GT": np.greater, "GE": np.greater_equal,
+            }[d]
+            return Arr("pred", sh.dims, fn(l.data, r.data))
+
+        if op == "convert":
+            x = opv[0]
+            if sh.ty == "u32" and x.ty == "s32":
+                out = x.data.astype(np.int64).astype(np.uint32)
+            elif sh.ty == "s32" and x.ty == "f32":
+                out = np.trunc(x.data).astype(np.int32)
+            else:
+                out = x.data.astype(NP_TY[sh.ty])
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "bitcast-convert":
+            x = opv[0]
+            out = x.data.view(NP_TY[sh.ty])
+            return Arr(sh.ty, sh.dims, out)
+
+        # --- elementwise ---
+        if op in UNARY_F32:
+            x = opv[0]
+            out = UNARY_F32[op](x.data)
+            return Arr(sh.ty, sh.dims, out.astype(NP_TY[sh.ty]))
+        if op == "negate":
+            return Arr(sh.ty, sh.dims, -opv[0].data)
+        if op in BINARY:
+            l, r = opv
+            if op in ("shift-left", "shift-right-logical"):
+                amt = r.data.astype(np.uint64)
+                big = amt >= 32
+                shifted = (
+                    np.left_shift(l.data, np.where(big, 0, amt).astype(np.uint32))
+                    if op == "shift-left"
+                    else np.right_shift(l.data, np.where(big, 0, amt).astype(np.uint32))
+                )
+                out = np.where(big, np.uint32(0), shifted)
+            else:
+                with np.errstate(all="ignore"):
+                    out = BINARY[op](l.data, r.data)
+            return Arr(sh.ty, sh.dims, out.astype(NP_TY[sh.ty]))
+
+        if op == "dot":
+            return self.dot(sh, opv[0], opv[1], a)
+        if op == "reduce":
+            return self.reduce(sh, opv, a)
+        if op == "gather":
+            return self.gather(sh, opv[0], opv[1], a)
+        if op == "scatter":
+            return self.scatter(sh, opv, a)
+
+        raise NotImplementedError(op)
+
+    # ------------------------------------------------------------- dot ---
+
+    def dot(self, sh, lhs, rhs, a):
+        lb = int_list(a.get("lhs_batch_dims", "{}"))
+        rb = int_list(a.get("rhs_batch_dims", "{}"))
+        lc = int_list(a.get("lhs_contracting_dims", "{}"))
+        rc = int_list(a.get("rhs_contracting_dims", "{}"))
+        lfree = [d for d in range(len(lhs.dims)) if d not in lb and d not in lc]
+        rfree = [d for d in range(len(rhs.dims)) if d not in rb and d not in rc]
+        # output dims: batch..., lhs free..., rhs free...
+        lst = strides_of(lhs.dims)
+        rst = strides_of(rhs.dims)
+        ost = strides_of(sh.dims)
+        n = sh.numel()
+        kdims = [lhs.dims[d] for d in lc]
+        kst = strides_of(kdims)
+        kn = 1
+        for d in kdims:
+            kn *= d
+        out = np.empty(n, NP_TY[sh.ty])
+        nb = len(lb)
+        nlf = len(lfree)
+        for f in range(n):
+            oi = unflatten(f, sh.dims, ost)
+            lbase = 0
+            rbase = 0
+            for k in range(nb):
+                lbase += oi[k] * lst[lb[k]]
+                rbase += oi[k] * rst[rb[k]]
+            for k in range(nlf):
+                lbase += oi[nb + k] * lst[lfree[k]]
+            for k in range(len(rfree)):
+                rbase += oi[nb + nlf + k] * rst[rfree[k]]
+            acc = np.float32(0.0)
+            for kf in range(kn):
+                ki = unflatten(kf, kdims, kst)
+                li = lbase
+                ri = rbase
+                for t in range(len(lc)):
+                    li += ki[t] * lst[lc[t]]
+                    ri += ki[t] * rst[rc[t]]
+                acc = np.float32(acc + np.float32(lhs.data[li] * rhs.data[ri]))
+            out[f] = acc
+        return Arr(sh.ty, sh.dims, out)
+
+    # ---------------------------------------------------------- reduce ---
+
+    def reduce(self, sh, opv, a):
+        nin = len(opv) // 2
+        inputs = opv[:nin]
+        inits = opv[nin:]
+        dims = int_list(a["dimensions"])
+        comp = self.m.comps[a["to_apply"]]
+        x = inputs[0]
+        kept = [d for d in range(len(x.dims)) if d not in dims]
+        out_dims = [x.dims[d] for d in kept]
+        red_dims = [x.dims[d] for d in dims]
+        xst = strides_of(x.dims)
+        ost = strides_of(out_dims)
+        rst = strides_of(red_dims)
+        rn = 1
+        for d in red_dims:
+            rn *= d
+        n = 1
+        for d in out_dims:
+            n *= d
+        shapes = sh.elems if sh.ty == "tuple" else [sh]
+        outs = [np.empty(n, NP_TY[s.ty]) for s in shapes]
+        for f in range(n):
+            oi = unflatten(f, out_dims, ost)
+            base = 0
+            for k, d in enumerate(kept):
+                base += oi[k] * xst[d]
+            accs = [Arr(inits[j].ty, [], [inits[j].data[0]]) for j in range(nin)]
+            for rf in range(rn):
+                ri = unflatten(rf, red_dims, rst)
+                xi = base
+                for k, d in enumerate(dims):
+                    xi += ri[k] * xst[d]
+                vals = [Arr(inputs[j].ty, [], [inputs[j].data[xi]]) for j in range(nin)]
+                res = self.run(comp, accs + vals)
+                accs = list(res[1]) if isinstance(res, tuple) and res[0] == "tuple" else [res]
+            for j in range(nin):
+                outs[j][f] = accs[j].data[0]
+        if sh.ty == "tuple":
+            return ("tuple", [Arr(s.ty, s.dims, o) for s, o in zip(shapes, outs)])
+        return Arr(sh.ty, sh.dims, outs[0])
+
+    # ---------------------------------------------------------- gather ---
+
+    def gather(self, sh, operand, start, a):
+        offset_dims = int_list(a.get("offset_dims", "{}"))
+        collapsed = int_list(a.get("collapsed_slice_dims", "{}"))
+        ob_dims = int_list(a.get("operand_batching_dims", "{}"))
+        sb_dims = int_list(a.get("start_indices_batching_dims", "{}"))
+        sim = int_list(a.get("start_index_map", "{}"))
+        ivd = int(a["index_vector_dim"])
+        slice_sizes = int_list(a.get("slice_sizes", "{}"))
+
+        # start_indices dims excluding index_vector_dim, in order
+        sdims = [d for d in range(len(start.dims)) if d != ivd]
+        batch_dims_out = [d for d in range(len(sh.dims)) if d not in offset_dims]
+        # operand dims contributing offsets (not collapsed, not batching)
+        off_operand_dims = [
+            d for d in range(len(operand.dims))
+            if d not in collapsed and d not in ob_dims
+        ]
+        assert len(off_operand_dims) == len(offset_dims)
+        ost = strides_of(sh.dims)
+        pst = strides_of(operand.dims)
+        sst = strides_of(start.dims)
+        n = sh.numel()
+        out = np.empty(n, NP_TY[sh.ty])
+        for f in range(n):
+            oi = unflatten(f, sh.dims, ost)
+            g = [oi[d] for d in batch_dims_out]   # maps to sdims order
+            # full start index into operand
+            full = [0] * len(operand.dims)
+            for k, od in enumerate(sim):
+                si = 0
+                for j, sd in enumerate(sdims):
+                    si += g[j] * sst[sd]
+                if ivd < len(start.dims):
+                    si += k * sst[ivd]
+                idx = int(start.data[si])
+                lo, hi = 0, operand.dims[od] - slice_sizes[od]
+                full[od] = min(max(idx, lo), hi)
+            for od, sd in zip(ob_dims, sb_dims):
+                full[od] = g[sdims.index(sd)]
+            pi = 0
+            for d in range(len(operand.dims)):
+                pi += full[d] * pst[d]
+            for k, d in enumerate(off_operand_dims):
+                pi += oi[offset_dims[k]] * pst[d]
+            out[f] = operand.data[pi]
+        return Arr(sh.ty, sh.dims, out)
+
+    # --------------------------------------------------------- scatter ---
+
+    def scatter(self, sh, opv, a):
+        operand, indices, updates = opv
+        uw_dims = int_list(a.get("update_window_dims", "{}"))
+        inserted = int_list(a.get("inserted_window_dims", "{}"))
+        ib_dims = int_list(a.get("input_batching_dims", "{}"))
+        sb_dims = int_list(a.get("scatter_indices_batching_dims", "{}"))
+        sdod = int_list(a.get("scatter_dims_to_operand_dims", "{}"))
+        ivd = int(a["index_vector_dim"])
+        comp = self.m.comps[a["to_apply"]]
+
+        sdims = [d for d in range(len(indices.dims)) if d != ivd]
+        scatter_dims_u = [d for d in range(len(updates.dims)) if d not in uw_dims]
+        window_operand_dims = [
+            d for d in range(len(operand.dims))
+            if d not in inserted and d not in ib_dims
+        ]
+        assert len(window_operand_dims) == len(uw_dims)
+        out = operand.data.copy()
+        pst = strides_of(operand.dims)
+        ust = strides_of(updates.dims)
+        sst = strides_of(indices.dims)
+        n = updates.numel()
+        for f in range(n):
+            ui = unflatten(f, updates.dims, ust)
+            g = [ui[d] for d in scatter_dims_u]
+            full = [0] * len(operand.dims)
+            for k, od in enumerate(sdod):
+                si = 0
+                for j, sd in enumerate(sdims):
+                    si += g[j] * sst[sd]
+                if ivd < len(indices.dims):
+                    si += k * sst[ivd]
+                full[od] = int(indices.data[si])
+            for od, sd in zip(ib_dims, sb_dims):
+                full[od] = g[sdims.index(sd)]
+            for k, d in enumerate(window_operand_dims):
+                full[d] += ui[uw_dims[k]]
+            ok = all(0 <= full[d] < operand.dims[d] for d in range(len(operand.dims)))
+            if not ok:
+                continue
+            pi = 0
+            for d in range(len(operand.dims)):
+                pi += full[d] * pst[d]
+            cur = Arr(operand.ty, [], [out[pi]])
+            upd = Arr(updates.ty, [], [updates.data[f]])
+            res = self.run(comp, [cur, upd])
+            out[pi] = res.data[0]
+        return Arr(sh.ty, sh.dims, out)
+
+
+UNARY_F32 = {
+    "round-nearest-even": lambda x: np.round(x),
+    "exponential": lambda x: np.exp(x),
+    "log": lambda x: np.log(x),
+    "rsqrt": lambda x: np.float32(1.0) / np.sqrt(x),
+    "sine": lambda x: np.sin(x),
+    "cosine": lambda x: np.cos(x),
+}
+
+BINARY = {
+    "add": np.add,
+    "subtract": np.subtract,
+    "multiply": np.multiply,
+    "divide": lambda l, r: np.divide(l, r) if l.dtype == np.float32 else
+        (l.astype(np.int64) // np.where(r == 0, 1, r)).astype(l.dtype),
+    "maximum": np.maximum,
+    "minimum": np.minimum,
+    "power": lambda l, r: np.power(l, r),
+    "and": np.bitwise_and,
+    "or": np.bitwise_or,
+    "xor": np.bitwise_xor,
+    "shift-left": None,
+    "shift-right-logical": None,
+}

@@ -1,0 +1,112 @@
+"""Cross-validate the checked-in interpreter fixture against jax.
+
+Runs the HLO mirror interpreter (`hlo_mirror.py` — a structural 1:1
+Python port of `rust/src/runtime/interp/`) on
+`rust/tests/fixtures/interp/` and compares loss + every gradient with
+jax executing the original lowered functions. Run after `make fixture`
+or after touching the Rust interpreter's algorithms:
+
+    cd tools/qnsim && python3 validate_interp_fixture.py
+
+Needs jax (the same dependency `make fixture` needs). ~1 min on CPU.
+"""
+import json
+import os
+import struct
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(os.path.dirname(HERE))
+sys.path.insert(0, HERE)
+sys.path.insert(0, os.path.join(ROOT, "python"))
+os.environ.setdefault("QN_KERNEL_IMPL", "jnp")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from hlo_mirror import parse_module, Interp, Arr
+from compile import model
+
+FIX = os.path.join(ROOT, "rust", "tests", "fixtures", "interp")
+
+
+def load_fixture():
+    man = json.load(open(os.path.join(FIX, "manifest.json")))
+    meta = man["models"]["lm_tiny"]
+    c = meta["config"]
+    cfg = model.TransformerConfig(
+        vocab=c["vocab"], d_model=c["d_model"], n_layers=c["n_layers"],
+        n_heads=c["n_heads"], d_ffn=c["d_ffn"], seq_len=c["seq_len"],
+        batch=c["batch"], noise_block_size=c["noise_block_size"],
+    )
+    with open(os.path.join(FIX, meta["init"]), "rb") as f:
+        assert f.read(4) == b"QNP1"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        params = {}
+        for p in header["params"]:
+            numel = int(np.prod(p["shape"])) if p["shape"] else 1
+            params[p["name"]] = np.frombuffer(
+                f.read(4 * numel), np.float32).reshape(p["shape"])
+    return cfg, meta, params
+
+
+def to_args(arrs):
+    out = []
+    for a in arrs:
+        a = np.asarray(a)
+        ty = {"float32": "f32", "int32": "s32"}[str(a.dtype)]
+        out.append(Arr(ty, list(a.shape), a.ravel()))
+    return out
+
+
+def main():
+    cfg, meta, params = load_fixture()
+    names = sorted(model.param_shapes(cfg))
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    targets = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    keep = np.ones(cfg.n_layers, np.float32)
+    jp = {n: jnp.asarray(params[n]) for n in names}
+
+    # ---- eval entry
+    em = parse_module(open(os.path.join(FIX, "lm_tiny.eval.hlo.txt")).read())
+    res = Interp(em).run_entry(
+        to_args([params[n] for n in names] + [tokens, targets, keep]))
+    got = [float(x.data[0]) for x in res[1]]
+    want = model.lm_eval(cfg, jp, tokens, targets, keep)
+    assert abs(got[0] - float(want[0])) < 1e-3, (got, want)
+    assert got[1] == float(want[1]), (got, want)
+    print(f"eval: mirror {got[0]:.6f} jax {float(want[0]):.6f} OK")
+
+    # ---- grad entry across rates/seeds
+    gm = parse_module(open(os.path.join(FIX, "lm_tiny.grad_mix.hlo.txt")).read())
+    gi = Interp(gm)
+    loss_fn = model.noisy_loss_fn(cfg, "mix", "lm")
+    gfn = jax.jit(lambda p, h, tok, tgt, k, r, s:
+                  jax.value_and_grad(loss_fn)(p, h, tok, tgt, k, r, s))
+    hats = [np.zeros_like(params[n]) for n in names]
+    jh = {n: jnp.zeros_like(jp[n]) for n in names}
+    for rate, seed in [(0.0, 1), (0.5, 42), (1.0, 7)]:
+        res = gi.run_entry(to_args(
+            [params[n] for n in names] + hats
+            + [tokens, targets, keep, np.float32(rate), np.int32(seed)]))
+        loss_m = float(res[1][0].data[0])
+        wl, wg = gfn(jp, jh, tokens, targets, keep,
+                     jnp.float32(rate), jnp.int32(seed))
+        assert abs(loss_m - float(wl)) < 2e-3, (rate, seed, loss_m, float(wl))
+        maxerr = 0.0
+        for i, n in enumerate(names):
+            g = np.asarray(res[1][1 + i].data, np.float32).reshape(params[n].shape)
+            w = np.asarray(wg[n])
+            scale = max(1e-6, float(np.max(np.abs(w))))
+            maxerr = max(maxerr, float(np.max(np.abs(g - w))) / scale)
+        assert maxerr < 5e-3, (rate, seed, maxerr)
+        print(f"grad rate={rate} seed={seed}: loss {loss_m:.6f} "
+              f"(jax {float(wl):.6f}), max rel grad err {maxerr:.1e} OK")
+    print("FIXTURE VALIDATED against jax")
+
+
+if __name__ == "__main__":
+    main()

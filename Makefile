@@ -1,10 +1,11 @@
 # Quant-Noise reproduction — top-level targets.
 #
-#   make verify     tier-1 gate: build + test the Rust coordinator
-#   make artifacts  export all model artifacts (needs python + jax)
-#   make fixture    regenerate the checked-in interpreter test fixture
-#   make lint       rustfmt + clippy (what CI enforces)
-#   make doc        rustdoc with warnings denied (what CI enforces)
+#   make verify        tier-1 gate: build + test the Rust coordinator
+#   make artifacts     export all model artifacts (needs python + jax)
+#   make fixture       regenerate the checked-in interpreter test fixture
+#   make bench-interp  interpreter step latency -> BENCH_interp.json
+#   make lint          rustfmt + clippy (what CI enforces)
+#   make doc           rustdoc with warnings denied (what CI enforces)
 #
 # The Rust side never needs Python at build or test time: the
 # interpreter fixture under rust/tests/fixtures/interp/ is checked in.
@@ -16,10 +17,17 @@ CONFIGS := python/configs/lm_tiny.json \
            python/configs/cls_tiny.json \
            python/configs/img_tiny.json
 
-.PHONY: verify artifacts fixture lint doc
+.PHONY: verify artifacts fixture bench-interp lint doc
 
 verify:
 	cd rust && cargo build --release && cargo test -q
+
+# Per-step grad_mix/eval latency of the planned interpreter vs the
+# tree-walking evaluator on the checked-in fixture (no Python, no
+# artifacts); records the perf trajectory in BENCH_interp.json.
+bench-interp:
+	cd rust && QN_BENCH_JSON=$(abspath BENCH_interp.json) \
+		cargo bench --bench interp_step
 
 artifacts:
 	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \

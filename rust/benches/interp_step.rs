@@ -1,0 +1,139 @@
+//! Interpreter step latency on the checked-in `lm_tiny` fixture:
+//! the tree-walking reference evaluator vs the planned in-place
+//! executor (1 thread / all cores), plus deterministic batch-sharded
+//! eval throughput. Runs with no artifacts and no Python.
+//!
+//! Emits a machine-readable `BENCH_interp.json` (path override:
+//! `QN_BENCH_JSON`) so the perf trajectory is recorded per commit —
+//! `make bench-interp` from the repo root.
+
+use std::path::Path;
+use std::time::Duration;
+
+use quant_noise::model::params::ParamStore;
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
+use quant_noise::runtime::interp::{ArrayValue, Buf, HloModule, Interp, Plan, Value};
+use quant_noise::runtime::manifest::Manifest;
+use quant_noise::util::bench::Bencher;
+
+fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::F32(data)).unwrap())
+}
+
+fn i32v(dims: &[usize], data: Vec<i32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::S32(data)).unwrap())
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp");
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let params = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // fixed inputs (what the integration tests use)
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+
+    // raw argument vectors in manifest order (params are sorted)
+    let pvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    let hvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, vec![0.0; t.data.len()])).collect();
+    let mut grad_args = pvals.clone();
+    grad_args.extend(hvals);
+    grad_args.push(i32v(&meta.tokens_shape, tokens.clone()));
+    grad_args.push(i32v(&meta.targets_shape, targets.clone()));
+    grad_args.push(f32v(&[keep.len()], keep.clone()));
+    grad_args.push(f32v(&[], vec![0.1]));
+    grad_args.push(i32v(&[], vec![42]));
+    let mut eval_args = pvals;
+    eval_args.push(i32v(&meta.tokens_shape, tokens.clone()));
+    eval_args.push(i32v(&meta.targets_shape, targets.clone()));
+    eval_args.push(f32v(&[keep.len()], keep.clone()));
+
+    let grad_mod = HloModule::parse_file(&man.hlo_path(&meta, "grad_mix").unwrap()).unwrap();
+    let eval_mod = HloModule::parse_file(&man.hlo_path(&meta, "eval").unwrap()).unwrap();
+    let grad_plan = Plan::compile(&grad_mod);
+    let eval_plan = Plan::compile(&eval_mod);
+
+    let mut b = Bencher::quick();
+    b.warmup = Duration::from_millis(200);
+    b.budget = Duration::from_secs(2);
+    b.min_iters = 3;
+
+    println!("--- interp step (lm_tiny fixture, B={} T={}) ---", meta.batch, meta.seq_len);
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    let mut run = |b: &mut Bencher, key: &str, name: &str, f: &mut dyn FnMut() -> Value| {
+        let ns = b.bench(name, f).median_ns;
+        rec.push((key.to_string(), ns));
+        ns
+    };
+
+    let gm_tree = run(&mut b, "grad_mix_tree_walk_ns", "grad_mix: tree-walk evaluator", &mut || {
+        Interp::new(&grad_mod).run_entry(&grad_args).unwrap()
+    });
+    let gm_1t = run(&mut b, "grad_mix_planned_1t_ns", "grad_mix: planned, 1 thread", &mut || {
+        grad_plan.run_entry(grad_args.clone(), 1).unwrap()
+    });
+    let gm_mt = run(&mut b, "grad_mix_planned_mt_ns", "grad_mix: planned, all cores", &mut || {
+        grad_plan.run_entry(grad_args.clone(), cores).unwrap()
+    });
+    let ev_tree = run(&mut b, "eval_tree_walk_ns", "eval: tree-walk evaluator", &mut || {
+        Interp::new(&eval_mod).run_entry(&eval_args).unwrap()
+    });
+    let ev_1t = run(&mut b, "eval_planned_1t_ns", "eval: planned, 1 thread", &mut || {
+        eval_plan.run_entry(eval_args.clone(), 1).unwrap()
+    });
+
+    // batch-sharded eval through the full runtime seam (macro-batch M=8)
+    let m = 8usize;
+    let rt = Runtime::interp();
+    let (mut sess, _init) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    sess.warmup("eval").unwrap();
+    let macro_tokens: Vec<i32> = (0..m).flat_map(|_| tokens.iter().copied()).collect();
+    let macro_targets: Vec<i32> = (0..m).flat_map(|_| targets.iter().copied()).collect();
+    println!("--- batch-sharded eval (M={m} shards) ---");
+    let mut bench_batched = |b: &mut Bencher, name: &str, threads: usize| {
+        rt.set_threads(threads);
+        b.bench(name, || {
+            sess.eval_batched("eval", &BatchInput::Tokens(&macro_tokens), &macro_targets, &keep)
+                .unwrap()
+        })
+        .median_ns
+            / m as f64
+    };
+    let eb_1t = bench_batched(&mut b, "eval x8 batched, 1 thread (per step)", 1);
+    let eb_mt = bench_batched(&mut b, "eval x8 batched, all cores (per step)", 0);
+    rec.push(("eval_batched_per_step_1t_ns".into(), eb_1t));
+    rec.push(("eval_batched_per_step_mt_ns".into(), eb_mt));
+
+    let speedup_grad = gm_tree / gm_1t;
+    let speedup_eval = ev_tree / ev_1t;
+    let scaling = eb_1t / eb_mt;
+    println!(
+        "\nplanned vs tree-walk (1 thread): grad_mix {speedup_grad:.2}x, eval {speedup_eval:.2}x"
+    );
+    println!(
+        "batch sharding: {scaling:.2}x per-step on {cores} cores \
+         (grad_mix all-cores: {:.2}x vs tree-walk)",
+        gm_tree / gm_mt
+    );
+
+    // machine-readable record for the perf trajectory
+    let mut json = String::from("{\n  \"fixture\": \"lm_tiny\",\n");
+    json.push_str(&format!("  \"cores\": {cores},\n  \"batch_shards\": {m},\n"));
+    for (k, v) in &rec {
+        json.push_str(&format!("  \"{k}\": {v:.1},\n"));
+    }
+    json.push_str(&format!(
+        "  \"speedup_grad_1t\": {speedup_grad:.3},\n  \"speedup_eval_1t\": {speedup_eval:.3},\n"
+    ));
+    json.push_str(&format!("  \"batch_scaling\": {scaling:.3}\n}}\n"));
+    let out = std::env::var("QN_BENCH_JSON").unwrap_or_else(|_| "BENCH_interp.json".into());
+    std::fs::write(&out, json).unwrap();
+    println!("wrote {out}");
+}

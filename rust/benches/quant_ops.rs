@@ -96,4 +96,50 @@ fn main() {
         slow / one,
         slow / par
     );
+
+    // ---- SIMD lane blocking: blocked engine kernel vs the pre-SIMD
+    // scalar-unrolled kernel (assign_reference), same decomposition,
+    // bit-identical codes — this line is the ROADMAP item's receipt.
+    println!("\n--- assign kernels (131072 pts, d=8, K=256, 1 thread) ---");
+    let scalar_1t = be
+        .bench("assign: scalar-unrolled kernel (pre-SIMD)", || {
+            assign::assign_reference(&big, d, &cb.centroids, k)
+        })
+        .median_ns;
+    let lane_1t = be
+        .bench("assign: 8-lane blocked kernel", || {
+            assign::assign(&big, d, &cb.centroids, k, 1)
+        })
+        .median_ns;
+    println!(
+        "lane-blocking delta: {:.2}x vs scalar-unrolled (single thread)",
+        scalar_1t / lane_1t
+    );
+
+    // ---- histogram observer sharding (same engine sharding shape;
+    // counts are bit-identical to the serial scan)
+    let big_obs: Vec<f32> = {
+        let mut r = Pcg::new(7);
+        (0..1 << 20).map(|_| r.next_normal()).collect()
+    };
+    println!("\n--- histogram observe, 1M values, 2048 bins ---");
+    let ser = be
+        .bench("observe: serial scan", || {
+            let mut h = HistogramObserver::new(2048);
+            h.observe(&big_obs);
+            h
+        })
+        .median_ns;
+    let par_obs = be
+        .bench("observe: sharded, all cores", || {
+            let mut h = HistogramObserver::new(2048);
+            h.observe_sharded(&big_obs, 0);
+            h
+        })
+        .median_ns;
+    println!(
+        "observer sharding delta: {:.2}x ({} cores)",
+        ser / par_obs,
+        assign::default_threads()
+    );
 }

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::coordinator::trainer::TrainBatch;
 use crate::model::params::ParamStore;
-use crate::runtime::executable::ModelSession;
+use crate::runtime::executable::{BatchInput, ModelSession};
 
 #[derive(Debug, Clone, Copy)]
 pub struct EvalResult {
@@ -18,6 +18,12 @@ pub struct EvalResult {
 
 /// Evaluate over `batches` via `entry` ("eval" or "eval_int8act") with
 /// the weights currently uploaded to the session.
+///
+/// The batches are concatenated into one macro-batch and executed
+/// through the backend's deterministic batch sharding
+/// ([`ModelSession::eval_batched`]); the per-batch sums are folded in
+/// ascending batch order, so the result is bit-identical to the old
+/// sequential loop at every thread count (DESIGN.md §4).
 pub fn evaluate(
     sess: &mut ModelSession,
     entry: &str,
@@ -26,16 +32,72 @@ pub fn evaluate(
 ) -> Result<EvalResult> {
     anyhow::ensure!(!batches.is_empty(), "no eval batches");
     let denom = sess.meta.eval_denominator();
+    // with one batch or one worker the macro-batch buys nothing: skip
+    // its concatenation/slicing copies and run the plain per-batch loop
+    // (bit-identical either way)
+    if batches.len() == 1 || sess.backend_threads() <= 1 {
+        let sums = batches
+            .iter()
+            .map(|b| sess.eval(entry, &b.input(), b.targets(), layer_keep))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(fold_sums(&sums, denom));
+    }
+    let all_tokens = batches.iter().all(|b| matches!(b, TrainBatch::Tokens { .. }));
+    let all_images = batches.iter().all(|b| matches!(b, TrainBatch::Images { .. }));
+    anyhow::ensure!(all_tokens || all_images, "mixed eval batch kinds");
+    // validate each batch BEFORE concatenation: an irregular batch must
+    // error (as the sequential path's uploads would), not be mis-sliced
+    // at macro-batch boundaries
+    let per_input: usize = sess.meta.tokens_shape.iter().product();
+    let per_target: usize = sess.meta.targets_shape.iter().product();
+    for (i, b) in batches.iter().enumerate() {
+        let len = match b {
+            TrainBatch::Tokens { tokens, .. } => tokens.len(),
+            TrainBatch::Images { images, .. } => images.len(),
+        };
+        anyhow::ensure!(
+            len == per_input && b.targets().len() == per_target,
+            "eval batch {i}: {len} inputs / {} targets, expected {per_input} / {per_target}",
+            b.targets().len()
+        );
+    }
+    let macro_targets: Vec<i32> =
+        batches.iter().flat_map(|b| b.targets().iter().copied()).collect();
+    let sums = if all_tokens {
+        let macro_tokens: Vec<i32> = batches
+            .iter()
+            .flat_map(|b| match b {
+                TrainBatch::Tokens { tokens, .. } => tokens.iter().copied(),
+                TrainBatch::Images { .. } => unreachable!(),
+            })
+            .collect();
+        sess.eval_batched(entry, &BatchInput::Tokens(&macro_tokens), &macro_targets, layer_keep)?
+    } else {
+        let macro_images: Vec<f32> = batches
+            .iter()
+            .flat_map(|b| match b {
+                TrainBatch::Images { images, .. } => images.iter().copied(),
+                TrainBatch::Tokens { .. } => unreachable!(),
+            })
+            .collect();
+        sess.eval_batched(entry, &BatchInput::Images(&macro_images), &macro_targets, layer_keep)?
+    };
+    Ok(fold_sums(&sums, denom))
+}
+
+/// Fold per-batch `(sum_nll, sum_correct)` pairs in batch order into an
+/// [`EvalResult`] — one tail shared by the sequential and macro-batch
+/// paths so their arithmetic can never diverge.
+fn fold_sums(sums: &[(f64, f64)], denom: usize) -> EvalResult {
     let mut sum_nll = 0.0;
     let mut sum_correct = 0.0;
-    for b in batches {
-        let (nll, correct) = sess.eval(entry, &b.input(), b.targets(), layer_keep)?;
+    for &(nll, correct) in sums {
         sum_nll += nll;
         sum_correct += correct;
     }
-    let n = denom * batches.len();
+    let n = denom * sums.len();
     let nll = sum_nll / n as f64;
-    Ok(EvalResult { nll, ppl: nll.exp(), accuracy: sum_correct / n as f64, n })
+    EvalResult { nll, ppl: nll.exp(), accuracy: sum_correct / n as f64, n }
 }
 
 /// Evaluate a specific weight set (uploads, evaluates, restores).

@@ -70,8 +70,10 @@ pub struct TrainConfig {
     pub share_chunk: usize,
     /// steps between exact-PQ hat refreshes ("once per epoch")
     pub hat_refresh: usize,
-    /// worker threads for the hat refresh / assignment engine
-    /// (0 ⇒ all available cores)
+    /// worker threads (0 ⇒ all available cores) for the hat refresh /
+    /// assignment engine AND the interpreter backend's intra-op and
+    /// batch sharding — one knob governs host + backend parallelism;
+    /// every path is bit-deterministic at any thread count
     pub threads: usize,
     pub seed: u64,
     pub log_every: usize,
@@ -129,6 +131,8 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         };
         let share_idx = Self::build_share_idx(sess, &params, cfg.share_chunk);
         let rng = Pcg::new(cfg.seed ^ 0x7261_696e);
+        // the same knob drives the backend's deterministic sharding
+        sess.set_backend_threads(cfg.threads);
         Trainer { sess, params, opt, cfg, rng, share_idx, step: 0 }
     }
 

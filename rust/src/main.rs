@@ -174,6 +174,8 @@ fn quantize(rest: &[String]) -> Result<()> {
     let args = parse(cmd, rest)?;
 
     let wb = Workbench::new(&artifacts_dir(&args))?;
+    // --threads governs the backend too (batched eval after quantizing)
+    wb.rt.set_threads(args.num_or("threads", 0usize));
     let model = args.get_or("model", "lm_tiny").to_string();
     let mut lab = wb.lab(&model)?;
     let params = ParamStore::load_qnp1(Path::new(args.get("params").unwrap()))?;
@@ -308,9 +310,12 @@ fn eval(rest: &[String]) -> Result<()> {
         .opt_default("model", "lm_tiny", "model name")
         .req("params", "QNP1 file")
         .opt_default("entry", "eval", "eval|eval_int8act")
+        .opt_default("threads", "0", "backend worker threads (0=all cores)")
         .flag("prune", "evaluate with every-other-chunk pruning");
     let args = parse(cmd, rest)?;
     let wb = Workbench::new(&artifacts_dir(&args))?;
+    // eval batches shard across backend workers (bit-identical results)
+    wb.rt.set_threads(args.num_or("threads", 0usize));
     let mut lab = wb.lab(args.get_or("model", "lm_tiny"))?;
     let params = ParamStore::load_qnp1(Path::new(args.get("params").unwrap()))?;
     let keep = if args.flag("prune") {

@@ -11,20 +11,31 @@
 //! argmin_j ‖p − c_j‖²  =  argmin_j ‖c_j‖² − 2⟨p, c_j⟩
 //! ```
 //!
-//! with per-codeword squared norms precomputed once per call, a blocked
-//! inner loop (each centroid row is streamed once per block of points),
-//! and points sharded across `std::thread::scope` workers.
+//! with per-codeword squared norms precomputed once per call, a doubly
+//! blocked inner loop — points in blocks of `POINT_BLOCK`, codewords
+//! in SIMD-width lanes of `LANE_BLOCK` against a transposed codebook
+//! tile so the compiler can vectorize across codewords — and points
+//! sharded across `std::thread::scope` workers.
 //!
 //! Determinism contract: `codes` and `dists` are computed per point by
-//! the same scalar kernel regardless of sharding, so they are
-//! bit-identical across thread counts (tested). The `objective` is a
-//! sum of per-shard partial sums and is only guaranteed identical for a
-//! fixed thread count.
+//! kernels whose per-(point, codeword) arithmetic is the *same
+//! operation sequence* as the scalar [`dot`] (the lane kernel keeps
+//! `dot`'s 4-way partial sums per lane), and comparisons scan codewords
+//! in ascending index order — so results are bit-identical across
+//! thread counts AND across the blocked/unblocked kernels (tested
+//! against [`assign_reference`]). The `objective` is a sum of per-shard
+//! partial sums and is only guaranteed identical for a fixed thread
+//! count.
 
 /// Points per block in the inner loop. Small enough that the per-point
 /// running best/argmin state stays in registers, large enough that each
 /// centroid row is reused across the whole block.
 const POINT_BLOCK: usize = 8;
+
+/// Codewords per lane block: distances to 8 codewords are accumulated
+/// simultaneously from a `[d][8]` transposed tile (one f32x8 vector's
+/// worth — the ROADMAP's SIMD-width item).
+const LANE_BLOCK: usize = 8;
 
 /// Result of one assignment pass.
 #[derive(Debug, Clone)]
@@ -87,9 +98,138 @@ pub fn sq_norms(centroids: &[f32], k: usize, d: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Scalar kernel over one shard of points. `dists`, when present, must
-/// be the same length as `codes`. Returns the shard's objective.
+/// Per-call codebook preparation, shared read-only by every shard:
+/// squared norms plus the codebook transposed into `[k / 8][d][8]`
+/// lane-major tiles (full 8-lane blocks only; the `k % 8` remainder
+/// stays row-major and is handled scalarly).
+struct Prepared<'a> {
+    centroids: &'a [f32],
+    k: usize,
+    d: usize,
+    norms: Vec<f32>,
+    tiles: Vec<f32>,
+}
+
+impl<'a> Prepared<'a> {
+    fn new(centroids: &'a [f32], k: usize, d: usize) -> Prepared<'a> {
+        let kb = k / LANE_BLOCK;
+        let mut tiles = vec![0f32; kb * d * LANE_BLOCK];
+        for b in 0..kb {
+            for t in 0..d {
+                for l in 0..LANE_BLOCK {
+                    tiles[(b * d + t) * LANE_BLOCK + l] = centroids[(b * LANE_BLOCK + l) * d + t];
+                }
+            }
+        }
+        Prepared { centroids, k, d, norms: sq_norms(centroids, k, d), tiles }
+    }
+}
+
+/// Eight dot products at once against one transposed tile. Per lane
+/// this performs *exactly* the operation sequence of [`dot`] (four
+/// stride-4 partial sums combined as `(s0+s1)+(s2+s3)`, then a
+/// sequential tail), so `out[l] == dot(p, c_l)` bit-for-bit.
+#[inline]
+fn dot8(p: &[f32], tile: &[f32], d: usize, out: &mut [f32; LANE_BLOCK]) {
+    let mut s0 = [0f32; LANE_BLOCK];
+    let mut s1 = [0f32; LANE_BLOCK];
+    let mut s2 = [0f32; LANE_BLOCK];
+    let mut s3 = [0f32; LANE_BLOCK];
+    let d4 = d - d % 4;
+    let mut t = 0;
+    while t < d4 {
+        let r0 = &tile[t * LANE_BLOCK..(t + 1) * LANE_BLOCK];
+        let r1 = &tile[(t + 1) * LANE_BLOCK..(t + 2) * LANE_BLOCK];
+        let r2 = &tile[(t + 2) * LANE_BLOCK..(t + 3) * LANE_BLOCK];
+        let r3 = &tile[(t + 3) * LANE_BLOCK..(t + 4) * LANE_BLOCK];
+        for l in 0..LANE_BLOCK {
+            s0[l] += p[t] * r0[l];
+            s1[l] += p[t + 1] * r1[l];
+            s2[l] += p[t + 2] * r2[l];
+            s3[l] += p[t + 3] * r3[l];
+        }
+        t += 4;
+    }
+    for l in 0..LANE_BLOCK {
+        out[l] = (s0[l] + s1[l]) + (s2[l] + s3[l]);
+    }
+    while t < d {
+        let r = &tile[t * LANE_BLOCK..(t + 1) * LANE_BLOCK];
+        for l in 0..LANE_BLOCK {
+            out[l] += p[t] * r[l];
+        }
+        t += 1;
+    }
+}
+
+/// Lane-blocked kernel over one shard of points: full 8-codeword
+/// blocks via [`dot8`] + transposed tiles, scalar remainder, both in
+/// ascending codeword order (ties: lowest index, like the scalar
+/// kernel). `dists`, when present, must be the same length as `codes`.
+/// Returns the shard's objective.
 fn assign_shard(
+    points: &[f32],
+    cb: &Prepared,
+    codes: &mut [u32],
+    mut dists: Option<&mut [f32]>,
+) -> f64 {
+    let (centroids, k, d) = (cb.centroids, cb.k, cb.d);
+    let (norms, tiles) = (&cb.norms, &cb.tiles);
+    let n = codes.len();
+    let kfull = k - k % LANE_BLOCK;
+    let mut objective = 0.0f64;
+    let mut base = 0;
+    while base < n {
+        let block = POINT_BLOCK.min(n - base);
+        let mut best = [f32::INFINITY; POINT_BLOCK];
+        let mut best_j = [0u32; POINT_BLOCK];
+        for jb in 0..kfull / LANE_BLOCK {
+            let tile = &tiles[jb * d * LANE_BLOCK..(jb + 1) * d * LANE_BLOCK];
+            for bi in 0..block {
+                let p = &points[(base + bi) * d..(base + bi + 1) * d];
+                let mut dots = [0f32; LANE_BLOCK];
+                dot8(p, tile, d, &mut dots);
+                for (l, &pc) in dots.iter().enumerate() {
+                    let j = jb * LANE_BLOCK + l;
+                    let v = norms[j] - 2.0 * pc;
+                    if v < best[bi] {
+                        best[bi] = v;
+                        best_j[bi] = j as u32;
+                    }
+                }
+            }
+        }
+        for j in kfull..k {
+            let c = &centroids[j * d..(j + 1) * d];
+            let nj = norms[j];
+            for bi in 0..block {
+                let p = &points[(base + bi) * d..(base + bi + 1) * d];
+                let v = nj - 2.0 * dot(p, c);
+                if v < best[bi] {
+                    best[bi] = v;
+                    best_j[bi] = j as u32;
+                }
+            }
+        }
+        for bi in 0..block {
+            codes[base + bi] = best_j[bi];
+        }
+        if let Some(out) = dists.as_deref_mut() {
+            for bi in 0..block {
+                let p = &points[(base + bi) * d..(base + bi + 1) * d];
+                let dist = (best[bi] + dot(p, p)).max(0.0);
+                out[base + bi] = dist;
+                objective += dist as f64;
+            }
+        }
+        base += block;
+    }
+    objective
+}
+
+/// The pre-SIMD scalar-unrolled kernel, kept verbatim as the reference
+/// the lane-blocked engine is tested (and benchmarked) against.
+fn assign_shard_scalar(
     points: &[f32],
     d: usize,
     centroids: &[f32],
@@ -151,10 +291,10 @@ fn run_sharded(
     dists: Option<&mut [f32]>,
 ) -> f64 {
     let n = codes.len();
-    let norms = sq_norms(centroids, k, d);
+    let cb = Prepared::new(centroids, k, d);
     let threads = resolve_threads(threads).clamp(1, n.max(1));
     if threads <= 1 || n < 2 * POINT_BLOCK {
-        return assign_shard(points, d, centroids, k, &norms, codes, dists);
+        return assign_shard(points, &cb, codes, dists);
     }
     // Shard on block boundaries so blocking never changes per-point
     // results between thread counts (it cannot anyway — each point's
@@ -162,7 +302,7 @@ fn run_sharded(
     // work distribution even).
     let blocks = n.div_ceil(POINT_BLOCK);
     let chunk = blocks.div_ceil(threads).max(1) * POINT_BLOCK;
-    let norms_ref = &norms;
+    let cb_ref = &cb;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         match dists {
@@ -172,16 +312,14 @@ fn run_sharded(
                     .zip(dists.chunks_mut(chunk))
                     .zip(points.chunks(chunk * d))
                 {
-                    handles.push(s.spawn(move || {
-                        assign_shard(pts_c, d, centroids, k, norms_ref, code_c, Some(dist_c))
-                    }));
+                    handles.push(
+                        s.spawn(move || assign_shard(pts_c, cb_ref, code_c, Some(dist_c))),
+                    );
                 }
             }
             None => {
                 for (code_c, pts_c) in codes.chunks_mut(chunk).zip(points.chunks(chunk * d)) {
-                    handles.push(s.spawn(move || {
-                        assign_shard(pts_c, d, centroids, k, norms_ref, code_c, None)
-                    }));
+                    handles.push(s.spawn(move || assign_shard(pts_c, cb_ref, code_c, None)));
                 }
             }
         }
@@ -214,14 +352,17 @@ pub fn assign_codes(
     codes
 }
 
-/// Single-threaded reference: the exact same scalar kernel, no
-/// sharding. Tests assert the parallel paths match this bit-for-bit.
+/// Single-threaded reference: the pre-SIMD scalar-unrolled kernel, no
+/// sharding, no lane blocking. Tests assert the lane-blocked parallel
+/// engine matches this bit-for-bit; `benches/quant_ops.rs` reports the
+/// lane-blocking delta against it.
 pub fn assign_reference(points: &[f32], d: usize, centroids: &[f32], k: usize) -> Assignment {
     let n = check_dims(points, d, centroids, k);
     let norms = sq_norms(centroids, k, d);
     let mut codes = vec![0u32; n];
     let mut dists = vec![0.0f32; n];
-    let objective = assign_shard(points, d, centroids, k, &norms, &mut codes, Some(&mut dists));
+    let objective =
+        assign_shard_scalar(points, d, centroids, k, &norms, &mut codes, Some(&mut dists));
     Assignment { codes, dists, objective }
 }
 
@@ -371,6 +512,23 @@ mod tests {
             sum += a.dists[i] as f64;
         }
         assert!((a.objective - sum).abs() <= 1e-6 * sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot8_matches_dot_bitwise_per_lane() {
+        // the lane kernel must reproduce the scalar 4-way-unrolled dot
+        // exactly, for every d (full quads, tails, d < 4)
+        for d in [1usize, 2, 3, 4, 7, 8, 9, 16] {
+            let p = randv(d as u64, d);
+            let centroids = randv(d as u64 + 50, LANE_BLOCK * d);
+            let cb = Prepared::new(&centroids, LANE_BLOCK, d);
+            let mut dots = [0f32; LANE_BLOCK];
+            dot8(&p, &cb.tiles, d, &mut dots);
+            for (l, &got) in dots.iter().enumerate() {
+                let want = dot(&p, &centroids[l * d..(l + 1) * d]);
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d} lane={l}");
+            }
+        }
     }
 
     #[test]

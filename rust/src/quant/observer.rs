@@ -4,9 +4,18 @@
 //! * [`HistogramObserver`] — accumulates a histogram and searches the
 //!   clip range (lo, hi) that approximately minimizes the L2
 //!   quantization error, "a refinement of the MinMax scheme" exactly as
-//!   the paper describes PyTorch's Histogram method.
+//!   the paper describes PyTorch's Histogram method. Binning is an
+//!   embarrassingly parallel scan: [`HistogramObserver::observe_sharded`]
+//!   shards it across scoped workers with the same shape as the
+//!   `quant::assign` engine — bin counts are integer-valued f64s, so
+//!   the ascending-shard merge is *exactly* the serial result.
 
+use crate::quant::assign;
 use crate::quant::scalar::QParams;
+
+/// Below this many elements the sharded observe falls back to the
+/// serial scan (thread spawn would dominate).
+const SHARD_MIN: usize = 1 << 15;
 
 #[derive(Debug, Clone, Default)]
 pub struct MinMaxObserver {
@@ -80,6 +89,75 @@ impl HistogramObserver {
         for &x in data {
             let b = (((x - self.lo) / width) * self.n_bins as f32) as usize;
             self.bins[b.min(self.n_bins - 1)] += 1.0;
+        }
+    }
+
+    /// [`HistogramObserver::observe`] sharded across `threads` scoped
+    /// workers (0 ⇒ all cores): parallel min/max scan, then per-shard
+    /// local histograms merged in ascending shard order. Bit-identical
+    /// to the serial scan — bin indices are computed per element by the
+    /// same arithmetic, and counts are exact small integers in f64, so
+    /// neither sharding nor merge order can change any bin.
+    pub fn observe_sharded(&mut self, data: &[f32], threads: usize) {
+        let threads = assign::resolve_threads(threads);
+        if data.len() < SHARD_MIN || threads <= 1 {
+            self.observe(data);
+            return;
+        }
+        let chunk = data.len().div_ceil(threads);
+        // pass 1: global range (min/max fold is order-insensitive)
+        let (lo, hi) = std::thread::scope(|s| {
+            let handles: Vec<_> = data
+                .chunks(chunk)
+                .map(|c| {
+                    s.spawn(move || {
+                        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                        for &x in c {
+                            lo = lo.min(x);
+                            hi = hi.max(x);
+                        }
+                        (lo, hi)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).fold(
+                (f32::INFINITY, f32::NEG_INFINITY),
+                |(alo, ahi), (lo, hi)| (alo.min(lo), ahi.max(hi)),
+            )
+        });
+        // identical range bookkeeping to the serial observe
+        if !self.seen {
+            self.lo = lo;
+            self.hi = hi.max(lo + 1e-12);
+            self.seen = true;
+        } else if lo < self.lo || hi > self.hi {
+            let new_lo = self.lo.min(lo);
+            let new_hi = self.hi.max(hi);
+            self.rebin(new_lo, new_hi);
+        }
+        // pass 2: per-shard local histograms, merged in shard order
+        let (slo, width) = (self.lo, (self.hi - self.lo).max(1e-12));
+        let n_bins = self.n_bins;
+        let parts: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = data
+                .chunks(chunk)
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut bins = vec![0.0f64; n_bins];
+                        for &x in c {
+                            let b = (((x - slo) / width) * n_bins as f32) as usize;
+                            bins[b.min(n_bins - 1)] += 1.0;
+                        }
+                        bins
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for part in parts {
+            for (b, v) in self.bins.iter_mut().zip(part) {
+                *b += v;
+            }
         }
     }
 
@@ -208,6 +286,39 @@ mod tests {
         let mse_h = quant_mse(&data, &h.qparams(8));
         let mse_mm = quant_mse(&data, &mm.qparams(8));
         assert!(mse_h <= mse_mm * 2.0 + 1e-12, "{mse_h} vs {mse_mm}");
+    }
+
+    #[test]
+    fn sharded_observe_is_bit_identical_to_serial() {
+        // above SHARD_MIN so the parallel path actually engages
+        let data = heavy_tail(9, SHARD_MIN + 1234);
+        for threads in [1usize, 2, 3, 8] {
+            let mut serial = HistogramObserver::new(512);
+            serial.observe(&data);
+            let mut sharded = HistogramObserver::new(512);
+            sharded.observe_sharded(&data, threads);
+            assert_eq!(serial.bins, sharded.bins, "threads={threads}");
+            assert_eq!(serial.lo.to_bits(), sharded.lo.to_bits());
+            assert_eq!(serial.hi.to_bits(), sharded.hi.to_bits());
+            // incremental observe after the sharded pass stays coherent
+            serial.observe(&data[..100]);
+            sharded.observe_sharded(&data[..100], threads); // serial fallback
+            assert_eq!(serial.bins, sharded.bins);
+        }
+    }
+
+    #[test]
+    fn sharded_observe_rebins_like_serial() {
+        let a = heavy_tail(10, SHARD_MIN + 17);
+        let mut serial = HistogramObserver::new(128);
+        let mut sharded = HistogramObserver::new(128);
+        serial.observe(&[0.5, -0.5]);
+        sharded.observe(&[0.5, -0.5]);
+        // second batch widens the range ⇒ both must rebin identically
+        serial.observe(&a);
+        sharded.observe_sharded(&a, 4);
+        assert_eq!(serial.bins, sharded.bins);
+        assert_eq!(serial.best_range(8), sharded.best_range(8));
     }
 
     #[test]

@@ -663,6 +663,10 @@ impl Quantizer for ScalarQuant {
             }
             IntObserver::Histogram => {
                 let mut h = HistogramObserver::new(2048);
+                // serial scan: `Quantizer::fit` carries no worker knob,
+                // and spawning all cores here would bypass the
+                // one-knob contract (DESIGN.md §4). Callers that do
+                // hold a knob use `observe_sharded` (bit-identical).
                 h.observe(&data);
                 let qp = h.qparams(self.bits);
                 scalar::roundtrip(&mut data, &qp);

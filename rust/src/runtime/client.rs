@@ -4,8 +4,10 @@
 //! Two backends sit behind one `Runtime` handle:
 //!
 //! * **Interp** — the pure-Rust HLO interpreter
-//!   ([`crate::runtime::interp`]). Works offline, deterministic,
-//!   covers the tiny Transformer op set. The default.
+//!   ([`crate::runtime::interp`]), compiled at load time into a
+//!   liveness-annotated [`interp::Plan`] and executed in place. Works
+//!   offline, deterministic, covers the tiny Transformer op set. The
+//!   default.
 //! * **Pjrt** — the vendored `xla` PJRT binding. In this offline build
 //!   it is a compile-time stub whose compile/execute paths error at
 //!   runtime; with a real `xla` crate dropped into `rust/vendor/xla`
@@ -14,15 +16,22 @@
 //! Selection: `Runtime::cpu()` honours the `QN_BACKEND` environment
 //! variable (`interp` default, `pjrt` opt-in); tests that must execute
 //! the fixture use `Runtime::interp()` explicitly.
+//!
+//! Parallelism: [`Runtime::set_threads`] bounds the interpreter's
+//! worker count — intra-op sharding inside one invocation
+//! ([`Executable::execute_f32_with`]) and batch sharding across
+//! independent invocations ([`Executable::execute_f32_batched`]). Both
+//! are bit-deterministic at any thread count (DESIGN.md §4).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::runtime::interp::{self, ArrayValue, Buf, Interp, Value};
+use crate::runtime::interp::{self, ArrayValue, Buf, Value};
 
 /// Which execution engine a [`Runtime`] drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,31 +57,50 @@ impl Backend {
 
 /// A loaded, executable artifact on some backend.
 pub enum Executable {
-    Interp(interp::HloModule),
+    Interp(interp::Plan),
     Pjrt(xla::PjRtLoadedExecutable),
+}
+
+/// One entry invocation's downloaded result tuple.
+type ShardResult = Result<Vec<Vec<f32>>>;
+
+/// Download one planned invocation's result tuple as f32 vectors.
+fn download_f32(out: Value) -> ShardResult {
+    out.tuple()
+        .context("artifact entry did not return a tuple")?
+        .iter()
+        .map(|v| Ok(v.array()?.as_f32()?.to_vec()))
+        .collect()
+}
+
+fn host_array(b: &Buffer) -> Result<&ArrayValue> {
+    match b {
+        Buffer::Host(a) => Ok(a),
+        Buffer::Pjrt(_) => bail!("PJRT buffer passed to the interpreter backend"),
+    }
 }
 
 impl Executable {
     /// Execute and download the result. Every artifact entry returns a
     /// flat tuple of f32 arrays (loss+grads, or eval sums) — see the
     /// entry-point contract in DESIGN.md §1 — so that is the one
-    /// download shape this seam needs.
+    /// download shape this seam needs. Single-threaded; use
+    /// [`Executable::execute_f32_with`] to bound intra-op workers.
     pub fn execute_f32(&self, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        self.execute_f32_with(args, 1)
+    }
+
+    /// [`Executable::execute_f32`] with an explicit worker bound for
+    /// the interpreter's intra-op sharding (packed dot). Results are
+    /// bit-identical for every `threads` value.
+    pub fn execute_f32_with(&self, args: &[&Buffer], threads: usize) -> Result<Vec<Vec<f32>>> {
         match self {
-            Executable::Interp(module) => {
+            Executable::Interp(plan) => {
                 let vals: Vec<Value> = args
                     .iter()
-                    .map(|b| match b {
-                        Buffer::Host(a) => Ok(Value::Array(a.clone())),
-                        Buffer::Pjrt(_) => bail!("PJRT buffer passed to the interpreter backend"),
-                    })
+                    .map(|b| Ok(Value::Array(host_array(b)?.clone())))
                     .collect::<Result<_>>()?;
-                let out = Interp::new(module).run_entry(&vals)?;
-                out.tuple()
-                    .context("artifact entry did not return a tuple")?
-                    .iter()
-                    .map(|v| Ok(v.array()?.as_f32()?.to_vec()))
-                    .collect()
+                download_f32(plan.run_entry(vals, threads)?)
             }
             Executable::Pjrt(exe) => {
                 let bufs: Vec<&xla::PjRtBuffer> = args
@@ -92,6 +120,115 @@ impl Executable {
             }
         }
     }
+
+    /// Deterministic data parallelism over the leading batch dimension
+    /// (interpreter backend only).
+    ///
+    /// Inputs whose dims match the entry's declared parameter shape are
+    /// replicated (O(1) — shared buffers); inputs whose leading dim is
+    /// an integer multiple `M` of the declared one are sliced into `M`
+    /// shards. Each shard is an independent entry invocation with fixed
+    /// visit order, executed across at most `threads` scoped workers,
+    /// and the per-shard result tuples are returned in ascending shard
+    /// order — so the output is bit-identical across 1..N threads
+    /// (the `quant::assign` determinism contract, DESIGN.md §4).
+    pub fn execute_f32_batched(
+        &self,
+        args: &[&Buffer],
+        threads: usize,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let plan = match self {
+            Executable::Interp(plan) => plan,
+            Executable::Pjrt(_) => bail!("batched execution is interpreter-only (DESIGN.md §4)"),
+        };
+        ensure!(
+            args.len() == plan.n_entry_params(),
+            "entry takes {} inputs, got {}",
+            plan.n_entry_params(),
+            args.len()
+        );
+        enum Slot<'a> {
+            Shared(&'a ArrayValue),
+            Batched { a: &'a ArrayValue, rows: usize },
+        }
+        let mut m: Option<usize> = None;
+        let mut slots = Vec::with_capacity(args.len());
+        for (i, b) in args.iter().enumerate() {
+            let a = host_array(b)?;
+            let expected = plan.entry_param_shape(i).map(|s| s.array()).transpose()?;
+            let slot = match expected {
+                None => Slot::Shared(a),
+                Some((_, dims)) if a.dims == dims => Slot::Shared(a),
+                Some((_, dims)) => {
+                    ensure!(
+                        !dims.is_empty()
+                            && a.dims.len() == dims.len()
+                            && a.dims[1..] == dims[1..]
+                            && dims[0] > 0
+                            && a.dims[0] % dims[0] == 0,
+                        "input {i}: dims {:?} neither match entry shape {:?} nor batch it",
+                        a.dims,
+                        dims
+                    );
+                    let mi = a.dims[0] / dims[0];
+                    match m {
+                        None => m = Some(mi),
+                        Some(prev) => {
+                            ensure!(prev == mi, "inconsistent batch factors {prev} vs {mi}")
+                        }
+                    }
+                    Slot::Batched { a, rows: dims[0] }
+                }
+            };
+            slots.push(slot);
+        }
+        let m = m.unwrap_or(1);
+        // per-shard argument construction (runs inside the workers)
+        let build = |s: usize| -> Result<Vec<Value>> {
+            slots
+                .iter()
+                .map(|slot| match slot {
+                    Slot::Shared(a) => Ok(Value::Array((*a).clone())),
+                    Slot::Batched { a, rows } => {
+                        let inner: usize = a.dims[1..].iter().product();
+                        let lo = s * rows * inner;
+                        let mut dims = a.dims.clone();
+                        dims[0] = *rows;
+                        let buf = a.buf.copy_range(lo, lo + rows * inner);
+                        Ok(Value::Array(ArrayValue::new(dims, buf)?))
+                    }
+                })
+                .collect()
+        };
+        let workers = threads.max(1).min(m);
+        // hand any leftover thread budget to each shard's intra-op
+        // sharding (fewer shards than cores): still deterministic —
+        // intra-op results are thread-count-invariant
+        let inner = (threads.max(1) / workers.max(1)).max(1);
+        let run_shard = |s: usize| -> ShardResult {
+            download_f32(plan.run_entry(build(s)?, inner)?)
+                .with_context(|| format!("executing batch shard {s}/{m}"))
+        };
+        let mut results: Vec<Option<ShardResult>> = (0..m).map(|_| None).collect();
+        if workers <= 1 {
+            for (s, slot) in results.iter_mut().enumerate() {
+                *slot = Some(run_shard(s));
+            }
+        } else {
+            let chunk = m.div_ceil(workers);
+            let run_shard = &run_shard;
+            std::thread::scope(|sc| {
+                for (ci, rc) in results.chunks_mut(chunk).enumerate() {
+                    sc.spawn(move || {
+                        for (r, slot) in rc.iter_mut().enumerate() {
+                            *slot = Some(run_shard(ci * chunk + r));
+                        }
+                    });
+                }
+            });
+        }
+        results.into_iter().map(|r| r.expect("shard executed")).collect()
+    }
 }
 
 /// A device (or host) buffer on some backend.
@@ -104,11 +241,13 @@ pub struct Runtime {
     backend: Backend,
     pjrt: Option<xla::PjRtClient>,
     cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
+    /// interpreter worker bound: 0 ⇒ all cores (resolved at use), n ⇒ n
+    threads: AtomicUsize,
 }
 
 impl Runtime {
     /// Default runtime: backend selected by `QN_BACKEND` (interp unless
-    /// overridden).
+    /// overridden), single-threaded until [`Runtime::set_threads`].
     pub fn cpu() -> Result<Runtime> {
         Runtime::with_backend(Backend::from_env()?)
     }
@@ -116,7 +255,12 @@ impl Runtime {
     /// The interpreter backend, unconditionally (what the fixture-driven
     /// integration tests use).
     pub fn interp() -> Runtime {
-        Runtime { backend: Backend::Interp, pjrt: None, cache: Mutex::new(HashMap::new()) }
+        Runtime {
+            backend: Backend::Interp,
+            pjrt: None,
+            cache: Mutex::new(HashMap::new()),
+            threads: AtomicUsize::new(1),
+        }
     }
 
     pub fn with_backend(backend: Backend) -> Result<Runtime> {
@@ -124,11 +268,31 @@ impl Runtime {
             Backend::Interp => None,
             Backend::Pjrt => Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?),
         };
-        Ok(Runtime { backend, pjrt, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            backend,
+            pjrt,
+            cache: Mutex::new(HashMap::new()),
+            threads: AtomicUsize::new(1),
+        })
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Bound the interpreter's worker threads (`0` ⇒ all cores). Takes
+    /// `&self` so a shared runtime can be tuned by the coordinator
+    /// (`TrainConfig.threads` flows here). Thread count never changes
+    /// results — only wall-clock.
+    pub fn set_threads(&self, threads: usize) {
+        self.threads.store(threads, Ordering::Relaxed);
+    }
+
+    /// Effective interpreter worker count. Resolution (0 ⇒ all cores)
+    /// is shared with the host quantization engine so the one knob
+    /// means the same thing on both sides.
+    pub fn threads(&self) -> usize {
+        crate::quant::assign::resolve_threads(self.threads.load(Ordering::Relaxed))
     }
 
     pub fn platform(&self) -> String {
@@ -139,13 +303,18 @@ impl Runtime {
         }
     }
 
-    /// Load + compile an HLO text file (cached by path).
+    /// Load + compile an HLO text file (cached by path). On the
+    /// interpreter backend "compile" is parse + plan lowering
+    /// (liveness, move flags, fused-region classification).
     pub fn compile(&self, path: &Path) -> Result<Rc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(path) {
             return Ok(exe.clone());
         }
         let exe = Rc::new(match self.backend {
-            Backend::Interp => Executable::Interp(interp::HloModule::parse_file(path)?),
+            Backend::Interp => {
+                let module = interp::HloModule::parse_file(path)?;
+                Executable::Interp(interp::Plan::compile(&module))
+            }
             Backend::Pjrt => {
                 let client = self.pjrt.as_ref().expect("PJRT backend without client");
                 let proto = xla::HloModuleProto::from_text_file(
@@ -229,10 +398,20 @@ mod tests {
         match rt.scalar_i32(7).unwrap() {
             Buffer::Host(a) => {
                 assert!(a.dims.is_empty());
-                assert_eq!(a.buf, Buf::S32(vec![7]));
+                assert_eq!(*a.buf, Buf::S32(vec![7]));
             }
             Buffer::Pjrt(_) => panic!(),
         }
+    }
+
+    #[test]
+    fn threads_knob_resolves_zero_to_cores() {
+        let rt = Runtime::interp();
+        assert_eq!(rt.threads(), 1); // conservative default
+        rt.set_threads(3);
+        assert_eq!(rt.threads(), 3);
+        rt.set_threads(0);
+        assert!(rt.threads() >= 1); // all cores
     }
 
     #[test]
@@ -280,6 +459,53 @@ mod tests {
         let arg = rt.upload_f32(&[3.0, -2.0], &[2]).unwrap();
         let out = exe.execute_f32(&[&arg]).unwrap();
         assert_eq!(out, vec![vec![3.0, -2.0], vec![9.0, 4.0]]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn execute_f32_batched_shards_leading_dim() {
+        let dir = crate::util::testing::temp_dir("interp_batched");
+        let path = dir.join("m.hlo.txt");
+        // entry over a [2,3] batch plus a shared scale: per-shard sums
+        std::fs::write(
+            &path,
+            "HloModule m\n\nsum.1 {\n  a.1 = f32[] parameter(0)\n  \
+             b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+             ENTRY main.1 {\n  x.1 = f32[2,3]{1,0} parameter(0)\n  \
+             w.2 = f32[] parameter(1)\n  wb.3 = f32[2,3]{1,0} broadcast(w.2), \
+             dimensions={}\n  m.4 = f32[2,3]{1,0} multiply(x.1, wb.3)\n  \
+             z.5 = f32[] constant(0)\n  s.6 = f32[] reduce(m.4, z.5), \
+             dimensions={0,1}, to_apply=sum.1\n  \
+             ROOT t.7 = (f32[]) tuple(s.6)\n}\n",
+        )
+        .unwrap();
+        let rt = Runtime::interp();
+        let exe = rt.compile(&path).unwrap();
+        let scale = rt.scalar_f32(2.0).unwrap();
+        // macro-batch of M=3 shards, each [2,3]
+        let data: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let macro_arg = rt.upload_f32(&data, &[6, 3]).unwrap();
+        for threads in [1usize, 3, 8] {
+            let out = exe.execute_f32_batched(&[&macro_arg, &scale], threads).unwrap();
+            assert_eq!(out.len(), 3, "threads={threads}");
+            // shard s sums 2*(6 values starting at 6s)
+            for (s, parts) in out.iter().enumerate() {
+                let want: f32 = (0..6).map(|i| 2.0 * (s * 6 + i) as f32).sum();
+                assert_eq!(parts[0], vec![want], "shard {s} threads={threads}");
+            }
+        }
+        // per-shard results equal individual unbatched invocations
+        let one = rt.upload_f32(&data[..6], &[2, 3]).unwrap();
+        let single = exe.execute_f32(&[&one, &scale]).unwrap();
+        let batched = exe.execute_f32_batched(&[&macro_arg, &scale], 2).unwrap();
+        assert_eq!(single, batched[0]);
+        // M=1 (exact entry shape) degrades to a single invocation
+        let m1 = exe.execute_f32_batched(&[&one, &scale], 4).unwrap();
+        assert_eq!(m1.len(), 1);
+        assert_eq!(m1[0], single);
+        // non-divisible leading dim is rejected
+        let bad = rt.upload_f32(&data[..9], &[3, 3]).unwrap();
+        assert!(exe.execute_f32_batched(&[&bad, &scale], 2).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 }

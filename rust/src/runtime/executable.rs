@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use crate::model::config::ModelMeta;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
-use crate::runtime::client::{Buffer, Executable, Runtime};
+use crate::runtime::client::{Backend, Buffer, Executable, Runtime};
 use crate::runtime::manifest::Manifest;
 
 /// Batch input: LM/CLS feed i32 tokens, IMG feeds f32 pixels.
@@ -69,6 +69,18 @@ impl<'rt> ModelSession<'rt> {
     /// Eagerly compile an entry (so timing loops exclude compile cost).
     pub fn warmup(&mut self, entry: &str) -> Result<()> {
         self.exe(entry).map(|_| ())
+    }
+
+    /// Bound the backend's worker threads (0 ⇒ all cores). Forwarded to
+    /// the shared [`Runtime`]; `TrainConfig.threads` lands here so one
+    /// knob governs both the host quantization engine and the backend.
+    pub fn set_backend_threads(&self, threads: usize) {
+        self.rt.set_threads(threads);
+    }
+
+    /// Effective backend worker count (resolved, ≥ 1).
+    pub fn backend_threads(&self) -> usize {
+        self.rt.threads()
     }
 
     pub fn has_entry(&self, entry: &str) -> bool {
@@ -153,7 +165,9 @@ impl<'rt> ModelSession<'rt> {
         args.push(&rate_buf);
         args.push(&seed_buf);
 
-        let parts = exe.execute_f32(&args).with_context(|| format!("executing {entry}"))?;
+        let parts = exe
+            .execute_f32_with(&args, self.rt.threads())
+            .with_context(|| format!("executing {entry}"))?;
         anyhow::ensure!(parts.len() == n + 1, "grad output arity {}", parts.len());
         let loss = parts[0][0];
         let grads = parts[1..]
@@ -183,8 +197,88 @@ impl<'rt> ModelSession<'rt> {
         args.push(&targets_buf);
         args.push(&keep_buf);
 
-        let parts = exe.execute_f32(&args).with_context(|| format!("executing {entry}"))?;
+        let parts = exe
+            .execute_f32_with(&args, self.rt.threads())
+            .with_context(|| format!("executing {entry}"))?;
         anyhow::ensure!(parts.len() == 2, "eval output arity {}", parts.len());
         Ok((parts[0][0] as f64, parts[1][0] as f64))
+    }
+
+    /// Evaluate a *macro-batch*: `input`/`targets` carry `M` eval
+    /// batches concatenated along the leading dimension. The backend
+    /// shards them into `M` independent entry invocations across its
+    /// worker threads and returns the per-batch `(sum_nll,
+    /// sum_correct)` pairs in batch order — bit-identical to `M`
+    /// sequential [`ModelSession::eval`] calls at any thread count
+    /// (DESIGN.md §4).
+    pub fn eval_batched(
+        &mut self,
+        entry: &str,
+        input: &BatchInput,
+        targets: &[i32],
+        layer_keep: &[f32],
+    ) -> Result<Vec<(f64, f64)>> {
+        let exe = self.exe(entry)?;
+        let per_input: usize = self.meta.tokens_shape.iter().product();
+        let per_target: usize = self.meta.targets_shape.iter().product();
+        let len = match input {
+            BatchInput::Tokens(t) => t.len(),
+            BatchInput::Images(x) => x.len(),
+        };
+        anyhow::ensure!(
+            per_input > 0 && len % per_input == 0,
+            "macro-batch input length {len} is not a multiple of {per_input}"
+        );
+        let m = len / per_input;
+        anyhow::ensure!(
+            targets.len() == m * per_target,
+            "macro-batch targets length {} != {m} x {per_target}",
+            targets.len()
+        );
+        if self.rt.backend() == Backend::Pjrt {
+            // PJRT has no batched seam (yet): run the shards serially —
+            // identical results, just no host-side parallelism
+            let mut out = Vec::with_capacity(m);
+            for s in 0..m {
+                let inp = match input {
+                    BatchInput::Tokens(t) => {
+                        BatchInput::Tokens(&t[s * per_input..(s + 1) * per_input])
+                    }
+                    BatchInput::Images(x) => {
+                        BatchInput::Images(&x[s * per_input..(s + 1) * per_input])
+                    }
+                };
+                let tg = &targets[s * per_target..(s + 1) * per_target];
+                out.push(self.eval(entry, &inp, tg, layer_keep)?);
+            }
+            return Ok(out);
+        }
+        let mut tshape = self.meta.tokens_shape.clone();
+        tshape[0] *= m;
+        let mut gshape = self.meta.targets_shape.clone();
+        gshape[0] *= m;
+        let batch_buf = match input {
+            BatchInput::Tokens(t) => self.rt.upload_i32(t, &tshape)?,
+            BatchInput::Images(x) => self.rt.upload_f32(x, &tshape)?,
+        };
+        let targets_buf = self.rt.upload_i32(targets, &gshape)?;
+        let keep_buf = self.rt.upload_f32(layer_keep, &[layer_keep.len()])?;
+
+        let mut args: Vec<&Buffer> = Vec::with_capacity(self.param_bufs.len() + 3);
+        args.extend(self.param_bufs.iter());
+        args.push(&batch_buf);
+        args.push(&targets_buf);
+        args.push(&keep_buf);
+
+        let shards = exe
+            .execute_f32_batched(&args, self.rt.threads())
+            .with_context(|| format!("executing {entry} (batched x{m})"))?;
+        shards
+            .into_iter()
+            .map(|parts| {
+                anyhow::ensure!(parts.len() == 2, "eval output arity {}", parts.len());
+                Ok((parts[0][0] as f64, parts[1][0] as f64))
+            })
+            .collect()
     }
 }

@@ -9,12 +9,17 @@
 //! coordinator uses. jax's threefry PRNG lowers to plain integer HLO
 //! (`while` loops over u32 lanes), so even in-graph randomness is exact
 //! replay — no `rng-bit-generator` substitute is needed (DESIGN.md §4).
+//!
+//! This walker is the *reference* engine: the production path is the
+//! planned executor in [`crate::runtime::interp::plan`], which must
+//! match it bit-for-bit (golden-tested on the fixture). Keep the two in
+//! lockstep when touching op semantics.
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::runtime::interp::ops;
 use crate::runtime::interp::parser::{HloModule, Instr, Op, ScatterDims};
-use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, Shape, Value};
+use crate::runtime::interp::value::{ArrayValue, Buf, Shape, Value};
 
 /// Operand `k` of `ins`, which must be an array.
 fn operand<'e>(env: &'e [Value], ins: &Instr, k: usize) -> Result<&'e ArrayValue> {
@@ -133,8 +138,9 @@ impl<'m> Interp<'m> {
     }
 
     /// (Variadic) reduce: operands are N inputs followed by N scalar
-    /// inits; the region folds `(acc..., element...)` pairs. Elements
-    /// are visited in row-major order over the reduced dimensions.
+    /// inits; the region folds `(acc..., element...)` pairs. The index
+    /// geometry lives in [`ops::ReduceGeom`], shared with the planned
+    /// executor's fused/generic paths.
     fn reduce(&self, ins: &Instr, env: &[Value], dims: &[usize], target: usize) -> Result<Value> {
         let nops = ins.operands.len();
         ensure!(nops >= 2 && nops % 2 == 0, "reduce needs N inputs + N inits");
@@ -151,31 +157,15 @@ impl<'m> Interp<'m> {
         for x in &inputs {
             ensure!(x.dims == x0.dims, "reduce input shape mismatch");
         }
-        let kept: Vec<usize> = (0..x0.dims.len()).filter(|d| !dims.contains(d)).collect();
-        let out_dims: Vec<usize> = kept.iter().map(|&d| x0.dims[d]).collect();
-        let red_dims: Vec<usize> = dims.iter().map(|&d| x0.dims[d]).collect();
-        let xst = strides_of(&x0.dims);
-        let ost = strides_of(&out_dims);
-        let rst = strides_of(&red_dims);
-        let rn: usize = red_dims.iter().product();
-        let n: usize = out_dims.iter().product();
+        let g = ops::ReduceGeom::new(&x0.dims, dims);
 
-        let mut outs: Vec<Buf> = inits.iter().map(|a| Buf::with_capacity(a.ty(), n)).collect();
-        let mut oi = vec![0usize; out_dims.len()];
-        let mut ri = vec![0usize; red_dims.len()];
-        for f in 0..n {
-            unflatten(f, &ost, &mut oi);
-            let mut base = 0;
-            for (k, &d) in kept.iter().enumerate() {
-                base += oi[k] * xst[d];
-            }
+        let mut outs: Vec<Buf> = inits.iter().map(|a| Buf::with_capacity(a.ty(), g.n)).collect();
+        let (mut oi, mut ri) = g.scratch();
+        for f in 0..g.n {
+            let base = g.cell_base(f, &mut oi);
             let mut accs: Vec<Value> = inits.iter().map(|a| Value::Array(a.scalar_at(0))).collect();
-            for rf in 0..rn {
-                unflatten(rf, &rst, &mut ri);
-                let mut xi = base;
-                for (k, &d) in dims.iter().enumerate() {
-                    xi += ri[k] * xst[d];
-                }
+            for rf in 0..g.rn {
+                let xi = g.elem_index(base, rf, &mut ri);
                 let mut cargs = accs;
                 for x in &inputs {
                     cargs.push(Value::Array(x.scalar_at(xi)));
@@ -193,7 +183,7 @@ impl<'m> Interp<'m> {
         }
         let mut results: Vec<Value> = outs
             .into_iter()
-            .map(|buf| ArrayValue::new(out_dims.clone(), buf).map(Value::Array))
+            .map(|buf| ArrayValue::new(g.out_dims.clone(), buf).map(Value::Array))
             .collect::<Result<_>>()?;
         if matches!(ins.shape, Shape::Tuple(_)) {
             Ok(Value::Tuple(results))
@@ -205,7 +195,9 @@ impl<'m> Interp<'m> {
 
     /// StableHLO scatter (single input), including the batching dims
     /// jax emits for vmapped one-hot updates. Updates whose full index
-    /// falls out of bounds are dropped, matching XLA.
+    /// falls out of bounds are dropped, matching XLA. The index
+    /// geometry lives in [`ops::scatter_walk`], shared with the
+    /// planned executor's fused/generic paths.
     fn scatter(
         &self,
         operand: &ArrayValue,
@@ -214,73 +206,20 @@ impl<'m> Interp<'m> {
         s: &ScatterDims,
         target: usize,
     ) -> Result<Value> {
-        let orank = operand.dims.len();
-        let sdims: Vec<usize> =
-            (0..indices.dims.len()).filter(|&d| d != s.index_vector_dim).collect();
-        let scatter_u: Vec<usize> = (0..updates.dims.len())
-            .filter(|d| !s.update_window_dims.contains(d))
-            .collect();
-        let window_operand: Vec<usize> = (0..orank)
-            .filter(|d| {
-                !s.inserted_window_dims.contains(d) && !s.input_batching_dims.contains(d)
-            })
-            .collect();
-        ensure!(
-            window_operand.len() == s.update_window_dims.len(),
-            "scatter window dims arity mismatch"
-        );
-        ensure!(scatter_u.len() == sdims.len(), "scatter batch rank mismatch");
-
-        let mut out = operand.buf.clone();
-        let pst = strides_of(&operand.dims);
-        let ust = strides_of(&updates.dims);
-        let sst = strides_of(&indices.dims);
-        let n = updates.numel();
-        let mut ui = vec![0usize; updates.dims.len()];
-        let mut full = vec![0i64; orank];
-        for f in 0..n {
-            unflatten(f, &ust, &mut ui);
-            let mut sbase = 0;
-            for (j, &sd) in sdims.iter().enumerate() {
-                sbase += ui[scatter_u[j]] * sst[sd];
-            }
-            full.iter_mut().for_each(|v| *v = 0);
-            for (k, &od) in s.scatter_dims_to_operand_dims.iter().enumerate() {
-                let si = if s.index_vector_dim < indices.dims.len() {
-                    sbase + k * sst[s.index_vector_dim]
-                } else {
-                    sbase
-                };
-                full[od] = indices.buf.index_at(si)?;
-            }
-            for (&od, &sd) in s.input_batching_dims.iter().zip(&s.scatter_indices_batching_dims) {
-                let j = sdims.iter().position(|&x| x == sd).unwrap();
-                full[od] = ui[scatter_u[j]] as i64;
-            }
-            for (k, &d) in window_operand.iter().enumerate() {
-                full[d] += ui[s.update_window_dims[k]] as i64;
-            }
-            let in_bounds = full
-                .iter()
-                .zip(&operand.dims)
-                .all(|(&v, &d)| v >= 0 && (v as usize) < d);
-            if !in_bounds {
-                continue; // out-of-bounds updates are discarded
-            }
-            let pi: usize = full.iter().zip(&pst).map(|(&v, &s)| v as usize * s).sum();
-            let cur = Value::Array(ArrayValue {
-                dims: vec![],
-                buf: {
-                    let mut b = Buf::with_capacity(operand.ty(), 1);
-                    b.push_from(&out, pi);
-                    b
-                },
-            });
+        let mut out = (*operand.buf).clone();
+        let ty = out.ty();
+        ops::scatter_walk(&operand.dims, indices, updates, s, |pi, f| {
+            let cur = {
+                let mut b = Buf::with_capacity(ty, 1);
+                b.push_from(&out, pi);
+                Value::Array(ArrayValue::new(vec![], b)?)
+            };
             let upd = Value::Array(updates.scalar_at(f));
             let res = self.run(target, &[cur, upd])?;
             out.set_from(pi, &res.array()?.buf, 0);
-        }
-        Ok(Value::Array(ArrayValue { dims: operand.dims.clone(), buf: out }))
+            Ok(())
+        })?;
+        Ok(Value::Array(ArrayValue::new(operand.dims.clone(), out)?))
     }
 }
 
@@ -328,7 +267,7 @@ mod tests {
         let parts = out.tuple().unwrap();
         assert_eq!(parts[0].array().unwrap().as_f32().unwrap(), &[9.0]);
         // first max wins under GE folding in visit order
-        match &parts[1].array().unwrap().buf {
+        match &*parts[1].array().unwrap().buf {
             Buf::S32(v) => assert_eq!(v.as_slice(), &[1]),
             other => panic!("{other:?}"),
         }
@@ -351,7 +290,7 @@ mod tests {
                     ROOT w.4 = (s32[], s32[]) while(st.3), condition=cond.1, body=body.1\n}\n";
         let out = run(text, &[]);
         let parts = out.tuple().unwrap();
-        match (&parts[0].array().unwrap().buf, &parts[1].array().unwrap().buf) {
+        match (&*parts[0].array().unwrap().buf, &*parts[1].array().unwrap().buf) {
             (Buf::S32(i), Buf::S32(a)) => {
                 assert_eq!(i.as_slice(), &[5]);
                 assert_eq!(a.as_slice(), &[32]); // 2^5

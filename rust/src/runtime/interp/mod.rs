@@ -16,17 +16,28 @@
 //! convolution ops outside this set and still require a real PJRT
 //! backend; the interpreter reports them as unsupported opcodes.
 //!
+//! Execution is plan-and-execute: [`Plan::compile`] lowers a parsed
+//! module once into a liveness-annotated instruction plan, and
+//! [`Plan::run_entry`] executes it on reference-counted copy-on-write
+//! buffers with in-place elementwise ops, fused reduce/scatter regions
+//! and a packed (optionally sharded) dot. The tree-walking [`Interp`]
+//! remains as the bit-exact reference engine the plan is golden-tested
+//! against (`tests/interp_plan.rs`).
+//!
 //! ```text
-//!   HLO text ──parser──▶ HloModule ──Interp::run_entry──▶ Value tuple
+//!   HLO text ──parser──▶ HloModule ──Plan::compile──▶ Plan ──run_entry──▶ Value tuple
+//!                                  └─Interp::run_entry (reference oracle)─┘
 //! ```
 
 pub mod eval;
 pub mod ops;
 pub mod parser;
+pub mod plan;
 pub mod value;
 
 pub use eval::Interp;
 pub use parser::HloModule;
+pub use plan::Plan;
 pub use value::{ArrayValue, Buf, ElemType, Shape, Value};
 
 #[cfg(test)]

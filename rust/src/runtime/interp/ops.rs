@@ -2,18 +2,24 @@
 //! not need to apply a sub-computation). All index math works on
 //! logical row-major layouts; every loop iterates output positions in
 //! ascending flat order, so results are bit-deterministic regardless of
-//! platform or thread count (the interpreter is single-threaded by
-//! design — see DESIGN.md §4).
+//! platform or thread count (see DESIGN.md §4).
+//!
+//! The `*_inplace` variants at the bottom are the planned executor's
+//! buffer-reuse kernels: they share the exact per-element scalar
+//! helpers with the allocating versions, so an in-place step is
+//! bit-identical to its allocating twin by construction.
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::interp::parser::{BinaryOp, CmpDir, DotDims, GatherDims, UnaryOp};
+use crate::runtime::interp::parser::{BinaryOp, CmpDir, DotDims, GatherDims, ScatterDims, UnaryOp};
 use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, ElemType};
 
 // -------------------------------------------------------- elementwise ---
 
 pub fn unary(op: UnaryOp, a: &ArrayValue) -> Result<ArrayValue> {
-    let buf = match (&a.buf, op) {
+    let buf = match (&*a.buf, op) {
         (Buf::F32(x), UnaryOp::Negate) => Buf::F32(x.iter().map(|&v| -v).collect()),
         (Buf::S32(x), UnaryOp::Negate) => Buf::S32(x.iter().map(|&v| v.wrapping_neg()).collect()),
         (Buf::F32(x), UnaryOp::Exp) => Buf::F32(x.iter().map(|&v| v.exp()).collect()),
@@ -26,11 +32,11 @@ pub fn unary(op: UnaryOp, a: &ArrayValue) -> Result<ArrayValue> {
         }
         (b, o) => bail!("unary {o:?} unsupported for {}", b.ty().name()),
     };
-    Ok(ArrayValue { dims: a.dims.clone(), buf })
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
 }
 
 /// NaN-propagating max/min (XLA semantics; `f32::max` would drop NaN).
-fn fmax(a: f32, b: f32) -> f32 {
+pub(crate) fn fmax(a: f32, b: f32) -> f32 {
     if a.is_nan() || b.is_nan() {
         f32::NAN
     } else if a >= b {
@@ -40,7 +46,7 @@ fn fmax(a: f32, b: f32) -> f32 {
     }
 }
 
-fn fmin(a: f32, b: f32) -> f32 {
+pub(crate) fn fmin(a: f32, b: f32) -> f32 {
     if a.is_nan() || b.is_nan() {
         f32::NAN
     } else if a <= b {
@@ -50,7 +56,7 @@ fn fmin(a: f32, b: f32) -> f32 {
     }
 }
 
-fn f32_bin(op: BinaryOp, a: f32, b: f32) -> Result<f32> {
+pub(crate) fn f32_bin(op: BinaryOp, a: f32, b: f32) -> Result<f32> {
     Ok(match op {
         BinaryOp::Add => a + b,
         BinaryOp::Sub => a - b,
@@ -63,7 +69,7 @@ fn f32_bin(op: BinaryOp, a: f32, b: f32) -> Result<f32> {
     })
 }
 
-fn u32_bin(op: BinaryOp, a: u32, b: u32) -> Result<u32> {
+pub(crate) fn u32_bin(op: BinaryOp, a: u32, b: u32) -> Result<u32> {
     Ok(match op {
         BinaryOp::Add => a.wrapping_add(b),
         BinaryOp::Sub => a.wrapping_sub(b),
@@ -99,7 +105,7 @@ fn u32_bin(op: BinaryOp, a: u32, b: u32) -> Result<u32> {
     })
 }
 
-fn s32_bin(op: BinaryOp, a: i32, b: i32) -> Result<i32> {
+pub(crate) fn s32_bin(op: BinaryOp, a: i32, b: i32) -> Result<i32> {
     Ok(match op {
         BinaryOp::Add => a.wrapping_add(b),
         BinaryOp::Sub => a.wrapping_sub(b),
@@ -134,6 +140,15 @@ fn s32_bin(op: BinaryOp, a: i32, b: i32) -> Result<i32> {
     })
 }
 
+pub(crate) fn pred_bin(op: BinaryOp) -> Result<fn(bool, bool) -> bool> {
+    Ok(match op {
+        BinaryOp::And => |p, q| p & q,
+        BinaryOp::Or => |p, q| p | q,
+        BinaryOp::Xor => |p, q| p ^ q,
+        other => bail!("binary {other:?} unsupported for pred"),
+    })
+}
+
 pub fn binary(op: BinaryOp, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue> {
     ensure!(
         a.dims == b.dims,
@@ -141,7 +156,7 @@ pub fn binary(op: BinaryOp, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue
         a.dims,
         b.dims
     );
-    let buf = match (&a.buf, &b.buf) {
+    let buf = match (&*a.buf, &*b.buf) {
         (Buf::F32(x), Buf::F32(y)) => Buf::F32(
             x.iter().zip(y).map(|(&p, &q)| f32_bin(op, p, q)).collect::<Result<_>>()?,
         ),
@@ -152,17 +167,12 @@ pub fn binary(op: BinaryOp, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue
             x.iter().zip(y).map(|(&p, &q)| s32_bin(op, p, q)).collect::<Result<_>>()?,
         ),
         (Buf::Pred(x), Buf::Pred(y)) => {
-            let f: fn(bool, bool) -> bool = match op {
-                BinaryOp::And => |p, q| p & q,
-                BinaryOp::Or => |p, q| p | q,
-                BinaryOp::Xor => |p, q| p ^ q,
-                other => bail!("binary {other:?} unsupported for pred"),
-            };
+            let f = pred_bin(op)?;
             Buf::Pred(x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect())
         }
         _ => bail!("binary {op:?} operand type mismatch"),
     };
-    Ok(ArrayValue { dims: a.dims.clone(), buf })
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
 }
 
 pub fn compare(dir: CmpDir, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue> {
@@ -180,14 +190,14 @@ pub fn compare(dir: CmpDir, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue
             })
             .collect()
     }
-    let out = match (&a.buf, &b.buf) {
+    let out = match (&*a.buf, &*b.buf) {
         (Buf::F32(x), Buf::F32(y)) => cmp(dir, x, y),
         (Buf::S32(x), Buf::S32(y)) => cmp(dir, x, y),
         (Buf::U32(x), Buf::U32(y)) => cmp(dir, x, y),
         (Buf::Pred(x), Buf::Pred(y)) => cmp(dir, x, y),
         _ => bail!("compare operand type mismatch"),
     };
-    Ok(ArrayValue { dims: a.dims.clone(), buf: Buf::Pred(out) })
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(Buf::Pred(out)) })
 }
 
 pub fn select(p: &ArrayValue, t: &ArrayValue, f: &ArrayValue) -> Result<ArrayValue> {
@@ -198,11 +208,11 @@ pub fn select(p: &ArrayValue, t: &ArrayValue, f: &ArrayValue) -> Result<ArrayVal
     for (i, &take_t) in pred.iter().enumerate() {
         buf.push_from(if take_t { &t.buf } else { &f.buf }, i);
     }
-    Ok(ArrayValue { dims: t.dims.clone(), buf })
+    Ok(ArrayValue { dims: t.dims.clone(), buf: Arc::new(buf) })
 }
 
 pub fn convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
-    let buf = match (&a.buf, to) {
+    let buf = match (&*a.buf, to) {
         (Buf::F32(x), ElemType::F32) => Buf::F32(x.clone()),
         (Buf::F32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v as i32).collect()),
         (Buf::F32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v as u32).collect()),
@@ -226,11 +236,11 @@ pub fn convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
         }
         (Buf::Pred(x), ElemType::Pred) => Buf::Pred(x.clone()),
     };
-    Ok(ArrayValue { dims: a.dims.clone(), buf })
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
 }
 
 pub fn bitcast_convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
-    let buf = match (&a.buf, to) {
+    let buf = match (&*a.buf, to) {
         (Buf::F32(x), ElemType::U32) => Buf::U32(x.iter().map(|&v| v.to_bits()).collect()),
         (Buf::F32(x), ElemType::S32) => Buf::S32(x.iter().map(|&v| v.to_bits() as i32).collect()),
         (Buf::U32(x), ElemType::F32) => Buf::F32(x.iter().map(|&v| f32::from_bits(v)).collect()),
@@ -242,7 +252,122 @@ pub fn bitcast_convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
         (b, t) if b.ty() == t => b.clone(),
         (b, t) => bail!("bitcast-convert {} -> {} unsupported", b.ty().name(), t.name()),
     };
-    Ok(ArrayValue { dims: a.dims.clone(), buf })
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
+}
+
+// ---------------------------------------------------- in-place kernels ---
+
+/// [`unary`] with the result written back into `a`'s storage.
+pub fn unary_inplace(op: UnaryOp, a: &mut Buf) -> Result<()> {
+    match (a, op) {
+        (Buf::F32(x), UnaryOp::Negate) => x.iter_mut().for_each(|v| *v = -*v),
+        (Buf::S32(x), UnaryOp::Negate) => x.iter_mut().for_each(|v| *v = v.wrapping_neg()),
+        (Buf::F32(x), UnaryOp::Exp) => x.iter_mut().for_each(|v| *v = v.exp()),
+        (Buf::F32(x), UnaryOp::Log) => x.iter_mut().for_each(|v| *v = v.ln()),
+        (Buf::F32(x), UnaryOp::Rsqrt) => x.iter_mut().for_each(|v| *v = 1.0 / v.sqrt()),
+        (Buf::F32(x), UnaryOp::Sine) => x.iter_mut().for_each(|v| *v = v.sin()),
+        (Buf::F32(x), UnaryOp::Cosine) => x.iter_mut().for_each(|v| *v = v.cos()),
+        (Buf::F32(x), UnaryOp::RoundNearestEven) => {
+            x.iter_mut().for_each(|v| *v = v.round_ties_even())
+        }
+        (b, o) => bail!("unary {o:?} unsupported for {}", b.ty().name()),
+    }
+    Ok(())
+}
+
+/// [`binary`] with the result written into one operand's buffer.
+/// `dst_is_lhs` says which operand `dst` holds; the (lhs, rhs) value
+/// order — and hence every rounding — matches [`binary`] exactly.
+pub fn binary_inplace(op: BinaryOp, dst_is_lhs: bool, dst: &mut Buf, other: &Buf) -> Result<()> {
+    ensure!(dst.len() == other.len(), "binary {op:?} length mismatch");
+    match (dst, other) {
+        (Buf::F32(d), Buf::F32(o)) => {
+            if dst_is_lhs {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = f32_bin(op, *x, y)?;
+                }
+            } else {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = f32_bin(op, y, *x)?;
+                }
+            }
+        }
+        (Buf::U32(d), Buf::U32(o)) => {
+            if dst_is_lhs {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = u32_bin(op, *x, y)?;
+                }
+            } else {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = u32_bin(op, y, *x)?;
+                }
+            }
+        }
+        (Buf::S32(d), Buf::S32(o)) => {
+            if dst_is_lhs {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = s32_bin(op, *x, y)?;
+                }
+            } else {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = s32_bin(op, y, *x)?;
+                }
+            }
+        }
+        (Buf::Pred(d), Buf::Pred(o)) => {
+            let f = pred_bin(op)?;
+            if dst_is_lhs {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = f(*x, y);
+                }
+            } else {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x = f(y, *x);
+                }
+            }
+        }
+        _ => bail!("binary {op:?} operand type mismatch"),
+    }
+    Ok(())
+}
+
+/// [`select`] with the result written into one branch's buffer
+/// (`dst_is_true`: `dst` holds the on-true values).
+pub fn select_inplace(pred: &[bool], dst_is_true: bool, dst: &mut Buf, other: &Buf) -> Result<()> {
+    ensure!(pred.len() == dst.len() && dst.len() == other.len(), "select shape mismatch");
+    ensure!(dst.ty() == other.ty(), "select branch type mismatch");
+    match (dst, other) {
+        (Buf::F32(d), Buf::F32(o)) => {
+            for (i, &take_t) in pred.iter().enumerate() {
+                if take_t != dst_is_true {
+                    d[i] = o[i];
+                }
+            }
+        }
+        (Buf::S32(d), Buf::S32(o)) => {
+            for (i, &take_t) in pred.iter().enumerate() {
+                if take_t != dst_is_true {
+                    d[i] = o[i];
+                }
+            }
+        }
+        (Buf::U32(d), Buf::U32(o)) => {
+            for (i, &take_t) in pred.iter().enumerate() {
+                if take_t != dst_is_true {
+                    d[i] = o[i];
+                }
+            }
+        }
+        (Buf::Pred(d), Buf::Pred(o)) => {
+            for (i, &take_t) in pred.iter().enumerate() {
+                if take_t != dst_is_true {
+                    d[i] = o[i];
+                }
+            }
+        }
+        _ => bail!("select branch type mismatch"),
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------- shape ops ---
@@ -258,16 +383,20 @@ pub fn iota(ty: ElemType, dims: &[usize], dim: usize) -> Result<ArrayValue> {
         ElemType::U32 => Buf::U32((0..n).map(|f| coord(f) as u32).collect()),
         ElemType::Pred => bail!("iota of pred unsupported"),
     };
-    Ok(ArrayValue { dims: dims.to_vec(), buf })
+    Ok(ArrayValue { dims: dims.to_vec(), buf: Arc::new(buf) })
 }
 
 /// `dimensions[k]` names the output dimension that operand dimension
 /// `k` maps to; all other output dimensions replicate.
 pub fn broadcast(a: &ArrayValue, out_dims: &[usize], mapping: &[usize]) -> Result<ArrayValue> {
     ensure!(mapping.len() == a.dims.len(), "broadcast mapping rank mismatch");
+    let n: usize = out_dims.iter().product();
+    // scalar splat: every output cell replicates the one element
+    if a.dims.is_empty() && n > 0 {
+        return Ok(ArrayValue { dims: out_dims.to_vec(), buf: Arc::new(a.buf.splat(0, n)) });
+    }
     let xst = strides_of(&a.dims);
     let ost = strides_of(out_dims);
-    let n: usize = out_dims.iter().product();
     let mut oi = vec![0usize; out_dims.len()];
     let mut buf = Buf::with_capacity(a.ty(), n);
     for f in 0..n {
@@ -278,7 +407,7 @@ pub fn broadcast(a: &ArrayValue, out_dims: &[usize], mapping: &[usize]) -> Resul
         }
         buf.push_from(&a.buf, xi);
     }
-    Ok(ArrayValue { dims: out_dims.to_vec(), buf })
+    Ok(ArrayValue { dims: out_dims.to_vec(), buf: Arc::new(buf) })
 }
 
 pub fn transpose(a: &ArrayValue, perm: &[usize]) -> Result<ArrayValue> {
@@ -297,7 +426,7 @@ pub fn transpose(a: &ArrayValue, perm: &[usize]) -> Result<ArrayValue> {
         }
         buf.push_from(&a.buf, xi);
     }
-    Ok(ArrayValue { dims: out_dims, buf })
+    Ok(ArrayValue { dims: out_dims, buf: Arc::new(buf) })
 }
 
 pub fn slice(a: &ArrayValue, spec: &[(usize, usize, usize)]) -> Result<ArrayValue> {
@@ -322,7 +451,7 @@ pub fn slice(a: &ArrayValue, spec: &[(usize, usize, usize)]) -> Result<ArrayValu
         }
         buf.push_from(&a.buf, xi);
     }
-    Ok(ArrayValue { dims: out_dims, buf })
+    Ok(ArrayValue { dims: out_dims, buf: Arc::new(buf) })
 }
 
 pub fn concatenate(parts: &[&ArrayValue], dim: usize) -> Result<ArrayValue> {
@@ -345,7 +474,7 @@ pub fn concatenate(parts: &[&ArrayValue], dim: usize) -> Result<ArrayValue> {
             }
         }
     }
-    Ok(ArrayValue { dims: out_dims, buf })
+    Ok(ArrayValue { dims: out_dims, buf: Arc::new(buf) })
 }
 
 // ----------------------------------------------------------------- dot ---
@@ -353,6 +482,11 @@ pub fn concatenate(parts: &[&ArrayValue], dim: usize) -> Result<ArrayValue> {
 /// General dot product: output dims are (batch…, lhs free…, rhs free…).
 /// f32 only (the artifacts never lower integer dots); accumulates in
 /// f32 like XLA's CPU backend.
+///
+/// This is the reference formulation (one flat output loop, index math
+/// per contraction element). The planned executor's packed dot
+/// ([`crate::runtime::interp::plan`]) visits the same accumulation
+/// order and must match it bit-for-bit.
 pub fn dot(lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayValue> {
     let x = lhs.as_f32()?;
     let y = rhs.as_f32()?;
@@ -408,7 +542,7 @@ pub fn dot(lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayVa
         }
         out.push(acc);
     }
-    Ok(ArrayValue { dims: out_dims, buf: Buf::F32(out) })
+    Ok(ArrayValue { dims: out_dims, buf: Arc::new(Buf::F32(out)) })
 }
 
 // -------------------------------------------------------------- gather ---
@@ -474,7 +608,153 @@ pub fn gather(
         }
         buf.push_from(&operand.buf, pi);
     }
-    Ok(ArrayValue { dims: out_dims.to_vec(), buf })
+    Ok(ArrayValue { dims: out_dims.to_vec(), buf: Arc::new(buf) })
+}
+
+// -------------------------------------------------------------- reduce ---
+
+/// Derived index geometry of a reduce over one input shape, shared by
+/// every engine (tree-walk reference, fused and generic planned paths)
+/// so the visit-order-defining math exists exactly once: output cells
+/// ascend in flat order; within a cell, reduced elements ascend in
+/// row-major order over the `dimensions` list.
+pub(crate) struct ReduceGeom {
+    /// input dims NOT reduced, ascending
+    kept: Vec<usize>,
+    /// the reduced dims, in attribute order
+    dims: Vec<usize>,
+    pub out_dims: Vec<usize>,
+    /// reduced elements per output cell
+    pub rn: usize,
+    /// output cells
+    pub n: usize,
+    rank: usize,
+    xst: Vec<usize>,
+    ost: Vec<usize>,
+    rst: Vec<usize>,
+}
+
+impl ReduceGeom {
+    pub fn new(x_dims: &[usize], dims: &[usize]) -> ReduceGeom {
+        let kept: Vec<usize> = (0..x_dims.len()).filter(|d| !dims.contains(d)).collect();
+        let out_dims: Vec<usize> = kept.iter().map(|&d| x_dims[d]).collect();
+        let red_dims: Vec<usize> = dims.iter().map(|&d| x_dims[d]).collect();
+        ReduceGeom {
+            xst: strides_of(x_dims),
+            ost: strides_of(&out_dims),
+            rst: strides_of(&red_dims),
+            rn: red_dims.iter().product(),
+            n: out_dims.iter().product(),
+            rank: x_dims.len(),
+            kept,
+            dims: dims.to_vec(),
+            out_dims,
+        }
+    }
+
+    /// Scratch coordinate buffers for `cell_base` / `elem_index`.
+    pub fn scratch(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![0; self.out_dims.len()], vec![0; self.dims.len()])
+    }
+
+    /// Flat input base index of output cell `f`.
+    pub fn cell_base(&self, f: usize, oi: &mut [usize]) -> usize {
+        unflatten(f, &self.ost, oi);
+        let mut base = 0;
+        for (k, &d) in self.kept.iter().enumerate() {
+            base += oi[k] * self.xst[d];
+        }
+        base
+    }
+
+    /// Flat input index of reduced element `rf` within a cell.
+    pub fn elem_index(&self, base: usize, rf: usize, ri: &mut [usize]) -> usize {
+        unflatten(rf, &self.rst, ri);
+        let mut xi = base;
+        for (k, &d) in self.dims.iter().enumerate() {
+            xi += ri[k] * self.xst[d];
+        }
+        xi
+    }
+
+    /// Reduced dims are exactly the trailing input dims in ascending
+    /// order ⇒ every cell folds one contiguous run `[f·rn, (f+1)·rn)`.
+    pub fn contiguous(&self) -> bool {
+        (0..self.dims.len()).all(|t| self.dims[t] == self.rank - self.dims.len() + t)
+    }
+}
+
+// ------------------------------------------------------------- scatter ---
+
+/// StableHLO scatter index geometry, shared by every engine (the
+/// tree-walking reference and the planned fused/generic paths) so the
+/// batching-dims math exists exactly once: computes each update's full
+/// operand index, drops out-of-bounds updates (XLA semantics), and
+/// calls `apply(operand_index, update_index)` for the survivors in
+/// ascending update order.
+pub(crate) fn scatter_walk(
+    operand_dims: &[usize],
+    indices: &ArrayValue,
+    updates: &ArrayValue,
+    s: &ScatterDims,
+    mut apply: impl FnMut(usize, usize) -> Result<()>,
+) -> Result<()> {
+    let orank = operand_dims.len();
+    let sdims: Vec<usize> =
+        (0..indices.dims.len()).filter(|&d| d != s.index_vector_dim).collect();
+    let scatter_u: Vec<usize> = (0..updates.dims.len())
+        .filter(|d| !s.update_window_dims.contains(d))
+        .collect();
+    let window_operand: Vec<usize> = (0..orank)
+        .filter(|d| {
+            !s.inserted_window_dims.contains(d) && !s.input_batching_dims.contains(d)
+        })
+        .collect();
+    ensure!(
+        window_operand.len() == s.update_window_dims.len(),
+        "scatter window dims arity mismatch"
+    );
+    ensure!(scatter_u.len() == sdims.len(), "scatter batch rank mismatch");
+
+    let pst = strides_of(operand_dims);
+    let ust = strides_of(&updates.dims);
+    let sst = strides_of(&indices.dims);
+    let n = updates.numel();
+    let mut ui = vec![0usize; updates.dims.len()];
+    let mut full = vec![0i64; orank];
+    for f in 0..n {
+        unflatten(f, &ust, &mut ui);
+        let mut sbase = 0;
+        for (j, &sd) in sdims.iter().enumerate() {
+            sbase += ui[scatter_u[j]] * sst[sd];
+        }
+        full.iter_mut().for_each(|v| *v = 0);
+        for (k, &od) in s.scatter_dims_to_operand_dims.iter().enumerate() {
+            let si = if s.index_vector_dim < indices.dims.len() {
+                sbase + k * sst[s.index_vector_dim]
+            } else {
+                sbase
+            };
+            full[od] = indices.buf.index_at(si)?;
+        }
+        for (&od, &sd) in s.input_batching_dims.iter().zip(&s.scatter_indices_batching_dims) {
+            let j = sdims.iter().position(|&x| x == sd).unwrap();
+            full[od] = ui[scatter_u[j]] as i64;
+        }
+        for (k, &d) in window_operand.iter().enumerate() {
+            full[d] += ui[s.update_window_dims[k]] as i64;
+        }
+        let in_bounds = full
+            .iter()
+            .zip(operand_dims)
+            .all(|(&v, &d)| v >= 0 && (v as usize) < d);
+        if !in_bounds {
+            continue; // out-of-bounds updates are discarded
+        }
+        let pi: usize = full.iter().zip(&pst).map(|(&v, &st)| v as usize * st).sum();
+        apply(pi, f)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -508,19 +788,51 @@ mod tests {
     }
 
     #[test]
+    fn inplace_matches_allocating() {
+        let a = f(&[4], vec![1.0, -2.0, 4.0, 0.25]);
+        let b = f(&[4], vec![0.5, 2.0, -1.0, 3.0]);
+        for op in [BinaryOp::Add, BinaryOp::Sub, BinaryOp::Div, BinaryOp::Max] {
+            let want = binary(op, &a, &b).unwrap();
+            // dst = lhs
+            let mut d = (*a.buf).clone();
+            binary_inplace(op, true, &mut d, &b.buf).unwrap();
+            assert_eq!(d, *want.buf, "{op:?} lhs");
+            // dst = rhs
+            let mut d = (*b.buf).clone();
+            binary_inplace(op, false, &mut d, &a.buf).unwrap();
+            assert_eq!(d, *want.buf, "{op:?} rhs");
+        }
+        for op in [UnaryOp::Negate, UnaryOp::Exp, UnaryOp::Rsqrt] {
+            let want = unary(op, &a).unwrap();
+            let mut d = (*a.buf).clone();
+            unary_inplace(op, &mut d).unwrap();
+            assert_eq!(d, *want.buf, "{op:?}");
+        }
+        let pred = [true, false, false, true];
+        let p = ArrayValue::new(vec![4], Buf::Pred(pred.to_vec())).unwrap();
+        let want = select(&p, &a, &b).unwrap();
+        let mut d = (*a.buf).clone();
+        select_inplace(&pred, true, &mut d, &b.buf).unwrap();
+        assert_eq!(d, *want.buf);
+        let mut d = (*b.buf).clone();
+        select_inplace(&pred, false, &mut d, &a.buf).unwrap();
+        assert_eq!(d, *want.buf);
+    }
+
+    #[test]
     fn u32_wrapping_and_shifts() {
         let a = ArrayValue::new(vec![2], Buf::U32(vec![u32::MAX, 0x89abcdef])).unwrap();
         let b = ArrayValue::new(vec![2], Buf::U32(vec![1, 13])).unwrap();
         let add = binary(BinaryOp::Add, &a, &b).unwrap();
-        assert_eq!(add.buf, Buf::U32(vec![0, 0x89abcdef + 13]));
+        assert_eq!(*add.buf, Buf::U32(vec![0, 0x89abcdef + 13]));
         let shl = binary(BinaryOp::Shl, &a, &b).unwrap();
-        assert_eq!(shl.buf, Buf::U32(vec![u32::MAX << 1, 0x89abcdef << 13]));
+        assert_eq!(*shl.buf, Buf::U32(vec![u32::MAX << 1, 0x89abcdef << 13]));
         let shr = binary(BinaryOp::ShrLogical, &a, &b).unwrap();
-        assert_eq!(shr.buf, Buf::U32(vec![u32::MAX >> 1, 0x89abcdef >> 13]));
+        assert_eq!(*shr.buf, Buf::U32(vec![u32::MAX >> 1, 0x89abcdef >> 13]));
         // shift amounts >= 32 produce 0 (jax's threefry fold-in relies on it)
         let big = ArrayValue::new(vec![2], Buf::U32(vec![32, 40])).unwrap();
         let z = binary(BinaryOp::ShrLogical, &a, &big).unwrap();
-        assert_eq!(z.buf, Buf::U32(vec![0, 0]));
+        assert_eq!(*z.buf, Buf::U32(vec![0, 0]));
     }
 
     #[test]
@@ -544,13 +856,13 @@ mod tests {
     fn convert_and_bitcast() {
         let a = f(&[2], vec![1.9, -2.9]);
         let s = convert(&a, ElemType::S32).unwrap(); // truncation toward zero
-        assert_eq!(s.buf, Buf::S32(vec![1, -2]));
+        assert_eq!(*s.buf, Buf::S32(vec![1, -2]));
         let neg = ArrayValue::new(vec![1], Buf::S32(vec![-1])).unwrap();
         let u = convert(&neg, ElemType::U32).unwrap(); // wraps mod 2^32
-        assert_eq!(u.buf, Buf::U32(vec![u32::MAX]));
+        assert_eq!(*u.buf, Buf::U32(vec![u32::MAX]));
         let one = f(&[1], vec![1.0]);
         let bits = bitcast_convert(&one, ElemType::U32).unwrap();
-        assert_eq!(bits.buf, Buf::U32(vec![0x3f80_0000]));
+        assert_eq!(*bits.buf, Buf::U32(vec![0x3f80_0000]));
         let back = bitcast_convert(&bits, ElemType::F32).unwrap();
         assert_eq!(back.as_f32().unwrap(), &[1.0]);
     }
@@ -558,9 +870,9 @@ mod tests {
     #[test]
     fn iota_multidim() {
         let a = iota(ElemType::S32, &[2, 3], 0).unwrap();
-        assert_eq!(a.buf, Buf::S32(vec![0, 0, 0, 1, 1, 1]));
+        assert_eq!(*a.buf, Buf::S32(vec![0, 0, 0, 1, 1, 1]));
         let b = iota(ElemType::S32, &[2, 3], 1).unwrap();
-        assert_eq!(b.buf, Buf::S32(vec![0, 1, 2, 0, 1, 2]));
+        assert_eq!(*b.buf, Buf::S32(vec![0, 1, 2, 0, 1, 2]));
     }
 
     #[test]

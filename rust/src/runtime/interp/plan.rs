@@ -1,0 +1,1100 @@
+//! Plan-and-execute engine: lower a parsed [`HloModule`] once into a
+//! typed instruction plan with last-use liveness, then execute it many
+//! times on reference-counted, copy-on-write buffers.
+//!
+//! What the plan buys over the tree-walking reference evaluator
+//! ([`crate::runtime::interp::eval`]):
+//!
+//! * **Liveness / in-place ops.** Each register is dropped at its last
+//!   use, and elementwise steps whose operand dies there mutate that
+//!   buffer in place via [`ArrayValue::buf_mut`] (`Arc::make_mut`):
+//!   uniquely-owned buffers are reused, shared ones are cloned first —
+//!   copy-on-write, so a live value is never aliased. `while` state,
+//!   tuple plumbing and `call` arguments *move* instead of cloning.
+//! * **Fused regions.** `reduce`/`scatter` regions that are a single
+//!   scalar binary op (the overwhelmingly common case: add/max/min/and)
+//!   fold inline instead of invoking the sub-computation per element.
+//! * **Packed dot.** The general dot packs both operands into
+//!   contiguous `[batch][free][k]` panels and accumulates over
+//!   contiguous rows; large outputs shard across `thread::scope`
+//!   workers.
+//!
+//! **Determinism contract (DESIGN.md §4).** Every kernel visits the
+//! same elements in the same order as the reference evaluator and uses
+//! the identical per-element scalar helpers, so planned execution is
+//! bit-identical to the tree walk — and, because each output element is
+//! computed independently by the same scalar code regardless of
+//! sharding, bit-identical across thread counts (the same contract as
+//! `quant::assign`). Golden-tested on the `lm_tiny` fixture in
+//! `tests/interp_plan.rs`.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::interp::ops::{self, f32_bin, pred_bin, s32_bin, u32_bin};
+use crate::runtime::interp::parser::{
+    BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims,
+};
+use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, Shape, Value};
+
+/// Output-element count above which the packed dot shards its output
+/// rows across worker threads (below it, spawn overhead dominates).
+const DOT_PAR_MIN: usize = 4096;
+
+/// Fused lowering of a `reduce`/`scatter` region, decided at plan time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Fused {
+    /// Run the sub-computation per element (general fallback).
+    None,
+    /// Region is a single scalar binary op; `acc_first` says whether it
+    /// computes `op(acc, elem)` (else `op(elem, acc)`).
+    Bin { op: BinaryOp, acc_first: bool },
+}
+
+/// One computation lowered for planned execution.
+#[derive(Debug)]
+struct CompPlan {
+    name: String,
+    instrs: Vec<Instr>,
+    root: usize,
+    n_params: usize,
+    /// Registers whose last use is step `i` (dropped after it runs).
+    free_after: Vec<Vec<usize>>,
+    /// Per step, per operand: move the register out instead of cloning
+    /// (true iff this is the operand's unique, final use).
+    take: Vec<Vec<bool>>,
+    fused: Vec<Fused>,
+}
+
+/// A compiled module: liveness-annotated instruction plans for every
+/// computation, ready for repeated (and batch-sharded) execution.
+#[derive(Debug)]
+pub struct Plan {
+    comps: Vec<CompPlan>,
+    entry: usize,
+    entry_params: Vec<Option<Shape>>,
+}
+
+impl Plan {
+    /// Lower a parsed module: compute last-use liveness and move flags
+    /// per computation and classify fusable reduce/scatter regions.
+    pub fn compile(m: &HloModule) -> Plan {
+        let comps = m
+            .comps
+            .iter()
+            .map(|c| {
+                let (free_after, take) = analyze(c);
+                let fused = c.instrs.iter().map(|ins| classify(m, ins)).collect();
+                CompPlan {
+                    name: c.name.clone(),
+                    instrs: c.instrs.clone(),
+                    root: c.root,
+                    n_params: c.n_params,
+                    free_after,
+                    take,
+                    fused,
+                }
+            })
+            .collect();
+        let e = &m.comps[m.entry];
+        let mut entry_params = vec![None; e.n_params];
+        for ins in &e.instrs {
+            if let Op::Parameter(i) = &ins.op {
+                entry_params[*i] = Some(ins.shape.clone());
+            }
+        }
+        Plan { comps, entry: m.entry, entry_params }
+    }
+
+    /// Declared shape of ENTRY parameter `i` (None if the parameter
+    /// never appears in the entry computation).
+    pub fn entry_param_shape(&self, i: usize) -> Option<&Shape> {
+        self.entry_params.get(i).and_then(|s| s.as_ref())
+    }
+
+    pub fn n_entry_params(&self) -> usize {
+        self.entry_params.len()
+    }
+
+    /// Run the ENTRY computation. `threads` bounds the worker count of
+    /// intra-op sharding (1 = fully serial); any value produces
+    /// bit-identical results.
+    pub fn run_entry(&self, args: Vec<Value>, threads: usize) -> Result<Value> {
+        Executor { plan: self, threads: threads.max(1) }.run(self.entry, args)
+    }
+}
+
+// ------------------------------------------------------------ analysis ---
+
+fn analyze(c: &Computation) -> (Vec<Vec<usize>>, Vec<Vec<bool>>) {
+    let n = c.instrs.len();
+    let mut last = vec![usize::MAX; n];
+    for (si, ins) in c.instrs.iter().enumerate() {
+        for &o in &ins.operands {
+            last[o] = si;
+        }
+    }
+    let mut free_after: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for r in 0..n {
+        if r == c.root {
+            continue; // the root must survive to be returned
+        }
+        let l = if last[r] == usize::MAX { r } else { last[r] };
+        free_after[l].push(r);
+    }
+    let take = c
+        .instrs
+        .iter()
+        .enumerate()
+        .map(|(si, ins)| {
+            ins.operands
+                .iter()
+                .map(|&o| {
+                    o != c.root
+                        && last[o] == si
+                        && ins.operands.iter().filter(|&&x| x == o).count() == 1
+                })
+                .collect()
+        })
+        .collect();
+    (free_after, take)
+}
+
+/// Recognize a region that is a single scalar binary op over its two
+/// parameters: `{ p0, p1, ROOT bin(p0, p1) }` (either operand order).
+fn match_bin_region(c: &Computation) -> Option<(BinaryOp, bool)> {
+    if c.instrs.len() != 3 || c.n_params != 2 {
+        return None;
+    }
+    let mut p0 = None;
+    let mut p1 = None;
+    for (i, ins) in c.instrs.iter().enumerate() {
+        match ins.op {
+            Op::Parameter(0) => p0 = Some(i),
+            Op::Parameter(1) => p1 = Some(i),
+            _ => {}
+        }
+    }
+    let (p0, p1) = (p0?, p1?);
+    let root = &c.instrs[c.root];
+    if let Op::Binary(op) = root.op {
+        if root.operands == [p0, p1] {
+            return Some((op, true));
+        }
+        if root.operands == [p1, p0] {
+            return Some((op, false));
+        }
+    }
+    None
+}
+
+fn classify(m: &HloModule, ins: &Instr) -> Fused {
+    let target = match &ins.op {
+        Op::Reduce { comp, .. }
+            if ins.operands.len() == 2 && matches!(ins.shape, Shape::Array { .. }) =>
+        {
+            *comp
+        }
+        Op::Scatter { comp, .. } if ins.operands.len() == 3 => *comp,
+        _ => return Fused::None,
+    };
+    match match_bin_region(&m.comps[target]) {
+        Some((op, acc_first)) => Fused::Bin { op, acc_first },
+        None => Fused::None,
+    }
+}
+
+// ------------------------------------------------------------ executor ---
+
+struct Executor<'p> {
+    plan: &'p Plan,
+    threads: usize,
+}
+
+impl<'p> Executor<'p> {
+    fn run(&self, ci: usize, args: Vec<Value>) -> Result<Value> {
+        let comp = &self.plan.comps[ci];
+        ensure!(
+            args.len() == comp.n_params,
+            "computation '{}' takes {} parameters, got {}",
+            comp.name,
+            comp.n_params,
+            args.len()
+        );
+        let mut args: Vec<Option<Value>> = args.into_iter().map(Some).collect();
+        let mut regs: Vec<Option<Value>> = (0..comp.instrs.len()).map(|_| None).collect();
+        for si in 0..comp.instrs.len() {
+            let v = self
+                .step(comp, si, &mut regs, &mut args)
+                .with_context(|| format!("executing {}::{}", comp.name, comp.instrs[si].name))?;
+            regs[si] = Some(v);
+            for &r in &comp.free_after[si] {
+                regs[r] = None;
+            }
+        }
+        Ok(regs[comp.root].take().expect("root register computed"))
+    }
+
+    /// Operand `k` of step `si` by value: moved out of its register
+    /// when this is its unique final use, cloned (O(1), Arc) otherwise.
+    fn fetch(&self, comp: &CompPlan, si: usize, k: usize, regs: &mut [Option<Value>]) -> Value {
+        let o = comp.instrs[si].operands[k];
+        if comp.take[si][k] {
+            regs[o].take().expect("operand register computed")
+        } else {
+            regs[o].clone().expect("operand register computed")
+        }
+    }
+
+    /// Operand `k` of step `si` by reference (must be an array).
+    fn arr<'a>(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        k: usize,
+        regs: &'a [Option<Value>],
+    ) -> Result<&'a ArrayValue> {
+        let o = comp.instrs[si].operands[k];
+        regs[o].as_ref().expect("operand register computed").array()
+    }
+
+    fn step(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        regs: &mut Vec<Option<Value>>,
+        args: &mut [Option<Value>],
+    ) -> Result<Value> {
+        let ins = &comp.instrs[si];
+        Ok(match &ins.op {
+            Op::Parameter(i) => args
+                .get_mut(*i)
+                .and_then(|a| a.take())
+                .with_context(|| format!("parameter {i} unavailable"))?,
+            Op::Constant(c) => Value::Array(c.clone()),
+            Op::Tuple => {
+                let mut vs = Vec::with_capacity(ins.operands.len());
+                for k in 0..ins.operands.len() {
+                    vs.push(self.fetch(comp, si, k, regs));
+                }
+                Value::Tuple(vs)
+            }
+            Op::GetTupleElement(i) => {
+                if comp.take[si][0] {
+                    match self.fetch(comp, si, 0, regs) {
+                        Value::Tuple(mut vs) => {
+                            ensure!(*i < vs.len(), "tuple index {i} out of range");
+                            vs.swap_remove(*i)
+                        }
+                        Value::Array(_) => bail!("expected tuple value, got array"),
+                    }
+                } else {
+                    let t = regs[ins.operands[0]].as_ref().expect("operand").tuple()?;
+                    ensure!(*i < t.len(), "tuple index {i} out of range");
+                    t[*i].clone()
+                }
+            }
+            Op::Call { comp: target } => {
+                let mut cargs = Vec::with_capacity(ins.operands.len());
+                for k in 0..ins.operands.len() {
+                    cargs.push(self.fetch(comp, si, k, regs));
+                }
+                self.run(*target, cargs)?
+            }
+            Op::While { cond, body } => {
+                let mut state = self.fetch(comp, si, 0, regs);
+                loop {
+                    let p = self.run(*cond, vec![state.clone()])?;
+                    if !p.pred_scalar()? {
+                        break;
+                    }
+                    state = self.run(*body, vec![state])?;
+                }
+                state
+            }
+            Op::Iota { dim } => {
+                let (ty, dims) = ins.shape.array()?;
+                Value::Array(ops::iota(ty, dims, *dim)?)
+            }
+            Op::Broadcast { dims } => {
+                let (_, out_dims) = ins.shape.array()?;
+                Value::Array(ops::broadcast(self.arr(comp, si, 0, regs)?, out_dims, dims)?)
+            }
+            Op::Reshape => {
+                let (_, out_dims) = ins.shape.array()?;
+                let a = self.fetch(comp, si, 0, regs).into_array()?;
+                ensure!(
+                    a.numel() == out_dims.iter().product::<usize>(),
+                    "reshape element count mismatch"
+                );
+                // O(1): same storage, new logical dims
+                Value::Array(ArrayValue { dims: out_dims.to_vec(), buf: a.buf })
+            }
+            Op::Transpose { perm } => {
+                Value::Array(ops::transpose(self.arr(comp, si, 0, regs)?, perm)?)
+            }
+            Op::Slice { spec } => Value::Array(ops::slice(self.arr(comp, si, 0, regs)?, spec)?),
+            Op::Concatenate { dim } => {
+                let parts: Vec<&ArrayValue> = ins
+                    .operands
+                    .iter()
+                    .map(|&o| regs[o].as_ref().expect("operand").array())
+                    .collect::<Result<_>>()?;
+                Value::Array(ops::concatenate(&parts, *dim)?)
+            }
+            Op::Select => {
+                let (t1, t2) = (comp.take[si][1], comp.take[si][2]);
+                if t1 || t2 {
+                    let (dst_is_true, dst_k, src_k) =
+                        if t1 { (true, 1, 2) } else { (false, 2, 1) };
+                    let mut dst = self.fetch(comp, si, dst_k, regs).into_array()?;
+                    let p = self.arr(comp, si, 0, regs)?;
+                    let src = self.arr(comp, si, src_k, regs)?;
+                    ensure!(
+                        p.dims == dst.dims && dst.dims == src.dims,
+                        "select shape mismatch"
+                    );
+                    let pred = p.as_pred()?;
+                    ops::select_inplace(pred, dst_is_true, dst.buf_mut(), &src.buf)?;
+                    Value::Array(dst)
+                } else {
+                    Value::Array(ops::select(
+                        self.arr(comp, si, 0, regs)?,
+                        self.arr(comp, si, 1, regs)?,
+                        self.arr(comp, si, 2, regs)?,
+                    )?)
+                }
+            }
+            Op::Compare { dir } => Value::Array(ops::compare(
+                *dir,
+                self.arr(comp, si, 0, regs)?,
+                self.arr(comp, si, 1, regs)?,
+            )?),
+            Op::Convert => {
+                let (ty, _) = ins.shape.array()?;
+                let v = self.fetch(comp, si, 0, regs);
+                let a = v.into_array()?;
+                if a.ty() == ty {
+                    Value::Array(a) // no-op convert: share storage (CoW)
+                } else {
+                    Value::Array(ops::convert(&a, ty)?)
+                }
+            }
+            Op::BitcastConvert => {
+                let (ty, _) = ins.shape.array()?;
+                let v = self.fetch(comp, si, 0, regs);
+                let a = v.into_array()?;
+                if a.ty() == ty {
+                    Value::Array(a)
+                } else {
+                    Value::Array(ops::bitcast_convert(&a, ty)?)
+                }
+            }
+            Op::Unary(u) => {
+                if comp.take[si][0] {
+                    let mut a = self.fetch(comp, si, 0, regs).into_array()?;
+                    ops::unary_inplace(*u, a.buf_mut())?;
+                    Value::Array(a)
+                } else {
+                    Value::Array(ops::unary(*u, self.arr(comp, si, 0, regs)?)?)
+                }
+            }
+            Op::Binary(b) => {
+                let (t0, t1) = (comp.take[si][0], comp.take[si][1]);
+                if t0 || t1 {
+                    let (dst_is_lhs, dst_k, src_k) =
+                        if t0 { (true, 0, 1) } else { (false, 1, 0) };
+                    let mut dst = self.fetch(comp, si, dst_k, regs).into_array()?;
+                    let src = self.arr(comp, si, src_k, regs)?;
+                    ensure!(
+                        dst.dims == src.dims,
+                        "binary {b:?} shape mismatch {:?} vs {:?} \
+                         (HLO has no implicit broadcast)",
+                        dst.dims,
+                        src.dims
+                    );
+                    ops::binary_inplace(*b, dst_is_lhs, dst.buf_mut(), &src.buf)?;
+                    Value::Array(dst)
+                } else {
+                    Value::Array(ops::binary(
+                        *b,
+                        self.arr(comp, si, 0, regs)?,
+                        self.arr(comp, si, 1, regs)?,
+                    )?)
+                }
+            }
+            Op::Dot(nums) => {
+                let lhs = self.arr(comp, si, 0, regs)?;
+                let rhs = self.arr(comp, si, 1, regs)?;
+                Value::Array(self.dot_packed(lhs, rhs, nums)?)
+            }
+            Op::Gather(g) => {
+                let (_, out_dims) = ins.shape.array()?;
+                Value::Array(ops::gather(
+                    self.arr(comp, si, 0, regs)?,
+                    self.arr(comp, si, 1, regs)?,
+                    g,
+                    out_dims,
+                )?)
+            }
+            Op::Reduce { dims, comp: target } => match comp.fused[si] {
+                Fused::Bin { op, acc_first } => self.reduce_fused(ins, regs, op, acc_first)?,
+                Fused::None => self.reduce_generic(ins, regs, dims, *target)?,
+            },
+            Op::Scatter { dims, comp: target } => {
+                ensure!(ins.operands.len() == 3, "variadic scatter unsupported");
+                match comp.fused[si] {
+                    Fused::Bin { op, acc_first } => {
+                        self.scatter_fused(comp, si, regs, dims, op, acc_first)?
+                    }
+                    Fused::None => self.scatter_generic(comp, si, regs, dims, *target)?,
+                }
+            }
+        })
+    }
+
+    // ------------------------------------------------------------ dot ---
+
+    /// General dot via packed contiguous panels. Accumulates each
+    /// output element over ascending contraction index with a single
+    /// f32 accumulator — the identical operation order to [`ops::dot`],
+    /// so results match it bit-for-bit.
+    fn dot_packed(&self, lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayValue> {
+        let x = lhs.as_f32()?;
+        let y = rhs.as_f32()?;
+        ensure!(nums.lhs_batch.len() == nums.rhs_batch.len(), "dot batch arity mismatch");
+        ensure!(
+            nums.lhs_contracting.len() == nums.rhs_contracting.len(),
+            "dot contracting arity mismatch"
+        );
+        let lfree: Vec<usize> = (0..lhs.dims.len())
+            .filter(|d| !nums.lhs_batch.contains(d) && !nums.lhs_contracting.contains(d))
+            .collect();
+        let rfree: Vec<usize> = (0..rhs.dims.len())
+            .filter(|d| !nums.rhs_batch.contains(d) && !nums.rhs_contracting.contains(d))
+            .collect();
+        let mut out_dims: Vec<usize> = nums.lhs_batch.iter().map(|&d| lhs.dims[d]).collect();
+        out_dims.extend(lfree.iter().map(|&d| lhs.dims[d]));
+        out_dims.extend(rfree.iter().map(|&d| rhs.dims[d]));
+        for (t, &d) in nums.lhs_batch.iter().enumerate() {
+            ensure!(
+                rhs.dims[nums.rhs_batch[t]] == lhs.dims[d],
+                "dot batch dim mismatch"
+            );
+        }
+        let kdims: Vec<usize> = nums.lhs_contracting.iter().map(|&d| lhs.dims[d]).collect();
+        for (i, &d) in nums.rhs_contracting.iter().enumerate() {
+            ensure!(rhs.dims[d] == kdims[i], "dot contracting dim mismatch");
+        }
+        let bn: usize = nums.lhs_batch.iter().map(|&d| lhs.dims[d]).product();
+        let mn: usize = lfree.iter().map(|&d| lhs.dims[d]).product();
+        let nn: usize = rfree.iter().map(|&d| rhs.dims[d]).product();
+        let total = bn * mn * nn;
+        if total == 0 {
+            return ArrayValue::new(out_dims, Buf::F32(Vec::new()));
+        }
+        let kn_raw: usize = kdims.iter().product();
+        if !kdims.is_empty() && kn_raw == 0 {
+            // empty contraction: every output is the empty sum
+            return ArrayValue::new(out_dims, Buf::F32(vec![0.0; total]));
+        }
+        let kn = kn_raw.max(1);
+
+        let lp = pack_f32(x, &lhs.dims, &nums.lhs_batch, &lfree, &nums.lhs_contracting);
+        let rp = pack_f32(y, &rhs.dims, &nums.rhs_batch, &rfree, &nums.rhs_contracting);
+        let rows = bn * mn;
+        let mut out = vec![0.0f32; total];
+        let workers =
+            if total >= DOT_PAR_MIN && self.threads > 1 { self.threads.min(rows) } else { 1 };
+        if workers <= 1 {
+            dot_rows(&lp, &rp, mn, nn, kn, 0, &mut out);
+        } else {
+            let chunk_rows = rows.div_ceil(workers);
+            let (lp, rp) = (&lp, &rp);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(chunk_rows * nn).enumerate() {
+                    s.spawn(move || dot_rows(lp, rp, mn, nn, kn, ci * chunk_rows, chunk));
+                }
+            });
+        }
+        ArrayValue::new(out_dims, Buf::F32(out))
+    }
+
+    // --------------------------------------------------------- reduce ---
+
+    /// Fused single-input reduce whose region is one scalar binary op.
+    /// Identical visit order to the generic path: output cells in
+    /// ascending flat order, reduced elements in ascending row-major
+    /// order within each cell.
+    fn reduce_fused(
+        &self,
+        ins: &Instr,
+        regs: &[Option<Value>],
+        op: BinaryOp,
+        acc_first: bool,
+    ) -> Result<Value> {
+        let x = regs[ins.operands[0]].as_ref().expect("operand").array()?;
+        let init = regs[ins.operands[1]].as_ref().expect("operand").array()?;
+        ensure!(init.numel() == 1, "reduce init must be scalar");
+        let dims = match &ins.op {
+            Op::Reduce { dims, .. } => dims,
+            _ => unreachable!("reduce_fused on non-reduce"),
+        };
+        let g = ops::ReduceGeom::new(&x.dims, dims);
+        let contiguous = g.contiguous();
+        let (mut oi, mut ri) = g.scratch();
+
+        macro_rules! fold {
+            ($xs:ident, $is:ident, $step:expr, $variant:expr) => {{
+                let i0 = $is[0];
+                let mut out = Vec::with_capacity(g.n);
+                if contiguous {
+                    for f in 0..g.n {
+                        let mut acc = i0;
+                        for &v in &$xs[f * g.rn..(f + 1) * g.rn] {
+                            acc = $step(acc, v)?;
+                        }
+                        out.push(acc);
+                    }
+                } else {
+                    for f in 0..g.n {
+                        let base = g.cell_base(f, &mut oi);
+                        let mut acc = i0;
+                        for rf in 0..g.rn {
+                            let xi = g.elem_index(base, rf, &mut ri);
+                            acc = $step(acc, $xs[xi])?;
+                        }
+                        out.push(acc);
+                    }
+                }
+                $variant(out)
+            }};
+        }
+        let buf = match (&*x.buf, &*init.buf) {
+            (Buf::F32(xs), Buf::F32(is)) => {
+                let step =
+                    |a, v| if acc_first { f32_bin(op, a, v) } else { f32_bin(op, v, a) };
+                fold!(xs, is, step, Buf::F32)
+            }
+            (Buf::S32(xs), Buf::S32(is)) => {
+                let step =
+                    |a, v| if acc_first { s32_bin(op, a, v) } else { s32_bin(op, v, a) };
+                fold!(xs, is, step, Buf::S32)
+            }
+            (Buf::U32(xs), Buf::U32(is)) => {
+                let step =
+                    |a, v| if acc_first { u32_bin(op, a, v) } else { u32_bin(op, v, a) };
+                fold!(xs, is, step, Buf::U32)
+            }
+            (Buf::Pred(xs), Buf::Pred(is)) => {
+                let f = pred_bin(op)?;
+                let step = |a, v| -> Result<bool> {
+                    Ok(if acc_first { f(a, v) } else { f(v, a) })
+                };
+                fold!(xs, is, step, Buf::Pred)
+            }
+            _ => bail!("reduce input/init type mismatch"),
+        };
+        Ok(Value::Array(ArrayValue::new(g.out_dims, buf)?))
+    }
+
+    /// (Variadic) reduce fallback: invoke the region per fold step.
+    /// Mirrors the reference evaluator's visit order exactly.
+    fn reduce_generic(
+        &self,
+        ins: &Instr,
+        regs: &[Option<Value>],
+        dims: &[usize],
+        target: usize,
+    ) -> Result<Value> {
+        let nops = ins.operands.len();
+        ensure!(nops >= 2 && nops % 2 == 0, "reduce needs N inputs + N inits");
+        let nin = nops / 2;
+        let inputs: Vec<&ArrayValue> = ins.operands[..nin]
+            .iter()
+            .map(|&o| regs[o].as_ref().expect("operand").array())
+            .collect::<Result<_>>()?;
+        let inits: Vec<&ArrayValue> = ins.operands[nin..]
+            .iter()
+            .map(|&o| regs[o].as_ref().expect("operand").array())
+            .collect::<Result<_>>()?;
+        let x0 = inputs[0];
+        for x in &inputs {
+            ensure!(x.dims == x0.dims, "reduce input shape mismatch");
+        }
+        let g = ops::ReduceGeom::new(&x0.dims, dims);
+
+        let mut outs: Vec<Buf> = inits.iter().map(|a| Buf::with_capacity(a.ty(), g.n)).collect();
+        let (mut oi, mut ri) = g.scratch();
+        for f in 0..g.n {
+            let base = g.cell_base(f, &mut oi);
+            let mut accs: Vec<Value> =
+                inits.iter().map(|a| Value::Array(a.scalar_at(0))).collect();
+            for rf in 0..g.rn {
+                let xi = g.elem_index(base, rf, &mut ri);
+                let mut cargs = accs;
+                for x in &inputs {
+                    cargs.push(Value::Array(x.scalar_at(xi)));
+                }
+                let res = self.run(target, cargs)?;
+                accs = match res {
+                    Value::Tuple(vs) => vs,
+                    v => vec![v],
+                };
+                ensure!(accs.len() == nin, "reduce region arity mismatch");
+            }
+            for (o, acc) in outs.iter_mut().zip(&accs) {
+                o.push_from(&acc.array()?.buf, 0);
+            }
+        }
+        let mut results: Vec<Value> = outs
+            .into_iter()
+            .map(|buf| ArrayValue::new(g.out_dims.clone(), buf).map(Value::Array))
+            .collect::<Result<_>>()?;
+        if matches!(ins.shape, Shape::Tuple(_)) {
+            Ok(Value::Tuple(results))
+        } else {
+            ensure!(results.len() == 1, "reduce arity/shape mismatch");
+            Ok(results.swap_remove(0))
+        }
+    }
+
+    // -------------------------------------------------------- scatter ---
+
+    /// Fused scatter whose region is one scalar binary op: accumulate
+    /// straight into the operand buffer (stolen in place when the
+    /// operand dies here, CoW-cloned otherwise).
+    fn scatter_fused(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        regs: &mut [Option<Value>],
+        s: &ScatterDims,
+        op: BinaryOp,
+        acc_first: bool,
+    ) -> Result<Value> {
+        let mut operand = self.fetch(comp, si, 0, regs).into_array()?;
+        let ins = &comp.instrs[si];
+        let indices = regs[ins.operands[1]].as_ref().expect("operand").array()?;
+        let updates = regs[ins.operands[2]].as_ref().expect("operand").array()?;
+        let operand_dims = operand.dims.clone();
+        let out = operand.buf_mut();
+        match (out, &*updates.buf) {
+            (Buf::F32(o), Buf::F32(u)) => {
+                ops::scatter_walk(&operand_dims, indices, updates, s, |pi, f| {
+                    let (a, b) = if acc_first { (o[pi], u[f]) } else { (u[f], o[pi]) };
+                    o[pi] = f32_bin(op, a, b)?;
+                    Ok(())
+                })?
+            }
+            (Buf::S32(o), Buf::S32(u)) => {
+                ops::scatter_walk(&operand_dims, indices, updates, s, |pi, f| {
+                    let (a, b) = if acc_first { (o[pi], u[f]) } else { (u[f], o[pi]) };
+                    o[pi] = s32_bin(op, a, b)?;
+                    Ok(())
+                })?
+            }
+            (Buf::U32(o), Buf::U32(u)) => {
+                ops::scatter_walk(&operand_dims, indices, updates, s, |pi, f| {
+                    let (a, b) = if acc_first { (o[pi], u[f]) } else { (u[f], o[pi]) };
+                    o[pi] = u32_bin(op, a, b)?;
+                    Ok(())
+                })?
+            }
+            (Buf::Pred(o), Buf::Pred(u)) => {
+                let fun = pred_bin(op)?;
+                ops::scatter_walk(&operand_dims, indices, updates, s, |pi, f| {
+                    let (a, b) = if acc_first { (o[pi], u[f]) } else { (u[f], o[pi]) };
+                    o[pi] = fun(a, b);
+                    Ok(())
+                })?
+            }
+            _ => bail!("scatter operand/update type mismatch"),
+        }
+        Ok(Value::Array(operand))
+    }
+
+    /// Scatter fallback: invoke the region per update. Mirrors the
+    /// reference evaluator exactly.
+    fn scatter_generic(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        regs: &mut [Option<Value>],
+        s: &ScatterDims,
+        target: usize,
+    ) -> Result<Value> {
+        let operand = self.fetch(comp, si, 0, regs).into_array()?;
+        let ins = &comp.instrs[si];
+        let indices = regs[ins.operands[1]].as_ref().expect("operand").array()?;
+        let updates = regs[ins.operands[2]].as_ref().expect("operand").array()?;
+        let operand_dims = operand.dims.clone();
+        let mut out = (*operand.buf).clone();
+        let ty = out.ty();
+        ops::scatter_walk(&operand_dims, indices, updates, s, |pi, f| {
+            let cur = {
+                let mut b = Buf::with_capacity(ty, 1);
+                b.push_from(&out, pi);
+                Value::Array(ArrayValue::new(vec![], b)?)
+            };
+            let upd = Value::Array(updates.scalar_at(f));
+            let res = self.run(target, vec![cur, upd])?;
+            out.set_from(pi, &res.array()?.buf, 0);
+            Ok(())
+        })?;
+        Ok(Value::Array(ArrayValue::new(operand_dims, out)?))
+    }
+}
+
+// ------------------------------------------------------- dot helpers ---
+
+/// Flat source offsets of every coordinate of `group` (original dim
+/// indices, iterated row-major in list order).
+fn group_offsets(dims: &[usize], st: &[usize], group: &[usize]) -> Vec<usize> {
+    let sizes: Vec<usize> = group.iter().map(|&d| dims[d]).collect();
+    let n: usize = sizes.iter().product::<usize>().max(1);
+    let mut offs = Vec::with_capacity(n);
+    let mut idx = vec![0usize; group.len()];
+    for _ in 0..n {
+        let off: usize = idx.iter().zip(group).map(|(&c, &d)| c * st[d]).sum();
+        offs.push(off);
+        for t in (0..group.len()).rev() {
+            idx[t] += 1;
+            if idx[t] < sizes[t] {
+                break;
+            }
+            idx[t] = 0;
+        }
+    }
+    offs
+}
+
+/// Pack `src` into a contiguous `[outer][mid][inner]` panel.
+fn pack_f32(
+    src: &[f32],
+    dims: &[usize],
+    outer: &[usize],
+    mid: &[usize],
+    inner: &[usize],
+) -> Vec<f32> {
+    let st = strides_of(dims);
+    let oo = group_offsets(dims, &st, outer);
+    let mo = group_offsets(dims, &st, mid);
+    let io = group_offsets(dims, &st, inner);
+    let mut out = Vec::with_capacity(oo.len() * mo.len() * io.len());
+    for &a in &oo {
+        for &b in &mo {
+            let base = a + b;
+            for &c in &io {
+                out.push(src[base + c]);
+            }
+        }
+    }
+    out
+}
+
+/// Contract packed panels over rows `[row0, row0 + out.len()/nn)`.
+/// Sequential ascending-k accumulation per output element.
+fn dot_rows(lp: &[f32], rp: &[f32], mn: usize, nn: usize, kn: usize, row0: usize, out: &mut [f32]) {
+    for (r, orow) in out.chunks_mut(nn).enumerate() {
+        let row = row0 + r;
+        let b = row / mn;
+        let xr = &lp[row * kn..(row + 1) * kn];
+        let rb = &rp[b * nn * kn..(b + 1) * nn * kn];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let yr = &rb[j * kn..(j + 1) * kn];
+            let mut acc = 0.0f32;
+            for (xv, yv) in xr.iter().zip(yr) {
+                acc += xv * yv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::eval::Interp;
+    use crate::runtime::interp::parser::parse_module;
+    use crate::util::rng::Pcg;
+
+    fn randv(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Pcg::new(seed);
+        (0..n).map(|_| r.next_normal()).collect()
+    }
+
+    fn fv(dims: &[usize], data: Vec<f32>) -> ArrayValue {
+        ArrayValue::f32(dims, data).unwrap()
+    }
+
+    /// Planned and tree-walked outputs must agree bit-for-bit.
+    fn assert_same(text: &str, args: &[Value], threads: usize) -> Value {
+        let m = parse_module(text).unwrap();
+        let want = Interp::new(&m).run_entry(args).unwrap();
+        let plan = Plan::compile(&m);
+        let got = plan.run_entry(args.to_vec(), threads).unwrap();
+        assert_eq!(got, want);
+        got
+    }
+
+    #[test]
+    fn dot_packed_matches_reference_shapes() {
+        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new() };
+        let ex = Executor { plan: &plan, threads: 1 };
+        // (lhs dims, rhs dims, dot dims)
+        let cases: Vec<(Vec<usize>, Vec<usize>, DotDims)> = vec![
+            // plain matmul
+            (
+                vec![5, 7],
+                vec![7, 3],
+                DotDims {
+                    lhs_contracting: vec![1],
+                    rhs_contracting: vec![0],
+                    ..Default::default()
+                },
+            ),
+            // attention scores: contract last dim of both, batch [0,1]
+            (
+                vec![2, 3, 4, 6],
+                vec![2, 3, 5, 6],
+                DotDims {
+                    lhs_batch: vec![0, 1],
+                    rhs_batch: vec![0, 1],
+                    lhs_contracting: vec![3],
+                    rhs_contracting: vec![3],
+                },
+            ),
+            // attention mix: contract a middle dim of rhs
+            (
+                vec![2, 3, 4, 5],
+                vec![2, 3, 5, 6],
+                DotDims {
+                    lhs_batch: vec![0, 1],
+                    rhs_batch: vec![0, 1],
+                    lhs_contracting: vec![3],
+                    rhs_contracting: vec![2],
+                },
+            ),
+            // multi-dim contraction, non-adjacent dims
+            (
+                vec![3, 4, 5],
+                vec![4, 2, 3],
+                DotDims {
+                    lhs_contracting: vec![1, 0],
+                    rhs_contracting: vec![0, 2],
+                    ..Default::default()
+                },
+            ),
+            // outer product: no contraction at all
+            (vec![3], vec![4], DotDims::default()),
+            // scalar-ish: rank-1 dot rank-1 full contraction
+            (
+                vec![6],
+                vec![6],
+                DotDims {
+                    lhs_contracting: vec![0],
+                    rhs_contracting: vec![0],
+                    ..Default::default()
+                },
+            ),
+        ];
+        for (i, (ld, rd, nums)) in cases.into_iter().enumerate() {
+            let lhs = fv(&ld, randv(i as u64 + 1, ld.iter().product()));
+            let rhs = fv(&rd, randv(i as u64 + 100, rd.iter().product()));
+            let want = ops::dot(&lhs, &rhs, &nums).unwrap();
+            let got = ex.dot_packed(&lhs, &rhs, &nums).unwrap();
+            assert_eq!(got.dims, want.dims, "case {i}");
+            let (g, w) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_packed_sharded_is_bit_identical() {
+        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new() };
+        // above DOT_PAR_MIN so the threaded path actually engages
+        let lhs = fv(&[96, 48], randv(1, 96 * 48));
+        let rhs = fv(&[48, 64], randv(2, 48 * 64));
+        let nums = DotDims {
+            lhs_contracting: vec![1],
+            rhs_contracting: vec![0],
+            ..Default::default()
+        };
+        let base = Executor { plan: &plan, threads: 1 }.dot_packed(&lhs, &rhs, &nums).unwrap();
+        for threads in [2usize, 3, 8] {
+            let got =
+                Executor { plan: &plan, threads }.dot_packed(&lhs, &rhs, &nums).unwrap();
+            assert_eq!(got, base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_sum_reduce_matches_tree_walk() {
+        let text = "HloModule t\n\nregion_0.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[2,3]{1,0} parameter(0)\n  \
+                    c.2 = f32[] constant(0)\n  ROOT r.3 = f32[2]{0} reduce(x.1, c.2), \
+                    dimensions={1}, to_apply=region_0.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = Plan::compile(&m);
+        assert_eq!(plan.comps[1].fused[2], Fused::Bin { op: BinaryOp::Add, acc_first: true });
+        let args = vec![Value::Array(fv(&[2, 3], randv(3, 6)))];
+        assert_same(text, &args, 1);
+    }
+
+    #[test]
+    fn fused_max_reduce_non_trailing_dims() {
+        // reduce over a LEADING dim: exercises the strided fold path
+        let text = "HloModule t\n\nregion_0.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT m.3 = f32[] maximum(b.2, a.1)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[4,3]{1,0} parameter(0)\n  \
+                    c.2 = f32[] constant(-inf)\n  ROOT r.3 = f32[3]{0} reduce(x.1, c.2), \
+                    dimensions={0}, to_apply=region_0.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = Plan::compile(&m);
+        // operand order in the region is (elem, acc)
+        assert_eq!(plan.comps[1].fused[2], Fused::Bin { op: BinaryOp::Max, acc_first: false });
+        let args = vec![Value::Array(fv(&[4, 3], randv(5, 12)))];
+        assert_same(text, &args, 1);
+    }
+
+    #[test]
+    fn variadic_argmax_stays_generic_and_matches() {
+        let text = "HloModule t\n\nregion_0.1 {\n  av.1 = f32[] parameter(0)\n  \
+                    ai.2 = s32[] parameter(1)\n  bv.3 = f32[] parameter(2)\n  \
+                    bi.4 = s32[] parameter(3)\n  ge.5 = pred[] compare(av.1, bv.3), \
+                    direction=GE\n  mv.6 = f32[] select(ge.5, av.1, bv.3)\n  \
+                    mi.7 = s32[] select(ge.5, ai.2, bi.4)\n  \
+                    ROOT t.8 = (f32[], s32[]) tuple(mv.6, mi.7)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+                    i.2 = s32[4]{0} iota(), iota_dimension=0\n  \
+                    ninf.3 = f32[] constant(-inf)\n  z.4 = s32[] constant(0)\n  \
+                    ROOT r.5 = (f32[], s32[]) reduce(x.1, i.2, ninf.3, z.4), \
+                    dimensions={0}, to_apply=region_0.1\n}\n";
+        let args = vec![Value::Array(fv(&[4], vec![1.0, 9.0, 3.0, 9.0]))];
+        let out = assert_same(text, &args, 1);
+        let parts = out.tuple().unwrap();
+        assert_eq!(parts[0].array().unwrap().as_f32().unwrap(), &[9.0]);
+    }
+
+    #[test]
+    fn fused_scatter_add_matches_tree_walk() {
+        let text = "HloModule t\n\nadd_region.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  op.1 = f32[3,2]{1,0} parameter(0)\n  \
+                    idx.2 = s32[2,1]{1,0} parameter(1)\n  \
+                    up.3 = f32[2,2]{1,0} parameter(2)\n  \
+                    ROOT sc.4 = f32[3,2]{1,0} scatter(op.1, idx.2, up.3), \
+                    update_window_dims={1}, inserted_window_dims={0}, \
+                    scatter_dims_to_operand_dims={0}, index_vector_dim=1, \
+                    to_apply=add_region.1\n}\n";
+        let operand = Value::Array(fv(&[3, 2], vec![0.0; 6]));
+        let idx = Value::Array(ArrayValue::i32(&[2, 1], vec![1, 7]).unwrap());
+        let upd = Value::Array(fv(&[2, 2], vec![1.0, 2.0, 10.0, 20.0]));
+        // index 7 out of bounds: dropped by both engines
+        assert_same(text, &[operand, idx, upd], 1);
+    }
+
+    #[test]
+    fn while_and_tuples_match_tree_walk() {
+        let text = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], s32[]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    five.3 = s32[] constant(5)\n  ROOT lt.4 = pred[] compare(i.2, five.3), \
+                    direction=LT\n}\n\nbody.1 {\n  s.1 = (s32[], s32[]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    a.3 = s32[] get-tuple-element(s.1), index=1\n  \
+                    one.4 = s32[] constant(1)\n  two.5 = s32[] constant(2)\n  \
+                    i2.6 = s32[] add(i.2, one.4)\n  a2.7 = s32[] multiply(a.3, two.5)\n  \
+                    ROOT t.8 = (s32[], s32[]) tuple(i2.6, a2.7)\n}\n\n\
+                    ENTRY main.1 {\n  z.1 = s32[] constant(0)\n  one.2 = s32[] constant(1)\n  \
+                    st.3 = (s32[], s32[]) tuple(z.1, one.2)\n  \
+                    ROOT w.4 = (s32[], s32[]) while(st.3), condition=cond.1, body=body.1\n}\n";
+        assert_same(text, &[], 1);
+    }
+
+    #[test]
+    fn duplicate_operand_is_never_taken() {
+        // add(x, x): the register is used twice in one step, so the
+        // in-place path must not steal it
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[3]{0} parameter(0)\n  \
+                    d.2 = f32[3]{0} add(x.1, x.1)\n  \
+                    ROOT m.3 = f32[3]{0} multiply(d.2, d.2)\n}\n";
+        let args = vec![Value::Array(fv(&[3], vec![1.0, -2.0, 0.5]))];
+        let out = assert_same(text, &args, 1);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[4.0, 16.0, 1.0]);
+    }
+
+    #[test]
+    fn inplace_chain_never_corrupts_caller_args() {
+        // p0 and p1 share one buffer; the executor's in-place chain on
+        // p0's side must CoW rather than alias it
+        let text = "HloModule t\n\nENTRY main.1 {\n  a.1 = f32[2]{0} parameter(0)\n  \
+                    b.2 = f32[2]{0} parameter(1)\n  o.3 = f32[2]{0} constant({10, 20})\n  \
+                    s.4 = f32[2]{0} add(a.1, o.3)\n  n.5 = f32[2]{0} negate(s.4)\n  \
+                    ROOT r.6 = f32[2]{0} multiply(n.5, b.2)\n}\n";
+        let shared = fv(&[2], vec![1.0, 2.0]);
+        let args = vec![Value::Array(shared.clone()), Value::Array(shared.clone())];
+        let out = assert_same(text, &args, 1);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[-11.0, -44.0]);
+        // the caller's buffer is untouched
+        assert_eq!(shared.as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn constants_survive_repeated_runs() {
+        // a while body folds a shared constant into state every
+        // iteration; if in-place execution ever wrote through the
+        // constant's buffer, the second run would diverge
+        let text = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], f32[2]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    n.3 = s32[] constant(4)\n  ROOT lt.4 = pred[] compare(i.2, n.3), \
+                    direction=LT\n}\n\nbody.1 {\n  s.1 = (s32[], f32[2]) parameter(0)\n  \
+                    i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+                    v.3 = f32[2]{0} get-tuple-element(s.1), index=1\n  \
+                    one.4 = s32[] constant(1)\n  c.5 = f32[2]{0} constant({0.5, 0.25})\n  \
+                    i2.6 = s32[] add(i.2, one.4)\n  v2.7 = f32[2]{0} add(v.3, c.5)\n  \
+                    ROOT t.8 = (s32[], f32[2]) tuple(i2.6, v2.7)\n}\n\n\
+                    ENTRY main.1 {\n  z.1 = s32[] constant(0)\n  \
+                    v0.2 = f32[2]{0} parameter(0)\n  \
+                    st.3 = (s32[], f32[2]) tuple(z.1, v0.2)\n  \
+                    ROOT w.4 = (s32[], f32[2]) while(st.3), condition=cond.1, body=body.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = Plan::compile(&m);
+        let args = vec![Value::Array(fv(&[2], vec![0.0, 0.0]))];
+        let a = plan.run_entry(args.clone(), 1).unwrap();
+        let b = plan.run_entry(args.clone(), 1).unwrap();
+        assert_eq!(a, b);
+        let want = Interp::new(&m).run_entry(&args).unwrap();
+        assert_eq!(a, want);
+        let parts = a.tuple().unwrap();
+        assert_eq!(parts[1].array().unwrap().as_f32().unwrap(), &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn reshape_shares_and_cow_protects() {
+        // reshape is O(1) buffer sharing; the in-place negate on the
+        // reshaped value must not mutate the still-live source
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[2,2]{1,0} parameter(0)\n  \
+                    r.2 = f32[4]{0} reshape(x.1)\n  n.3 = f32[4]{0} negate(r.2)\n  \
+                    s.4 = f32[2,2]{1,0} reshape(n.3)\n  \
+                    ROOT a.5 = f32[2,2]{1,0} add(s.4, x.1)\n}\n";
+        let args = vec![Value::Array(fv(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]))];
+        let out = assert_same(text, &args, 1);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn entry_param_shapes_recorded() {
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[2,3]{1,0} parameter(0)\n  \
+                    s.2 = s32[] parameter(1)\n  c.3 = f32[2,3]{1,0} add(x.1, x.1)\n  \
+                    ROOT t.4 = (f32[2,3], s32[]) tuple(c.3, s.2)\n}\n";
+        let plan = Plan::compile(&parse_module(text).unwrap());
+        assert_eq!(plan.n_entry_params(), 2);
+        let (ty, dims) = plan.entry_param_shape(0).unwrap().array().unwrap();
+        assert_eq!((ty, dims), (crate::runtime::interp::value::ElemType::F32, &[2usize, 3][..]));
+        assert!(plan.entry_param_shape(1).unwrap().array().is_ok());
+        assert!(plan.entry_param_shape(2).is_none());
+    }
+}

@@ -4,6 +4,15 @@
 //! layout annotations in HLO text describe physical placement only and
 //! never change an op's semantics, so the interpreter ignores them —
 //! every index computation below works on logical dimensions.
+//!
+//! Buffers are reference-counted (`Arc<Buf>`, so values can cross the
+//! batch-shard worker threads of DESIGN.md §4): cloning a [`Value`] is
+//! O(tuple arity), `reshape` is O(1), and the planned executor
+//! ([`crate::runtime::interp::plan`]) mutates buffers in place via
+//! [`ArrayValue::buf_mut`] — copy-on-write, so a buffer still visible
+//! through another live value is never aliased.
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -132,17 +141,43 @@ impl Buf {
             other => bail!("index element must be integer, got {}", other.ty().name()),
         }
     }
+
+    /// Copy of the element range `[lo, hi)` (batch-shard slicing).
+    pub fn copy_range(&self, lo: usize, hi: usize) -> Buf {
+        match self {
+            Buf::F32(v) => Buf::F32(v[lo..hi].to_vec()),
+            Buf::S32(v) => Buf::S32(v[lo..hi].to_vec()),
+            Buf::U32(v) => Buf::U32(v[lo..hi].to_vec()),
+            Buf::Pred(v) => Buf::Pred(v[lo..hi].to_vec()),
+        }
+    }
+
+    /// `n` copies of `self[i]` (scalar-broadcast fast path).
+    pub fn splat(&self, i: usize, n: usize) -> Buf {
+        match self {
+            Buf::F32(v) => Buf::F32(vec![v[i]; n]),
+            Buf::S32(v) => Buf::S32(vec![v[i]; n]),
+            Buf::U32(v) => Buf::U32(vec![v[i]; n]),
+            Buf::Pred(v) => Buf::Pred(vec![v[i]; n]),
+        }
+    }
 }
 
-/// A typed n-dimensional array (flat row-major data + dims).
+/// A typed n-dimensional array: flat row-major data behind a shared,
+/// copy-on-write buffer, plus logical dims.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArrayValue {
     pub dims: Vec<usize>,
-    pub buf: Buf,
+    pub buf: Arc<Buf>,
 }
 
 impl ArrayValue {
     pub fn new(dims: Vec<usize>, buf: Buf) -> Result<ArrayValue> {
+        ArrayValue::from_shared(dims, Arc::new(buf))
+    }
+
+    /// Build from an already-shared buffer (O(1) reshape/view paths).
+    pub fn from_shared(dims: Vec<usize>, buf: Arc<Buf>) -> Result<ArrayValue> {
         let numel: usize = dims.iter().product();
         ensure!(
             buf.len() == numel,
@@ -162,7 +197,7 @@ impl ArrayValue {
     }
 
     pub fn scalar_f32(v: f32) -> ArrayValue {
-        ArrayValue { dims: vec![], buf: Buf::F32(vec![v]) }
+        ArrayValue { dims: vec![], buf: Arc::new(Buf::F32(vec![v])) }
     }
 
     pub fn ty(&self) -> ElemType {
@@ -173,15 +208,28 @@ impl ArrayValue {
         self.buf.len()
     }
 
+    /// Mutable access to the buffer, cloning first if it is shared
+    /// (copy-on-write): in-place execution can never corrupt a buffer
+    /// another live value still sees.
+    pub fn buf_mut(&mut self) -> &mut Buf {
+        Arc::make_mut(&mut self.buf)
+    }
+
+    /// Whether this value is the buffer's only owner (a mutation would
+    /// run in place rather than copy). Diagnostic/test hook.
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.buf) == 1
+    }
+
     pub fn as_f32(&self) -> Result<&[f32]> {
-        match &self.buf {
+        match &*self.buf {
             Buf::F32(v) => Ok(v),
             other => bail!("expected f32 array, got {}", other.ty().name()),
         }
     }
 
     pub fn as_pred(&self) -> Result<&[bool]> {
-        match &self.buf {
+        match &*self.buf {
             Buf::Pred(v) => Ok(v),
             other => bail!("expected pred array, got {}", other.ty().name()),
         }
@@ -191,7 +239,7 @@ impl ArrayValue {
     pub fn scalar_at(&self, i: usize) -> ArrayValue {
         let mut buf = Buf::with_capacity(self.ty(), 1);
         buf.push_from(&self.buf, i);
-        ArrayValue { dims: vec![], buf }
+        ArrayValue { dims: vec![], buf: Arc::new(buf) }
     }
 }
 
@@ -204,6 +252,13 @@ pub enum Value {
 
 impl Value {
     pub fn array(&self) -> Result<&ArrayValue> {
+        match self {
+            Value::Array(a) => Ok(a),
+            Value::Tuple(_) => bail!("expected array value, got tuple"),
+        }
+    }
+
+    pub fn into_array(self) -> Result<ArrayValue> {
         match self {
             Value::Array(a) => Ok(a),
             Value::Tuple(_) => bail!("expected array value, got tuple"),
@@ -287,6 +342,13 @@ mod tests {
     }
 
     #[test]
+    fn buf_range_and_splat() {
+        let src = Buf::S32(vec![10, 20, 30, 40]);
+        assert_eq!(src.copy_range(1, 3), Buf::S32(vec![20, 30]));
+        assert_eq!(src.splat(2, 3), Buf::S32(vec![30, 30, 30]));
+    }
+
+    #[test]
     fn scalar_at_extracts_typed_scalar() {
         let a = ArrayValue::f32(&[3], vec![1.5, 2.5, 3.5]).unwrap();
         let s = a.scalar_at(1);
@@ -295,8 +357,30 @@ mod tests {
     }
 
     #[test]
+    fn copy_on_write_preserves_shared_buffers() {
+        let a = ArrayValue::f32(&[2], vec![1.0, 2.0]).unwrap();
+        let mut b = a.clone();
+        assert!(!b.is_unique());
+        if let Buf::F32(v) = b.buf_mut() {
+            v[0] = 9.0;
+        }
+        // the original is untouched; b now owns its buffer
+        assert_eq!(a.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(b.as_f32().unwrap(), &[9.0, 2.0]);
+        assert!(b.is_unique() && a.is_unique());
+    }
+
+    #[test]
+    fn reshape_shares_storage() {
+        let a = ArrayValue::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        let b = ArrayValue::from_shared(vec![4], a.buf.clone()).unwrap();
+        assert!(Arc::ptr_eq(&a.buf, &b.buf));
+        assert!(ArrayValue::from_shared(vec![3], a.buf.clone()).is_err());
+    }
+
+    #[test]
     fn value_accessors() {
-        let a = Value::Array(ArrayValue { dims: vec![], buf: Buf::Pred(vec![true]) });
+        let a = Value::Array(ArrayValue::new(vec![], Buf::Pred(vec![true])).unwrap());
         assert!(a.pred_scalar().unwrap());
         assert!(a.tuple().is_err());
         let t = Value::Tuple(vec![a.clone()]);

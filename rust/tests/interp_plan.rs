@@ -1,0 +1,195 @@
+//! Golden bit-identity of the planned in-place executor vs the
+//! tree-walking reference evaluator on the checked-in `lm_tiny`
+//! fixture (grad_mix + eval), across thread counts {1, 3, 8}, plus
+//! copy-on-write aliasing properties (shared argument buffers survive
+//! in-place execution unchanged) and batch-sharded eval equivalence
+//! through the full runtime seam (DESIGN.md §4).
+
+use std::path::Path;
+
+use quant_noise::model::params::ParamStore;
+use quant_noise::runtime::client::Runtime;
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
+use quant_noise::runtime::interp::{ArrayValue, Buf, HloModule, Interp, Plan, Value};
+use quant_noise::runtime::manifest::Manifest;
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp")
+}
+
+fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::F32(data)).unwrap())
+}
+
+fn i32v(dims: &[usize], data: Vec<i32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::S32(data)).unwrap())
+}
+
+/// Exact structural + bitwise equality (f32 compared by bit pattern,
+/// so even NaN payloads and zero signs must agree).
+fn assert_bit_identical(a: &Value, b: &Value, path: &str) {
+    match (a, b) {
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: tuple arity");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_bit_identical(x, y, &format!("{path}.{i}"));
+            }
+        }
+        (Value::Array(x), Value::Array(y)) => {
+            assert_eq!(x.dims, y.dims, "{path}: dims");
+            match (&*x.buf, &*y.buf) {
+                (Buf::F32(p), Buf::F32(q)) => {
+                    for (i, (u, v)) in p.iter().zip(q).enumerate() {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{path}[{i}]");
+                    }
+                }
+                (p, q) => assert_eq!(p, q, "{path}: buffer"),
+            }
+        }
+        _ => panic!("{path}: array/tuple kind mismatch"),
+    }
+}
+
+struct Fixture {
+    grad_mod: HloModule,
+    eval_mod: HloModule,
+    grad_args: Vec<Value>,
+    eval_args: Vec<Value>,
+}
+
+fn load_fixture(rate: f32, seed: i32) -> Fixture {
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let params = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 7 + 3) % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i * 5 + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+
+    let pvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    let hvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, vec![0.0; t.data.len()])).collect();
+    let mut grad_args = pvals.clone();
+    grad_args.extend(hvals);
+    grad_args.push(i32v(&meta.tokens_shape, tokens.clone()));
+    grad_args.push(i32v(&meta.targets_shape, targets.clone()));
+    grad_args.push(f32v(&[keep.len()], keep.clone()));
+    grad_args.push(f32v(&[], vec![rate]));
+    grad_args.push(i32v(&[], vec![seed]));
+    let mut eval_args = pvals;
+    eval_args.push(i32v(&meta.tokens_shape, tokens));
+    eval_args.push(i32v(&meta.targets_shape, targets));
+    eval_args.push(f32v(&[keep.len()], keep));
+
+    let grad_mod = HloModule::parse_file(&man.hlo_path(&meta, "grad_mix").unwrap()).unwrap();
+    let eval_mod = HloModule::parse_file(&man.hlo_path(&meta, "eval").unwrap()).unwrap();
+    Fixture { grad_mod, eval_mod, grad_args, eval_args }
+}
+
+#[test]
+fn grad_mix_planned_bit_identical_across_threads() {
+    // rate 0.5 exercises the threefry while-loops + noise select paths
+    let fx = load_fixture(0.5, 42);
+    let golden = Interp::new(&fx.grad_mod).run_entry(&fx.grad_args).unwrap();
+    let plan = Plan::compile(&fx.grad_mod);
+    for threads in [1usize, 3, 8] {
+        let got = plan.run_entry(fx.grad_args.clone(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("grad_mix[t={threads}]"));
+    }
+}
+
+#[test]
+fn eval_planned_bit_identical_across_threads() {
+    let fx = load_fixture(0.0, 1);
+    let golden = Interp::new(&fx.eval_mod).run_entry(&fx.eval_args).unwrap();
+    let plan = Plan::compile(&fx.eval_mod);
+    for threads in [1usize, 3, 8] {
+        let got = plan.run_entry(fx.eval_args.clone(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("eval[t={threads}]"));
+    }
+}
+
+#[test]
+fn shared_argument_buffers_survive_inplace_execution() {
+    // All argument values share their buffers with this test (and with
+    // each other across the two runs): if the in-place executor ever
+    // wrote through a shared buffer instead of copy-on-write, either
+    // the second run would diverge or the snapshot comparison below
+    // would fail.
+    let fx = load_fixture(1.0, 7);
+    let snapshot: Vec<Value> = fx.grad_args.clone(); // shares every Arc
+    let plan = Plan::compile(&fx.grad_mod);
+    let a = plan.run_entry(fx.grad_args.clone(), 1).unwrap();
+    let b = plan.run_entry(fx.grad_args.clone(), 1).unwrap();
+    assert_bit_identical(&a, &b, "rerun");
+    for (i, (now, before)) in fx.grad_args.iter().zip(&snapshot).enumerate() {
+        assert_bit_identical(now, before, &format!("arg{i}"));
+    }
+}
+
+#[test]
+fn batched_eval_matches_sequential_at_all_thread_counts() {
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).unwrap();
+    let rt = Runtime::interp();
+    let (mut sess, _params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let n = meta.batch * meta.seq_len;
+    let keep = vec![1.0f32; meta.n_layers];
+    // three distinct batches
+    let batches: Vec<(Vec<i32>, Vec<i32>)> = (0..3)
+        .map(|s| {
+            let tokens: Vec<i32> =
+                (0..n).map(|i| ((i * 3 + s * 11 + 1) % meta.vocab) as i32).collect();
+            let targets: Vec<i32> =
+                (0..n).map(|i| ((i * 13 + s * 5 + 2) % meta.vocab) as i32).collect();
+            (tokens, targets)
+        })
+        .collect();
+    // golden: sequential single-batch evals
+    let golden: Vec<(f64, f64)> = batches
+        .iter()
+        .map(|(t, g)| sess.eval("eval", &BatchInput::Tokens(t), g, &keep).unwrap())
+        .collect();
+    let macro_tokens: Vec<i32> = batches.iter().flat_map(|(t, _)| t.iter().copied()).collect();
+    let macro_targets: Vec<i32> = batches.iter().flat_map(|(_, g)| g.iter().copied()).collect();
+    for threads in [1usize, 3, 8] {
+        rt.set_threads(threads);
+        let got = sess
+            .eval_batched("eval", &BatchInput::Tokens(&macro_tokens), &macro_targets, &keep)
+            .unwrap();
+        assert_eq!(got.len(), golden.len(), "threads={threads}");
+        for (s, (g, w)) in got.iter().zip(&golden).enumerate() {
+            assert_eq!(g.0.to_bits(), w.0.to_bits(), "shard {s} nll, threads={threads}");
+            assert_eq!(g.1.to_bits(), w.1.to_bits(), "shard {s} correct, threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn grad_entry_through_session_matches_raw_plan() {
+    // the ModelSession seam (buffers, uploads, threads knob) must not
+    // perturb results relative to driving the plan directly
+    let fx = load_fixture(0.25, 9);
+    let golden = Interp::new(&fx.grad_mod).run_entry(&fx.grad_args).unwrap();
+    let loss_golden = golden.tuple().unwrap()[0].array().unwrap().as_f32().unwrap()[0];
+
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).unwrap();
+    let rt = Runtime::interp();
+    let (mut sess, _params) = ModelSession::new(&rt, &man, "lm_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 7 + 3) % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i * 5 + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    for threads in [1usize, 3, 8] {
+        rt.set_threads(threads);
+        let (loss, _grads) = sess
+            .grad("grad_mix", &BatchInput::Tokens(&tokens), &targets, &keep, 0.25, 9)
+            .unwrap();
+        assert_eq!(loss.to_bits(), loss_golden.to_bits(), "threads={threads}");
+    }
+}

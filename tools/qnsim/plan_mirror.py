@@ -1,0 +1,337 @@
+"""Mirror of the planned executor's new kernels (rust/src/runtime/interp/plan.rs
+and the lane-blocked kernel in rust/src/quant/assign.rs), validated for
+BIT-IDENTITY against the reference mirror (`hlo_mirror.py`) on the
+checked-in fixture.
+
+The Rust planned executor claims bit-identity with the tree-walking
+evaluator because every new kernel visits the same elements in the same
+order with the same scalar ops. This file re-implements exactly those
+kernels (packed dot, fused binary reduce, fused binary scatter, the
+8-lane dot) in numpy float32 and checks them against the reference
+algorithms — catching any index-math or accumulation-order mistake
+before it ships as Rust that this container cannot compile. Run:
+
+    cd tools/qnsim && python3 plan_mirror.py        # ~2 min (pure python)
+"""
+import os
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, HERE)
+
+from hlo_mirror import (
+    Arr, BINARY, Interp, int_list, parse_module, strides_of, unflatten,
+)
+
+ROOT = os.path.dirname(os.path.dirname(HERE))
+FIX = os.path.join(ROOT, "rust", "tests", "fixtures", "interp")
+
+
+# ------------------------------------------------- planned dot (packed) ---
+
+def group_offsets(dims, st, group):
+    sizes = [dims[d] for d in group]
+    n = 1
+    for s in sizes:
+        n *= s
+    n = max(n, 1)
+    offs = []
+    idx = [0] * len(group)
+    for _ in range(n):
+        offs.append(sum(c * st[d] for c, d in zip(idx, group)))
+        for t in range(len(group) - 1, -1, -1):
+            idx[t] += 1
+            if idx[t] < sizes[t]:
+                break
+            idx[t] = 0
+    return offs
+
+
+def pack_f32(src, dims, outer, mid, inner):
+    st = strides_of(dims)
+    oo = group_offsets(dims, st, outer)
+    mo = group_offsets(dims, st, mid)
+    io = group_offsets(dims, st, inner)
+    out = np.empty(len(oo) * len(mo) * len(io), np.float32)
+    w = 0
+    for a in oo:
+        for b in mo:
+            base = a + b
+            for c in io:
+                out[w] = src[base + c]
+                w += 1
+    return out
+
+
+class PlannedInterp(Interp):
+    """Reference mirror with the planned executor's kernels swapped in."""
+
+    def dot(self, sh, lhs, rhs, a):
+        lb = int_list(a.get("lhs_batch_dims", "{}"))
+        rb = int_list(a.get("rhs_batch_dims", "{}"))
+        lc = int_list(a.get("lhs_contracting_dims", "{}"))
+        rc = int_list(a.get("rhs_contracting_dims", "{}"))
+        lfree = [d for d in range(len(lhs.dims)) if d not in lb and d not in lc]
+        rfree = [d for d in range(len(rhs.dims)) if d not in rb and d not in rc]
+        kdims = [lhs.dims[d] for d in lc]
+        bn = 1
+        for d in lb:
+            bn *= lhs.dims[d]
+        mn = 1
+        for d in lfree:
+            mn *= lhs.dims[d]
+        nn = 1
+        for d in rfree:
+            nn *= rhs.dims[d]
+        total = bn * mn * nn
+        if total == 0:
+            return Arr(sh.ty, sh.dims, np.empty(0, np.float32))
+        kn_raw = 1
+        for d in kdims:
+            kn_raw *= d
+        if kdims and kn_raw == 0:
+            return Arr(sh.ty, sh.dims, np.zeros(total, np.float32))
+        kn = max(kn_raw, 1)
+        lp = pack_f32(lhs.data, lhs.dims, lb, lfree, lc)
+        rp = pack_f32(rhs.data, rhs.dims, rb, rfree, rc)
+        out = np.empty(total, np.float32)
+        for row in range(bn * mn):
+            b = row // mn
+            xr = lp[row * kn:(row + 1) * kn]
+            rbp = rp[b * nn * kn:(b + 1) * nn * kn]
+            for j in range(nn):
+                yr = rbp[j * kn:(j + 1) * kn]
+                acc = np.float32(0.0)
+                for t in range(kn):
+                    acc = np.float32(acc + np.float32(xr[t] * yr[t]))
+                out[row * nn + j] = acc
+        return Arr(sh.ty, sh.dims, out)
+
+    # -------------------------------------------------- fused regions ---
+
+    def _match_bin_region(self, comp):
+        if len(comp.instrs) != 3 or comp.n_params != 2:
+            return None
+        p = {}
+        for i, ins in enumerate(comp.instrs):
+            if ins.opcode == "parameter":
+                p[int(ins.attrs["parameter_number"])] = i
+        if set(p) != {0, 1}:
+            return None
+        root = comp.instrs[comp.root]
+        if root.opcode not in BINARY or BINARY[root.opcode] is None:
+            return None
+        if root.operands == [p[0], p[1]]:
+            return root.opcode, True
+        if root.operands == [p[1], p[0]]:
+            return root.opcode, False
+        return None
+
+    def reduce(self, sh, opv, a):
+        comp = self.m.comps[a["to_apply"]]
+        hit = self._match_bin_region(comp)
+        if len(opv) != 2 or sh.ty == "tuple" or hit is None:
+            return super().reduce(sh, opv, a)
+        opcode, acc_first = hit
+        fn = BINARY[opcode]
+        x, init = opv
+        dims = int_list(a["dimensions"])
+        kept = [d for d in range(len(x.dims)) if d not in dims]
+        out_dims = [x.dims[d] for d in kept]
+        red_dims = [x.dims[d] for d in dims]
+        xst = strides_of(x.dims)
+        ost = strides_of(out_dims)
+        rst = strides_of(red_dims)
+        rn = 1
+        for d in red_dims:
+            rn *= d
+        n = 1
+        for d in out_dims:
+            n *= d
+        i0 = init.data[0]
+        contiguous = all(
+            dims[t] == len(x.dims) - len(dims) + t for t in range(len(dims)))
+        out = np.empty(n, x.data.dtype)
+        for f in range(n):
+            if contiguous:
+                run = x.data[f * rn:(f + 1) * rn]
+                acc = i0
+                for v in run:
+                    acc = fn(acc, v) if acc_first else fn(v, acc)
+            else:
+                oi = unflatten(f, out_dims, ost)
+                base = sum(oi[k] * xst[d] for k, d in enumerate(kept))
+                acc = i0
+                for rf in range(rn):
+                    ri = unflatten(rf, red_dims, rst)
+                    xi = base + sum(ri[k] * xst[d] for k, d in enumerate(dims))
+                    v = x.data[xi]
+                    acc = fn(acc, v) if acc_first else fn(v, acc)
+            out[f] = acc
+        return Arr(sh.ty, sh.dims, out)
+
+    def scatter(self, sh, opv, a):
+        comp = self.m.comps[a["to_apply"]]
+        hit = self._match_bin_region(comp)
+        if hit is None:
+            return super().scatter(sh, opv, a)
+        opcode, acc_first = hit
+        fn = BINARY[opcode]
+        operand, indices, updates = opv
+        uw_dims = int_list(a.get("update_window_dims", "{}"))
+        inserted = int_list(a.get("inserted_window_dims", "{}"))
+        ib_dims = int_list(a.get("input_batching_dims", "{}"))
+        sb_dims = int_list(a.get("scatter_indices_batching_dims", "{}"))
+        sdod = int_list(a.get("scatter_dims_to_operand_dims", "{}"))
+        ivd = int(a["index_vector_dim"])
+        sdims = [d for d in range(len(indices.dims)) if d != ivd]
+        scatter_dims_u = [d for d in range(len(updates.dims)) if d not in uw_dims]
+        window_operand_dims = [
+            d for d in range(len(operand.dims))
+            if d not in inserted and d not in ib_dims
+        ]
+        out = operand.data.copy()
+        pst = strides_of(operand.dims)
+        ust = strides_of(updates.dims)
+        sst = strides_of(indices.dims)
+        for f in range(updates.numel()):
+            ui = unflatten(f, updates.dims, ust)
+            g = [ui[d] for d in scatter_dims_u]
+            full = [0] * len(operand.dims)
+            for k, od in enumerate(sdod):
+                si = sum(g[j] * sst[sd] for j, sd in enumerate(sdims))
+                if ivd < len(indices.dims):
+                    si += k * sst[ivd]
+                full[od] = int(indices.data[si])
+            for od, sd in zip(ib_dims, sb_dims):
+                full[od] = g[sdims.index(sd)]
+            for k, d in enumerate(window_operand_dims):
+                full[d] += ui[uw_dims[k]]
+            if not all(0 <= full[d] < operand.dims[d]
+                       for d in range(len(operand.dims))):
+                continue
+            pi = sum(full[d] * pst[d] for d in range(len(operand.dims)))
+            cur, upd = out[pi], updates.data[f]
+            out[pi] = fn(cur, upd) if acc_first else fn(upd, cur)
+        return Arr(sh.ty, sh.dims, out)
+
+
+# ------------------------------------------ assign.rs dot8 lane kernel ---
+
+def rust_dot(a, b):
+    """quant::assign::dot — 4-way unrolled f32 dot, bit-exact."""
+    n = len(a)
+    s = [np.float32(0.0)] * 4
+    n4 = n - n % 4
+    i = 0
+    while i < n4:
+        for t in range(4):
+            s[t] = np.float32(s[t] + np.float32(a[i + t] * b[i + t]))
+        i += 4
+    acc = np.float32(np.float32(s[0] + s[1]) + np.float32(s[2] + s[3]))
+    while i < n:
+        acc = np.float32(acc + np.float32(a[i] * b[i]))
+        i += 1
+    return acc
+
+
+def rust_dot8(p, tile, d):
+    """quant::assign::dot8 — 8 lanes against a [d][8] transposed tile."""
+    s = [np.zeros(8, np.float32) for _ in range(4)]
+    d4 = d - d % 4
+    t = 0
+    while t < d4:
+        for q in range(4):
+            r = tile[(t + q) * 8:(t + q + 1) * 8]
+            s[q] = np.float32(s[q] + np.float32(np.float32(p[t + q]) * r))
+        t += 4
+    out = np.float32(np.float32(s[0] + s[1]) + np.float32(s[2] + s[3]))
+    while t < d:
+        r = tile[t * 8:(t + 1) * 8]
+        out = np.float32(out + np.float32(np.float32(p[t]) * r))
+        t += 1
+    return out
+
+
+def check_dot8():
+    rng = np.random.default_rng(0)
+    for d in (1, 2, 3, 4, 7, 8, 9, 16, 31):
+        p = rng.standard_normal(d).astype(np.float32)
+        cents = rng.standard_normal((8, d)).astype(np.float32)
+        tile = np.ascontiguousarray(cents.T).reshape(-1)  # [d][8]
+        got = rust_dot8(p, tile, d)
+        for lane in range(8):
+            want = rust_dot(p, cents[lane])
+            assert got[lane].tobytes() == want.tobytes(), (d, lane)
+    print("dot8 lane kernel == scalar 4-way dot, bitwise, d in 1..31  OK")
+
+
+# ----------------------------------------------------------- fixture ---
+
+def bits(x):
+    return np.asarray(x).tobytes()
+
+
+def assert_same(a, b, path):
+    if isinstance(a, tuple):
+        assert isinstance(b, tuple) and len(a[1]) == len(b[1]), path
+        for i, (x, y) in enumerate(zip(a[1], b[1])):
+            assert_same(x, y, f"{path}.{i}")
+        return
+    assert a.dims == b.dims, (path, a.dims, b.dims)
+    assert bits(a.data) == bits(b.data), f"{path}: payload differs"
+
+
+def fixture_args(grad):
+    import json
+    import struct
+    man = json.load(open(os.path.join(FIX, "manifest.json")))
+    meta = man["models"]["lm_tiny"]
+    with open(os.path.join(FIX, meta["init"]), "rb") as f:
+        assert f.read(4) == b"QNP1"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        params = []
+        for p in header["params"]:
+            numel = int(np.prod(p["shape"])) if p["shape"] else 1
+            data = np.frombuffer(f.read(4 * numel), np.float32)
+            params.append(Arr("f32", list(p["shape"]), data))
+    b, t = meta["tokens_shape"]
+    vocab = meta["config"]["vocab"]
+    n_layers = meta["config"]["n_layers"]
+    tokens = Arr("s32", [b, t], [(i * 7 + 3) % vocab for i in range(b * t)])
+    targets = Arr("s32", [b, t], [(i * 5 + 1) % vocab for i in range(b * t)])
+    keep = Arr("f32", [n_layers], [1.0] * n_layers)
+    args = list(params)
+    if grad:
+        args += [Arr("f32", p.dims, np.zeros(max(p.numel(), 1), np.float32))
+                 for p in params]
+    args += [tokens, targets, keep]
+    if grad:
+        args += [Arr("f32", [], [0.5]), Arr("s32", [], [42])]
+    return args
+
+
+def check_fixture(entry, grad):
+    text = open(os.path.join(FIX, f"lm_tiny.{entry}.hlo.txt")).read()
+    m = parse_module(text)
+    args = fixture_args(grad)
+    ref = Interp(m).run_entry(args)
+    planned = PlannedInterp(m).run_entry(args)
+    assert_same(planned, ref, entry)
+    n_out = len(ref[1])
+    print(f"{entry}: planned kernels bit-identical to reference "
+          f"({n_out} outputs)  OK")
+
+
+def main():
+    check_dot8()
+    check_fixture("eval", grad=False)
+    check_fixture("grad_mix", grad=True)
+    print("PLANNED KERNELS VALIDATED (bitwise) against the reference mirror")
+
+
+if __name__ == "__main__":
+    main()

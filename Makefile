@@ -25,9 +25,11 @@ verify:
 # Per-step grad_mix/eval latency of the planned interpreter vs the
 # tree-walking evaluator on the checked-in fixture (no Python, no
 # artifacts); records the perf trajectory in BENCH_interp.json.
+# QUICK=1 shrinks warmup/budget to a smoke run (what CI executes) so
+# kernel-dispatch regressions surface without stable-median cost.
 bench-interp:
 	cd rust && QN_BENCH_JSON=$(abspath BENCH_interp.json) \
-		cargo bench --bench interp_step
+		QN_BENCH_QUICK=$(QUICK) cargo bench --bench interp_step
 
 artifacts:
 	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \

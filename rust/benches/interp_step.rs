@@ -1,11 +1,16 @@
 //! Interpreter step latency on the checked-in `lm_tiny` fixture:
 //! the tree-walking reference evaluator vs the planned in-place
-//! executor (1 thread / all cores), plus deterministic batch-sharded
-//! eval throughput. Runs with no artifacts and no Python.
+//! executor (1 thread / all cores) with and without loop fusion
+//! (counted `while` + native threefry), plus deterministic
+//! batch-sharded eval throughput and fused-reduce shard scaling. Runs
+//! with no artifacts and no Python.
 //!
 //! Emits a machine-readable `BENCH_interp.json` (path override:
 //! `QN_BENCH_JSON`) so the perf trajectory is recorded per commit —
-//! `make bench-interp` from the repo root.
+//! `make bench-interp` from the repo root; `QN_BENCH_QUICK=1` (or
+//! `make bench-interp QUICK=1`) shrinks warmup/budget to a smoke run
+//! so CI surfaces kernel-dispatch regressions (panics, fallback
+//! storms) without paying for stable medians.
 
 use std::path::Path;
 use std::time::Duration;
@@ -13,9 +18,20 @@ use std::time::Duration;
 use quant_noise::model::params::ParamStore;
 use quant_noise::runtime::client::Runtime;
 use quant_noise::runtime::executable::{BatchInput, ModelSession};
-use quant_noise::runtime::interp::{ArrayValue, Buf, HloModule, Interp, Plan, Value};
+use quant_noise::runtime::interp::{
+    ArrayValue, Buf, HloModule, Interp, Plan, PlanOptions, Value,
+};
 use quant_noise::runtime::manifest::Manifest;
 use quant_noise::util::bench::Bencher;
+
+/// A large fused reduce (contiguous + strided) for shard-scaling
+/// numbers: 96x128 input, both axes reduced separately.
+const BIG_REDUCE: &str = "HloModule big_reduce\n\nsum.1 {\n  a.1 = f32[] parameter(0)\n  \
+    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+    ENTRY main.1 {\n  x.1 = f32[96,128]{1,0} parameter(0)\n  \
+    z.2 = f32[] constant(0)\n  r.3 = f32[96]{0} reduce(x.1, z.2), dimensions={1}, \
+    to_apply=sum.1\n  rs.4 = f32[128]{0} reduce(x.1, z.2), dimensions={0}, \
+    to_apply=sum.1\n  ROOT t.5 = (f32[96]{0}, f32[128]{0}) tuple(r.3, rs.4)\n}\n";
 
 fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
     Value::Array(ArrayValue::new(dims.to_vec(), Buf::F32(data)).unwrap())
@@ -59,11 +75,29 @@ fn main() {
     let eval_mod = HloModule::parse_file(&man.hlo_path(&meta, "eval").unwrap()).unwrap();
     let grad_plan = Plan::compile(&grad_mod);
     let eval_plan = Plan::compile(&eval_mod);
+    let nofuse = PlanOptions { counted_loops: false, threefry: false };
+    let grad_plan_nofuse = Plan::compile_opts(&grad_mod, nofuse);
+    let fs = grad_plan.fusion_stats();
+    println!(
+        "fusion census (grad_mix): {} counted loops, {} threefry call sites, \
+         {} generic whiles",
+        fs.counted_loops, fs.threefry_calls, fs.generic_whiles
+    );
+    assert_eq!(fs.generic_whiles, 0, "fallback storm: a fixture while failed to fuse");
 
+    let quick = std::env::var("QN_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
     let mut b = Bencher::quick();
-    b.warmup = Duration::from_millis(200);
-    b.budget = Duration::from_secs(2);
-    b.min_iters = 3;
+    if quick {
+        b.warmup = Duration::from_millis(20);
+        b.budget = Duration::from_millis(150);
+        b.min_iters = 1;
+    } else {
+        b.warmup = Duration::from_millis(200);
+        b.budget = Duration::from_secs(2);
+        b.min_iters = 3;
+    }
 
     println!("--- interp step (lm_tiny fixture, B={} T={}) ---", meta.batch, meta.seq_len);
     let mut rec: Vec<(String, f64)> = Vec::new();
@@ -76,17 +110,36 @@ fn main() {
     let gm_tree = run(&mut b, "grad_mix_tree_walk_ns", "grad_mix: tree-walk evaluator", &mut || {
         Interp::new(&grad_mod).run_entry(&grad_args).unwrap()
     });
-    let gm_1t = run(&mut b, "grad_mix_planned_1t_ns", "grad_mix: planned, 1 thread", &mut || {
+    let gm_nofuse = run(
+        &mut b,
+        "grad_mix_planned_nofuse_1t_ns",
+        "grad_mix: planned, no loop fusion, 1 thread",
+        &mut || grad_plan_nofuse.run_entry(grad_args.clone(), 1).unwrap(),
+    );
+    let gm_1t = run(&mut b, "grad_mix_planned_1t_ns", "grad_mix: planned+fused, 1 thread", &mut || {
         grad_plan.run_entry(grad_args.clone(), 1).unwrap()
     });
-    let gm_mt = run(&mut b, "grad_mix_planned_mt_ns", "grad_mix: planned, all cores", &mut || {
-        grad_plan.run_entry(grad_args.clone(), cores).unwrap()
-    });
+    let gm_mt =
+        run(&mut b, "grad_mix_planned_mt_ns", "grad_mix: planned+fused, all cores", &mut || {
+            grad_plan.run_entry(grad_args.clone(), cores).unwrap()
+        });
     let ev_tree = run(&mut b, "eval_tree_walk_ns", "eval: tree-walk evaluator", &mut || {
         Interp::new(&eval_mod).run_entry(&eval_args).unwrap()
     });
     let ev_1t = run(&mut b, "eval_planned_1t_ns", "eval: planned, 1 thread", &mut || {
         eval_plan.run_entry(eval_args.clone(), 1).unwrap()
+    });
+
+    // fused-reduce shard scaling on a synthetic large reduce
+    let big_mod = HloModule::parse_str(BIG_REDUCE).unwrap();
+    let big_plan = Plan::compile(&big_mod);
+    let big_args =
+        vec![f32v(&[96, 128], (0..96 * 128).map(|i| (i % 97) as f32 - 48.0).collect())];
+    let rd_1t = run(&mut b, "reduce_shard_1t_ns", "big fused reduce: 1 thread", &mut || {
+        big_plan.run_entry(big_args.clone(), 1).unwrap()
+    });
+    let rd_mt = run(&mut b, "reduce_shard_mt_ns", "big fused reduce: all cores", &mut || {
+        big_plan.run_entry(big_args.clone(), cores).unwrap()
     });
 
     // batch-sharded eval through the full runtime seam (macro-batch M=8)
@@ -113,24 +166,39 @@ fn main() {
 
     let speedup_grad = gm_tree / gm_1t;
     let speedup_eval = ev_tree / ev_1t;
+    let fuse_speedup_grad = gm_nofuse / gm_1t;
+    let reduce_scaling = rd_1t / rd_mt;
     let scaling = eb_1t / eb_mt;
     println!(
         "\nplanned vs tree-walk (1 thread): grad_mix {speedup_grad:.2}x, eval {speedup_eval:.2}x"
     );
     println!(
+        "loop fusion (counted while + native threefry): grad_mix \
+         {fuse_speedup_grad:.2}x vs the unfused plan"
+    );
+    println!(
         "batch sharding: {scaling:.2}x per-step on {cores} cores \
-         (grad_mix all-cores: {:.2}x vs tree-walk)",
+         (grad_mix all-cores: {:.2}x vs tree-walk); \
+         fused-reduce sharding: {reduce_scaling:.2}x",
         gm_tree / gm_mt
     );
 
     // machine-readable record for the perf trajectory
     let mut json = String::from("{\n  \"fixture\": \"lm_tiny\",\n");
     json.push_str(&format!("  \"cores\": {cores},\n  \"batch_shards\": {m},\n"));
+    json.push_str(&format!(
+        "  \"quick\": {quick},\n  \"counted_loops\": {},\n  \"threefry_call_sites\": {},\n",
+        fs.counted_loops, fs.threefry_calls
+    ));
     for (k, v) in &rec {
         json.push_str(&format!("  \"{k}\": {v:.1},\n"));
     }
     json.push_str(&format!(
         "  \"speedup_grad_1t\": {speedup_grad:.3},\n  \"speedup_eval_1t\": {speedup_eval:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"fuse_speedup_grad_1t\": {fuse_speedup_grad:.3},\n  \
+         \"reduce_shard_scaling\": {reduce_scaling:.3},\n"
     ));
     json.push_str(&format!("  \"batch_scaling\": {scaling:.3}\n}}\n"));
     let out = std::env::var("QN_BENCH_JSON").unwrap_or_else(|_| "BENCH_interp.json".into());

@@ -26,12 +26,53 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::interp::{self, ArrayValue, Buf, Value};
+
+// ----------------------------------------------------------- plan cache ---
+
+/// Process-wide compiled-plan cache, keyed by the HLO *text* itself
+/// (exact equality — a few artifacts of a few hundred KB each, so the
+/// stored keys are cheap and there is no hash-collision hazard):
+/// loading the same entry twice — the trainer's `grad_mix` + `eval`
+/// sessions, repeated `Workbench` runs, a fresh [`Runtime`] per
+/// experiment — re-parses and re-plans zero times. Plans are immutable
+/// and `Send + Sync`, so one [`interp::Plan`] serves every runtime.
+/// (Bypassed under `QN_INTERP_STATS`: the histogram prints when a plan
+/// drops, and entries in a process-wide cache never would.)
+static PLAN_CACHE: OnceLock<Mutex<HashMap<String, Arc<interp::Plan>>>> = OnceLock::new();
+static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Lifetime (hits, misses) of the process-wide plan cache.
+pub fn plan_cache_stats() -> (u64, u64) {
+    (PLAN_CACHE_HITS.load(Ordering::Relaxed), PLAN_CACHE_MISSES.load(Ordering::Relaxed))
+}
+
+/// Parse + plan `text`, via the content cache unless stats mode wants
+/// per-session plan lifetimes.
+fn plan_for_text(text: &str, path: &Path) -> Result<Arc<interp::Plan>> {
+    let parse_and_plan = || -> Result<Arc<interp::Plan>> {
+        let module = interp::HloModule::parse_str(text)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        Ok(Arc::new(interp::Plan::compile(&module)))
+    };
+    if std::env::var("QN_INTERP_STATS").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+        return parse_and_plan();
+    }
+    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) = cache.lock().unwrap().get(text) {
+        PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        return Ok(plan.clone());
+    }
+    let plan = parse_and_plan()?;
+    PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    Ok(cache.lock().unwrap().entry(text.to_string()).or_insert(plan).clone())
+}
 
 /// Which execution engine a [`Runtime`] drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,9 +96,10 @@ impl Backend {
     }
 }
 
-/// A loaded, executable artifact on some backend.
+/// A loaded, executable artifact on some backend. Interpreter plans
+/// are `Arc`-shared through the process-wide content cache.
 pub enum Executable {
-    Interp(interp::Plan),
+    Interp(Arc<interp::Plan>),
     Pjrt(xla::PjRtLoadedExecutable),
 }
 
@@ -303,17 +345,19 @@ impl Runtime {
         }
     }
 
-    /// Load + compile an HLO text file (cached by path). On the
+    /// Load + compile an HLO text file (cached per-runtime by path,
+    /// process-wide by content — see [`plan_cache_stats`]). On the
     /// interpreter backend "compile" is parse + plan lowering
-    /// (liveness, move flags, fused-region classification).
+    /// (liveness, move flags, fused-region/loop classification).
     pub fn compile(&self, path: &Path) -> Result<Rc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(path) {
             return Ok(exe.clone());
         }
         let exe = Rc::new(match self.backend {
             Backend::Interp => {
-                let module = interp::HloModule::parse_file(path)?;
-                Executable::Interp(interp::Plan::compile(&module))
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading HLO text {}", path.display()))?;
+                Executable::Interp(plan_for_text(&text, path)?)
             }
             Backend::Pjrt => {
                 let client = self.pjrt.as_ref().expect("PJRT backend without client");
@@ -424,6 +468,34 @@ mod tests {
         assert!(!rt.platform().is_empty() && rt.platform() != "interp-cpu");
         assert!(rt.upload_f32(&[0.5], &[1]).is_ok());
         assert!(rt.compile(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn plan_cache_shares_plans_by_content() {
+        // same module text at two different paths, loaded by two
+        // different runtimes: the second load must hit the content
+        // cache (uniquely-named module so concurrent tests can't
+        // interfere with the delta accounting)
+        if std::env::var_os("QN_INTERP_STATS").is_some() {
+            return; // stats mode intentionally bypasses the cache
+        }
+        let dir = crate::util::testing::temp_dir("plan_cache");
+        let text = "HloModule plan_cache_probe_v1\n\nENTRY main.1 {\n  \
+                    x.1 = f32[2]{0} parameter(0)\n  \
+                    ROOT d.2 = f32[2]{0} add(x.1, x.1)\n}\n";
+        let (pa, pb) = (dir.join("a.hlo.txt"), dir.join("b.hlo.txt"));
+        std::fs::write(&pa, text).unwrap();
+        std::fs::write(&pb, text).unwrap();
+        let (h0, m0) = plan_cache_stats();
+        let ra = Runtime::interp();
+        ra.compile(&pa).unwrap();
+        let (h1, m1) = plan_cache_stats();
+        assert!(m1 > m0, "first load must miss ({m0} -> {m1})");
+        let rb = Runtime::interp();
+        rb.compile(&pb).unwrap();
+        let (h2, _) = plan_cache_stats();
+        assert!(h2 > h1, "same-content load must hit ({h1} -> {h2})");
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

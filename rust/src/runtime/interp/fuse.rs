@@ -1,0 +1,430 @@
+//! Loop-fusion layer on top of [`crate::runtime::interp::plan`]
+//! (DESIGN.md §4): compile-time pattern matchers that let the planned
+//! executor run the interpreter's hottest loops as superinstructions.
+//!
+//! Two patterns are recognized:
+//!
+//! * **Counted `while` loops** ([`match_counted_loop`]). The loop
+//!   condition is a compare of one integer state element against a
+//!   constant bound (`state[idx] < bound`, `LT` only) and the body's
+//!   root tuple re-binds that element to `state[idx] + 1`. The trip
+//!   count is then `max(0, bound - start)`, readable from the incoming
+//!   state — so the executor runs the body plan that many times with
+//!   the state *unpacked once into per-element registers*: no
+//!   per-iteration condition evaluation, no tuple pack/unpack steps
+//!   (the body's `get-tuple-element`s of the loop parameter become
+//!   direct register reads, the root tuple becomes direct register
+//!   writes). Anything that doesn't match — non-constant bounds,
+//!   non-unit steps, other compare directions, bodies that touch the
+//!   state parameter outside `get-tuple-element` — falls back to the
+//!   generic `while` path.
+//! * **The threefry-2x32 round body** ([`match_threefry`]), the
+//!   straight-line u32 add/xor/rotate/shift chain jax's PRNG lowers
+//!   every Quant-Noise mask sample to. Matching is structural: each
+//!   root tuple operand is resolved to a symbolic expression tree
+//!   (`reshape` and scalar `broadcast` are transparent, a unit `slice`
+//!   of a rotation parameter is a lane pick) and compared against the
+//!   canonical four-round chain. Matched calls execute as the native
+//!   [`crate::runtime::interp::ops::threefry2x32`] kernel — one
+//!   unrolled pass over the flat u32 lane buffers.
+//!
+//! **Determinism argument.** The counted-loop rewrite runs the same
+//! body steps on the same values in the same order; skipping the
+//! condition is sound because the matched condition is pure and its
+//! value is fully determined by the counter trajectory the matched
+//! increment pins down. The threefry kernel is exact u32 wrapping
+//! arithmetic — add/xor/or/shift have no rounding, so algebraic
+//! regrouping (`(x + k) + c` vs `x + (k + c)`) is bit-exact and the
+//! kernel provably equals the generic elementwise chain. Both rewrites
+//! were additionally validated bit-identically against the reference
+//! mirror on the committed fixture (`tools/qnsim/plan_mirror.py`).
+
+use std::rc::Rc;
+
+use crate::runtime::interp::parser::{BinaryOp, CmpDir, Computation, HloModule, Instr, Op};
+use crate::runtime::interp::value::{Buf, ElemType};
+
+// ------------------------------------------------------ counted loops ---
+
+/// Plan-time lowering of one counted `while` (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CountedLoop {
+    /// State tuple element holding the trip counter.
+    pub idx: usize,
+    /// Exclusive upper bound (the condition is `state[idx] < bound`).
+    pub bound: i64,
+    /// Body computation index.
+    pub body: usize,
+    /// State tuple arity.
+    pub arity: usize,
+    /// `(instruction index, state element)` for each
+    /// `get-tuple-element` of the body's loop parameter.
+    pub state_reads: Vec<(usize, usize)>,
+    /// Per `state_reads` entry: move the state slot into the register
+    /// instead of cloning (the slot feeds exactly that one read).
+    pub take_state: Vec<bool>,
+    /// Body instructions to execute per iteration, in order — the
+    /// parameter, the state reads and the root tuple are elided.
+    pub steps: Vec<usize>,
+    /// Root tuple operand registers (`arity` of them): the next state.
+    pub root_ops: Vec<usize>,
+}
+
+/// Scalar s32/u32 constant value of an instruction, if it is one.
+fn scalar_int(ins: &Instr) -> Option<i64> {
+    match &ins.op {
+        Op::Constant(c) if c.numel() == 1 => match &*c.buf {
+            Buf::S32(v) => Some(v[0] as i64),
+            Buf::U32(v) => Some(v[0] as i64),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// The single `Op::Parameter` instruction of a one-parameter
+/// computation (None if the computation is not shaped like that).
+fn single_param(c: &Computation) -> Option<usize> {
+    if c.n_params != 1 {
+        return None;
+    }
+    let mut found = None;
+    for (i, ins) in c.instrs.iter().enumerate() {
+        if matches!(ins.op, Op::Parameter(_)) {
+            if found.is_some() {
+                return None;
+            }
+            found = Some(i);
+        }
+    }
+    found
+}
+
+/// Match a `while` whose `cond`/`body` computations form a counted
+/// loop; returns the full execution spec or None (generic fallback).
+/// Dead instructions in the condition are fine (jax's conditions unpack
+/// the whole state tuple) — only the root's dependency chain matters.
+pub fn match_counted_loop(m: &HloModule, cond: usize, body: usize) -> Option<CountedLoop> {
+    // condition: ROOT compare(get-tuple-element(param, idx), const) LT
+    let c = &m.comps[cond];
+    let p = single_param(c)?;
+    let root = &c.instrs[c.root];
+    if !matches!(root.op, Op::Compare { dir: CmpDir::Lt }) || root.operands.len() != 2 {
+        return None;
+    }
+    let (a, b) = (root.operands[0], root.operands[1]);
+    let idx = match &c.instrs[a].op {
+        Op::GetTupleElement(i) if c.instrs[a].operands == [p] => *i,
+        _ => return None,
+    };
+    let bound = scalar_int(&c.instrs[b])?;
+
+    // body: one param used only by get-tuple-element, ROOT tuple whose
+    // element `idx` is add(get-tuple-element(param, idx), 1)
+    let bc = &m.comps[body];
+    let bp = single_param(bc)?;
+    let broot = &bc.instrs[bc.root];
+    if !matches!(broot.op, Op::Tuple) {
+        return None;
+    }
+    let root_ops = broot.operands.clone();
+    let arity = root_ops.len();
+    if idx >= arity {
+        return None;
+    }
+    let mut state_reads = Vec::new();
+    for (i, ins) in bc.instrs.iter().enumerate() {
+        match &ins.op {
+            Op::GetTupleElement(e) if ins.operands == [bp] => {
+                if *e >= arity {
+                    return None;
+                }
+                state_reads.push((i, *e));
+            }
+            _ => {
+                if ins.operands.contains(&bp) {
+                    return None;
+                }
+            }
+        }
+    }
+    let inc = &bc.instrs[root_ops[idx]];
+    if !matches!(inc.op, Op::Binary(BinaryOp::Add)) || inc.operands.len() != 2 {
+        return None;
+    }
+    let is_counter =
+        |i: usize| state_reads.iter().any(|&(gi, e)| gi == i && e == idx);
+    let is_one = |i: usize| scalar_int(&bc.instrs[i]) == Some(1);
+    let (x, y) = (inc.operands[0], inc.operands[1]);
+    if !(is_counter(x) && is_one(y) || is_counter(y) && is_one(x)) {
+        return None;
+    }
+
+    let take_state: Vec<bool> = state_reads
+        .iter()
+        .map(|&(_, e)| state_reads.iter().filter(|&&(_, e2)| e2 == e).count() == 1)
+        .collect();
+    let steps: Vec<usize> = (0..bc.instrs.len())
+        .filter(|&i| i != bp && i != bc.root && !state_reads.iter().any(|&(gi, _)| gi == i))
+        .collect();
+    Some(CountedLoop { idx, bound, body, arity, state_reads, take_state, steps, root_ops })
+}
+
+// ----------------------------------------------------------- threefry ---
+
+/// Symbolic expression over a straight-line u32 computation. `reshape`
+/// is transparent, `broadcast` of a one-element value is transparent
+/// (a splat — the kernel applies scalars per lane), and a unit slice
+/// of a parameter is a lane pick — so the u32[1] and u32[N] lowerings
+/// of the same round body resolve to the identical tree.
+#[derive(Debug, PartialEq)]
+enum Ex {
+    /// Parameter `k`'s (scalar-broadcast) value.
+    P(usize),
+    /// Scalar u32 constant.
+    Cu(u32),
+    /// Scalar s32 constant.
+    Cs(i32),
+    /// `slice(parameter k)[j:j+1]`.
+    Lane(usize, usize),
+    /// `convert` s32 → u32.
+    U32(Rc<Ex>),
+    Bin(BinaryOp, Rc<Ex>, Rc<Ex>),
+}
+
+fn resolve(c: &Computation, i: usize, memo: &mut [Option<Option<Rc<Ex>>>]) -> Option<Rc<Ex>> {
+    if let Some(r) = &memo[i] {
+        return r.clone();
+    }
+    let ins = &c.instrs[i];
+    let r: Option<Rc<Ex>> = match &ins.op {
+        Op::Parameter(k) => Some(Rc::new(Ex::P(*k))),
+        Op::Constant(a) if a.numel() == 1 => match &*a.buf {
+            Buf::U32(v) => Some(Rc::new(Ex::Cu(v[0]))),
+            Buf::S32(v) => Some(Rc::new(Ex::Cs(v[0]))),
+            _ => None,
+        },
+        Op::Reshape => resolve(c, ins.operands[0], memo),
+        Op::Broadcast { .. } => {
+            let o = ins.operands[0];
+            if c.instrs[o].shape.numel() == 1 {
+                resolve(c, o, memo)
+            } else {
+                None
+            }
+        }
+        Op::Convert => {
+            let o = ins.operands[0];
+            let to = ins.shape.array().map(|(t, _)| t);
+            let from = c.instrs[o].shape.array().map(|(t, _)| t);
+            match (from, to) {
+                (Ok(ElemType::S32), Ok(ElemType::U32)) => {
+                    resolve(c, o, memo).map(|e| Rc::new(Ex::U32(e)))
+                }
+                _ => None,
+            }
+        }
+        Op::Slice { spec } => match (&c.instrs[ins.operands[0]].op, &spec[..]) {
+            (Op::Parameter(k), &[(s, l, 1)]) if l == s + 1 => {
+                Some(Rc::new(Ex::Lane(*k, s)))
+            }
+            _ => None,
+        },
+        Op::Binary(
+            b @ (BinaryOp::Add
+            | BinaryOp::Xor
+            | BinaryOp::Or
+            | BinaryOp::Sub
+            | BinaryOp::Shl
+            | BinaryOp::ShrLogical),
+        ) if ins.operands.len() == 2 => {
+            match (resolve(c, ins.operands[0], memo), resolve(c, ins.operands[1], memo)) {
+                (Some(x), Some(y)) => Some(Rc::new(Ex::Bin(*b, x, y))),
+                _ => None,
+            }
+        }
+        _ => None,
+    };
+    memo[i] = Some(r.clone());
+    r
+}
+
+/// The canonical four-round threefry-2x32 body as jax lowers it:
+/// the eight root tuple operands `(i+1, x0', x1', k1, k2, k0, rot_b,
+/// rot_a)` in terms of the eight parameters
+/// `(i, x0, x1, k0, k1, k2, rot_a, rot_b)`.
+fn expected_round() -> [Rc<Ex>; 8] {
+    let p = |k| Rc::new(Ex::P(k));
+    let lane = |j| Rc::new(Ex::Lane(6, j));
+    let bin = |b, x: &Rc<Ex>, y: &Rc<Ex>| Rc::new(Ex::Bin(b, x.clone(), y.clone()));
+    let rot = |x: &Rc<Ex>, j: usize| {
+        bin(
+            BinaryOp::Or,
+            &bin(BinaryOp::Shl, x, &lane(j)),
+            &bin(
+                BinaryOp::ShrLogical,
+                x,
+                &bin(BinaryOp::Sub, &Rc::new(Ex::Cu(32)), &lane(j)),
+            ),
+        )
+    };
+    let mut x0 = bin(BinaryOp::Add, &p(1), &p(2));
+    let mut x1 = bin(BinaryOp::Xor, &x0, &rot(&p(2), 0));
+    for j in 1..4 {
+        let nx0 = bin(BinaryOp::Add, &x0, &x1);
+        x1 = bin(BinaryOp::Xor, &nx0, &rot(&x1, j));
+        x0 = nx0;
+    }
+    let out_i = bin(BinaryOp::Add, &p(0), &Rc::new(Ex::Cs(1)));
+    let out_x0 = bin(BinaryOp::Add, &x0, &p(3));
+    let out_x1 = bin(
+        BinaryOp::Add,
+        &bin(BinaryOp::Add, &x1, &p(4)),
+        &Rc::new(Ex::U32(out_i.clone())),
+    );
+    [out_i, out_x0, out_x1, p(4), p(5), p(3), p(7), p(6)]
+}
+
+/// Does `c` compute exactly one jax threefry-2x32 round group (four
+/// rounds + key injection + key/rotation rotation)? Matched call sites
+/// run [`crate::runtime::interp::ops::threefry2x32`] natively.
+pub fn match_threefry(c: &Computation) -> bool {
+    if c.n_params != 8 {
+        return false;
+    }
+    // one Parameter instruction per number, with the canonical shapes:
+    // (s32[], u32[N], u32[N], u32[], u32[], u32[], u32[4], u32[4])
+    let mut pshape: [Option<(ElemType, &[usize])>; 8] = [None; 8];
+    for ins in &c.instrs {
+        if let Op::Parameter(k) = ins.op {
+            let Ok(sh) = ins.shape.array() else { return false };
+            if k >= 8 || pshape[k].replace(sh).is_some() {
+                return false;
+            }
+        }
+    }
+    let Some(shapes) = pshape.into_iter().collect::<Option<Vec<_>>>() else {
+        return false;
+    };
+    let scalar = |k: usize, ty| shapes[k] == (ty, &[][..]);
+    if !scalar(0, ElemType::S32) || !scalar(3, ElemType::U32) {
+        return false;
+    }
+    if !scalar(4, ElemType::U32) || !scalar(5, ElemType::U32) {
+        return false;
+    }
+    let lanes_ok = shapes[1].0 == ElemType::U32 && shapes[1] == shapes[2];
+    let rots_ok = shapes[6] == (ElemType::U32, &[4][..]) && shapes[6] == shapes[7];
+    if !lanes_ok || !rots_ok {
+        return false;
+    }
+    let root = &c.instrs[c.root];
+    if !matches!(root.op, Op::Tuple) || root.operands.len() != 8 {
+        return false;
+    }
+    // output shapes must be the canonical state shapes: resolve() sees
+    // through reshape/broadcast, but the executor rebuilds the result
+    // tuple from the input shapes, so a shape-changing wrapper on a
+    // root operand must fall back to the generic call
+    let out_shapes = [shapes[0], shapes[1], shapes[2], shapes[4], shapes[5], shapes[3],
+        shapes[7], shapes[6]];
+    for (&o, want) in root.operands.iter().zip(&out_shapes) {
+        match c.instrs[o].shape.array() {
+            Ok(sh) if sh == *want => {}
+            _ => return false,
+        }
+    }
+    let mut memo = vec![None; c.instrs.len()];
+    let want = expected_round();
+    root.operands
+        .iter()
+        .zip(&want)
+        .all(|(&o, w)| resolve(c, o, &mut memo).is_some_and(|e| e == *w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::parser::parse_module;
+
+    /// A minimal counted loop: state (i, acc), i < 4, i += 1.
+    const COUNTED: &str = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], f32[2]) parameter(0)\n  \
+        i.2 = s32[] get-tuple-element(s.1), index=0\n  n.3 = s32[] constant(4)\n  \
+        ROOT lt.4 = pred[] compare(i.2, n.3), direction=LT\n}\n\nbody.1 {\n  \
+        s.1 = (s32[], f32[2]) parameter(0)\n  i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+        v.3 = f32[2]{0} get-tuple-element(s.1), index=1\n  one.4 = s32[] constant(1)\n  \
+        c.5 = f32[2]{0} constant({0.5, 0.25})\n  i2.6 = s32[] add(i.2, one.4)\n  \
+        v2.7 = f32[2]{0} add(v.3, c.5)\n  \
+        ROOT t.8 = (s32[], f32[2]) tuple(i2.6, v2.7)\n}\n\nENTRY main.1 {\n  \
+        z.1 = s32[] constant(0)\n  v0.2 = f32[2]{0} parameter(0)\n  \
+        st.3 = (s32[], f32[2]) tuple(z.1, v0.2)\n  \
+        ROOT w.4 = (s32[], f32[2]) while(st.3), condition=cond.1, body=body.1\n}\n";
+
+    #[test]
+    fn counted_loop_matches_and_plans_register_map() {
+        let m = parse_module(COUNTED).unwrap();
+        let spec = match_counted_loop(&m, 0, 1).expect("counted loop must match");
+        assert_eq!((spec.idx, spec.bound, spec.arity), (0, 4, 2));
+        // body: param(0), gte i(1), gte v(2), const(3), const(4),
+        // add(5), add(6), tuple(7)
+        assert_eq!(spec.state_reads, vec![(1, 0), (2, 1)]);
+        assert_eq!(spec.take_state, vec![true, true]);
+        assert_eq!(spec.steps, vec![3, 4, 5, 6]);
+        assert_eq!(spec.root_ops, vec![5, 6]);
+    }
+
+    #[test]
+    fn counted_loop_rejects_near_misses() {
+        // non-unit step
+        let step2 = COUNTED.replace("one.4 = s32[] constant(1)", "one.4 = s32[] constant(2)");
+        let m = parse_module(&step2).unwrap();
+        assert!(match_counted_loop(&m, 0, 1).is_none(), "step 2 must fall back");
+        // wrong compare direction
+        let ge = COUNTED.replace("direction=LT", "direction=GE");
+        let m = parse_module(&ge).unwrap();
+        assert!(match_counted_loop(&m, 0, 1).is_none(), "GE must fall back");
+        // non-constant bound (bound read from the state itself)
+        let varb = COUNTED.replace(
+            "n.3 = s32[] constant(4)",
+            "n.3 = s32[] get-tuple-element(s.1), index=0",
+        );
+        let m = parse_module(&varb).unwrap();
+        assert!(match_counted_loop(&m, 0, 1).is_none(), "dynamic bound must fall back");
+        // counter rebound to something that is not add(counter, 1)
+        let mul = COUNTED
+            .replace("i2.6 = s32[] add(i.2, one.4)", "i2.6 = s32[] multiply(i.2, one.4)");
+        let m = parse_module(&mul).unwrap();
+        assert!(match_counted_loop(&m, 0, 1).is_none(), "multiply must fall back");
+    }
+
+    #[test]
+    fn threefry_rejects_non_round_bodies() {
+        // the counted-loop fixture bodies are nothing like a round body
+        let m = parse_module(COUNTED).unwrap();
+        assert!(!match_threefry(&m.comps[0]));
+        assert!(!match_threefry(&m.comps[1]));
+        assert!(!match_threefry(&m.comps[2]));
+    }
+
+    #[test]
+    fn expected_round_tree_is_stable() {
+        // the canonical tree must stay in lockstep with the kernel: a
+        // quick structural sanity check of its outer spine
+        let want = expected_round();
+        assert_eq!(*want[3], Ex::P(4));
+        assert_eq!(*want[5], Ex::P(3));
+        match &*want[0] {
+            Ex::Bin(BinaryOp::Add, a, b) => {
+                assert_eq!(**a, Ex::P(0));
+                assert_eq!(**b, Ex::Cs(1));
+            }
+            other => panic!("{other:?}"),
+        }
+        match &*want[2] {
+            Ex::Bin(BinaryOp::Add, _, conv) => {
+                assert!(matches!(&**conv, Ex::U32(_)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

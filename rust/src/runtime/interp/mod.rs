@@ -20,9 +20,16 @@
 //! module once into a liveness-annotated instruction plan, and
 //! [`Plan::run_entry`] executes it on reference-counted copy-on-write
 //! buffers with in-place elementwise ops, fused reduce/scatter regions
-//! and a packed (optionally sharded) dot. The tree-walking [`Interp`]
-//! remains as the bit-exact reference engine the plan is golden-tested
-//! against (`tests/interp_plan.rs`).
+//! and a packed (optionally sharded) dot. A fusion pass on top
+//! ([`fuse`]) lowers counted `while` loops to a trip-counted
+//! superinstruction and executes jax's threefry-2x32 PRNG round bodies
+//! as a native u32 lane kernel ([`ops::threefry2x32`]); fused reduces,
+//! large elementwise ops and threefry lanes shard across scoped
+//! workers above a size threshold, all bit-deterministically. The
+//! tree-walking [`Interp`] remains as the bit-exact reference engine
+//! the plan is golden-tested against (`tests/interp_plan.rs`,
+//! `tests/interp_fuse.rs`); `QN_INTERP_STATS=1` prints a per-op
+//! execution histogram ([`stats`]) when a plan drops.
 //!
 //! ```text
 //!   HLO text ──parser──▶ HloModule ──Plan::compile──▶ Plan ──run_entry──▶ Value tuple
@@ -30,14 +37,16 @@
 //! ```
 
 pub mod eval;
+pub mod fuse;
 pub mod ops;
 pub mod parser;
 pub mod plan;
+pub mod stats;
 pub mod value;
 
 pub use eval::Interp;
 pub use parser::HloModule;
-pub use plan::Plan;
+pub use plan::{FusionStats, Plan, PlanOptions};
 pub use value::{ArrayValue, Buf, ElemType, Shape, Value};
 
 #[cfg(test)]

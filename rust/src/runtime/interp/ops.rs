@@ -257,20 +257,89 @@ pub fn bitcast_convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
 
 // ---------------------------------------------------- in-place kernels ---
 
+/// Element count below which intra-op sharding of elementwise /
+/// threefry / fused-reduce kernels is never worth the spawn overhead
+/// (the packed dot keeps its own `DOT_PAR_MIN` with the same value).
+pub const ELEM_PAR_MIN: usize = 4096;
+
+/// Run `f` over contiguous chunks of `xs` on up to `workers` scoped
+/// threads. Each element is written by exactly one worker with the same
+/// scalar kernel it would see serially, so the result is bit-identical
+/// at any worker count; errors propagate (first chunk's error wins).
+fn shard_mut<T: Send>(
+    xs: &mut [T],
+    workers: usize,
+    f: impl Fn(usize, &mut [T]) -> Result<()> + Sync,
+) -> Result<()> {
+    let w = workers.min(xs.len()).max(1);
+    if w <= 1 {
+        return f(0, xs);
+    }
+    let chunk = xs.len().div_ceil(w);
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = xs
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, c)| s.spawn(move || f(ci * chunk, c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("elementwise worker panicked"))
+            .collect::<Result<()>>()
+    })
+}
+
+fn unary_f32_slice(op: UnaryOp, x: &mut [f32]) -> Result<()> {
+    match op {
+        UnaryOp::Negate => x.iter_mut().for_each(|v| *v = -*v),
+        UnaryOp::Exp => x.iter_mut().for_each(|v| *v = v.exp()),
+        UnaryOp::Log => x.iter_mut().for_each(|v| *v = v.ln()),
+        UnaryOp::Rsqrt => x.iter_mut().for_each(|v| *v = 1.0 / v.sqrt()),
+        UnaryOp::Sine => x.iter_mut().for_each(|v| *v = v.sin()),
+        UnaryOp::Cosine => x.iter_mut().for_each(|v| *v = v.cos()),
+        UnaryOp::RoundNearestEven => x.iter_mut().for_each(|v| *v = v.round_ties_even()),
+    }
+    Ok(())
+}
+
 /// [`unary`] with the result written back into `a`'s storage.
 pub fn unary_inplace(op: UnaryOp, a: &mut Buf) -> Result<()> {
+    unary_inplace_sharded(op, a, 1)
+}
+
+/// [`unary_inplace`] sharded across `workers` above [`ELEM_PAR_MIN`]
+/// elements (bit-identical at any worker count).
+pub fn unary_inplace_sharded(op: UnaryOp, a: &mut Buf, workers: usize) -> Result<()> {
+    let w = if a.len() >= ELEM_PAR_MIN { workers } else { 1 };
     match (a, op) {
-        (Buf::F32(x), UnaryOp::Negate) => x.iter_mut().for_each(|v| *v = -*v),
-        (Buf::S32(x), UnaryOp::Negate) => x.iter_mut().for_each(|v| *v = v.wrapping_neg()),
-        (Buf::F32(x), UnaryOp::Exp) => x.iter_mut().for_each(|v| *v = v.exp()),
-        (Buf::F32(x), UnaryOp::Log) => x.iter_mut().for_each(|v| *v = v.ln()),
-        (Buf::F32(x), UnaryOp::Rsqrt) => x.iter_mut().for_each(|v| *v = 1.0 / v.sqrt()),
-        (Buf::F32(x), UnaryOp::Sine) => x.iter_mut().for_each(|v| *v = v.sin()),
-        (Buf::F32(x), UnaryOp::Cosine) => x.iter_mut().for_each(|v| *v = v.cos()),
-        (Buf::F32(x), UnaryOp::RoundNearestEven) => {
-            x.iter_mut().for_each(|v| *v = v.round_ties_even())
+        (Buf::F32(x), _) => shard_mut(x, w, |_, c| unary_f32_slice(op, c)),
+        (Buf::S32(x), UnaryOp::Negate) => {
+            shard_mut(x, w, |_, c| {
+                c.iter_mut().for_each(|v| *v = v.wrapping_neg());
+                Ok(())
+            })
         }
         (b, o) => bail!("unary {o:?} unsupported for {}", b.ty().name()),
+    }
+}
+
+/// Apply `step(lhs, rhs)` in place over a dst/src chunk pair. `step`'s
+/// (lhs, rhs) value order matches [`binary`] exactly.
+fn bin_slice<T: Copy>(
+    dst_is_lhs: bool,
+    d: &mut [T],
+    o: &[T],
+    step: impl Fn(T, T) -> Result<T>,
+) -> Result<()> {
+    if dst_is_lhs {
+        for (x, &y) in d.iter_mut().zip(o) {
+            *x = step(*x, y)?;
+        }
+    } else {
+        for (x, &y) in d.iter_mut().zip(o) {
+            *x = step(y, *x)?;
+        }
     }
     Ok(())
 }
@@ -279,93 +348,147 @@ pub fn unary_inplace(op: UnaryOp, a: &mut Buf) -> Result<()> {
 /// `dst_is_lhs` says which operand `dst` holds; the (lhs, rhs) value
 /// order — and hence every rounding — matches [`binary`] exactly.
 pub fn binary_inplace(op: BinaryOp, dst_is_lhs: bool, dst: &mut Buf, other: &Buf) -> Result<()> {
+    binary_inplace_sharded(op, dst_is_lhs, dst, other, 1)
+}
+
+/// [`binary_inplace`] sharded across `workers` above [`ELEM_PAR_MIN`]
+/// elements (bit-identical at any worker count).
+pub fn binary_inplace_sharded(
+    op: BinaryOp,
+    dst_is_lhs: bool,
+    dst: &mut Buf,
+    other: &Buf,
+    workers: usize,
+) -> Result<()> {
     ensure!(dst.len() == other.len(), "binary {op:?} length mismatch");
+    let w = if dst.len() >= ELEM_PAR_MIN { workers } else { 1 };
     match (dst, other) {
         (Buf::F32(d), Buf::F32(o)) => {
-            if dst_is_lhs {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = f32_bin(op, *x, y)?;
-                }
-            } else {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = f32_bin(op, y, *x)?;
-                }
-            }
+            shard_mut(d, w, |lo, c| {
+                bin_slice(dst_is_lhs, c, &o[lo..lo + c.len()], |a, b| f32_bin(op, a, b))
+            })
         }
         (Buf::U32(d), Buf::U32(o)) => {
-            if dst_is_lhs {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = u32_bin(op, *x, y)?;
-                }
-            } else {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = u32_bin(op, y, *x)?;
-                }
-            }
+            shard_mut(d, w, |lo, c| {
+                bin_slice(dst_is_lhs, c, &o[lo..lo + c.len()], |a, b| u32_bin(op, a, b))
+            })
         }
         (Buf::S32(d), Buf::S32(o)) => {
-            if dst_is_lhs {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = s32_bin(op, *x, y)?;
-                }
-            } else {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = s32_bin(op, y, *x)?;
-                }
-            }
+            shard_mut(d, w, |lo, c| {
+                bin_slice(dst_is_lhs, c, &o[lo..lo + c.len()], |a, b| s32_bin(op, a, b))
+            })
         }
         (Buf::Pred(d), Buf::Pred(o)) => {
             let f = pred_bin(op)?;
-            if dst_is_lhs {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = f(*x, y);
-                }
-            } else {
-                for (x, &y) in d.iter_mut().zip(o) {
-                    *x = f(y, *x);
-                }
-            }
+            shard_mut(d, w, |lo, c| {
+                bin_slice(dst_is_lhs, c, &o[lo..lo + c.len()], |a, b| Ok(f(a, b)))
+            })
         }
         _ => bail!("binary {op:?} operand type mismatch"),
     }
-    Ok(())
+}
+
+fn select_slice<T: Copy>(pred: &[bool], dst_is_true: bool, d: &mut [T], o: &[T]) {
+    for (i, &take_t) in pred.iter().enumerate() {
+        if take_t != dst_is_true {
+            d[i] = o[i];
+        }
+    }
 }
 
 /// [`select`] with the result written into one branch's buffer
 /// (`dst_is_true`: `dst` holds the on-true values).
 pub fn select_inplace(pred: &[bool], dst_is_true: bool, dst: &mut Buf, other: &Buf) -> Result<()> {
+    select_inplace_sharded(pred, dst_is_true, dst, other, 1)
+}
+
+/// [`select_inplace`] sharded across `workers` above [`ELEM_PAR_MIN`]
+/// elements (bit-identical at any worker count).
+pub fn select_inplace_sharded(
+    pred: &[bool],
+    dst_is_true: bool,
+    dst: &mut Buf,
+    other: &Buf,
+    workers: usize,
+) -> Result<()> {
     ensure!(pred.len() == dst.len() && dst.len() == other.len(), "select shape mismatch");
     ensure!(dst.ty() == other.ty(), "select branch type mismatch");
+    let w = if dst.len() >= ELEM_PAR_MIN { workers } else { 1 };
     match (dst, other) {
-        (Buf::F32(d), Buf::F32(o)) => {
-            for (i, &take_t) in pred.iter().enumerate() {
-                if take_t != dst_is_true {
-                    d[i] = o[i];
-                }
-            }
-        }
-        (Buf::S32(d), Buf::S32(o)) => {
-            for (i, &take_t) in pred.iter().enumerate() {
-                if take_t != dst_is_true {
-                    d[i] = o[i];
-                }
-            }
-        }
-        (Buf::U32(d), Buf::U32(o)) => {
-            for (i, &take_t) in pred.iter().enumerate() {
-                if take_t != dst_is_true {
-                    d[i] = o[i];
-                }
-            }
-        }
-        (Buf::Pred(d), Buf::Pred(o)) => {
-            for (i, &take_t) in pred.iter().enumerate() {
-                if take_t != dst_is_true {
-                    d[i] = o[i];
-                }
-            }
-        }
+        (Buf::F32(d), Buf::F32(o)) => shard_mut(d, w, |lo, c| {
+            select_slice(&pred[lo..lo + c.len()], dst_is_true, c, &o[lo..lo + c.len()]);
+            Ok(())
+        }),
+        (Buf::S32(d), Buf::S32(o)) => shard_mut(d, w, |lo, c| {
+            select_slice(&pred[lo..lo + c.len()], dst_is_true, c, &o[lo..lo + c.len()]);
+            Ok(())
+        }),
+        (Buf::U32(d), Buf::U32(o)) => shard_mut(d, w, |lo, c| {
+            select_slice(&pred[lo..lo + c.len()], dst_is_true, c, &o[lo..lo + c.len()]);
+            Ok(())
+        }),
+        (Buf::Pred(d), Buf::Pred(o)) => shard_mut(d, w, |lo, c| {
+            select_slice(&pred[lo..lo + c.len()], dst_is_true, c, &o[lo..lo + c.len()]);
+            Ok(())
+        }),
         _ => bail!("select branch type mismatch"),
+    }
+}
+
+// ------------------------------------------------------------ threefry ---
+
+/// Rotate-left as the HLO round body composes it:
+/// `shl(v, r) | shr(v, 32 - r)` under XLA shift semantics (a shift
+/// amount ≥ 32 yields 0, and `32 - r` wraps as u32) — exact for every
+/// `r`, including 0 and ≥ 32.
+#[inline]
+pub(crate) fn rotl_xla(v: u32, r: u32) -> u32 {
+    let shl = if r >= 32 { 0 } else { v << r };
+    let s = 32u32.wrapping_sub(r);
+    let shr = if s >= 32 { 0 } else { v >> s };
+    shl | shr
+}
+
+fn threefry_sweep(x0: &mut [u32], x1: &mut [u32], rot: &[u32; 4], k0: u32, k1: u32) {
+    for (a, b) in x0.iter_mut().zip(x1.iter_mut()) {
+        let (mut x, mut y) = (*a, *b);
+        for &r in rot {
+            x = x.wrapping_add(y);
+            y = x ^ rotl_xla(y, r);
+        }
+        *a = x.wrapping_add(k0);
+        *b = y.wrapping_add(k1);
+    }
+}
+
+/// Native threefry-2x32 round group: four add/xor/rotate rounds then
+/// key injection, swept over all lanes in one unrolled pass. Exact u32
+/// wrapping arithmetic — bit-identical to the generic elementwise
+/// chain it replaces (validated against the reference mirror on the
+/// committed fixture, `tools/qnsim/plan_mirror.py`). `k1` already
+/// carries the round-index injection (`key + (i+1)`): u32 addition is
+/// associative, so folding it in is exact. Lanes shard across scoped
+/// workers above [`ELEM_PAR_MIN`]; each lane is independent, so the
+/// result is bit-identical at any worker count.
+pub fn threefry2x32(
+    x0: &mut [u32],
+    x1: &mut [u32],
+    rot: &[u32; 4],
+    k0: u32,
+    k1: u32,
+    workers: usize,
+) -> Result<()> {
+    ensure!(x0.len() == x1.len(), "threefry lane count mismatch");
+    let w = if x0.len() >= ELEM_PAR_MIN { workers.min(x0.len()).max(1) } else { 1 };
+    if w <= 1 {
+        threefry_sweep(x0, x1, rot, k0, k1);
+    } else {
+        let chunk = x0.len().div_ceil(w);
+        std::thread::scope(|s| {
+            for (ca, cb) in x0.chunks_mut(chunk).zip(x1.chunks_mut(chunk)) {
+                s.spawn(move || threefry_sweep(ca, cb, rot, k0, k1));
+            }
+        });
     }
     Ok(())
 }
@@ -684,6 +807,47 @@ impl ReduceGeom {
     }
 }
 
+/// Fold every output cell of a fused single-binary-op reduce: cell `f`
+/// folds its `g.rn` reduced elements in ascending row-major order onto
+/// `i0` with `step` — the identical visit order and scalar helper as
+/// the generic region path, so the result is bit-identical to it.
+/// Output cells shard across `workers` scoped threads above
+/// [`ELEM_PAR_MIN`] total elements; each cell's fold is computed by
+/// exactly one worker and chunks merge in ascending order, so the
+/// result is also bit-identical at any worker count.
+pub(crate) fn fold_cells<T: Copy + Send + Sync>(
+    g: &ReduceGeom,
+    xs: &[T],
+    i0: T,
+    step: impl Fn(T, T) -> Result<T> + Sync,
+    workers: usize,
+) -> Result<Vec<T>> {
+    let contiguous = g.contiguous();
+    let run = |lo: usize, out: &mut [T]| -> Result<()> {
+        let (mut oi, mut ri) = g.scratch();
+        for (k, slot) in out.iter_mut().enumerate() {
+            let f = lo + k;
+            let mut acc = i0;
+            if contiguous {
+                for &v in &xs[f * g.rn..(f + 1) * g.rn] {
+                    acc = step(acc, v)?;
+                }
+            } else {
+                let base = g.cell_base(f, &mut oi);
+                for rf in 0..g.rn {
+                    acc = step(acc, xs[g.elem_index(base, rf, &mut ri)])?;
+                }
+            }
+            *slot = acc;
+        }
+        Ok(())
+    };
+    let mut out = vec![i0; g.n];
+    let big = g.n.saturating_mul(g.rn) >= ELEM_PAR_MIN;
+    shard_mut(&mut out, if big { workers } else { 1 }, run)?;
+    Ok(out)
+}
+
 // ------------------------------------------------------------- scatter ---
 
 /// StableHLO scatter index geometry, shared by every engine (the
@@ -817,6 +981,122 @@ mod tests {
         let mut d = (*b.buf).clone();
         select_inplace(&pred, false, &mut d, &a.buf).unwrap();
         assert_eq!(d, *want.buf);
+    }
+
+    #[test]
+    fn threefry_kernel_matches_generic_hlo_composition() {
+        // one round group computed via the exact u32_bin ops the
+        // generic while body executes, vs the native kernel
+        let rot = [13u32, 15, 26, 6];
+        let (k0, k1) = (0x1BD1_1BDAu32, 0x9E37_79B9);
+        let lanes: Vec<u32> = (0..100).map(|i| (i as u32).wrapping_mul(0x9E37_79B9)).collect();
+        let mut x0: Vec<u32> = lanes.clone();
+        let mut x1: Vec<u32> = lanes.iter().map(|v| v ^ 0xDEAD_BEEF).collect();
+        let (gen0, gen1): (Vec<u32>, Vec<u32>) = x0
+            .iter()
+            .zip(&x1)
+            .map(|(&a, &b)| {
+                let (mut x, mut y) = (a, b);
+                for &r in &rot {
+                    x = u32_bin(BinaryOp::Add, x, y).unwrap();
+                    let shl = u32_bin(BinaryOp::Shl, y, r).unwrap();
+                    let s = u32_bin(BinaryOp::Sub, 32, r).unwrap();
+                    let shr = u32_bin(BinaryOp::ShrLogical, y, s).unwrap();
+                    y = u32_bin(BinaryOp::Xor, x, u32_bin(BinaryOp::Or, shl, shr).unwrap())
+                        .unwrap();
+                }
+                (
+                    u32_bin(BinaryOp::Add, x, k0).unwrap(),
+                    u32_bin(BinaryOp::Add, y, k1).unwrap(),
+                )
+            })
+            .unzip();
+        threefry2x32(&mut x0, &mut x1, &rot, k0, k1, 1).unwrap();
+        assert_eq!(x0, gen0);
+        assert_eq!(x1, gen1);
+    }
+
+    #[test]
+    fn rotl_xla_edge_rotations() {
+        // r = 0 and r >= 32 follow the XLA shift composition, not a
+        // CPU rotate instruction
+        assert_eq!(rotl_xla(0x8000_0001, 0), 0x8000_0001);
+        assert_eq!(rotl_xla(0x8000_0001, 1), 0x0000_0003);
+        assert_eq!(rotl_xla(0x8000_0001, 31), 0xC000_0000);
+        assert_eq!(rotl_xla(0x8000_0001, 32), 0); // both shifts yield 0
+        assert_eq!(rotl_xla(0x8000_0001, 40), 0);
+    }
+
+    #[test]
+    fn threefry_sharded_is_bit_identical() {
+        let rot = [17u32, 29, 16, 24];
+        let n = ELEM_PAR_MIN + 37; // above the sharding threshold
+        let base0: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let base1: Vec<u32> = (0..n as u32).map(|i| i ^ 0xA5A5_A5A5).collect();
+        let (mut s0, mut s1) = (base0.clone(), base1.clone());
+        threefry2x32(&mut s0, &mut s1, &rot, 7, 11, 1).unwrap();
+        for workers in [2usize, 3, 8] {
+            let (mut p0, mut p1) = (base0.clone(), base1.clone());
+            threefry2x32(&mut p0, &mut p1, &rot, 7, 11, workers).unwrap();
+            assert_eq!(p0, s0, "workers={workers}");
+            assert_eq!(p1, s1, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn sharded_inplace_elementwise_matches_serial() {
+        let n = ELEM_PAR_MIN + 11;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| 0.5 + (i % 7) as f32).collect();
+        let pred: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+        for workers in [2usize, 3, 8] {
+            let mut serial = Buf::F32(a.clone());
+            binary_inplace(BinaryOp::Div, false, &mut serial, &Buf::F32(b.clone())).unwrap();
+            let mut sharded = Buf::F32(a.clone());
+            binary_inplace_sharded(
+                BinaryOp::Div,
+                false,
+                &mut sharded,
+                &Buf::F32(b.clone()),
+                workers,
+            )
+            .unwrap();
+            assert_eq!(serial, sharded, "binary workers={workers}");
+
+            let mut serial = Buf::F32(a.clone());
+            unary_inplace(UnaryOp::Exp, &mut serial).unwrap();
+            let mut sharded = Buf::F32(a.clone());
+            unary_inplace_sharded(UnaryOp::Exp, &mut sharded, workers).unwrap();
+            assert_eq!(serial, sharded, "unary workers={workers}");
+
+            let mut serial = Buf::F32(a.clone());
+            select_inplace(&pred, true, &mut serial, &Buf::F32(b.clone())).unwrap();
+            let mut sharded = Buf::F32(a.clone());
+            select_inplace_sharded(&pred, true, &mut sharded, &Buf::F32(b.clone()), workers)
+                .unwrap();
+            assert_eq!(serial, sharded, "select workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fold_cells_sharded_matches_serial_contiguous_and_strided() {
+        // 96 cells x 64 reduced elements, above the sharding threshold
+        let dims = [96usize, 64];
+        let xs: Vec<f32> = (0..dims[0] * dims[1]).map(|i| ((i * 37 % 101) as f32) - 50.0).collect();
+        let step = |a: f32, v: f32| f32_bin(BinaryOp::Add, a, v);
+        // contiguous: reduce the trailing dim; strided: the leading dim
+        for red in [vec![1usize], vec![0]] {
+            let g = ReduceGeom::new(&dims, &red);
+            let serial = fold_cells(&g, &xs, 0.0f32, step, 1).unwrap();
+            for workers in [2usize, 3, 8] {
+                let sharded = fold_cells(&g, &xs, 0.0f32, step, workers).unwrap();
+                let same = serial
+                    .iter()
+                    .zip(&sharded)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "red={red:?} workers={workers}");
+            }
+        }
     }
 
     #[test]

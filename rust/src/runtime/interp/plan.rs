@@ -18,36 +18,90 @@
 //!   contiguous `[batch][free][k]` panels and accumulates over
 //!   contiguous rows; large outputs shard across `thread::scope`
 //!   workers.
+//! * **Loop fusion** ([`crate::runtime::interp::fuse`]). Counted
+//!   `while` loops run as a trip-counted superinstruction on unpacked
+//!   state registers (no per-iteration condition or tuple
+//!   pack/unpack), and jax's threefry-2x32 PRNG round bodies execute
+//!   as the native [`ops::threefry2x32`] kernel — one unrolled pass
+//!   over the flat u32 lanes instead of ~55 tiny-array ops.
+//! * **Intra-op sharding.** Fused reduces, large elementwise ops and
+//!   threefry lanes shard across `thread::scope` workers above a size
+//!   threshold, merged in ascending-shard order like the packed dot.
 //!
 //! **Determinism contract (DESIGN.md §4).** Every kernel visits the
 //! same elements in the same order as the reference evaluator and uses
-//! the identical per-element scalar helpers, so planned execution is
+//! the identical per-element scalar helpers (integer superinstructions
+//! regroup only exact wrapping arithmetic), so planned execution is
 //! bit-identical to the tree walk — and, because each output element is
 //! computed independently by the same scalar code regardless of
 //! sharding, bit-identical across thread counts (the same contract as
 //! `quant::assign`). Golden-tested on the `lm_tiny` fixture in
-//! `tests/interp_plan.rs`.
+//! `tests/interp_plan.rs` and `tests/interp_fuse.rs`.
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::runtime::interp::fuse::{self, CountedLoop};
 use crate::runtime::interp::ops::{self, f32_bin, pred_bin, s32_bin, u32_bin};
 use crate::runtime::interp::parser::{
-    BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims,
+    BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims, UnaryOp,
 };
+use crate::runtime::interp::stats::Stats;
 use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, Shape, Value};
 
 /// Output-element count above which the packed dot shards its output
 /// rows across worker threads (below it, spawn overhead dominates).
 const DOT_PAR_MIN: usize = 4096;
 
-/// Fused lowering of a `reduce`/`scatter` region, decided at plan time.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Fused lowering of an instruction, decided at plan time.
+#[derive(Debug, Clone, PartialEq)]
 enum Fused {
-    /// Run the sub-computation per element (general fallback).
+    /// Run the sub-computation per element / iteration (general
+    /// fallback).
     None,
-    /// Region is a single scalar binary op; `acc_first` says whether it
-    /// computes `op(acc, elem)` (else `op(elem, acc)`).
+    /// Reduce/scatter region is a single scalar binary op; `acc_first`
+    /// says whether it computes `op(acc, elem)` (else `op(elem, acc)`).
     Bin { op: BinaryOp, acc_first: bool },
+    /// Counted `while`: run the body plan `bound - start` times on
+    /// unpacked state registers, no per-iteration condition or tuple
+    /// pack/unpack (see [`crate::runtime::interp::fuse`]).
+    Counted(Box<CountedLoop>),
+    /// `call` to a threefry-2x32 round body: execute the native
+    /// [`ops::threefry2x32`] kernel over the flat u32 lanes.
+    Threefry,
+}
+
+/// Which fusion rewrites [`Plan::compile_opts`] applies. Disabling them
+/// (benches, regression tests) yields the pre-fusion planned executor;
+/// results are bit-identical either way.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Lower counted `while` loops to the trip-counted
+    /// superinstruction ([`crate::runtime::interp::fuse`]).
+    pub counted_loops: bool,
+    /// Execute matched threefry round bodies natively.
+    pub threefry: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { counted_loops: true, threefry: true }
+    }
+}
+
+/// Plan-time fusion census (tests / diagnostics): how many
+/// instructions each rewrite captured, module-wide.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    /// `while` instructions lowered to counted loops.
+    pub counted_loops: usize,
+    /// `while` instructions left on the generic path.
+    pub generic_whiles: usize,
+    /// `call` sites executing the native threefry kernel.
+    pub threefry_calls: usize,
+    /// Reduce instructions with an inlined single-binary-op region.
+    pub fused_reduces: usize,
+    /// Scatter instructions with an inlined single-binary-op region.
+    pub fused_scatters: usize,
 }
 
 /// One computation lowered for planned execution.
@@ -72,18 +126,29 @@ pub struct Plan {
     comps: Vec<CompPlan>,
     entry: usize,
     entry_params: Vec<Option<Shape>>,
+    /// `QN_INTERP_STATS` op histogram, printed when the plan drops.
+    stats: Option<Stats>,
 }
 
 impl Plan {
     /// Lower a parsed module: compute last-use liveness and move flags
-    /// per computation and classify fusable reduce/scatter regions.
+    /// per computation and classify fusable regions (single-binary-op
+    /// reduce/scatter, counted `while` loops, threefry round calls).
     pub fn compile(m: &HloModule) -> Plan {
+        Plan::compile_opts(m, PlanOptions::default())
+    }
+
+    /// [`Plan::compile`] with explicit fusion switches.
+    pub fn compile_opts(m: &HloModule, opts: PlanOptions) -> Plan {
+        let threefry: Vec<bool> =
+            m.comps.iter().map(|c| opts.threefry && fuse::match_threefry(c)).collect();
         let comps = m
             .comps
             .iter()
             .map(|c| {
                 let (free_after, take) = analyze(c);
-                let fused = c.instrs.iter().map(|ins| classify(m, ins)).collect();
+                let fused =
+                    c.instrs.iter().map(|ins| classify(m, ins, &threefry, opts)).collect();
                 CompPlan {
                     name: c.name.clone(),
                     instrs: c.instrs.clone(),
@@ -102,7 +167,25 @@ impl Plan {
                 entry_params[*i] = Some(ins.shape.clone());
             }
         }
-        Plan { comps, entry: m.entry, entry_params }
+        Plan { comps, entry: m.entry, entry_params, stats: Stats::from_env(&m.name) }
+    }
+
+    /// How many instructions each fusion rewrite captured.
+    pub fn fusion_stats(&self) -> FusionStats {
+        let mut fs = FusionStats::default();
+        for comp in &self.comps {
+            for (ins, fused) in comp.instrs.iter().zip(&comp.fused) {
+                match (&ins.op, fused) {
+                    (Op::While { .. }, Fused::Counted(_)) => fs.counted_loops += 1,
+                    (Op::While { .. }, _) => fs.generic_whiles += 1,
+                    (Op::Call { .. }, Fused::Threefry) => fs.threefry_calls += 1,
+                    (Op::Reduce { .. }, Fused::Bin { .. }) => fs.fused_reduces += 1,
+                    (Op::Scatter { .. }, Fused::Bin { .. }) => fs.fused_scatters += 1,
+                    _ => {}
+                }
+            }
+        }
+        fs
     }
 
     /// Declared shape of ENTRY parameter `i` (None if the parameter
@@ -187,7 +270,7 @@ fn match_bin_region(c: &Computation) -> Option<(BinaryOp, bool)> {
     None
 }
 
-fn classify(m: &HloModule, ins: &Instr) -> Fused {
+fn classify(m: &HloModule, ins: &Instr, threefry: &[bool], opts: PlanOptions) -> Fused {
     let target = match &ins.op {
         Op::Reduce { comp, .. }
             if ins.operands.len() == 2 && matches!(ins.shape, Shape::Array { .. }) =>
@@ -195,11 +278,78 @@ fn classify(m: &HloModule, ins: &Instr) -> Fused {
             *comp
         }
         Op::Scatter { comp, .. } if ins.operands.len() == 3 => *comp,
+        Op::Call { comp } if threefry[*comp] => return Fused::Threefry,
+        Op::While { cond, body } if opts.counted_loops => {
+            return match fuse::match_counted_loop(m, *cond, *body) {
+                Some(spec) => Fused::Counted(Box::new(spec)),
+                None => Fused::None,
+            };
+        }
         _ => return Fused::None,
     };
     match match_bin_region(&m.comps[target]) {
         Some((op, acc_first)) => Fused::Bin { op, acc_first },
         None => Fused::None,
+    }
+}
+
+/// Stats label of one planned instruction, plus whether it is a *leaf*
+/// (does not recurse into sub-plans, so its wall-clock is self time).
+fn op_label(ins: &Instr, fused: &Fused) -> (&'static str, bool) {
+    match (&ins.op, fused) {
+        (Op::While { .. }, Fused::Counted(_)) => ("while[counted]", false),
+        (Op::While { .. }, _) => ("while[generic]", false),
+        (Op::Call { .. }, Fused::Threefry) => ("call[threefry2x32]", true),
+        (Op::Call { .. }, _) => ("call", false),
+        (Op::Reduce { .. }, Fused::Bin { .. }) => ("reduce[fused]", true),
+        (Op::Reduce { .. }, _) => ("reduce[generic]", false),
+        (Op::Scatter { .. }, Fused::Bin { .. }) => ("scatter[fused]", true),
+        (Op::Scatter { .. }, _) => ("scatter[generic]", false),
+        (Op::Dot(_), _) => ("dot[packed]", true),
+        (Op::Parameter(_), _) => ("parameter", true),
+        (Op::Constant(_), _) => ("constant", true),
+        (Op::Tuple, _) => ("tuple", true),
+        (Op::GetTupleElement(_), _) => ("get-tuple-element", true),
+        (Op::Iota { .. }, _) => ("iota", true),
+        (Op::Broadcast { .. }, _) => ("broadcast", true),
+        (Op::Reshape, _) => ("reshape", true),
+        (Op::Transpose { .. }, _) => ("transpose", true),
+        (Op::Slice { .. }, _) => ("slice", true),
+        (Op::Concatenate { .. }, _) => ("concatenate", true),
+        (Op::Select, _) => ("select", true),
+        (Op::Compare { .. }, _) => ("compare", true),
+        (Op::Convert, _) => ("convert", true),
+        (Op::BitcastConvert, _) => ("bitcast-convert", true),
+        (Op::Gather(_), _) => ("gather", true),
+        (Op::Unary(u), _) => (
+            match u {
+                UnaryOp::Negate => "negate",
+                UnaryOp::Exp => "exponential",
+                UnaryOp::Log => "log",
+                UnaryOp::Rsqrt => "rsqrt",
+                UnaryOp::Sine => "sine",
+                UnaryOp::Cosine => "cosine",
+                UnaryOp::RoundNearestEven => "round-nearest-even",
+            },
+            true,
+        ),
+        (Op::Binary(b), _) => (
+            match b {
+                BinaryOp::Add => "add",
+                BinaryOp::Sub => "subtract",
+                BinaryOp::Mul => "multiply",
+                BinaryOp::Div => "divide",
+                BinaryOp::Max => "maximum",
+                BinaryOp::Min => "minimum",
+                BinaryOp::Pow => "power",
+                BinaryOp::And => "and",
+                BinaryOp::Or => "or",
+                BinaryOp::Xor => "xor",
+                BinaryOp::Shl => "shift-left",
+                BinaryOp::ShrLogical => "shift-right-logical",
+            },
+            true,
+        ),
     }
 }
 
@@ -224,7 +374,7 @@ impl<'p> Executor<'p> {
         let mut regs: Vec<Option<Value>> = (0..comp.instrs.len()).map(|_| None).collect();
         for si in 0..comp.instrs.len() {
             let v = self
-                .step(comp, si, &mut regs, &mut args)
+                .exec_step(comp, si, &mut regs, &mut args)
                 .with_context(|| format!("executing {}::{}", comp.name, comp.instrs[si].name))?;
             regs[si] = Some(v);
             for &r in &comp.free_after[si] {
@@ -232,6 +382,30 @@ impl<'p> Executor<'p> {
             }
         }
         Ok(regs[comp.root].take().expect("root register computed"))
+    }
+
+    /// [`Executor::step`], wrapped with the optional stats collector:
+    /// leaf ops record self time, recursive ops record counts only.
+    fn exec_step(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        regs: &mut Vec<Option<Value>>,
+        args: &mut [Option<Value>],
+    ) -> Result<Value> {
+        let Some(stats) = &self.plan.stats else {
+            return self.step(comp, si, regs, args);
+        };
+        let (label, leaf) = op_label(&comp.instrs[si], &comp.fused[si]);
+        if leaf {
+            let t0 = std::time::Instant::now();
+            let v = self.step(comp, si, regs, args);
+            stats.record(label, Some(t0.elapsed()));
+            v
+        } else {
+            stats.record(label, None);
+            self.step(comp, si, regs, args)
+        }
     }
 
     /// Operand `k` of step `si` by value: moved out of its register
@@ -294,6 +468,9 @@ impl<'p> Executor<'p> {
                 }
             }
             Op::Call { comp: target } => {
+                if matches!(comp.fused[si], Fused::Threefry) {
+                    return self.threefry_call(comp, si, regs);
+                }
                 let mut cargs = Vec::with_capacity(ins.operands.len());
                 for k in 0..ins.operands.len() {
                     cargs.push(self.fetch(comp, si, k, regs));
@@ -301,6 +478,10 @@ impl<'p> Executor<'p> {
                 self.run(*target, cargs)?
             }
             Op::While { cond, body } => {
+                if let Fused::Counted(spec) = &comp.fused[si] {
+                    let init = self.fetch(comp, si, 0, regs);
+                    return self.counted_loop(spec, init);
+                }
                 let mut state = self.fetch(comp, si, 0, regs);
                 loop {
                     let p = self.run(*cond, vec![state.clone()])?;
@@ -343,9 +524,12 @@ impl<'p> Executor<'p> {
             }
             Op::Select => {
                 let (t1, t2) = (comp.take[si][1], comp.take[si][2]);
-                if t1 || t2 {
-                    let (dst_is_true, dst_k, src_k) =
-                        if t1 { (true, 1, 2) } else { (false, 2, 1) };
+                let (dst_is_true, dst_k, src_k) =
+                    if t2 && !t1 { (false, 2, 1) } else { (true, 1, 2) };
+                if t1 || t2 || self.arr(comp, si, 0, regs)?.numel() >= ops::ELEM_PAR_MIN {
+                    // in-place when a branch dies here; for large fresh
+                    // outputs, CoW-clone the kept branch then run the
+                    // sharded kernel (bit-identical to the serial copy)
                     let mut dst = self.fetch(comp, si, dst_k, regs).into_array()?;
                     let p = self.arr(comp, si, 0, regs)?;
                     let src = self.arr(comp, si, src_k, regs)?;
@@ -354,7 +538,13 @@ impl<'p> Executor<'p> {
                         "select shape mismatch"
                     );
                     let pred = p.as_pred()?;
-                    ops::select_inplace(pred, dst_is_true, dst.buf_mut(), &src.buf)?;
+                    ops::select_inplace_sharded(
+                        pred,
+                        dst_is_true,
+                        dst.buf_mut(),
+                        &src.buf,
+                        self.threads,
+                    )?;
                     Value::Array(dst)
                 } else {
                     Value::Array(ops::select(
@@ -390,9 +580,12 @@ impl<'p> Executor<'p> {
                 }
             }
             Op::Unary(u) => {
-                if comp.take[si][0] {
+                if comp.take[si][0] || self.arr(comp, si, 0, regs)?.numel() >= ops::ELEM_PAR_MIN
+                {
+                    // in-place on a dying operand, or CoW-clone + the
+                    // sharded kernel for large fresh outputs
                     let mut a = self.fetch(comp, si, 0, regs).into_array()?;
-                    ops::unary_inplace(*u, a.buf_mut())?;
+                    ops::unary_inplace_sharded(*u, a.buf_mut(), self.threads)?;
                     Value::Array(a)
                 } else {
                     Value::Array(ops::unary(*u, self.arr(comp, si, 0, regs)?)?)
@@ -400,9 +593,9 @@ impl<'p> Executor<'p> {
             }
             Op::Binary(b) => {
                 let (t0, t1) = (comp.take[si][0], comp.take[si][1]);
-                if t0 || t1 {
-                    let (dst_is_lhs, dst_k, src_k) =
-                        if t0 { (true, 0, 1) } else { (false, 1, 0) };
+                let (dst_is_lhs, dst_k, src_k) =
+                    if t1 && !t0 { (false, 1, 0) } else { (true, 0, 1) };
+                if t0 || t1 || self.arr(comp, si, 0, regs)?.numel() >= ops::ELEM_PAR_MIN {
                     let mut dst = self.fetch(comp, si, dst_k, regs).into_array()?;
                     let src = self.arr(comp, si, src_k, regs)?;
                     ensure!(
@@ -412,7 +605,13 @@ impl<'p> Executor<'p> {
                         dst.dims,
                         src.dims
                     );
-                    ops::binary_inplace(*b, dst_is_lhs, dst.buf_mut(), &src.buf)?;
+                    ops::binary_inplace_sharded(
+                        *b,
+                        dst_is_lhs,
+                        dst.buf_mut(),
+                        &src.buf,
+                        self.threads,
+                    )?;
                     Value::Array(dst)
                 } else {
                     Value::Array(ops::binary(
@@ -436,17 +635,19 @@ impl<'p> Executor<'p> {
                     out_dims,
                 )?)
             }
-            Op::Reduce { dims, comp: target } => match comp.fused[si] {
-                Fused::Bin { op, acc_first } => self.reduce_fused(ins, regs, op, acc_first)?,
-                Fused::None => self.reduce_generic(ins, regs, dims, *target)?,
+            Op::Reduce { dims, comp: target } => match &comp.fused[si] {
+                Fused::Bin { op, acc_first } => {
+                    self.reduce_fused(ins, regs, *op, *acc_first)?
+                }
+                _ => self.reduce_generic(ins, regs, dims, *target)?,
             },
             Op::Scatter { dims, comp: target } => {
                 ensure!(ins.operands.len() == 3, "variadic scatter unsupported");
-                match comp.fused[si] {
+                match &comp.fused[si] {
                     Fused::Bin { op, acc_first } => {
-                        self.scatter_fused(comp, si, regs, dims, op, acc_first)?
+                        self.scatter_fused(comp, si, regs, dims, *op, *acc_first)?
                     }
-                    Fused::None => self.scatter_generic(comp, si, regs, dims, *target)?,
+                    _ => self.scatter_generic(comp, si, regs, dims, *target)?,
                 }
             }
         })
@@ -524,7 +725,9 @@ impl<'p> Executor<'p> {
     /// Fused single-input reduce whose region is one scalar binary op.
     /// Identical visit order to the generic path: output cells in
     /// ascending flat order, reduced elements in ascending row-major
-    /// order within each cell.
+    /// order within each cell. Output cells shard across workers above
+    /// a size threshold and merge in ascending order
+    /// ([`ops::fold_cells`]) — bit-identical at any thread count.
     fn reduce_fused(
         &self,
         ins: &Instr,
@@ -540,61 +743,147 @@ impl<'p> Executor<'p> {
             _ => unreachable!("reduce_fused on non-reduce"),
         };
         let g = ops::ReduceGeom::new(&x.dims, dims);
-        let contiguous = g.contiguous();
-        let (mut oi, mut ri) = g.scratch();
-
-        macro_rules! fold {
-            ($xs:ident, $is:ident, $step:expr, $variant:expr) => {{
-                let i0 = $is[0];
-                let mut out = Vec::with_capacity(g.n);
-                if contiguous {
-                    for f in 0..g.n {
-                        let mut acc = i0;
-                        for &v in &$xs[f * g.rn..(f + 1) * g.rn] {
-                            acc = $step(acc, v)?;
-                        }
-                        out.push(acc);
-                    }
-                } else {
-                    for f in 0..g.n {
-                        let base = g.cell_base(f, &mut oi);
-                        let mut acc = i0;
-                        for rf in 0..g.rn {
-                            let xi = g.elem_index(base, rf, &mut ri);
-                            acc = $step(acc, $xs[xi])?;
-                        }
-                        out.push(acc);
-                    }
-                }
-                $variant(out)
-            }};
-        }
+        let w = self.threads;
         let buf = match (&*x.buf, &*init.buf) {
             (Buf::F32(xs), Buf::F32(is)) => {
                 let step =
                     |a, v| if acc_first { f32_bin(op, a, v) } else { f32_bin(op, v, a) };
-                fold!(xs, is, step, Buf::F32)
+                Buf::F32(ops::fold_cells(&g, xs, is[0], step, w)?)
             }
             (Buf::S32(xs), Buf::S32(is)) => {
                 let step =
                     |a, v| if acc_first { s32_bin(op, a, v) } else { s32_bin(op, v, a) };
-                fold!(xs, is, step, Buf::S32)
+                Buf::S32(ops::fold_cells(&g, xs, is[0], step, w)?)
             }
             (Buf::U32(xs), Buf::U32(is)) => {
                 let step =
                     |a, v| if acc_first { u32_bin(op, a, v) } else { u32_bin(op, v, a) };
-                fold!(xs, is, step, Buf::U32)
+                Buf::U32(ops::fold_cells(&g, xs, is[0], step, w)?)
             }
             (Buf::Pred(xs), Buf::Pred(is)) => {
                 let f = pred_bin(op)?;
                 let step = |a, v| -> Result<bool> {
                     Ok(if acc_first { f(a, v) } else { f(v, a) })
                 };
-                fold!(xs, is, step, Buf::Pred)
+                Buf::Pred(ops::fold_cells(&g, xs, is[0], step, w)?)
             }
             _ => bail!("reduce input/init type mismatch"),
         };
         Ok(Value::Array(ArrayValue::new(g.out_dims, buf)?))
+    }
+
+    // ------------------------------------------------- fused loops ---
+
+    /// Counted-`while` superinstruction (see
+    /// [`crate::runtime::interp::fuse`]): read the trip count from the
+    /// incoming state, unpack the state tuple once into per-element
+    /// slots, then per iteration run only the body's compute steps —
+    /// the state reads become direct register writes, the root tuple
+    /// becomes direct register reads, and the condition never runs.
+    fn counted_loop(&self, spec: &CountedLoop, init: Value) -> Result<Value> {
+        let body = &self.plan.comps[spec.body];
+        let state = match init {
+            Value::Tuple(vs) => vs,
+            Value::Array(_) => bail!("counted while state must be a tuple"),
+        };
+        ensure!(state.len() == spec.arity, "counted while arity mismatch");
+        let mut state: Vec<Option<Value>> = state.into_iter().map(Some).collect();
+        let counter = state[spec.idx].as_ref().expect("state slot").array()?;
+        ensure!(counter.numel() == 1, "counted while counter must be scalar");
+        let start = counter.buf.index_at(0)?;
+        let trips = (spec.bound - start).max(0);
+        for _ in 0..trips {
+            let mut regs: Vec<Option<Value>> =
+                (0..body.instrs.len()).map(|_| None).collect();
+            for (k, &(gi, e)) in spec.state_reads.iter().enumerate() {
+                let v = if spec.take_state[k] {
+                    state[e].take()
+                } else {
+                    state[e].clone()
+                };
+                regs[gi] = Some(v.expect("state slot populated"));
+            }
+            for &si in &spec.steps {
+                let v = self.exec_step(body, si, &mut regs, &mut []).with_context(|| {
+                    format!("executing {}::{}", body.name, body.instrs[si].name)
+                })?;
+                regs[si] = Some(v);
+                for &r in &body.free_after[si] {
+                    regs[r] = None;
+                }
+            }
+            let mut next: Vec<Option<Value>> = Vec::with_capacity(spec.arity);
+            for (k, &o) in spec.root_ops.iter().enumerate() {
+                let v = if body.take[body.root][k] {
+                    regs[o].take()
+                } else {
+                    regs[o].clone()
+                };
+                next.push(Some(v.expect("root operand register computed")));
+            }
+            state = next;
+        }
+        Ok(Value::Tuple(state.into_iter().map(|v| v.expect("state slot")).collect()))
+    }
+
+    /// Native threefry-2x32 round-group call: the argument order
+    /// `(i, x0, x1, k0, k1, k2, rot_a, rot_b)` and the output
+    /// permutation `(i+1, x0', x1', k1, k2, k0, rot_b, rot_a)` were
+    /// verified structurally by [`fuse::match_threefry`] at plan time.
+    fn threefry_call(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        regs: &mut [Option<Value>],
+    ) -> Result<Value> {
+        ensure!(comp.instrs[si].operands.len() == 8, "threefry call arity");
+        let mut vals = Vec::with_capacity(8);
+        for k in 0..8 {
+            vals.push(self.fetch(comp, si, k, regs));
+        }
+        let mut it = vals.into_iter();
+        let mut next = move || it.next().expect("eight operands");
+        let i_arr = next().into_array()?;
+        let mut x0 = next().into_array()?;
+        let mut x1 = next().into_array()?;
+        let k0 = next();
+        let k1 = next();
+        let k2 = next();
+        let rot_a = next();
+        let rot_b = next();
+        let i0 = match &*i_arr.buf {
+            Buf::S32(v) if v.len() == 1 => v[0],
+            _ => bail!("threefry round counter must be a scalar s32"),
+        };
+        let new_i = i0.wrapping_add(1);
+        let rot: [u32; 4] =
+            rot_a.array()?.as_u32()?.try_into().context("threefry rotation arity")?;
+        let k0a = k0.array()?;
+        let k1a = k1.array()?;
+        ensure!(k0a.numel() == 1 && k1a.numel() == 1, "threefry keys must be scalar");
+        let k0v = k0a.as_u32()?[0];
+        // (x1 + k1) + (i+1) regrouped to x1 + (k1 + (i+1)): u32
+        // wrapping addition is associative, so this is bit-exact
+        let kx1 = k1a.as_u32()?[0].wrapping_add(new_i as u32);
+        ensure!(x0.dims == x1.dims, "threefry lane shape mismatch");
+        ops::threefry2x32(
+            x0.buf_mut().as_u32_mut()?,
+            x1.buf_mut().as_u32_mut()?,
+            &rot,
+            k0v,
+            kx1,
+            self.threads,
+        )?;
+        Ok(Value::Tuple(vec![
+            Value::Array(ArrayValue::new(vec![], Buf::S32(vec![new_i]))?),
+            Value::Array(x0),
+            Value::Array(x1),
+            k1,
+            k2,
+            k0,
+            rot_b,
+            rot_a,
+        ]))
     }
 
     /// (Variadic) reduce fallback: invoke the region per fold step.
@@ -839,7 +1128,7 @@ mod tests {
 
     #[test]
     fn dot_packed_matches_reference_shapes() {
-        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new() };
+        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new(), stats: None };
         let ex = Executor { plan: &plan, threads: 1 };
         // (lhs dims, rhs dims, dot dims)
         let cases: Vec<(Vec<usize>, Vec<usize>, DotDims)> = vec![
@@ -913,7 +1202,7 @@ mod tests {
 
     #[test]
     fn dot_packed_sharded_is_bit_identical() {
-        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new() };
+        let plan = Plan { comps: Vec::new(), entry: 0, entry_params: Vec::new(), stats: None };
         // above DOT_PAR_MIN so the threaded path actually engages
         let lhs = fv(&[96, 48], randv(1, 96 * 48));
         let rhs = fv(&[48, 64], randv(2, 48 * 64));

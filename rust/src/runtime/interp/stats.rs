@@ -1,0 +1,125 @@
+//! Optional per-op execution histogram for the planned executor:
+//! `QN_INTERP_STATS=1` makes every [`crate::runtime::interp::Plan`]
+//! carry a [`Stats`] that records one (count, self-time) cell per op
+//! label and prints a sorted table to stderr when the plan is dropped —
+//! so "threefry dominates the grad entry" is a measured number, not
+//! folklore.
+//!
+//! Leaf ops (elementwise kernels, the packed dot, fused reduce/scatter,
+//! the native threefry call) record wall-clock self time. Ops that
+//! recurse into sub-plans (`call`, generic `while`/`reduce`/`scatter`,
+//! the counted-loop superinstruction) record counts only — their inner
+//! steps are already timed individually, so the table never
+//! double-counts a nanosecond.
+//!
+//! Note: in stats mode the runtime bypasses its process-wide content
+//! cache ([`crate::runtime::client::Runtime::compile`]) so the plan —
+//! and with it this table — drops when the runtime does.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Cell {
+    count: u64,
+    nanos: u128,
+}
+
+/// Per-plan op histogram (enabled via `QN_INTERP_STATS`).
+#[derive(Debug)]
+pub struct Stats {
+    module: String,
+    cells: Mutex<HashMap<&'static str, Cell>>,
+}
+
+impl Stats {
+    /// A live collector when `QN_INTERP_STATS` is set (and not `0`).
+    pub fn from_env(module: &str) -> Option<Stats> {
+        match std::env::var("QN_INTERP_STATS") {
+            Ok(v) if !v.is_empty() && v != "0" => Some(Stats {
+                module: module.to_string(),
+                cells: Mutex::new(HashMap::new()),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Record one execution of `label`; `dur` is its self time (None
+    /// for recursive wrappers, which report counts only).
+    pub fn record(&self, label: &'static str, dur: Option<Duration>) {
+        let mut cells = self.cells.lock().unwrap();
+        let c = cells.entry(label).or_default();
+        c.count += 1;
+        if let Some(d) = dur {
+            c.nanos += d.as_nanos();
+        }
+    }
+
+    /// (count, self-nanos) for one label — test/diagnostic hook.
+    pub fn cell(&self, label: &str) -> Option<(u64, u128)> {
+        self.cells.lock().unwrap().get(label).map(|c| (c.count, c.nanos))
+    }
+}
+
+impl Drop for Stats {
+    fn drop(&mut self) {
+        // never panic in drop: a poisoned lock still holds valid data
+        let cells = match self.cells.lock() {
+            Ok(c) => c,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if cells.is_empty() {
+            return;
+        }
+        let mut rows: Vec<(&str, Cell)> = cells.iter().map(|(k, v)| (*k, *v)).collect();
+        rows.sort_by(|a, b| b.1.nanos.cmp(&a.1.nanos).then(b.1.count.cmp(&a.1.count)));
+        let total: u128 = rows.iter().map(|(_, c)| c.nanos).sum();
+        let execs: u64 = rows.iter().map(|(_, c)| c.count).sum();
+        eprintln!(
+            "[interp stats] {}: {} instruction executions, {:.3} ms timed",
+            self.module,
+            execs,
+            total as f64 / 1e6
+        );
+        eprintln!("  {:<28} {:>12} {:>12} {:>7}", "op", "count", "self ms", "%");
+        for (label, c) in rows {
+            let (ms, pct) = if c.nanos == 0 {
+                ("-".to_string(), "-".to_string())
+            } else {
+                (
+                    format!("{:.3}", c.nanos as f64 / 1e6),
+                    format!("{:.1}", 100.0 * c.nanos as f64 / total.max(1) as f64),
+                )
+            };
+            eprintln!("  {label:<28} {:>12} {ms:>12} {pct:>7}", c.count);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_counts_and_self_time() {
+        let st = Stats {
+            module: "test".into(),
+            cells: Mutex::new(HashMap::new()),
+        };
+        st.record("add", Some(Duration::from_nanos(100)));
+        st.record("add", Some(Duration::from_nanos(50)));
+        st.record("while[counted]", None);
+        assert_eq!(st.cell("add"), Some((2, 150)));
+        assert_eq!(st.cell("while[counted]"), Some((1, 0)));
+        assert_eq!(st.cell("missing"), None);
+        // drop prints to stderr without panicking
+    }
+
+    #[test]
+    fn from_env_gates_on_variable() {
+        // the variable is unset (or possibly set) in the test env; the
+        // constructor must never panic either way
+        let _ = Stats::from_env("m");
+    }
+}

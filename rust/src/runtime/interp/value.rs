@@ -152,6 +152,15 @@ impl Buf {
         }
     }
 
+    /// Mutable flat u32 lane view (the threefry kernel writes lanes in
+    /// place; pair with [`ArrayValue::buf_mut`] for copy-on-write).
+    pub fn as_u32_mut(&mut self) -> Result<&mut [u32]> {
+        match self {
+            Buf::U32(v) => Ok(v),
+            other => bail!("expected u32 array, got {}", other.ty().name()),
+        }
+    }
+
     /// `n` copies of `self[i]` (scalar-broadcast fast path).
     pub fn splat(&self, i: usize, n: usize) -> Buf {
         match self {
@@ -225,6 +234,14 @@ impl ArrayValue {
         match &*self.buf {
             Buf::F32(v) => Ok(v),
             other => bail!("expected f32 array, got {}", other.ty().name()),
+        }
+    }
+
+    /// Flat u32 lane view (the threefry kernel's input shape).
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &*self.buf {
+            Buf::U32(v) => Ok(v),
+            other => bail!("expected u32 array, got {}", other.ty().name()),
         }
     }
 

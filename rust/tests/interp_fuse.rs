@@ -1,0 +1,252 @@
+//! Loop-fusion golden and property tests (DESIGN.md §4): the fused
+//! planned executor (counted `while` superinstruction + native
+//! threefry2x32 kernel + sharded fused reduces/elementwise) must be
+//! bit-identical to both the fusion-disabled plan and the tree-walking
+//! oracle on the checked-in `lm_tiny` fixture across threads
+//! {1, 3, 8}; near-miss loops must fall back to the generic `while`
+//! path and still match; and the threefry u32 trajectory is pinned to
+//! mirror-computed constants so the PRNG can never drift across PRs.
+
+use std::path::Path;
+
+use quant_noise::model::params::ParamStore;
+use quant_noise::runtime::interp::{
+    ArrayValue, Buf, FusionStats, HloModule, Interp, Plan, PlanOptions, Value,
+};
+use quant_noise::runtime::manifest::Manifest;
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp")
+}
+
+fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::F32(data)).unwrap())
+}
+
+fn i32v(dims: &[usize], data: Vec<i32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::S32(data)).unwrap())
+}
+
+fn u32v(dims: &[usize], data: Vec<u32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::U32(data)).unwrap())
+}
+
+/// Exact structural + bitwise equality (f32 compared by bit pattern).
+fn assert_bit_identical(a: &Value, b: &Value, path: &str) {
+    match (a, b) {
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: tuple arity");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_bit_identical(x, y, &format!("{path}.{i}"));
+            }
+        }
+        (Value::Array(x), Value::Array(y)) => {
+            assert_eq!(x.dims, y.dims, "{path}: dims");
+            match (&*x.buf, &*y.buf) {
+                (Buf::F32(p), Buf::F32(q)) => {
+                    for (i, (u, v)) in p.iter().zip(q).enumerate() {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{path}[{i}]");
+                    }
+                }
+                (p, q) => assert_eq!(p, q, "{path}: buffer"),
+            }
+        }
+        _ => panic!("{path}: array/tuple kind mismatch"),
+    }
+}
+
+/// Oracle vs fused plan vs fusion-disabled plan on one module, across
+/// thread counts — the noise byte-stability contract pre/post fusion.
+fn assert_fused_matches(m: &HloModule, args: &[Value], label: &str) -> FusionStats {
+    let golden = Interp::new(m).run_entry(args).unwrap();
+    let fused = Plan::compile(m);
+    let nofuse =
+        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false });
+    let nf = nofuse.fusion_stats();
+    assert_eq!((nf.counted_loops, nf.threefry_calls), (0, 0), "{label}: opts ignored");
+    for threads in [1usize, 3, 8] {
+        let got = fused.run_entry(args.to_vec(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("{label}[fused,t={threads}]"));
+        let got = nofuse.run_entry(args.to_vec(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("{label}[nofuse,t={threads}]"));
+    }
+    fused.fusion_stats()
+}
+
+fn load_fixture_grad(rate: f32, seed: i32) -> (HloModule, Vec<Value>) {
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let params = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 7 + 3) % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i * 5 + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let pvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    let hvals: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, vec![0.0; t.data.len()])).collect();
+    let mut args = pvals;
+    args.extend(hvals);
+    args.push(i32v(&meta.tokens_shape, tokens));
+    args.push(i32v(&meta.targets_shape, targets));
+    args.push(f32v(&[keep.len()], keep));
+    args.push(f32v(&[], vec![rate]));
+    args.push(i32v(&[], vec![seed]));
+    let m = HloModule::parse_file(&man.hlo_path(&meta, "grad_mix").unwrap()).unwrap();
+    (m, args)
+}
+
+#[test]
+fn fixture_grad_fused_bit_identical_and_fully_fused() {
+    // rate 0.5 samples the in-graph noise mask through every threefry
+    // while-loop; fixed seed pins the mask byte-for-byte pre/post
+    // fusion (the fusion-disabled plan is the pre-fusion executor)
+    let (m, args) = load_fixture_grad(0.5, 42);
+    let fs = assert_fused_matches(&m, &args, "grad_mix");
+    // every jax threefry while in the fixture must take the fused path
+    // — a generic_whiles regression here is a fallback storm
+    assert_eq!(fs.generic_whiles, 0, "fallback storm: {fs:?}");
+    assert!(fs.counted_loops >= 10, "{fs:?}");
+    assert!(fs.threefry_calls >= 10, "{fs:?}");
+    assert!(fs.fused_reduces > 0 && fs.fused_scatters > 0, "{fs:?}");
+}
+
+#[test]
+fn fixture_grad_second_seed_still_matches() {
+    // a different (rate, seed) drives different mask bytes through the
+    // same fused kernels
+    let (m, args) = load_fixture_grad(1.0, 20260729);
+    assert_fused_matches(&m, &args, "grad_mix@seed2");
+}
+
+// --------------------------------------------------- counted-loop unit ---
+
+/// A counted loop with a *parameterized* start, so trip counts 4, 1
+/// and 0 all exercise the trips = max(0, bound - start) logic.
+const COUNTED: &str = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], f32[2]) parameter(0)\n  \
+    i.2 = s32[] get-tuple-element(s.1), index=0\n  n.3 = s32[] constant(4)\n  \
+    ROOT lt.4 = pred[] compare(i.2, n.3), direction=LT\n}\n\nbody.1 {\n  \
+    s.1 = (s32[], f32[2]) parameter(0)\n  i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+    v.3 = f32[2]{0} get-tuple-element(s.1), index=1\n  one.4 = s32[] constant(1)\n  \
+    c.5 = f32[2]{0} constant({0.5, 0.25})\n  i2.6 = s32[] add(i.2, one.4)\n  \
+    v2.7 = f32[2]{0} add(v.3, c.5)\n  ROOT t.8 = (s32[], f32[2]) tuple(i2.6, v2.7)\n}\n\n\
+    ENTRY main.1 {\n  i0.1 = s32[] parameter(0)\n  v0.2 = f32[2]{0} parameter(1)\n  \
+    st.3 = (s32[], f32[2]) tuple(i0.1, v0.2)\n  \
+    ROOT w.4 = (s32[], f32[2]) while(st.3), condition=cond.1, body=body.1\n}\n";
+
+#[test]
+fn counted_loop_fuses_for_all_trip_counts() {
+    let m = HloModule::parse_str(COUNTED).unwrap();
+    for start in [0i32, 3, 4, 10, -2] {
+        let args = vec![i32v(&[], vec![start]), f32v(&[2], vec![1.0, -1.0])];
+        let fs = assert_fused_matches(&m, &args, &format!("counted[start={start}]"));
+        assert_eq!((fs.counted_loops, fs.generic_whiles), (1, 0), "start={start}");
+    }
+}
+
+#[test]
+fn near_miss_loops_fall_back_and_still_match() {
+    // per-variant starts are chosen so the generic loop terminates
+    // under that variant's actual semantics
+    let cases: Vec<(&str, String, Vec<i32>)> = vec![
+        (
+            "non-unit step",
+            COUNTED.replace("one.4 = s32[] constant(1)", "one.4 = s32[] constant(2)"),
+            vec![0, 3, 4, 10],
+        ),
+        (
+            // cond false immediately for every start below the bound
+            "GE direction",
+            COUNTED.replace("direction=LT", "direction=GE"),
+            vec![-5, 0, 3],
+        ),
+        (
+            // bound reads the counter itself: i < i is always false
+            "non-constant bound",
+            COUNTED.replace(
+                "n.3 = s32[] constant(4)",
+                "n.3 = s32[] get-tuple-element(s.1), index=0",
+            ),
+            vec![0, 3, 10],
+        ),
+        (
+            // counter doubles instead of incrementing (start > 0 so the
+            // generic loop still terminates)
+            "counter not add(i, 1)",
+            COUNTED.replace(
+                "i2.6 = s32[] add(i.2, one.4)",
+                "two.9 = s32[] constant(2)\n  i2.6 = s32[] multiply(i.2, two.9)",
+            ),
+            vec![1, 3, 4, 10],
+        ),
+    ];
+    for (label, text, starts) in cases {
+        let m = HloModule::parse_str(&text).unwrap();
+        for start in starts {
+            let args = vec![i32v(&[], vec![start]), f32v(&[2], vec![0.5, 2.0])];
+            let fs = assert_fused_matches(&m, &args, &format!("{label}[{start}]"));
+            assert_eq!(
+                (fs.counted_loops, fs.generic_whiles),
+                (0, 1),
+                "{label} must fall back"
+            );
+        }
+    }
+}
+
+// -------------------------------------------------------- threefry pin ---
+
+/// The jax threefry while (regions verbatim from the fixture, lanes=1)
+/// with the expected u32 outputs computed by the validated reference
+/// mirror (`tools/qnsim/plan_mirror.py check_threefry_pin`). Integer
+/// arithmetic only, so these constants are platform-exact — if the
+/// counted-loop or threefry kernels ever drift from jax semantics,
+/// this pins the break to the PRNG.
+const THREEFRY_PIN: &str = include_str!("fixtures/interp/threefry_pin.hlo.txt");
+
+#[test]
+fn threefry_pin_exact_u32_trajectory() {
+    let m = HloModule::parse_str(THREEFRY_PIN).unwrap();
+    let args = vec![
+        u32v(&[1], vec![0x1BD1_1BDA]),
+        u32v(&[1], vec![0xDEAD_BEEF]),
+        u32v(&[], vec![42]),
+        u32v(&[], vec![7]),
+        u32v(&[], vec![0x1BD1_1BDA ^ 42 ^ 7]),
+    ];
+    let fs = assert_fused_matches(&m, &args, "threefry_pin");
+    assert_eq!((fs.counted_loops, fs.threefry_calls), (1, 1), "{fs:?}");
+    let plan = Plan::compile(&m);
+    let out = plan.run_entry(args, 1).unwrap();
+    let parts = out.tuple().unwrap();
+    let x0 = parts[0].array().unwrap().as_u32().unwrap().to_vec();
+    let x1 = parts[1].array().unwrap().as_u32().unwrap().to_vec();
+    assert_eq!(x0, vec![0xE129_A3F2], "x0 after 5 fused round groups");
+    assert_eq!(x1, vec![0xCDA2_7419], "x1 after 5 fused round groups");
+}
+
+// ------------------------------------------------------- shard scaling ---
+
+/// Fused reduces (contiguous + strided) and elementwise chains large
+/// enough to engage worker sharding; bit-identity across {1, 3, 8}
+/// threads is asserted by `assert_fused_matches`.
+const BIG: &str = "HloModule big\n\nsum.1 {\n  a.1 = f32[] parameter(0)\n  \
+    b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+    ENTRY main.1 {\n  x.1 = f32[96,128]{1,0} parameter(0)\n  \
+    z.2 = f32[] constant(0)\n  r.3 = f32[96]{0} reduce(x.1, z.2), dimensions={1}, \
+    to_apply=sum.1\n  rs.4 = f32[128]{0} reduce(x.1, z.2), dimensions={0}, \
+    to_apply=sum.1\n  e.5 = f32[96,128]{1,0} exponential(x.1)\n  \
+    m.6 = f32[96,128]{1,0} multiply(e.5, x.1)\n  \
+    p.7 = pred[96,128]{1,0} compare(x.1, e.5), direction=LT\n  \
+    s.8 = f32[96,128]{1,0} select(p.7, m.6, x.1)\n  \
+    ROOT t.9 = (f32[96]{0}, f32[128]{0}, f32[96,128]{1,0}) tuple(r.3, rs.4, s.8)\n}\n";
+
+#[test]
+fn sharded_reduce_and_elementwise_bit_identical_across_threads() {
+    let m = HloModule::parse_str(BIG).unwrap();
+    let n = 96 * 128;
+    let data: Vec<f32> = (0..n).map(|i| ((i * 37 % 501) as f32 - 250.0) / 83.0).collect();
+    let args = vec![f32v(&[96, 128], data)];
+    assert_fused_matches(&m, &args, "big");
+}

@@ -1,5 +1,6 @@
-"""Mirror of the planned executor's new kernels (rust/src/runtime/interp/plan.rs
-and the lane-blocked kernel in rust/src/quant/assign.rs), validated for
+"""Mirror of the planned executor's new kernels (rust/src/runtime/interp/plan.rs,
+the loop-fusion pass in rust/src/runtime/interp/fuse.rs, and the
+lane-blocked kernel in rust/src/quant/assign.rs), validated for
 BIT-IDENTITY against the reference mirror (`hlo_mirror.py`) on the
 checked-in fixture.
 
@@ -7,14 +8,17 @@ The Rust planned executor claims bit-identity with the tree-walking
 evaluator because every new kernel visits the same elements in the same
 order with the same scalar ops. This file re-implements exactly those
 kernels (packed dot, fused binary reduce, fused binary scatter, the
-8-lane dot) in numpy float32 and checks them against the reference
-algorithms — catching any index-math or accumulation-order mistake
-before it ships as Rust that this container cannot compile. Run:
+8-lane dot, and — since the loop-fusion PR — the counted-loop
+superinstruction and the native threefry2x32 round kernel) in numpy and
+checks them against the reference algorithms — catching any index-math
+or accumulation-order mistake before it ships as Rust that this
+container cannot compile. Run:
 
     cd tools/qnsim && python3 plan_mirror.py        # ~2 min (pure python)
 """
 import os
 import sys
+import time
 
 import numpy as np
 
@@ -22,7 +26,8 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, HERE)
 
 from hlo_mirror import (
-    Arr, BINARY, Interp, int_list, parse_module, strides_of, unflatten,
+    Arr, BINARY, Interp, int_list, parse_module, parse_slice_attr, strides_of,
+    unflatten,
 )
 
 ROOT = os.path.dirname(os.path.dirname(HERE))
@@ -218,6 +223,254 @@ class PlannedInterp(Interp):
         return Arr(sh.ty, sh.dims, out)
 
 
+# ------------------------------------- fuse.rs counted-loop + threefry ---
+
+def rotl32(v, r):
+    """rotl via the HLO composition shl(v,r) | shr(v, 32-r) with XLA
+    shift semantics (shift >= 32 yields 0) — exactly `ops::rotl_xla`."""
+    shl = (v << r) & 0xFFFFFFFF if r < 32 else 0
+    s = (32 - r) & 0xFFFFFFFF
+    shr = (v >> s) if s < 32 else 0
+    return (shl | shr) & 0xFFFFFFFF
+
+
+def threefry2x32(x0, x1, rot, k0, k1):
+    """ops::threefry2x32 — four rounds + key injection per lane, exact
+    u32 wrapping arithmetic (python ints, masked)."""
+    out0, out1 = [], []
+    for a, b in zip(x0, x1):
+        x, y = a, b
+        for r in rot:
+            x = (x + y) & 0xFFFFFFFF
+            y = x ^ rotl32(y, r)
+        out0.append((x + k0) & 0xFFFFFFFF)
+        out1.append((y + k1) & 0xFFFFFFFF)
+    return out0, out1
+
+
+def match_counted_loop(cond, body):
+    """fuse::match_counted_loop 1:1 — returns (idx, bound) or None.
+
+    cond must be {param; gte(param, idx); const scalar; ROOT
+    compare(gte, const) LT} modulo dead instructions; body must be a
+    single param used only by gte's, ROOT tuple, whose element `idx` is
+    add(gte(param, idx), 1)."""
+    params = [i for i, s in enumerate(cond.instrs) if s.opcode == "parameter"]
+    if cond.n_params != 1 or len(params) != 1:
+        return None
+    p = params[0]
+    root = cond.instrs[cond.root]
+    if (root.opcode != "compare" or root.attrs.get("direction") != "LT"
+            or len(root.operands) != 2):
+        return None
+    ia, ib = cond.instrs[root.operands[0]], cond.instrs[root.operands[1]]
+    if ia.opcode != "get-tuple-element" or ia.operands != [p]:
+        return None
+    if (ib.opcode != "constant" or ib.shape.dims
+            or ib.shape.ty not in ("s32", "u32")):
+        return None
+    idx, bound = int(ia.attrs["index"]), int(ib.literal[0])
+
+    params = [i for i, s in enumerate(body.instrs) if s.opcode == "parameter"]
+    if body.n_params != 1 or len(params) != 1:
+        return None
+    bp = params[0]
+    broot = body.instrs[body.root]
+    if broot.opcode != "tuple":
+        return None
+    arity = len(broot.operands)
+    if idx >= arity:
+        return None
+    for s in body.instrs:
+        if bp in s.operands and s.opcode != "get-tuple-element":
+            return None
+        if (s.opcode == "get-tuple-element" and s.operands == [bp]
+                and int(s.attrs["index"]) >= arity):
+            return None
+    inc = body.instrs[broot.operands[idx]]
+    if inc.opcode != "add" or len(inc.operands) != 2:
+        return None
+
+    def is_counter(i):
+        s = body.instrs[i]
+        return (s.opcode == "get-tuple-element" and s.operands == [bp]
+                and int(s.attrs["index"]) == idx)
+
+    def is_one(i):
+        s = body.instrs[i]
+        return (s.opcode == "constant" and not s.shape.dims
+                and s.shape.ty in ("s32", "u32") and int(s.literal[0]) == 1)
+
+    x, y = inc.operands
+    if not ((is_counter(x) and is_one(y)) or (is_counter(y) and is_one(x))):
+        return None
+    return idx, bound
+
+
+def match_threefry(comp):
+    """fuse::match_threefry 1:1 — structural match of the jax
+    threefry2x32 round body via symbolic expression trees (reshape and
+    scalar-broadcast are transparent, slice-of-rot-param is a lane)."""
+    ins = comp.instrs
+    if comp.n_params != 8:
+        return False
+    ppos = {}
+    for i, s in enumerate(ins):
+        if s.opcode == "parameter":
+            k = int(s.attrs["parameter_number"])
+            if k in ppos:
+                return False
+            ppos[k] = i
+    if set(ppos) != set(range(8)):
+        return False
+
+    def sh(k):
+        return ins[ppos[k]].shape
+
+    if sh(0).ty != "s32" or sh(0).dims:
+        return False
+    if sh(1).ty != "u32" or sh(2).ty != "u32" or sh(1).dims != sh(2).dims:
+        return False
+    if any(sh(k).ty != "u32" or sh(k).dims for k in (3, 4, 5)):
+        return False
+    if any(sh(k).ty != "u32" or sh(k).dims != [4] for k in (6, 7)):
+        return False
+    root = ins[comp.root]
+    if root.opcode != "tuple" or len(root.operands) != 8:
+        return False
+    # output shapes must be the canonical state shapes: resolve() sees
+    # through reshape/broadcast, but the executor rebuilds the result
+    # tuple from the input shapes, so a shape-changing wrapper on a
+    # root operand must fall back to the generic call
+    out_shapes = [sh(0), sh(1), sh(2), sh(4), sh(5), sh(3), sh(7), sh(6)]
+    for o, want in zip(root.operands, out_shapes):
+        osh = ins[o].shape
+        if osh.ty != want.ty or osh.dims != want.dims:
+            return False
+
+    memo = {}
+
+    def ex(i):
+        if i in memo:
+            return memo[i]
+        s = ins[i]
+        op = s.opcode
+        r = None
+        if op == "parameter":
+            r = ("p", int(s.attrs["parameter_number"]))
+        elif op == "constant":
+            if not s.shape.dims and s.shape.ty in ("u32", "s32"):
+                r = ("c", s.shape.ty, int(s.literal[0]))
+        elif op == "reshape":
+            r = ex(s.operands[0])
+        elif op == "broadcast":
+            if ins[s.operands[0]].shape.numel() == 1:
+                r = ex(s.operands[0])
+        elif op == "convert":
+            if s.shape.ty == "u32" and ins[s.operands[0]].shape.ty == "s32":
+                sub = ex(s.operands[0])
+                r = ("u32", sub) if sub else None
+        elif op == "slice":
+            o = ins[s.operands[0]]
+            spec = parse_slice_attr(s.attrs["slice"])
+            if (o.opcode == "parameter" and len(spec) == 1
+                    and spec[0][2] == 1 and spec[0][1] == spec[0][0] + 1):
+                r = ("lane", int(o.attrs["parameter_number"]), spec[0][0])
+        elif op in ("add", "xor", "or", "subtract", "shift-left",
+                    "shift-right-logical") and len(s.operands) == 2:
+            a_, b_ = ex(s.operands[0]), ex(s.operands[1])
+            if a_ is not None and b_ is not None:
+                r = (op, a_, b_)
+        memo[i] = r
+        return r
+
+    def p(k):
+        return ("p", k)
+
+    def lane(j):
+        return ("lane", 6, j)
+
+    def rot(x, j):
+        return ("or", ("shift-left", x, lane(j)),
+                ("shift-right-logical", x,
+                 ("subtract", ("c", "u32", 32), lane(j))))
+
+    x0 = ("add", p(1), p(2))
+    x1 = ("xor", x0, rot(p(2), 0))
+    for j in (1, 2, 3):
+        x0n = ("add", x0, x1)
+        x1 = ("xor", x0n, rot(x1, j))
+        x0 = x0n
+    out_i = ("add", p(0), ("c", "s32", 1))
+    out_x0 = ("add", x0, p(3))
+    out_x1 = ("add", ("add", x1, p(4)), ("u32", out_i))
+    want = [out_i, out_x0, out_x1, p(4), p(5), p(3), p(7), p(6)]
+    return [ex(o) for o in root.operands] == want
+
+
+class FusedInterp(PlannedInterp):
+    """Planned mirror with the loop-fusion layer: counted `while` loops
+    skip per-iteration condition evaluation (trip count read from the
+    initial state) and threefry round-body calls run the native
+    kernel."""
+
+    def __init__(self, module):
+        super().__init__(module)
+        self._counted = {}
+        self._threefry = {}
+        self.fused_whiles = 0
+        self.generic_whiles = 0
+        self.threefry_calls = 0
+
+    def counted(self, cond_name, body_name):
+        key = (cond_name, body_name)
+        if key not in self._counted:
+            self._counted[key] = match_counted_loop(
+                self.m.comps[cond_name], self.m.comps[body_name])
+        return self._counted[key]
+
+    def is_threefry(self, name):
+        if name not in self._threefry:
+            self._threefry[name] = match_threefry(self.m.comps[name])
+        return self._threefry[name]
+
+    def eval_instr(self, comp, ins, env, args):
+        if ins.opcode == "while":
+            hit = self.counted(ins.attrs["condition"], ins.attrs["body"])
+            if hit is not None:
+                idx, bound = hit
+                body = self.m.comps[ins.attrs["body"]]
+                state = env[ins.operands[0]]
+                start = int(state[1][idx].data[0])
+                trips = max(0, bound - start)
+                self.fused_whiles += 1
+                for _ in range(trips):
+                    state = self.run(body, [state])
+                return state
+            self.generic_whiles += 1
+        elif ins.opcode == "call" and self.is_threefry(ins.attrs["to_apply"]):
+            self.threefry_calls += 1
+            return self.threefry_call([env[j] for j in ins.operands])
+        return super().eval_instr(comp, ins, env, args)
+
+    def threefry_call(self, opv):
+        i, x0, x1, k0, k1, k2, rota, rotb = opv
+        new_i = int(i.data[0]) + 1           # s32 wrapping add
+        if new_i > 0x7FFFFFFF:
+            new_i -= 1 << 32
+        rot = [int(v) for v in rota.data]
+        kx0 = int(k0.data[0])
+        kx1 = (int(k1.data[0]) + (new_i & 0xFFFFFFFF)) & 0xFFFFFFFF
+        o0, o1 = threefry2x32([int(v) for v in x0.data],
+                              [int(v) for v in x1.data], rot, kx0, kx1)
+        return ("tuple", [
+            Arr("s32", [], [new_i]),
+            Arr("u32", x0.dims, o0),
+            Arr("u32", x1.dims, o1),
+            k1, k2, k0, rotb, rota,
+        ])
+
+
 # ------------------------------------------ assign.rs dot8 lane kernel ---
 
 def rust_dot(a, b):
@@ -314,23 +567,208 @@ def fixture_args(grad):
     return args
 
 
+class Counting:
+    """Mixin: count instruction executions, bucketed by opcode."""
+
+    def run(self, comp, args):
+        hist = getattr(self, "hist", None)
+        if hist is None:
+            hist = self.hist = {}
+        for ins in comp.instrs:
+            hist[ins.opcode] = hist.get(ins.opcode, 0) + 1
+        return super().run(comp, args)
+
+
+class CountingInterp(Counting, Interp):
+    pass
+
+
+class CountingFused(Counting, FusedInterp):
+    pass
+
+
 def check_fixture(entry, grad):
     text = open(os.path.join(FIX, f"lm_tiny.{entry}.hlo.txt")).read()
     m = parse_module(text)
     args = fixture_args(grad)
-    ref = Interp(m).run_entry(args)
+    t0 = time.perf_counter()
+    ref_i = CountingInterp(m)
+    ref = ref_i.run_entry(args)
+    t_ref = time.perf_counter() - t0
     planned = PlannedInterp(m).run_entry(args)
     assert_same(planned, ref, entry)
+    t0 = time.perf_counter()
+    fused_i = CountingFused(m)
+    fused = fused_i.run_entry(args)
+    t_fused = time.perf_counter() - t0
+    assert_same(fused, ref, f"{entry}(fused)")
     n_out = len(ref[1])
-    print(f"{entry}: planned kernels bit-identical to reference "
+    n_ref = sum(ref_i.hist.values())
+    n_fused = sum(fused_i.hist.values())
+    print(f"{entry}: planned+fused kernels bit-identical to reference "
           f"({n_out} outputs)  OK")
+    print(f"  instr executions: reference {n_ref}, fused {n_fused} "
+          f"({n_ref / max(n_fused, 1):.2f}x fewer); mirror wall-clock "
+          f"{t_ref:.2f}s -> {t_fused:.2f}s")
+    if grad:
+        # every threefry while must fuse — a fallback storm here means
+        # the matchers regressed against the real jax lowering
+        assert fused_i.generic_whiles == 0, fused_i.generic_whiles
+        assert fused_i.fused_whiles > 0 and fused_i.threefry_calls > 0
+        top = sorted(ref_i.hist.items(), key=lambda kv: -kv[1])[:6]
+        print(f"  fused whiles: {fused_i.fused_whiles}, native threefry "
+              f"calls: {fused_i.threefry_calls}")
+        print(f"  reference opcode histogram (top): {top}")
+
+
+# A self-contained counted threefry while (regions copied verbatim from
+# the fixture, lanes=1) used to pin the exact u32 trajectory in the Rust
+# regression test (tests/interp_fuse.rs) — integer-only, so the pinned
+# values are platform-exact. The checked-in copy this validates is
+# rust/tests/fixtures/interp/threefry_pin.hlo.txt.
+THREEFRY_PIN = """HloModule threefry_pin
+
+None.163 {
+  Arg_0.164 = s32[] parameter(0)
+  constant.173 = s32[] constant(1)
+  add.174 = s32[] add(Arg_0.164, constant.173)
+  Arg_1.165 = u32[1]{0} parameter(1)
+  Arg_2.166 = u32[1]{0} parameter(2)
+  add.177 = u32[1]{0} add(Arg_1.165, Arg_2.166)
+  Arg_6.170 = u32[4]{0} parameter(6)
+  slice.175 = u32[1]{0} slice(Arg_6.170), slice={[0:1]}
+  shift-left.178 = u32[1]{0} shift-left(Arg_2.166, slice.175)
+  constant.172 = u32[] constant(32)
+  reshape.176 = u32[] reshape(slice.175)
+  subtract.179 = u32[] subtract(constant.172, reshape.176)
+  reshape.180 = u32[1]{0} reshape(subtract.179)
+  shift-right-logical.181 = u32[1]{0} shift-right-logical(Arg_2.166, reshape.180)
+  or.182 = u32[1]{0} or(shift-left.178, shift-right-logical.181)
+  xor.183 = u32[1]{0} xor(add.177, or.182)
+  add.186 = u32[1]{0} add(add.177, xor.183)
+  slice.184 = u32[1]{0} slice(Arg_6.170), slice={[1:2]}
+  shift-left.187 = u32[1]{0} shift-left(xor.183, slice.184)
+  reshape.185 = u32[] reshape(slice.184)
+  subtract.188 = u32[] subtract(constant.172, reshape.185)
+  reshape.189 = u32[1]{0} reshape(subtract.188)
+  shift-right-logical.190 = u32[1]{0} shift-right-logical(xor.183, reshape.189)
+  or.191 = u32[1]{0} or(shift-left.187, shift-right-logical.190)
+  xor.192 = u32[1]{0} xor(add.186, or.191)
+  add.195 = u32[1]{0} add(add.186, xor.192)
+  slice.193 = u32[1]{0} slice(Arg_6.170), slice={[2:3]}
+  shift-left.196 = u32[1]{0} shift-left(xor.192, slice.193)
+  reshape.194 = u32[] reshape(slice.193)
+  subtract.197 = u32[] subtract(constant.172, reshape.194)
+  reshape.198 = u32[1]{0} reshape(subtract.197)
+  shift-right-logical.199 = u32[1]{0} shift-right-logical(xor.192, reshape.198)
+  or.200 = u32[1]{0} or(shift-left.196, shift-right-logical.199)
+  xor.201 = u32[1]{0} xor(add.195, or.200)
+  add.204 = u32[1]{0} add(add.195, xor.201)
+  Arg_3.167 = u32[] parameter(3)
+  reshape.211 = u32[1]{0} reshape(Arg_3.167)
+  add.212 = u32[1]{0} add(add.204, reshape.211)
+  slice.202 = u32[1]{0} slice(Arg_6.170), slice={[3:4]}
+  shift-left.205 = u32[1]{0} shift-left(xor.201, slice.202)
+  reshape.203 = u32[] reshape(slice.202)
+  subtract.206 = u32[] subtract(constant.172, reshape.203)
+  reshape.207 = u32[1]{0} reshape(subtract.206)
+  shift-right-logical.208 = u32[1]{0} shift-right-logical(xor.201, reshape.207)
+  or.209 = u32[1]{0} or(shift-left.205, shift-right-logical.208)
+  xor.210 = u32[1]{0} xor(add.204, or.209)
+  Arg_4.168 = u32[] parameter(4)
+  reshape.213 = u32[1]{0} reshape(Arg_4.168)
+  add.214 = u32[1]{0} add(xor.210, reshape.213)
+  add.215 = s32[] add(Arg_0.164, constant.173)
+  convert.216 = u32[] convert(add.215)
+  reshape.217 = u32[1]{0} reshape(convert.216)
+  add.218 = u32[1]{0} add(add.214, reshape.217)
+  Arg_5.169 = u32[] parameter(5)
+  Arg_7.171 = u32[4]{0} parameter(7)
+  ROOT tuple.219 = (s32[], u32[1]{0}, u32[1]{0}, u32[], u32[], /*index=5*/u32[], u32[4]{0}, u32[4]{0}) tuple(add.174, add.212, add.218, Arg_4.168, Arg_5.169, Arg_3.167, Arg_7.171, Arg_6.170)
+}
+
+region_0.220 {
+  arg_tuple.221 = (s32[], s32[], u32[1]{0}, u32[1]{0}, u32[], /*index=5*/u32[], u32[], u32[4]{0}, u32[4]{0}) parameter(0)
+  get-tuple-element.222 = s32[] get-tuple-element(arg_tuple.221), index=0
+  constant.231 = s32[] constant(1)
+  add.241 = s32[] add(get-tuple-element.222, constant.231)
+  get-tuple-element.223 = s32[] get-tuple-element(arg_tuple.221), index=1
+  get-tuple-element.224 = u32[1]{0} get-tuple-element(arg_tuple.221), index=2
+  get-tuple-element.225 = u32[1]{0} get-tuple-element(arg_tuple.221), index=3
+  get-tuple-element.226 = u32[] get-tuple-element(arg_tuple.221), index=4
+  get-tuple-element.227 = u32[] get-tuple-element(arg_tuple.221), index=5
+  get-tuple-element.228 = u32[] get-tuple-element(arg_tuple.221), index=6
+  get-tuple-element.229 = u32[4]{0} get-tuple-element(arg_tuple.221), index=7
+  get-tuple-element.230 = u32[4]{0} get-tuple-element(arg_tuple.221), index=8
+  call.232 = (s32[], u32[1]{0}, u32[1]{0}, u32[], u32[], /*index=5*/u32[], u32[4]{0}, u32[4]{0}) call(get-tuple-element.223, get-tuple-element.224, get-tuple-element.225, get-tuple-element.226, get-tuple-element.227, get-tuple-element.228, get-tuple-element.229, get-tuple-element.230), to_apply=None.163
+  get-tuple-element.233 = s32[] get-tuple-element(call.232), index=0
+  get-tuple-element.234 = u32[1]{0} get-tuple-element(call.232), index=1
+  get-tuple-element.235 = u32[1]{0} get-tuple-element(call.232), index=2
+  get-tuple-element.236 = u32[] get-tuple-element(call.232), index=3
+  get-tuple-element.237 = u32[] get-tuple-element(call.232), index=4
+  get-tuple-element.238 = u32[] get-tuple-element(call.232), index=5
+  get-tuple-element.239 = u32[4]{0} get-tuple-element(call.232), index=6
+  get-tuple-element.240 = u32[4]{0} get-tuple-element(call.232), index=7
+  ROOT tuple.242 = (s32[], s32[], u32[1]{0}, u32[1]{0}, u32[], /*index=5*/u32[], u32[], u32[4]{0}, u32[4]{0}) tuple(add.241, get-tuple-element.233, get-tuple-element.234, get-tuple-element.235, get-tuple-element.236, get-tuple-element.237, get-tuple-element.238, get-tuple-element.239, get-tuple-element.240)
+}
+
+region_1.243 {
+  arg_tuple.244 = (s32[], s32[], u32[1]{0}, u32[1]{0}, u32[], /*index=5*/u32[], u32[], u32[4]{0}, u32[4]{0}) parameter(0)
+  get-tuple-element.245 = s32[] get-tuple-element(arg_tuple.244), index=0
+  constant.254 = s32[] constant(5)
+  ROOT compare.255 = pred[] compare(get-tuple-element.245, constant.254), direction=LT
+}
+
+ENTRY main.1 {
+  x0.1 = u32[1]{0} parameter(0)
+  x1.2 = u32[1]{0} parameter(1)
+  k0.3 = u32[] parameter(2)
+  k1.4 = u32[] parameter(3)
+  k2.5 = u32[] parameter(4)
+  z.6 = s32[] constant(0)
+  ra.7 = u32[4]{0} constant({13, 15, 26, 6})
+  rb.8 = u32[4]{0} constant({17, 29, 16, 24})
+  st.9 = (s32[], s32[], u32[1]{0}, u32[1]{0}, u32[], /*index=5*/u32[], u32[], u32[4]{0}, u32[4]{0}) tuple(z.6, z.6, x0.1, x1.2, k0.3, k1.4, k2.5, ra.7, rb.8)
+  w.10 = (s32[], s32[], u32[1]{0}, u32[1]{0}, u32[], /*index=5*/u32[], u32[], u32[4]{0}, u32[4]{0}) while(st.9), condition=region_1.243, body=region_0.220
+  o0.11 = u32[1]{0} get-tuple-element(w.10), index=2
+  o1.12 = u32[1]{0} get-tuple-element(w.10), index=3
+  ROOT t.13 = (u32[1]{0}, u32[1]{0}) tuple(o0.11, o1.12)
+}
+"""
+
+PIN_ARGS = [
+    Arr("u32", [1], [0x1BD11BDA]),
+    Arr("u32", [1], [0xDEADBEEF]),
+    Arr("u32", [], [42]),
+    Arr("u32", [], [7]),
+    Arr("u32", [], [0x1BD11BDA ^ 42 ^ 7]),
+]
+
+
+def check_threefry_pin():
+    # the Rust test include_str!s the checked-in copy; keep them equal
+    checked_in = open(os.path.join(FIX, "threefry_pin.hlo.txt")).read()
+    assert checked_in == THREEFRY_PIN, "threefry_pin.hlo.txt drifted"
+    m = parse_module(THREEFRY_PIN)
+    fused_i = FusedInterp(m)
+    assert match_threefry(m.comps["None.163"]), "round body must match"
+    assert fused_i.counted("region_1.243", "region_0.220") == (0, 5)
+    ref = Interp(m).run_entry(PIN_ARGS)
+    fused = fused_i.run_entry(PIN_ARGS)
+    assert_same(fused, ref, "threefry_pin")
+    assert fused_i.fused_whiles == 1 and fused_i.threefry_calls == 5
+    o0, o1 = (int(v.data[0]) for v in ref[1])
+    print(f"threefry pin (5 fused iterations): x0=0x{o0:08X} x1=0x{o1:08X}  "
+          f"OK (hardcoded in tests/interp_fuse.rs)")
 
 
 def main():
     check_dot8()
+    check_threefry_pin()
     check_fixture("eval", grad=False)
     check_fixture("grad_mix", grad=True)
-    print("PLANNED KERNELS VALIDATED (bitwise) against the reference mirror")
+    print("PLANNED+FUSED KERNELS VALIDATED (bitwise) against the "
+          "reference mirror")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@
 #   make fixture       regenerate the checked-in interpreter test fixture
 #   make bench-interp  interpreter step latency -> BENCH_interp.json
 #   make lint          rustfmt + clippy (what CI enforces)
+#   make lint-plan     static plan verifier over the checked-in fixtures
 #   make doc           rustdoc with warnings denied (what CI enforces)
 #
 # The Rust side never needs Python at build or test time: the
@@ -17,10 +18,18 @@ CONFIGS := python/configs/lm_tiny.json \
            python/configs/cls_tiny.json \
            python/configs/img_tiny.json
 
-.PHONY: verify artifacts fixture bench-interp lint doc
+.PHONY: verify artifacts fixture bench-interp lint lint-plan doc
 
 verify:
 	cd rust && cargo build --release && cargo test -q
+
+# Static plan verification + census for every checked-in HLO fixture,
+# at every fusion setting (DESIGN.md §8; CI runs this after the build).
+lint-plan:
+	cd rust && cargo run --release --bin qn -- lint-plan \
+		tests/fixtures/interp/lm_tiny.grad_mix.hlo.txt \
+		tests/fixtures/interp/lm_tiny.eval.hlo.txt \
+		tests/fixtures/interp/threefry_pin.hlo.txt
 
 # Per-step grad_mix/eval latency of the planned interpreter vs the
 # tree-walking evaluator on the checked-in fixture (no Python, no

@@ -13,6 +13,8 @@ use crate::coordinator::trainer::Trainer;
 use crate::log_info;
 use crate::quant::scheme::QuantSpec;
 
+// wall-clock prints progress timings only, never results (clippy.toml)
+#[allow(clippy::disallowed_methods)]
 pub fn run(wb: &Workbench, model: &str, steps_override: Option<usize>) -> Result<()> {
     let mut lab = wb.lab(model)?;
     let task = lab.sess.meta.task.clone();

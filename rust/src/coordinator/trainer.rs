@@ -207,10 +207,13 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         }
         let chunk = self.cfg.share_chunk.max(1);
         let map = share_map(n, chunk);
-        let mut chunk_keep = std::collections::HashMap::new();
+        // dense per-chunk memo (not a HashMap): layers visit in
+        // ascending order, so each chunk's first layer draws its keep
+        // bit — RNG consumption order is the layer order by definition
+        let mut chunk_keep: Vec<Option<f32>> = vec![None; n];
         (0..n)
             .map(|l| {
-                *chunk_keep.entry(map[l]).or_insert_with(|| {
+                *chunk_keep[map[l]].get_or_insert_with(|| {
                     if self.rng.next_f32() < self.cfg.layerdrop {
                         0.0
                     } else {

@@ -197,6 +197,9 @@ mod tests {
     }
 
     #[test]
+    // test-only entropy estimate asserted with wide margins; map order
+    // affects only f64 rounding noise, never the verdict
+    #[allow(clippy::disallowed_types)]
     fn corpus_has_markov_structure() {
         // bigram entropy must be clearly below unigram entropy
         let c = MarkovCorpus::generate(128, 200_000, 1);

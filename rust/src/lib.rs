@@ -12,6 +12,11 @@
 //!   ([`runtime::interp`], the default) or PJRT.
 //! - [`coordinator`] — training/quantization pipelines (the paper).
 //! - [`bench_harness`] — regenerates every paper table and figure.
+
+// The whole crate is safe Rust (determinism relies on it: no aliasing
+// tricks, no uninitialized reads); keep it that way.
+#![forbid(unsafe_code)]
+
 pub mod util;
 pub mod quant;
 pub mod model;

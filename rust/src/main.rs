@@ -7,13 +7,14 @@
 //!   eval                       evaluate saved params (fp32 or quantized)
 //!   e2e                        end-to-end driver (train → iPQ → report)
 //!   bench --exp `<id>`         regenerate a paper table/figure
+//!   lint-plan `<hlo.txt>`...   statically verify compiled plans + census
 //!
 //! Python never runs here: all compute flows through the AOT artifacts
 //! in artifacts/ (build them with `make artifacts`).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use quant_noise::bench_harness::common::{Row, Workbench};
 use quant_noise::bench_harness::specs::{base_train, default_rate, default_steps, with_noise};
@@ -60,10 +61,11 @@ fn run(sub: &str, rest: &[String]) -> Result<()> {
         "eval" => eval(rest),
         "e2e" => e2e(rest),
         "bench" => bench(rest),
+        "lint-plan" => lint_plan(rest),
         _ => {
             println!(
                 "qn — Quant-Noise (ICLR 2021) coordinator\n\n\
-                 subcommands: info, train, quantize, eval, e2e, bench\n\
+                 subcommands: info, train, quantize, eval, e2e, bench, lint-plan\n\
                  run `qn <sub> --help` for options"
             );
             Ok(())
@@ -341,6 +343,50 @@ fn e2e(rest: &[String]) -> Result<()> {
     wb.step_scale = args.num_or("scale", 1.0);
     let model = args.get_or("model", "lm_tiny").to_string();
     quant_noise::bench_harness::e2e::run(&wb, &model, args.parse_num("steps"))
+}
+
+// -------------------------------------------------------- lint-plan ---
+
+fn lint_plan(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "lint-plan",
+        "statically verify the compiled plan of each HLO file (at every \
+         fusion setting) and print a plan census; non-zero exit on any \
+         diagnostic",
+    )
+    .flag("quiet", "suppress the census, print diagnostics only");
+    let args = parse(cmd, rest)?;
+    anyhow::ensure!(
+        !args.positionals.is_empty(),
+        "usage: qn lint-plan [--quiet] <hlo.txt> [<hlo.txt> ...]"
+    );
+    use quant_noise::runtime::interp::{verify, HloModule, Plan, PlanOptions};
+    let mut total = 0usize;
+    for path in &args.positionals {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let module =
+            HloModule::parse_str(&text).with_context(|| format!("parsing {path}"))?;
+        println!("== {path}");
+        // verify at every fusion setting: the nofuse plans execute too
+        // (benches, regression tests), so they must be just as sound
+        for (cl, tf) in [(true, true), (true, false), (false, true), (false, false)] {
+            let opts = PlanOptions { counted_loops: cl, threefry: tf };
+            let plan = Plan::compile_unverified(&module, opts);
+            let diags = verify::verify(&plan);
+            for d in &diags {
+                println!("  [counted_loops={cl} threefry={tf}] {d}");
+            }
+            total += diags.len();
+        }
+        if !args.flag("quiet") {
+            let plan = Plan::compile_unverified(&module, PlanOptions::default());
+            print!("{}", verify::census(&plan));
+        }
+    }
+    anyhow::ensure!(total == 0, "{total} plan diagnostic(s)");
+    println!("{} file(s) verified clean", args.positionals.len());
+    Ok(())
 }
 
 // ------------------------------------------------------------ bench ---

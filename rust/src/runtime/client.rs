@@ -23,9 +23,12 @@
 //! independent invocations ([`Executable::execute_f32_batched`]). Both
 //! are bit-deterministic at any thread count (DESIGN.md §4).
 
+// caches here are keyed lookup only — iteration order never reaches
+// results (clippy.toml bans HashMap in order-defining paths)
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -54,12 +57,26 @@ pub fn plan_cache_stats() -> (u64, u64) {
 }
 
 /// Parse + plan `text`, via the content cache unless stats mode wants
-/// per-session plan lifetimes.
+/// per-session plan lifetimes. The compiled plan passes the static
+/// verifier *before* it can reach the cache (debug builds and
+/// `QN_PLAN_VERIFY=1`): a rejected plan surfaces as a load error with
+/// the diagnostics, never as a cached executable.
 fn plan_for_text(text: &str, path: &Path) -> Result<Arc<interp::Plan>> {
     let parse_and_plan = || -> Result<Arc<interp::Plan>> {
         let module = interp::HloModule::parse_str(text)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        Ok(Arc::new(interp::Plan::compile(&module)))
+        let plan =
+            interp::Plan::compile_unverified(&module, interp::PlanOptions::default());
+        if interp::verify::should_verify() {
+            let diags = interp::verify::verify(&plan);
+            ensure!(
+                diags.is_empty(),
+                "plan verification failed for {}:\n{}",
+                path.display(),
+                interp::verify::render(&diags)
+            );
+        }
+        Ok(Arc::new(plan))
     };
     if std::env::var("QN_INTERP_STATS").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
         return parse_and_plan();
@@ -282,7 +299,7 @@ pub enum Buffer {
 pub struct Runtime {
     backend: Backend,
     pjrt: Option<xla::PjRtClient>,
-    cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
     /// interpreter worker bound: 0 ⇒ all cores (resolved at use), n ⇒ n
     threads: AtomicUsize,
 }
@@ -349,11 +366,11 @@ impl Runtime {
     /// process-wide by content — see [`plan_cache_stats`]). On the
     /// interpreter backend "compile" is parse + plan lowering
     /// (liveness, move flags, fused-region/loop classification).
-    pub fn compile(&self, path: &Path) -> Result<Rc<Executable>> {
+    pub fn compile(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(path) {
             return Ok(exe.clone());
         }
-        let exe = Rc::new(match self.backend {
+        let exe = Arc::new(match self.backend {
             Backend::Interp => {
                 let text = std::fs::read_to_string(path)
                     .with_context(|| format!("reading HLO text {}", path.display()))?;
@@ -511,7 +528,7 @@ mod tests {
         let rt = Runtime::interp();
         let a = rt.compile(&path).unwrap();
         let b = rt.compile(&path).unwrap();
-        assert!(Rc::ptr_eq(&a, &b), "second compile must hit the cache");
+        assert!(Arc::ptr_eq(&a, &b), "second compile must hit the cache");
         std::fs::remove_dir_all(dir).ok();
     }
 

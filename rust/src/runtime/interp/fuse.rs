@@ -38,6 +38,14 @@
 //! kernel provably equals the generic elementwise chain. Both rewrites
 //! were additionally validated bit-identically against the reference
 //! mirror on the committed fixture (`tools/qnsim/plan_mirror.py`).
+//!
+//! **Keep in sync:** [`crate::runtime::interp::verify`] re-proves both
+//! patterns from the HLO with independently authored code
+//! (`derive_counted`, `prove_threefry`) and rejects any plan where its
+//! derivation disagrees with the annotation these matchers produced.
+//! Loosening or extending a matcher here without teaching the verifier
+//! the same rule turns every newly matched plan into a verification
+//! failure — deliberately (DESIGN.md §8).
 
 use std::rc::Rc;
 

@@ -43,11 +43,13 @@ pub mod parser;
 pub mod plan;
 pub mod stats;
 pub mod value;
+pub mod verify;
 
 pub use eval::Interp;
 pub use parser::HloModule;
 pub use plan::{FusionStats, Plan, PlanOptions};
 pub use value::{ArrayValue, Buf, ElemType, Shape, Value};
+pub use verify::{Diagnostic, PlanCensus};
 
 #[cfg(test)]
 mod tests {

@@ -470,6 +470,12 @@ fn threefry_sweep(x0: &mut [u32], x1: &mut [u32], rot: &[u32; 4], k0: u32, k1: u
 /// associative, so folding it in is exact. Lanes shard across scoped
 /// workers above [`ELEM_PAR_MIN`]; each lane is independent, so the
 /// result is bit-identical at any worker count.
+///
+/// Keep in sync: this kernel, `fuse::expected_round` (the planner's
+/// matcher) and `verify::round_chain` (the static verifier's
+/// independent re-proof) all encode the same jax threefry lowering —
+/// the sharding here is declared per-element in
+/// [`crate::runtime::interp::verify::SHARD_REGISTRY`] (DESIGN.md §8).
 pub fn threefry2x32(
     x0: &mut [u32],
     x1: &mut [u32],

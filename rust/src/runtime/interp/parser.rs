@@ -9,6 +9,11 @@
 //! referenced by `to_apply`/`condition`/`body` are resolved module-wide
 //! in a fixup pass after all computations have been parsed.
 
+// name→index maps are keyed lookup only; instruction and computation
+// order always comes from the source text, never map iteration
+// (clippy.toml bans HashMap in order-defining paths)
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};

@@ -47,6 +47,7 @@ use crate::runtime::interp::parser::{
 };
 use crate::runtime::interp::stats::Stats;
 use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, Shape, Value};
+use crate::runtime::interp::verify;
 
 /// Output-element count above which the packed dot shards its output
 /// rows across worker threads (below it, spawn overhead dominates).
@@ -54,7 +55,7 @@ const DOT_PAR_MIN: usize = 4096;
 
 /// Fused lowering of an instruction, decided at plan time.
 #[derive(Debug, Clone, PartialEq)]
-enum Fused {
+pub(crate) enum Fused {
     /// Run the sub-computation per element / iteration (general
     /// fallback).
     None,
@@ -104,30 +105,32 @@ pub struct FusionStats {
     pub fused_scatters: usize,
 }
 
-/// One computation lowered for planned execution.
+/// One computation lowered for planned execution. Fields are
+/// crate-visible so [`crate::runtime::interp::verify`] can audit (and
+/// its tests corrupt) the schedule directly.
 #[derive(Debug)]
-struct CompPlan {
-    name: String,
-    instrs: Vec<Instr>,
-    root: usize,
-    n_params: usize,
+pub(crate) struct CompPlan {
+    pub(crate) name: String,
+    pub(crate) instrs: Vec<Instr>,
+    pub(crate) root: usize,
+    pub(crate) n_params: usize,
     /// Registers whose last use is step `i` (dropped after it runs).
-    free_after: Vec<Vec<usize>>,
+    pub(crate) free_after: Vec<Vec<usize>>,
     /// Per step, per operand: move the register out instead of cloning
     /// (true iff this is the operand's unique, final use).
-    take: Vec<Vec<bool>>,
-    fused: Vec<Fused>,
+    pub(crate) take: Vec<Vec<bool>>,
+    pub(crate) fused: Vec<Fused>,
 }
 
 /// A compiled module: liveness-annotated instruction plans for every
 /// computation, ready for repeated (and batch-sharded) execution.
 #[derive(Debug)]
 pub struct Plan {
-    comps: Vec<CompPlan>,
-    entry: usize,
-    entry_params: Vec<Option<Shape>>,
+    pub(crate) comps: Vec<CompPlan>,
+    pub(crate) entry: usize,
+    pub(crate) entry_params: Vec<Option<Shape>>,
     /// `QN_INTERP_STATS` op histogram, printed when the plan drops.
-    stats: Option<Stats>,
+    pub(crate) stats: Option<Stats>,
 }
 
 impl Plan {
@@ -138,8 +141,30 @@ impl Plan {
         Plan::compile_opts(m, PlanOptions::default())
     }
 
-    /// [`Plan::compile`] with explicit fusion switches.
+    /// [`Plan::compile`] with explicit fusion switches. In debug builds
+    /// (and under `QN_PLAN_VERIFY=1` in release) the compiled plan runs
+    /// through the static verifier and a diagnostic is a panic — a
+    /// planner bug must not reach execution. Callers that want the
+    /// diagnostics as data (the plan cache, `qn lint-plan`) use
+    /// [`Plan::compile_unverified`] and call [`verify::verify`]
+    /// themselves.
     pub fn compile_opts(m: &HloModule, opts: PlanOptions) -> Plan {
+        let plan = Plan::compile_unverified(m, opts);
+        if verify::should_verify() {
+            let diags = verify::verify(&plan);
+            if !diags.is_empty() {
+                panic!(
+                    "plan verification failed for module '{}':\n{}",
+                    m.name,
+                    verify::render(&diags)
+                );
+            }
+        }
+        plan
+    }
+
+    /// Lower a module without the static-verification gate.
+    pub fn compile_unverified(m: &HloModule, opts: PlanOptions) -> Plan {
         let threefry: Vec<bool> =
             m.comps.iter().map(|c| opts.threefry && fuse::match_threefry(c)).collect();
         let comps = m
@@ -295,7 +320,7 @@ fn classify(m: &HloModule, ins: &Instr, threefry: &[bool], opts: PlanOptions) ->
 
 /// Stats label of one planned instruction, plus whether it is a *leaf*
 /// (does not recurse into sub-plans, so its wall-clock is self time).
-fn op_label(ins: &Instr, fused: &Fused) -> (&'static str, bool) {
+pub(crate) fn op_label(ins: &Instr, fused: &Fused) -> (&'static str, bool) {
     match (&ins.op, fused) {
         (Op::While { .. }, Fused::Counted(_)) => ("while[counted]", false),
         (Op::While { .. }, _) => ("while[generic]", false),
@@ -398,6 +423,8 @@ impl<'p> Executor<'p> {
         };
         let (label, leaf) = op_label(&comp.instrs[si], &comp.fused[si]);
         if leaf {
+            // opt-in profiling only (QN_INTERP_STATS), never feeds results
+            #[allow(clippy::disallowed_methods)]
             let t0 = std::time::Instant::now();
             let v = self.step(comp, si, regs, args);
             stats.record(label, Some(t0.elapsed()));

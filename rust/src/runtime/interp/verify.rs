@@ -1,0 +1,1844 @@
+//! Static plan verifier (DESIGN.md §8): prove every invariant a
+//! compiled [`Plan`] relies on *before* it executes, and reject bad
+//! plans with typed, instruction-addressed diagnostics instead of
+//! corrupting a training run.
+//!
+//! The interpreter's optimization layers — last-use liveness with
+//! in-place buffer moves, counted-`while` superinstructions, the
+//! native threefry kernel, sharded kernels — are each only sound under
+//! structural preconditions that [`Plan::compile`] derives from the
+//! HLO. Until now those preconditions were enforced dynamically
+//! (golden fixture tests, the Python mirror); a planner bug on an op
+//! pattern outside the fixture would ship silently. This module checks
+//! them statically, per plan:
+//!
+//! * **Schedule / liveness** ([`DiagKind::StaleRead`],
+//!   [`DiagKind::Structure`]): operands are defined before use, no
+//!   step reads a register after its `free_after` point, every
+//!   non-root register is freed exactly once, the root is never freed.
+//! * **In-place legality** ([`DiagKind::InPlace`]): a `take` (move)
+//!   flag is only legal on an operand's unique, final use — a wrong
+//!   flag means an in-place kernel mutates (or steals) a buffer some
+//!   later step still needs.
+//! * **Shape/dtype agreement** ([`DiagKind::Type`]): every
+//!   instruction's declared result shape is re-derived from its
+//!   operands' declared shapes per the op's semantics, including
+//!   through `call`/`while`/`reduce`/`scatter` sub-computations.
+//! * **Fused-region preconditions** ([`DiagKind::Fusion`]): each
+//!   `Fused` annotation (single-binary-op region, counted loop,
+//!   threefry round body) is re-proved from the instructions.
+//! * **Shard safety** ([`DiagKind::ShardSafety`]): every step that can
+//!   dispatch a kernel that shards under the `threads` knob must name
+//!   a kernel in [`SHARD_REGISTRY`], where each entry carries its
+//!   determinism argument (per-element independence or ascending-shard
+//!   merge). A sharding step outside the registry is an error — new
+//!   kernels must declare *why* they are thread-count-invariant.
+//!
+//! **Independence rule.** The verifier re-derives liveness, move flags
+//! and fusion legality from the plan's instruction list with its own
+//! code — it never calls [`super::plan`]'s `analyze()` or
+//! [`super::fuse`]'s matchers — so a bug in the planner cannot vouch
+//! for itself. When `plan.rs` or `fuse.rs` change an invariant, the
+//! corresponding re-derivation here must change *in a separate code
+//! path* (see the keep-in-sync notes at their definitions).
+//!
+//! **Wiring.** Debug builds and tests verify every compiled plan
+//! unconditionally ([`should_verify`]); release builds opt in with
+//! `QN_PLAN_VERIFY=1`. The runtime verifies before inserting a plan
+//! into the process-wide cache (`runtime/client.rs`), and
+//! `qn lint-plan <hlo.txt>` prints diagnostics plus a [`PlanCensus`]
+//! for any HLO file.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::runtime::interp::fuse::CountedLoop;
+use crate::runtime::interp::parser::{BinaryOp, CmpDir, Instr, Op};
+use crate::runtime::interp::plan::{op_label, CompPlan, Fused, Plan};
+use crate::runtime::interp::value::{Buf, ElemType, Shape};
+
+// --------------------------------------------------------- diagnostics ---
+
+/// What kind of invariant a diagnostic reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagKind {
+    /// A register is read after its free point.
+    StaleRead,
+    /// A move (`take`) flag on an operand that is not a unique final
+    /// use — an in-place kernel would mutate or steal a live buffer.
+    InPlace,
+    /// Declared result shape/dtype disagrees with the one re-derived
+    /// from the operands.
+    Type,
+    /// A `Fused` annotation whose preconditions do not hold on the
+    /// instructions it covers.
+    Fusion,
+    /// A step can dispatch a sharding kernel that is not declared in
+    /// [`SHARD_REGISTRY`].
+    ShardSafety,
+    /// Malformed plan structure: operand ordering, arity mismatches,
+    /// double frees, bad computation references.
+    Structure,
+}
+
+impl fmt::Display for DiagKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DiagKind::StaleRead => "stale-read",
+            DiagKind::InPlace => "in-place",
+            DiagKind::Type => "type",
+            DiagKind::Fusion => "fusion",
+            DiagKind::ShardSafety => "shard-safety",
+            DiagKind::Structure => "structure",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One verifier finding, addressed to a specific instruction.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Computation name (e.g. `ENTRY main.1`'s `main.1`).
+    pub comp: String,
+    /// Instruction name (e.g. `add.42`).
+    pub instr: String,
+    /// Instruction index within the computation.
+    pub index: usize,
+    pub kind: DiagKind,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}::{} (#{}): [{}] {}",
+            self.comp, self.instr, self.index, self.kind, self.message
+        )
+    }
+}
+
+/// Render a diagnostic list one-per-line (panic messages, lint output).
+pub fn render(diags: &[Diagnostic]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for d in diags {
+        let _ = writeln!(s, "  {d}");
+    }
+    s
+}
+
+/// Should compiled plans be verified in this process? Always in debug
+/// builds and tests; opt-in via `QN_PLAN_VERIFY=1` (any non-empty,
+/// non-`0` value) in release.
+pub fn should_verify() -> bool {
+    cfg!(debug_assertions)
+        || std::env::var("QN_PLAN_VERIFY").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+// ------------------------------------------------ shard-safety registry ---
+
+/// Why a sharded kernel is bit-identical at any worker count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardDeterminism {
+    /// Every output element is computed wholly by one worker with the
+    /// same scalar code regardless of which worker owns it.
+    PerElement,
+    /// Workers own disjoint ascending ranges and results merge in
+    /// ascending shard order, identical to the serial visit order.
+    AscendingMerge,
+}
+
+/// One declared sharding kernel with its determinism argument.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardKernel {
+    /// Key produced by [`sharding_kernel`] for matching steps.
+    pub name: &'static str,
+    pub determinism: ShardDeterminism,
+    /// One-line justification (the auditable argument).
+    pub rationale: &'static str,
+}
+
+/// Every kernel the planned executor may shard under the `threads`
+/// knob, with its determinism argument. A step that can dispatch a
+/// sharding kernel *not* listed here fails verification — extending
+/// the executor with a new sharded kernel requires declaring it here
+/// (and arguing its thread-count invariance; see DESIGN.md §8).
+pub const SHARD_REGISTRY: &[ShardKernel] = &[
+    ShardKernel {
+        name: "unary[elementwise]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each element is mapped independently by the same scalar helper",
+    },
+    ShardKernel {
+        name: "binary[elementwise]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each element pair is combined independently by the same scalar helper",
+    },
+    ShardKernel {
+        name: "select[elementwise]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each element picks one branch independently of every other element",
+    },
+    ShardKernel {
+        name: "dot[packed]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each output row's ascending-k accumulation runs wholly on one worker",
+    },
+    ShardKernel {
+        name: "reduce[fused]",
+        determinism: ShardDeterminism::AscendingMerge,
+        rationale: "workers fold disjoint ascending cell ranges, merged in shard order",
+    },
+    ShardKernel {
+        name: "call[threefry2x32]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each u32 lane's round chain is independent of every other lane",
+    },
+];
+
+/// Which sharding kernel (registry key) a planned step can dispatch,
+/// mirroring the executor's dispatch sites in `plan.rs` — elementwise
+/// unary/binary/select (in-place or CoW+sharded), the packed dot,
+/// fused reduces, and the native threefry call. Scatter and the
+/// generic reduce/while/call paths are serial per invocation and
+/// return None. Keep in sync with `Executor::step`.
+pub fn sharding_kernel(ins: &Instr, fused: &Fused) -> Option<&'static str> {
+    match (&ins.op, fused) {
+        (Op::Unary(_), _) => Some("unary[elementwise]"),
+        (Op::Binary(_), _) => Some("binary[elementwise]"),
+        (Op::Select, _) => Some("select[elementwise]"),
+        (Op::Dot(_), _) => Some("dot[packed]"),
+        (Op::Reduce { .. }, Fused::Bin { .. }) => Some("reduce[fused]"),
+        (Op::Call { .. }, Fused::Threefry) => Some("call[threefry2x32]"),
+        _ => None,
+    }
+}
+
+// -------------------------------------------------------------- verify ---
+
+/// Verify every computation of a compiled plan against the invariants
+/// in the module docs. Returns all findings (empty = plan is clean).
+pub fn verify(plan: &Plan) -> Vec<Diagnostic> {
+    verify_with_registry(plan, SHARD_REGISTRY)
+}
+
+/// [`verify`] against an explicit shard-safety registry (test hook:
+/// an empty registry must reject every sharding step).
+pub fn verify_with_registry(plan: &Plan, registry: &[ShardKernel]) -> Vec<Diagnostic> {
+    let mut v = Verifier { plan, registry, diags: Vec::new() };
+    v.run();
+    v.diags
+}
+
+struct Verifier<'p> {
+    plan: &'p Plan,
+    registry: &'p [ShardKernel],
+    diags: Vec<Diagnostic>,
+}
+
+impl<'p> Verifier<'p> {
+    fn diag(&mut self, ci: usize, si: usize, kind: DiagKind, message: String) {
+        let comp = &self.plan.comps[ci];
+        let instr =
+            comp.instrs.get(si).map(|i| i.name.clone()).unwrap_or_else(|| "<root>".into());
+        self.diags.push(Diagnostic { comp: comp.name.clone(), instr, index: si, kind, message });
+    }
+
+    fn run(&mut self) {
+        if self.plan.entry >= self.plan.comps.len() {
+            // no computation to address: fabricate a root-level finding
+            self.diags.push(Diagnostic {
+                comp: "<module>".into(),
+                instr: "<entry>".into(),
+                index: self.plan.entry,
+                kind: DiagKind::Structure,
+                message: format!(
+                    "entry computation index {} out of range ({} computations)",
+                    self.plan.entry,
+                    self.plan.comps.len()
+                ),
+            });
+            return;
+        }
+        let n = self.plan.comps.len();
+        let mut sound = vec![false; n];
+        for (ci, s) in sound.iter_mut().enumerate() {
+            *s = self.check_comp(ci);
+        }
+        // type/fusion/shard checks follow operand and computation
+        // references across the whole module; only run them when every
+        // computation is structurally sound, so a corrupt plan yields
+        // diagnostics instead of out-of-range panics
+        if sound.iter().all(|&s| s) {
+            for ci in 0..n {
+                for si in 0..self.plan.comps[ci].instrs.len() {
+                    self.check_types(ci, si);
+                    self.check_fusion(ci, si);
+                    self.check_shard(ci, si);
+                }
+            }
+            self.check_entry_params();
+        }
+    }
+
+    /// The entry-parameter shape table must mirror the entry
+    /// computation's Parameter declarations (batched execution slices
+    /// inputs against it).
+    fn check_entry_params(&mut self) {
+        let e = &self.plan.comps[self.plan.entry];
+        if self.plan.entry_params.len() != e.n_params {
+            self.diag(
+                self.plan.entry,
+                e.root.min(e.instrs.len()),
+                DiagKind::Structure,
+                format!(
+                    "entry_params arity {} != entry n_params {}",
+                    self.plan.entry_params.len(),
+                    e.n_params
+                ),
+            );
+            return;
+        }
+        let mut pending = Vec::new();
+        for (si, ins) in e.instrs.iter().enumerate() {
+            if let Op::Parameter(i) = &ins.op {
+                if self.plan.entry_params.get(*i).map(|s| s.as_ref()) != Some(Some(&ins.shape)) {
+                    pending.push((si, *i));
+                }
+            }
+        }
+        for (si, i) in pending {
+            self.diag(
+                self.plan.entry,
+                si,
+                DiagKind::Structure,
+                format!("entry_params[{i}] does not record this parameter's declared shape"),
+            );
+        }
+    }
+
+    /// Schedule-level checks for one computation: root/annotation
+    /// bounds, structure, liveness. Returns whether the deeper passes
+    /// may index through it.
+    fn check_comp(&mut self, ci: usize) -> bool {
+        let comp = &self.plan.comps[ci];
+        let n = comp.instrs.len();
+        if comp.root >= n {
+            self.diag(
+                ci,
+                0,
+                DiagKind::Structure,
+                format!("root register {} out of range ({n} instructions)", comp.root),
+            );
+            return false;
+        }
+        if comp.free_after.len() != n || comp.take.len() != n || comp.fused.len() != n {
+            self.diag(
+                ci,
+                0,
+                DiagKind::Structure,
+                format!(
+                    "annotation arity mismatch: {n} instructions, {} free lists, {} take rows, \
+                     {} fusion slots",
+                    comp.free_after.len(),
+                    comp.take.len(),
+                    comp.fused.len()
+                ),
+            );
+            return false;
+        }
+        let structure_ok = self.check_structure(ci);
+        self.check_liveness(ci);
+        structure_ok
+    }
+
+    /// Operand ordering, take-row arity, parameter declarations and
+    /// computation references. Returns false if later passes must not
+    /// index through this computation.
+    fn check_structure(&mut self, ci: usize) -> bool {
+        let comp = &self.plan.comps[ci];
+        let n_comps = self.plan.comps.len();
+        let mut ok = true;
+        let mut findings = Vec::new();
+        let mut seen_params = vec![false; comp.n_params];
+        for (si, ins) in comp.instrs.iter().enumerate() {
+            if comp.take[si].len() != ins.operands.len() {
+                findings.push((
+                    si,
+                    format!(
+                        "take row has {} flags for {} operands",
+                        comp.take[si].len(),
+                        ins.operands.len()
+                    ),
+                ));
+                ok = false;
+            }
+            for &o in &ins.operands {
+                if o >= si {
+                    findings.push((
+                        si,
+                        format!("operand register {o} is not defined before this step"),
+                    ));
+                    ok = false;
+                }
+            }
+            match &ins.op {
+                Op::Parameter(i) => {
+                    if *i >= comp.n_params {
+                        findings.push((
+                            si,
+                            format!("parameter {i} out of range ({} declared)", comp.n_params),
+                        ));
+                    } else if std::mem::replace(&mut seen_params[*i], true) {
+                        // the executor moves the argument out of its
+                        // slot, so a second read would find nothing
+                        findings
+                            .push((si, format!("parameter {i} is declared more than once")));
+                    }
+                }
+                Op::Call { comp: t } => {
+                    if *t >= n_comps {
+                        findings.push((si, format!("call target {t} out of range")));
+                        ok = false;
+                    }
+                }
+                Op::While { cond, body } => {
+                    if *cond >= n_comps || *body >= n_comps {
+                        findings.push((
+                            si,
+                            format!("while cond/body reference ({cond}, {body}) out of range"),
+                        ));
+                        ok = false;
+                    }
+                }
+                Op::Reduce { comp: t, .. } | Op::Scatter { comp: t, .. } => {
+                    if *t >= n_comps {
+                        findings.push((si, format!("region target {t} out of range")));
+                        ok = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (si, msg) in findings {
+            self.diag(ci, si, DiagKind::Structure, msg);
+        }
+        ok
+    }
+
+    /// Independently re-derive last uses from the instruction list and
+    /// check `free_after` / `take` against them. This is deliberately
+    /// NOT a call into `plan::analyze` — the point is that a planner
+    /// bug cannot vouch for itself.
+    fn check_liveness(&mut self, ci: usize) {
+        let comp = &self.plan.comps[ci];
+        let n = comp.instrs.len();
+        // my own last-use table: latest step index reading register r
+        let mut last_use: Vec<Option<usize>> = vec![None; n];
+        for (si, ins) in comp.instrs.iter().enumerate() {
+            for &o in &ins.operands {
+                if o < n {
+                    last_use[o] = Some(si);
+                }
+            }
+        }
+        let mut findings = Vec::new();
+        let mut freed = vec![false; n];
+        for si in 0..n {
+            for (k, &o) in comp.instrs[si].operands.iter().enumerate() {
+                if o >= si {
+                    continue; // reported by check_structure
+                }
+                if freed[o] {
+                    findings.push((
+                        si,
+                        DiagKind::StaleRead,
+                        format!("reads register {o} after its free point"),
+                    ));
+                }
+                if comp.take[si].get(k) == Some(&true) {
+                    let dup =
+                        comp.instrs[si].operands.iter().filter(|&&x| x == o).count() > 1;
+                    if o == comp.root {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!("operand {k} moves the root register {o}"),
+                        ));
+                    } else if dup {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!(
+                                "operand {k} moves register {o}, which this step reads twice"
+                            ),
+                        ));
+                    } else if last_use[o] != Some(si) {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!(
+                                "operand {k} moves register {o}, but step {} still reads it",
+                                last_use[o].unwrap_or(o)
+                            ),
+                        ));
+                    }
+                }
+            }
+            for &r in &comp.free_after[si] {
+                if r >= n {
+                    findings.push((
+                        si,
+                        DiagKind::Structure,
+                        format!("frees register {r}, which does not exist"),
+                    ));
+                    continue;
+                }
+                if r == comp.root {
+                    findings.push((
+                        si,
+                        DiagKind::Structure,
+                        format!("frees the root register {r}"),
+                    ));
+                    continue;
+                }
+                if r > si {
+                    findings.push((
+                        si,
+                        DiagKind::Structure,
+                        format!("frees register {r} before it is computed"),
+                    ));
+                }
+                if last_use[r].is_some_and(|l| l > si) {
+                    findings.push((
+                        si,
+                        DiagKind::StaleRead,
+                        format!("frees register {r}, but a later step still reads it"),
+                    ));
+                }
+                if std::mem::replace(&mut freed[r], true) {
+                    findings.push((
+                        si,
+                        DiagKind::Structure,
+                        format!("register {r} is freed twice"),
+                    ));
+                }
+            }
+        }
+        for (r, &f) in freed.iter().enumerate() {
+            if !f && r != comp.root {
+                findings.push((
+                    r,
+                    DiagKind::Structure,
+                    format!("register {r} is never freed"),
+                ));
+            }
+        }
+        for (si, kind, msg) in findings {
+            self.diag(ci, si, kind, msg);
+        }
+    }
+
+    // ------------------------------------------------------ type check ---
+
+    /// Declared shape of operand `k` of step `si` (structure already
+    /// validated: operands index earlier instructions).
+    fn oshape(&self, ci: usize, si: usize, k: usize) -> &'p Shape {
+        let comp = &self.plan.comps[ci];
+        &comp.instrs[comp.instrs[si].operands[k]].shape
+    }
+
+    /// Operand `k` as (dtype, dims), or a Type diagnostic.
+    fn oarr(&mut self, ci: usize, si: usize, k: usize) -> Option<(ElemType, Vec<usize>)> {
+        match self.oshape(ci, si, k) {
+            Shape::Array { ty, dims } => Some((*ty, dims.clone())),
+            Shape::Tuple(_) => {
+                self.diag(
+                    ci,
+                    si,
+                    DiagKind::Type,
+                    format!("operand {k} is a tuple where an array is required"),
+                );
+                None
+            }
+        }
+    }
+
+    fn ty_err(&mut self, ci: usize, si: usize, msg: String) {
+        self.diag(ci, si, DiagKind::Type, msg);
+    }
+
+    /// Re-derive step `si`'s result shape from its operands' declared
+    /// shapes and compare against the declared result shape.
+    fn check_types(&mut self, ci: usize, si: usize) {
+        let comp = &self.plan.comps[ci];
+        let ins = &comp.instrs[si];
+        let declared = ins.shape.clone();
+        let nops = ins.operands.len();
+        // fixed-arity ops: validate before any operand indexing (a
+        // corrupted plan must produce a diagnostic, never a panic);
+        // tuple/call/concatenate/reduce validate their own arity below
+        let need = match &ins.op {
+            Op::Parameter(_) | Op::Constant(_) | Op::Iota { .. } => Some(0),
+            Op::GetTupleElement(_)
+            | Op::While { .. }
+            | Op::Broadcast { .. }
+            | Op::Reshape
+            | Op::Transpose { .. }
+            | Op::Slice { .. }
+            | Op::Convert
+            | Op::BitcastConvert
+            | Op::Unary(_) => Some(1),
+            Op::Compare { .. } | Op::Binary(_) | Op::Dot(_) | Op::Gather(_) => Some(2),
+            Op::Select | Op::Scatter { .. } => Some(3),
+            Op::Tuple | Op::Call { .. } | Op::Concatenate { .. } | Op::Reduce { .. } => None,
+        };
+        if let Some(want) = need {
+            if nops != want {
+                return self.diag(
+                    ci,
+                    si,
+                    DiagKind::Structure,
+                    format!("op takes {want} operands, got {nops}"),
+                );
+            }
+        }
+        let decl_arr = match &declared {
+            Shape::Array { ty, dims } => Some((*ty, dims.clone())),
+            Shape::Tuple(_) => None,
+        };
+        match &ins.op {
+            Op::Parameter(_) => {} // the declaration IS the shape
+            Op::Constant(c) => {
+                let want = Shape::Array { ty: c.ty(), dims: c.dims.clone() };
+                if declared != want {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!(
+                            "constant payload is {}{:?}, declared {declared:?}",
+                            c.ty().name(),
+                            c.dims
+                        ),
+                    );
+                }
+            }
+            Op::Tuple => {
+                let elems: Vec<Shape> =
+                    (0..nops).map(|k| self.oshape(ci, si, k).clone()).collect();
+                if declared != Shape::Tuple(elems) {
+                    self.ty_err(ci, si, "tuple shape != operand shapes".into());
+                }
+            }
+            Op::GetTupleElement(i) => match self.oshape(ci, si, 0) {
+                Shape::Tuple(ts) => match ts.get(*i) {
+                    Some(t) if *t == declared => {}
+                    Some(t) => {
+                        let t = t.clone();
+                        self.ty_err(ci, si, format!("element {i} is {t:?}, declared {declared:?}"));
+                    }
+                    None => self.ty_err(ci, si, format!("tuple index {i} out of range")),
+                },
+                Shape::Array { .. } => {
+                    self.ty_err(ci, si, "get-tuple-element of an array".into())
+                }
+            },
+            Op::Call { comp: t } => {
+                let params = self.param_shapes(*t);
+                if params.len() != nops {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("call passes {nops} args, callee takes {}", params.len()),
+                    );
+                } else {
+                    for (k, want) in params.into_iter().enumerate() {
+                        match want {
+                            Some(w) if w == *self.oshape(ci, si, k) => {}
+                            Some(w) => self.ty_err(
+                                ci,
+                                si,
+                                format!("arg {k} is {:?}, callee expects {w:?}",
+                                    self.oshape(ci, si, k)),
+                            ),
+                            None => {} // callee never reads this parameter
+                        }
+                    }
+                }
+                let root = self.root_shape(*t);
+                if root != declared {
+                    self.ty_err(ci, si, format!("callee returns {root:?}, declared {declared:?}"));
+                }
+            }
+            Op::While { cond, body } => {
+                if nops != 1 {
+                    self.ty_err(ci, si, format!("while takes 1 operand, got {nops}"));
+                    return;
+                }
+                let state = self.oshape(ci, si, 0).clone();
+                if declared != state {
+                    self.ty_err(ci, si, "while result shape != state shape".into());
+                }
+                for (t, label) in [(*cond, "condition"), (*body, "body")] {
+                    let params = self.param_shapes(t);
+                    if params.len() != 1 {
+                        self.ty_err(ci, si, format!("{label} must take 1 parameter"));
+                        continue;
+                    }
+                    if let Some(p) = &params[0] {
+                        if *p != state {
+                            self.ty_err(
+                                ci,
+                                si,
+                                format!("{label} parameter {p:?} != state {state:?}"),
+                            );
+                        }
+                    }
+                }
+                let cr = self.root_shape(*cond);
+                if cr != (Shape::Array { ty: ElemType::Pred, dims: vec![] }) {
+                    self.ty_err(ci, si, format!("condition returns {cr:?}, want pred[]"));
+                }
+                let br = self.root_shape(*body);
+                if br != state {
+                    self.ty_err(ci, si, format!("body returns {br:?}, state is {state:?}"));
+                }
+            }
+            Op::Iota { dim } => {
+                let Some((ty, dims)) = decl_arr else {
+                    return self.ty_err(ci, si, "iota result must be an array".into());
+                };
+                if *dim >= dims.len() {
+                    self.ty_err(ci, si, format!("iota dimension {dim} >= rank {}", dims.len()));
+                }
+                if ty == ElemType::Pred {
+                    self.ty_err(ci, si, "iota cannot produce pred".into());
+                }
+            }
+            Op::Broadcast { dims: mapping } => {
+                let Some((ity, idims)) = self.oarr(ci, si, 0) else { return };
+                let Some((oty, odims)) = decl_arr else {
+                    return self.ty_err(ci, si, "broadcast result must be an array".into());
+                };
+                if ity != oty {
+                    self.ty_err(ci, si, format!("broadcast {} to {}", ity.name(), oty.name()));
+                }
+                if mapping.len() != idims.len() {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        format!(
+                            "broadcast maps {} dims of a rank-{} operand",
+                            mapping.len(),
+                            idims.len()
+                        ),
+                    );
+                }
+                for (k, &d) in mapping.iter().enumerate() {
+                    if d >= odims.len() || odims[d] != idims[k] {
+                        self.ty_err(
+                            ci,
+                            si,
+                            format!("broadcast operand dim {k} does not land on output dim {d}"),
+                        );
+                    }
+                }
+            }
+            Op::Reshape => {
+                let Some((ity, idims)) = self.oarr(ci, si, 0) else { return };
+                let Some((oty, odims)) = decl_arr else {
+                    return self.ty_err(ci, si, "reshape result must be an array".into());
+                };
+                if ity != oty
+                    || idims.iter().product::<usize>() != odims.iter().product::<usize>()
+                {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("reshape {}{idims:?} to {}{odims:?}", ity.name(), oty.name()),
+                    );
+                }
+            }
+            Op::Transpose { perm } => {
+                let Some((ity, idims)) = self.oarr(ci, si, 0) else { return };
+                let mut sorted = perm.clone();
+                sorted.sort_unstable();
+                if sorted != (0..idims.len()).collect::<Vec<_>>() {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        format!("transpose {perm:?} is not a permutation of rank {}", idims.len()),
+                    );
+                }
+                let want: Vec<usize> = perm.iter().map(|&p| idims[p]).collect();
+                if decl_arr != Some((ity, want.clone())) {
+                    self.ty_err(ci, si, format!("transpose produces {}{want:?}", ity.name()));
+                }
+            }
+            Op::Slice { spec } => {
+                let Some((ity, idims)) = self.oarr(ci, si, 0) else { return };
+                if spec.len() != idims.len() {
+                    return self.ty_err(ci, si, "slice spec rank mismatch".into());
+                }
+                let mut want = Vec::with_capacity(spec.len());
+                for (d, &(s, l, st)) in spec.iter().enumerate() {
+                    if st == 0 || s > l || l > idims[d] {
+                        return self.ty_err(
+                            ci,
+                            si,
+                            format!("slice bounds [{s}:{l}:{st}] invalid for dim {d}"),
+                        );
+                    }
+                    want.push((l - s).div_ceil(st));
+                }
+                if decl_arr != Some((ity, want.clone())) {
+                    self.ty_err(ci, si, format!("slice produces {}{want:?}", ity.name()));
+                }
+            }
+            Op::Concatenate { dim } => {
+                if nops == 0 {
+                    return self.ty_err(ci, si, "concatenate of nothing".into());
+                }
+                let Some((ty0, dims0)) = self.oarr(ci, si, 0) else { return };
+                if *dim >= dims0.len() {
+                    return self.ty_err(ci, si, format!("concatenate dim {dim} out of range"));
+                }
+                let mut want = dims0.clone();
+                want[*dim] = 0;
+                for k in 0..nops {
+                    let Some((ty, dims)) = self.oarr(ci, si, k) else { return };
+                    let same_other = dims.len() == dims0.len()
+                        && dims
+                            .iter()
+                            .enumerate()
+                            .all(|(d, &v)| d == *dim || v == dims0[d]);
+                    if ty != ty0 || !same_other {
+                        return self.ty_err(
+                            ci,
+                            si,
+                            format!("concatenate operand {k} shape/dtype mismatch"),
+                        );
+                    }
+                    want[*dim] += dims[*dim];
+                }
+                if decl_arr != Some((ty0, want.clone())) {
+                    self.ty_err(ci, si, format!("concatenate produces {}{want:?}", ty0.name()));
+                }
+            }
+            Op::Select => {
+                let (Some((pty, pdims)), Some(t), Some(f)) =
+                    (self.oarr(ci, si, 0), self.oarr(ci, si, 1), self.oarr(ci, si, 2))
+                else {
+                    return;
+                };
+                if pty != ElemType::Pred {
+                    self.ty_err(ci, si, "select predicate must be pred".into());
+                }
+                if t != f || pdims != t.1 {
+                    self.ty_err(ci, si, "select operand shapes disagree".into());
+                }
+                if decl_arr != Some(t) {
+                    self.ty_err(ci, si, "select result != branch shape".into());
+                }
+            }
+            Op::Compare { .. } => {
+                let (Some(a), Some(b)) = (self.oarr(ci, si, 0), self.oarr(ci, si, 1)) else {
+                    return;
+                };
+                if a != b {
+                    self.ty_err(ci, si, "compare operand shapes disagree".into());
+                }
+                if decl_arr != Some((ElemType::Pred, a.1)) {
+                    self.ty_err(ci, si, "compare result must be pred of operand dims".into());
+                }
+            }
+            Op::Convert | Op::BitcastConvert => {
+                let Some((_, idims)) = self.oarr(ci, si, 0) else { return };
+                match decl_arr {
+                    Some((_, odims)) if odims == idims => {}
+                    _ => self.ty_err(ci, si, "convert must preserve dims".into()),
+                }
+            }
+            Op::Unary(_) => {
+                let Some(a) = self.oarr(ci, si, 0) else { return };
+                if decl_arr != Some(a) {
+                    self.ty_err(ci, si, "unary result != operand shape".into());
+                }
+            }
+            Op::Binary(_) => {
+                let (Some(a), Some(b)) = (self.oarr(ci, si, 0), self.oarr(ci, si, 1)) else {
+                    return;
+                };
+                if a != b {
+                    // HLO has no implicit broadcast
+                    self.ty_err(ci, si, "binary operand shapes disagree".into());
+                }
+                if decl_arr != Some(a) {
+                    self.ty_err(ci, si, "binary result != operand shape".into());
+                }
+            }
+            Op::Dot(nums) => {
+                let (Some((lty, ld)), Some((rty, rd))) =
+                    (self.oarr(ci, si, 0), self.oarr(ci, si, 1))
+                else {
+                    return;
+                };
+                if lty != ElemType::F32 || rty != ElemType::F32 {
+                    self.ty_err(ci, si, "dot is f32-only in this backend".into());
+                }
+                if nums.lhs_batch.len() != nums.rhs_batch.len()
+                    || nums.lhs_contracting.len() != nums.rhs_contracting.len()
+                {
+                    return self.ty_err(ci, si, "dot dimension-number arity mismatch".into());
+                }
+                let in_range = |ds: &[usize], rank: usize| ds.iter().all(|&d| d < rank);
+                if !in_range(&nums.lhs_batch, ld.len())
+                    || !in_range(&nums.lhs_contracting, ld.len())
+                    || !in_range(&nums.rhs_batch, rd.len())
+                    || !in_range(&nums.rhs_contracting, rd.len())
+                {
+                    return self.ty_err(ci, si, "dot dimension number out of range".into());
+                }
+                for (t, &d) in nums.lhs_batch.iter().enumerate() {
+                    if rd[nums.rhs_batch[t]] != ld[d] {
+                        self.ty_err(ci, si, format!("dot batch dim {t} disagrees"));
+                    }
+                }
+                for (t, &d) in nums.lhs_contracting.iter().enumerate() {
+                    if rd[nums.rhs_contracting[t]] != ld[d] {
+                        self.ty_err(ci, si, format!("dot contracting dim {t} disagrees"));
+                    }
+                }
+                let lfree: Vec<usize> = (0..ld.len())
+                    .filter(|d| !nums.lhs_batch.contains(d) && !nums.lhs_contracting.contains(d))
+                    .collect();
+                let rfree: Vec<usize> = (0..rd.len())
+                    .filter(|d| !nums.rhs_batch.contains(d) && !nums.rhs_contracting.contains(d))
+                    .collect();
+                let mut want: Vec<usize> = nums.lhs_batch.iter().map(|&d| ld[d]).collect();
+                want.extend(lfree.iter().map(|&d| ld[d]));
+                want.extend(rfree.iter().map(|&d| rd[d]));
+                if decl_arr != Some((ElemType::F32, want.clone())) {
+                    self.ty_err(ci, si, format!("dot produces f32{want:?}"));
+                }
+            }
+            Op::Gather(g) => {
+                let (Some((oty, odims)), Some((sty, sdims_full))) =
+                    (self.oarr(ci, si, 0), self.oarr(ci, si, 1))
+                else {
+                    return;
+                };
+                if !matches!(sty, ElemType::S32 | ElemType::U32) {
+                    self.ty_err(ci, si, "gather indices must be integer".into());
+                }
+                let Some((dty, ddims)) = decl_arr else {
+                    return self.ty_err(ci, si, "gather result must be an array".into());
+                };
+                if dty != oty {
+                    self.ty_err(ci, si, "gather result dtype != operand dtype".into());
+                }
+                let orank = odims.len();
+                if g.slice_sizes.len() != orank
+                    || g.start_index_map.iter().any(|&d| d >= orank)
+                    || g.index_vector_dim > sdims_full.len()
+                {
+                    return self.ty_err(ci, si, "gather dimension numbers out of range".into());
+                }
+                for (d, &sz) in g.slice_sizes.iter().enumerate() {
+                    if sz > odims[d] {
+                        self.ty_err(
+                            ci,
+                            si,
+                            format!("gather slice_sizes[{d}] = {sz} exceeds operand dim"),
+                        );
+                    }
+                }
+                // start-index dims excluding index_vector_dim, in order
+                let sdims: Vec<usize> =
+                    (0..sdims_full.len()).filter(|&d| d != g.index_vector_dim).collect();
+                let batch_out: Vec<usize> =
+                    (0..ddims.len()).filter(|d| !g.offset_dims.contains(d)).collect();
+                let off_operand: Vec<usize> = (0..orank)
+                    .filter(|d| {
+                        !g.collapsed_slice_dims.contains(d)
+                            && !g.operand_batching_dims.contains(d)
+                    })
+                    .collect();
+                if off_operand.len() != g.offset_dims.len() || batch_out.len() != sdims.len() {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        "gather offset/batch dimension arity mismatch".into(),
+                    );
+                }
+                for (j, &sd) in sdims.iter().enumerate() {
+                    if ddims[batch_out[j]] != sdims_full[sd] {
+                        self.ty_err(
+                            ci,
+                            si,
+                            format!("gather output batch dim {} disagrees", batch_out[j]),
+                        );
+                    }
+                }
+                for (k, &od) in off_operand.iter().enumerate() {
+                    if ddims[g.offset_dims[k]] != g.slice_sizes[od] {
+                        self.ty_err(
+                            ci,
+                            si,
+                            format!("gather output offset dim {} disagrees", g.offset_dims[k]),
+                        );
+                    }
+                }
+            }
+            Op::Reduce { dims, comp: t } => {
+                if nops < 2 || nops % 2 != 0 {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        format!("reduce needs N inputs + N inits, got {nops} operands"),
+                    );
+                }
+                let nin = nops / 2;
+                let mut itys = Vec::with_capacity(nin);
+                let Some((_, xdims)) = self.oarr(ci, si, 0) else { return };
+                for k in 0..nin {
+                    let Some((ty, dims_k)) = self.oarr(ci, si, k) else { return };
+                    if dims_k != xdims {
+                        self.ty_err(ci, si, format!("reduce input {k} shape mismatch"));
+                    }
+                    let Some((init_ty, init_dims)) = self.oarr(ci, si, nin + k) else { return };
+                    if !init_dims.is_empty() || init_ty != ty {
+                        self.ty_err(ci, si, format!("reduce init {k} must be a {} scalar",
+                            ty.name()));
+                    }
+                    itys.push(ty);
+                }
+                let mut seen = vec![false; xdims.len()];
+                for &d in dims {
+                    if d >= xdims.len() || std::mem::replace(&mut seen[d], true) {
+                        return self.ty_err(ci, si, format!("reduce dimension {d} invalid"));
+                    }
+                }
+                let kept: Vec<usize> =
+                    (0..xdims.len()).filter(|d| !dims.contains(d)).map(|d| xdims[d]).collect();
+                let want_elems: Vec<Shape> = itys
+                    .iter()
+                    .map(|&ty| Shape::Array { ty, dims: kept.clone() })
+                    .collect();
+                let matches = match &declared {
+                    Shape::Tuple(ts) => *ts == want_elems,
+                    Shape::Array { .. } => nin == 1 && declared == want_elems[0],
+                };
+                if !matches {
+                    self.ty_err(ci, si, "reduce result shape disagrees".into());
+                }
+                // region: nin acc scalars then nin elem scalars, root
+                // of nin scalars with the acc types
+                let params = self.param_shapes(*t);
+                if params.len() != nops {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("reduce region takes {} params, want {nops}", params.len()),
+                    );
+                } else {
+                    for (k, p) in params.iter().enumerate() {
+                        let want_ty = itys[k % nin];
+                        match p {
+                            Some(Shape::Array { ty, dims }) if dims.is_empty() && *ty == want_ty => {
+                            }
+                            Some(_) => self.ty_err(
+                                ci,
+                                si,
+                                format!("reduce region param {k} must be a {} scalar",
+                                    want_ty.name()),
+                            ),
+                            None => {}
+                        }
+                    }
+                }
+                let scalars: Vec<Shape> = itys
+                    .iter()
+                    .map(|&ty| Shape::Array { ty, dims: vec![] })
+                    .collect();
+                let root = self.root_shape(*t);
+                let root_ok = match &root {
+                    Shape::Tuple(ts) => *ts == scalars,
+                    Shape::Array { .. } => nin == 1 && root == scalars[0],
+                };
+                if !root_ok {
+                    self.ty_err(ci, si, "reduce region must return the accumulator scalars".into());
+                }
+            }
+            Op::Scatter { comp: t, .. } => {
+                if nops != 3 {
+                    return self.ty_err(ci, si, format!("scatter takes 3 operands, got {nops}"));
+                }
+                let (Some((oty, odims)), Some((ity, _)), Some((uty, _))) = (
+                    self.oarr(ci, si, 0),
+                    self.oarr(ci, si, 1),
+                    self.oarr(ci, si, 2),
+                ) else {
+                    return;
+                };
+                if !matches!(ity, ElemType::S32 | ElemType::U32) {
+                    self.ty_err(ci, si, "scatter indices must be integer".into());
+                }
+                if uty != oty {
+                    self.ty_err(ci, si, "scatter updates dtype != operand dtype".into());
+                }
+                if decl_arr != Some((oty, odims)) {
+                    self.ty_err(ci, si, "scatter result != operand shape".into());
+                }
+                let params = self.param_shapes(*t);
+                let scalar = Shape::Array { ty: oty, dims: vec![] };
+                if params.len() != 2
+                    || params.iter().flatten().any(|p| *p != scalar)
+                    || self.root_shape(*t) != scalar
+                {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("scatter region must be ({n}, {n}) -> {n}", n = oty.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Declared parameter shapes of computation `t` (None where the
+    /// parameter never appears).
+    fn param_shapes(&self, t: usize) -> Vec<Option<Shape>> {
+        let c = &self.plan.comps[t];
+        let mut out = vec![None; c.n_params];
+        for ins in &c.instrs {
+            if let Op::Parameter(i) = &ins.op {
+                if *i < c.n_params {
+                    out[*i] = Some(ins.shape.clone());
+                }
+            }
+        }
+        out
+    }
+
+    fn root_shape(&self, t: usize) -> Shape {
+        let c = &self.plan.comps[t];
+        c.instrs[c.root].shape.clone()
+    }
+
+    // ---------------------------------------------------- fusion check ---
+
+    /// Re-prove each `Fused` annotation from the instructions it
+    /// covers, with matchers authored independently of `fuse.rs`.
+    fn check_fusion(&mut self, ci: usize, si: usize) {
+        let comp = &self.plan.comps[ci];
+        let ins = &comp.instrs[si];
+        match (&comp.fused[si], &ins.op) {
+            (Fused::None, _) => {}
+            (Fused::Bin { op, acc_first }, Op::Reduce { comp: t, .. }) => {
+                if ins.operands.len() != 2 || !matches!(ins.shape, Shape::Array { .. }) {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        "fused reduce must be single-input with an array result".into(),
+                    );
+                } else if let Err(msg) = self.prove_bin_region(*t, *op, *acc_first) {
+                    self.diag(ci, si, DiagKind::Fusion, msg);
+                }
+            }
+            (Fused::Bin { op, acc_first }, Op::Scatter { comp: t, .. }) => {
+                if ins.operands.len() != 3 {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        "fused scatter must have 3 operands".into(),
+                    );
+                } else if let Err(msg) = self.prove_bin_region(*t, *op, *acc_first) {
+                    self.diag(ci, si, DiagKind::Fusion, msg);
+                }
+            }
+            (Fused::Counted(spec), Op::While { cond, body }) => {
+                match self.derive_counted(*cond, *body) {
+                    Ok(want) if want == **spec => {}
+                    Ok(want) => self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        format!("counted-loop spec disagrees with re-derivation ({want:?})"),
+                    ),
+                    Err(msg) => self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        format!("counted-loop preconditions do not hold: {msg}"),
+                    ),
+                }
+            }
+            (Fused::Threefry, Op::Call { comp: t }) => {
+                if let Err(msg) = self.prove_threefry(*t) {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        format!("threefry preconditions do not hold: {msg}"),
+                    );
+                }
+            }
+            (fused, _) => {
+                self.diag(
+                    ci,
+                    si,
+                    DiagKind::Fusion,
+                    format!("{fused:?} annotation on an incompatible op"),
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------ shard safety ---
+
+    /// Every step that can dispatch a kernel that shards under the
+    /// `threads` knob must name a kernel declared in the registry with
+    /// its determinism argument.
+    fn check_shard(&mut self, ci: usize, si: usize) {
+        let comp = &self.plan.comps[ci];
+        let ins = &comp.instrs[si];
+        if let Some(kernel) = sharding_kernel(ins, &comp.fused[si]) {
+            if !self.registry.iter().any(|e| e.name == kernel) {
+                self.diag(
+                    ci,
+                    si,
+                    DiagKind::ShardSafety,
+                    format!(
+                        "sharding kernel {kernel} is not declared in the shard-safety \
+                         registry (declare it with its determinism argument)"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Prove the region is exactly `{p0, p1, ROOT bin(p0, p1)}` with
+    /// the claimed op and operand order.
+    fn prove_bin_region(&self, t: usize, op: BinaryOp, acc_first: bool) -> Result<(), String> {
+        let c = &self.plan.comps[t];
+        if c.instrs.len() != 3 || c.n_params != 2 {
+            return Err("region is not a three-instruction two-parameter body".into());
+        }
+        let mut param_at = [None; 2];
+        for (i, ins) in c.instrs.iter().enumerate() {
+            if let Op::Parameter(k) = ins.op {
+                if k < 2 {
+                    param_at[k] = Some(i);
+                }
+            }
+        }
+        let (Some(p0), Some(p1)) = (param_at[0], param_at[1]) else {
+            return Err("region is missing a parameter".into());
+        };
+        let root = &c.instrs[c.root];
+        let Op::Binary(got) = root.op else {
+            return Err("region root is not a binary op".into());
+        };
+        if got != op {
+            return Err(format!("region computes {got:?}, annotation claims {op:?}"));
+        }
+        let want = if acc_first { [p0, p1] } else { [p1, p0] };
+        if root.operands != want {
+            return Err("region operand order disagrees with acc_first".into());
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------- counted-loop re-proof ---
+
+    /// Derive the counted-loop spec for (cond, body) from scratch.
+    /// Mirrors the *invariant* (not the code) of `fuse.rs`: condition
+    /// is `state[idx] < const` and the body re-binds `state[idx]` to
+    /// `state[idx] + 1`, touching the state parameter only through
+    /// `get-tuple-element`.
+    fn derive_counted(&self, cond: usize, body: usize) -> Result<CountedLoop, String> {
+        let cc = &self.plan.comps[cond];
+        let cp = only_param(cc).ok_or("condition must have exactly one parameter")?;
+        let croot = &cc.instrs[cc.root];
+        if !matches!(croot.op, Op::Compare { dir: CmpDir::Lt }) || croot.operands.len() != 2 {
+            return Err("condition root is not an LT compare".into());
+        }
+        let counter = croot.operands[0];
+        let idx = match &cc.instrs[counter].op {
+            Op::GetTupleElement(e) if cc.instrs[counter].operands == [cp] => *e,
+            _ => return Err("condition does not compare a state element".into()),
+        };
+        let bound = scalar_int_const(&cc.instrs[croot.operands[1]])
+            .ok_or("condition bound is not a scalar integer constant")?;
+
+        let bc = &self.plan.comps[body];
+        let bp = only_param(bc).ok_or("body must have exactly one parameter")?;
+        let broot = &bc.instrs[bc.root];
+        if !matches!(broot.op, Op::Tuple) {
+            return Err("body root is not a tuple".into());
+        }
+        let root_ops = broot.operands.clone();
+        let arity = root_ops.len();
+        if idx >= arity {
+            return Err("counter element index exceeds state arity".into());
+        }
+        let mut state_reads = Vec::new();
+        for (i, ins) in bc.instrs.iter().enumerate() {
+            if let Op::GetTupleElement(e) = &ins.op {
+                if ins.operands == [bp] {
+                    if *e >= arity {
+                        return Err("state read out of tuple range".into());
+                    }
+                    state_reads.push((i, *e));
+                    continue;
+                }
+            }
+            if ins.operands.contains(&bp) {
+                return Err("body touches the state parameter outside get-tuple-element".into());
+            }
+        }
+        let inc = &bc.instrs[root_ops[idx]];
+        if !matches!(inc.op, Op::Binary(BinaryOp::Add)) || inc.operands.len() != 2 {
+            return Err("counter is not re-bound by an add".into());
+        }
+        let reads_counter = |i: usize| state_reads.contains(&(i, idx));
+        let lit_one = |i: usize| scalar_int_const(&bc.instrs[i]) == Some(1);
+        let (a, b) = (inc.operands[0], inc.operands[1]);
+        if !((reads_counter(a) && lit_one(b)) || (reads_counter(b) && lit_one(a))) {
+            return Err("counter increment is not counter + 1".into());
+        }
+        let take_state = state_reads
+            .iter()
+            .map(|&(_, e)| state_reads.iter().filter(|&&(_, e2)| e2 == e).count() == 1)
+            .collect();
+        let steps = (0..bc.instrs.len())
+            .filter(|&i| {
+                i != bp && i != bc.root && !state_reads.iter().any(|&(gi, _)| gi == i)
+            })
+            .collect();
+        Ok(CountedLoop { idx, bound, body, arity, state_reads, take_state, steps, root_ops })
+    }
+
+    // ----------------------------------------------- threefry re-proof ---
+
+    /// Re-prove that computation `t` is exactly one jax threefry-2x32
+    /// round group, with an expression matcher authored independently
+    /// of `fuse.rs` (own tree type, own resolver, own canonical chain).
+    fn prove_threefry(&self, t: usize) -> Result<(), String> {
+        let c = &self.plan.comps[t];
+        if c.n_params != 8 {
+            return Err(format!("{} parameters, want 8", c.n_params));
+        }
+        let mut pshapes: [Option<(ElemType, Vec<usize>)>; 8] = Default::default();
+        for ins in &c.instrs {
+            if let Op::Parameter(k) = ins.op {
+                let Shape::Array { ty, dims } = &ins.shape else {
+                    return Err("tuple-shaped parameter".into());
+                };
+                if k >= 8 || pshapes[k].replace((*ty, dims.clone())).is_some() {
+                    return Err("duplicate or out-of-range parameter".into());
+                }
+            }
+        }
+        let shapes: Vec<(ElemType, Vec<usize>)> = pshapes
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .ok_or("a parameter never appears")?;
+        // canonical signature (i, x0, x1, k0, k1, k2, rot_a, rot_b)
+        for (k, want_ty) in
+            [(0, ElemType::S32), (3, ElemType::U32), (4, ElemType::U32), (5, ElemType::U32)]
+        {
+            if shapes[k] != (want_ty, vec![]) {
+                return Err(format!("parameter {k} is not a {} scalar", want_ty.name()));
+            }
+        }
+        if shapes[1].0 != ElemType::U32 || shapes[1] != shapes[2] {
+            return Err("lane parameters are not matching u32 arrays".into());
+        }
+        if shapes[6] != (ElemType::U32, vec![4]) || shapes[6] != shapes[7] {
+            return Err("rotation parameters are not u32[4]".into());
+        }
+        let root = &c.instrs[c.root];
+        if !matches!(root.op, Op::Tuple) || root.operands.len() != 8 {
+            return Err("root is not an eight-element tuple".into());
+        }
+        // output state permutation (i+1, x0', x1', k1, k2, k0, rot_b,
+        // rot_a) — output k must carry the canonical input shape
+        let perm = [0usize, 1, 2, 4, 5, 3, 7, 6];
+        for (k, &o) in root.operands.iter().enumerate() {
+            let Shape::Array { ty, dims } = &c.instrs[o].shape else {
+                return Err("tuple-shaped root operand".into());
+            };
+            if (*ty, dims.clone()) != shapes[perm[k]] {
+                return Err(format!("output {k} shape is not the rotated state shape"));
+            }
+        }
+        let mut memo: Vec<Option<Option<TExpr>>> = vec![None; c.instrs.len()];
+        let want = round_chain();
+        for (k, &o) in root.operands.iter().enumerate() {
+            match texpr(&c.instrs, o, &mut memo) {
+                Some(e) if e == want[k] => {}
+                _ => return Err(format!("output {k} does not match the canonical round chain")),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The single `Parameter` instruction index of a one-parameter
+/// computation plan.
+fn only_param(c: &CompPlan) -> Option<usize> {
+    if c.n_params != 1 {
+        return None;
+    }
+    let mut found = None;
+    for (i, ins) in c.instrs.iter().enumerate() {
+        if matches!(ins.op, Op::Parameter(_)) {
+            if found.replace(i).is_some() {
+                return None;
+            }
+        }
+    }
+    found
+}
+
+/// Scalar s32/u32 constant value of an instruction, if it is one.
+fn scalar_int_const(ins: &Instr) -> Option<i64> {
+    match &ins.op {
+        Op::Constant(c) if c.numel() == 1 => match &*c.buf {
+            Buf::S32(v) => Some(i64::from(v[0])),
+            Buf::U32(v) => Some(i64::from(v[0])),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Symbolic u32 expression for the threefry re-proof. `reshape` and
+/// scalar `broadcast` are transparent, a unit slice of a parameter is
+/// a lane pick — parallel in *meaning* to `fuse::Ex` (both encode the
+/// same canonical chain) but independently authored and resolved.
+#[derive(Debug, Clone, PartialEq)]
+enum TExpr {
+    Param(usize),
+    ConstU(u32),
+    ConstS(i32),
+    /// `parameter(k)[j:j+1]`.
+    Lane(usize, usize),
+    /// s32 → u32 convert.
+    ToU32(Box<TExpr>),
+    Bin(BinaryOp, Box<TExpr>, Box<TExpr>),
+}
+
+fn texpr(instrs: &[Instr], i: usize, memo: &mut Vec<Option<Option<TExpr>>>) -> Option<TExpr> {
+    if let Some(r) = &memo[i] {
+        return r.clone();
+    }
+    let ins = &instrs[i];
+    let r: Option<TExpr> = match &ins.op {
+        Op::Parameter(k) => Some(TExpr::Param(*k)),
+        Op::Constant(c) if c.numel() == 1 => match &*c.buf {
+            Buf::U32(v) => Some(TExpr::ConstU(v[0])),
+            Buf::S32(v) => Some(TExpr::ConstS(v[0])),
+            _ => None,
+        },
+        Op::Reshape if ins.operands.len() == 1 => texpr(instrs, ins.operands[0], memo),
+        Op::Broadcast { .. } if ins.operands.len() == 1 => {
+            let o = ins.operands[0];
+            if instrs[o].shape.numel() == 1 {
+                texpr(instrs, o, memo)
+            } else {
+                None
+            }
+        }
+        Op::Convert if ins.operands.len() == 1 => {
+            let o = ins.operands[0];
+            let from = instrs[o].shape.array().map(|(t, _)| t);
+            let to = ins.shape.array().map(|(t, _)| t);
+            match (from, to) {
+                (Ok(ElemType::S32), Ok(ElemType::U32)) => {
+                    texpr(instrs, o, memo).map(|e| TExpr::ToU32(Box::new(e)))
+                }
+                _ => None,
+            }
+        }
+        Op::Slice { spec } if ins.operands.len() == 1 => {
+            match (&instrs[ins.operands[0]].op, &spec[..]) {
+                (Op::Parameter(k), &[(s, l, 1)]) if l == s + 1 => Some(TExpr::Lane(*k, s)),
+                _ => None,
+            }
+        }
+        Op::Binary(
+            b @ (BinaryOp::Add
+            | BinaryOp::Xor
+            | BinaryOp::Or
+            | BinaryOp::Sub
+            | BinaryOp::Shl
+            | BinaryOp::ShrLogical),
+        ) if ins.operands.len() == 2 => {
+            let x = texpr(instrs, ins.operands[0], memo)?;
+            let y = texpr(instrs, ins.operands[1], memo)?;
+            Some(TExpr::Bin(*b, Box::new(x), Box::new(y)))
+        }
+        _ => None,
+    };
+    memo[i] = Some(r.clone());
+    r
+}
+
+/// The canonical four-round threefry-2x32 chain: the eight root tuple
+/// operands `(i+1, x0', x1', k1, k2, k0, rot_b, rot_a)` in terms of
+/// the eight parameters `(i, x0, x1, k0, k1, k2, rot_a, rot_b)`. Must
+/// stay in lockstep with `ops::threefry2x32` (the kernel) and
+/// `fuse::expected_round` (the planner's matcher) — all three encode
+/// the same jax lowering.
+fn round_chain() -> [TExpr; 8] {
+    use BinaryOp::{Add, Or, Shl, ShrLogical, Sub, Xor};
+    fn bin(b: BinaryOp, x: TExpr, y: TExpr) -> TExpr {
+        TExpr::Bin(b, Box::new(x), Box::new(y))
+    }
+    fn rot(x: TExpr, j: usize) -> TExpr {
+        bin(
+            Or,
+            bin(Shl, x.clone(), TExpr::Lane(6, j)),
+            bin(ShrLogical, x, bin(Sub, TExpr::ConstU(32), TExpr::Lane(6, j))),
+        )
+    }
+    let mut x0 = bin(Add, TExpr::Param(1), TExpr::Param(2));
+    let mut x1 = bin(Xor, x0.clone(), rot(TExpr::Param(2), 0));
+    for j in 1..4 {
+        let nx0 = bin(Add, x0.clone(), x1.clone());
+        x1 = bin(Xor, nx0.clone(), rot(x1, j));
+        x0 = nx0;
+    }
+    let out_i = bin(Add, TExpr::Param(0), TExpr::ConstS(1));
+    let out_x0 = bin(Add, x0, TExpr::Param(3));
+    let out_x1 = bin(
+        Add,
+        bin(Add, x1, TExpr::Param(4)),
+        TExpr::ToU32(Box::new(out_i.clone())),
+    );
+    [
+        out_i,
+        out_x0,
+        out_x1,
+        TExpr::Param(4),
+        TExpr::Param(5),
+        TExpr::Param(3),
+        TExpr::Param(7),
+        TExpr::Param(6),
+    ]
+}
+
+// -------------------------------------------------------------- census ---
+
+/// Plan-wide statistics printed by `qn lint-plan`: instruction counts
+/// per op label, the fusion census, in-place (move) flags and the
+/// sharding-kernel population.
+#[derive(Debug, Clone, Default)]
+pub struct PlanCensus {
+    pub comps: usize,
+    pub instrs: usize,
+    /// Instruction count per executor label (`op_label`).
+    pub op_counts: BTreeMap<&'static str, usize>,
+    pub fusion: crate::runtime::interp::plan::FusionStats,
+    /// Total operand slots across all steps.
+    pub operand_slots: usize,
+    /// Operand slots flagged as moves (in-place candidates).
+    pub move_slots: usize,
+    /// Steps per sharding-kernel key ([`sharding_kernel`]).
+    pub shard_kernels: BTreeMap<&'static str, usize>,
+}
+
+/// Collect the census of a compiled plan.
+pub fn census(plan: &Plan) -> PlanCensus {
+    let mut c = PlanCensus { comps: plan.comps.len(), fusion: plan.fusion_stats(), ..Default::default() };
+    for comp in &plan.comps {
+        c.instrs += comp.instrs.len();
+        for (si, ins) in comp.instrs.iter().enumerate() {
+            let (label, _) = op_label(ins, &comp.fused[si]);
+            *c.op_counts.entry(label).or_default() += 1;
+            c.operand_slots += ins.operands.len();
+            c.move_slots += comp.take[si].iter().filter(|&&t| t).count();
+            if let Some(kernel) = sharding_kernel(ins, &comp.fused[si]) {
+                *c.shard_kernels.entry(kernel).or_default() += 1;
+            }
+        }
+    }
+    c
+}
+
+impl fmt::Display for PlanCensus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{} computations, {} instructions", self.comps, self.instrs)?;
+        writeln!(
+            f,
+            "in-place: {} of {} operand slots are moves",
+            self.move_slots, self.operand_slots
+        )?;
+        writeln!(
+            f,
+            "fusion: {} counted loops, {} generic whiles, {} threefry calls, \
+             {} fused reduces, {} fused scatters",
+            self.fusion.counted_loops,
+            self.fusion.generic_whiles,
+            self.fusion.threefry_calls,
+            self.fusion.fused_reduces,
+            self.fusion.fused_scatters
+        )?;
+        writeln!(f, "sharding kernels:")?;
+        for (name, count) in &self.shard_kernels {
+            writeln!(f, "  {name:<24} {count:>6}")?;
+        }
+        writeln!(f, "instructions by op:")?;
+        let mut rows: Vec<(&str, usize)> =
+            self.op_counts.iter().map(|(k, v)| (*k, *v)).collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        for (label, count) in rows {
+            writeln!(f, "  {label:<24} {count:>6}")?;
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- tests ---
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::parser::parse_module;
+    use crate::runtime::interp::plan::PlanOptions;
+
+    /// The counted-loop fixture from `fuse.rs`'s tests: state (i, acc),
+    /// i < 4, i += 1 — fuses under default options.
+    const COUNTED: &str = "HloModule t\n\ncond.1 {\n  s.1 = (s32[], f32[2]) parameter(0)\n  \
+        i.2 = s32[] get-tuple-element(s.1), index=0\n  n.3 = s32[] constant(4)\n  \
+        ROOT lt.4 = pred[] compare(i.2, n.3), direction=LT\n}\n\nbody.1 {\n  \
+        s.1 = (s32[], f32[2]) parameter(0)\n  i.2 = s32[] get-tuple-element(s.1), index=0\n  \
+        v.3 = f32[2]{0} get-tuple-element(s.1), index=1\n  one.4 = s32[] constant(1)\n  \
+        c.5 = f32[2]{0} constant({0.5, 0.25})\n  i2.6 = s32[] add(i.2, one.4)\n  \
+        v2.7 = f32[2]{0} add(v.3, c.5)\n  \
+        ROOT t.8 = (s32[], f32[2]) tuple(i2.6, v2.7)\n}\n\nENTRY main.1 {\n  \
+        z.1 = s32[] constant(0)\n  v0.2 = f32[2]{0} parameter(0)\n  \
+        st.3 = (s32[], f32[2]) tuple(z.1, v0.2)\n  \
+        ROOT w.4 = (s32[], f32[2]) while(st.3), condition=cond.1, body=body.1\n}\n";
+
+    /// A small straight-line chain with a dot, reduce and unary —
+    /// exercises liveness, types and the shard registry together.
+    const CHAIN: &str = "HloModule t\n\nsum.1 {\n  a.1 = f32[] parameter(0)\n  \
+        b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+        ENTRY main.1 {\n  x.1 = f32[3,4]{1,0} parameter(0)\n  \
+        w.2 = f32[4,2]{1,0} parameter(1)\n  \
+        d.3 = f32[3,2]{1,0} dot(x.1, w.2), lhs_contracting_dims={1}, \
+        rhs_contracting_dims={0}\n  n.4 = f32[3,2]{1,0} negate(d.3)\n  \
+        z.5 = f32[] constant(0)\n  \
+        ROOT r.6 = f32[2]{0} reduce(n.4, z.5), dimensions={0}, to_apply=sum.1\n}\n";
+
+    fn compile(text: &str) -> Plan {
+        Plan::compile_unverified(&parse_module(text).unwrap(), PlanOptions::default())
+    }
+
+    fn kinds(diags: &[Diagnostic]) -> Vec<DiagKind> {
+        diags.iter().map(|d| d.kind).collect()
+    }
+
+    #[test]
+    fn verification_is_on_in_tests() {
+        // cargo test builds with debug assertions: every compiled plan
+        // in the suite runs through the verifier
+        assert!(should_verify());
+    }
+
+    #[test]
+    fn clean_plans_verify_clean_at_every_option() {
+        for text in [COUNTED, CHAIN] {
+            let m = parse_module(text).unwrap();
+            for (cl, tf) in [(false, false), (false, true), (true, false), (true, true)] {
+                let opts = PlanOptions { counted_loops: cl, threefry: tf };
+                let plan = Plan::compile_unverified(&m, opts);
+                let diags = verify(&plan);
+                assert!(diags.is_empty(), "cl={cl} tf={tf}:\n{}", render(&diags));
+            }
+        }
+    }
+
+    #[test]
+    fn early_free_is_a_stale_read() {
+        let mut plan = compile(CHAIN);
+        let e = plan.entry;
+        // free the dot result right after it is computed; negate (#3)
+        // still reads it
+        plan.comps[e].free_after[2].push(2);
+        let diags = verify(&plan);
+        assert!(kinds(&diags).contains(&DiagKind::StaleRead), "{}", render(&diags));
+        let d = diags.iter().find(|d| d.kind == DiagKind::StaleRead).unwrap();
+        assert_eq!((d.comp.as_str(), d.index), ("main.1", 2), "{d}");
+    }
+
+    #[test]
+    fn move_of_duplicated_operand_is_an_inplace_error() {
+        let mut plan = compile(CHAIN);
+        let e = plan.entry;
+        // make the negate read d.3 twice with a move flag on the first
+        // read: stealing a register the same step reads again would
+        // hand the second read a hole
+        plan.comps[e].instrs[3].operands = vec![2, 2];
+        plan.comps[e].take[3] = vec![true, false];
+        let diags = verify(&plan);
+        assert!(kinds(&diags).contains(&DiagKind::InPlace), "{}", render(&diags));
+    }
+
+    #[test]
+    fn move_with_later_reader_is_an_inplace_error() {
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[3]{0} parameter(0)\n  \
+            a.2 = f32[3]{0} negate(x.1)\n  \
+            ROOT b.3 = f32[3]{0} add(a.2, x.1)\n}\n";
+        let mut plan = compile(text);
+        let e = plan.entry;
+        // x.1's last use is step 2; claiming the negate (step 1) may
+        // steal it would let an in-place kernel clobber a live buffer
+        plan.comps[e].take[1] = vec![true];
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::InPlace).expect("must reject");
+        assert_eq!((d.comp.as_str(), d.instr.as_str(), d.index), ("main.1", "a.2", 1), "{d}");
+    }
+
+    #[test]
+    fn dtype_mismatch_is_a_type_error() {
+        let mut plan = compile(CHAIN);
+        let e = plan.entry;
+        // declare the negate result as s32: disagrees with its operand
+        plan.comps[e].instrs[3].shape =
+            Shape::Array { ty: ElemType::S32, dims: vec![3, 2] };
+        let diags = verify(&plan);
+        let type_diags: Vec<_> =
+            diags.iter().filter(|d| d.kind == DiagKind::Type).collect();
+        assert!(!type_diags.is_empty(), "{}", render(&diags));
+        // at least one addresses the corrupted instruction
+        assert!(type_diags.iter().any(|d| d.index == 3 && d.instr == "n.4"));
+    }
+
+    #[test]
+    fn wrong_result_dims_are_a_type_error() {
+        let mut plan = compile(CHAIN);
+        let e = plan.entry;
+        // dot output dims must be [3, 2]
+        plan.comps[e].instrs[2].shape =
+            Shape::Array { ty: ElemType::F32, dims: vec![2, 3] };
+        let diags = verify(&plan);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::Type && d.index == 2),
+            "{}",
+            render(&diags)
+        );
+    }
+
+    #[test]
+    fn corrupted_counted_spec_is_a_fusion_error() {
+        let mut plan = compile(COUNTED);
+        let e = plan.entry;
+        let wi = plan.comps[e]
+            .instrs
+            .iter()
+            .position(|i| matches!(i.op, Op::While { .. }))
+            .unwrap();
+        match &mut plan.comps[e].fused[wi] {
+            Fused::Counted(spec) => spec.bound += 1,
+            other => panic!("while did not fuse: {other:?}"),
+        }
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert_eq!(d.index, wi, "{d}");
+    }
+
+    #[test]
+    fn near_miss_loop_forced_through_fusion_is_rejected() {
+        // take the spec from the matching loop...
+        let good = compile(COUNTED);
+        let e = good.entry;
+        let wi = good.comps[e]
+            .instrs
+            .iter()
+            .position(|i| matches!(i.op, Op::While { .. }))
+            .unwrap();
+        let spec = match &good.comps[e].fused[wi] {
+            Fused::Counted(spec) => spec.clone(),
+            other => panic!("while did not fuse: {other:?}"),
+        };
+        // ...and force it onto the non-unit-step near miss, which the
+        // planner correctly left generic
+        let step2 = COUNTED.replace("one.4 = s32[] constant(1)", "one.4 = s32[] constant(2)");
+        let mut bad = compile(&step2);
+        assert!(matches!(bad.comps[bad.entry].fused[wi], Fused::None));
+        let be = bad.entry;
+        bad.comps[be].fused[wi] = Fused::Counted(spec);
+        let diags = verify(&bad);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert!(d.message.contains("counter increment"), "{d}");
+    }
+
+    #[test]
+    fn forged_threefry_annotation_is_rejected() {
+        let text = "HloModule t\n\nnotfry.1 {\n  a.1 = f32[] parameter(0)\n  \
+            b.2 = f32[] parameter(1)\n  ROOT add.3 = f32[] add(a.1, b.2)\n}\n\n\
+            ENTRY main.1 {\n  x.1 = f32[] parameter(0)\n  y.2 = f32[] parameter(1)\n  \
+            ROOT c.3 = f32[] call(x.1, y.2), to_apply=notfry.1\n}\n";
+        let mut plan = compile(text);
+        let e = plan.entry;
+        plan.comps[e].fused[2] = Fused::Threefry;
+        let diags = verify(&plan);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::Fusion && d.index == 2),
+            "{}",
+            render(&diags)
+        );
+    }
+
+    #[test]
+    fn unregistered_shard_kernel_is_rejected() {
+        let plan = compile(CHAIN);
+        // the full registry accepts the plan...
+        assert!(verify(&plan).is_empty());
+        // ...an empty registry must reject its dot/unary/fused-reduce
+        let diags = verify_with_registry(&plan, &[]);
+        let shard: Vec<_> =
+            diags.iter().filter(|d| d.kind == DiagKind::ShardSafety).collect();
+        assert!(shard.len() >= 3, "{}", render(&diags));
+        assert!(shard.iter().any(|d| d.message.contains("dot[packed]")));
+    }
+
+    #[test]
+    fn registry_covers_every_dispatch_site() {
+        // every key sharding_kernel can produce must be declared
+        let m = parse_module(CHAIN).unwrap();
+        let plan = Plan::compile_unverified(&m, PlanOptions::default());
+        for comp in &plan.comps {
+            for (si, ins) in comp.instrs.iter().enumerate() {
+                if let Some(k) = sharding_kernel(ins, &comp.fused[si]) {
+                    assert!(
+                        SHARD_REGISTRY.iter().any(|e| e.name == k),
+                        "kernel {k} missing from SHARD_REGISTRY"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn census_counts_the_chain() {
+        let c = census(&compile(CHAIN));
+        assert_eq!(c.comps, 2);
+        assert_eq!(c.op_counts.get("dot[packed]"), Some(&1));
+        assert_eq!(c.op_counts.get("reduce[fused]"), Some(&1));
+        assert_eq!(c.fusion.fused_reduces, 1);
+        assert!(c.move_slots > 0 && c.move_slots <= c.operand_slots);
+        assert_eq!(c.shard_kernels.get("dot[packed]"), Some(&1));
+        // census renders without panicking and mentions the kernels
+        let s = c.to_string();
+        assert!(s.contains("dot[packed]") && s.contains("fused reduces"), "{s}");
+    }
+}

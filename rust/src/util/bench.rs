@@ -78,6 +78,8 @@ impl Bencher {
 
     /// Run `f` repeatedly, print and record stats. The closure should
     /// return something to keep the optimizer honest (it is black-boxed).
+    // timing IS this function's output; it never feeds model results
+    #[allow(clippy::disallowed_methods)]
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
         // warmup & calibration
         let wstart = Instant::now();

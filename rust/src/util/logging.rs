@@ -1,6 +1,10 @@
 //! Minimal leveled logger (env_logger is not in the offline registry).
 //! Level from `QN_LOG` (error|warn|info|debug|trace), default info.
 
+// timestamps decorate log lines only, never results (clippy.toml bans
+// Instant::now in result-feeding code)
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 

@@ -18,7 +18,7 @@ fn artifacts_present() -> bool {
 fn help_lists_subcommands() {
     let out = qn().output().unwrap();
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["info", "train", "quantize", "eval", "e2e", "bench"] {
+    for sub in ["info", "train", "quantize", "eval", "e2e", "bench", "lint-plan"] {
         assert!(text.contains(sub), "missing {sub} in help: {text}");
     }
     assert!(out.status.success());
@@ -60,6 +60,29 @@ fn info_prints_models_and_entries() {
     assert!(text.contains("lm_tiny"));
     assert!(text.contains("grad_mix"));
     assert!(text.contains("eval"));
+}
+
+#[test]
+fn lint_plan_passes_checked_in_fixture() {
+    // the fixture entries must verify clean at every fusion setting;
+    // the census (default run) must render without panicking
+    let out = qn()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["lint-plan", "tests/fixtures/interp/threefry_pin.hlo.txt"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("verified clean"), "{text}");
+    assert!(text.contains("instructions by op"), "{text}");
+}
+
+#[test]
+fn lint_plan_without_files_fails_with_usage() {
+    let out = qn().args(["lint-plan"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("usage"), "{err}");
 }
 
 #[test]

@@ -4,6 +4,7 @@
 #   make artifacts     export all model artifacts (needs python + jax)
 #   make fixture       regenerate the checked-in interpreter test fixture
 #   make bench-interp  interpreter step latency -> BENCH_interp.json
+#   make bench-serve   qn serve HTTP/batching latency -> BENCH_serve.json
 #   make lint          rustfmt + clippy (what CI enforces)
 #   make lint-plan     static plan verifier over the checked-in fixtures
 #   make doc           rustdoc with warnings denied (what CI enforces)
@@ -18,7 +19,7 @@ CONFIGS := python/configs/lm_tiny.json \
            python/configs/cls_tiny.json \
            python/configs/img_tiny.json
 
-.PHONY: verify artifacts fixture bench-interp lint lint-plan doc
+.PHONY: verify artifacts fixture bench-interp bench-serve lint lint-plan doc
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -39,6 +40,15 @@ lint-plan:
 bench-interp:
 	cd rust && QN_BENCH_JSON=$(abspath BENCH_interp.json) \
 		QN_BENCH_QUICK=$(QUICK) cargo bench --bench interp_step
+
+# End-to-end `qn serve` numbers on the same fixture: solo HTTP eval
+# latency, a concurrent-client burst through the coalescing batcher
+# (asserts macro-batches > 1 actually formed), online int8 re-encode
+# cost, and the lazy JSON path-extraction micro-bench. QUICK=1 is the
+# CI smoke run.
+bench-serve:
+	cd rust && QN_BENCH_JSON=$(abspath BENCH_serve.json) \
+		QN_BENCH_QUICK=$(QUICK) cargo bench --bench serve
 
 artifacts:
 	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \

@@ -1,0 +1,204 @@
+//! `qn serve` end-to-end latency/throughput on the checked-in
+//! `lm_tiny` fixture: solo HTTP eval round trips, a concurrent-client
+//! burst through the coalescing batcher (assert batching actually
+//! engages), online re-encode cost, and the lazy JSON path-extraction
+//! micro-bench behind the handlers. Runs with no artifacts and no
+//! Python; emits `BENCH_serve.json` (path override: `QN_BENCH_JSON`).
+//! `QN_BENCH_QUICK=1` (or `make bench-serve QUICK=1`) shrinks the
+//! client counts and budgets to a CI smoke run.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use quant_noise::runtime::client::Backend;
+use quant_noise::runtime::manifest::Manifest;
+use quant_noise::serve::{ServeConfig, Server};
+use quant_noise::util::bench::Bencher;
+use quant_noise::util::json::{self, Json};
+
+/// One-shot HTTP exchange: returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(150))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: b\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("recv");
+    let status: u16 = raw.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn burst(addr: SocketAddr, body: &str, clients: usize, per_client: usize) {
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| {
+                for _ in 0..per_client {
+                    let (status, resp) = http(addr, "POST", "/v1/eval", body);
+                    assert_eq!(status, 200, "burst eval failed: {resp}");
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp");
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let meta = man.model("lm_tiny").unwrap();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<String> = (0..n).map(|i| (i % meta.vocab).to_string()).collect();
+    let targets: Vec<String> = (0..n).map(|i| ((i + 1) % meta.vocab).to_string()).collect();
+    let body = format!(
+        r#"{{"model": "lm_tiny", "tokens": [{}], "targets": [{}]}}"#,
+        tokens.join(","),
+        targets.join(",")
+    );
+
+    let quick = std::env::var("QN_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let (clients, per_client) = if quick { (4, 8) } else { (8, 50) };
+    let mut b = Bencher::quick();
+    if quick {
+        b.warmup = Duration::from_millis(20);
+        b.budget = Duration::from_millis(150);
+        b.min_iters = 1;
+    } else {
+        b.warmup = Duration::from_millis(200);
+        b.budget = Duration::from_secs(2);
+        b.min_iters = 3;
+    }
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
+    // --- latency server: zero linger, so solo round trips pay no
+    // coalescing wait and the row measures HTTP + batcher + eval only
+    let lat_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        linger: Duration::ZERO,
+        backend: Some(Backend::Interp),
+        ..ServeConfig::default()
+    };
+    let lat_srv = Server::start(&dir, lat_cfg).unwrap();
+    let lat = lat_srv.addr();
+    println!("--- qn serve (lm_tiny fixture, {cores} cores) ---");
+
+    let solo = b
+        .bench("eval: solo HTTP round trip", || {
+            let (status, resp) = http(lat, "POST", "/v1/eval", &body);
+            assert_eq!(status, 200, "{resp}");
+            resp
+        })
+        .median_ns;
+    rec.push(("eval_solo_ns".into(), solo));
+
+    let stats_ns = b
+        .bench("stats: GET /v1/stats", || {
+            let (status, resp) = http(lat, "GET", "/v1/stats", "");
+            assert_eq!(status, 200);
+            resp
+        })
+        .median_ns;
+    rec.push(("stats_ns".into(), stats_ns));
+
+    let reenc = b
+        .bench("reencode: int8 refit + atomic swap", || {
+            let (status, resp) =
+                http(lat, "POST", "/v1/models/lm_tiny/reencode", r#"{"scheme": "int8"}"#);
+            assert_eq!(status, 200, "{resp}");
+            resp
+        })
+        .median_ns;
+    rec.push(("reencode_int8_ns".into(), reenc));
+
+    // exercise PTQ-on-upload once (unique id; timing is the reencode row)
+    let (status, resp) =
+        http(lat, "POST", "/v1/quantize", r#"{"model": "lm_tiny", "scheme": "int4", "id": "b4"}"#);
+    assert_eq!(status, 200, "quantize failed: {resp}");
+    let (status, resp) = http(lat, "POST", "/v1/eval", &body.replace("\"lm_tiny\"", "\"b4\""));
+    assert_eq!(status, 200, "derived-model eval failed: {resp}");
+    lat_srv.shutdown();
+
+    // --- throughput server: linger long enough for concurrent clients
+    // to coalesce into macro-batches
+    let thru_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        http_threads: clients * 2,
+        max_batch: 8,
+        linger: Duration::from_millis(10),
+        backend: Some(Backend::Interp),
+        ..ServeConfig::default()
+    };
+    let thru_srv = Server::start(&dir, thru_cfg).unwrap();
+    let thru = thru_srv.addr();
+    let total = (clients * per_client) as f64;
+    let burst_ns = b
+        .bench(&format!("eval: {clients} clients x {per_client} reqs"), || {
+            burst(thru, &body, clients, per_client)
+        })
+        .median_ns;
+    rec.push(("eval_burst_per_req_ns".into(), burst_ns / total));
+
+    let (status, stats) = http(thru, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&stats).unwrap();
+    let max_batch = j.get_path("batching.max_batch").as_f64().unwrap();
+    let batches = j.get_path("batching.batches").as_f64().unwrap();
+    let coalesced = j.get_path("batching.coalesced_requests").as_f64().unwrap();
+    assert!(
+        max_batch > 1.0,
+        "coalescing never engaged under {clients} concurrent clients: {stats}"
+    );
+    thru_srv.shutdown();
+
+    // --- lazy JSON path extraction vs a full parse (what /v1/eval's
+    // handler does to read "model" before touching the token arrays)
+    let big_toks: Vec<String> = (0..4096).map(|i| (i % 97).to_string()).collect();
+    let big = format!(
+        r#"{{"model": "lm_tiny", "tokens": [{}], "targets": [{}]}}"#,
+        big_toks.join(","),
+        big_toks.join(",")
+    );
+    let full = b
+        .bench(&format!("json: full parse ({}KB eval body)", big.len() / 1024), || {
+            Json::parse(&big).unwrap()
+        })
+        .median_ns;
+    let lazy = b
+        .bench("json: lazy path_str(\"model\")", || json::path_str(&big, "model").unwrap())
+        .median_ns;
+    let json_speedup = full / lazy;
+    rec.push(("json_full_parse_ns".into(), full));
+    rec.push(("json_path_model_ns".into(), lazy));
+
+    println!(
+        "\nsolo eval round trip {}, burst per-request {} ({clients} clients, \
+         max_batch {max_batch:.0}, {batches:.0} macro-batches)",
+        quant_noise::util::bench::fmt_ns(solo),
+        quant_noise::util::bench::fmt_ns(burst_ns / total)
+    );
+    println!("lazy \"model\" extraction: {json_speedup:.1}x vs a full parse of the same body");
+
+    let mut out = String::from("{\n  \"fixture\": \"lm_tiny\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n  \"cores\": {cores},\n"));
+    out.push_str(&format!("  \"clients\": {clients},\n  \"per_client\": {per_client},\n"));
+    for (k, v) in &rec {
+        out.push_str(&format!("  \"{k}\": {v:.1},\n"));
+    }
+    out.push_str(&format!(
+        "  \"max_batch\": {max_batch:.0},\n  \"batches\": {batches:.0},\n  \
+         \"coalesced_requests\": {coalesced:.0},\n"
+    ));
+    out.push_str(&format!("  \"json_path_speedup\": {json_speedup:.1}\n}}\n"));
+    let path = std::env::var("QN_BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&path, out).unwrap();
+    println!("wrote {path}");
+}

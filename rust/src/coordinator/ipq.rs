@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::coordinator::optim::{clip_grad_norm, Optimizer};
-use crate::coordinator::quantize::{quantize_params, QuantizedModel};
+use crate::coordinator::quantize::QuantizedModel;
 use crate::coordinator::trainer::BatchSource;
 use crate::log_info;
 use crate::model::params::ParamStore;
@@ -263,13 +263,20 @@ pub fn run_ipq(
     ))
 }
 
-/// One-shot PQ without finetuning — the "iPQ (post)" baseline rows.
+/// One-shot PQ without finetuning — the "iPQ (post)" baseline rows,
+/// and the codebook-refresh primitive behind the serving layer's
+/// online `/reencode` (same fit, same determinism contract).
 pub fn post_pq(
     params: &ParamStore,
     meta: &crate::model::config::ModelMeta,
     cfg: &IpqConfig,
 ) -> Result<QuantizedModel> {
-    quantize_params(params, meta, &cfg.spec(), &mut Pcg::new(cfg.seed))
+    crate::coordinator::quantize::reencode_params(
+        params,
+        meta,
+        &cfg.spec(),
+        &mut Pcg::new(cfg.seed),
+    )
 }
 
 #[cfg(test)]

@@ -86,6 +86,27 @@ pub fn quantize_params_with(
     Ok(QuantizedModel { store, bytes, pq: pq_map, sq_error })
 }
 
+/// Online re-encode entry point (DESIGN.md §9): fit fresh codebooks /
+/// scales for `spec` on a pristine fp32 parameter set and return the
+/// decoded weights plus storage accounting. This is what
+/// `POST /v1/models/{id}/reencode` and `POST /v1/quantize` call before
+/// atomically swapping the result into the serving registry.
+///
+/// Deterministic in `(params, meta, spec, seed)` — k-means inits and
+/// any stochastic tie-breaks come only from the caller's `rng` — so a
+/// re-encode can be reproduced offline bit-for-bit to audit what a
+/// server is currently serving. Always fit on the *pristine* fp32
+/// weights, never on previously decoded ones: re-encoding a decode is
+/// generation loss.
+pub fn reencode_params(
+    params: &ParamStore,
+    meta: &ModelMeta,
+    spec: &QuantSpec,
+    rng: &mut Pcg,
+) -> Result<QuantizedModel> {
+    quantize_params_with(params, meta, spec, rng)
+}
+
 /// Storage accounting for a spec over this model's inventory.
 pub fn scheme_bytes(meta: &ModelMeta, spec: &QuantSpec) -> u64 {
     inventory_bytes(meta, spec)
@@ -237,6 +258,20 @@ mod tests {
         let small = quantize_params(&params, &meta, &QuantSpec::pq(4), &mut Pcg::new(3)).unwrap();
         assert!(big_blocks.bytes < small.bytes, "{} vs {}", big_blocks.bytes, small.bytes);
         assert!(big_blocks.sq_error > small.sq_error);
+    }
+
+    #[test]
+    fn reencode_is_deterministic_and_matches_quantize() {
+        // the serving swap protocol depends on this: a re-encode with
+        // the same (params, spec, seed) must reproduce served bits
+        let meta = tiny_meta();
+        let params = tiny_params();
+        let a = reencode_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(7)).unwrap();
+        let b = reencode_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(7)).unwrap();
+        assert_eq!(a.store.get("w").unwrap().data, b.store.get("w").unwrap().data);
+        assert_eq!((a.bytes, a.sq_error.to_bits()), (b.bytes, b.sq_error.to_bits()));
+        let q = quantize_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(7)).unwrap();
+        assert_eq!(a.store.get("w").unwrap().data, q.store.get("w").unwrap().data);
     }
 
     #[test]

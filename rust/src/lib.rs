@@ -11,6 +11,7 @@
 //!   selectable backend: the pure-Rust interpreter
 //!   ([`runtime::interp`], the default) or PJRT.
 //! - [`coordinator`] — training/quantization pipelines (the paper).
+//! - [`serve`] — batching inference + online-quantization HTTP service.
 //! - [`bench_harness`] — regenerates every paper table and figure.
 
 // The whole crate is safe Rust (determinism relies on it: no aliasing
@@ -23,4 +24,5 @@ pub mod model;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench_harness;

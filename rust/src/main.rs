@@ -6,6 +6,7 @@
 //!   quantize                   post-training quantization of saved params
 //!   eval                       evaluate saved params (fp32 or quantized)
 //!   e2e                        end-to-end driver (train → iPQ → report)
+//!   serve                      batching inference + online-quantization HTTP service
 //!   bench --exp `<id>`         regenerate a paper table/figure
 //!   lint-plan `<hlo.txt>`...   statically verify compiled plans + census
 //!
@@ -60,12 +61,13 @@ fn run(sub: &str, rest: &[String]) -> Result<()> {
         "quantize" => quantize(rest),
         "eval" => eval(rest),
         "e2e" => e2e(rest),
+        "serve" => serve(rest),
         "bench" => bench(rest),
         "lint-plan" => lint_plan(rest),
         _ => {
             println!(
                 "qn — Quant-Noise (ICLR 2021) coordinator\n\n\
-                 subcommands: info, train, quantize, eval, e2e, bench, lint-plan\n\
+                 subcommands: info, train, quantize, eval, e2e, serve, bench, lint-plan\n\
                  run `qn <sub> --help` for options"
             );
             Ok(())
@@ -343,6 +345,35 @@ fn e2e(rest: &[String]) -> Result<()> {
     wb.step_scale = args.num_or("scale", 1.0);
     let model = args.get_or("model", "lm_tiny").to_string();
     quant_noise::bench_harness::e2e::run(&wb, &model, args.parse_num("steps"))
+}
+
+// ------------------------------------------------------------ serve ---
+
+fn serve(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "serve",
+        "HTTP service: coalesced batched eval, PTQ-on-upload, online re-encode",
+    )
+    .opt_default("artifacts", "artifacts", "artifact directory")
+    .opt_default("addr", "127.0.0.1:7171", "listen address (port 0 = OS-assigned)")
+    .opt_default("threads", "0", "interpreter worker threads (0=all cores)")
+    .opt_default("max-batch", "8", "macro-batch size cap for coalesced evals")
+    .opt_default("max-queue", "64", "admission queue bound (beyond it: 429)")
+    .opt_default("http-threads", "8", "HTTP worker threads (one live connection each)")
+    .opt_default("linger-ms", "2", "how long a ready batch waits for stragglers")
+    .flag("selfcheck", "re-run every coalesced shard solo and assert bit-identity");
+    let args = parse(cmd, rest)?;
+    let cfg = quant_noise::serve::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7171").to_string(),
+        threads: args.num_or("threads", 0usize),
+        max_batch: args.num_or("max-batch", 8usize),
+        max_queue: args.num_or("max-queue", 64usize),
+        http_threads: args.num_or("http-threads", 8usize),
+        linger: std::time::Duration::from_millis(args.num_or("linger-ms", 2u64)),
+        backend: None, // QN_BACKEND decides, same as every other subcommand
+        selfcheck: args.flag("selfcheck"),
+    };
+    quant_noise::serve::run(&artifacts_dir(&args), cfg)
 }
 
 // -------------------------------------------------------- lint-plan ---

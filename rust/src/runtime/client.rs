@@ -113,6 +113,46 @@ impl Backend {
     }
 }
 
+/// Typed "this backend cannot do that" failure, carried as an
+/// `anyhow` payload so callers can separate a declined capability —
+/// the vendored PJRT stub, or a capability a real plugin lacks — from
+/// bad input or an internal bug. The serving layer downcasts to this
+/// to answer 503 Service Unavailable per request instead of treating
+/// the condition as a server error (DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendError {
+    pub backend: Backend,
+    pub what: String,
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?} backend unavailable: {}", self.backend, self.what)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+impl BackendError {
+    /// An `anyhow` error with a [`BackendError`] payload attached
+    /// (retrieve with `err.downcast_ref::<BackendError>()`).
+    pub fn unavailable(backend: Backend, what: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(BackendError { backend, what: what.into() })
+    }
+}
+
+/// Lift an `xla` crate error: `Unavailable` (the stub declining real
+/// work) becomes a typed [`BackendError`]; anything else stays a plain
+/// message.
+fn pjrt_err(e: xla::Error, what: &str) -> anyhow::Error {
+    match &e {
+        xla::Error::Unavailable(_) => {
+            BackendError::unavailable(Backend::Pjrt, format!("{what}: {e}"))
+        }
+        _ => anyhow::anyhow!("{what}: {e}"),
+    }
+}
+
 /// A loaded, executable artifact on some backend. Interpreter plans
 /// are `Arc`-shared through the process-wide content cache.
 pub enum Executable {
@@ -169,8 +209,10 @@ impl Executable {
                         Buffer::Host(_) => bail!("interpreter buffer passed to the PJRT backend"),
                     })
                     .collect::<Result<_>>()?;
-                let result = exe.execute_b(&bufs).context("executing on PJRT")?;
-                let lit = result[0][0].to_literal_sync().context("downloading result")?;
+                let result = exe.execute_b(&bufs).map_err(|e| pjrt_err(e, "executing on PJRT"))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| pjrt_err(e, "downloading result"))?;
                 lit.to_tuple()
                     .context("decomposing result tuple")?
                     .into_iter()
@@ -198,7 +240,12 @@ impl Executable {
     ) -> Result<Vec<Vec<Vec<f32>>>> {
         let plan = match self {
             Executable::Interp(plan) => plan,
-            Executable::Pjrt(_) => bail!("batched execution is interpreter-only (DESIGN.md §4)"),
+            Executable::Pjrt(_) => {
+                return Err(BackendError::unavailable(
+                    Backend::Pjrt,
+                    "batched execution is interpreter-only (DESIGN.md §4)",
+                ));
+            }
         };
         ensure!(
             args.len() == plan.n_entry_params(),
@@ -381,12 +428,12 @@ impl Runtime {
                 let proto = xla::HloModuleProto::from_text_file(
                     path.to_str().context("non-utf8 path")?,
                 )
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                .map_err(|e| pjrt_err(e, &format!("parsing HLO text {}", path.display())))?;
                 let comp = xla::XlaComputation::from_proto(&proto);
                 Executable::Pjrt(
                     client
                         .compile(&comp)
-                        .with_context(|| format!("compiling {}", path.display()))?,
+                        .map_err(|e| pjrt_err(e, &format!("compiling {}", path.display())))?,
                 )
             }
         });
@@ -473,6 +520,24 @@ mod tests {
         assert_eq!(rt.threads(), 3);
         rt.set_threads(0);
         assert!(rt.threads() >= 1); // all cores
+    }
+
+    #[test]
+    fn pjrt_stub_surfaces_typed_backend_error() {
+        let dir = crate::util::testing::temp_dir("pjrt_typed_err");
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule m\n").unwrap();
+        let rt = Runtime::with_backend(Backend::Pjrt).unwrap();
+        // compile declines via the stub: typed payload, even wrapped
+        let err = rt.compile(&path).unwrap_err().context("serving model");
+        let be = err.downcast_ref::<BackendError>().expect("BackendError payload");
+        assert_eq!(be.backend, Backend::Pjrt);
+        assert!(be.what.contains("parsing HLO text"), "{}", be.what);
+        // batched execution is interpreter-only: also typed
+        let exe = Executable::Pjrt(xla::PjRtLoadedExecutable);
+        let err = exe.execute_f32_batched(&[], 2).unwrap_err();
+        assert!(err.is::<BackendError>());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

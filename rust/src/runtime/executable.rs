@@ -46,18 +46,34 @@ impl<'rt> ModelSession<'rt> {
         let meta = manifest.model(model)?.clone();
         let params = ParamStore::load_qnp1(&manifest.init_path(&meta))
             .context("loading init params")?;
-        params.check_against(&meta)?;
+        let session = ModelSession::with_params(rt, manifest, &meta, &params)?;
+        Ok((session, params))
+    }
+
+    /// Create a session around an explicit parameter set (e.g. the
+    /// serving registry's current snapshot) instead of the on-disk
+    /// init file. `meta` may describe a derived model id that is not
+    /// in the manifest — only the entry HLO paths resolve through it,
+    /// so sessions sharing one meta also share one plan via the
+    /// process-wide content cache. Hat buffers are zero-filled (pure
+    /// inference: no quantization noise).
+    pub fn with_params(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        meta: &ModelMeta,
+        params: &ParamStore,
+    ) -> Result<ModelSession<'rt>> {
         let mut session = ModelSession {
             rt,
-            meta,
+            meta: meta.clone(),
             manifest: manifest.clone(),
             exes: HashMap::new(),
             param_bufs: Vec::new(),
             hat_bufs: Vec::new(),
         };
-        session.upload_all_params(&params)?;
+        session.upload_all_params(params)?;
         session.zero_hats()?;
-        Ok((session, params))
+        Ok(session)
     }
 
     fn exe(&mut self, entry: &str) -> Result<Arc<Executable>> {
@@ -241,7 +257,11 @@ impl<'rt> ModelSession<'rt> {
         );
         if self.rt.backend() == Backend::Pjrt {
             // PJRT has no batched seam (yet): run the shards serially —
-            // identical results, just no host-side parallelism
+            // identical results, just no host-side parallelism. When
+            // the stub (or a capability-poor plugin) declines, the
+            // typed `BackendError` payload survives this context wrap,
+            // so a serving caller can degrade to 503 instead of
+            // treating the whole macro-batch as an internal error.
             let mut out = Vec::with_capacity(m);
             for s in 0..m {
                 let inp = match input {
@@ -253,7 +273,10 @@ impl<'rt> ModelSession<'rt> {
                     }
                 };
                 let tg = &targets[s * per_target..(s + 1) * per_target];
-                out.push(self.eval(entry, &inp, tg, layer_keep)?);
+                let r = self
+                    .eval(entry, &inp, tg, layer_keep)
+                    .with_context(|| format!("PJRT serial fallback, shard {s}/{m}"))?;
+                out.push(r);
             }
             return Ok(out);
         }

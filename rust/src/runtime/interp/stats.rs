@@ -15,12 +15,17 @@
 //! Note: in stats mode the runtime bypasses its process-wide content
 //! cache ([`crate::runtime::client::Runtime::compile`]) so the plan —
 //! and with it this table — drops when the runtime does.
+//!
+//! This module also hosts [`Hist`], the lock-free log2-bucketed
+//! histogram the serving layer reuses for per-route latency and
+//! batch-size distributions (DESIGN.md §9).
 
 // cells are keyed lookup during recording; the printed table is sorted
 // first, so HashMap order never reaches output (clippy.toml)
 #![allow(clippy::disallowed_types)]
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -101,6 +106,98 @@ impl Drop for Stats {
     }
 }
 
+// ------------------------------------------------------------ histogram ---
+
+/// Lock-free log2-bucketed histogram of `u64` samples (latencies in
+/// nanoseconds, batch sizes, queue depths). Bucket `i` holds samples
+/// whose bit length is `i` (i.e. `2^(i-1) <= v < 2^i`; bucket 0 is
+/// `v == 0`), so quantiles are exact to within a factor of 2 — plenty
+/// for a p50/p99 serving dashboard, at the cost of three relaxed
+/// atomic adds per record and zero locks on the request path.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; 65],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        (u64::BITS - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive upper bound of bucket `i` (its reported quantile value).
+    fn bucket_hi(i: usize) -> u64 {
+        if i >= 64 { u64::MAX } else { (1u64 << i) - 1 }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample seen, to bucket resolution (0 when empty).
+    pub fn max(&self) -> u64 {
+        for i in (0..65).rev() {
+            if self.buckets[i].load(Ordering::Relaxed) > 0 {
+                return Self::bucket_hi(i);
+            }
+        }
+        0
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`), reported as the upper bound of
+    /// the bucket holding the rank-`ceil(q*count)` sample; 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..65 {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_hi(i);
+            }
+        }
+        Self::bucket_hi(64)
+    }
+
+    /// Non-empty `(bucket_upper_bound, count)` rows, ascending.
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        (0..65)
+            .filter_map(|i| {
+                let c = self.buckets[i].load(Ordering::Relaxed);
+                (c > 0).then_some((Self::bucket_hi(i), c))
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +222,35 @@ mod tests {
         // the variable is unset (or possibly set) in the test env; the
         // constructor must never panic either way
         let _ = Stats::from_env("m");
+    }
+
+    #[test]
+    fn hist_buckets_and_quantiles() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.max(), 0);
+        for v in [0u64, 1, 1, 2, 3, 900, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 1907);
+        // rank 4 of 7 at q=0.5 -> the sample `2`, bucket [2,4) -> hi 3
+        assert_eq!(h.quantile(0.5), 3);
+        // p99 -> rank 7 -> 1000, bucket [512,1024) -> hi 1023
+        assert_eq!(h.quantile(0.99), 1023);
+        assert_eq!(h.max(), 1023);
+        assert_eq!(h.quantile(0.0), 0); // rank clamps to 1 -> sample 0
+        let snap = h.snapshot();
+        assert_eq!(snap.iter().map(|r| r.1).sum::<u64>(), 7);
+        assert!(snap.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn hist_extremes() {
+        let h = Hist::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(h.snapshot(), vec![(u64::MAX, 2)]);
     }
 }

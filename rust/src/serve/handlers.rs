@@ -1,0 +1,340 @@
+//! Endpoint logic for the `qn serve` API.
+//!
+//! Handlers parse bodies with the lazy path extractors from
+//! `util/json.rs` — `/v1/eval` pulls the small `"model"` string
+//! without materializing the (much larger) token arrays first, then
+//! parses exactly the arrays it needs. Responses carry the raw
+//! `sum_nll`/`sum_correct` accumulators as JSON numbers; the writer is
+//! shortest-roundtrip for f64, so clients get the exact result bits
+//! the engine produced (the determinism tests rely on this).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::quantize::reencode_params;
+use crate::quant::scheme::QuantSpec;
+use crate::runtime::client::plan_cache_stats;
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg;
+
+use super::http::{Request, Response};
+use super::metrics::Route;
+use super::queue::{EvalJob, JobInput, JobOutcome, PushError};
+use super::registry::{ServedModel, ServedState};
+use super::router::{self, RouteMatch};
+use super::ServerState;
+
+/// How long an admitted eval waits for its batch before 504.
+const EVAL_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default PTQ seed; matches `IpqConfig::default().seed` so a serve
+/// re-encode reproduces the CLI's bits out of the box.
+const DEFAULT_SEED: u64 = 17;
+
+/// Route a parsed request to its handler; returns the metric label
+/// alongside the response.
+pub fn dispatch(state: &ServerState, req: &Request) -> (Route, Response) {
+    match router::route(&req.method, &req.path) {
+        Ok(RouteMatch::Eval) => (Route::Eval, eval(state, req)),
+        Ok(RouteMatch::Quantize) => (Route::Quantize, quantize(state, req)),
+        Ok(RouteMatch::Reencode(id)) => (Route::Reencode, reencode(state, req, &id)),
+        Ok(RouteMatch::Models) => (Route::Models, models(state)),
+        Ok(RouteMatch::ModelInfo(id)) => (Route::Models, model_info(state, &id)),
+        Ok(RouteMatch::Stats) => (Route::Stats, stats(state)),
+        Err(405) => (Route::Other, Response::error(405, "method not allowed")),
+        Err(_) => (Route::Other, Response::error(404, "no such route")),
+    }
+}
+
+fn body_str(req: &Request) -> Result<&str, Response> {
+    std::str::from_utf8(&req.body).map_err(|_| Response::error(400, "body must be UTF-8 JSON"))
+}
+
+/// Flatten arbitrarily-nested numeric arrays into i32s. `cap` bounds
+/// the output (callers know the exact element count up front), so a
+/// hostile body cannot force a giant allocation.
+fn flat_i32(v: &Json, cap: usize, out: &mut Vec<i32>) -> bool {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && out.len() < cap => {
+            out.push(*n as i32);
+            true
+        }
+        Json::Arr(a) => a.iter().all(|x| flat_i32(x, cap, out)),
+        _ => false,
+    }
+}
+
+fn flat_f32(v: &Json, cap: usize, out: &mut Vec<f32>) -> bool {
+    match v {
+        Json::Num(n) if out.len() < cap => {
+            out.push(*n as f32);
+            true
+        }
+        Json::Arr(a) => a.iter().all(|x| flat_f32(x, cap, out)),
+        _ => false,
+    }
+}
+
+/// Extract `path` as a numeric array flattened to i32, expecting
+/// exactly `want` elements.
+fn array_i32(body: &str, path: &str, want: usize) -> Result<Vec<i32>, Response> {
+    let v = match json::path_value(body, path) {
+        Ok(Some(v)) => v,
+        Ok(None) => return Err(Response::error(400, &format!("missing field '{path}'"))),
+        Err(e) => return Err(Response::error(400, &format!("bad JSON body: {e}"))),
+    };
+    let mut out = Vec::with_capacity(want);
+    if !flat_i32(&v, want, &mut out) || out.len() != want {
+        return Err(Response::error(400, &format!("'{path}' must hold {want} integers")));
+    }
+    Ok(out)
+}
+
+fn eval(state: &ServerState, req: &Request) -> Response {
+    let body = match body_str(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let Some(id) = json::path_str(body, "model") else {
+        return Response::error(400, "missing string field 'model'");
+    };
+    let Some(model) = state.registry.get(&id) else {
+        return Response::error(404, &format!("no such model '{id}'"));
+    };
+    if model.meta.entry("eval").is_none() {
+        return Response::error(400, &format!("model '{id}' has no eval entry"));
+    }
+    let per_input: usize = model.meta.tokens_shape.iter().product();
+    let per_target: usize = model.meta.targets_shape.iter().product();
+    let input = if model.meta.task == "img" {
+        let v = match json::path_value(body, "pixels") {
+            Ok(Some(v)) => v,
+            Ok(None) => return Response::error(400, "missing field 'pixels'"),
+            Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+        };
+        let mut px = Vec::with_capacity(per_input);
+        if !flat_f32(&v, per_input, &mut px) || px.len() != per_input {
+            return Response::error(400, &format!("'pixels' must hold {per_input} numbers"));
+        }
+        JobInput::Pixels(px)
+    } else {
+        match array_i32(body, "tokens", per_input) {
+            Ok(t) => JobInput::Tokens(t),
+            Err(r) => return r,
+        }
+    };
+    let targets = match array_i32(body, "targets", per_target) {
+        Ok(t) => t,
+        Err(r) => return r,
+    };
+
+    let (tx, rx) = sync_channel(1);
+    // enqueue timestamp feeds the queue-wait histogram only — never
+    // result bits (determinism-lint exemption)
+    #[allow(clippy::disallowed_methods)]
+    let now = std::time::Instant::now();
+    let job = EvalJob { model: id.clone(), input, targets, resp: tx, enqueued_at: now };
+    match state.queue.push(job) {
+        Err(PushError::Full(_)) => {
+            Response::error(429, "admission queue full").with_header("Retry-After", "1")
+        }
+        Err(PushError::Closed(_)) => Response::error(503, "server is shutting down"),
+        Ok(()) => match rx.recv_timeout(EVAL_TIMEOUT) {
+            Ok(JobOutcome::Done { sum_nll, sum_correct, batch_size, version }) => {
+                let denom = model.meta.eval_denominator() as f64;
+                let nll = sum_nll / denom;
+                Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("model", Json::str(id)),
+                        ("version", Json::num(version as f64)),
+                        ("batch_size", Json::num(batch_size as f64)),
+                        ("sum_nll", Json::num(sum_nll)),
+                        ("sum_correct", Json::num(sum_correct)),
+                        ("nll", Json::num(nll)),
+                        ("ppl", Json::num(nll.exp())),
+                        ("accuracy", Json::num(sum_correct / denom)),
+                    ]),
+                )
+            }
+            Ok(JobOutcome::Failed { status, msg }) => Response::error(status, &msg),
+            Err(_) => Response::error(504, "eval timed out in the batcher"),
+        },
+    }
+}
+
+/// PTQ-on-upload: fit `scheme` on the source model's pristine fp32
+/// weights and publish the result under a new id (default
+/// `{src}@{canonical-scheme}`).
+fn quantize(state: &ServerState, req: &Request) -> Response {
+    let body = match body_str(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let Some(src_id) = json::path_str(body, "model") else {
+        return Response::error(400, "missing string field 'model'");
+    };
+    let Some(scheme_s) = json::path_str(body, "scheme") else {
+        return Response::error(400, "missing string field 'scheme'");
+    };
+    let Some(src) = state.registry.get(&src_id) else {
+        return Response::error(404, &format!("no such model '{src_id}'"));
+    };
+    let spec = match QuantSpec::parse(&scheme_s) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("bad scheme: {e}")),
+    };
+    let seed = json::path_f64(body, "seed").map(|v| v as u64).unwrap_or(DEFAULT_SEED);
+    let new_id = json::path_str(body, "id").unwrap_or_else(|| format!("{src_id}@{spec}"));
+    let q = match reencode_params(&src.fp, &src.meta, &spec, &mut Pcg::new(seed)) {
+        Ok(q) => q,
+        Err(e) => return Response::error(500, &format!("quantize failed: {e:#}")),
+    };
+    let served = ServedState {
+        params: Arc::new(q.store),
+        scheme: spec.to_string(),
+        bytes: q.bytes,
+        sq_error: q.sq_error,
+        version: 1,
+    };
+    let model = ServedModel::new(src.meta.clone(), src.fp.clone(), src.fp_bytes, served);
+    if state.registry.insert_new(&new_id, model).is_err() {
+        return Response::error(409, &format!("model '{new_id}' already exists"));
+    }
+    let m = state.registry.get(&new_id).expect("registry is append-only");
+    Response::json(200, &model_json(&new_id, &m))
+}
+
+/// Online re-encode: refit the (possibly new) scheme on the pristine
+/// fp32 weights and atomically swap the served snapshot — in-flight
+/// evals keep their old Arc, later ones see the new version.
+fn reencode(state: &ServerState, req: &Request, id: &str) -> Response {
+    let Some(model) = state.registry.get(id) else {
+        return Response::error(404, &format!("no such model '{id}'"));
+    };
+    let body = match body_str(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let explicit = json::path_str(body, "scheme");
+    let scheme_s = match &explicit {
+        Some(s) => s.clone(),
+        None => model.snapshot().scheme.clone(),
+    };
+    let spec = match QuantSpec::parse(&scheme_s) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("bad scheme: {e}")),
+    };
+    if explicit.is_none() && matches!(spec, QuantSpec::None) {
+        return Response::error(400, "model is served fp32; pass 'scheme' to quantize it");
+    }
+    let seed = json::path_f64(body, "seed").map(|v| v as u64).unwrap_or(DEFAULT_SEED);
+    let q = match reencode_params(&model.fp, &model.meta, &spec, &mut Pcg::new(seed)) {
+        Ok(q) => q,
+        Err(e) => return Response::error(500, &format!("re-encode failed: {e:#}")),
+    };
+    let version = model.swap(q.store, spec.to_string(), q.bytes, q.sq_error);
+    state.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("id", Json::str(id)),
+            ("version", Json::num(version as f64)),
+            ("scheme", Json::str(spec.to_string())),
+            ("storage_bytes", Json::num(q.bytes as f64)),
+            ("sq_error", Json::num(q.sq_error)),
+        ]),
+    )
+}
+
+fn model_json(id: &str, m: &ServedModel) -> Json {
+    let s = m.snapshot();
+    let compression = if s.bytes > 0 { m.fp_bytes as f64 / s.bytes as f64 } else { 0.0 };
+    let total_params: usize = m.meta.params.iter().map(|p| p.numel()).sum();
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("task", Json::str(m.meta.task.clone())),
+        ("scheme", Json::str(s.scheme.clone())),
+        ("version", Json::num(s.version as f64)),
+        ("params", Json::num(m.meta.params.len() as f64)),
+        ("total_params", Json::num(total_params as f64)),
+        ("storage_bytes", Json::num(s.bytes as f64)),
+        ("storage_bits", Json::num((s.bytes * 8) as f64)),
+        ("fp32_bytes", Json::num(m.fp_bytes as f64)),
+        ("compression", Json::num(compression)),
+        ("sq_error", Json::num(s.sq_error)),
+    ])
+}
+
+fn plan_cache_json() -> Json {
+    let (hits, misses) = plan_cache_stats();
+    Json::obj(vec![
+        ("hits", Json::num(hits as f64)),
+        ("misses", Json::num(misses as f64)),
+    ])
+}
+
+fn models(state: &ServerState) -> Response {
+    let list: Vec<Json> = state
+        .registry
+        .ids()
+        .iter()
+        .filter_map(|id| state.registry.get(id).map(|m| model_json(id, &m)))
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![("models", Json::Arr(list)), ("plan_cache", plan_cache_json())]),
+    )
+}
+
+fn model_info(state: &ServerState, id: &str) -> Response {
+    match state.registry.get(id) {
+        Some(m) => Response::json(200, &model_json(id, &m)),
+        None => Response::error(404, &format!("no such model '{id}'")),
+    }
+}
+
+fn stats(state: &ServerState) -> Response {
+    let mut j = state.metrics.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert(
+            "queue".into(),
+            Json::obj(vec![
+                ("depth", Json::num(state.queue.depth() as f64)),
+                ("max_queue", Json::num(state.cfg.max_queue as f64)),
+            ]),
+        );
+        map.insert("plan_cache".into(), plan_cache_json());
+        map.insert("models".into(), Json::num(state.registry.len() as f64));
+    }
+    Response::json(200, &j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatteners_handle_nesting_and_reject_junk() {
+        let v = Json::parse("[[1,2],[3,4]]").unwrap();
+        let mut out = Vec::new();
+        assert!(flat_i32(&v, 4, &mut out));
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        // over cap
+        let mut out = Vec::new();
+        assert!(!flat_i32(&v, 3, &mut out));
+        // non-integer
+        let v = Json::parse("[1.5]").unwrap();
+        let mut out = Vec::new();
+        assert!(!flat_i32(&v, 4, &mut out));
+        // but floats are fine for pixels
+        let mut px = Vec::new();
+        assert!(flat_f32(&v, 4, &mut px));
+        assert_eq!(px, vec![1.5f32]);
+        // strings rejected everywhere
+        let v = Json::parse("[\"x\"]").unwrap();
+        let mut out = Vec::new();
+        assert!(!flat_i32(&v, 4, &mut out));
+    }
+}

@@ -1,0 +1,216 @@
+//! Minimal HTTP/1.1 message framing for the serving layer.
+//!
+//! Hand-rolled over `std::io` (the offline registry has no HTTP
+//! crates, and the subset we need is small): request-line + headers +
+//! `Content-Length` bodies, keep-alive by default on HTTP/1.1, hard
+//! caps on header and body size so a hostile peer cannot balloon
+//! memory. No chunked encoding, no TLS — `qn serve` fronts a trusted
+//! network or a reverse proxy (DESIGN.md §9).
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Reject request heads (request line + headers) larger than this.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Reject bodies larger than this (a macro-batch of eval requests for
+/// the tiny fixtures is a few KB; real token payloads stay well under).
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed request. `path` excludes the query string.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub body: Vec<u8>,
+    pub keep_alive: bool,
+}
+
+/// One response to serialize. `Content-Length` and `Connection` are
+/// emitted by [`write_response`]; `headers` carries the rest.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), "application/json".into())],
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    /// The uniform error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request off a (possibly keep-alive) connection.
+/// `Ok(None)` on clean EOF before the first byte; `Err` on anything
+/// malformed or over the caps — the caller answers 400 and closes.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).context("reading request line")?;
+    if n == 0 {
+        return Ok(None); // clean close between requests
+    }
+    ensure!(n <= MAX_HEAD_BYTES, "request line too long");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let target = parts.next().context("request line missing target")?.to_string();
+    let version = parts.next().context("request line missing version")?;
+    ensure!(version.starts_with("HTTP/1."), "unsupported protocol version {version}");
+    let mut keep_alive = version == "HTTP/1.1"; // 1.1 defaults to keep-alive
+    let mut content_len = 0usize;
+    let mut total = n;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h).context("reading header")?;
+        ensure!(n > 0, "connection closed mid-headers");
+        total += n;
+        ensure!(total <= MAX_HEAD_BYTES, "headers larger than {MAX_HEAD_BYTES} bytes");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            bail!("malformed header line");
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_len = value.parse().context("bad content-length")?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            let v = value.to_ascii_lowercase();
+            if v.split(',').any(|t| t.trim() == "close") {
+                keep_alive = false;
+            } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    ensure!(content_len <= MAX_BODY_BYTES, "body larger than {MAX_BODY_BYTES} bytes");
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading body")?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Some(Request { method, path, query, body, keep_alive }))
+}
+
+/// Serialize one response. `keep_alive` reflects what the connection
+/// loop will actually do, so the header never lies to the client.
+pub fn write_response(
+    w: &mut impl Write,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_text(resp.status))?;
+    for (name, value) in &resp.headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\n", resp.body.len())?;
+    write!(w, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    write!(w, "\r\n")?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(s: &str) -> Result<Option<Request>> {
+        read_request(&mut BufReader::new(s.as_bytes()))
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let req = parse(
+            "POST /v1/eval?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 4\r\n\r\nbody",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/eval");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body, b"body");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn connection_close_and_http10() {
+        let req = parse("GET /v1/stats HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn eof_and_malformed() {
+        assert!(parse("").unwrap().is_none());
+        assert!(parse("GET\r\n\r\n").is_err()); // no target
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
+        // truncated body
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn caps_enforced() {
+        let big = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        assert!(parse(&big).is_err());
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(parse(&huge).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .with_header("Retry-After", "1");
+        let mut out = Vec::new();
+        write_response(&mut out, &resp, false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Type: application/json\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"ok\":true}"), "{s}");
+        let err = Response::error(429, "queue full");
+        assert_eq!(err.status, 429);
+        assert_eq!(err.body, br#"{"error":"queue full"}"#);
+    }
+}

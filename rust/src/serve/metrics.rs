@@ -1,0 +1,193 @@
+//! Serving metrics: per-route request/error counters + latency
+//! histograms, and batcher-side coalescing statistics.
+//!
+//! Everything is lock-free ([`AtomicU64`] counters and the power-of-two
+//! [`Hist`] from `interp/stats.rs`) so the HTTP workers never contend
+//! on a metrics mutex. `GET /v1/stats` renders a snapshot; counters are
+//! monotone since server start.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::runtime::interp::stats::Hist;
+use crate::util::json::Json;
+
+/// Metric label for a request, derived from the routing outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Eval,
+    Quantize,
+    Reencode,
+    Models,
+    Stats,
+    /// 404/405 and anything else that never reached a handler.
+    Other,
+}
+
+impl Route {
+    pub fn name(self) -> &'static str {
+        match self {
+            Route::Eval => "eval",
+            Route::Quantize => "quantize",
+            Route::Reencode => "reencode",
+            Route::Models => "models",
+            Route::Stats => "stats",
+            Route::Other => "other",
+        }
+    }
+}
+
+const ALL_ROUTES: [Route; 6] =
+    [Route::Eval, Route::Quantize, Route::Reencode, Route::Models, Route::Stats, Route::Other];
+
+#[derive(Debug, Default)]
+pub struct RouteStats {
+    pub requests: AtomicU64,
+    /// Responses with status >= 400.
+    pub errors: AtomicU64,
+    /// Wall time from parsed request to serialized response.
+    pub latency_ns: Hist,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    eval: RouteStats,
+    quantize: RouteStats,
+    reencode: RouteStats,
+    models: RouteStats,
+    stats: RouteStats,
+    other: RouteStats,
+    /// 429s from the admission queue.
+    pub rejected: AtomicU64,
+    /// Macro-batches executed by the batcher.
+    pub batches: AtomicU64,
+    /// Eval requests that rode those macro-batches.
+    pub batched_requests: AtomicU64,
+    /// Requests that shared a macro-batch with at least one stranger.
+    pub coalesced_requests: AtomicU64,
+    /// Largest macro-batch observed (the coalescing witness).
+    pub max_batch: AtomicU64,
+    pub batch_size: Hist,
+    /// Time eval jobs spent queued before their batch started.
+    pub queue_wait_ns: Hist,
+    /// Successful `/reencode` (and first-publish `/quantize`) swaps.
+    pub swaps: AtomicU64,
+}
+
+impl Metrics {
+    pub fn route(&self, r: Route) -> &RouteStats {
+        match r {
+            Route::Eval => &self.eval,
+            Route::Quantize => &self.quantize,
+            Route::Reencode => &self.reencode,
+            Route::Models => &self.models,
+            Route::Stats => &self.stats,
+            Route::Other => &self.other,
+        }
+    }
+
+    /// Record one finished request.
+    pub fn observe(&self, r: Route, status: u16, latency_ns: u64) {
+        let rs = self.route(r);
+        rs.requests.fetch_add(1, Ordering::Relaxed);
+        if status >= 400 {
+            rs.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if status == 429 {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        rs.latency_ns.record(latency_ns);
+    }
+
+    /// Record one executed macro-batch of `m` coalesced eval jobs.
+    pub fn note_batch(&self, m: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(m as u64, Ordering::Relaxed);
+        if m > 1 {
+            self.coalesced_requests.fetch_add(m as u64, Ordering::Relaxed);
+        }
+        self.max_batch.fetch_max(m as u64, Ordering::Relaxed);
+        self.batch_size.record(m as u64);
+    }
+
+    /// The `/v1/stats` payload, minus queue depth (owned by the caller).
+    pub fn to_json(&self) -> Json {
+        fn us(ns: u64) -> Json {
+            Json::num((ns / 1_000) as f64)
+        }
+        let routes = ALL_ROUTES
+            .iter()
+            .map(|&r| {
+                let rs = self.route(r);
+                let j = Json::obj(vec![
+                    ("requests", Json::num(rs.requests.load(Ordering::Relaxed) as f64)),
+                    ("errors", Json::num(rs.errors.load(Ordering::Relaxed) as f64)),
+                    ("p50_us", us(rs.latency_ns.quantile(0.5))),
+                    ("p99_us", us(rs.latency_ns.quantile(0.99))),
+                ]);
+                (r.name().to_string(), j)
+            })
+            .collect();
+        Json::obj(vec![
+            ("routes", Json::Obj(routes)),
+            (
+                "batching",
+                Json::obj(vec![
+                    ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+                    ("requests", Json::num(self.batched_requests.load(Ordering::Relaxed) as f64)),
+                    (
+                        "coalesced_requests",
+                        Json::num(self.coalesced_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("max_batch", Json::num(self.max_batch.load(Ordering::Relaxed) as f64)),
+                    ("p50_batch", Json::num(self.batch_size.quantile(0.5) as f64)),
+                    ("p50_queue_wait_us", us(self.queue_wait_ns.quantile(0.5))),
+                    ("p99_queue_wait_us", us(self.queue_wait_ns.quantile(0.99))),
+                ]),
+            ),
+            ("swaps", Json::num(self.swaps.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_counts_and_classifies() {
+        let m = Metrics::default();
+        m.observe(Route::Eval, 200, 1_000);
+        m.observe(Route::Eval, 503, 2_000);
+        m.observe(Route::Other, 429, 500);
+        let rs = m.route(Route::Eval);
+        assert_eq!(rs.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(rs.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(rs.latency_ns.count(), 2);
+    }
+
+    #[test]
+    fn note_batch_tracks_coalescing() {
+        let m = Metrics::default();
+        m.note_batch(1);
+        m.note_batch(4);
+        m.note_batch(2);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(m.batched_requests.load(Ordering::Relaxed), 7);
+        assert_eq!(m.coalesced_requests.load(Ordering::Relaxed), 6);
+        assert_eq!(m.max_batch.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn stats_json_has_all_routes() {
+        let m = Metrics::default();
+        m.observe(Route::Stats, 200, 10);
+        let j = m.to_json();
+        let s = j.to_string();
+        for name in ["eval", "quantize", "reencode", "models", "stats", "other"] {
+            assert!(s.contains(&format!("\"{name}\"")), "{s}");
+        }
+        assert_eq!(j.get_path("routes.stats.requests").as_f64(), Some(1.0));
+    }
+}

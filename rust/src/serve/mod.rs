@@ -1,0 +1,424 @@
+//! `qn serve`: a batching inference + online-quantization HTTP service
+//! (DESIGN.md §9).
+//!
+//! Layering:
+//!
+//! ```text
+//!   acceptor ──► conn channel ──► http workers ──► handlers
+//!                                      │  /v1/eval jobs
+//!                                      ▼
+//!                              admission queue ──► batcher ──► ModelSession
+//!                                  (bounded,          │        eval_batched
+//!                                   FIFO, 429)        └── macro-batches
+//! ```
+//!
+//! The batcher is the only thread that touches the runtime; HTTP
+//! workers rendezvous with it through per-job channels. Requests
+//! coalesce into macro-batches that ride `execute_f32_batched`, whose
+//! deterministic shard-order merge guarantees each response's bits are
+//! independent of co-batched traffic — `ServeConfig::selfcheck` makes
+//! the batcher re-run every shard solo and assert exactly that.
+//! `/v1/models/{id}/reencode` refits the quantizer on the pristine
+//! fp32 weights and atomically swaps the served snapshot (no
+//! downtime: in-flight batches keep their `Arc`).
+
+pub mod handlers;
+pub mod http;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+pub mod router;
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::client::{Backend, BackendError, Runtime};
+use crate::runtime::executable::{BatchInput, ModelSession};
+use crate::runtime::manifest::Manifest;
+use crate::{log_error, log_info, log_warn};
+
+use http::Response;
+use metrics::Metrics;
+use queue::{AdmissionQueue, EvalJob, JobInput, JobOutcome};
+use registry::Registry;
+
+/// Per-connection socket read/write timeout: bounds slow-loris peers
+/// and how long shutdown waits on an idle keep-alive connection.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Interpreter worker threads (0 ⇒ all cores).
+    pub threads: usize,
+    /// Macro-batch size cap for coalesced evals.
+    pub max_batch: usize,
+    /// Admission-queue bound; pushes beyond it get 429.
+    pub max_queue: usize,
+    /// HTTP worker threads — one live connection each, so keep this at
+    /// or above the expected concurrent-client count.
+    pub http_threads: usize,
+    /// How long the batcher waits for stragglers once a job is ready.
+    pub linger: Duration,
+    /// Backend override; `None` ⇒ `QN_BACKEND` (interp by default).
+    pub backend: Option<Backend>,
+    /// Re-run every coalesced shard solo and assert bit-identity.
+    pub selfcheck: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7171".into(),
+            threads: 0,
+            max_batch: 8,
+            max_queue: 64,
+            http_threads: 8,
+            linger: Duration::from_millis(2),
+            backend: None,
+            selfcheck: false,
+        }
+    }
+}
+
+/// Everything the worker/batcher threads share.
+pub struct ServerState {
+    pub cfg: ServeConfig,
+    pub manifest: Manifest,
+    pub registry: Registry,
+    pub metrics: Metrics,
+    pub queue: AdmissionQueue,
+    pub shutdown: AtomicBool,
+}
+
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+// Service threads are detached-by-name rather than scoped: they never
+// produce result bits (the determinism-lint's concern), and
+// `Server::stop` joins every one of them.
+fn spawn_named(
+    name: &str,
+    f: impl FnOnce() + Send + 'static,
+) -> Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("qn-serve-{name}"))
+        .spawn(f)
+        .with_context(|| format!("spawning {name} thread"))
+}
+
+impl Server {
+    /// Bind, load every manifest model, and start the service threads.
+    /// Use port 0 to let the OS pick ([`Server::addr`] has the result).
+    pub fn start(artifacts: &Path, cfg: ServeConfig) -> Result<Server> {
+        let manifest = Manifest::load(artifacts)?;
+        let registry = Registry::from_manifest(&manifest)?;
+        anyhow::ensure!(
+            !registry.is_empty(),
+            "no models in manifest at {}",
+            artifacts.display()
+        );
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let http_threads = cfg.http_threads.max(1);
+        let queue = AdmissionQueue::new(cfg.max_queue);
+        let state = Arc::new(ServerState {
+            cfg,
+            manifest,
+            registry,
+            metrics: Metrics::default(),
+            queue,
+            shutdown: AtomicBool::new(false),
+        });
+        let mut threads = Vec::with_capacity(http_threads + 2);
+        {
+            let st = state.clone();
+            threads.push(spawn_named("batcher", move || batcher_main(&st))?);
+        }
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        for i in 0..http_threads {
+            let st = state.clone();
+            let rx = conn_rx.clone();
+            threads.push(spawn_named(&format!("http-{i}"), move || http_worker(&st, &rx))?);
+        }
+        {
+            let st = state.clone();
+            threads.push(spawn_named("acceptor", move || acceptor_main(&st, listener, conn_tx))?);
+        }
+        Ok(Server { addr, state, threads })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn stop(&mut self) {
+        if self.threads.is_empty() {
+            return;
+        }
+        self.state.shutdown.store(true, Ordering::Relaxed);
+        self.state.queue.close();
+        // wake the blocking accept so the acceptor sees the flag
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Graceful shutdown: stop admitting, drain the queue, join all
+    /// service threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    /// Block until the server is stopped externally (CLI mode).
+    pub fn wait(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// CLI entry: start and serve until killed.
+pub fn run(artifacts: &Path, cfg: ServeConfig) -> Result<()> {
+    let server = Server::start(artifacts, cfg)?;
+    let ids = server.state.registry.ids();
+    log_info!("qn serve listening on http://{} serving {:?}", server.addr(), ids);
+    server.wait();
+    Ok(())
+}
+
+// ------------------------------------------------------------ http ---
+
+fn acceptor_main(state: &ServerState, listener: TcpListener, tx: mpsc::Sender<TcpStream>) {
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                if tx.send(s).is_err() {
+                    break;
+                }
+            }
+            Err(e) => log_warn!("accept failed: {e}"),
+        }
+    }
+    // dropping `tx` unblocks every http worker's recv()
+}
+
+fn http_worker(state: &ServerState, rx: &Mutex<mpsc::Receiver<TcpStream>>) {
+    loop {
+        // holding the lock while blocked in recv() is fine: connection
+        // handling happens outside it, so workers still run in parallel
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // acceptor gone ⇒ shutdown
+        };
+        handle_conn(state, stream);
+    }
+}
+
+fn handle_conn(state: &ServerState, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        if state.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                // idle keep-alive timeouts close silently; actual
+                // protocol garbage gets a 400 first
+                let idle = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if !idle {
+                    let resp = Response::error(400, &format!("{e:#}"));
+                    let _ = http::write_response(&mut writer, &resp, false);
+                }
+                break;
+            }
+        };
+        // request latency metric: timing only, never result bits
+        #[allow(clippy::disallowed_methods)]
+        let t0 = std::time::Instant::now();
+        let keep = req.keep_alive;
+        let (route, resp) = handlers::dispatch(state, &req);
+        state.metrics.observe(route, resp.status, t0.elapsed().as_nanos() as u64);
+        if http::write_response(&mut writer, &resp, keep).is_err() || !keep {
+            break;
+        }
+    }
+}
+
+// --------------------------------------------------------- batcher ---
+
+struct Slot<'rt> {
+    sess: ModelSession<'rt>,
+    /// Registry snapshot version currently uploaded to the session.
+    version: u64,
+}
+
+fn batcher_main(state: &ServerState) {
+    let rt = match state.cfg.backend {
+        Some(b) => Runtime::with_backend(b),
+        None => Runtime::cpu(),
+    };
+    let rt = match rt {
+        Ok(rt) => rt,
+        Err(e) => {
+            log_error!("batcher: no runtime, failing all evals: {e:#}");
+            // serve 503s instead of dying: health endpoints stay up
+            while let Some(batch) = state.queue.pop_batch(usize::MAX, Duration::ZERO) {
+                for job in batch {
+                    let _ = job.resp.send(JobOutcome::Failed {
+                        status: 503,
+                        msg: format!("backend unavailable: {e:#}"),
+                    });
+                }
+            }
+            return;
+        }
+    };
+    rt.set_threads(state.cfg.threads);
+    log_info!(
+        "batcher ready: platform {}, {} worker threads, max_batch {}",
+        rt.platform(),
+        rt.threads(),
+        state.cfg.max_batch
+    );
+    // sessions declared after rt ⇒ dropped before it (borrow order)
+    let mut sessions: BTreeMap<String, Slot<'_>> = BTreeMap::new();
+    while let Some(batch) = state.queue.pop_batch(state.cfg.max_batch, state.cfg.linger) {
+        serve_batch(state, &rt, &mut sessions, batch);
+    }
+}
+
+fn serve_batch<'rt>(
+    state: &ServerState,
+    rt: &'rt Runtime,
+    sessions: &mut BTreeMap<String, Slot<'rt>>,
+    batch: Vec<EvalJob>,
+) {
+    let m = batch.len();
+    for job in &batch {
+        state.metrics.queue_wait_ns.record(job.enqueued_at.elapsed().as_nanos() as u64);
+    }
+    let model_id = batch[0].model.clone();
+    let Some(model) = state.registry.get(&model_id) else {
+        // unreachable (registry is append-only), but fail soft
+        for job in batch {
+            let _ = job.resp.send(JobOutcome::Failed {
+                status: 500,
+                msg: format!("model '{model_id}' vanished from the registry"),
+            });
+        }
+        return;
+    };
+    let snap = model.snapshot();
+    let keep = vec![1.0f32; model.meta.n_layers];
+    let result = (|| -> Result<Vec<(f64, f64)>> {
+        let slot = match sessions.entry(model_id.clone()) {
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let sess = ModelSession::with_params(rt, &state.manifest, &model.meta, &snap.params)
+                    .with_context(|| format!("creating session for {model_id}"))?;
+                v.insert(Slot { sess, version: snap.version })
+            }
+        };
+        if slot.version != snap.version {
+            // a /reencode swapped the snapshot since the last batch;
+            // sync once — every macro-batch is wholly pre- or post-swap
+            slot.sess.upload_all_params(&snap.params)?;
+            slot.version = snap.version;
+        }
+        let is_img = matches!(batch[0].input, JobInput::Pixels(_));
+        let mut toks: Vec<i32> = Vec::new();
+        let mut px: Vec<f32> = Vec::new();
+        let mut targets: Vec<i32> = Vec::new();
+        for job in &batch {
+            match &job.input {
+                JobInput::Tokens(t) => toks.extend_from_slice(t),
+                JobInput::Pixels(p) => px.extend_from_slice(p),
+            }
+            targets.extend_from_slice(&job.targets);
+        }
+        let input = if is_img { BatchInput::Images(&px) } else { BatchInput::Tokens(&toks) };
+        let sums = slot.sess.eval_batched("eval", &input, &targets, &keep)?;
+        anyhow::ensure!(sums.len() == m, "batched eval returned {} shards for {m}", sums.len());
+        if state.cfg.selfcheck {
+            // the coalescing-independence assertion: each request's
+            // bits must match a solo run against the same snapshot
+            for (i, job) in batch.iter().enumerate() {
+                let solo_in = match &job.input {
+                    JobInput::Tokens(t) => BatchInput::Tokens(t.as_slice()),
+                    JobInput::Pixels(p) => BatchInput::Images(p.as_slice()),
+                };
+                let solo = slot.sess.eval("eval", &solo_in, &job.targets, &keep)?;
+                anyhow::ensure!(
+                    solo.0.to_bits() == sums[i].0.to_bits()
+                        && solo.1.to_bits() == sums[i].1.to_bits(),
+                    "coalescing changed request {i}/{m} bits: solo {:?} vs batched {:?}",
+                    solo,
+                    sums[i]
+                );
+            }
+        }
+        Ok(sums)
+    })();
+    match result {
+        Ok(sums) => {
+            state.metrics.note_batch(m);
+            for (job, (sum_nll, sum_correct)) in batch.into_iter().zip(sums) {
+                let _ = job.resp.send(JobOutcome::Done {
+                    sum_nll,
+                    sum_correct,
+                    batch_size: m,
+                    version: snap.version,
+                });
+            }
+        }
+        Err(e) => {
+            // a declining backend is the service degrading, not a bug
+            let status = if e.is::<BackendError>() { 503 } else { 500 };
+            let msg = format!("{e:#}");
+            log_warn!("batch of {m} on {model_id} failed ({status}): {msg}");
+            for job in batch {
+                let _ = job.resp.send(JobOutcome::Failed { status, msg: msg.clone() });
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Bounded FIFO admission queue that coalesces eval requests into
+//! macro-batches.
+//!
+//! HTTP workers [`AdmissionQueue::push`] one [`EvalJob`] per `/v1/eval`
+//! request and block on a rendezvous channel for the outcome; the
+//! single batcher thread [`AdmissionQueue::pop_batch`]es up to
+//! `max_batch` jobs *for the same model* off the front, preserving
+//! arrival order. Determinism note: batching composition never affects
+//! response bits — `execute_f32_batched` guarantees each shard's result
+//! is independent of its co-batched neighbours (DESIGN.md §4), so the
+//! queue is free to group greedily.
+//!
+//! Backpressure: `push` fails fast when `max_queue` jobs are already
+//! waiting (the handler answers 429 + `Retry-After`) instead of letting
+//! latency grow without bound. `close` wakes the batcher; it drains
+//! what's left and then gets `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Eval input matching [`crate::runtime::executable::BatchInput`]:
+/// token tasks feed i32, image tasks feed f32.
+#[derive(Debug, Clone)]
+pub enum JobInput {
+    Tokens(Vec<i32>),
+    Pixels(Vec<f32>),
+}
+
+/// What the batcher sends back on the job's rendezvous channel.
+#[derive(Debug, Clone)]
+pub enum JobOutcome {
+    Done { sum_nll: f64, sum_correct: f64, batch_size: usize, version: u64 },
+    Failed { status: u16, msg: String },
+}
+
+#[derive(Debug)]
+pub struct EvalJob {
+    pub model: String,
+    pub input: JobInput,
+    pub targets: Vec<i32>,
+    pub resp: std::sync::mpsc::SyncSender<JobOutcome>,
+    /// For the queue-wait histogram only — never reaches results.
+    pub enqueued_at: std::time::Instant,
+}
+
+/// Why a push was refused (maps to 429 / 503 respectively).
+#[derive(Debug)]
+pub enum PushError {
+    Full(EvalJob),
+    Closed(EvalJob),
+}
+
+struct Inner {
+    q: VecDeque<EvalJob>,
+    closed: bool,
+}
+
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    max_queue: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(max_queue: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            max_queue: max_queue.max(1),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Admit a job, or hand it back if the queue is full / closed.
+    pub fn push(&self, job: EvalJob) -> Result<(), PushError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(job));
+        }
+        if inner.q.len() >= self.max_queue {
+            return Err(PushError::Full(job));
+        }
+        inner.q.push_back(job);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Stop admitting; wake the batcher so it can drain and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Take the next macro-batch: up to `max_batch` jobs for the model
+    /// at the front of the queue, in arrival order. Jobs for other
+    /// models keep their relative order for the next call. Blocks while
+    /// empty; once non-empty, waits up to `linger` for stragglers to
+    /// coalesce. Returns `None` only when closed *and* drained.
+    ///
+    /// Single-consumer: exactly one batcher thread calls this (the
+    /// queue never shrinks under us between the waits below).
+    pub fn pop_batch(&self, max_batch: usize, linger: Duration) -> Option<Vec<EvalJob>> {
+        let max_batch = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        while inner.q.is_empty() {
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+        if !linger.is_zero() && !inner.closed {
+            // deadline math is scheduling-only and never reaches result
+            // bits, hence the determinism-lint exemption
+            #[allow(clippy::disallowed_methods)]
+            let deadline = std::time::Instant::now() + linger;
+            loop {
+                let head = &inner.q.front().expect("queue non-empty").model;
+                let ready = inner.q.iter().filter(|j| &j.model == head).count();
+                if ready >= max_batch || inner.closed {
+                    break;
+                }
+                #[allow(clippy::disallowed_methods)]
+                let now = std::time::Instant::now();
+                let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+                else {
+                    break;
+                };
+                let (guard, timeout) = self.not_empty.wait_timeout(inner, left).unwrap();
+                inner = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let head = inner.q.front().expect("queue non-empty").model.clone();
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(inner.q.len());
+        while let Some(job) = inner.q.pop_front() {
+            if batch.len() < max_batch && job.model == head {
+                batch.push(job);
+            } else {
+                rest.push_back(job);
+            }
+        }
+        inner.q = rest;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn job(model: &str, tag: i32) -> EvalJob {
+        // outcome channel unused here: queue tests never run a batcher
+        let (tx, _rx) = sync_channel(1);
+        #[allow(clippy::disallowed_methods)]
+        let now = std::time::Instant::now();
+        EvalJob {
+            model: model.to_string(),
+            input: JobInput::Tokens(vec![tag]),
+            targets: vec![tag],
+            resp: tx,
+            enqueued_at: now,
+        }
+    }
+
+    fn tags(batch: &[EvalJob]) -> Vec<i32> {
+        batch.iter().map(|j| j.targets[0]).collect()
+    }
+
+    #[test]
+    fn fifo_order_within_and_across_batches() {
+        let q = AdmissionQueue::new(16);
+        for i in 0..5 {
+            q.push(job("a", i)).unwrap();
+        }
+        let b1 = q.pop_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(tags(&b1), vec![0, 1, 2]);
+        let b2 = q.pop_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(tags(&b2), vec![3, 4]);
+    }
+
+    #[test]
+    fn batches_split_by_model_preserving_order() {
+        let q = AdmissionQueue::new(16);
+        q.push(job("a", 0)).unwrap();
+        q.push(job("b", 1)).unwrap();
+        q.push(job("a", 2)).unwrap();
+        q.push(job("b", 3)).unwrap();
+        let b1 = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(tags(&b1), vec![0, 2]); // both "a" jobs, arrival order
+        let b2 = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(tags(&b2), vec![1, 3]); // "b" kept its relative order
+    }
+
+    #[test]
+    fn push_bounded_then_accepts_after_drain() {
+        let q = AdmissionQueue::new(2);
+        q.push(job("a", 0)).unwrap();
+        q.push(job("a", 1)).unwrap();
+        match q.push(job("a", 2)) {
+            Err(PushError::Full(j)) => assert_eq!(j.targets[0], 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+        let _ = q.pop_batch(8, Duration::ZERO).unwrap();
+        q.push(job("a", 3)).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_none_and_rejects_pushes() {
+        let q = AdmissionQueue::new(8);
+        q.push(job("a", 0)).unwrap();
+        q.close();
+        match q.push(job("a", 1)) {
+            Err(PushError::Closed(_)) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        let b = q.pop_batch(8, Duration::from_millis(50)).unwrap();
+        assert_eq!(tags(&b), vec![0]);
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn pop_blocks_until_push_across_threads() {
+        let q = AdmissionQueue::new(8);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| q.pop_batch(4, Duration::from_millis(20)));
+            std::thread::sleep(Duration::from_millis(30));
+            q.push(job("a", 7)).unwrap();
+            let got = consumer.join().unwrap().unwrap();
+            assert_eq!(tags(&got), vec![7]);
+        });
+    }
+
+    #[test]
+    fn linger_coalesces_late_arrivals() {
+        let q = AdmissionQueue::new(8);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| q.pop_batch(4, Duration::from_millis(300)));
+            std::thread::sleep(Duration::from_millis(10));
+            for i in 0..4 {
+                q.push(job("a", i)).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let got = consumer.join().unwrap().unwrap();
+            // all four arrived within the linger window ⇒ one batch
+            assert_eq!(tags(&got), vec![0, 1, 2, 3]);
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Model registry: named, atomically swappable parameter snapshots.
+//!
+//! Each served model keeps two things: the pristine fp32 weights it
+//! was loaded (or uploaded) with, and the *served* snapshot — an
+//! `Arc<ServedState>` behind an `RwLock`. Eval batches clone the Arc
+//! (a pointer copy) and run against an immutable snapshot, so an
+//! online `/reencode` swap never blocks or torments in-flight work:
+//! requests see wholly-pre-swap or wholly-post-swap weights, nothing
+//! in between. Re-encodes always fit on the pristine fp32 copy —
+//! re-quantizing a dequantized model is generation loss.
+//!
+//! The registry itself is append-only (models are added by manifest
+//! load and `/v1/quantize`, never removed), which keeps id lookups
+//! race-free without generation counters.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::quantize::scheme_bytes;
+use crate::model::config::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::quant::scheme::QuantSpec;
+use crate::runtime::manifest::Manifest;
+
+/// One immutable published snapshot of a served model.
+#[derive(Debug)]
+pub struct ServedState {
+    pub params: Arc<ParamStore>,
+    /// Canonical `QuantSpec` string ("none" for raw fp32).
+    pub scheme: String,
+    /// Exact storage accounting under `scheme`.
+    pub bytes: u64,
+    /// Total squared reconstruction error vs the fp32 weights.
+    pub sq_error: f64,
+    /// Bumped on every swap; echoed in eval responses so clients can
+    /// attribute each result to a snapshot.
+    pub version: u64,
+}
+
+#[derive(Debug)]
+pub struct ServedModel {
+    pub meta: ModelMeta,
+    /// Pristine fp32 weights — the source every re-encode fits on.
+    pub fp: Arc<ParamStore>,
+    /// fp32 storage bytes (the compression-ratio denominator).
+    pub fp_bytes: u64,
+    state: RwLock<Arc<ServedState>>,
+}
+
+impl ServedModel {
+    pub fn new(meta: ModelMeta, fp: Arc<ParamStore>, fp_bytes: u64, state: ServedState) -> Self {
+        ServedModel { meta, fp, fp_bytes, state: RwLock::new(Arc::new(state)) }
+    }
+
+    /// The current snapshot (pointer clone; holds no lock afterwards).
+    pub fn snapshot(&self) -> Arc<ServedState> {
+        self.state.read().unwrap().clone()
+    }
+
+    /// Atomically publish a new snapshot; returns its version.
+    pub fn swap(&self, params: ParamStore, scheme: String, bytes: u64, sq_error: f64) -> u64 {
+        let mut guard = self.state.write().unwrap();
+        let version = guard.version + 1;
+        *guard = Arc::new(ServedState {
+            params: Arc::new(params),
+            scheme,
+            bytes,
+            sq_error,
+            version,
+        });
+        version
+    }
+}
+
+pub struct Registry {
+    models: RwLock<BTreeMap<String, Arc<ServedModel>>>,
+}
+
+impl Registry {
+    /// Load every manifest model's init params and serve them as fp32
+    /// (`scheme: "none"`, version 1).
+    pub fn from_manifest(manifest: &Manifest) -> Result<Registry> {
+        let mut models = BTreeMap::new();
+        for (name, meta) in &manifest.models {
+            let params = ParamStore::load_qnp1(&manifest.init_path(meta))
+                .with_context(|| format!("loading init params for {name}"))?;
+            params.check_against(meta)?;
+            let fp = Arc::new(params);
+            let fp_bytes = scheme_bytes(meta, &QuantSpec::None);
+            let state = ServedState {
+                params: fp.clone(), // served == pristine until a swap
+                scheme: QuantSpec::None.to_string(),
+                bytes: fp_bytes,
+                sq_error: 0.0,
+                version: 1,
+            };
+            models.insert(
+                name.clone(),
+                Arc::new(ServedModel::new(meta.clone(), fp, fp_bytes, state)),
+            );
+        }
+        Ok(Registry { models: RwLock::new(models) })
+    }
+
+    #[cfg(test)]
+    pub fn empty() -> Registry {
+        Registry { models: RwLock::new(BTreeMap::new()) }
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<ServedModel>> {
+        self.models.read().unwrap().get(id).cloned()
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Register a new id; `Err` (⇒ 409) if it already exists. The check
+    /// and insert are one critical section, so two concurrent uploads
+    /// of the same id cannot both win.
+    pub fn insert_new(&self, id: &str, model: ServedModel) -> Result<(), ()> {
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(id) {
+            return Err(());
+        }
+        models.insert(id.to_string(), Arc::new(model));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tensor::Tensor;
+
+    fn tiny_meta() -> ModelMeta {
+        // metas in unit tests only need params/name; use the real
+        // fixture loader in integration tests instead
+        crate::model::config::ModelMeta {
+            name: "m".into(),
+            task: "lm".into(),
+            n_layers: 1,
+            batch: 1,
+            seq_len: 2,
+            tokens_shape: vec![1, 2],
+            targets_shape: vec![1, 2],
+            vocab: 4,
+            n_classes: 0,
+            params: vec![],
+            entries: vec![],
+            init_file: "init.qnp1".into(),
+        }
+    }
+
+    fn store() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("w", Tensor::from_vec(&[2], vec![1.0, 2.0]));
+        s
+    }
+
+    #[test]
+    fn swap_bumps_version_and_old_snapshots_stay_valid() {
+        let fp = Arc::new(store());
+        let state = ServedState {
+            params: fp.clone(),
+            scheme: "none".into(),
+            bytes: 8,
+            sq_error: 0.0,
+            version: 1,
+        };
+        let m = ServedModel::new(tiny_meta(), fp, 8, state);
+        let before = m.snapshot();
+        let v2 = m.swap(store(), "int8_tensor".into(), 2, 0.5);
+        assert_eq!(v2, 2);
+        let after = m.snapshot();
+        assert_eq!(before.version, 1); // old Arc still readable
+        assert_eq!(before.scheme, "none");
+        assert_eq!(after.version, 2);
+        assert_eq!(after.scheme, "int8_tensor");
+        assert_eq!(m.swap(store(), "none".into(), 8, 0.0), 3);
+    }
+
+    #[test]
+    fn insert_new_rejects_duplicates() {
+        let reg = Registry::empty();
+        let mk = || {
+            let fp = Arc::new(store());
+            let st = ServedState {
+                params: fp.clone(),
+                scheme: "none".into(),
+                bytes: 8,
+                sq_error: 0.0,
+                version: 1,
+            };
+            ServedModel::new(tiny_meta(), fp, 8, st)
+        };
+        assert!(reg.insert_new("a", mk()).is_ok());
+        assert!(reg.insert_new("a", mk()).is_err());
+        assert_eq!(reg.ids(), vec!["a".to_string()]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("b").is_none());
+    }
+}

@@ -1,0 +1,83 @@
+//! URL routing for the `qn serve` API surface.
+//!
+//! Five routes, one dynamic segment — a hand-matched prefix tree beats
+//! a table-driven router at this size and keeps 405-vs-404 semantics
+//! explicit (wrong method on a known path is 405, unknown path is 404).
+
+/// A successfully matched route; dynamic segments are extracted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteMatch {
+    /// `POST /v1/eval`
+    Eval,
+    /// `POST /v1/quantize`
+    Quantize,
+    /// `POST /v1/models/{id}/reencode`
+    Reencode(String),
+    /// `GET /v1/models`
+    Models,
+    /// `GET /v1/models/{id}`
+    ModelInfo(String),
+    /// `GET /v1/stats`
+    Stats,
+}
+
+/// Match a method + path to a route, or the HTTP status to answer
+/// with (404 unknown path, 405 known path / wrong method).
+pub fn route(method: &str, path: &str) -> Result<RouteMatch, u16> {
+    let get = method == "GET";
+    let post = method == "POST";
+    let only = |ok: bool, m: RouteMatch| if ok { Ok(m) } else { Err(405) };
+    match path {
+        "/v1/eval" => only(post, RouteMatch::Eval),
+        "/v1/quantize" => only(post, RouteMatch::Quantize),
+        "/v1/models" => only(get, RouteMatch::Models),
+        "/v1/stats" => only(get, RouteMatch::Stats),
+        _ => {
+            if let Some(rest) = path.strip_prefix("/v1/models/") {
+                if let Some(id) = rest.strip_suffix("/reencode") {
+                    if !id.is_empty() && !id.contains('/') {
+                        return only(post, RouteMatch::Reencode(id.to_string()));
+                    }
+                } else if !rest.is_empty() && !rest.contains('/') {
+                    return only(get, RouteMatch::ModelInfo(rest.to_string()));
+                }
+            }
+            Err(404)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_routes() {
+        assert_eq!(route("POST", "/v1/eval"), Ok(RouteMatch::Eval));
+        assert_eq!(route("POST", "/v1/quantize"), Ok(RouteMatch::Quantize));
+        assert_eq!(route("GET", "/v1/models"), Ok(RouteMatch::Models));
+        assert_eq!(route("GET", "/v1/stats"), Ok(RouteMatch::Stats));
+    }
+
+    #[test]
+    fn dynamic_routes() {
+        assert_eq!(route("GET", "/v1/models/lm_tiny"), Ok(RouteMatch::ModelInfo("lm_tiny".into())));
+        assert_eq!(
+            route("POST", "/v1/models/lm_tiny@pq:k=8/reencode"),
+            Ok(RouteMatch::Reencode("lm_tiny@pq:k=8".into()))
+        );
+    }
+
+    #[test]
+    fn wrong_method_is_405_unknown_is_404() {
+        assert_eq!(route("GET", "/v1/eval"), Err(405));
+        assert_eq!(route("POST", "/v1/models"), Err(405));
+        assert_eq!(route("POST", "/v1/models/x"), Err(405));
+        assert_eq!(route("GET", "/v1/models/x/reencode"), Err(405));
+        assert_eq!(route("GET", "/"), Err(404));
+        assert_eq!(route("GET", "/v1/models/"), Err(404));
+        assert_eq!(route("POST", "/v1/models//reencode"), Err(404));
+        assert_eq!(route("GET", "/v1/models/a/b"), Err(404));
+        assert_eq!(route("DELETE", "/v1/eval"), Err(405));
+    }
+}

@@ -4,6 +4,17 @@
 //! unavailable; this module is the project's JSON substrate. It supports
 //! the full JSON grammar (objects, arrays, strings with escapes, numbers,
 //! bools, null) which is all the manifest/config files need.
+//!
+//! Two access styles:
+//! - tree: [`Json::parse`] + [`Json::get`]/[`Json::get_path`];
+//! - lazy: [`path_value`]/[`path_str`]/[`path_f64`] scan the raw bytes
+//!   and materialize only the value addressed by an `"a.b[2].c"` path,
+//!   skipping (not building) everything else — the cheap way for
+//!   request handlers to pluck a small field out of a large body.
+//!
+//! Nesting depth is capped ([`MAX_DEPTH`]) so hostile bodies cannot
+//! overflow the stack, and the lazy skipper is iterative for the same
+//! reason.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -20,9 +31,13 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum object/array nesting [`Json::parse`] and the lazy path
+/// scanners accept. Deeper documents are rejected, not recursed into.
+pub const MAX_DEPTH: usize = 512;
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser::new(s);
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -73,6 +88,27 @@ impl Json {
         static NULL: Json = Json::Null;
         self.as_obj().and_then(|m| m.get(key)).unwrap_or(&NULL)
     }
+    /// Navigate a parsed tree by an `"a.b[2].c"`-style path.
+    /// `Json::Null` for anything missing or a malformed path — the same
+    /// total contract as [`Json::get`].
+    pub fn get_path(&self, path: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        let Ok(steps) = parse_path(path) else {
+            return &NULL;
+        };
+        let mut cur = self;
+        for s in &steps {
+            let next = match s {
+                Step::Key(k) => cur.as_obj().and_then(|m| m.get(*k)),
+                Step::Index(n) => cur.as_arr().and_then(|a| a.get(*n)),
+            };
+            match next {
+                Some(v) => cur = v,
+                None => return &NULL,
+            }
+        }
+        cur
+    }
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -101,12 +137,103 @@ impl fmt::Display for JsonError {
 }
 impl std::error::Error for JsonError {}
 
+// ----------------------------------------------------------- lazy paths ---
+
+/// One step of an `"a.b[2].c"` path: a key lookup or an array index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Step<'a> {
+    Key(&'a str),
+    Index(usize),
+}
+
+/// Parse `"a.b[2].c"` into steps. Keys are any run of bytes other than
+/// `.`/`[`; indices are `[<digits>]` and may chain (`"m[0][1]"`, or
+/// `"[2]"` when the document root is an array).
+fn parse_path(path: &str) -> Result<Vec<Step<'_>>, JsonError> {
+    let perr = |msg: &str, pos: usize| JsonError { msg: format!("bad path: {msg}"), pos };
+    let b = path.as_bytes();
+    let mut steps = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'[' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j == start || b.get(j) != Some(&b']') {
+                return Err(perr("expected [<digits>]", i));
+            }
+            let n = path[start..j].parse().map_err(|_| perr("index out of range", start))?;
+            steps.push(Step::Index(n));
+            i = j + 1;
+        } else {
+            let start = i;
+            while i < b.len() && b[i] != b'.' && b[i] != b'[' {
+                i += 1;
+            }
+            if i == start {
+                return Err(perr("empty key", i));
+            }
+            steps.push(Step::Key(&path[start..i]));
+        }
+        // a '.' separates this step from a following *named* key
+        if i < b.len() && b[i] == b'.' {
+            i += 1;
+            if i == b.len() || b[i] == b'.' || b[i] == b'[' {
+                return Err(perr("empty key", i));
+            }
+        }
+    }
+    if steps.is_empty() {
+        return Err(perr("empty path", 0));
+    }
+    Ok(steps)
+}
+
+/// Lazily extract the value at `path` without building the full tree:
+/// scan the bytes, skip every value the path does not address, and
+/// parse only the target (mik-sdk ADR-002 measured ~33x for partial
+/// reads of large payloads). `Ok(None)` when the path is absent.
+/// Skipped regions get bracket/string-level validation only.
+pub fn path_value(src: &str, path: &str) -> Result<Option<Json>, JsonError> {
+    let steps = parse_path(path)?;
+    let mut p = Parser::new(src);
+    p.skip_ws();
+    if !p.seek(&steps)? {
+        return Ok(None);
+    }
+    Ok(Some(p.value()?))
+}
+
+/// Lazy scan for a string at `path`; `None` if absent, mistyped, or
+/// the document is malformed.
+pub fn path_str(src: &str, path: &str) -> Option<String> {
+    match path_value(src, path) {
+        Ok(Some(Json::Str(s))) => Some(s),
+        _ => None,
+    }
+}
+
+/// Lazy scan for a number at `path`; `None` if absent, mistyped, or
+/// the document is malformed.
+pub fn path_f64(src: &str, path: &str) -> Option<f64> {
+    match path_value(src, path) {
+        Ok(Some(Json::Num(n))) => Some(n),
+        _ => None,
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { b: s.as_bytes(), i: 0, depth: 0 }
+    }
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
     }
@@ -127,7 +254,11 @@ impl<'a> Parser<'a> {
         }
     }
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = match self.peek().ok_or_else(|| self.err("unexpected end"))? {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
@@ -136,7 +267,9 @@ impl<'a> Parser<'a> {
             b'n' => self.lit("null", Json::Null),
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected byte 0x{c:02x}"))),
-        }
+        }?;
+        self.depth -= 1;
+        Ok(v)
     }
     fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.i..].starts_with(s.as_bytes()) {
@@ -293,6 +426,139 @@ impl<'a> Parser<'a> {
             .map(Json::Num)
             .ok_or_else(|| self.err("bad number"))
     }
+
+    // ------------------------------------------------ lazy skip/seek ---
+
+    /// Advance past one string literal without materializing it.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.eat(b'"')?;
+        loop {
+            match self.peek().ok_or_else(|| self.err("unterminated string"))? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    // skip the escape introducer and the escaped byte;
+                    // \uXXXX needs no care: hex digits are ordinary bytes
+                    self.i += 1;
+                    if self.peek().is_none() {
+                        return Err(self.err("bad escape"));
+                    }
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Advance past one complete JSON value without building a tree.
+    /// Iterative (a depth counter, not recursion) so arbitrarily nested
+    /// hostile input cannot overflow the stack; skipped regions are
+    /// validated only at the bracket/string level.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'"' => self.skip_string(),
+            b'{' | b'[' => {
+                let mut depth = 0usize;
+                loop {
+                    match self.peek().ok_or_else(|| self.err("unterminated value"))? {
+                        b'"' => {
+                            self.skip_string()?;
+                            continue;
+                        }
+                        b'{' | b'[' => depth += 1,
+                        b'}' | b']' => {
+                            depth = depth.checked_sub(1).ok_or_else(|| self.err("unbalanced"))?
+                        }
+                        _ => {}
+                    }
+                    self.i += 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+            b't' => self.lit("true", Json::Null).map(|_| ()),
+            b'f' => self.lit("false", Json::Null).map(|_| ()),
+            b'n' => self.lit("null", Json::Null).map(|_| ()),
+            b'-' | b'0'..=b'9' => self.number().map(|_| ()),
+            c => Err(self.err(&format!("unexpected byte 0x{c:02x}"))),
+        }
+    }
+
+    /// Position the cursor at the start of the value addressed by
+    /// `steps`. `Ok(false)` when any step is absent (wrong container
+    /// kind, missing key, index past the end).
+    fn seek(&mut self, steps: &[Step<'_>]) -> Result<bool, JsonError> {
+        for step in steps {
+            self.skip_ws();
+            match step {
+                Step::Key(k) => {
+                    if self.peek() != Some(b'{') {
+                        return Ok(false);
+                    }
+                    self.i += 1;
+                    loop {
+                        self.skip_ws();
+                        if self.peek() == Some(b'}') {
+                            self.i += 1;
+                            return Ok(false);
+                        }
+                        let key = self.string()?;
+                        self.skip_ws();
+                        self.eat(b':')?;
+                        self.skip_ws();
+                        if key == *k {
+                            break; // cursor is at this key's value
+                        }
+                        self.skip_value()?;
+                        self.skip_ws();
+                        match self.peek() {
+                            Some(b',') => self.i += 1,
+                            Some(b'}') => {
+                                self.i += 1;
+                                return Ok(false);
+                            }
+                            _ => return Err(self.err("expected ',' or '}'")),
+                        }
+                    }
+                }
+                Step::Index(n) => {
+                    if self.peek() != Some(b'[') {
+                        return Ok(false);
+                    }
+                    self.i += 1;
+                    let mut idx = 0usize;
+                    loop {
+                        self.skip_ws();
+                        if self.peek() == Some(b']') {
+                            self.i += 1;
+                            return Ok(false);
+                        }
+                        if idx == *n {
+                            break; // cursor is at element n
+                        }
+                        self.skip_value()?;
+                        self.skip_ws();
+                        match self.peek() {
+                            Some(b',') => {
+                                self.i += 1;
+                                idx += 1;
+                            }
+                            Some(b']') => {
+                                self.i += 1;
+                                return Ok(false);
+                            }
+                            _ => return Err(self.err("expected ',' or ']'")),
+                        }
+                    }
+                }
+            }
+        }
+        Ok(true)
+    }
 }
 
 // ------------------------------------------------------------ serialize ---
@@ -402,5 +668,76 @@ mod tests {
     fn whitespace_tolerant() {
         let v = Json::parse(" {\n\t\"a\" :\r [ ] } ").unwrap();
         assert_eq!(v.get("a"), &Json::Arr(vec![]));
+    }
+
+    const DOC: &str = r#"{
+        "model": "lm_tiny",
+        "big": [0, 1, 2, 3, 4, 5, 6, 7],
+        "nested": {"a": [{"b": 10}, {"b": [20, 21]}], "s": "x\"]y"},
+        "f": -2.5
+    }"#;
+
+    #[test]
+    fn get_path_navigates_tree() {
+        let v = Json::parse(DOC).unwrap();
+        assert_eq!(v.get_path("model").as_str(), Some("lm_tiny"));
+        assert_eq!(v.get_path("nested.a[1].b[0]").as_f64(), Some(20.0));
+        assert_eq!(v.get_path("big[7]").as_f64(), Some(7.0));
+        assert!(v.get_path("nested.a[2]").is_null());
+        assert!(v.get_path("nested.missing").is_null());
+        assert!(v.get_path("model[0]").is_null()); // not an array
+        assert!(v.get_path("").is_null()); // malformed path
+    }
+
+    #[test]
+    fn lazy_path_matches_tree_walk() {
+        let v = Json::parse(DOC).unwrap();
+        for p in ["model", "big[3]", "nested.a[1].b[1]", "nested.s", "f", "nested.a[0]"] {
+            assert_eq!(path_value(DOC, p).unwrap().as_ref(), Some(v.get_path(p)), "path {p}");
+        }
+        assert_eq!(path_value(DOC, "missing").unwrap(), None);
+        assert_eq!(path_value(DOC, "big[8]").unwrap(), None);
+        assert_eq!(path_value(DOC, "model.x").unwrap(), None);
+        assert_eq!(path_str(DOC, "model").as_deref(), Some("lm_tiny"));
+        assert_eq!(path_str(DOC, "f"), None); // type mismatch
+        assert_eq!(path_f64(DOC, "f"), Some(-2.5));
+    }
+
+    #[test]
+    fn lazy_path_skips_strings_with_brackets() {
+        // the "s" value contains '"' and ']' — the skipper must not be
+        // fooled while scanning past it to reach "z"
+        let doc = r#"{"s": "tr\"icky]}", "z": 9}"#;
+        assert_eq!(path_f64(doc, "z"), Some(9.0));
+    }
+
+    #[test]
+    fn lazy_path_array_root() {
+        assert_eq!(path_f64(r#"[5, [6, 7]]"#, "[1][0]"), Some(6.0));
+        assert_eq!(path_value(r#"[5]"#, "[1]").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_paths_rejected() {
+        for p in ["", ".", "a..b", "a.", "a.[0]", "a[", "a[]", "a[x]"] {
+            assert!(path_value(DOC, p).is_err(), "path {p:?} should be malformed");
+        }
+    }
+
+    #[test]
+    fn lazy_path_reports_malformed_doc() {
+        assert!(path_value(r#"{"a": [1, "b": 2}"#, "b").is_err());
+        assert!(path_value(r#"{"a": "#, "b").is_err());
+    }
+
+    #[test]
+    fn depth_capped() {
+        let deep = "[".repeat(MAX_DEPTH + 8) + &"]".repeat(MAX_DEPTH + 8);
+        assert!(Json::parse(&deep).is_err());
+        // the iterative skipper is immune to depth
+        let doc = format!("{{\"deep\": {deep}, \"z\": 1}}");
+        assert_eq!(path_f64(&doc, "z"), Some(1.0));
+        let ok = "[".repeat(64) + "1" + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 }

@@ -1,0 +1,385 @@
+//! `qn serve` integration: real HTTP over localhost against the
+//! checked-in interpreter fixture (tests/fixtures/interp).
+//!
+//! The load-bearing assertions:
+//! - eval responses are bit-identical to a direct `ModelSession` run,
+//!   at any server thread count, alone or coalesced with strangers
+//!   (`selfcheck` additionally asserts it inside the batcher);
+//! - the admission queue answers 429 + `Retry-After` past `max_queue`;
+//! - an online `/reencode` under concurrent eval traffic never 5xxes
+//!   and every response matches either the pre- or post-swap bits.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use quant_noise::coordinator::quantize::reencode_params;
+use quant_noise::model::params::ParamStore;
+use quant_noise::quant::scheme::QuantSpec;
+use quant_noise::runtime::client::{Backend, Runtime};
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
+use quant_noise::runtime::manifest::Manifest;
+use quant_noise::serve::{ServeConfig, Server};
+use quant_noise::util::json::Json;
+use quant_noise::util::rng::Pcg;
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp")
+}
+
+fn cfg_interp() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        backend: Some(Backend::Interp), // immune to QN_BACKEND in the env
+        selfcheck: true,
+        ..ServeConfig::default()
+    }
+}
+
+/// One-shot HTTP exchange: returns (status, headers, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    // evals can sit behind a macro-batch; be generous
+    stream.set_read_timeout(Some(Duration::from_secs(150))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("recv");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw}"));
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    (status, head.to_string(), body.to_string())
+}
+
+fn lm_payload(man: &Manifest) -> (String, Vec<i32>, Vec<i32>) {
+    let meta = man.model("lm_tiny").unwrap();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i + 1) % meta.vocab) as i32).collect();
+    let join = |v: &[i32]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    let body = format!(
+        r#"{{"model": "lm_tiny", "tokens": [{}], "targets": [{}]}}"#,
+        join(&tokens),
+        join(&targets)
+    );
+    (body, tokens, targets)
+}
+
+/// Reference bits from a direct (non-HTTP) session on the same params.
+fn direct_bits(man: &Manifest, params: &ParamStore, tokens: &[i32], targets: &[i32]) -> (u64, u64) {
+    let rt = Runtime::interp();
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let mut sess = ModelSession::with_params(&rt, man, &meta, params).unwrap();
+    let keep = vec![1.0f32; meta.n_layers];
+    let input = BatchInput::Tokens(tokens);
+    let (nll, correct) = sess.eval("eval", &input, targets, &keep).unwrap();
+    (nll.to_bits(), correct.to_bits())
+}
+
+fn response_bits(body: &str) -> (u64, u64) {
+    let j = Json::parse(body).unwrap_or_else(|e| panic!("bad body {body}: {e}"));
+    let nll = j.get("sum_nll").as_f64().unwrap_or_else(|| panic!("no sum_nll in {body}"));
+    let correct = j.get("sum_correct").as_f64().unwrap();
+    (nll.to_bits(), correct.to_bits())
+}
+
+#[test]
+fn eval_bits_match_cli_at_every_thread_count() {
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, tokens, targets) = lm_payload(&man);
+    let meta = man.model("lm_tiny").unwrap();
+    let init = ParamStore::load_qnp1(&man.init_path(meta)).unwrap();
+    let want = direct_bits(&man, &init, &tokens, &targets);
+    for threads in [1usize, 3, 8] {
+        let cfg = ServeConfig { threads, ..cfg_interp() };
+        let server = Server::start(&fixture_dir(), cfg).unwrap();
+        let (status, _, resp) = http(server.addr(), "POST", "/v1/eval", &body);
+        assert_eq!(status, 200, "threads={threads}: {resp}");
+        assert_eq!(response_bits(&resp), want, "threads={threads}: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("version").as_f64(), Some(1.0));
+        server.shutdown();
+    }
+}
+
+#[test]
+fn concurrent_strangers_coalesce_and_keep_their_bits() {
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, tokens, targets) = lm_payload(&man);
+    let meta = man.model("lm_tiny").unwrap();
+    let init = ParamStore::load_qnp1(&man.init_path(meta)).unwrap();
+    let want = direct_bits(&man, &init, &tokens, &targets);
+
+    let cfg = ServeConfig {
+        threads: 2,
+        http_threads: 16,
+        max_batch: 8,
+        linger: Duration::from_millis(200),
+        ..cfg_interp()
+    };
+    let server = Server::start(&fixture_dir(), cfg).unwrap();
+    let addr = server.addr();
+
+    // selfcheck (on) makes the batcher itself assert bit-identity of
+    // every coalesced shard vs a solo run; here we assert the
+    // client-visible half and that coalescing actually happened
+    let mut max_batch = 0.0;
+    for round in 0..5 {
+        std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..8).map(|_| s.spawn(|| http(addr, "POST", "/v1/eval", &body))).collect();
+            for h in handles {
+                let (status, _, resp) = h.join().unwrap();
+                assert_eq!(status, 200, "round {round}: {resp}");
+                assert_eq!(response_bits(&resp), want, "round {round}: {resp}");
+            }
+        });
+        let (status, _, stats) = http(addr, "GET", "/v1/stats", "");
+        assert_eq!(status, 200);
+        let j = Json::parse(&stats).unwrap();
+        max_batch = j.get_path("batching.max_batch").as_f64().unwrap();
+        if max_batch > 1.0 {
+            break;
+        }
+    }
+    assert!(max_batch > 1.0, "8-way concurrent traffic never coalesced (max_batch 1)");
+
+    let (_, _, stats) = http(addr, "GET", "/v1/stats", "");
+    let j = Json::parse(&stats).unwrap();
+    assert!(j.get_path("batching.batches").as_f64().unwrap() >= 1.0);
+    assert_eq!(j.get_path("queue.depth").as_f64(), Some(0.0));
+    assert!(j.get_path("routes.eval.requests").as_f64().unwrap() >= 8.0);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_answers_429_with_retry_after() {
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, _, _) = lm_payload(&man);
+    let cfg = ServeConfig {
+        threads: 1,
+        http_threads: 20,
+        max_batch: 1,
+        max_queue: 1,
+        linger: Duration::ZERO,
+        selfcheck: false,
+        ..cfg_interp()
+    };
+    let server = Server::start(&fixture_dir(), cfg).unwrap();
+    let addr = server.addr();
+
+    let mut saw_429 = false;
+    for _ in 0..10 {
+        let results = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..16).map(|_| s.spawn(|| http(addr, "POST", "/v1/eval", &body))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        for (status, head, resp) in results {
+            match status {
+                200 => {}
+                429 => {
+                    assert!(head.contains("Retry-After: 1"), "{head}");
+                    assert!(resp.contains("queue full"), "{resp}");
+                    saw_429 = true;
+                }
+                other => panic!("unexpected status {other}: {resp}"),
+            }
+        }
+        if saw_429 {
+            break;
+        }
+    }
+    assert!(saw_429, "16-way burst against max_queue=1 never got a 429");
+    let (_, _, stats) = http(addr, "GET", "/v1/stats", "");
+    let j = Json::parse(&stats).unwrap();
+    assert!(j.get("rejected").as_f64().unwrap() >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn online_reencode_under_load_is_atomic_and_5xx_free() {
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, tokens, targets) = lm_payload(&man);
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let init = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let fp_bits = direct_bits(&man, &init, &tokens, &targets);
+    // reproduce what the server's /reencode will publish: same spec,
+    // same seed, fit on the same pristine fp32 weights
+    let spec = QuantSpec::parse("int8").unwrap();
+    let q = reencode_params(&init, &meta, &spec, &mut Pcg::new(17)).unwrap();
+    let q_bits = direct_bits(&man, &q.store, &tokens, &targets);
+    assert_ne!(fp_bits, q_bits, "int8 must change eval bits for this test to bite");
+
+    let cfg = ServeConfig {
+        threads: 2,
+        http_threads: 16,
+        linger: Duration::from_millis(5),
+        ..cfg_interp()
+    };
+    let server = Server::start(&fixture_dir(), cfg).unwrap();
+    let addr = server.addr();
+
+    std::thread::scope(|s| {
+        let hammers: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    for _ in 0..12 {
+                        let (status, _, resp) = http(addr, "POST", "/v1/eval", &body);
+                        assert_eq!(status, 200, "eval during reencode: {resp}");
+                        let bits = response_bits(&resp);
+                        let version = Json::parse(&resp).unwrap().get("version").as_f64().unwrap();
+                        // snapshot atomicity: bits always match the
+                        // version the response claims, never a blend
+                        if version == 1.0 {
+                            assert_eq!(bits, fp_bits, "v1 response, non-fp32 bits: {resp}");
+                        } else {
+                            assert_eq!(version, 2.0, "{resp}");
+                            assert_eq!(bits, q_bits, "v2 response, wrong bits: {resp}");
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        std::thread::sleep(Duration::from_millis(40));
+        let (status, _, resp) = http(
+            addr,
+            "POST",
+            "/v1/models/lm_tiny/reencode",
+            r#"{"scheme": "int8", "seed": 17}"#,
+        );
+        assert_eq!(status, 200, "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("version").as_f64(), Some(2.0), "{resp}");
+
+        for h in hammers {
+            h.join().unwrap();
+        }
+    });
+
+    // steady state after the swap: everyone sees v2 / quantized bits
+    let (status, _, resp) = http(addr, "POST", "/v1/eval", &body);
+    assert_eq!(status, 200);
+    assert_eq!(response_bits(&resp), q_bits);
+    assert_eq!(Json::parse(&resp).unwrap().get("version").as_f64(), Some(2.0));
+
+    let (status, _, info) = http(addr, "GET", "/v1/models/lm_tiny", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&info).unwrap();
+    assert_eq!(j.get("version").as_f64(), Some(2.0));
+    assert!(j.get("scheme").as_str().unwrap().starts_with("int8"), "{info}");
+    let bytes = j.get("storage_bytes").as_f64().unwrap();
+    let fp_bytes = j.get("fp32_bytes").as_f64().unwrap();
+    assert!(bytes < fp_bytes, "int8 must shrink storage: {info}");
+    assert!(j.get("sq_error").as_f64().unwrap() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn quantize_on_upload_publishes_derived_model() {
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, tokens, targets) = lm_payload(&man);
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let init = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let spec = QuantSpec::parse("int8").unwrap();
+    let q = reencode_params(&init, &meta, &spec, &mut Pcg::new(17)).unwrap();
+    let q_bits = direct_bits(&man, &q.store, &tokens, &targets);
+
+    let server = Server::start(&fixture_dir(), cfg_interp()).unwrap();
+    let addr = server.addr();
+
+    let req = r#"{"model": "lm_tiny", "scheme": "int8", "id": "lm8", "seed": 17}"#;
+    let (status, _, resp) = http(addr, "POST", "/v1/quantize", req);
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("id").as_str(), Some("lm8"));
+    assert!(j.get("compression").as_f64().unwrap() > 1.0, "{resp}");
+
+    // same id again ⇒ conflict
+    let (status, _, resp) = http(addr, "POST", "/v1/quantize", req);
+    assert_eq!(status, 409, "{resp}");
+
+    // the derived model evaluates with the locally-reproduced bits
+    // while the source keeps serving fp32
+    let derived_body = body.replace("\"lm_tiny\"", "\"lm8\"");
+    let (status, _, resp) = http(addr, "POST", "/v1/eval", &derived_body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(response_bits(&resp), q_bits, "{resp}");
+    let fp_bits = direct_bits(&man, &init, &tokens, &targets);
+    let (_, _, resp) = http(addr, "POST", "/v1/eval", &body);
+    assert_eq!(response_bits(&resp), fp_bits);
+
+    let (status, _, listing) = http(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&listing).unwrap();
+    let models = j.get("models").as_arr().unwrap();
+    assert_eq!(models.len(), 2, "{listing}");
+    assert!(j.get_path("plan_cache.hits").as_f64().is_some(), "{listing}");
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_stub_backend_degrades_to_503_not_panic() {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        backend: Some(Backend::Pjrt),
+        ..ServeConfig::default()
+    };
+    let server = Server::start(&fixture_dir(), cfg).unwrap();
+    let addr = server.addr();
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, _, _) = lm_payload(&man);
+    for _ in 0..2 {
+        let (status, _, resp) = http(addr, "POST", "/v1/eval", &body);
+        assert_eq!(status, 503, "{resp}");
+        assert!(resp.contains("unavailable"), "{resp}");
+    }
+    // the control plane stays healthy while the data plane declines
+    let (status, _, _) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    let (status, _, _) = http(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn protocol_errors_are_typed_not_fatal() {
+    let server = Server::start(&fixture_dir(), cfg_interp()).unwrap();
+    let addr = server.addr();
+    let (status, _, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    let (status, _, _) = http(addr, "GET", "/v1/eval", "");
+    assert_eq!(status, 405);
+    let (status, _, resp) = http(addr, "POST", "/v1/eval", "{not json");
+    assert_eq!(status, 400, "{resp}");
+    let (status, _, resp) = http(addr, "POST", "/v1/eval", r#"{"model": "ghost"}"#);
+    assert_eq!(status, 404, "{resp}");
+    let (status, _, resp) =
+        http(addr, "POST", "/v1/quantize", r#"{"model": "lm_tiny", "scheme": "zap"}"#);
+    assert_eq!(status, 400, "{resp}");
+    let (status, _, resp) = http(
+        addr,
+        "POST",
+        "/v1/eval",
+        r#"{"model": "lm_tiny", "tokens": [1], "targets": [2]}"#,
+    );
+    assert_eq!(status, 400, "wrong token count must 400: {resp}");
+    // fp32 model + bodyless reencode: nothing to refresh
+    let (status, _, resp) = http(addr, "POST", "/v1/models/lm_tiny/reencode", "");
+    assert_eq!(status, 400, "{resp}");
+    // the server survives all of the above
+    let man = Manifest::load(&fixture_dir()).unwrap();
+    let (body, _, _) = lm_payload(&man);
+    let (status, _, _) = http(addr, "POST", "/v1/eval", &body);
+    assert_eq!(status, 200);
+    server.shutdown();
+}

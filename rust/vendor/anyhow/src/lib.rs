@@ -6,7 +6,12 @@
 //! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
 //! Errors carry a display message plus an optional chained cause;
 //! `{:#}` formatting prints the full chain like upstream anyhow.
+//! Errors built from a concrete `std::error::Error` type (via `?` or
+//! [`Error::new`]) additionally keep the original value as a typed
+//! payload, so [`Error::downcast_ref`] works through `.context(...)`
+//! wrapping like upstream.
 
+use std::any::Any;
 use std::fmt;
 
 /// `Result<T, anyhow::Error>` with the same default-parameter shape as
@@ -19,17 +24,38 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     msg: String,
     cause: Option<Box<Error>>,
+    // The concrete error value this node was built from, when known.
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), cause: None }
+        Error { msg: message.to_string(), cause: None, payload: None }
+    }
+
+    /// Build an error from a concrete error value, keeping it as a
+    /// typed payload retrievable with [`Error::downcast_ref`].
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error::from(e)
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+        Error { msg: context.to_string(), cause: Some(Box::new(self)), payload: None }
+    }
+
+    /// The first payload in the chain (outermost first) that is a `T`.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.chain().find_map(|e| e.payload.as_ref()?.downcast_ref::<T>())
+    }
+
+    /// Whether any payload in the chain is a `T`.
+    pub fn is<T: Any>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 
     /// Iterate the chain from the outermost message to the root cause.
@@ -109,6 +135,8 @@ where
         while let Some(msg) = stack.pop() {
             err = err.context(msg);
         }
+        // The outermost node keeps the concrete value for downcasting.
+        err.payload = Some(Box::new(e));
         err
     }
 }
@@ -229,5 +257,30 @@ mod tests {
         let e = Error::msg("root").context("mid").context("outer");
         assert_eq!(e.root_cause().to_string(), "root");
         assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn downcast_ref_finds_payload_through_context() {
+        let e = Error::new(io_err());
+        let kind = e.downcast_ref::<std::io::Error>().unwrap().kind();
+        assert_eq!(kind, std::io::ErrorKind::NotFound);
+        let wrapped = e.context("loading model").context("serving request");
+        assert!(wrapped.is::<std::io::Error>());
+        assert_eq!(
+            wrapped.downcast_ref::<std::io::Error>().unwrap().to_string(),
+            "file missing"
+        );
+        assert!(!wrapped.is::<std::fmt::Error>());
+    }
+
+    #[test]
+    fn question_mark_preserves_payload() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff]).context("decoding")?;
+            Ok(s)
+        }
+        let e = f().unwrap_err();
+        assert!(e.is::<std::string::FromUtf8Error>());
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 }

@@ -30,7 +30,10 @@ lint-plan:
 	cd rust && cargo run --release --bin qn -- lint-plan \
 		tests/fixtures/interp/lm_tiny.grad_mix.hlo.txt \
 		tests/fixtures/interp/lm_tiny.eval.hlo.txt \
-		tests/fixtures/interp/threefry_pin.hlo.txt
+		tests/fixtures/interp/img_tiny.grad_mix.hlo.txt \
+		tests/fixtures/interp/img_tiny.eval.hlo.txt \
+		tests/fixtures/interp/threefry_pin.hlo.txt \
+		tests/fixtures/interp/window_pin.hlo.txt
 
 # Per-step grad_mix/eval latency of the planned interpreter vs the
 # tree-walking evaluator on the checked-in fixture (no Python, no
@@ -57,7 +60,7 @@ artifacts:
 
 fixture:
 	cd python && QN_KERNEL_IMPL=jnp $(PY) -m compile.aot \
-		--configs configs/lm_tiny.json \
+		--configs configs/lm_tiny.json configs/img_tiny.json \
 		--entries grad_mix eval \
 		--out-dir ../rust/tests/fixtures/interp
 

@@ -1,9 +1,18 @@
 //! Vision pipeline (EfficientNet/ImageNet stand-in): train MicroConv on
 //! the procedural pattern dataset with Quant-Noise on conv weights
-//! (block sizes 4 for 1×1, 9 for dw3×3 per the paper), iPQ-quantize,
+//! (block sizes 4 for 1×1, 9 for dw3×3 per the paper; override every
+//! conv family at once with `pq:...,block.conv=9`), iPQ-quantize,
 //! report Table-1-shaped rows.
 //!
-//!     make artifacts && cargo run --release --example vision_quantnoise
+//! Runs out of the box on the checked-in interpreter fixture — the
+//! interpreter executes the ConvNet op set (convolution, reverse,
+//! reduce-window) directly:
+//!
+//!     cargo run --release --example vision_quantnoise
+//!
+//! With `make artifacts` the full artifact zoo is used instead.
+
+use std::path::Path;
 
 use anyhow::Result;
 use quant_noise::bench_harness::common::Workbench;
@@ -18,7 +27,19 @@ fn main() -> Result<()> {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(1.0);
-    let mut wb = Workbench::new(std::path::Path::new("artifacts"))?;
+    let artifacts = Path::new("artifacts");
+    let mut wb = if artifacts.join("manifest.json").exists() {
+        Workbench::new(artifacts)?
+    } else {
+        // checked-in interpreter fixture: zero-setup runs, works from
+        // the repo root or from rust/
+        let fixture = ["rust/tests/fixtures/interp", "tests/fixtures/interp"]
+            .into_iter()
+            .map(Path::new)
+            .find(|d| d.join("manifest.json").exists())
+            .ok_or_else(|| anyhow::anyhow!("no artifacts/ and no checked-in fixture found"))?;
+        Workbench::at(fixture, Path::new("target/qn-example-cache"))?
+    };
     wb.step_scale = scale;
     e2e::run(&wb, "img_tiny", None)
 }

@@ -2,8 +2,9 @@
 //! the tree-walking reference evaluator vs the planned in-place
 //! executor (1 thread / all cores) with and without loop fusion
 //! (counted `while` + native threefry), plus deterministic
-//! batch-sharded eval throughput and fused-reduce shard scaling. Runs
-//! with no artifacts and no Python.
+//! batch-sharded eval throughput and fused-reduce shard scaling, plus
+//! the `img_tiny` conv grad/eval rows (`conv[direct]` + fused
+//! reduce-window kernels). Runs with no artifacts and no Python.
 //!
 //! Emits a machine-readable `BENCH_interp.json` (path override:
 //! `QN_BENCH_JSON`) so the perf trajectory is recorded per commit —
@@ -130,6 +131,52 @@ fn main() {
         eval_plan.run_entry(eval_args.clone(), 1).unwrap()
     });
 
+    // img_tiny: the conv forward plus both conv grad forms
+    // (reversed-kernel input grad, batch-group weight grad) through
+    // the same three executors
+    let imeta = man.model("img_tiny").unwrap().clone();
+    let iparams = ParamStore::load_qnp1(&man.init_path(&imeta)).unwrap();
+    let n_px: usize = imeta.tokens_shape.iter().product();
+    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
+    let ilabels: Vec<i32> =
+        (0..imeta.batch).map(|i| (i % imeta.n_classes) as i32).collect();
+    let ikeep = vec![1.0f32; imeta.n_layers];
+    let ipvals: Vec<Value> =
+        iparams.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    let mut ig_args = ipvals.clone();
+    ig_args.extend(iparams.iter().map(|(_, t)| f32v(&t.shape, vec![0.0; t.data.len()])));
+    ig_args.push(f32v(&imeta.tokens_shape, images.clone()));
+    ig_args.push(i32v(&imeta.targets_shape, ilabels.clone()));
+    ig_args.push(f32v(&[ikeep.len()], ikeep.clone()));
+    ig_args.push(f32v(&[], vec![0.1]));
+    ig_args.push(i32v(&[], vec![42]));
+    let mut ie_args = ipvals;
+    ie_args.push(f32v(&imeta.tokens_shape, images));
+    ie_args.push(i32v(&imeta.targets_shape, ilabels));
+    ie_args.push(f32v(&[ikeep.len()], ikeep));
+    let ig_mod = HloModule::parse_file(&man.hlo_path(&imeta, "grad_mix").unwrap()).unwrap();
+    let ie_mod = HloModule::parse_file(&man.hlo_path(&imeta, "eval").unwrap()).unwrap();
+    let ig_plan = Plan::compile(&ig_mod);
+    let ie_plan = Plan::compile(&ie_mod);
+    let ifs = ig_plan.fusion_stats();
+    assert_eq!(ifs.generic_whiles, 0, "fallback storm: an img fixture while failed to fuse");
+    println!("--- img conv step (img_tiny fixture, B={}) ---", imeta.batch);
+    let ig_tree =
+        run(&mut b, "img_grad_tree_walk_ns", "img grad_mix: tree-walk evaluator", &mut || {
+            Interp::new(&ig_mod).run_entry(&ig_args).unwrap()
+        });
+    let ig_1t =
+        run(&mut b, "img_grad_planned_1t_ns", "img grad_mix: planned+fused, 1 thread", &mut || {
+            ig_plan.run_entry(ig_args.clone(), 1).unwrap()
+        });
+    let ig_mt =
+        run(&mut b, "img_grad_planned_mt_ns", "img grad_mix: planned+fused, all cores", &mut || {
+            ig_plan.run_entry(ig_args.clone(), cores).unwrap()
+        });
+    let ie_1t = run(&mut b, "img_eval_planned_1t_ns", "img eval: planned, 1 thread", &mut || {
+        ie_plan.run_entry(ie_args.clone(), 1).unwrap()
+    });
+
     // fused-reduce shard scaling on a synthetic large reduce
     let big_mod = HloModule::parse_str(BIG_REDUCE).unwrap();
     let big_plan = Plan::compile(&big_mod);
@@ -182,9 +229,17 @@ fn main() {
          fused-reduce sharding: {reduce_scaling:.2}x",
         gm_tree / gm_mt
     );
+    println!(
+        "img conv: grad_mix {:.2}x vs tree-walk (1 thread), all-cores {:.2}x, \
+         eval planned {:.1}ms; {} fused windows in the grad plan",
+        ig_tree / ig_1t,
+        ig_tree / ig_mt,
+        ie_1t / 1e6,
+        ifs.fused_windows
+    );
 
     // machine-readable record for the perf trajectory
-    let mut json = String::from("{\n  \"fixture\": \"lm_tiny\",\n");
+    let mut json = String::from("{\n  \"fixture\": \"lm_tiny+img_tiny\",\n");
     json.push_str(&format!("  \"cores\": {cores},\n  \"batch_shards\": {m},\n"));
     json.push_str(&format!(
         "  \"quick\": {quick},\n  \"counted_loops\": {},\n  \"threefry_call_sites\": {},\n",
@@ -199,6 +254,11 @@ fn main() {
     json.push_str(&format!(
         "  \"fuse_speedup_grad_1t\": {fuse_speedup_grad:.3},\n  \
          \"reduce_shard_scaling\": {reduce_scaling:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"img_speedup_grad_1t\": {:.3},\n  \"img_fused_windows\": {},\n",
+        ig_tree / ig_1t,
+        ifs.fused_windows
     ));
     json.push_str(&format!("  \"batch_scaling\": {scaling:.3}\n}}\n"));
     let out = std::env::var("QN_BENCH_JSON").unwrap_or_else(|_| "BENCH_interp.json".into());

@@ -32,11 +32,17 @@ pub struct Workbench {
 
 impl Workbench {
     pub fn new(artifacts: &Path) -> Result<Workbench> {
+        Workbench::at(artifacts, &artifacts.join("cache"))
+    }
+
+    /// Workbench over any manifest directory — e.g. the checked-in
+    /// interpreter fixture (`rust/tests/fixtures/interp`) — with an
+    /// explicit trained-parameter cache location.
+    pub fn at(manifest_dir: &Path, cache_dir: &Path) -> Result<Workbench> {
         let rt = Runtime::cpu()?;
-        let manifest = Manifest::load(artifacts)?;
-        let cache_dir = artifacts.join("cache");
-        std::fs::create_dir_all(&cache_dir)?;
-        Ok(Workbench { rt, manifest, cache_dir, step_scale: 1.0 })
+        let manifest = Manifest::load(manifest_dir)?;
+        std::fs::create_dir_all(cache_dir)?;
+        Ok(Workbench { rt, manifest, cache_dir: cache_dir.to_path_buf(), step_scale: 1.0 })
     }
 
     pub fn scaled(&self, steps: usize) -> usize {

@@ -223,6 +223,13 @@ impl QuantSpec {
 
     /// Resolve this spec against one parameter, yielding a ready-to-run
     /// quantizer (per-structure/manifest block sizes applied here).
+    ///
+    /// Block-override precedence: exact structure match
+    /// (`block.dw3x3=`), then the `conv` family alias covering every
+    /// convolution weight family (`block.conv=` applies to `stem`,
+    /// `conv1x1` and `dw3x3` — Fig. 6b's whole-filter ablation as
+    /// `pq:k=64,block.conv=9`), then the global `d=`/`block=`, then
+    /// the manifest's per-parameter block size.
     pub fn resolve(&self, p: &ParamInfo) -> Box<dyn Quantizer> {
         match self {
             QuantSpec::None => Box::new(NoneQuant),
@@ -232,9 +239,14 @@ impl QuantSpec {
                 Box::new(ScalarQuant { bits: *bits, observer: *observer })
             }
             QuantSpec::Pq(s) => {
+                let family = match p.structure.as_str() {
+                    "stem" | "conv1x1" | "dw3x3" => Some("conv"),
+                    _ => None,
+                };
                 let d = s
                     .block_override
                     .get(&p.structure)
+                    .or_else(|| family.and_then(|f| s.block_override.get(f)))
                     .copied()
                     .or(s.block)
                     .unwrap_or(p.pq_block);
@@ -901,6 +913,31 @@ mod tests {
         let q2 = spec.resolve(&other);
         let expect2 = 32 * (16 * 8) as u64 + 4 * (256 / 8) as u64;
         assert_eq!(q2.storage_bits(&other), expect2);
+    }
+
+    #[test]
+    fn conv_family_alias_resolves_block_overrides() {
+        // Fig. 6b shape: one `block.conv=` knob covers every conv
+        // weight family unless an exact override names it
+        let mut p = PqSpec::new(64);
+        p.block_override.insert("conv".into(), 16);
+        p.block_override.insert("dw3x3".into(), 4);
+        let spec = QuantSpec::Pq(p);
+        for (structure, want_block) in
+            [("stem", 16), ("conv1x1", 16), ("dw3x3", 4), ("cls", 8)]
+        {
+            let mut i = info(256, 16, 16);
+            i.structure = structure.into();
+            let bits = spec.resolve(&i).storage_bits(&i);
+            let expect =
+                32 * (64 * want_block) as u64 + 6 * (256 / want_block) as u64;
+            assert_eq!(bits, expect, "structure {structure}");
+        }
+        // the alias round-trips through the canonical string
+        assert_eq!(
+            QuantSpec::parse("pq:k=64,block.conv=9").unwrap().to_string(),
+            "pq:k=64,block.conv=9"
+        );
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::runtime::interp::ops;
-use crate::runtime::interp::parser::{HloModule, Instr, Op, ScatterDims};
+use crate::runtime::interp::parser::{HloModule, Instr, Op, ScatterDims, WindowDim};
 use crate::runtime::interp::value::{ArrayValue, Buf, Shape, Value};
 
 /// Operand `k` of `ins`, which must be an array.
@@ -134,6 +134,12 @@ impl<'m> Interp<'m> {
                 ensure!(ins.operands.len() == 3, "variadic scatter unsupported");
                 self.scatter(arr(0)?, arr(1)?, arr(2)?, dims, *target)?
             }
+            Op::Convolution(d) => Value::Array(ops::conv(arr(0)?, arr(1)?, d, 1)?),
+            Op::Reverse { dims } => Value::Array(ops::reverse(arr(0)?, dims)?),
+            Op::ReduceWindow { window, comp: target } => {
+                ensure!(ins.operands.len() == 2, "variadic reduce-window unsupported");
+                self.reduce_window(arr(0)?, arr(1)?, window, *target)?
+            }
         })
     }
 
@@ -191,6 +197,37 @@ impl<'m> Interp<'m> {
             ensure!(results.len() == 1, "reduce arity/shape mismatch");
             Ok(results.swap_remove(0))
         }
+    }
+
+    /// `reduce-window`: per output cell, fold the region over in-bounds
+    /// window taps in ascending row-major order; taps that land in
+    /// padding or base-dilation gaps are skipped entirely (exactly
+    /// "padding is init-valued" for any fold with identity init). The
+    /// index geometry lives in [`ops::WindowGeom`], shared with the
+    /// planned executor's fused/generic paths.
+    fn reduce_window(
+        &self,
+        x: &ArrayValue,
+        init: &ArrayValue,
+        window: &[WindowDim],
+        target: usize,
+    ) -> Result<Value> {
+        ensure!(init.dims.is_empty(), "reduce-window init must be scalar");
+        let g = ops::WindowGeom::new(&x.dims, window)?;
+        let (mut oi, mut wi) = g.scratch();
+        let mut out = Buf::with_capacity(init.ty(), g.n);
+        for f in 0..g.n {
+            g.cell_coords(f, &mut oi);
+            let mut acc = Value::Array(init.scalar_at(0));
+            for wf in 0..g.wn {
+                if let Some(xi) = g.tap_index(&oi, wf, &mut wi) {
+                    let val = Value::Array(x.scalar_at(xi));
+                    acc = self.run(target, &[acc, val])?;
+                }
+            }
+            out.push_from(&acc.array()?.buf, 0);
+        }
+        Ok(Value::Array(ArrayValue::new(g.out_dims.clone(), out)?))
     }
 
     /// StableHLO scatter (single input), including the batching dims
@@ -337,6 +374,37 @@ mod tests {
         let out = run(text, &[operand, idx, upd]);
         // index 7 is out of bounds: dropped, not clamped
         assert_eq!(out.array().unwrap().as_f32().unwrap(), &[6.0, 1.0]);
+    }
+
+    #[test]
+    fn conv_and_reverse_through_hlo_text() {
+        // 1-D SAME conv (dim_labels b0f_0io->b0f) over a reversed input:
+        // end-to-end through the parser, hand-checked
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[1,4,1]{2,1,0} parameter(0)\n  \
+                    r.2 = f32[1,4,1]{2,1,0} reverse(x.1), dimensions={1}\n  \
+                    w.3 = f32[3,1,1]{2,1,0} parameter(1)\n  \
+                    ROOT c.4 = f32[1,4,1]{2,1,0} convolution(r.2, w.3), \
+                    window={size=3 pad=1_1}, dim_labels=b0f_0io->b0f\n}\n";
+        let x = f32v(&[1, 4, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = f32v(&[3, 1, 1], vec![1.0, 1.0, 1.0]);
+        let out = run(text, &[x, w]);
+        // reversed input is [4,3,2,1]; SAME box filter sums neighbours
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[7.0, 9.0, 6.0, 3.0]);
+    }
+
+    #[test]
+    fn reduce_window_runs_arbitrary_regions() {
+        // a 4-instruction region (sum of squares) the fused matcher can
+        // never claim: the oracle must fold it via region invocation
+        let text = "HloModule t\n\nsq.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  m.3 = f32[] multiply(b.2, b.2)\n  \
+                    ROOT r.4 = f32[] add(a.1, m.3)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[3]{0} parameter(0)\n  \
+                    z.2 = f32[] constant(0)\n  \
+                    ROOT rw.3 = f32[2]{0} reduce-window(x.1, z.2), \
+                    window={size=2}, to_apply=sq.1\n}\n";
+        let out = run(text, &[f32v(&[3], vec![1.0, 2.0, 3.0])]);
+        assert_eq!(out.array().unwrap().as_f32().unwrap(), &[5.0, 13.0]);
     }
 
     #[test]

@@ -7,14 +7,15 @@
 //! (`rust/tests/fixtures/interp/`). See DESIGN.md §4 for the backend
 //! split, the supported op inventory, and the determinism contract.
 //!
-//! Scope: the op set the tiny *Transformer* models lower to (dot,
-//! elementwise arithmetic and bit ops, reduce, broadcast, reshape,
-//! transpose, slice, concatenate, select, compare, exp/log/rsqrt,
-//! sin/cos, iota, gather/scatter with batching dims, tuples, call,
-//! while, constants). jax's threefry PRNG lowers to plain integer HLO,
-//! so in-graph noise sampling replays exactly. ConvNet artifacts use
-//! convolution ops outside this set and still require a real PJRT
-//! backend; the interpreter reports them as unsupported opcodes.
+//! Scope: the op set the tiny *Transformer and ConvNet* models lower
+//! to (dot, elementwise arithmetic and bit ops, reduce, broadcast,
+//! reshape, transpose, slice, concatenate, select, compare,
+//! exp/log/rsqrt, sin/cos, iota, gather/scatter with batching dims,
+//! general convolution with groups and dilations, reverse,
+//! reduce-window, tuples, call, while, constants). jax's threefry PRNG
+//! lowers to plain integer HLO, so in-graph noise sampling replays
+//! exactly. Opcodes outside this set (e.g. `sort`) are reported as
+//! unsupported at parse time.
 //!
 //! Execution is plan-and-execute: [`Plan::compile`] lowers a parsed
 //! module once into a liveness-annotated instruction plan, and
@@ -85,9 +86,8 @@ mod tests {
     #[test]
     fn unsupported_op_reports_name() {
         let text = "HloModule bad\n\nENTRY main.1 {\n  x.1 = f32[2,2]{1,0} parameter(0)\n  \
-                    ROOT c.2 = f32[2,2]{1,0} convolution(x.1, x.1), \
-                    dim_labels=b01f_01io->b01f\n}\n";
+                    ROOT s.2 = f32[2,2]{1,0} sort(x.1), dimensions={0}\n}\n";
         let err = format!("{:#}", HloModule::parse_str(text).unwrap_err());
-        assert!(err.contains("convolution"), "{err}");
+        assert!(err.contains("sort"), "{err}");
     }
 }

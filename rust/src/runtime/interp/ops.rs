@@ -13,7 +13,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::interp::parser::{BinaryOp, CmpDir, DotDims, GatherDims, ScatterDims, UnaryOp};
+use crate::runtime::interp::parser::{
+    BinaryOp, CmpDir, ConvDims, DotDims, GatherDims, ScatterDims, UnaryOp, WindowDim,
+};
 use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, ElemType};
 
 // -------------------------------------------------------- elementwise ---
@@ -927,6 +929,299 @@ pub(crate) fn scatter_walk(
     Ok(())
 }
 
+// ----------------------------------------- convolution / reduce-window ---
+
+/// Map (output coord, window tap) of one window dimension to an input
+/// coordinate, or `None` when the tap lands in padding or between
+/// base-dilation lattice points. The check order matters: negativity
+/// BEFORE the modulo — `%` on a negative i64 keeps the sign, so a
+/// negative position must be rejected before the lattice test for the
+/// result to agree with the reference mirror's floor semantics.
+pub(crate) fn resolve_window_pos(
+    out_coord: usize,
+    win_coord: usize,
+    w: &WindowDim,
+    in_size: usize,
+) -> Option<usize> {
+    let mut pos =
+        out_coord as i64 * w.stride as i64 + win_coord as i64 * w.window_dilation as i64
+            - w.pad_lo;
+    if pos < 0 {
+        return None;
+    }
+    if w.base_dilation > 1 {
+        if pos % w.base_dilation as i64 != 0 {
+            return None;
+        }
+        pos /= w.base_dilation as i64;
+    }
+    if pos >= in_size as i64 {
+        return None;
+    }
+    Some(pos as usize)
+}
+
+/// Derived index geometry of a `reduce-window` over one operand shape,
+/// shared by every engine (tree-walk reference, fused and generic
+/// planned paths) so the visit-order-defining math exists exactly
+/// once: output cells ascend in flat order; within a cell, window taps
+/// ascend in row-major order over the window dimensions, and taps that
+/// land in padding or dilation gaps are skipped entirely (exactly
+/// "padding is init-valued" for any fold with identity init).
+pub(crate) struct WindowGeom {
+    window: Vec<WindowDim>,
+    x_dims: Vec<usize>,
+    pub out_dims: Vec<usize>,
+    xst: Vec<usize>,
+    ost: Vec<usize>,
+    wst: Vec<usize>,
+    /// window taps per output cell (including out-of-bounds taps)
+    pub wn: usize,
+    /// output cells
+    pub n: usize,
+}
+
+impl WindowGeom {
+    pub fn new(x_dims: &[usize], window: &[WindowDim]) -> Result<WindowGeom> {
+        ensure!(
+            window.len() == x_dims.len(),
+            "reduce-window rank mismatch: window has {} dims, operand has {}",
+            window.len(),
+            x_dims.len()
+        );
+        let out_dims: Vec<usize> =
+            window.iter().zip(x_dims).map(|(w, &n)| w.out_size(n)).collect();
+        let wdims: Vec<usize> = window.iter().map(|w| w.size).collect();
+        Ok(WindowGeom {
+            xst: strides_of(x_dims),
+            ost: strides_of(&out_dims),
+            wst: strides_of(&wdims),
+            wn: wdims.iter().product(),
+            n: out_dims.iter().product(),
+            window: window.to_vec(),
+            x_dims: x_dims.to_vec(),
+            out_dims,
+        })
+    }
+
+    /// Scratch coordinate buffers for `cell_coords` / `tap_index`.
+    pub fn scratch(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![0; self.out_dims.len()], vec![0; self.window.len()])
+    }
+
+    /// Coordinates of output cell `f`.
+    pub fn cell_coords(&self, f: usize, oi: &mut [usize]) {
+        unflatten(f, &self.ost, oi);
+    }
+
+    /// Flat input index of window tap `wf` within the cell at `oi`, or
+    /// `None` when the tap is out of bounds.
+    pub fn tap_index(&self, oi: &[usize], wf: usize, wi: &mut [usize]) -> Option<usize> {
+        unflatten(wf, &self.wst, wi);
+        let mut xi = 0;
+        for d in 0..self.x_dims.len() {
+            let pos = resolve_window_pos(oi[d], wi[d], &self.window[d], self.x_dims[d])?;
+            xi += pos * self.xst[d];
+        }
+        Some(xi)
+    }
+}
+
+fn fold_window<T: Copy + Send + Sync>(
+    g: &WindowGeom,
+    xs: &[T],
+    i0: T,
+    step: impl Fn(T, T) -> Result<T> + Sync,
+    acc_first: bool,
+    workers: usize,
+) -> Result<Vec<T>> {
+    let run = |lo: usize, out: &mut [T]| -> Result<()> {
+        let (mut oi, mut wi) = g.scratch();
+        for (k, slot) in out.iter_mut().enumerate() {
+            g.cell_coords(lo + k, &mut oi);
+            let mut acc = i0;
+            for wf in 0..g.wn {
+                if let Some(xi) = g.tap_index(&oi, wf, &mut wi) {
+                    let v = xs[xi];
+                    acc = if acc_first { step(acc, v)? } else { step(v, acc)? };
+                }
+            }
+            *slot = acc;
+        }
+        Ok(())
+    };
+    let mut out = vec![i0; g.n];
+    let big = g.n.saturating_mul(g.wn) >= ELEM_PAR_MIN;
+    shard_mut(&mut out, if big { workers } else { 1 }, run)?;
+    Ok(out)
+}
+
+/// Fold every output cell of a fused single-binary-op `reduce-window`:
+/// the identical tap visit order and scalar helpers as the generic
+/// region path, so the result is bit-identical to it. Output cells
+/// shard across `workers` scoped threads above [`ELEM_PAR_MIN`] total
+/// taps; each cell's fold is computed by exactly one worker and chunks
+/// merge in ascending order, so the result is also bit-identical at
+/// any worker count (declared per-element in
+/// [`crate::runtime::interp::verify::SHARD_REGISTRY`]).
+pub fn reduce_window_fused(
+    x: &ArrayValue,
+    init: &ArrayValue,
+    window: &[WindowDim],
+    op: BinaryOp,
+    acc_first: bool,
+    workers: usize,
+) -> Result<ArrayValue> {
+    ensure!(init.dims.is_empty(), "reduce-window init must be scalar");
+    let g = WindowGeom::new(&x.dims, window)?;
+    let buf = match (&*x.buf, &*init.buf) {
+        (Buf::F32(xs), Buf::F32(i)) => {
+            Buf::F32(fold_window(&g, xs, i[0], |a, v| f32_bin(op, a, v), acc_first, workers)?)
+        }
+        (Buf::S32(xs), Buf::S32(i)) => {
+            Buf::S32(fold_window(&g, xs, i[0], |a, v| s32_bin(op, a, v), acc_first, workers)?)
+        }
+        (Buf::U32(xs), Buf::U32(i)) => {
+            Buf::U32(fold_window(&g, xs, i[0], |a, v| u32_bin(op, a, v), acc_first, workers)?)
+        }
+        (Buf::Pred(xs), Buf::Pred(i)) => {
+            let f = pred_bin(op)?;
+            Buf::Pred(fold_window(&g, xs, i[0], |a, v| Ok(f(a, v)), acc_first, workers)?)
+        }
+        _ => bail!("reduce-window operand/init type mismatch"),
+    };
+    Ok(ArrayValue { dims: g.out_dims, buf: Arc::new(buf) })
+}
+
+/// General `conv_general_dilated` as jax lowers it: output cells in
+/// ascending flat order; per cell, kernel spatial taps row-major
+/// ascending with the input channel innermost; one f32 accumulator
+/// (every product and add rounds in f32, like the packed dot). Taps
+/// that land in padding or base-dilation gaps are skipped entirely.
+/// Feature and batch groups both use XLA's blocked indexing:
+///
+/// ```text
+/// group       = oc / (O / feature_group_count)
+/// batch_group = oc / (O / batch_group_count)
+/// lhs_batch   = batch_group * (N / batch_group_count) + out_b
+/// ```
+///
+/// Output cells shard across `workers` scoped threads when the total
+/// multiply count reaches [`ELEM_PAR_MIN`]; each cell is computed by
+/// exactly one worker with the same scalar loop it would see serially,
+/// so the result is bit-identical at any worker count (declared
+/// per-element in [`crate::runtime::interp::verify::SHARD_REGISTRY`]).
+/// Validated bit-exactly against the reference mirror on the committed
+/// img_tiny fixture (`tools/qnsim/plan_mirror.py`).
+pub fn conv(
+    lhs: &ArrayValue,
+    rhs: &ArrayValue,
+    d: &ConvDims,
+    workers: usize,
+) -> Result<ArrayValue> {
+    let x = lhs.as_f32()?;
+    let y = rhs.as_f32()?;
+    let nsp = d.lhs_spatial.len();
+    ensure!(
+        d.window.len() == nsp && d.rhs_spatial.len() == nsp && d.out_spatial.len() == nsp,
+        "convolution window/spatial rank mismatch"
+    );
+    ensure!(
+        lhs.dims.len() == nsp + 2 && rhs.dims.len() == nsp + 2,
+        "convolution operand rank mismatch"
+    );
+    let o_size = rhs.dims[d.rhs_output];
+    let i_size = rhs.dims[d.rhs_input];
+    let lb_size = lhs.dims[d.lhs_batch];
+    let (fg, bg) = (d.feature_groups, d.batch_groups);
+    ensure!(
+        o_size % fg == 0 && o_size % bg == 0 && lb_size % bg == 0,
+        "convolution group counts must divide the output-feature and batch dims"
+    );
+    ensure!(
+        lhs.dims[d.lhs_feature] == i_size * fg,
+        "convolution input feature dim {} != kernel input dim {i_size} x {fg} groups",
+        lhs.dims[d.lhs_feature]
+    );
+    let mut out_dims = vec![0usize; nsp + 2];
+    out_dims[d.out_batch] = lb_size / bg;
+    out_dims[d.out_feature] = o_size;
+    for s in 0..nsp {
+        out_dims[d.out_spatial[s]] = d.window[s].out_size(lhs.dims[d.lhs_spatial[s]]);
+    }
+    let lst = strides_of(&lhs.dims);
+    let rst = strides_of(&rhs.dims);
+    let ost = strides_of(&out_dims);
+    let kdims: Vec<usize> = d.rhs_spatial.iter().map(|&s| rhs.dims[s]).collect();
+    let kst = strides_of(&kdims);
+    let kn: usize = kdims.iter().product();
+    let n: usize = out_dims.iter().product();
+    let run = |lo: usize, chunk: &mut [f32]| -> Result<()> {
+        let mut oi = vec![0usize; out_dims.len()];
+        let mut ki = vec![0usize; kdims.len()];
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            unflatten(lo + k, &ost, &mut oi);
+            let oc = oi[d.out_feature];
+            let g = oc / (o_size / fg);
+            let bgi = oc / (o_size / bg);
+            let b = bgi * (lb_size / bg) + oi[d.out_batch];
+            let mut acc = 0.0f32;
+            'tap: for kf in 0..kn {
+                unflatten(kf, &kst, &mut ki);
+                let mut lbase = b * lst[d.lhs_batch];
+                for s in 0..nsp {
+                    match resolve_window_pos(
+                        oi[d.out_spatial[s]],
+                        ki[s],
+                        &d.window[s],
+                        lhs.dims[d.lhs_spatial[s]],
+                    ) {
+                        Some(pos) => lbase += pos * lst[d.lhs_spatial[s]],
+                        None => continue 'tap,
+                    }
+                }
+                let mut rbase = oc * rst[d.rhs_output];
+                for (s, &kc) in ki.iter().enumerate() {
+                    rbase += kc * rst[d.rhs_spatial[s]];
+                }
+                for ic in 0..i_size {
+                    let li = lbase + (g * i_size + ic) * lst[d.lhs_feature];
+                    let ri = rbase + ic * rst[d.rhs_input];
+                    acc += x[li] * y[ri];
+                }
+            }
+            *slot = acc;
+        }
+        Ok(())
+    };
+    let mut out = vec![0f32; n];
+    let big = n.saturating_mul(kn).saturating_mul(i_size) >= ELEM_PAR_MIN;
+    shard_mut(&mut out, if big { workers } else { 1 }, run)?;
+    Ok(ArrayValue { dims: out_dims, buf: Arc::new(Buf::F32(out)) })
+}
+
+/// `reverse`: flip the listed dimensions (a pure index remap; jax
+/// emits it for the input-gradient convolution's kernel).
+pub fn reverse(a: &ArrayValue, dims: &[usize]) -> Result<ArrayValue> {
+    for &dd in dims {
+        ensure!(dd < a.dims.len(), "reverse dimension {dd} out of range for {:?}", a.dims);
+    }
+    let xst = strides_of(&a.dims);
+    let n = a.numel();
+    let mut oi = vec![0usize; a.dims.len()];
+    let mut buf = Buf::with_capacity(a.ty(), n);
+    for f in 0..n {
+        unflatten(f, &xst, &mut oi);
+        let mut xi = 0;
+        for (dd, &c) in oi.iter().enumerate() {
+            let c = if dims.contains(&dd) { a.dims[dd] - 1 - c } else { c };
+            xi += c * xst[dd];
+        }
+        buf.push_from(&a.buf, xi);
+    }
+    Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1102,6 +1397,181 @@ mod tests {
                     .all(|(a, b)| a.to_bits() == b.to_bits());
                 assert!(same, "red={red:?} workers={workers}");
             }
+        }
+    }
+
+    fn wd(
+        size: usize,
+        stride: usize,
+        pad_lo: i64,
+        pad_hi: i64,
+        base_dilation: usize,
+        window_dilation: usize,
+    ) -> WindowDim {
+        WindowDim { size, stride, pad_lo, pad_hi, base_dilation, window_dilation }
+    }
+
+    #[test]
+    fn conv_1d_same_padding() {
+        // b0f_0io->b0f, SAME padding: hand-computed 1-D conv with two
+        // output channels (oc1's kernel is asymmetric so orientation
+        // errors would show)
+        let lhs = f(&[1, 5, 1], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let rhs = f(&[3, 1, 2], vec![1.0, 1.0, 1.0, 2.0, 1.0, 3.0]);
+        let d = ConvDims {
+            window: vec![wd(3, 1, 1, 1, 1, 1)],
+            lhs_batch: 0,
+            lhs_feature: 2,
+            lhs_spatial: vec![1],
+            rhs_input: 1,
+            rhs_output: 2,
+            rhs_spatial: vec![0],
+            out_batch: 0,
+            out_feature: 2,
+            out_spatial: vec![1],
+            feature_groups: 1,
+            batch_groups: 1,
+        };
+        let out = conv(&lhs, &rhs, &d, 1).unwrap();
+        assert_eq!(out.dims, vec![1, 5, 2]);
+        assert_eq!(
+            out.as_f32().unwrap(),
+            &[3.0, 8.0, 6.0, 14.0, 9.0, 20.0, 12.0, 26.0, 9.0, 14.0]
+        );
+    }
+
+    #[test]
+    fn conv_feature_and_batch_groups() {
+        // feature groups: oc 0 reads lhs channels {0,1}, oc 1 reads {2,3}
+        let lhs = f(&[1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let rhs = f(&[1, 2, 2], vec![1.0, 10.0, 2.0, 20.0]);
+        let mut d = ConvDims {
+            window: vec![wd(1, 1, 0, 0, 1, 1)],
+            lhs_batch: 0,
+            lhs_feature: 2,
+            lhs_spatial: vec![1],
+            rhs_input: 1,
+            rhs_output: 2,
+            rhs_spatial: vec![0],
+            out_batch: 0,
+            out_feature: 2,
+            out_spatial: vec![1],
+            feature_groups: 2,
+            batch_groups: 1,
+        };
+        let out = conv(&lhs, &rhs, &d, 1).unwrap();
+        assert_eq!(out.dims, vec![1, 1, 2]);
+        assert_eq!(out.as_f32().unwrap(), &[5.0, 110.0]);
+        // batch groups (the weight-grad lowering): oc 0 reads lhs batch
+        // 0, oc 1 reads lhs batch 1, output batch extent collapses to 1
+        let lhs = f(&[2, 1, 1], vec![3.0, 7.0]);
+        let rhs = f(&[1, 1, 2], vec![10.0, 100.0]);
+        d.feature_groups = 1;
+        d.batch_groups = 2;
+        let out = conv(&lhs, &rhs, &d, 1).unwrap();
+        assert_eq!(out.dims, vec![1, 1, 2]);
+        assert_eq!(out.as_f32().unwrap(), &[30.0, 700.0]);
+    }
+
+    #[test]
+    fn conv_sharded_is_bit_identical() {
+        // big enough that n * kn * i_size crosses ELEM_PAR_MIN
+        let (h, w, cin, cout) = (12, 12, 3, 8);
+        let lhs_n = h * w * cin;
+        let lhs = f(&[1, h, w, cin], (0..lhs_n).map(|i| ((i * 37 % 101) as f32) - 50.0).collect());
+        let rhs_n = 9 * cin * cout;
+        let rhs =
+            f(&[3, 3, cin, cout], (0..rhs_n).map(|i| ((i * 13 % 29) as f32) * 0.25).collect());
+        let d = ConvDims {
+            window: vec![wd(3, 1, 1, 1, 1, 1), wd(3, 1, 1, 1, 1, 1)],
+            lhs_batch: 0,
+            lhs_feature: 3,
+            lhs_spatial: vec![1, 2],
+            rhs_input: 2,
+            rhs_output: 3,
+            rhs_spatial: vec![0, 1],
+            out_batch: 0,
+            out_feature: 3,
+            out_spatial: vec![1, 2],
+            feature_groups: 1,
+            batch_groups: 1,
+        };
+        let serial = conv(&lhs, &rhs, &d, 1).unwrap();
+        for workers in [2usize, 3, 8] {
+            let sharded = conv(&lhs, &rhs, &d, workers).unwrap();
+            let same = serial
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(sharded.as_f32().unwrap())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn reverse_flips_listed_dims() {
+        let a = f(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = reverse(&a, &[1]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[3.0, 2.0, 1.0, 6.0, 5.0, 4.0]);
+        let r = reverse(&a, &[0, 1]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        // double reverse is the identity
+        let rr = reverse(&reverse(&a, &[0, 1]).unwrap(), &[1, 0]).unwrap();
+        assert_eq!(rr.as_f32().unwrap(), a.as_f32().unwrap());
+        assert!(reverse(&a, &[2]).is_err());
+    }
+
+    #[test]
+    fn reduce_window_fused_pools() {
+        // stride-2 max pool with one column of high padding: the padded
+        // tap is skipped, not folded as a value
+        let x = f(&[5], vec![1.0, 5.0, 2.0, 4.0, 3.0]);
+        let ninf = f(&[], vec![f32::NEG_INFINITY]);
+        let out =
+            reduce_window_fused(&x, &ninf, &[wd(2, 2, 0, 1, 1, 1)], BinaryOp::Max, true, 1)
+                .unwrap();
+        assert_eq!(out.dims, vec![3]);
+        assert_eq!(out.as_f32().unwrap(), &[5.0, 4.0, 3.0]);
+        // SAME add pool: edge cells fold fewer taps
+        let zero = f(&[], vec![0.0]);
+        let out = reduce_window_fused(&x, &zero, &[wd(3, 1, 1, 1, 1, 1)], BinaryOp::Add, true, 1)
+            .unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[6.0, 8.0, 11.0, 9.0, 7.0]);
+        // window dilation skips every other input element
+        let out = reduce_window_fused(&x, &zero, &[wd(2, 1, 0, 0, 1, 2)], BinaryOp::Add, true, 1)
+            .unwrap();
+        assert_eq!(out.dims, vec![3]);
+        assert_eq!(out.as_f32().unwrap(), &[3.0, 9.0, 5.0]);
+        // init type must match the operand
+        assert!(reduce_window_fused(
+            &x,
+            &ArrayValue::new(vec![], Buf::S32(vec![0])).unwrap(),
+            &[wd(2, 1, 0, 0, 1, 1)],
+            BinaryOp::Add,
+            true,
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reduce_window_fused_sharded_is_bit_identical() {
+        let n = ELEM_PAR_MIN; // n taps = 2 * ELEM_PAR_MIN, above threshold
+        let x = f(&[n], (0..n).map(|i| ((i * 37 % 101) as f32) - 50.0).collect());
+        let zero = f(&[], vec![0.0]);
+        let win = [wd(2, 1, 1, 0, 1, 1)];
+        let serial = reduce_window_fused(&x, &zero, &win, BinaryOp::Add, true, 1).unwrap();
+        for workers in [2usize, 3, 8] {
+            let sharded = reduce_window_fused(&x, &zero, &win, BinaryOp::Add, true, workers)
+                .unwrap();
+            let same = serial
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(sharded.as_f32().unwrap())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "workers={workers}");
         }
     }
 

@@ -69,6 +69,56 @@ pub struct DotDims {
     pub rhs_contracting: Vec<usize>,
 }
 
+/// One dimension of a `convolution`/`reduce-window` window
+/// (`window={size=3x3 stride=2x2 pad=1_1x1_1 lhs_dilate=2x2}`); fields
+/// the HLO text omits take their XLA defaults (stride 1, pad 0, both
+/// dilations 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowDim {
+    pub size: usize,
+    pub stride: usize,
+    pub pad_lo: i64,
+    pub pad_hi: i64,
+    /// lhs (input) dilation — `lhs_dilate`.
+    pub base_dilation: usize,
+    /// rhs (kernel) dilation — `rhs_dilate`.
+    pub window_dilation: usize,
+}
+
+impl WindowDim {
+    /// Output extent of this dimension for input extent `n` (XLA's
+    /// convolution shape rule, shared with `reduce-window`).
+    pub fn out_size(&self, n: usize) -> usize {
+        let dilated = if n == 0 { 0 } else { (n - 1) as i64 * self.base_dilation as i64 + 1 };
+        let window = (self.size as i64 - 1) * self.window_dilation as i64 + 1;
+        let padded = dilated + self.pad_lo + self.pad_hi;
+        if padded < window {
+            0
+        } else {
+            ((padded - window) / self.stride as i64) as usize + 1
+        }
+    }
+}
+
+/// `convolution` dimension numbers, parsed from
+/// `dim_labels=b01f_01io->b01f` plus the window and group counts.
+/// `*_spatial[k]` is the tensor dimension holding spatial dim `k`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvDims {
+    pub window: Vec<WindowDim>,
+    pub lhs_batch: usize,
+    pub lhs_feature: usize,
+    pub lhs_spatial: Vec<usize>,
+    pub rhs_input: usize,
+    pub rhs_output: usize,
+    pub rhs_spatial: Vec<usize>,
+    pub out_batch: usize,
+    pub out_feature: usize,
+    pub out_spatial: Vec<usize>,
+    pub feature_groups: usize,
+    pub batch_groups: usize,
+}
+
 /// `gather` dimension numbers (StableHLO semantics, incl. batching dims).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct GatherDims {
@@ -120,6 +170,9 @@ pub enum Op {
     Reduce { dims: Vec<usize>, comp: usize },
     Gather(GatherDims),
     Scatter { dims: ScatterDims, comp: usize },
+    Convolution(ConvDims),
+    Reverse { dims: Vec<usize> },
+    ReduceWindow { window: Vec<WindowDim>, comp: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -378,6 +431,136 @@ fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
     Ok(out)
 }
 
+/// `{size=3x3 stride=2x2 pad=1_1x1_1 lhs_dilate=2x2 rhs_dilate=2x2}` —
+/// per-dimension window spec; fields absent from the text default to
+/// stride 1, pad 0_0, dilations 1 (the HLO printer omits defaults,
+/// e.g. `window={size=16x16}`).
+fn parse_window_attr(s: &str) -> Result<Vec<WindowDim>> {
+    let body = s.trim().trim_start_matches('{').trim_end_matches('}').trim();
+    let mut size: Vec<usize> = Vec::new();
+    let mut stride: Vec<usize> = Vec::new();
+    let mut pad: Vec<(i64, i64)> = Vec::new();
+    let mut base: Vec<usize> = Vec::new();
+    let mut wdil: Vec<usize> = Vec::new();
+    for field in body.split_whitespace() {
+        let (key, val) =
+            field.split_once('=').with_context(|| format!("bad window field '{field}'"))?;
+        let parts: Result<Vec<usize>> = val
+            .split('x')
+            .map(|p| p.parse::<usize>().with_context(|| format!("bad window value '{val}'")))
+            .collect();
+        match key {
+            "size" => size = parts?,
+            "stride" => stride = parts?,
+            "lhs_dilate" => base = parts?,
+            "rhs_dilate" => wdil = parts?,
+            "pad" => {
+                pad = val
+                    .split('x')
+                    .map(|p| {
+                        let (lo, hi) =
+                            p.split_once('_').with_context(|| format!("bad pad '{p}'"))?;
+                        Ok((lo.parse::<i64>()?, hi.parse::<i64>()?))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            other => bail!("unknown window field '{other}'"),
+        }
+    }
+    ensure!(!size.is_empty(), "window spec has no size field");
+    let nd = size.len();
+    for (name, len) in [
+        ("stride", stride.len()),
+        ("pad", pad.len()),
+        ("lhs_dilate", base.len()),
+        ("rhs_dilate", wdil.len()),
+    ] {
+        ensure!(len == 0 || len == nd, "window {name} rank mismatch");
+    }
+    Ok((0..nd)
+        .map(|d| WindowDim {
+            size: size[d],
+            stride: stride.get(d).copied().unwrap_or(1),
+            pad_lo: pad.get(d).map_or(0, |p| p.0),
+            pad_hi: pad.get(d).map_or(0, |p| p.1),
+            base_dilation: base.get(d).copied().unwrap_or(1),
+            window_dilation: wdil.get(d).copied().unwrap_or(1),
+        })
+        .collect())
+}
+
+/// One part of `dim_labels` (`b01f`): positions of the two letter dims
+/// and, per spatial number `k`, the tensor dim holding it.
+fn parse_label_part(part: &str, a_ch: u8, b_ch: u8) -> Result<(usize, usize, Vec<usize>)> {
+    ensure!(part.len() >= 2, "bad dim_labels part '{part}'");
+    let mut a_pos = None;
+    let mut b_pos = None;
+    let mut spatial = vec![usize::MAX; part.len() - 2];
+    for (pos, ch) in part.bytes().enumerate() {
+        if ch == a_ch {
+            ensure!(a_pos.is_none(), "duplicate '{}' in '{part}'", a_ch as char);
+            a_pos = Some(pos);
+        } else if ch == b_ch {
+            ensure!(b_pos.is_none(), "duplicate '{}' in '{part}'", b_ch as char);
+            b_pos = Some(pos);
+        } else {
+            let k = (ch as char).to_digit(10).with_context(|| {
+                format!("bad dim_labels char '{}' in '{part}'", ch as char)
+            })? as usize;
+            ensure!(
+                k < spatial.len() && spatial[k] == usize::MAX,
+                "bad spatial dim {k} in '{part}'"
+            );
+            spatial[k] = pos;
+        }
+    }
+    Ok((
+        a_pos.with_context(|| format!("missing '{}' in '{part}'", a_ch as char))?,
+        b_pos.with_context(|| format!("missing '{}' in '{part}'", b_ch as char))?,
+        spatial,
+    ))
+}
+
+fn parse_conv_dims(attrs: &Attrs) -> Result<ConvDims> {
+    let labels = attrs.req("dim_labels")?;
+    let (lhs, rest) = labels.split_once('_').context("bad dim_labels (no '_')")?;
+    let (rhs, out) = rest.split_once("->").context("bad dim_labels (no '->')")?;
+    let (lhs_batch, lhs_feature, lhs_spatial) = parse_label_part(lhs, b'b', b'f')?;
+    let (rhs_input, rhs_output, rhs_spatial) = parse_label_part(rhs, b'i', b'o')?;
+    let (out_batch, out_feature, out_spatial) = parse_label_part(out, b'b', b'f')?;
+    let window = parse_window_attr(attrs.req("window")?)?;
+    ensure!(
+        window.len() == lhs_spatial.len()
+            && rhs_spatial.len() == lhs_spatial.len()
+            && out_spatial.len() == lhs_spatial.len(),
+        "convolution window/dim_labels rank mismatch"
+    );
+    let group = |key| -> Result<usize> {
+        match attrs.get(key) {
+            Some(v) => {
+                let g = v.trim().parse::<usize>().with_context(|| format!("bad {key}"))?;
+                ensure!(g >= 1, "{key} must be >= 1");
+                Ok(g)
+            }
+            None => Ok(1),
+        }
+    };
+    Ok(ConvDims {
+        window,
+        lhs_batch,
+        lhs_feature,
+        lhs_spatial,
+        rhs_input,
+        rhs_output,
+        rhs_spatial,
+        out_batch,
+        out_feature,
+        out_spatial,
+        feature_groups: group("feature_group_count")?,
+        batch_groups: group("batch_group_count")?,
+    })
+}
+
 // -------------------------------------------------------- attributes ---
 
 /// Raw `key=value` attributes of one instruction line.
@@ -453,6 +636,7 @@ enum FixSlot {
     WhileBody,
     Reduce,
     Scatter,
+    ReduceWindow,
 }
 
 struct Fixup {
@@ -563,6 +747,12 @@ fn build_op(
                 index_vector_dim: attrs.int("index_vector_dim")?,
             },
             comp: comp_ref(fix, FixSlot::Scatter, attrs.req("to_apply")?),
+        },
+        "convolution" => Op::Convolution(parse_conv_dims(attrs)?),
+        "reverse" => Op::Reverse { dims: attrs.ints("dimensions")? },
+        "reduce-window" => Op::ReduceWindow {
+            window: parse_window_attr(attrs.req("window")?)?,
+            comp: comp_ref(fix, FixSlot::ReduceWindow, attrs.req("to_apply")?),
         },
         other => bail!("unsupported HLO opcode '{other}'"),
     })
@@ -693,6 +883,7 @@ pub fn parse_module(text: &str) -> Result<HloModule> {
             (Op::While { body, .. }, FixSlot::WhileBody) => *body = target,
             (Op::Reduce { comp, .. }, FixSlot::Reduce) => *comp = target,
             (Op::Scatter { comp, .. }, FixSlot::Scatter) => *comp = target,
+            (Op::ReduceWindow { comp, .. }, FixSlot::ReduceWindow) => *comp = target,
             _ => bail!("fixup slot mismatch for '{}'", f.target),
         }
     }
@@ -811,6 +1002,81 @@ ENTRY main.9 {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_conv_and_window_attrs() {
+        let text = "HloModule c\n\nENTRY main.1 {\n  x.1 = f32[4,16,16,3]{3,2,1,0} parameter(0)\n  \
+                    w.2 = f32[3,3,3,8]{3,2,1,0} parameter(1)\n  ROOT c.3 = f32[4,8,8,8]{3,2,1,0} \
+                    convolution(x.1, w.2), window={size=3x3 stride=2x2 pad=1_1x0_1 lhs_dilate=2x1}, \
+                    dim_labels=b01f_01io->b01f, feature_group_count=1, batch_group_count=2\n}\n";
+        let m = parse_module(text).unwrap();
+        match &m.entry_computation().instrs[2].op {
+            Op::Convolution(d) => {
+                assert_eq!(
+                    d.window[0],
+                    WindowDim {
+                        size: 3,
+                        stride: 2,
+                        pad_lo: 1,
+                        pad_hi: 1,
+                        base_dilation: 2,
+                        window_dilation: 1
+                    }
+                );
+                assert_eq!((d.window[1].pad_lo, d.window[1].pad_hi), (0, 1));
+                assert_eq!((d.lhs_batch, d.lhs_feature, d.lhs_spatial.clone()), (0, 3, vec![1, 2]));
+                assert_eq!((d.rhs_input, d.rhs_output, d.rhs_spatial.clone()), (2, 3, vec![0, 1]));
+                assert_eq!((d.out_batch, d.out_feature), (0, 3));
+                assert_eq!((d.feature_groups, d.batch_groups), (1, 2));
+            }
+            other => panic!("{other:?}"),
+        }
+        // defaults: omitted stride/pad/dilations are 1/0/1; the weight-grad
+        // lowering's transposed labels parse too
+        let text = "HloModule c\n\nENTRY main.1 {\n  x.1 = f32[16,18,18,4]{3,2,1,0} parameter(0)\n  \
+                    w.2 = f32[16,16,16,4]{3,2,1,0} parameter(1)\n  ROOT c.3 = f32[3,3,1,16]{3,2,1,0} \
+                    convolution(x.1, w.2), window={size=16x16}, dim_labels=f01b_i01o->01bf, \
+                    batch_group_count=16\n}\n";
+        let m = parse_module(text).unwrap();
+        match &m.entry_computation().instrs[2].op {
+            Op::Convolution(d) => {
+                assert_eq!(
+                    d.window[0],
+                    WindowDim {
+                        size: 16,
+                        stride: 1,
+                        pad_lo: 0,
+                        pad_hi: 0,
+                        base_dilation: 1,
+                        window_dilation: 1
+                    }
+                );
+                assert_eq!((d.lhs_batch, d.lhs_feature, d.lhs_spatial.clone()), (3, 0, vec![1, 2]));
+                assert_eq!((d.rhs_input, d.rhs_output, d.rhs_spatial.clone()), (0, 3, vec![1, 2]));
+                assert_eq!((d.out_batch, d.out_feature, d.out_spatial.clone()), (2, 3, vec![0, 1]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_out_size_rule() {
+        let w = |size, stride, pad_lo, pad_hi, base_dilation, window_dilation| WindowDim {
+            size,
+            stride,
+            pad_lo,
+            pad_hi,
+            base_dilation,
+            window_dilation,
+        };
+        assert_eq!(w(3, 2, 1, 1, 1, 1).out_size(16), 8); // SAME stride-2
+        assert_eq!(w(3, 1, 1, 1, 1, 1).out_size(16), 16); // SAME stride-1
+        assert_eq!(w(2, 2, 0, 1, 1, 1).out_size(5), 3); // asymmetric pad
+        assert_eq!(w(3, 1, 2, 1, 2, 1).out_size(8), 16); // lhs_dilate=2 (grad)
+        assert_eq!(w(2, 1, 0, 0, 1, 2).out_size(5), 3); // window dilation
+        assert_eq!(w(4, 1, 0, 0, 1, 1).out_size(3), 0); // window > input
+        assert_eq!(w(1, 1, 0, 0, 1, 1).out_size(0), 0); // degenerate input
     }
 
     #[test]

@@ -43,7 +43,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::runtime::interp::fuse::{self, CountedLoop};
 use crate::runtime::interp::ops::{self, f32_bin, pred_bin, s32_bin, u32_bin};
 use crate::runtime::interp::parser::{
-    BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims, UnaryOp,
+    BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims, UnaryOp, WindowDim,
 };
 use crate::runtime::interp::stats::Stats;
 use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, Shape, Value};
@@ -103,6 +103,9 @@ pub struct FusionStats {
     pub fused_reduces: usize,
     /// Scatter instructions with an inlined single-binary-op region.
     pub fused_scatters: usize,
+    /// Reduce-window instructions with an inlined single-binary-op
+    /// region (pooling layers).
+    pub fused_windows: usize,
 }
 
 /// One computation lowered for planned execution. Fields are
@@ -206,6 +209,7 @@ impl Plan {
                     (Op::Call { .. }, Fused::Threefry) => fs.threefry_calls += 1,
                     (Op::Reduce { .. }, Fused::Bin { .. }) => fs.fused_reduces += 1,
                     (Op::Scatter { .. }, Fused::Bin { .. }) => fs.fused_scatters += 1,
+                    (Op::ReduceWindow { .. }, Fused::Bin { .. }) => fs.fused_windows += 1,
                     _ => {}
                 }
             }
@@ -303,6 +307,7 @@ fn classify(m: &HloModule, ins: &Instr, threefry: &[bool], opts: PlanOptions) ->
             *comp
         }
         Op::Scatter { comp, .. } if ins.operands.len() == 3 => *comp,
+        Op::ReduceWindow { comp, .. } if ins.operands.len() == 2 => *comp,
         Op::Call { comp } if threefry[*comp] => return Fused::Threefry,
         Op::While { cond, body } if opts.counted_loops => {
             return match fuse::match_counted_loop(m, *cond, *body) {
@@ -330,6 +335,10 @@ pub(crate) fn op_label(ins: &Instr, fused: &Fused) -> (&'static str, bool) {
         (Op::Reduce { .. }, _) => ("reduce[generic]", false),
         (Op::Scatter { .. }, Fused::Bin { .. }) => ("scatter[fused]", true),
         (Op::Scatter { .. }, _) => ("scatter[generic]", false),
+        (Op::ReduceWindow { .. }, Fused::Bin { .. }) => ("reduce-window[fused]", true),
+        (Op::ReduceWindow { .. }, _) => ("reduce-window[generic]", false),
+        (Op::Convolution(_), _) => ("conv[direct]", true),
+        (Op::Reverse { .. }, _) => ("reverse", true),
         (Op::Dot(_), _) => ("dot[packed]", true),
         (Op::Parameter(_), _) => ("parameter", true),
         (Op::Constant(_), _) => ("constant", true),
@@ -675,6 +684,30 @@ impl<'p> Executor<'p> {
                         self.scatter_fused(comp, si, regs, dims, *op, *acc_first)?
                     }
                     _ => self.scatter_generic(comp, si, regs, dims, *target)?,
+                }
+            }
+            Op::Convolution(d) => {
+                let lhs = self.arr(comp, si, 0, regs)?;
+                let rhs = self.arr(comp, si, 1, regs)?;
+                Value::Array(ops::conv(lhs, rhs, d, self.threads)?)
+            }
+            Op::Reverse { dims } => {
+                Value::Array(ops::reverse(self.arr(comp, si, 0, regs)?, dims)?)
+            }
+            Op::ReduceWindow { window, comp: target } => {
+                ensure!(ins.operands.len() == 2, "variadic reduce-window unsupported");
+                match &comp.fused[si] {
+                    Fused::Bin { op, acc_first } => {
+                        Value::Array(ops::reduce_window_fused(
+                            self.arr(comp, si, 0, regs)?,
+                            self.arr(comp, si, 1, regs)?,
+                            window,
+                            *op,
+                            *acc_first,
+                            self.threads,
+                        )?)
+                    }
+                    _ => self.reduce_window_generic(ins, regs, window, *target)?,
                 }
             }
         })
@@ -1031,6 +1064,37 @@ impl<'p> Executor<'p> {
 
     /// Scatter fallback: invoke the region per update. Mirrors the
     /// reference evaluator exactly.
+    /// Generic `reduce-window`: serial per-cell region invocation — the
+    /// fallback when the region is not a single scalar binary op.
+    /// Identical tap visit order to the fused path and the reference
+    /// walker (the geometry lives in [`ops::WindowGeom`]).
+    fn reduce_window_generic(
+        &self,
+        ins: &Instr,
+        regs: &[Option<Value>],
+        window: &[WindowDim],
+        target: usize,
+    ) -> Result<Value> {
+        let x = regs[ins.operands[0]].as_ref().expect("operand").array()?;
+        let init = regs[ins.operands[1]].as_ref().expect("operand").array()?;
+        ensure!(init.dims.is_empty(), "reduce-window init must be scalar");
+        let g = ops::WindowGeom::new(&x.dims, window)?;
+        let (mut oi, mut wi) = g.scratch();
+        let mut out = Buf::with_capacity(init.ty(), g.n);
+        for f in 0..g.n {
+            g.cell_coords(f, &mut oi);
+            let mut acc = Value::Array(init.scalar_at(0));
+            for wf in 0..g.wn {
+                if let Some(xi) = g.tap_index(&oi, wf, &mut wi) {
+                    let val = Value::Array(x.scalar_at(xi));
+                    acc = self.run(target, vec![acc, val])?;
+                }
+            }
+            out.push_from(&acc.array()?.buf, 0);
+        }
+        Ok(Value::Array(ArrayValue::new(g.out_dims.clone(), out)?))
+    }
+
     fn scatter_generic(
         &self,
         comp: &CompPlan,
@@ -1274,6 +1338,60 @@ mod tests {
         assert_eq!(plan.comps[1].fused[2], Fused::Bin { op: BinaryOp::Max, acc_first: false });
         let args = vec![Value::Array(fv(&[4, 3], randv(5, 12)))];
         assert_same(text, &args, 1);
+    }
+
+    #[test]
+    fn fused_max_pool_reduce_window_matches_tree_walk() {
+        // stride-2 SAME max pool: the region fuses to Bin{Max} and the
+        // planned fold must match the region-invoking tree walk bitwise
+        let text = "HloModule t\n\nregion_0.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  ROOT m.3 = f32[] maximum(a.1, b.2)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[2,7]{1,0} parameter(0)\n  \
+                    c.2 = f32[] constant(-inf)\n  ROOT r.3 = f32[2,4]{1,0} \
+                    reduce-window(x.1, c.2), window={size=1x2 stride=1x2 pad=0_0x0_1}, \
+                    to_apply=region_0.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = Plan::compile(&m);
+        assert_eq!(plan.comps[1].fused[2], Fused::Bin { op: BinaryOp::Max, acc_first: true });
+        assert_eq!(plan.fusion_stats().fused_windows, 1);
+        let args = vec![Value::Array(fv(&[2, 7], randv(9, 14)))];
+        for threads in [1usize, 3, 8] {
+            assert_same(text, &args, threads);
+        }
+    }
+
+    #[test]
+    fn generic_reduce_window_region_matches_tree_walk() {
+        // 4-instruction region (sum of squares): stays on the generic
+        // per-tap region path
+        let text = "HloModule t\n\nsq.1 {\n  a.1 = f32[] parameter(0)\n  \
+                    b.2 = f32[] parameter(1)\n  m.3 = f32[] multiply(b.2, b.2)\n  \
+                    ROOT r.4 = f32[] add(a.1, m.3)\n}\n\n\
+                    ENTRY main.1 {\n  x.1 = f32[6]{0} parameter(0)\n  \
+                    z.2 = f32[] constant(0)\n  ROOT rw.3 = f32[3]{0} \
+                    reduce-window(x.1, z.2), window={size=2 stride=2}, to_apply=sq.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = Plan::compile(&m);
+        assert_eq!(plan.comps[1].fused[2], Fused::None);
+        let args = vec![Value::Array(fv(&[6], randv(11, 6)))];
+        assert_same(text, &args, 1);
+    }
+
+    #[test]
+    fn conv_planned_matches_tree_walk_across_threads() {
+        // strided NHWC conv with asymmetric padding and feature groups
+        let text = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[2,9,9,4]{3,2,1,0} \
+                    parameter(0)\n  w.2 = f32[3,3,2,4]{3,2,1,0} parameter(1)\n  \
+                    ROOT c.3 = f32[2,5,5,4]{3,2,1,0} convolution(x.1, w.2), \
+                    window={size=3x3 stride=2x2 pad=1_1x0_2}, \
+                    dim_labels=b01f_01io->b01f, feature_group_count=2\n}\n";
+        let args = vec![
+            Value::Array(fv(&[2, 9, 9, 4], randv(21, 2 * 9 * 9 * 4))),
+            Value::Array(fv(&[3, 3, 2, 4], randv(22, 3 * 3 * 2 * 4))),
+        ];
+        for threads in [1usize, 3, 8] {
+            assert_same(text, &args, threads);
+        }
     }
 
     #[test]

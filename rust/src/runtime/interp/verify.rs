@@ -195,13 +195,24 @@ pub const SHARD_REGISTRY: &[ShardKernel] = &[
         determinism: ShardDeterminism::PerElement,
         rationale: "each u32 lane's round chain is independent of every other lane",
     },
+    ShardKernel {
+        name: "conv[direct]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each output cell's ascending tap/channel accumulation runs on one worker",
+    },
+    ShardKernel {
+        name: "reduce-window[fused]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each output cell folds its own window's ascending taps wholly on one worker",
+    },
 ];
 
 /// Which sharding kernel (registry key) a planned step can dispatch,
 /// mirroring the executor's dispatch sites in `plan.rs` — elementwise
 /// unary/binary/select (in-place or CoW+sharded), the packed dot,
-/// fused reduces, and the native threefry call. Scatter and the
-/// generic reduce/while/call paths are serial per invocation and
+/// fused reduces, the native threefry call, direct convolution and
+/// fused reduce-windows. Scatter, reverse and the generic
+/// reduce/reduce-window/while/call paths are serial per invocation and
 /// return None. Keep in sync with `Executor::step`.
 pub fn sharding_kernel(ins: &Instr, fused: &Fused) -> Option<&'static str> {
     match (&ins.op, fused) {
@@ -211,6 +222,8 @@ pub fn sharding_kernel(ins: &Instr, fused: &Fused) -> Option<&'static str> {
         (Op::Dot(_), _) => Some("dot[packed]"),
         (Op::Reduce { .. }, Fused::Bin { .. }) => Some("reduce[fused]"),
         (Op::Call { .. }, Fused::Threefry) => Some("call[threefry2x32]"),
+        (Op::Convolution(_), _) => Some("conv[direct]"),
+        (Op::ReduceWindow { .. }, Fused::Bin { .. }) => Some("reduce-window[fused]"),
         _ => None,
     }
 }
@@ -412,7 +425,9 @@ impl<'p> Verifier<'p> {
                         ok = false;
                     }
                 }
-                Op::Reduce { comp: t, .. } | Op::Scatter { comp: t, .. } => {
+                Op::Reduce { comp: t, .. }
+                | Op::Scatter { comp: t, .. }
+                | Op::ReduceWindow { comp: t, .. } => {
                     if *t >= n_comps {
                         findings.push((si, format!("region target {t} out of range")));
                         ok = false;
@@ -589,8 +604,14 @@ impl<'p> Verifier<'p> {
             | Op::Slice { .. }
             | Op::Convert
             | Op::BitcastConvert
+            | Op::Reverse { .. }
             | Op::Unary(_) => Some(1),
-            Op::Compare { .. } | Op::Binary(_) | Op::Dot(_) | Op::Gather(_) => Some(2),
+            Op::Compare { .. }
+            | Op::Binary(_)
+            | Op::Dot(_)
+            | Op::Gather(_)
+            | Op::Convolution(_)
+            | Op::ReduceWindow { .. } => Some(2),
             Op::Select | Op::Scatter { .. } => Some(3),
             Op::Tuple | Op::Call { .. } | Op::Concatenate { .. } | Op::Reduce { .. } => None,
         };
@@ -1104,6 +1125,156 @@ impl<'p> Verifier<'p> {
                     );
                 }
             }
+            Op::Convolution(d) => {
+                let (Some((lty, ld)), Some((rty, rd))) =
+                    (self.oarr(ci, si, 0), self.oarr(ci, si, 1))
+                else {
+                    return;
+                };
+                if lty != ElemType::F32 || rty != ElemType::F32 {
+                    self.ty_err(ci, si, "convolution is f32-only in this backend".into());
+                }
+                let nsp = d.window.len();
+                if d.lhs_spatial.len() != nsp
+                    || d.rhs_spatial.len() != nsp
+                    || d.out_spatial.len() != nsp
+                {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        "convolution window/spatial-dim arity mismatch".into(),
+                    );
+                }
+                if ld.len() != nsp + 2 || rd.len() != nsp + 2 {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        format!("convolution operands must be rank {}", nsp + 2),
+                    );
+                }
+                let in_range = |ds: &[usize], rank: usize| ds.iter().all(|&x| x < rank);
+                if d.lhs_batch >= ld.len()
+                    || d.lhs_feature >= ld.len()
+                    || !in_range(&d.lhs_spatial, ld.len())
+                    || d.rhs_input >= rd.len()
+                    || d.rhs_output >= rd.len()
+                    || !in_range(&d.rhs_spatial, rd.len())
+                {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        "convolution dimension number out of range".into(),
+                    );
+                }
+                let (fg, bg) = (d.feature_groups, d.batch_groups);
+                if fg == 0 || bg == 0 {
+                    return self.ty_err(ci, si, "convolution group count must be positive".into());
+                }
+                let (lb, i_size, o_size) = (ld[d.lhs_batch], rd[d.rhs_input], rd[d.rhs_output]);
+                if o_size % fg != 0 || o_size % bg != 0 || lb % bg != 0 {
+                    self.ty_err(
+                        ci,
+                        si,
+                        "convolution group counts do not divide the feature/batch dims".into(),
+                    );
+                }
+                if ld[d.lhs_feature] != i_size * fg {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!(
+                            "lhs feature dim {} != kernel input {i_size} x {fg} feature groups",
+                            ld[d.lhs_feature]
+                        ),
+                    );
+                }
+                for (s, w) in d.window.iter().enumerate() {
+                    if rd[d.rhs_spatial[s]] != w.size {
+                        self.ty_err(
+                            ci,
+                            si,
+                            format!("kernel spatial dim {s} disagrees with window size"),
+                        );
+                    }
+                }
+                let Some((_, odims)) = &decl_arr else {
+                    return self.ty_err(ci, si, "convolution result must be an array".into());
+                };
+                if d.out_batch >= odims.len()
+                    || d.out_feature >= odims.len()
+                    || !in_range(&d.out_spatial, odims.len())
+                {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        "convolution output dimension number out of range".into(),
+                    );
+                }
+                let mut want = vec![0usize; nsp + 2];
+                want[d.out_batch] = lb / bg;
+                want[d.out_feature] = o_size;
+                for (s, w) in d.window.iter().enumerate() {
+                    want[d.out_spatial[s]] = w.out_size(ld[d.lhs_spatial[s]]);
+                }
+                if decl_arr != Some((ElemType::F32, want.clone())) {
+                    self.ty_err(ci, si, format!("convolution produces f32{want:?}"));
+                }
+            }
+            Op::Reverse { dims } => {
+                let Some((ity, idims)) = self.oarr(ci, si, 0) else { return };
+                let mut seen = vec![false; idims.len()];
+                for &dd in dims {
+                    if dd >= idims.len() || std::mem::replace(&mut seen[dd], true) {
+                        return self.ty_err(ci, si, format!("reverse dimension {dd} invalid"));
+                    }
+                }
+                if decl_arr != Some((ity, idims)) {
+                    self.ty_err(ci, si, "reverse result != operand shape".into());
+                }
+            }
+            Op::ReduceWindow { window, comp: t } => {
+                let (Some((xty, xdims)), Some((init_ty, init_dims))) =
+                    (self.oarr(ci, si, 0), self.oarr(ci, si, 1))
+                else {
+                    return;
+                };
+                if window.len() != xdims.len() {
+                    return self.ty_err(
+                        ci,
+                        si,
+                        format!(
+                            "window has {} dims, operand rank {}",
+                            window.len(),
+                            xdims.len()
+                        ),
+                    );
+                }
+                if init_ty != xty || !init_dims.is_empty() {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("reduce-window init must be a {} scalar", xty.name()),
+                    );
+                }
+                let want: Vec<usize> =
+                    window.iter().zip(&xdims).map(|(w, &n)| w.out_size(n)).collect();
+                if decl_arr != Some((xty, want.clone())) {
+                    self.ty_err(ci, si, format!("reduce-window produces {}{want:?}", xty.name()));
+                }
+                // region: (acc, elem) scalars -> acc scalar
+                let params = self.param_shapes(*t);
+                let scalar = Shape::Array { ty: xty, dims: vec![] };
+                if params.len() != 2
+                    || params.iter().flatten().any(|p| *p != scalar)
+                    || self.root_shape(*t) != scalar
+                {
+                    self.ty_err(
+                        ci,
+                        si,
+                        format!("reduce-window region must be ({n}, {n}) -> {n}", n = xty.name()),
+                    );
+                }
+            }
         }
     }
 
@@ -1155,6 +1326,18 @@ impl<'p> Verifier<'p> {
                         si,
                         DiagKind::Fusion,
                         "fused scatter must have 3 operands".into(),
+                    );
+                } else if let Err(msg) = self.prove_bin_region(*t, *op, *acc_first) {
+                    self.diag(ci, si, DiagKind::Fusion, msg);
+                }
+            }
+            (Fused::Bin { op, acc_first }, Op::ReduceWindow { comp: t, .. }) => {
+                if ins.operands.len() != 2 || !matches!(ins.shape, Shape::Array { .. }) {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        "fused reduce-window must be single-input with an array result".into(),
                     );
                 } else if let Err(msg) = self.prove_bin_region(*t, *op, *acc_first) {
                     self.diag(ci, si, DiagKind::Fusion, msg);
@@ -1583,12 +1766,13 @@ impl fmt::Display for PlanCensus {
         writeln!(
             f,
             "fusion: {} counted loops, {} generic whiles, {} threefry calls, \
-             {} fused reduces, {} fused scatters",
+             {} fused reduces, {} fused scatters, {} fused windows",
             self.fusion.counted_loops,
             self.fusion.generic_whiles,
             self.fusion.threefry_calls,
             self.fusion.fused_reduces,
-            self.fusion.fused_scatters
+            self.fusion.fused_scatters,
+            self.fusion.fused_windows
         )?;
         writeln!(f, "sharding kernels:")?;
         for (name, count) in &self.shard_kernels {
@@ -1638,6 +1822,19 @@ mod tests {
         z.5 = f32[] constant(0)\n  \
         ROOT r.6 = f32[2]{0} reduce(n.4, z.5), dimensions={0}, to_apply=sum.1\n}\n";
 
+    /// A tiny conv + max-pool pipeline: exercises the convolution
+    /// shape inference, the fused reduce-window and both new shard
+    /// kernels.
+    const CONV: &str = "HloModule t\n\nmax.1 {\n  a.1 = f32[] parameter(0)\n  \
+        b.2 = f32[] parameter(1)\n  ROOT m.3 = f32[] maximum(a.1, b.2)\n}\n\n\
+        ENTRY main.1 {\n  x.1 = f32[1,6,6,2]{3,2,1,0} parameter(0)\n  \
+        w.2 = f32[3,3,2,4]{3,2,1,0} parameter(1)\n  \
+        c.3 = f32[1,6,6,4]{3,2,1,0} convolution(x.1, w.2), \
+        window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f\n  \
+        z.4 = f32[] constant(0)\n  \
+        ROOT p.5 = f32[1,3,3,4]{3,2,1,0} reduce-window(c.3, z.4), \
+        window={size=1x2x2x1 stride=1x2x2x1}, to_apply=max.1\n}\n";
+
     fn compile(text: &str) -> Plan {
         Plan::compile_unverified(&parse_module(text).unwrap(), PlanOptions::default())
     }
@@ -1655,7 +1852,7 @@ mod tests {
 
     #[test]
     fn clean_plans_verify_clean_at_every_option() {
-        for text in [COUNTED, CHAIN] {
+        for text in [COUNTED, CHAIN, CONV] {
             let m = parse_module(text).unwrap();
             for (cl, tf) in [(false, false), (false, true), (true, false), (true, true)] {
                 let opts = PlanOptions { counted_loops: cl, threefry: tf };
@@ -1814,18 +2011,114 @@ mod tests {
     #[test]
     fn registry_covers_every_dispatch_site() {
         // every key sharding_kernel can produce must be declared
-        let m = parse_module(CHAIN).unwrap();
-        let plan = Plan::compile_unverified(&m, PlanOptions::default());
-        for comp in &plan.comps {
-            for (si, ins) in comp.instrs.iter().enumerate() {
-                if let Some(k) = sharding_kernel(ins, &comp.fused[si]) {
-                    assert!(
-                        SHARD_REGISTRY.iter().any(|e| e.name == k),
-                        "kernel {k} missing from SHARD_REGISTRY"
-                    );
+        for text in [CHAIN, CONV] {
+            let m = parse_module(text).unwrap();
+            let plan = Plan::compile_unverified(&m, PlanOptions::default());
+            for comp in &plan.comps {
+                for (si, ins) in comp.instrs.iter().enumerate() {
+                    if let Some(k) = sharding_kernel(ins, &comp.fused[si]) {
+                        assert!(
+                            SHARD_REGISTRY.iter().any(|e| e.name == k),
+                            "kernel {k} missing from SHARD_REGISTRY"
+                        );
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn conv_wrong_spatial_dims_are_a_type_error() {
+        let mut plan = compile(CONV);
+        let e = plan.entry;
+        // SAME-padded 3x3 conv over 6x6 must stay 6x6; claim 5x5
+        plan.comps[e].instrs[2].shape =
+            Shape::Array { ty: ElemType::F32, dims: vec![1, 5, 5, 4] };
+        let diags = verify(&plan);
+        let d = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::Type && d.index == 2)
+            .expect("must reject");
+        assert_eq!(d.instr, "c.3", "{d}");
+        assert!(d.message.contains("convolution produces f32[1, 6, 6, 4]"), "{d}");
+    }
+
+    #[test]
+    fn integer_operand_into_conv_is_a_type_error() {
+        let mut plan = compile(CONV);
+        let e = plan.entry;
+        // feed the conv an s32 image (also trips entry_params; the
+        // conv-addressed dtype diagnostic must still appear)
+        plan.comps[e].instrs[0].shape =
+            Shape::Array { ty: ElemType::S32, dims: vec![1, 6, 6, 2] };
+        let diags = verify(&plan);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::Type
+                && d.index == 2
+                && d.message.contains("f32-only")),
+            "{}",
+            render(&diags)
+        );
+    }
+
+    #[test]
+    fn bad_reduce_window_region_arity_is_a_type_error() {
+        // grow the pool region to three parameters: the planner leaves
+        // it generic, the type pass must still reject the region shape
+        let text = CONV.replace(
+            "b.2 = f32[] parameter(1)\n  ROOT",
+            "b.2 = f32[] parameter(1)\n  c.9 = f32[] parameter(2)\n  ROOT",
+        );
+        let plan = compile(&text);
+        assert!(matches!(plan.comps[plan.entry].fused[4], Fused::None));
+        let diags = verify(&plan);
+        let d = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::Type && d.index == 4)
+            .expect("must reject");
+        assert_eq!(d.instr, "p.5", "{d}");
+        assert!(d.message.contains("reduce-window region"), "{d}");
+    }
+
+    #[test]
+    fn forged_reduce_window_fusion_is_rejected() {
+        let mut plan = compile(CONV);
+        let e = plan.entry;
+        // claim the max pool folds with add: the re-proof must notice
+        plan.comps[e].fused[4] = Fused::Bin { op: BinaryOp::Add, acc_first: true };
+        let diags = verify(&plan);
+        let d = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::Fusion && d.index == 4)
+            .expect("must reject");
+        assert!(d.message.contains("Max"), "{d}");
+    }
+
+    #[test]
+    fn unregistered_conv_shard_kernels_are_rejected() {
+        let plan = compile(CONV);
+        assert!(verify(&plan).is_empty());
+        let diags = verify_with_registry(&plan, &[]);
+        let shard: Vec<_> =
+            diags.iter().filter(|d| d.kind == DiagKind::ShardSafety).collect();
+        assert!(shard.iter().any(|d| d.message.contains("conv[direct]")), "{}", render(&diags));
+        assert!(
+            shard.iter().any(|d| d.message.contains("reduce-window[fused]")),
+            "{}",
+            render(&diags)
+        );
+    }
+
+    #[test]
+    fn census_counts_the_conv_pipeline() {
+        let c = census(&compile(CONV));
+        assert_eq!(c.op_counts.get("conv[direct]"), Some(&1));
+        assert_eq!(c.op_counts.get("reduce-window[fused]"), Some(&1));
+        assert_eq!(c.fusion.fused_windows, 1);
+        assert_eq!(c.shard_kernels.get("conv[direct]"), Some(&1));
+        assert_eq!(c.shard_kernels.get("reduce-window[fused]"), Some(&1));
+        let s = c.to_string();
+        assert!(s.contains("fused windows") && s.contains("conv[direct]"), "{s}");
     }
 
     #[test]

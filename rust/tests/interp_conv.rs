@@ -1,0 +1,374 @@
+//! Vision-workload golden and property tests (DESIGN.md §4): the
+//! interpreter's convolution / reverse / reduce-window kernels must be
+//! bit-identical across the tree-walking oracle, the fusion-disabled
+//! plan and the fused plan on the checked-in `img_tiny` fixture across
+//! threads {1, 3, 8} at two (rate, seed) points; the reduce-window
+//! heads are pinned to mirror-computed constants
+//! (`tools/qnsim/plan_mirror.py check_window_pin`); and window-geometry
+//! corner cases (asymmetric padding, stride > window, dilations, 1×1,
+//! degenerate and all-padding windows) are checked against a naive
+//! quadruple-loop reference implemented in this file.
+
+use std::path::Path;
+
+use quant_noise::model::params::ParamStore;
+use quant_noise::runtime::interp::{
+    ArrayValue, Buf, FusionStats, HloModule, Interp, Plan, PlanOptions, Value,
+};
+use quant_noise::runtime::manifest::Manifest;
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp")
+}
+
+fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::F32(data)).unwrap())
+}
+
+fn i32v(dims: &[usize], data: Vec<i32>) -> Value {
+    Value::Array(ArrayValue::new(dims.to_vec(), Buf::S32(data)).unwrap())
+}
+
+/// Exact structural + bitwise equality (f32 compared by bit pattern).
+fn assert_bit_identical(a: &Value, b: &Value, path: &str) {
+    match (a, b) {
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: tuple arity");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_bit_identical(x, y, &format!("{path}.{i}"));
+            }
+        }
+        (Value::Array(x), Value::Array(y)) => {
+            assert_eq!(x.dims, y.dims, "{path}: dims");
+            match (&*x.buf, &*y.buf) {
+                (Buf::F32(p), Buf::F32(q)) => {
+                    for (i, (u, v)) in p.iter().zip(q).enumerate() {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{path}[{i}]");
+                    }
+                }
+                (p, q) => assert_eq!(p, q, "{path}: buffer"),
+            }
+        }
+        _ => panic!("{path}: array/tuple kind mismatch"),
+    }
+}
+
+/// Oracle vs fused plan vs fusion-disabled plan on one module, across
+/// thread counts — the vision byte-stability contract pre/post fusion.
+fn assert_fused_matches(m: &HloModule, args: &[Value], label: &str) -> FusionStats {
+    let golden = Interp::new(m).run_entry(args).unwrap();
+    let fused = Plan::compile(m);
+    let nofuse =
+        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false });
+    for threads in [1usize, 3, 8] {
+        let got = fused.run_entry(args.to_vec(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("{label}[fused,t={threads}]"));
+        let got = nofuse.run_entry(args.to_vec(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("{label}[nofuse,t={threads}]"));
+    }
+    fused.fusion_stats()
+}
+
+/// Fixture entry + args, mirroring `tools/qnsim/plan_mirror.py
+/// fixture_args`: deterministic images `(i % 256) / 255`, labels
+/// `i % n_classes`, full layer-keep, zero hats for grad entries.
+fn load_img(entry: &str, rate_seed: Option<(f32, i32)>) -> (HloModule, Vec<Value>) {
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let meta = man.model("img_tiny").unwrap().clone();
+    let params = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let n_px: usize = meta.tokens_shape.iter().product();
+    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
+    let labels: Vec<i32> =
+        (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let mut args: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    if rate_seed.is_some() {
+        args.extend(
+            params.iter().map(|(_, t)| f32v(&t.shape, vec![0.0; t.data.len()])),
+        );
+    }
+    args.push(f32v(&meta.tokens_shape, images));
+    args.push(i32v(&meta.targets_shape, labels));
+    args.push(f32v(&[keep.len()], keep));
+    if let Some((rate, seed)) = rate_seed {
+        args.push(f32v(&[], vec![rate]));
+        args.push(i32v(&[], vec![seed]));
+    }
+    let m = HloModule::parse_file(&man.hlo_path(&meta, entry).unwrap()).unwrap();
+    (m, args)
+}
+
+// ------------------------------------------------- img fixture golden ---
+
+#[test]
+fn img_grad_fused_bit_identical_across_threads() {
+    // rate 0.5 drives the in-graph threefry noise masks through the
+    // conv forward AND both conv grad forms (input grad: reversed
+    // kernels + lhs_dilate; weight grad: batch_group_count)
+    let (m, args) = load_img("grad_mix", Some((0.5, 42)));
+    let fs = assert_fused_matches(&m, &args, "img.grad_mix@0.5,42");
+    assert_eq!(fs.generic_whiles, 0, "fallback storm: {fs:?}");
+    assert!(fs.counted_loops >= 1 && fs.threefry_calls >= 1, "{fs:?}");
+}
+
+#[test]
+fn img_grad_second_rate_seed_still_matches() {
+    let (m, args) = load_img("grad_mix", Some((0.9, 7)));
+    assert_fused_matches(&m, &args, "img.grad_mix@0.9,7");
+}
+
+#[test]
+fn img_eval_fused_bit_identical_across_threads() {
+    let (m, args) = load_img("eval", None);
+    assert_fused_matches(&m, &args, "img.eval");
+}
+
+// --------------------------------------------------------- window pin ---
+
+/// Self-contained reduce-window pools covering geometry the img model
+/// doesn't reach (it pools via plain `reduce`); heads below are the
+/// mirror-computed constants, exact in f32.
+const WINDOW_PIN: &str = include_str!("fixtures/interp/window_pin.hlo.txt");
+
+#[test]
+fn window_pin_exact_heads() {
+    let m = HloModule::parse_str(WINDOW_PIN).unwrap();
+    let data: Vec<f32> =
+        (0..60).map(|i| ((i * 37 + 11) % 101) as f32 * 0.25 - 12.0).collect();
+    let args = vec![f32v(&[2, 5, 6], data)];
+    let fs = assert_fused_matches(&m, &args, "window_pin");
+    // max/add/dilated pools fuse; the sumsq region stays generic
+    assert_eq!(fs.fused_windows, 3, "{fs:?}");
+    let out = Plan::compile(&m).run_entry(args, 3).unwrap();
+    let parts = out.tuple().unwrap();
+    let mp = parts[0].array().unwrap().as_f32().unwrap();
+    let dl = parts[2].array().unwrap().as_f32().unwrap();
+    assert_eq!(&mp[..3], &[5.0, 9.25, 11.75], "max-pool head");
+    assert_eq!(&dl[..3], &[-5.25, 18.25, -10.5], "dilated-pool head");
+}
+
+// ------------------------------------------- window-geometry property ---
+
+/// One spatial window dimension of the naive reference (deliberately
+/// its own struct: this file must not lean on the parser's types).
+#[derive(Clone, Copy)]
+struct Win {
+    size: usize,
+    stride: usize,
+    pad_lo: i64,
+    pad_hi: i64,
+    lhs_dilate: usize,
+    rhs_dilate: usize,
+}
+
+const UNIT: Win =
+    Win { size: 1, stride: 1, pad_lo: 0, pad_hi: 0, lhs_dilate: 1, rhs_dilate: 1 };
+
+fn out_size(w: &Win, n: usize) -> usize {
+    let dilated = if n == 0 { 0 } else { (n as i64 - 1) * w.lhs_dilate as i64 + 1 };
+    let window = (w.size as i64 - 1) * w.rhs_dilate as i64 + 1;
+    let padded = dilated + w.pad_lo + w.pad_hi;
+    if padded < window {
+        0
+    } else {
+        ((padded - window) / w.stride as i64) as usize + 1
+    }
+}
+
+/// Input position of window coordinate `kc` at output coordinate `oc`,
+/// None when it lands in padding or between dilation holes.
+fn tap(oc: usize, kc: usize, w: &Win, n: usize) -> Option<usize> {
+    let mut pos = oc as i64 * w.stride as i64 + kc as i64 * w.rhs_dilate as i64 - w.pad_lo;
+    if pos < 0 {
+        return None;
+    }
+    if w.lhs_dilate > 1 {
+        if pos % w.lhs_dilate as i64 != 0 {
+            return None;
+        }
+        pos /= w.lhs_dilate as i64;
+    }
+    if (pos as usize) < n {
+        Some(pos as usize)
+    } else {
+        None
+    }
+}
+
+/// Naive quadruple-loop NHWC × HWIO → NHWC convolution with the same
+/// accumulation order as the kernel (row-major kernel taps, input
+/// channel innermost, one f32 accumulator — so equality is bitwise).
+fn naive_conv(
+    x: &[f32],
+    xd: [usize; 4],
+    k: &[f32],
+    kd: [usize; 4],
+    win: &[Win; 2],
+    fg: usize,
+) -> (Vec<f32>, Vec<usize>) {
+    let [n, h, w_in, cin_total] = xd;
+    let [kh, kw, cin, cout] = kd;
+    assert_eq!(cin_total, cin * fg, "case is self-inconsistent");
+    let (oh, ow) = (out_size(&win[0], h), out_size(&win[1], w_in));
+    let per_group = cout / fg;
+    let mut out = vec![0.0f32; n * oh * ow * cout];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for oc in 0..cout {
+                    let g = oc / per_group;
+                    let mut acc = 0.0f32;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let (Some(iy), Some(ix)) =
+                                (tap(oy, ky, &win[0], h), tap(ox, kx, &win[1], w_in))
+                            else {
+                                continue;
+                            };
+                            for ic in 0..cin {
+                                let xi = ((b * h + iy) * w_in + ix) * cin_total
+                                    + (g * cin + ic);
+                                let ki = ((ky * kw + kx) * cin + ic) * cout + oc;
+                                acc += x[xi] * k[ki];
+                            }
+                        }
+                    }
+                    out[((b * oh + oy) * ow + ox) * cout + oc] = acc;
+                }
+            }
+        }
+    }
+    (out, vec![n, oh, ow, cout])
+}
+
+fn conv_text(
+    xd: &[usize; 4],
+    kd: &[usize; 4],
+    od: &[usize],
+    win: &[Win; 2],
+    fg: usize,
+) -> String {
+    let dim =
+        |d: &[usize]| d.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+    let w = format!(
+        "size={}x{} stride={}x{} pad={}_{}x{}_{} lhs_dilate={}x{} rhs_dilate={}x{}",
+        win[0].size,
+        win[1].size,
+        win[0].stride,
+        win[1].stride,
+        win[0].pad_lo,
+        win[0].pad_hi,
+        win[1].pad_lo,
+        win[1].pad_hi,
+        win[0].lhs_dilate,
+        win[1].lhs_dilate,
+        win[0].rhs_dilate,
+        win[1].rhs_dilate,
+    );
+    format!(
+        "HloModule convprop\n\nENTRY main.1 {{\n  \
+         x.1 = f32[{}]{{3,2,1,0}} parameter(0)\n  \
+         k.2 = f32[{}]{{3,2,1,0}} parameter(1)\n  \
+         ROOT c.3 = f32[{}]{{3,2,1,0}} convolution(x.1, k.2), window={{{w}}}, \
+         dim_labels=b01f_01io->b01f, feature_group_count={fg}\n}}\n",
+        dim(xd),
+        dim(kd),
+        dim(od)
+    )
+}
+
+fn check_conv_case(label: &str, xd: [usize; 4], kd: [usize; 4], win: [Win; 2], fg: usize) {
+    let xn: usize = xd.iter().product();
+    let kn: usize = kd.iter().product();
+    let x: Vec<f32> =
+        (0..xn).map(|i| ((i * 37 + 11) % 101) as f32 * 0.25 - 12.0).collect();
+    let k: Vec<f32> =
+        (0..kn).map(|i| ((i * 53 + 29) % 97) as f32 * 0.125 - 6.0).collect();
+    let (want, od) = naive_conv(&x, xd, &k, kd, &win, fg);
+    let text = conv_text(&xd, &kd, &od, &win, fg);
+    let m = HloModule::parse_str(&text).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+    let args = vec![f32v(&xd, x), f32v(&kd, k)];
+    let golden = Interp::new(&m).run_entry(&args).unwrap();
+    let got = golden.array().unwrap();
+    assert_eq!(got.dims, od, "{label}: dims");
+    let got = got.as_f32().unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: oracle[{i}] {a} vs naive {b}");
+    }
+    let plan = Plan::compile(&m);
+    for threads in [1usize, 3, 8] {
+        let got = plan.run_entry(args.clone(), threads).unwrap();
+        assert_bit_identical(&got, &golden, &format!("{label}[t={threads}]"));
+    }
+}
+
+#[test]
+fn conv_asymmetric_padding_matches_naive() {
+    let wy = Win { size: 3, pad_lo: 2, ..UNIT };
+    let wx = Win { size: 2, stride: 2, pad_hi: 1, ..UNIT };
+    check_conv_case("asym-pad", [2, 5, 7, 3], [3, 2, 3, 5], [wy, wx], 1);
+}
+
+#[test]
+fn conv_stride_larger_than_window_matches_naive() {
+    let w = Win { size: 2, stride: 3, ..UNIT };
+    check_conv_case("stride>window", [1, 8, 8, 2], [2, 2, 2, 4], [w, w], 1);
+}
+
+#[test]
+fn conv_window_dilation_matches_naive() {
+    let w = Win { size: 3, pad_lo: 2, pad_hi: 2, rhs_dilate: 2, ..UNIT };
+    check_conv_case("rhs-dilate", [1, 9, 9, 2], [3, 3, 2, 4], [w, w], 1);
+}
+
+#[test]
+fn conv_1x1_matches_naive() {
+    check_conv_case("1x1", [2, 4, 4, 6], [1, 1, 6, 8], [UNIT, UNIT], 1);
+}
+
+#[test]
+fn conv_degenerate_spatial_dim_matches_naive() {
+    let wx = Win { size: 3, pad_lo: 1, pad_hi: 1, ..UNIT };
+    check_conv_case("degenerate-h", [1, 1, 6, 2], [1, 3, 2, 2], [UNIT, wx], 1);
+}
+
+#[test]
+fn conv_all_padding_windows_match_naive() {
+    // pad 3 on a 2-row input: the first and last output rows see only
+    // padding and must come out exactly 0.0
+    let wy = Win { size: 2, stride: 2, pad_lo: 3, pad_hi: 3, ..UNIT };
+    let wx = Win { size: 2, ..UNIT };
+    check_conv_case("all-padding", [1, 2, 2, 1], [2, 2, 1, 1], [wy, wx], 1);
+}
+
+#[test]
+fn conv_base_dilation_matches_naive() {
+    // lhs_dilate is the input-gradient transpose-conv form
+    let w = Win { size: 2, pad_lo: 1, pad_hi: 1, lhs_dilate: 2, ..UNIT };
+    check_conv_case("lhs-dilate", [1, 4, 4, 2], [2, 2, 2, 3], [w, w], 1);
+}
+
+#[test]
+fn conv_feature_groups_match_naive() {
+    let w = Win { size: 3, pad_lo: 1, pad_hi: 1, ..UNIT };
+    check_conv_case("feature-groups", [2, 5, 5, 6], [3, 3, 3, 8], [w, w], 2);
+}
+
+#[test]
+fn reduce_window_all_padding_cells_return_init() {
+    let text = "HloModule rwpad\n\nmax.1 {\n  a.1 = f32[] parameter(0)\n  \
+        b.2 = f32[] parameter(1)\n  ROOT m.3 = f32[] maximum(a.1, b.2)\n}\n\n\
+        ENTRY main.1 {\n  x.1 = f32[3]{0} parameter(0)\n  \
+        ni.2 = f32[] constant(-7.5)\n  \
+        ROOT r.3 = f32[4]{0} reduce-window(x.1, ni.2), \
+        window={size=2 stride=2 pad=4_1}, to_apply=max.1\n}\n";
+    let m = HloModule::parse_str(text).unwrap();
+    let args = vec![f32v(&[3], vec![1.0, -2.0, 5.5])];
+    assert_fused_matches(&m, &args, "rwpad");
+    let out = Plan::compile(&m).run_entry(args, 1).unwrap();
+    let got = out.array().unwrap().as_f32().unwrap().to_vec();
+    // cells 0/1 cover only padding and keep the init value
+    assert_eq!(got, vec![-7.5, -7.5, 1.0, 5.5]);
+}

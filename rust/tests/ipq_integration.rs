@@ -12,13 +12,15 @@ use std::path::Path;
 use quant_noise::bench_harness::specs::{base_ipq, base_train, with_noise};
 use quant_noise::coordinator::evaluator::{evaluate, lm_eval_batches};
 use quant_noise::coordinator::ipq::{post_pq, run_ipq};
+use quant_noise::coordinator::quantize::quantize_params;
 use quant_noise::coordinator::trainer::{LmSource, Trainer};
 use quant_noise::data::batcher::LmBatcher;
 use quant_noise::data::corpus::MarkovCorpus;
 use quant_noise::quant::scheme::QuantSpec;
 use quant_noise::runtime::client::Runtime;
-use quant_noise::runtime::executable::ModelSession;
+use quant_noise::runtime::executable::{BatchInput, ModelSession};
 use quant_noise::runtime::manifest::Manifest;
+use quant_noise::util::rng::Pcg;
 
 #[test]
 fn ipq_finetune_beats_oneshot_pq() {
@@ -72,4 +74,41 @@ fn ipq_finetune_beats_oneshot_pq() {
     sess.upload_all_params(&trained).unwrap();
     let ev_fp = evaluate(&mut sess, "eval", &evalb, &keep).unwrap();
     assert!(ev_fp.nll <= ev_ipq.nll + 1e-6);
+}
+
+#[test]
+fn img_conv_block_pq_quantizes_and_evals_on_fixture() {
+    // Fig. 6b at fixture scale: whole-filter blocks (d=9) on the
+    // spatial conv families via the `conv` alias, with the pointwise
+    // 1×1s pinned back to d=4 by the more-specific structure override
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp");
+    let man = Manifest::load(&dir).expect("checked-in interp fixture must load");
+    let rt = Runtime::interp();
+    let (mut sess, init) = ModelSession::new(&rt, &man, "img_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let spec = QuantSpec::parse("pq:k=8,block.conv=9,block.conv1x1=4").unwrap();
+    let q = quantize_params(&init, &meta, &spec, &mut Pcg::new(11)).unwrap();
+    assert!(q.sq_error > 0.0, "K=8 PQ should be lossy on the conv weights");
+    assert_eq!(q.pq.get("stem").unwrap().block_size(), 9);
+    assert_eq!(q.pq.get("block00.dw").unwrap().block_size(), 9);
+    assert_eq!(q.pq.get("block00.expand").unwrap().block_size(), 4);
+    let fp32: u64 = meta
+        .params
+        .iter()
+        .map(|p| 4 * p.shape.iter().product::<usize>() as u64)
+        .sum();
+    assert!(q.bytes < fp32, "{} bytes should compress fp32 {fp32}", q.bytes);
+
+    // the quantized weights still run the conv graph end-to-end
+    sess.upload_all_params(&q.store).unwrap();
+    let n_px: usize = meta.tokens_shape.iter().product();
+    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
+    let labels: Vec<i32> =
+        (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let (sum_nll, correct) = sess
+        .eval("eval", &BatchInput::Images(&images), &labels, &keep)
+        .unwrap();
+    assert!(sum_nll.is_finite() && sum_nll > 0.0, "{sum_nll}");
+    assert!(correct <= meta.batch as f64);
 }

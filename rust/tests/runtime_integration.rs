@@ -2,11 +2,11 @@
 //! sense (finite loss near ln(vocab) at init, grads nonzero,
 //! noise-rate behaviour, LayerDrop masks, seed determinism).
 //!
-//! LM tests execute for real on the checked-in interpreter fixture
-//! (tests/fixtures/interp — DESIGN.md §4) and never skip. The img/cls
-//! and intN-entry tests need the full artifact zoo (conv ops are
-//! outside the interpreter's op set) and still skip without
-//! `make artifacts`.
+//! LM and img tests execute for real on the checked-in interpreter
+//! fixture (tests/fixtures/interp — DESIGN.md §4) and never skip: the
+//! interpreter covers the ConvNet op set (convolution, reverse,
+//! reduce-window). Only the cls and intN-entry tests need the full
+//! artifact zoo and still skip without `make artifacts`.
 
 use std::path::Path;
 
@@ -161,11 +161,33 @@ fn param_upload_changes_eval() {
     assert!((after / ntok - uniform).abs() < 0.05);
 }
 
+#[test]
+fn img_model_grad_and_eval() {
+    // runs on the checked-in interpreter fixture: convolution,
+    // reverse and reduce-window are in the interpreter's op set
+    let (rt, man) = fixture();
+    let (mut sess, _) = ModelSession::new(&rt, &man, "img_tiny").unwrap();
+    let meta = sess.meta.clone();
+    let n_px: usize = meta.tokens_shape.iter().product();
+    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
+    let labels: Vec<i32> = (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let (loss, grads) = sess
+        .grad("grad_mix", &BatchInput::Images(&images), &labels, &keep, 0.1, 5)
+        .unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(grads.iter().any(|g| g.max_abs() > 0.0));
+    let (sum_nll, correct) = sess
+        .eval("eval", &BatchInput::Images(&images), &labels, &keep)
+        .unwrap();
+    let per = sum_nll / meta.batch as f64;
+    assert!((per - (meta.n_classes as f64).ln()).abs() < 1.0, "{per}");
+    assert!(correct <= meta.batch as f64);
+}
+
 // ------------------------------------------------- artifact-gated ---
 // These need entries/models the tiny fixture does not carry; they run
-// only against `make artifacts` output. The conv model additionally
-// needs a real PJRT backend (conv ops are outside the interpreter's op
-// set) and soft-skips when the backend cannot execute it.
+// only against `make artifacts` output.
 
 #[test]
 fn int8_noise_entry_runs() {
@@ -183,39 +205,6 @@ fn int8_noise_entry_runs() {
         .grad("grad_int8", &BatchInput::Tokens(&tokens), &targets, &keep, 1.0, 3)
         .unwrap();
     assert!((l_fp - l_q).abs() < 0.1, "int8 QAT loss jump: {l_fp} vs {l_q}");
-}
-
-#[test]
-fn img_model_grad_and_eval() {
-    let Some(man) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let (mut sess, _) = ModelSession::new(&rt, &man, "img_tiny").unwrap();
-    let meta = sess.meta.clone();
-    let n_px: usize = meta.tokens_shape.iter().product();
-    let images: Vec<f32> = (0..n_px).map(|i| (i % 256) as f32 / 255.0).collect();
-    let labels: Vec<i32> = (0..meta.batch).map(|i| (i % meta.n_classes) as i32).collect();
-    let keep = vec![1.0f32; meta.n_layers];
-    let (loss, grads) = match sess
-        .grad("grad_mix", &BatchInput::Images(&images), &labels, &keep, 0.1, 5)
-    {
-        Ok(r) => r,
-        Err(e) => {
-            let msg = format!("{e:#}");
-            if msg.contains("unsupported HLO opcode") || msg.contains("unavailable") {
-                eprintln!("SKIP img_model_grad_and_eval (no conv-capable backend): {msg}");
-                return;
-            }
-            panic!("{msg}");
-        }
-    };
-    assert!(loss.is_finite() && loss > 0.0);
-    assert!(grads.iter().any(|g| g.max_abs() > 0.0));
-    let (sum_nll, correct) = sess
-        .eval("eval", &BatchInput::Images(&images), &labels, &keep)
-        .unwrap();
-    let per = sum_nll / meta.batch as f64;
-    assert!((per - (meta.n_classes as f64).ln()).abs() < 1.0, "{per}");
-    assert!(correct <= meta.batch as f64);
 }
 
 #[test]

@@ -305,6 +305,77 @@ def parse_slice_attr(s):
     return out
 
 
+def parse_window(s):
+    # {size=3x3 stride=2x2 pad=1_1x1_1 lhs_dilate=2x2 rhs_dilate=2x2} ->
+    # per-dim (size, stride, pad_lo, pad_hi, base_dilation, window_dilation);
+    # absent fields default to stride=1, pad=0_0, dilations=1 (HLO text
+    # omits defaults, e.g. `window={size=16x16}`).
+    fields = {}
+    for part in s.strip().lstrip("{").rstrip("}").split():
+        k, v = part.split("=")
+        fields[k] = v.split("x")
+    sizes = [int(v) for v in fields["size"]]
+    nd = len(sizes)
+
+    def ints(key):
+        if key not in fields:
+            return [1] * nd
+        return [int(v) for v in fields[key]]
+
+    strides = ints("stride")
+    base = ints("lhs_dilate")
+    wdil = ints("rhs_dilate")
+    if "pad" in fields:
+        pads = [tuple(int(p) for p in v.split("_")) for v in fields["pad"]]
+    else:
+        pads = [(0, 0)] * nd
+    return [
+        (sizes[d], strides[d], pads[d][0], pads[d][1], base[d], wdil[d])
+        for d in range(nd)
+    ]
+
+
+def parse_dim_labels(s):
+    # b01f_01io->b01f -> ((lhs_b, lhs_f, lhs_spatial[]),
+    #                     (rhs_i, rhs_o, rhs_spatial[]),
+    #                     (out_b, out_f, out_spatial[]))
+    # where spatial[k] is the tensor dim holding spatial dimension k.
+    lhs, rest = s.split("_", 1)
+    rhs, out = rest.split("->")
+
+    def spec(part, a_ch, b_ch):
+        a_pos = b_pos = -1
+        sp = [0] * (len(part) - 2)
+        for pos, ch in enumerate(part):
+            if ch == a_ch:
+                a_pos = pos
+            elif ch == b_ch:
+                b_pos = pos
+            else:
+                sp[int(ch)] = pos
+        assert a_pos >= 0 and b_pos >= 0, part
+        return a_pos, b_pos, sp
+
+    return spec(lhs, "b", "f"), spec(rhs, "i", "o"), spec(out, "b", "f")
+
+
+def resolve_window_pos(out_coord, win_coord, w, in_size):
+    # Map (output coord, window tap) -> input coord, or None when the tap
+    # lands in padding or between base-dilation lattice points. The check
+    # order matters: negativity BEFORE the modulo (Rust `%` keeps sign).
+    size, stride, pad_lo, pad_hi, base_dil, win_dil = w
+    pos = out_coord * stride + win_coord * win_dil - pad_lo
+    if pos < 0:
+        return None
+    if base_dil > 1:
+        if pos % base_dil != 0:
+            return None
+        pos //= base_dil
+    if pos >= in_size:
+        return None
+    return pos
+
+
 # ---------------------------------------------------------------- values ---
 
 NP_TY = {"f32": np.float32, "s32": np.int32, "u32": np.uint32, "pred": np.bool_}
@@ -528,6 +599,27 @@ class Interp:
         if op == "scatter":
             return self.scatter(sh, opv, a)
 
+        if op == "reverse":
+            x = opv[0]
+            dims = int_list(a["dimensions"])
+            xst = strides_of(x.dims)
+            ost = strides_of(sh.dims)
+            n = sh.numel()
+            out = np.empty(n, NP_TY[sh.ty])
+            for f in range(n):
+                oi = unflatten(f, sh.dims, ost)
+                xi = 0
+                for d in range(len(sh.dims)):
+                    c = x.dims[d] - 1 - oi[d] if d in dims else oi[d]
+                    xi += c * xst[d]
+                out[f] = x.data[xi]
+            return Arr(sh.ty, sh.dims, out)
+
+        if op == "convolution":
+            return self.conv(sh, opv[0], opv[1], a)
+        if op == "reduce-window":
+            return self.reduce_window(sh, opv, a)
+
         raise NotImplementedError(op)
 
     # ------------------------------------------------------------- dot ---
@@ -716,6 +808,110 @@ class Interp:
             upd = Arr(updates.ty, [], [updates.data[f]])
             res = self.run(comp, [cur, upd])
             out[pi] = res.data[0]
+        return Arr(sh.ty, sh.dims, out)
+
+    # ----------------------------------------------------- convolution ---
+
+    def conv(self, sh, lhs, rhs, a):
+        # General conv_general_dilated: output cells in ascending flat
+        # order; per cell, kernel spatial taps row-major ascending with
+        # the input channel innermost; one f32 accumulator. Feature and
+        # batch groups both use XLA's blocked indexing:
+        #   group        = oc // (O / feature_group_count)
+        #   batch_group  = oc // (O / batch_group_count)
+        #   lhs_batch    = batch_group * (N / batch_group_count) + out_b
+        win = parse_window(a.get("window", "{}"))
+        (lb, lf, lsp), (rin, rout, rsp), (ob, of, osp) = parse_dim_labels(
+            a["dim_labels"]
+        )
+        fg = int(a.get("feature_group_count", "1"))
+        bg = int(a.get("batch_group_count", "1"))
+        nsp = len(lsp)
+        lst = strides_of(lhs.dims)
+        rst = strides_of(rhs.dims)
+        ost = strides_of(sh.dims)
+        o_size = rhs.dims[rout]
+        i_size = rhs.dims[rin]
+        lb_size = lhs.dims[lb]
+        assert o_size % fg == 0 and o_size % bg == 0 and lb_size % bg == 0
+        kdims = [rhs.dims[rsp[s]] for s in range(nsp)]
+        kst = strides_of(kdims)
+        kn = 1
+        for d in kdims:
+            kn *= d
+        n = sh.numel()
+        out = np.empty(n, NP_TY[sh.ty])
+        for f in range(n):
+            oi = unflatten(f, sh.dims, ost)
+            oc = oi[of]
+            g = oc // (o_size // fg)
+            bgi = oc // (o_size // bg)
+            b = bgi * (lb_size // bg) + oi[ob]
+            acc = np.float32(0.0)
+            for kf in range(kn):
+                ki = unflatten(kf, kdims, kst)
+                lbase = b * lst[lb]
+                ok = True
+                for s in range(nsp):
+                    pos = resolve_window_pos(
+                        oi[osp[s]], ki[s], win[s], lhs.dims[lsp[s]]
+                    )
+                    if pos is None:
+                        ok = False
+                        break
+                    lbase += pos * lst[lsp[s]]
+                if not ok:
+                    continue
+                rbase = oc * rst[rout]
+                for s in range(nsp):
+                    rbase += ki[s] * rst[rsp[s]]
+                for ic in range(i_size):
+                    li = lbase + (g * i_size + ic) * lst[lf]
+                    ri = rbase + ic * rst[rin]
+                    acc = np.float32(acc + np.float32(lhs.data[li] * rhs.data[ri]))
+            out[f] = acc
+        return Arr(sh.ty, sh.dims, out)
+
+    # ---------------------------------------------------- reduce-window ---
+
+    def reduce_window(self, sh, opv, a):
+        # Region fold like `reduce`: acc starts at init, in-bounds window
+        # elements fold in ascending row-major window-position order;
+        # out-of-bounds taps (padding / dilation gaps) are skipped, which
+        # is exactly "padding is init-valued" for any fold with identity
+        # init.
+        x, init = opv
+        win = parse_window(a.get("window", "{}"))
+        comp = self.m.comps[a["to_apply"]]
+        rank = len(x.dims)
+        assert len(win) == rank
+        xst = strides_of(x.dims)
+        ost = strides_of(sh.dims)
+        wdims = [w[0] for w in win]
+        wst = strides_of(wdims)
+        wn = 1
+        for d in wdims:
+            wn *= d
+        n = sh.numel()
+        out = np.empty(n, NP_TY[sh.ty])
+        for f in range(n):
+            oi = unflatten(f, sh.dims, ost)
+            acc = Arr(init.ty, [], [init.data[0]])
+            for wf in range(wn):
+                wi = unflatten(wf, wdims, wst)
+                xi = 0
+                ok = True
+                for d in range(rank):
+                    pos = resolve_window_pos(oi[d], wi[d], win[d], x.dims[d])
+                    if pos is None:
+                        ok = False
+                        break
+                    xi += pos * xst[d]
+                if not ok:
+                    continue
+                val = Arr(x.ty, [], [x.data[xi]])
+                acc = self.run(comp, [acc, val])
+            out[f] = acc.data[0]
         return Arr(sh.ty, sh.dims, out)
 
 

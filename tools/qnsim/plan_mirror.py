@@ -12,9 +12,11 @@ kernels (packed dot, fused binary reduce, fused binary scatter, the
 superinstruction and the native threefry2x32 round kernel) in numpy and
 checks them against the reference algorithms — catching any index-math
 or accumulation-order mistake before it ships as Rust that this
-container cannot compile. Run:
+container cannot compile. Since the vision PR it also runs the img_tiny
+conv fixture (shared `convolution` kernel, fused `reduce-window` fold)
+through all three tiers. Run:
 
-    cd tools/qnsim && python3 plan_mirror.py        # ~2 min (pure python)
+    cd tools/qnsim && python3 plan_mirror.py        # ~5 min (pure python)
 """
 import os
 import sys
@@ -26,8 +28,8 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, HERE)
 
 from hlo_mirror import (
-    Arr, BINARY, Interp, int_list, parse_module, parse_slice_attr, strides_of,
-    unflatten,
+    Arr, BINARY, Interp, int_list, parse_module, parse_slice_attr,
+    parse_window, resolve_window_pos, strides_of, unflatten,
 )
 
 ROOT = os.path.dirname(os.path.dirname(HERE))
@@ -174,6 +176,49 @@ class PlannedInterp(Interp):
                     xi = base + sum(ri[k] * xst[d] for k, d in enumerate(dims))
                     v = x.data[xi]
                     acc = fn(acc, v) if acc_first else fn(v, acc)
+            out[f] = acc
+        return Arr(sh.ty, sh.dims, out)
+
+    def reduce_window(self, sh, opv, a):
+        # plan.rs fused reduce-window: same ascending output-cell /
+        # row-major window-tap order as the oracle, but folding with the
+        # raw scalar helper instead of invoking the region per element.
+        comp = self.m.comps[a["to_apply"]]
+        hit = self._match_bin_region(comp)
+        if len(opv) != 2 or sh.ty == "tuple" or hit is None:
+            return super().reduce_window(sh, opv, a)
+        opcode, acc_first = hit
+        fn = BINARY[opcode]
+        x, init = opv
+        win = parse_window(a.get("window", "{}"))
+        rank = len(x.dims)
+        xst = strides_of(x.dims)
+        ost = strides_of(sh.dims)
+        wdims = [w[0] for w in win]
+        wst = strides_of(wdims)
+        wn = 1
+        for d in wdims:
+            wn *= d
+        n = sh.numel()
+        i0 = init.data[0]
+        out = np.empty(n, x.data.dtype)
+        for f in range(n):
+            oi = unflatten(f, sh.dims, ost)
+            acc = i0
+            for wf in range(wn):
+                wi = unflatten(wf, wdims, wst)
+                xi = 0
+                ok = True
+                for d in range(rank):
+                    pos = resolve_window_pos(oi[d], wi[d], win[d], x.dims[d])
+                    if pos is None:
+                        ok = False
+                        break
+                    xi += pos * xst[d]
+                if not ok:
+                    continue
+                v = x.data[xi]
+                acc = fn(acc, v) if acc_first else fn(v, acc)
             out[f] = acc
         return Arr(sh.ty, sh.dims, out)
 
@@ -537,11 +582,11 @@ def assert_same(a, b, path):
     assert bits(a.data) == bits(b.data), f"{path}: payload differs"
 
 
-def fixture_args(grad):
+def fixture_args(model, grad, rate=0.5, seed=42):
     import json
     import struct
     man = json.load(open(os.path.join(FIX, "manifest.json")))
-    meta = man["models"]["lm_tiny"]
+    meta = man["models"][model]
     with open(os.path.join(FIX, meta["init"]), "rb") as f:
         assert f.read(4) == b"QNP1"
         (hlen,) = struct.unpack("<I", f.read(4))
@@ -551,11 +596,20 @@ def fixture_args(grad):
             numel = int(np.prod(p["shape"])) if p["shape"] else 1
             data = np.frombuffer(f.read(4 * numel), np.float32)
             params.append(Arr("f32", list(p["shape"]), data))
-    b, t = meta["tokens_shape"]
-    vocab = meta["config"]["vocab"]
-    n_layers = meta["config"]["n_layers"]
-    tokens = Arr("s32", [b, t], [(i * 7 + 3) % vocab for i in range(b * t)])
-    targets = Arr("s32", [b, t], [(i * 5 + 1) % vocab for i in range(b * t)])
+    n_layers = meta["n_layers"]
+    if meta["task"] == "img":
+        # same deterministic inputs as tests/runtime_integration.rs
+        tsh = meta["tokens_shape"]
+        n = int(np.prod(tsh))
+        tokens = Arr("f32", tsh, [(i % 256) / 255.0 for i in range(n)])
+        targets = Arr(
+            "s32", meta["targets_shape"],
+            [i % meta["n_classes"] for i in range(meta["targets_shape"][0])])
+    else:
+        b, t = meta["tokens_shape"]
+        vocab = meta["config"]["vocab"]
+        tokens = Arr("s32", [b, t], [(i * 7 + 3) % vocab for i in range(b * t)])
+        targets = Arr("s32", [b, t], [(i * 5 + 1) % vocab for i in range(b * t)])
     keep = Arr("f32", [n_layers], [1.0] * n_layers)
     args = list(params)
     if grad:
@@ -563,7 +617,7 @@ def fixture_args(grad):
                  for p in params]
     args += [tokens, targets, keep]
     if grad:
-        args += [Arr("f32", [], [0.5]), Arr("s32", [], [42])]
+        args += [Arr("f32", [], [rate]), Arr("s32", [], [seed])]
     return args
 
 
@@ -587,10 +641,10 @@ class CountingFused(Counting, FusedInterp):
     pass
 
 
-def check_fixture(entry, grad):
-    text = open(os.path.join(FIX, f"lm_tiny.{entry}.hlo.txt")).read()
+def check_fixture(model, entry, grad, rate=0.5, seed=42):
+    text = open(os.path.join(FIX, f"{model}.{entry}.hlo.txt")).read()
     m = parse_module(text)
-    args = fixture_args(grad)
+    args = fixture_args(model, grad, rate, seed)
     t0 = time.perf_counter()
     ref_i = CountingInterp(m)
     ref = ref_i.run_entry(args)
@@ -605,7 +659,7 @@ def check_fixture(entry, grad):
     n_out = len(ref[1])
     n_ref = sum(ref_i.hist.values())
     n_fused = sum(fused_i.hist.values())
-    print(f"{entry}: planned+fused kernels bit-identical to reference "
+    print(f"{model}.{entry}: planned+fused kernels bit-identical to reference "
           f"({n_out} outputs)  OK")
     print(f"  instr executions: reference {n_ref}, fused {n_fused} "
           f"({n_ref / max(n_fused, 1):.2f}x fewer); mirror wall-clock "
@@ -745,6 +799,66 @@ PIN_ARGS = [
 ]
 
 
+# A self-contained reduce-window module exercising the window geometry
+# corners the img fixture doesn't reach (img_tiny pools via plain
+# `reduce`): max pool with asymmetric padding, add pool SAME-style,
+# window dilation, and a non-binary region that must take the generic
+# fold path. The checked-in copy (window_pin.hlo.txt) is include_str!'d
+# by tests/interp_conv.rs and linted in CI.
+WINDOW_PIN = """HloModule window_pin
+
+max_region {
+  a.1 = f32[] parameter(0)
+  b.2 = f32[] parameter(1)
+  ROOT m.3 = f32[] maximum(a.1, b.2)
+}
+
+add_region {
+  a.4 = f32[] parameter(0)
+  b.5 = f32[] parameter(1)
+  ROOT s.6 = f32[] add(a.4, b.5)
+}
+
+sumsq_region {
+  a.7 = f32[] parameter(0)
+  b.8 = f32[] parameter(1)
+  sq.9 = f32[] multiply(b.8, b.8)
+  ROOT s.10 = f32[] add(a.7, sq.9)
+}
+
+ENTRY main.11 {
+  x.1 = f32[2,5,6]{2,1,0} parameter(0)
+  ninf.2 = f32[] constant(-3e38)
+  zero.3 = f32[] constant(0)
+  mp.4 = f32[2,3,3]{2,1,0} reduce-window(x.1, ninf.2), window={size=1x2x2 stride=1x2x2 pad=0_0x0_1x0_1}, to_apply=max_region
+  ap.5 = f32[2,5,6]{2,1,0} reduce-window(x.1, zero.3), window={size=1x3x3 pad=0_0x1_1x1_1}, to_apply=add_region
+  dl.6 = f32[2,3,2]{2,1,0} reduce-window(x.1, zero.3), window={size=1x2x2 stride=1x1x2 rhs_dilate=1x2x2}, to_apply=add_region
+  gn.7 = f32[2,2,3]{2,1,0} reduce-window(x.1, zero.3), window={size=1x3x2 stride=1x2x2}, to_apply=sumsq_region
+  ROOT t.8 = (f32[2,3,3]{2,1,0}, f32[2,5,6]{2,1,0}, f32[2,3,2]{2,1,0}, f32[2,2,3]{2,1,0}) tuple(mp.4, ap.5, dl.6, gn.7)
+}
+"""
+
+WINDOW_PIN_ARGS = [Arr(
+    "f32", [2, 5, 6],
+    [((i * 37 + 11) % 101) * 0.25 - 12.0 for i in range(60)])]
+
+
+def check_window_pin():
+    checked_in = open(os.path.join(FIX, "window_pin.hlo.txt")).read()
+    assert checked_in == WINDOW_PIN, "window_pin.hlo.txt drifted"
+    m = parse_module(WINDOW_PIN)
+    fused_i = FusedInterp(m)
+    assert fused_i._match_bin_region(m.comps["max_region"]) == ("maximum", True)
+    assert fused_i._match_bin_region(m.comps["add_region"]) == ("add", True)
+    assert fused_i._match_bin_region(m.comps["sumsq_region"]) is None
+    ref = Interp(m).run_entry(WINDOW_PIN_ARGS)
+    fused = fused_i.run_entry(WINDOW_PIN_ARGS)
+    assert_same(fused, ref, "window_pin")
+    heads = [" ".join(f"{float(v):g}" for v in arr.data[:3]) for arr in ref[1]]
+    print(f"window pin (max/add/dilated/generic pools): fused == oracle "
+          f"bitwise; heads: {' | '.join(heads)}  OK")
+
+
 def check_threefry_pin():
     # the Rust test include_str!s the checked-in copy; keep them equal
     checked_in = open(os.path.join(FIX, "threefry_pin.hlo.txt")).read()
@@ -765,8 +879,12 @@ def check_threefry_pin():
 def main():
     check_dot8()
     check_threefry_pin()
-    check_fixture("eval", grad=False)
-    check_fixture("grad_mix", grad=True)
+    check_window_pin()
+    check_fixture("lm_tiny", "eval", grad=False)
+    check_fixture("lm_tiny", "grad_mix", grad=True)
+    check_fixture("img_tiny", "eval", grad=False)
+    check_fixture("img_tiny", "grad_mix", grad=True)
+    check_fixture("img_tiny", "grad_mix", grad=True, rate=0.9, seed=7)
     print("PLANNED+FUSED KERNELS VALIDATED (bitwise) against the "
           "reference mirror")
 

@@ -2,13 +2,15 @@
 
 Runs the HLO mirror interpreter (`hlo_mirror.py` — a structural 1:1
 Python port of `rust/src/runtime/interp/`) on
-`rust/tests/fixtures/interp/` and compares loss + every gradient with
-jax executing the original lowered functions. Run after `make fixture`
-or after touching the Rust interpreter's algorithms:
+`rust/tests/fixtures/interp/` — both the `lm_tiny` Transformer and the
+`img_tiny` ConvNet (convolution / reverse / reduce-window path) — and
+compares loss + every gradient with jax executing the original lowered
+functions. Run after `make fixture` or after touching the Rust
+interpreter's algorithms:
 
     cd tools/qnsim && python3 validate_interp_fixture.py
 
-Needs jax (the same dependency `make fixture` needs). ~1 min on CPU.
+Needs jax (the same dependency `make fixture` needs). ~2 min on CPU.
 """
 import json
 import os
@@ -26,9 +28,22 @@ import jax
 import jax.numpy as jnp
 
 from hlo_mirror import parse_module, Interp, Arr
-from compile import model
+from compile import convnet, model
 
 FIX = os.path.join(ROOT, "rust", "tests", "fixtures", "interp")
+
+
+def load_params(meta):
+    with open(os.path.join(FIX, meta["init"]), "rb") as f:
+        assert f.read(4) == b"QNP1"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        params = {}
+        for p in header["params"]:
+            numel = int(np.prod(p["shape"])) if p["shape"] else 1
+            params[p["name"]] = np.frombuffer(
+                f.read(4 * numel), np.float32).reshape(p["shape"])
+    return params
 
 
 def load_fixture():
@@ -40,16 +55,20 @@ def load_fixture():
         n_heads=c["n_heads"], d_ffn=c["d_ffn"], seq_len=c["seq_len"],
         batch=c["batch"], noise_block_size=c["noise_block_size"],
     )
-    with open(os.path.join(FIX, meta["init"]), "rb") as f:
-        assert f.read(4) == b"QNP1"
-        (hlen,) = struct.unpack("<I", f.read(4))
-        header = json.loads(f.read(hlen))
-        params = {}
-        for p in header["params"]:
-            numel = int(np.prod(p["shape"])) if p["shape"] else 1
-            params[p["name"]] = np.frombuffer(
-                f.read(4 * numel), np.float32).reshape(p["shape"])
-    return cfg, meta, params
+    return cfg, meta, load_params(meta)
+
+
+def load_img_fixture():
+    man = json.load(open(os.path.join(FIX, "manifest.json")))
+    meta = man["models"]["img_tiny"]
+    c = meta["config"]
+    cfg = convnet.ConvConfig(
+        image_size=c["image_size"], in_channels=c["in_channels"],
+        stem_channels=c["stem_channels"],
+        blocks=tuple(tuple(b) for b in c["blocks"]),
+        n_classes=c["n_classes"], batch=c["batch"],
+    )
+    return cfg, meta, load_params(meta)
 
 
 def to_args(arrs):
@@ -59,6 +78,53 @@ def to_args(arrs):
         ty = {"float32": "f32", "int32": "s32"}[str(a.dtype)]
         out.append(Arr(ty, list(a.shape), a.ravel()))
     return out
+
+
+def validate_img():
+    """img_tiny: deterministic pixels/labels (same as the Rust tests)
+    through conv forward + both conv grad forms vs jax."""
+    cfg, meta, params = load_img_fixture()
+    names = sorted(convnet.param_shapes(cfg))
+    b, h, w, c = meta["tokens_shape"]
+    images = (np.arange(b * h * w * c) % 256).astype(
+        np.float32).reshape(b, h, w, c) / 255.0
+    labels = (np.arange(b) % meta["n_classes"]).astype(np.int32)
+    keep = np.ones(meta["n_layers"], np.float32)
+    jp = {n: jnp.asarray(params[n]) for n in names}
+
+    em = parse_module(open(os.path.join(FIX, "img_tiny.eval.hlo.txt")).read())
+    res = Interp(em).run_entry(
+        to_args([params[n] for n in names] + [images, labels, keep]))
+    got = [float(x.data[0]) for x in res[1]]
+    want = convnet.img_eval(cfg, jp, images, labels, keep)
+    assert abs(got[0] - float(want[0])) < 1e-3, (got, want)
+    assert got[1] == float(want[1]), (got, want)
+    print(f"img eval: mirror {got[0]:.6f} jax {float(want[0]):.6f} OK")
+
+    gm = parse_module(open(os.path.join(FIX, "img_tiny.grad_mix.hlo.txt")).read())
+    gi = Interp(gm)
+    loss_fn = convnet.noisy_loss_fn(cfg, "mix")
+    gfn = jax.jit(lambda p, ht, im, lb, k, r, s:
+                  jax.value_and_grad(loss_fn)(p, ht, im, lb, k, r, s))
+    hats = [np.zeros_like(params[n]) for n in names]
+    jh = {n: jnp.zeros_like(jp[n]) for n in names}
+    for rate, seed in [(0.0, 1), (0.5, 42)]:
+        res = gi.run_entry(to_args(
+            [params[n] for n in names] + hats
+            + [images, labels, keep, np.float32(rate), np.int32(seed)]))
+        loss_m = float(res[1][0].data[0])
+        wl, wg = gfn(jp, jh, images, labels, keep,
+                     jnp.float32(rate), jnp.int32(seed))
+        assert abs(loss_m - float(wl)) < 2e-3, (rate, seed, loss_m, float(wl))
+        maxerr = 0.0
+        for i, n in enumerate(names):
+            g = np.asarray(res[1][1 + i].data, np.float32).reshape(params[n].shape)
+            ref = np.asarray(wg[n])
+            scale = max(1e-6, float(np.max(np.abs(ref))))
+            maxerr = max(maxerr, float(np.max(np.abs(g - ref))) / scale)
+        assert maxerr < 5e-3, (rate, seed, maxerr)
+        print(f"img grad rate={rate} seed={seed}: loss {loss_m:.6f} "
+              f"(jax {float(wl):.6f}), max rel grad err {maxerr:.1e} OK")
 
 
 def main():
@@ -105,6 +171,7 @@ def main():
         assert maxerr < 5e-3, (rate, seed, maxerr)
         print(f"grad rate={rate} seed={seed}: loss {loss_m:.6f} "
               f"(jax {float(wl):.6f}), max rel grad err {maxerr:.1e} OK")
+    validate_img()
     print("FIXTURE VALIDATED against jax")
 
 

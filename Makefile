@@ -33,7 +33,8 @@ lint-plan:
 		tests/fixtures/interp/img_tiny.grad_mix.hlo.txt \
 		tests/fixtures/interp/img_tiny.eval.hlo.txt \
 		tests/fixtures/interp/threefry_pin.hlo.txt \
-		tests/fixtures/interp/window_pin.hlo.txt
+		tests/fixtures/interp/window_pin.hlo.txt \
+		benches/fixtures/lm_base.grad.hlo.txt
 
 # Per-step grad_mix/eval latency of the planned interpreter vs the
 # tree-walking evaluator on the checked-in fixture (no Python, no
@@ -63,6 +64,9 @@ fixture:
 		--configs configs/lm_tiny.json configs/img_tiny.json \
 		--entries grad_mix eval \
 		--out-dir ../rust/tests/fixtures/interp
+	$(PY) tools/qnsim/gen_lm_base.py \
+		--config python/configs/lm_base.json \
+		--out rust/benches/fixtures/lm_base.grad.hlo.txt
 
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings

@@ -4,7 +4,11 @@
 //! (counted `while` + native threefry), plus deterministic
 //! batch-sharded eval throughput and fused-reduce shard scaling, plus
 //! the `img_tiny` conv grad/eval rows (`conv[direct]` + fused
-//! reduce-window kernels). Runs with no artifacts and no Python.
+//! reduce-window kernels), plus the paper-scale `lm_base`-shaped grad
+//! step (1024-dim, 12-layer; `benches/fixtures/lm_base.grad.hlo.txt`)
+//! isolating the blocked-dot microkernel (`dot_tile_speedup`) and the
+//! elementwise-chain superinstructions (`chain_speedup_grad_1t`).
+//! Runs with no artifacts and no Python.
 //!
 //! Emits a machine-readable `BENCH_interp.json` (path override:
 //! `QN_BENCH_JSON`) so the perf trajectory is recorded per commit —
@@ -76,15 +80,16 @@ fn main() {
     let eval_mod = HloModule::parse_file(&man.hlo_path(&meta, "eval").unwrap()).unwrap();
     let grad_plan = Plan::compile(&grad_mod);
     let eval_plan = Plan::compile(&eval_mod);
-    let nofuse = PlanOptions { counted_loops: false, threefry: false };
+    let nofuse = PlanOptions { counted_loops: false, threefry: false, chains: false };
     let grad_plan_nofuse = Plan::compile_opts(&grad_mod, nofuse);
     let fs = grad_plan.fusion_stats();
     println!(
         "fusion census (grad_mix): {} counted loops, {} threefry call sites, \
-         {} generic whiles",
-        fs.counted_loops, fs.threefry_calls, fs.generic_whiles
+         {} generic whiles, {} chains ({} steps)",
+        fs.counted_loops, fs.threefry_calls, fs.generic_whiles, fs.fused_chains, fs.chain_steps
     );
     assert_eq!(fs.generic_whiles, 0, "fallback storm: a fixture while failed to fuse");
+    assert!(fs.fused_chains > 0, "no elementwise chains fused in the lm grad plan");
 
     let quick = std::env::var("QN_BENCH_QUICK")
         .map(|v| !v.is_empty() && v != "0")
@@ -177,6 +182,73 @@ fn main() {
         ie_plan.run_entry(ie_args.clone(), 1).unwrap()
     });
 
+    // paper-scale lm_base-shaped grad step: 1024-dim, 12-layer residual
+    // MLP stack with a hand-derived backward (36 [B,D]x[D,D] dots + one
+    // elementwise chain per layer per direction). The module is checked
+    // in; `make fixture` / tools/qnsim/gen_lm_base.py regenerates it.
+    // Weights are synthesized here — no training, no Python.
+    let base_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/fixtures/lm_base.grad.hlo.txt");
+    let base_mod = HloModule::parse_file(&base_path).expect("checked-in lm_base bench fixture");
+    let base_plan = Plan::compile(&base_mod);
+    let base_nochain =
+        Plan::compile_opts(&base_mod, PlanOptions { chains: false, ..PlanOptions::default() });
+    let bfs = base_plan.fusion_stats();
+    assert!(bfs.fused_chains > 0, "no elementwise chains fused in the lm_base grad plan");
+    let (bb, bd, bl) = (8usize, 1024usize, 12usize);
+    let mut base_args: Vec<Value> = Vec::with_capacity(1 + 2 * bl);
+    base_args.push(f32v(
+        &[bb, bd],
+        (0..bb * bd).map(|i| (i % 97) as f32 / 97.0 - 0.5).collect(),
+    ));
+    for l in 0..bl {
+        base_args.push(f32v(
+            &[bd, bd],
+            (0..bd * bd).map(|i| (((i * 31 + l) % 113) as f32 / 113.0 - 0.5) * 0.02).collect(),
+        ));
+        base_args.push(f32v(&[bd], (0..bd).map(|i| ((i + l) % 7) as f32 / 7.0 - 0.5).collect()));
+    }
+    println!(
+        "--- paper-scale lm_base grad step (D={bd}, L={bl}, B={bb}; \
+         {} chains / {} captured steps) ---",
+        bfs.fused_chains, bfs.chain_steps
+    );
+    let lb_1t =
+        run(&mut b, "lm_base_grad_1t_ns", "lm_base grad: planned+fused, 1 thread", &mut || {
+            base_plan.run_entry(base_args.clone(), 1).unwrap()
+        });
+    let lb_mt =
+        run(&mut b, "lm_base_grad_mt_ns", "lm_base grad: planned+fused, all cores", &mut || {
+            base_plan.run_entry(base_args.clone(), cores).unwrap()
+        });
+    let lb_nochain = run(
+        &mut b,
+        "lm_base_grad_nochain_1t_ns",
+        "lm_base grad: chains disabled, 1 thread",
+        &mut || base_nochain.run_entry(base_args.clone(), 1).unwrap(),
+    );
+
+    // blocked-dot microkernel vs the scalar ops::dot path the tree-walk
+    // evaluator dispatches, isolated on one paper-dim [B,D]x[D,D] dot
+    let dot_txt = format!(
+        "HloModule dot_tile\n\nENTRY main.1 {{\n  \
+         x.1 = f32[{bb},{bd}]{{1,0}} parameter(0)\n  \
+         w.2 = f32[{bd},{bd}]{{1,0}} parameter(1)\n  \
+         ROOT dot.3 = f32[{bb},{bd}]{{1,0}} dot(x.1, w.2), \
+         lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n}}\n"
+    );
+    let dot_mod = HloModule::parse_str(&dot_txt).unwrap();
+    let dot_plan = Plan::compile(&dot_mod);
+    let dot_args = vec![base_args[0].clone(), base_args[1].clone()];
+    let dt_scalar =
+        run(&mut b, "dot_scalar_ref_ns", "paper-dim dot: scalar ops::dot (tree-walk)", &mut || {
+            Interp::new(&dot_mod).run_entry(&dot_args).unwrap()
+        });
+    let dt_tile =
+        run(&mut b, "dot_tile_1t_ns", "paper-dim dot: blocked microkernel, 1 thread", &mut || {
+            dot_plan.run_entry(dot_args.clone(), 1).unwrap()
+        });
+
     // fused-reduce shard scaling on a synthetic large reduce
     let big_mod = HloModule::parse_str(BIG_REDUCE).unwrap();
     let big_plan = Plan::compile(&big_mod);
@@ -216,6 +288,15 @@ fn main() {
     let fuse_speedup_grad = gm_nofuse / gm_1t;
     let reduce_scaling = rd_1t / rd_mt;
     let scaling = eb_1t / eb_mt;
+    let chain_speedup_grad = lb_nochain / lb_1t;
+    let dot_tile_speedup = dt_scalar / dt_tile;
+    println!(
+        "lm_base (paper-scale): grad step {:.1}ms 1t / {:.1}ms all-cores; \
+         chain superinstructions {chain_speedup_grad:.2}x vs chains-off; \
+         blocked dot {dot_tile_speedup:.2}x vs scalar ops::dot",
+        lb_1t / 1e6,
+        lb_mt / 1e6
+    );
     println!(
         "\nplanned vs tree-walk (1 thread): grad_mix {speedup_grad:.2}x, eval {speedup_eval:.2}x"
     );
@@ -245,6 +326,10 @@ fn main() {
         "  \"quick\": {quick},\n  \"counted_loops\": {},\n  \"threefry_call_sites\": {},\n",
         fs.counted_loops, fs.threefry_calls
     ));
+    json.push_str(&format!(
+        "  \"fused_chains\": {},\n  \"chain_steps\": {},\n  \"lm_base_fused_chains\": {},\n",
+        fs.fused_chains, fs.chain_steps, bfs.fused_chains
+    ));
     for (k, v) in &rec {
         json.push_str(&format!("  \"{k}\": {v:.1},\n"));
     }
@@ -259,6 +344,10 @@ fn main() {
         "  \"img_speedup_grad_1t\": {:.3},\n  \"img_fused_windows\": {},\n",
         ig_tree / ig_1t,
         ifs.fused_windows
+    ));
+    json.push_str(&format!(
+        "  \"chain_speedup_grad_1t\": {chain_speedup_grad:.3},\n  \
+         \"dot_tile_speedup\": {dot_tile_speedup:.3},\n"
     ));
     json.push_str(&format!("  \"batch_scaling\": {scaling:.3}\n}}\n"));
     let out = std::env::var("QN_BENCH_JSON").unwrap_or_else(|_| "BENCH_interp.json".into());

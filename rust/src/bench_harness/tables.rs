@@ -69,7 +69,7 @@ fn ipq_row(
     entry: &str,
 ) -> Result<Row> {
     let mut cfg = base_ipq(default_ipq_finetune(&lab.sess.meta.task));
-    cfg.int8_centroids = int8_centroids;
+    cfg.centroid_bits = int8_centroids.then_some(8);
     lab.sess.upload_all_params(params)?;
     lab.sess.zero_hats()?;
     let (q, _report) = run_ipq(&mut lab.sess, params, lab.train_src.as_mut(), &cfg)?;

@@ -41,8 +41,9 @@ pub struct IpqConfig {
     /// structure quantization order; noised structures not listed are
     /// appended at the end in manifest order
     pub order: Vec<String>,
-    /// §3.3: int8-compress centroids at the end
-    pub int8_centroids: bool,
+    /// §3.3: intN-compress centroids at the end (`Some(8)` = iPQ ⊕
+    /// int8, `Some(4)` = the int4 variant, `None` = fp32 codebooks)
+    pub centroid_bits: Option<u8>,
     /// global PQ block-size override; `None` ⇒ per-param manifest block
     pub block: Option<usize>,
     /// per-structure PQ block-size override (Fig. 6b; wins over `block`)
@@ -61,7 +62,7 @@ impl Default for IpqConfig {
             codeword_lr: 0.05,
             float_lr: 0.01,
             order: vec!["ffn".into(), "emb".into(), "attn".into()],
-            int8_centroids: false,
+            centroid_bits: None,
             block: None,
             block_override: BTreeMap::new(),
             threads: 0,
@@ -78,7 +79,7 @@ impl IpqConfig {
             k: self.k,
             block: self.block,
             kmeans_iters: self.kmeans_iters,
-            int8_codebook: self.int8_centroids,
+            codebook_bits: self.centroid_bits,
             block_override: self.block_override.clone(),
             threads: self.threads,
         })
@@ -230,10 +231,10 @@ pub fn run_ipq(
         group_losses.push((group.join(","), last_loss));
     }
 
-    // 3. optional §3.3 combination: int8-compress all codebooks
-    if cfg.int8_centroids {
+    // 3. optional §3.3 combination: intN-compress all codebooks
+    if let Some(bits) = cfg.centroid_bits {
         for (name, m) in pq_state.iter_mut() {
-            m.codebook.compress_int8();
+            m.codebook.compress(bits);
             m.decode_into(&mut work.get_mut(name).unwrap().data);
         }
         sess.upload_all_params(&work)?;

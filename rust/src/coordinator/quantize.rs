@@ -227,7 +227,7 @@ mod tests {
         let plain = quantize_params(&params, &meta, &QuantSpec::pq(16), &mut Pcg::new(2)).unwrap();
         let mut s = QuantSpec::pq(16);
         if let QuantSpec::Pq(p) = &mut s {
-            p.int8_codebook = true;
+            p.codebook_bits = Some(8);
         }
         let combo = quantize_params(&params, &meta, &s, &mut Pcg::new(2)).unwrap();
         assert!(combo.bytes < plain.bytes);

@@ -191,7 +191,7 @@ fn quantize(rest: &[String]) -> Result<()> {
         // iPQ is a finetuning *procedure*, not just a storage scheme —
         // its options reuse the pq spec grammar (`ipq:k=128,cb=int8`)
         let mut cfg = IpqConfig { k, ..Default::default() };
-        cfg.int8_centroids = args.flag("int8-centroids");
+        cfg.centroid_bits = args.flag("int8-centroids").then_some(8);
         cfg.threads = args.num_or("threads", 0usize);
         cfg.finetune_steps = 25;
         if let Some(opts) = scheme.strip_prefix("ipq:") {
@@ -217,7 +217,7 @@ fn quantize(rest: &[String]) -> Result<()> {
                 }
                 if explicit.contains(&"cb") {
                     // an explicitly typed cb= wins over --int8-centroids
-                    cfg.int8_centroids = p.int8_codebook;
+                    cfg.centroid_bits = p.codebook_bits;
                 }
                 cfg.block = p.block;
                 cfg.block_override = p.block_override;
@@ -226,7 +226,7 @@ fn quantize(rest: &[String]) -> Result<()> {
                 }
             }
         }
-        let int8_cb = cfg.int8_centroids;
+        let int8_cb = cfg.centroid_bits == Some(8);
         lab.sess.upload_all_params(&params)?;
         let (q, _) = run_ipq(&mut lab.sess, &params, lab.train_src.as_mut(), &cfg)?;
         (q.store, q.bytes, int8_cb)
@@ -248,7 +248,7 @@ fn quantize(rest: &[String]) -> Result<()> {
             }
             "pq" => {
                 let mut p = PqSpec::new(k);
-                p.int8_codebook = args.flag("int8-centroids");
+                p.codebook_bits = args.flag("int8-centroids").then_some(8);
                 p.threads = args.num_or("threads", 0usize);
                 QuantSpec::Pq(p)
             }
@@ -269,7 +269,7 @@ fn quantize(rest: &[String]) -> Result<()> {
                     .unwrap_or(false);
                 if args.flag("int8-centroids") && !explicit_cb {
                     if let QuantSpec::Pq(p) = &mut spec {
-                        p.int8_codebook = true;
+                        p.codebook_bits = Some(8);
                     }
                 }
                 let threads = args.num_or("threads", 0usize);
@@ -279,7 +279,7 @@ fn quantize(rest: &[String]) -> Result<()> {
                 spec
             }
         };
-        let int8_cb = matches!(&spec, QuantSpec::Pq(p) if p.int8_codebook);
+        let int8_cb = matches!(&spec, QuantSpec::Pq(p) if p.codebook_bits == Some(8));
         let q = quantize_params(&params, &lab.sess.meta, &spec, &mut Pcg::new(5))?;
         (q.store, q.bytes, int8_cb)
     };
@@ -349,6 +349,32 @@ fn e2e(rest: &[String]) -> Result<()> {
 
 // ------------------------------------------------------------ serve ---
 
+/// Raised by the SIGINT/SIGTERM handler; `serve::run_until` polls it
+/// and drains the server gracefully when it flips.
+static SERVE_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn serve_stop_handler(_signum: i32) {
+    // Only async-signal-safe work here: a single atomic store.
+    SERVE_STOP.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Install `serve_stop_handler` for SIGINT (2) and SIGTERM (15) via the
+/// libc `signal(2)` entry point; no libc crate, so declare it directly.
+/// Kept in the binary: the library forbids unsafe code.
+fn install_serve_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    // SAFETY: the handler only stores to a static atomic, which is
+    // async-signal-safe; `signal` is the standard C entry point.
+    unsafe {
+        signal(SIGINT, serve_stop_handler);
+        signal(SIGTERM, serve_stop_handler);
+    }
+}
+
 fn serve(rest: &[String]) -> Result<()> {
     let cmd = Command::new(
         "serve",
@@ -373,7 +399,8 @@ fn serve(rest: &[String]) -> Result<()> {
         backend: None, // QN_BACKEND decides, same as every other subcommand
         selfcheck: args.flag("selfcheck"),
     };
-    quant_noise::serve::run(&artifacts_dir(&args), cfg)
+    install_serve_signal_handlers();
+    quant_noise::serve::run_until(&artifacts_dir(&args), cfg, &SERVE_STOP)
 }
 
 // -------------------------------------------------------- lint-plan ---
@@ -401,12 +428,13 @@ fn lint_plan(rest: &[String]) -> Result<()> {
         println!("== {path}");
         // verify at every fusion setting: the nofuse plans execute too
         // (benches, regression tests), so they must be just as sound
-        for (cl, tf) in [(true, true), (true, false), (false, true), (false, false)] {
-            let opts = PlanOptions { counted_loops: cl, threefry: tf };
+        for bits in 0u8..8 {
+            let (cl, tf, ch) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            let opts = PlanOptions { counted_loops: cl, threefry: tf, chains: ch };
             let plan = Plan::compile_unverified(&module, opts);
             let diags = verify::verify(&plan);
             for d in &diags {
-                println!("  [counted_loops={cl} threefry={tf}] {d}");
+                println!("  [counted_loops={cl} threefry={tf} chains={ch}] {d}");
             }
             total += diags.len();
         }

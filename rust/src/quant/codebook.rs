@@ -1,25 +1,27 @@
-//! PQ codebook storage, including the int8-compressed variant of §3.3
+//! PQ codebook storage, including the intN-compressed variants of §3.3
 //! (iPQ ⊕ int8: centroids stored as int8 codes, dividing the codebook
-//! overhead by 4 while the index matrix stays log2(K) bits per block).
+//! overhead by 4 while the index matrix stays log2(K) bits per block;
+//! `cb=int4` halves the codebook term again at a higher centroid MSE).
 
 use crate::quant::scalar::{self, QParams};
 
 #[derive(Debug, Clone)]
 pub struct Codebook {
-    /// K × d codewords, row-major, fp32 (possibly already an int8
-    /// round-trip if `int8` is set).
+    /// K × d codewords, row-major, fp32 (possibly already an intN
+    /// round-trip if `quant` is set).
     pub centroids: Vec<f32>,
     pub k: usize,
     pub d: usize,
-    /// Set when the centroids have been int8-quantized (affects
-    /// storage accounting and marks that values lie on the int8 grid).
-    pub int8: Option<QParams>,
+    /// Set when the centroids have been intN-quantized (affects
+    /// storage accounting and marks that values lie on the intN grid;
+    /// the bit width lives in [`QParams::bits`]).
+    pub quant: Option<QParams>,
 }
 
 impl Codebook {
     pub fn new(centroids: Vec<f32>, k: usize, d: usize) -> Codebook {
         assert_eq!(centroids.len(), k * d);
-        Codebook { centroids, k, d, int8: None }
+        Codebook { centroids, k, d, quant: None }
     }
 
     #[inline]
@@ -31,13 +33,14 @@ impl Codebook {
         &mut self.centroids[j * self.d..(j + 1) * self.d]
     }
 
-    /// Quantize the centroids themselves to int8 (Eq. 2 over the whole
-    /// codebook). Returns the quantization MSE over centroid entries.
-    pub fn compress_int8(&mut self) -> f64 {
-        let qp = QParams::from_minmax(&self.centroids, 8);
+    /// Quantize the centroids themselves to intN (Eq. 2 over the whole
+    /// codebook; `bits=8` is the paper's §3.3 combination). Returns the
+    /// quantization MSE over centroid entries.
+    pub fn compress(&mut self, bits: u8) -> f64 {
+        let qp = QParams::from_minmax(&self.centroids, bits);
         let before = self.centroids.clone();
         scalar::roundtrip(&mut self.centroids, &qp);
-        self.int8 = Some(qp);
+        self.quant = Some(qp);
         before
             .iter()
             .zip(&self.centroids)
@@ -46,10 +49,15 @@ impl Codebook {
             / before.len().max(1) as f64
     }
 
-    /// Codebook storage in bits: 8·K·d when int8-compressed (Eq. 5's
-    /// first term), else 32·K·d for fp32 centroids.
+    /// Quantize the centroids to int8 (§3.3's iPQ ⊕ int8).
+    pub fn compress_int8(&mut self) -> f64 {
+        self.compress(8)
+    }
+
+    /// Codebook storage in bits: b·K·d when intN-compressed (Eq. 5's
+    /// first term at b=8), else 32·K·d for fp32 centroids.
     pub fn storage_bits(&self) -> u64 {
-        let per = if self.int8.is_some() { 8 } else { 32 };
+        let per = self.quant.map_or(32u64, |q| u64::from(q.bits));
         per * (self.k * self.d) as u64
     }
 }
@@ -78,15 +86,30 @@ mod tests {
         assert_eq!(c.storage_bits() * 4, fp32);
         assert!(mse > 0.0); // lossy
         // error per entry bounded by s/2
-        let qp = c.int8.unwrap();
+        let qp = c.quant.unwrap();
         assert!(mse.sqrt() <= (qp.scale / 2.0) as f64 + 1e-6);
+    }
+
+    #[test]
+    fn int4_compression_shrinks_storage_8x_at_higher_mse() {
+        let fp32 = cb(2, 256, 8).storage_bits();
+        let mut c8 = cb(2, 256, 8);
+        let mse8 = c8.compress(8);
+        let mut c4 = cb(2, 256, 8);
+        let mse4 = c4.compress(4);
+        assert_eq!(c4.storage_bits() * 8, fp32);
+        assert_eq!(c4.quant.unwrap().bits, 4);
+        // 16 grid points instead of 256: strictly coarser
+        assert!(mse4 > mse8);
+        let qp = c4.quant.unwrap();
+        assert!(mse4.sqrt() <= (qp.scale / 2.0) as f64 + 1e-6);
     }
 
     #[test]
     fn int8_values_on_grid() {
         let mut c = cb(3, 16, 4);
         c.compress_int8();
-        let qp = c.int8.unwrap();
+        let qp = c.quant.unwrap();
         for &v in &c.centroids {
             // v must equal its own round-trip (already on the grid)
             assert!((v - qp.roundtrip_one(v)).abs() < 1e-6);

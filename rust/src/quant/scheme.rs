@@ -25,11 +25,12 @@
 //! | `int8:per_channel`      | Table 10   | intN with per-row scale/zero              |
 //! | `pq:k=256,d=8`          | §3.2       | Product Quantization, K codewords, d-dim  |
 //! | `pq:k=256,d=8,cb=int8`  | §3.3/Eq. 5 | iPQ ⊕ int8 codebook combination           |
+//! | `pq:k=256,d=8,cb=int4`  | §3.3 ext.  | iPQ ⊕ int4 codebook (8× smaller than fp32)|
 //!
 //! `pq` options: `k=` codebook size, `d=`/`block=` global subvector
 //! length (defaults to each parameter's manifest block size),
-//! `iters=` k-means iterations (default 12), `cb=int8|fp32` codebook
-//! storage, `threads=` workers (0 ⇒ all cores), `block.<structure>=`
+//! `iters=` k-means iterations (default 12), `cb=int8|int4|fp32`
+//! codebook storage, `threads=` workers (0 ⇒ all cores), `block.<structure>=`
 //! per-structure block override (Fig. 6b). `exact_pq` — and a bare `pq`
 //! with no options, matching the old `--noise pq` — are legacy aliases
 //! for the trainer's φ_PQ noise defaults (`pq:k=64,iters=6`).
@@ -41,7 +42,8 @@
 //! use quant_noise::quant::scheme::QuantSpec;
 //! for s in ["none", "proxy", "mean_sub", "int8", "int4",
 //!           "int8:histogram", "int8:per_channel",
-//!           "pq:k=256,d=8", "pq:k=256,d=8,cb=int8"] {
+//!           "pq:k=256,d=8", "pq:k=256,d=8,cb=int8",
+//!           "pq:k=256,d=8,cb=int4"] {
 //!     assert_eq!(QuantSpec::parse(s)?.to_string(), s, "{s} must round-trip");
 //! }
 //! # Ok::<(), quant_noise::quant::scheme::SchemeError>(())
@@ -125,8 +127,9 @@ pub struct PqSpec {
     /// block size.
     pub block: Option<usize>,
     pub kmeans_iters: usize,
-    /// §3.3: store the codebook int8-quantized (Eq. 5's 8·K·d term).
-    pub int8_codebook: bool,
+    /// §3.3: store the codebook intN-quantized (`Some(8)` is Eq. 5's
+    /// 8·K·d term; `Some(4)` halves it again; `None` keeps fp32).
+    pub codebook_bits: Option<u8>,
     /// Per-structure block override (Fig. 6b).
     pub block_override: BTreeMap<String, usize>,
     /// k-means/encode worker threads (0 ⇒ all cores).
@@ -139,7 +142,7 @@ impl Default for PqSpec {
             k: 256,
             block: None,
             kmeans_iters: 12,
-            int8_codebook: false,
+            codebook_bits: None,
             block_override: BTreeMap::new(),
             threads: 0,
         }
@@ -257,7 +260,7 @@ impl QuantSpec {
                         kmeans_iters: s.kmeans_iters,
                         threads: s.threads,
                     },
-                    int8_codebook: s.int8_codebook,
+                    codebook_bits: s.codebook_bits,
                 })
             }
         }
@@ -327,10 +330,15 @@ impl QuantSpec {
                         "iters" => p.kmeans_iters = usize_val()?,
                         "threads" => p.threads = usize_val()?,
                         "cb" => {
-                            p.int8_codebook = match val {
-                                "int8" => true,
-                                "fp32" => false,
-                                _ => return Err(err(format!("cb must be int8|fp32, got '{val}'"))),
+                            p.codebook_bits = match val {
+                                "int8" => Some(8),
+                                "int4" => Some(4),
+                                "fp32" => None,
+                                _ => {
+                                    return Err(err(format!(
+                                        "cb must be int8|int4|fp32, got '{val}'"
+                                    )))
+                                }
                             }
                         }
                         _ => match key.strip_prefix("block.") {
@@ -395,8 +403,8 @@ impl fmt::Display for QuantSpec {
                 if p.kmeans_iters != 12 {
                     write!(f, ",iters={}", p.kmeans_iters)?;
                 }
-                if p.int8_codebook {
-                    write!(f, ",cb=int8")?;
+                if let Some(bits) = p.codebook_bits {
+                    write!(f, ",cb=int{bits}")?;
                 }
                 if p.threads != 0 {
                     write!(f, ",threads={}", p.threads)?;
@@ -714,11 +722,12 @@ impl Quantizer for ScalarQuant {
     }
 }
 
-/// Product Quantization (§3.2), optionally with the §3.3 int8-codebook
-/// combination. The block size is already resolved for one parameter.
+/// Product Quantization (§3.2), optionally with the §3.3 intN-codebook
+/// combination (`cb=int8` / `cb=int4`). The block size is already
+/// resolved for one parameter.
 pub struct PqQuant {
     pub cfg: PqConfig,
-    pub int8_codebook: bool,
+    pub codebook_bits: Option<u8>,
 }
 
 impl Quantizer for PqQuant {
@@ -739,8 +748,8 @@ impl Quantizer for PqQuant {
             return Err(SchemeError::BlockMismatch { cols, block: d });
         }
         let mut m = pq::fit(w, rows, cols, &self.cfg, rng);
-        if self.int8_codebook {
-            m.codebook.compress_int8();
+        if let Some(bits) = self.codebook_bits {
+            m.codebook.compress(bits);
         }
         let data = m.decode();
         Ok(QuantizedTensor { data, pq: Some(m) })
@@ -771,9 +780,9 @@ impl Quantizer for PqQuant {
         Ok(HatKind::Host(self.fit(w, rows, cols, rng)?.data))
     }
 
-    /// Eq. 5 without the activation term: codebook (8·K·d int8 or
-    /// 32·K·d fp32, +64 qparam bits when int8) plus log2(K) bits per
-    /// subvector index.
+    /// Eq. 5 without the activation term: codebook (b·K·d for a
+    /// `cb=intN` codebook, 32·K·d fp32, +64 qparam bits when
+    /// compressed) plus log2(K) bits per subvector index.
     fn storage_bits(&self, p: &ParamInfo) -> u64 {
         if !p.quantized {
             return fp32_bits(p);
@@ -782,8 +791,9 @@ impl Quantizer for PqQuant {
         let k = self.cfg.n_centroids;
         let n_sub = (p.numel / d) as u64;
         let index_bits = (k.max(2) as f64).log2().ceil() as u64;
-        let centroid_bits = if self.int8_codebook { 8 } else { 32 } * (k * d) as u64;
-        centroid_bits + index_bits * n_sub + if self.int8_codebook { 64 } else { 0 }
+        let cb_per = self.codebook_bits.map_or(32u64, u64::from);
+        let centroid_bits = cb_per * (k * d) as u64;
+        centroid_bits + index_bits * n_sub + if self.codebook_bits.is_some() { 64 } else { 0 }
     }
 }
 
@@ -824,7 +834,7 @@ mod tests {
         let pq = QuantSpec::parse("pq:k=256,d=8,cb=int8").unwrap();
         match &pq {
             QuantSpec::Pq(p) => {
-                assert_eq!((p.k, p.block, p.int8_codebook), (256, Some(8), true));
+                assert_eq!((p.k, p.block, p.codebook_bits), (256, Some(8), Some(8)));
                 assert_eq!(p.kmeans_iters, 12);
             }
             other => panic!("{other:?}"),
@@ -863,7 +873,7 @@ mod tests {
         let mut p = PqSpec::new(64);
         p.block = Some(4);
         p.kmeans_iters = 6;
-        p.int8_codebook = true;
+        p.codebook_bits = Some(8);
         p.threads = 3;
         p.block_override.insert("emb".into(), 4);
         p.block_override.insert("ffn".into(), 16);

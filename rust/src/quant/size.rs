@@ -82,7 +82,11 @@ mod tests {
     use crate::quant::scheme::{IntObserver, PqSpec};
 
     fn pq_spec(k: usize, int8: bool) -> QuantSpec {
-        QuantSpec::Pq(PqSpec { k, int8_codebook: int8, ..Default::default() })
+        QuantSpec::Pq(PqSpec { k, codebook_bits: int8.then_some(8), ..Default::default() })
+    }
+
+    fn pq_spec_cb(k: usize, cb: Option<u8>) -> QuantSpec {
+        QuantSpec::Pq(PqSpec { k, codebook_bits: cb, ..Default::default() })
     }
 
     fn inv() -> Vec<ParamInfo> {
@@ -160,6 +164,10 @@ mod tests {
         // int8 centroids divide the codebook term by 4 (+64 qparams bits)
         let bits8 = param_bits(&params[0], &pq_spec(256, true));
         assert_eq!(bits8, 8 * 256 * 8 + 8 * (1 << 17) + 64);
+        // int4 centroids divide it by 8; the index term is untouched
+        let bits4 = param_bits(&params[0], &pq_spec_cb(256, Some(4)));
+        assert_eq!(bits4, 4 * 256 * 8 + 8 * (1 << 17) + 64);
+        assert!(bits4 < bits8);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! (DESIGN.md §4): compile-time pattern matchers that let the planned
 //! executor run the interpreter's hottest loops as superinstructions.
 //!
-//! Two patterns are recognized:
+//! Three patterns are recognized:
 //!
 //! * **Counted `while` loops** ([`match_counted_loop`]). The loop
 //!   condition is a compare of one integer state element against a
@@ -27,6 +27,18 @@
 //!   canonical four-round chain. Matched calls execute as the native
 //!   [`crate::runtime::interp::ops::threefry2x32`] kernel — one
 //!   unrolled pass over the flat u32 lane buffers.
+//! * **Elementwise chains** ([`match_chains`]). Runs of single-use
+//!   same-shape elementwise steps (`unary`/`binary`/`select`/
+//!   `compare`/`convert`, plus single-use `broadcast`s of one-element
+//!   values, which become splat inputs) collapse into one
+//!   [`ChainSpec`] superinstruction at the last step of the run: a
+//!   compiled per-element op tape the executor evaluates in a single
+//!   pass over the output buffer — no intermediate buffers, one
+//!   dispatch instead of one per step, in place on a dying operand
+//!   when the planner's liveness pass finds one. Multi-use
+//!   intermediates stay external inputs (diamonds are fine — the value
+//!   is loaded once per element per slot), `bitcast-convert` and
+//!   anything shape-changing falls back to standalone steps.
 //!
 //! **Determinism argument.** The counted-loop rewrite runs the same
 //! body steps on the same values in the same order; skipping the
@@ -35,20 +47,27 @@
 //! increment pins down. The threefry kernel is exact u32 wrapping
 //! arithmetic — add/xor/or/shift have no rounding, so algebraic
 //! regrouping (`(x + k) + c` vs `x + (k + c)`) is bit-exact and the
-//! kernel provably equals the generic elementwise chain. Both rewrites
-//! were additionally validated bit-identically against the reference
-//! mirror on the committed fixture (`tools/qnsim/plan_mirror.py`).
+//! kernel provably equals the generic elementwise chain. The chain
+//! tape applies the *same scalar helpers* as the standalone kernels to
+//! the same operands in the same element order (the tape is evaluated
+//! per output element, and elementwise ops never read across
+//! elements), so elision of the intermediate buffers cannot change a
+//! single bit. All rewrites were additionally validated bit-identically
+//! against the reference mirror on the committed fixtures
+//! (`tools/qnsim/plan_mirror.py`).
 //!
-//! **Keep in sync:** [`crate::runtime::interp::verify`] re-proves both
-//! patterns from the HLO with independently authored code
-//! (`derive_counted`, `prove_threefry`) and rejects any plan where its
-//! derivation disagrees with the annotation these matchers produced.
+//! **Keep in sync:** [`crate::runtime::interp::verify`] re-proves all
+//! three patterns from the HLO with independently authored code
+//! (`derive_counted`, `prove_threefry`, `derive_chains`) and rejects
+//! any plan where its derivation disagrees with the annotation these
+//! matchers produced.
 //! Loosening or extending a matcher here without teaching the verifier
 //! the same rule turns every newly matched plan into a verification
 //! failure — deliberately (DESIGN.md §8).
 
 use std::rc::Rc;
 
+use crate::runtime::interp::ops;
 use crate::runtime::interp::parser::{BinaryOp, CmpDir, Computation, HloModule, Instr, Op};
 use crate::runtime::interp::value::{Buf, ElemType};
 
@@ -176,6 +195,205 @@ pub fn match_counted_loop(m: &HloModule, cond: usize, body: usize) -> Option<Cou
         .filter(|&i| i != bp && i != bc.root && !state_reads.iter().any(|&(gi, _)| gi == i))
         .collect();
     Some(CountedLoop { idx, bound, body, arity, state_reads, take_state, steps, root_ops })
+}
+
+// ------------------------------------------------- elementwise chains ---
+
+/// One external input of an elementwise chain, in slot order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainInput {
+    /// Loaded per element from this register (same dims as the chain).
+    Full(usize),
+    /// A single-use `broadcast` of a one-element value folded into the
+    /// chain: the register's lone element is splatted into the slot
+    /// once per kernel invocation instead of materializing the
+    /// broadcast.
+    Scalar(usize),
+}
+
+impl ChainInput {
+    /// The register this slot reads.
+    pub fn reg(self) -> usize {
+        match self {
+            ChainInput::Full(r) | ChainInput::Scalar(r) => r,
+        }
+    }
+}
+
+/// Plan-time spec of one elementwise-chain superinstruction, attached
+/// as [`crate::runtime::interp::plan::Fused::Chain`] to the chain's
+/// last step (the *root*); every other member carries
+/// `Fused::ChainInterior` back-pointing at the root and is never
+/// executed — its register is never written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainSpec {
+    /// Elided member steps (ascending): the single-use elementwise
+    /// interiors plus folded broadcast-of-scalar steps. Excludes the
+    /// root itself.
+    pub steps: Vec<usize>,
+    /// External inputs in slot order (slot `i` is `inputs[i]`).
+    pub inputs: Vec<ChainInput>,
+    /// Per input: the chain root is the register's last effective use
+    /// and the kernel may consume it. Filled by the planner's liveness
+    /// pass; the matcher produces all-false.
+    pub take: Vec<bool>,
+    /// Input slot whose buffer the chain overwrites in place (always a
+    /// `Full` slot with `take` set whose value matches the output's
+    /// type and dims); `None` allocates a fresh output.
+    pub inplace: Option<usize>,
+    /// Per-element op tape in program order: op `t` writes slot
+    /// `inputs.len() + t`, the last op produces the root's value.
+    pub tape: Vec<ops::TapeOp>,
+}
+
+/// Greedily grow maximal elementwise chains over one computation (see
+/// module docs); returns `(root, spec)` pairs in ascending root order.
+/// Roots are tried from the last instruction down, so every consumer
+/// absorbs its single-use producers before those are considered as
+/// roots themselves — chains are maximal cones, and no step is claimed
+/// twice.
+pub fn match_chains(c: &Computation) -> Vec<(usize, ChainSpec)> {
+    let n = c.instrs.len();
+    let mut uses = vec![0usize; n];
+    for ins in &c.instrs {
+        for &o in &ins.operands {
+            uses[o] += 1;
+        }
+    }
+    // the computation root's value escapes: count the escape as a use
+    // so the root instruction is never elided into a consumer
+    uses[c.root] += 1;
+
+    let arr_dims = |i: usize| c.instrs[i].shape.array().ok().map(|(_, d)| d);
+    let fusable = |i: usize| {
+        matches!(
+            c.instrs[i].op,
+            Op::Unary(_) | Op::Binary(_) | Op::Select | Op::Compare { .. } | Op::Convert
+        )
+    };
+
+    let mut claimed = vec![false; n];
+    let mut out = Vec::new();
+    'roots: for root in (0..n).rev() {
+        if claimed[root] || !fusable(root) {
+            continue;
+        }
+        let Some(dims) = arr_dims(root) else { continue };
+        // the cone of single-use same-shape fusable producers
+        let mut member = vec![false; n];
+        member[root] = true;
+        let mut count = 1usize;
+        let mut stack = vec![root];
+        while let Some(s) = stack.pop() {
+            for &o in &c.instrs[s].operands {
+                if !member[o]
+                    && !claimed[o]
+                    && fusable(o)
+                    && uses[o] == 1
+                    && arr_dims(o) == Some(dims)
+                {
+                    member[o] = true;
+                    count += 1;
+                    stack.push(o);
+                }
+            }
+        }
+        if count < 2 {
+            continue; // a lone step gains nothing from a tape
+        }
+        let members: Vec<usize> = (0..=root).filter(|&i| member[i]).collect();
+
+        // slot assignment: external inputs in first-reference order,
+        // then one tape slot per member in program order
+        let mut tape_slot = vec![usize::MAX; n];
+        for (t, &s) in members.iter().enumerate() {
+            tape_slot[s] = t;
+        }
+        let mut inputs: Vec<ChainInput> = Vec::new();
+        let mut folded: Vec<usize> = Vec::new();
+        let mut in_slot = vec![usize::MAX; n];
+        for &s in &members {
+            for &o in &c.instrs[s].operands {
+                if tape_slot[o] != usize::MAX || in_slot[o] != usize::MAX {
+                    continue; // a member, or already assigned a slot
+                }
+                // a single-use broadcast of a one-element value folds
+                // into the chain as a splat slot
+                let fold = matches!(c.instrs[o].op, Op::Broadcast { .. })
+                    && uses[o] == 1
+                    && !claimed[o]
+                    && arr_dims(o) == Some(dims)
+                    && c.instrs[o]
+                        .operands
+                        .first()
+                        .is_some_and(|&src| c.instrs[src].shape.numel() == 1 && !member[src]);
+                in_slot[o] = inputs.len();
+                if fold {
+                    folded.push(o);
+                    inputs.push(ChainInput::Scalar(c.instrs[o].operands[0]));
+                } else if arr_dims(o) == Some(dims) {
+                    inputs.push(ChainInput::Full(o));
+                } else {
+                    // ill-shaped operand: keep the standalone kernels'
+                    // error path by not fusing this cone at all
+                    continue 'roots;
+                }
+            }
+        }
+        if inputs.len() + members.len() > u16::MAX as usize {
+            continue;
+        }
+
+        let n_in = inputs.len();
+        let sl = |o: usize| {
+            if tape_slot[o] != usize::MAX {
+                (n_in + tape_slot[o]) as u16
+            } else {
+                in_slot[o] as u16
+            }
+        };
+        let mut tape = Vec::with_capacity(members.len());
+        for &s in &members {
+            let ins = &c.instrs[s];
+            let Ok((oty, _)) = ins.shape.array() else { continue 'roots };
+            let ity =
+                |k: usize| c.instrs[ins.operands[k]].shape.array().ok().map(|(t, _)| t);
+            let op = match (&ins.op, ins.operands.as_slice()) {
+                (Op::Unary(u), &[a]) => {
+                    Some(ops::TapeOp::Unary { op: *u, ty: oty, a: sl(a) })
+                }
+                (Op::Binary(bo), &[a, b]) => {
+                    Some(ops::TapeOp::Binary { op: *bo, ty: oty, a: sl(a), b: sl(b) })
+                }
+                (Op::Compare { dir }, &[a, b]) => {
+                    ity(0).map(|t| ops::TapeOp::Compare { dir: *dir, ty: t, a: sl(a), b: sl(b) })
+                }
+                (Op::Select, &[p, t, f]) => {
+                    Some(ops::TapeOp::Select { p: sl(p), t: sl(t), f: sl(f) })
+                }
+                (Op::Convert, &[a]) => {
+                    ity(0).map(|t| ops::TapeOp::Convert { from: t, to: oty, a: sl(a) })
+                }
+                _ => None,
+            };
+            match op {
+                Some(t) => tape.push(t),
+                None => continue 'roots, // unexpected arity: fall back
+            }
+        }
+
+        let mut steps: Vec<usize> =
+            members.iter().copied().filter(|&s| s != root).chain(folded).collect();
+        steps.sort_unstable();
+        for &s in &steps {
+            claimed[s] = true;
+        }
+        claimed[root] = true;
+        let take = vec![false; inputs.len()];
+        out.push((root, ChainSpec { steps, inputs, take, inplace: None, tape }));
+    }
+    out.reverse(); // ascending root order reads better in diagnostics
+    out
 }
 
 // ----------------------------------------------------------- threefry ---
@@ -403,6 +621,85 @@ mod tests {
             .replace("i2.6 = s32[] add(i.2, one.4)", "i2.6 = s32[] multiply(i.2, one.4)");
         let m = parse_module(&mul).unwrap();
         assert!(match_counted_loop(&m, 0, 1).is_none(), "multiply must fall back");
+    }
+
+    /// exp feeds both a multiply and a compare (diamond), the
+    /// broadcast-of-scalar is single-use, and the select roots it all.
+    const CHAIN: &str = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+        c.2 = f32[] constant(2)\n  b.3 = f32[4]{0} broadcast(c.2), dimensions={}\n  \
+        e.4 = f32[4]{0} exponential(x.1)\n  m.5 = f32[4]{0} multiply(e.4, b.3)\n  \
+        p.6 = pred[4]{0} compare(x.1, e.4), direction=LT\n  \
+        ROOT s.7 = f32[4]{0} select(p.6, m.5, x.1)\n}\n";
+
+    #[test]
+    fn chain_matches_cone_with_diamond_and_splat() {
+        let m = parse_module(CHAIN).unwrap();
+        let chains = match_chains(&m.comps[m.entry]);
+        assert_eq!(chains.len(), 1);
+        let (root, spec) = &chains[0];
+        assert_eq!(*root, 6, "select roots the chain");
+        // folded broadcast (2) + multiply (4) + compare (5) are elided
+        assert_eq!(spec.steps, vec![2, 4, 5]);
+        // exp is multi-use -> one external slot; the splat reads the
+        // broadcast's scalar source register
+        assert_eq!(
+            spec.inputs,
+            vec![ChainInput::Full(3), ChainInput::Scalar(1), ChainInput::Full(0)]
+        );
+        assert_eq!(spec.take, vec![false; 3], "matcher leaves liveness to the planner");
+        assert_eq!(spec.inplace, None);
+        assert_eq!(
+            spec.tape,
+            vec![
+                ops::TapeOp::Binary { op: BinaryOp::Mul, ty: ElemType::F32, a: 0, b: 1 },
+                ops::TapeOp::Compare { dir: CmpDir::Lt, ty: ElemType::F32, a: 2, b: 0 },
+                ops::TapeOp::Select { p: 4, t: 3, f: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn chain_near_misses() {
+        // a multi-use broadcast stays a full input (still chains the
+        // multiply+add pair, but materializes the broadcast)
+        let multi = CHAIN
+            .replace(
+                "p.6 = pred[4]{0} compare(x.1, e.4), direction=LT",
+                "p.6 = f32[4]{0} add(m.5, b.3)",
+            )
+            .replace("ROOT s.7 = f32[4]{0} select(p.6, m.5, x.1)", "ROOT s.7 = f32[4]{0} add(p.6, x.1)");
+        let m = parse_module(&multi).unwrap();
+        let chains = match_chains(&m.comps[m.entry]);
+        assert_eq!(chains.len(), 1);
+        let (root, spec) = &chains[0];
+        // m.5 is multi-use now? no: m.5 feeds p.6 only... p.6 and s.7
+        // chain; b.3 used by m.5 and p.6 -> not folded
+        assert_eq!(*root, 6);
+        assert!(
+            spec.inputs.contains(&ChainInput::Full(2)),
+            "multi-use broadcast must stay a materialized input: {:?}",
+            spec.inputs
+        );
+        assert!(!spec.steps.contains(&2));
+
+        // bitcast-convert is never a chain member (dtype reinterpret
+        // crosses payload semantics); the chain stops at it
+        const BITCAST: &str = "HloModule t\n\nENTRY main.1 {\n  \
+            x.1 = u32[4]{0} parameter(0)\n  a.2 = u32[4]{0} add(x.1, x.1)\n  \
+            b.3 = f32[4]{0} bitcast-convert(a.2)\n  m.4 = f32[4]{0} multiply(b.3, b.3)\n  \
+            ROOT n.5 = f32[4]{0} negate(m.4)\n}\n";
+        let m = parse_module(BITCAST).unwrap();
+        let chains = match_chains(&m.comps[m.entry]);
+        assert_eq!(chains.len(), 1);
+        let (root, spec) = &chains[0];
+        assert_eq!((*root, spec.steps.as_slice()), (4, &[3][..]));
+        assert_eq!(spec.inputs, vec![ChainInput::Full(2)]);
+
+        // a lone elementwise step is not worth a tape
+        const LONE: &str = "HloModule t\n\nENTRY main.1 {\n  \
+            x.1 = f32[4]{0} parameter(0)\n  ROOT a.2 = f32[4]{0} add(x.1, x.1)\n}\n";
+        let m = parse_module(LONE).unwrap();
+        assert!(match_chains(&m.comps[m.entry]).is_empty());
     }
 
     #[test]

@@ -20,18 +20,25 @@ use crate::runtime::interp::value::{strides_of, unflatten, ArrayValue, Buf, Elem
 
 // -------------------------------------------------------- elementwise ---
 
+/// The f32 unary scalar kernel, shared by the allocating, in-place and
+/// chained paths — one definition, so all three are bit-identical per
+/// element by construction.
+pub(crate) fn f32_unary(op: UnaryOp, v: f32) -> f32 {
+    match op {
+        UnaryOp::Negate => -v,
+        UnaryOp::Exp => v.exp(),
+        UnaryOp::Log => v.ln(),
+        UnaryOp::Rsqrt => 1.0 / v.sqrt(),
+        UnaryOp::Sine => v.sin(),
+        UnaryOp::Cosine => v.cos(),
+        UnaryOp::RoundNearestEven => v.round_ties_even(),
+    }
+}
+
 pub fn unary(op: UnaryOp, a: &ArrayValue) -> Result<ArrayValue> {
     let buf = match (&*a.buf, op) {
-        (Buf::F32(x), UnaryOp::Negate) => Buf::F32(x.iter().map(|&v| -v).collect()),
         (Buf::S32(x), UnaryOp::Negate) => Buf::S32(x.iter().map(|&v| v.wrapping_neg()).collect()),
-        (Buf::F32(x), UnaryOp::Exp) => Buf::F32(x.iter().map(|&v| v.exp()).collect()),
-        (Buf::F32(x), UnaryOp::Log) => Buf::F32(x.iter().map(|&v| v.ln()).collect()),
-        (Buf::F32(x), UnaryOp::Rsqrt) => Buf::F32(x.iter().map(|&v| 1.0 / v.sqrt()).collect()),
-        (Buf::F32(x), UnaryOp::Sine) => Buf::F32(x.iter().map(|&v| v.sin()).collect()),
-        (Buf::F32(x), UnaryOp::Cosine) => Buf::F32(x.iter().map(|&v| v.cos()).collect()),
-        (Buf::F32(x), UnaryOp::RoundNearestEven) => {
-            Buf::F32(x.iter().map(|&v| v.round_ties_even()).collect())
-        }
+        (Buf::F32(x), _) => Buf::F32(x.iter().map(|&v| f32_unary(op, v)).collect()),
         (b, o) => bail!("unary {o:?} unsupported for {}", b.ty().name()),
     };
     Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
@@ -177,20 +184,23 @@ pub fn binary(op: BinaryOp, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue
     Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
 }
 
+/// The compare scalar kernel, shared by [`compare`] and the chained
+/// path (same comparison expressions, so both are bit-identical).
+pub(crate) fn cmp_elem<T: PartialOrd + PartialEq>(dir: CmpDir, p: T, q: T) -> bool {
+    match dir {
+        CmpDir::Eq => p == q,
+        CmpDir::Ne => p != q,
+        CmpDir::Lt => p < q,
+        CmpDir::Le => p <= q,
+        CmpDir::Gt => p > q,
+        CmpDir::Ge => p >= q,
+    }
+}
+
 pub fn compare(dir: CmpDir, a: &ArrayValue, b: &ArrayValue) -> Result<ArrayValue> {
     ensure!(a.dims == b.dims, "compare shape mismatch");
-    fn cmp<T: PartialOrd + PartialEq>(dir: CmpDir, x: &[T], y: &[T]) -> Vec<bool> {
-        x.iter()
-            .zip(y)
-            .map(|(p, q)| match dir {
-                CmpDir::Eq => p == q,
-                CmpDir::Ne => p != q,
-                CmpDir::Lt => p < q,
-                CmpDir::Le => p <= q,
-                CmpDir::Gt => p > q,
-                CmpDir::Ge => p >= q,
-            })
-            .collect()
+    fn cmp<T: PartialOrd + PartialEq + Copy>(dir: CmpDir, x: &[T], y: &[T]) -> Vec<bool> {
+        x.iter().zip(y).map(|(&p, &q)| cmp_elem(dir, p, q)).collect()
     }
     let out = match (&*a.buf, &*b.buf) {
         (Buf::F32(x), Buf::F32(y)) => cmp(dir, x, y),
@@ -257,6 +267,163 @@ pub fn bitcast_convert(a: &ArrayValue, to: ElemType) -> Result<ArrayValue> {
     Ok(ArrayValue { dims: a.dims.clone(), buf: Arc::new(buf) })
 }
 
+// ------------------------------------------------- elementwise chains ---
+
+/// One op of a compiled elementwise-chain tape (DESIGN.md §4). A chain
+/// superinstruction evaluates its whole tape once per output element
+/// over a scratch of raw 32-bit slot payloads (f32 bit patterns,
+/// s32/u32 bit patterns, pred as 0/1): slots `0..n_inputs` hold the
+/// chain's external inputs for that element, op `t` writes slot
+/// `n_inputs + t`, and the last op's slot is the element's value.
+/// Every op decodes its statically-typed operands and applies the
+/// *same scalar helpers* as the standalone kernels ([`f32_unary`],
+/// [`f32_bin`], [`s32_bin`], [`u32_bin`], [`pred_bin`], [`cmp_elem`],
+/// [`convert`]'s per-element rules), so a chained element is
+/// bit-identical to the unfused instruction sequence by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapeOp {
+    Unary { op: UnaryOp, ty: ElemType, a: u16 },
+    Binary { op: BinaryOp, ty: ElemType, a: u16, b: u16 },
+    /// `ty` is the *operand* type; the result is a pred payload.
+    Compare { dir: CmpDir, ty: ElemType, a: u16, b: u16 },
+    /// Raw payload pass-through of `t` or `f` — type-agnostic, exactly
+    /// like [`select`]'s untyped element copy.
+    Select { p: u16, t: u16, f: u16 },
+    Convert { from: ElemType, to: ElemType, a: u16 },
+}
+
+/// One chain input as the per-element loop sees it.
+#[derive(Clone, Copy)]
+pub enum LaneRef<'a> {
+    F32(&'a [f32]),
+    S32(&'a [i32]),
+    U32(&'a [u32]),
+    Pred(&'a [bool]),
+    /// A broadcast-of-scalar folded into the chain: the same payload
+    /// for every element.
+    Splat(u32),
+    /// The in-place destination's previous value, read from the chunk
+    /// element about to be overwritten.
+    Dst,
+}
+
+impl LaneRef<'_> {
+    #[inline]
+    fn load(&self, i: usize, cur: u32) -> u32 {
+        match *self {
+            LaneRef::F32(xs) => xs[i].to_bits(),
+            LaneRef::S32(xs) => xs[i] as u32,
+            LaneRef::U32(xs) => xs[i],
+            LaneRef::Pred(xs) => xs[i] as u32,
+            LaneRef::Splat(v) => v,
+            LaneRef::Dst => cur,
+        }
+    }
+}
+
+/// Per-element [`convert`] on a raw payload — the same cast
+/// expressions as the allocating kernel, arm for arm.
+fn convert_scalar(from: ElemType, to: ElemType, v: u32) -> u32 {
+    use ElemType::{Pred, F32, S32, U32};
+    match (from, to) {
+        (F32, S32) => (f32::from_bits(v) as i32) as u32,
+        (F32, U32) => f32::from_bits(v) as u32,
+        (F32, Pred) => (f32::from_bits(v) != 0.0) as u32,
+        (S32, F32) => ((v as i32) as f32).to_bits(),
+        (U32, F32) => (v as f32).to_bits(),
+        (Pred, F32) => (if v != 0 { 1.0f32 } else { 0.0 }).to_bits(),
+        // int -> pred normalizes the payload to 0/1 (pred payloads are
+        // always canonical, so pred -> int is the payload itself)
+        (S32 | U32, Pred) => (v != 0) as u32,
+        // s32 <-> u32 are `as` casts (bit pattern) and same-type
+        // converts are copies
+        (S32 | U32, S32 | U32) | (Pred, S32 | U32 | Pred) | (F32, F32) => v,
+    }
+}
+
+/// Evaluate one tape op against the slot scratch. Payloads decode per
+/// the op's static types; every arithmetic path is one of the shared
+/// scalar helpers, so the tape cannot diverge from the standalone
+/// kernels.
+fn tape_step(op: &TapeOp, slots: &[u32]) -> Result<u32> {
+    let s = |i: u16| slots[i as usize];
+    Ok(match *op {
+        TapeOp::Unary { op, ty, a } => match ty {
+            ElemType::F32 => f32_unary(op, f32::from_bits(s(a))).to_bits(),
+            ElemType::S32 if op == UnaryOp::Negate => (s(a) as i32).wrapping_neg() as u32,
+            _ => bail!("unary {op:?} unsupported for {}", ty.name()),
+        },
+        TapeOp::Binary { op, ty, a, b } => match ty {
+            ElemType::F32 => f32_bin(op, f32::from_bits(s(a)), f32::from_bits(s(b)))?.to_bits(),
+            ElemType::S32 => s32_bin(op, s(a) as i32, s(b) as i32)? as u32,
+            ElemType::U32 => u32_bin(op, s(a), s(b))?,
+            ElemType::Pred => pred_bin(op)?(s(a) != 0, s(b) != 0) as u32,
+        },
+        TapeOp::Compare { dir, ty, a, b } => (match ty {
+            ElemType::F32 => cmp_elem(dir, f32::from_bits(s(a)), f32::from_bits(s(b))),
+            ElemType::S32 => cmp_elem(dir, s(a) as i32, s(b) as i32),
+            ElemType::U32 => cmp_elem(dir, s(a), s(b)),
+            ElemType::Pred => cmp_elem(dir, s(a) != 0, s(b) != 0),
+        }) as u32,
+        TapeOp::Select { p, t, f } => {
+            if s(p) != 0 {
+                s(t)
+            } else {
+                s(f)
+            }
+        }
+        TapeOp::Convert { from, to, a } => convert_scalar(from, to, s(a)),
+    })
+}
+
+/// Execute a compiled chain tape over every output element: fill the
+/// input slots from `lanes`, run the tape, write the last slot into
+/// `dst`. [`LaneRef::Dst`] lanes read the destination element's
+/// previous value before it is overwritten, which makes in-place
+/// execution safe — each element's loads complete before its store and
+/// no element reads another element's storage. Sharded across
+/// `workers` above [`ELEM_PAR_MIN`] elements; per-element work is
+/// independent, so the split is bit-identical at any worker count.
+pub fn chain_apply(
+    tape: &[TapeOp],
+    lanes: &[LaneRef],
+    dst: &mut Buf,
+    workers: usize,
+) -> Result<()> {
+    ensure!(!tape.is_empty(), "empty chain tape");
+    fn run<T: Send + Copy>(
+        tape: &[TapeOp],
+        lanes: &[LaneRef],
+        w: usize,
+        xs: &mut [T],
+        enc: impl Fn(T) -> u32 + Sync,
+        dec: impl Fn(u32) -> T + Sync,
+    ) -> Result<()> {
+        let n_in = lanes.len();
+        shard_mut(xs, w, |off, c| {
+            let mut slots = vec![0u32; n_in + tape.len()];
+            for (i, o) in c.iter_mut().enumerate() {
+                let cur = enc(*o);
+                for (k, lane) in lanes.iter().enumerate() {
+                    slots[k] = lane.load(off + i, cur);
+                }
+                for (t, op) in tape.iter().enumerate() {
+                    slots[n_in + t] = tape_step(op, &slots)?;
+                }
+                *o = dec(slots[n_in + tape.len() - 1]);
+            }
+            Ok(())
+        })
+    }
+    let w = if dst.len() >= ELEM_PAR_MIN { workers } else { 1 };
+    match dst {
+        Buf::F32(xs) => run(tape, lanes, w, xs, f32::to_bits, f32::from_bits),
+        Buf::S32(xs) => run(tape, lanes, w, xs, |v| v as u32, |r| r as i32),
+        Buf::U32(xs) => run(tape, lanes, w, xs, |v| v, |r| r),
+        Buf::Pred(xs) => run(tape, lanes, w, xs, |v| v as u32, |r| r != 0),
+    }
+}
+
 // ---------------------------------------------------- in-place kernels ---
 
 /// Element count below which intra-op sharding of elementwise /
@@ -293,15 +460,7 @@ fn shard_mut<T: Send>(
 }
 
 fn unary_f32_slice(op: UnaryOp, x: &mut [f32]) -> Result<()> {
-    match op {
-        UnaryOp::Negate => x.iter_mut().for_each(|v| *v = -*v),
-        UnaryOp::Exp => x.iter_mut().for_each(|v| *v = v.exp()),
-        UnaryOp::Log => x.iter_mut().for_each(|v| *v = v.ln()),
-        UnaryOp::Rsqrt => x.iter_mut().for_each(|v| *v = 1.0 / v.sqrt()),
-        UnaryOp::Sine => x.iter_mut().for_each(|v| *v = v.sin()),
-        UnaryOp::Cosine => x.iter_mut().for_each(|v| *v = v.cos()),
-        UnaryOp::RoundNearestEven => x.iter_mut().for_each(|v| *v = v.round_ties_even()),
-    }
+    x.iter_mut().for_each(|v| *v = f32_unary(op, *v));
     Ok(())
 }
 
@@ -615,9 +774,12 @@ pub fn concatenate(parts: &[&ArrayValue], dim: usize) -> Result<ArrayValue> {
 /// f32 like XLA's CPU backend.
 ///
 /// This is the reference formulation (one flat output loop, index math
-/// per contraction element). The planned executor's packed dot
-/// ([`crate::runtime::interp::plan`]) visits the same accumulation
-/// order and must match it bit-for-bit.
+/// per contraction element). Each output element accumulates with four
+/// stride-4 partial sums over ascending contraction index, combined as
+/// `(s0+s1)+(s2+s3)`, then a sequential tail — the same operation order
+/// as [`crate::quant::assign::dot`]. The planned executor's blocked dot
+/// ([`crate::runtime::interp::plan`]) reproduces this order per output
+/// lane and must match it bit-for-bit.
 pub fn dot(lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayValue> {
     let x = lhs.as_f32()?;
     let y = rhs.as_f32()?;
@@ -660,16 +822,30 @@ pub fn dot(lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayVa
         for (k, &d) in rfree.iter().enumerate() {
             rbase += oi[nb + nlf + k] * rst[d];
         }
-        let mut acc = 0.0f32;
-        for kf in 0..kn {
-            unflatten(kf, &kst, &mut ki);
+        let mut term = |kf: usize, ki: &mut Vec<usize>| -> f32 {
+            unflatten(kf, &kst, ki);
             let mut li = lbase;
             let mut ri = rbase;
             for (t, &kc) in ki.iter().enumerate() {
                 li += kc * lst[nums.lhs_contracting[t]];
                 ri += kc * rst[nums.rhs_contracting[t]];
             }
-            acc += x[li] * y[ri];
+            x[li] * y[ri]
+        };
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let kn4 = kn - kn % 4;
+        let mut kf = 0;
+        while kf < kn4 {
+            s0 += term(kf, &mut ki);
+            s1 += term(kf + 1, &mut ki);
+            s2 += term(kf + 2, &mut ki);
+            s3 += term(kf + 3, &mut ki);
+            kf += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3);
+        while kf < kn {
+            acc += term(kf, &mut ki);
+            kf += 1;
         }
         out.push(acc);
     }
@@ -1282,6 +1458,86 @@ mod tests {
         let mut d = (*b.buf).clone();
         select_inplace(&pred, false, &mut d, &a.buf).unwrap();
         assert_eq!(d, *want.buf);
+    }
+
+    #[test]
+    fn chain_apply_matches_composed_kernels_bitwise() {
+        // select(x < exp(x), x * exp(x), splat) over awkward values,
+        // composed from the allocating kernels vs one chain pass
+        let n = ELEM_PAR_MIN + 7; // cross the sharding threshold
+        let x = f(&[n], (0..n).map(|i| (i as f32 - 11.0) * 0.37).collect());
+        let splat = 2.5f32;
+        let s = f(&[n], vec![splat; n]);
+        let e = unary(UnaryOp::Exp, &x).unwrap();
+        let m = binary(BinaryOp::Mul, &x, &e).unwrap();
+        let p = compare(CmpDir::Lt, &x, &e).unwrap();
+        let want = select(&p, &m, &s).unwrap();
+
+        // tape slots: 0 = x (also the in-place dst), 1 = splat;
+        // ops write 2 = exp, 3 = mul, 4 = cmp, 5 = select
+        let tape = [
+            TapeOp::Unary { op: UnaryOp::Exp, ty: ElemType::F32, a: 0 },
+            TapeOp::Binary { op: BinaryOp::Mul, ty: ElemType::F32, a: 0, b: 2 },
+            TapeOp::Compare { dir: CmpDir::Lt, ty: ElemType::F32, a: 0, b: 2 },
+            TapeOp::Select { p: 4, t: 3, f: 1 },
+        ];
+        for workers in [1, 3, 8] {
+            let mut dst = (*x.buf).clone();
+            let lanes = [LaneRef::Dst, LaneRef::Splat(splat.to_bits())];
+            chain_apply(&tape, &lanes, &mut dst, workers).unwrap();
+            let (Buf::F32(got), Buf::F32(w)) = (&dst, &*want.buf) else { panic!() };
+            for (g, v) in got.iter().zip(w) {
+                assert_eq!(g.to_bits(), v.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_convert_scalar_matches_convert_kernel() {
+        // every (from, to) pair over tricky payloads, raw-payload vs
+        // the allocating convert
+        let f32s = [0.0f32, -0.0, 1.5, -2.7, 3.0e9, f32::NAN];
+        let preds = [false, true];
+        for &v in &f32s {
+            let a = f(&[1], vec![v]);
+            for to in [ElemType::F32, ElemType::S32, ElemType::U32, ElemType::Pred] {
+                let want = convert(&a, to).unwrap();
+                let got = convert_scalar(ElemType::F32, to, v.to_bits());
+                let want_raw = match &*want.buf {
+                    Buf::F32(x) => x[0].to_bits(),
+                    Buf::S32(x) => x[0] as u32,
+                    Buf::U32(x) => x[0],
+                    Buf::Pred(x) => x[0] as u32,
+                };
+                assert_eq!(got, want_raw, "f32 {v} -> {}", to.name());
+            }
+        }
+        for &v in &[0i32, 1, -1, i32::MIN, 7] {
+            let a = ArrayValue { dims: vec![1], buf: Arc::new(Buf::S32(vec![v])) };
+            for to in [ElemType::F32, ElemType::S32, ElemType::U32, ElemType::Pred] {
+                let want = convert(&a, to).unwrap();
+                let want_raw = match &*want.buf {
+                    Buf::F32(x) => x[0].to_bits(),
+                    Buf::S32(x) => x[0] as u32,
+                    Buf::U32(x) => x[0],
+                    Buf::Pred(x) => x[0] as u32,
+                };
+                assert_eq!(convert_scalar(ElemType::S32, to, v as u32), want_raw);
+            }
+        }
+        for &v in &preds {
+            let a = ArrayValue { dims: vec![1], buf: Arc::new(Buf::Pred(vec![v])) };
+            for to in [ElemType::F32, ElemType::S32, ElemType::U32, ElemType::Pred] {
+                let want = convert(&a, to).unwrap();
+                let want_raw = match &*want.buf {
+                    Buf::F32(x) => x[0].to_bits(),
+                    Buf::S32(x) => x[0] as u32,
+                    Buf::U32(x) => x[0],
+                    Buf::Pred(x) => x[0] as u32,
+                };
+                assert_eq!(convert_scalar(ElemType::Pred, to, v as u32), want_raw);
+            }
+        }
     }
 
     #[test]

@@ -14,16 +14,24 @@
 //! * **Fused regions.** `reduce`/`scatter` regions that are a single
 //!   scalar binary op (the overwhelmingly common case: add/max/min/and)
 //!   fold inline instead of invoking the sub-computation per element.
-//! * **Packed dot.** The general dot packs both operands into
-//!   contiguous `[batch][free][k]` panels and accumulates over
-//!   contiguous rows; large outputs shard across `thread::scope`
-//!   workers.
+//! * **Blocked dot.** The general dot packs both operands into
+//!   contiguous `[batch][free][k]` panels, transposes the rhs panel
+//!   into `LANE_BLOCK`-wide register tiles (the `dot8` pattern from
+//!   `quant/assign.rs`), and contracts eight output columns per lhs row
+//!   at once with 4-way partial sums; large outputs shard across
+//!   `thread::scope` workers.
 //! * **Loop fusion** ([`crate::runtime::interp::fuse`]). Counted
 //!   `while` loops run as a trip-counted superinstruction on unpacked
 //!   state registers (no per-iteration condition or tuple
 //!   pack/unpack), and jax's threefry-2x32 PRNG round bodies execute
 //!   as the native [`ops::threefry2x32`] kernel — one unrolled pass
 //!   over the flat u32 lanes instead of ~55 tiny-array ops.
+//! * **Elementwise chains** ([`crate::runtime::interp::fuse`]). Runs
+//!   of single-use elementwise steps (plus folded broadcast-of-scalar
+//!   splats) collapse into one superinstruction per chain: a compiled
+//!   per-element op tape evaluated in a single pass over the output
+//!   buffer — no intermediate buffers, one dispatch per chain instead
+//!   of one per step, in place on a dying operand when liveness allows.
 //! * **Intra-op sharding.** Fused reduces, large elementwise ops and
 //!   threefry lanes shard across `thread::scope` workers above a size
 //!   threshold, merged in ascending-shard order like the packed dot.
@@ -40,13 +48,14 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::quant::assign;
 use crate::runtime::interp::fuse::{self, CountedLoop};
 use crate::runtime::interp::ops::{self, f32_bin, pred_bin, s32_bin, u32_bin};
 use crate::runtime::interp::parser::{
     BinaryOp, Computation, DotDims, HloModule, Instr, Op, ScatterDims, UnaryOp, WindowDim,
 };
 use crate::runtime::interp::stats::Stats;
-use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, Shape, Value};
+use crate::runtime::interp::value::{strides_of, ArrayValue, Buf, ElemType, Shape, Value};
 use crate::runtime::interp::verify;
 
 /// Output-element count above which the packed dot shards its output
@@ -69,6 +78,13 @@ pub(crate) enum Fused {
     /// `call` to a threefry-2x32 round body: execute the native
     /// [`ops::threefry2x32`] kernel over the flat u32 lanes.
     Threefry,
+    /// Root of an elementwise chain: run the compiled per-element op
+    /// tape in one pass over the output buffer
+    /// ([`crate::runtime::interp::fuse::ChainSpec`]).
+    Chain(Box<fuse::ChainSpec>),
+    /// Member of the chain rooted at `root`: never executed, its
+    /// register is never written (reading one fails fast).
+    ChainInterior { root: usize },
 }
 
 /// Which fusion rewrites [`Plan::compile_opts`] applies. Disabling them
@@ -81,11 +97,14 @@ pub struct PlanOptions {
     pub counted_loops: bool,
     /// Execute matched threefry round bodies natively.
     pub threefry: bool,
+    /// Collapse single-use elementwise runs into chain
+    /// superinstructions ([`crate::runtime::interp::fuse::ChainSpec`]).
+    pub chains: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { counted_loops: true, threefry: true }
+        PlanOptions { counted_loops: true, threefry: true, chains: true }
     }
 }
 
@@ -106,6 +125,11 @@ pub struct FusionStats {
     /// Reduce-window instructions with an inlined single-binary-op
     /// region (pooling layers).
     pub fused_windows: usize,
+    /// Elementwise-chain superinstructions (one per chain root).
+    pub fused_chains: usize,
+    /// Instructions captured by chains, roots included (each chain
+    /// contributes `steps.len() + 1`).
+    pub chain_steps: usize,
 }
 
 /// One computation lowered for planned execution. Fields are
@@ -174,9 +198,21 @@ impl Plan {
             .comps
             .iter()
             .map(|c| {
-                let (free_after, take) = analyze(c);
-                let fused =
+                let mut fused: Vec<Fused> =
                     c.instrs.iter().map(|ins| classify(m, ins, &threefry, opts)).collect();
+                if opts.chains {
+                    for (root, spec) in fuse::match_chains(c) {
+                        for &s in &spec.steps {
+                            fused[s] = Fused::ChainInterior { root };
+                        }
+                        fused[root] = Fused::Chain(Box::new(spec));
+                    }
+                }
+                // liveness must see through elision: a use at an elided
+                // chain member keeps its register alive until the chain
+                // root actually reads it
+                let (free_after, take) = analyze(c, &fused);
+                finish_chains(c, &mut fused, &free_after);
                 CompPlan {
                     name: c.name.clone(),
                     instrs: c.instrs.clone(),
@@ -210,6 +246,10 @@ impl Plan {
                     (Op::Reduce { .. }, Fused::Bin { .. }) => fs.fused_reduces += 1,
                     (Op::Scatter { .. }, Fused::Bin { .. }) => fs.fused_scatters += 1,
                     (Op::ReduceWindow { .. }, Fused::Bin { .. }) => fs.fused_windows += 1,
+                    (_, Fused::Chain(spec)) => {
+                        fs.fused_chains += 1;
+                        fs.chain_steps += spec.steps.len() + 1;
+                    }
                     _ => {}
                 }
             }
@@ -237,12 +277,26 @@ impl Plan {
 
 // ------------------------------------------------------------ analysis ---
 
-fn analyze(c: &Computation) -> (Vec<Vec<usize>>, Vec<Vec<bool>>) {
+/// Last-use liveness over one computation. A use at a step elided into
+/// an elementwise chain ([`Fused::ChainInterior`]) is attributed to
+/// the chain's root — that is where the executor actually reads the
+/// register — so nothing is freed before the chain runs, and chain
+/// interiors (whose registers are never written) are dropped from the
+/// register file right after their root.
+fn analyze(c: &Computation, fused: &[Fused]) -> (Vec<Vec<usize>>, Vec<Vec<bool>>) {
     let n = c.instrs.len();
+    let site = |si: usize| match fused[si] {
+        Fused::ChainInterior { root } => root,
+        _ => si,
+    };
     let mut last = vec![usize::MAX; n];
     for (si, ins) in c.instrs.iter().enumerate() {
         for &o in &ins.operands {
-            last[o] = si;
+            // effective use sites are no longer monotone in `si` (an
+            // elided member's use lands at its later root), so keep the
+            // max rather than the final write
+            let s = site(si);
+            last[o] = if last[o] == usize::MAX { s } else { last[o].max(s) };
         }
     }
     let mut free_after: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -269,6 +323,39 @@ fn analyze(c: &Computation) -> (Vec<Vec<usize>>, Vec<Vec<bool>>) {
         })
         .collect();
     (free_after, take)
+}
+
+/// Fill in the liveness-dependent fields of every chain spec: which
+/// input registers die at the root (consumable by the kernel) and
+/// which one, if any, the chain overwrites in place. Runs after
+/// [`analyze`], which already attributed elided uses to the roots —
+/// `free_after[root]` is exactly the set of registers whose last
+/// effective use is the chain.
+fn finish_chains(c: &Computation, fused: &mut [Fused], free_after: &[Vec<usize>]) {
+    for si in 0..fused.len() {
+        let Fused::Chain(spec) = &mut fused[si] else { continue };
+        let Ok((oty, odims)) = c.instrs[si].shape.array() else { continue };
+        for i in 0..spec.inputs.len() {
+            let r = spec.inputs[i].reg();
+            // a register feeding two slots (e.g. both a full lane and a
+            // splat source) must not be moved out from either
+            let dup = spec.inputs.iter().filter(|inp| inp.reg() == r).count() > 1;
+            spec.take[i] = !dup && free_after[si].contains(&r);
+        }
+        spec.inplace = spec.inputs.iter().enumerate().find_map(|(i, inp)| match *inp {
+            fuse::ChainInput::Full(r)
+                if spec.take[i]
+                    && c.instrs[r]
+                        .shape
+                        .array()
+                        .map(|(t, d)| t == oty && d == odims)
+                        .unwrap_or(false) =>
+            {
+                Some(i)
+            }
+            _ => None,
+        });
+    }
 }
 
 /// Recognize a region that is a single scalar binary op over its two
@@ -327,6 +414,10 @@ fn classify(m: &HloModule, ins: &Instr, threefry: &[bool], opts: PlanOptions) ->
 /// (does not recurse into sub-plans, so its wall-clock is self time).
 pub(crate) fn op_label(ins: &Instr, fused: &Fused) -> (&'static str, bool) {
     match (&ins.op, fused) {
+        // chain annotations take precedence over the per-op labels:
+        // the root runs the whole tape, interiors never run at all
+        (_, Fused::Chain(_)) => ("chain[elementwise]", true),
+        (_, Fused::ChainInterior { .. }) => ("chain[interior]", true),
         (Op::While { .. }, Fused::Counted(_)) => ("while[counted]", false),
         (Op::While { .. }, _) => ("while[generic]", false),
         (Op::Call { .. }, Fused::Threefry) => ("call[threefry2x32]", true),
@@ -407,6 +498,12 @@ impl<'p> Executor<'p> {
         let mut args: Vec<Option<Value>> = args.into_iter().map(Some).collect();
         let mut regs: Vec<Option<Value>> = (0..comp.instrs.len()).map(|_| None).collect();
         for si in 0..comp.instrs.len() {
+            if matches!(comp.fused[si], Fused::ChainInterior { .. }) {
+                // claimed by a chain root downstream; never executed,
+                // register stays None (nothing frees at elided steps —
+                // analyze() attributed every use here to the root)
+                continue;
+            }
             let v = self
                 .exec_step(comp, si, &mut regs, &mut args)
                 .with_context(|| format!("executing {}::{}", comp.name, comp.instrs[si].name))?;
@@ -475,6 +572,9 @@ impl<'p> Executor<'p> {
         args: &mut [Option<Value>],
     ) -> Result<Value> {
         let ins = &comp.instrs[si];
+        if let Fused::Chain(spec) = &comp.fused[si] {
+            return self.chain_exec(comp, si, spec, regs);
+        }
         Ok(match &ins.op {
             Op::Parameter(i) => args
                 .get_mut(*i)
@@ -715,10 +815,14 @@ impl<'p> Executor<'p> {
 
     // ------------------------------------------------------------ dot ---
 
-    /// General dot via packed contiguous panels. Accumulates each
-    /// output element over ascending contraction index with a single
-    /// f32 accumulator — the identical operation order to [`ops::dot`],
-    /// so results match it bit-for-bit.
+    /// General dot via packed contiguous panels and a lane-blocked,
+    /// register-tiled microkernel: the rhs panel is transposed into
+    /// `LANE_BLOCK`-wide `[kn][8]` tiles and each lhs row contracts
+    /// eight output columns at once ([`dot_lanes`]), with remainder
+    /// columns on the scalar 4-way dot. Every output element performs
+    /// the identical operation order to [`ops::dot`] (stride-4 partial
+    /// sums combined as `(s0+s1)+(s2+s3)`, sequential tail), so results
+    /// match it bit-for-bit at any thread count.
     fn dot_packed(&self, lhs: &ArrayValue, rhs: &ArrayValue, nums: &DotDims) -> Result<ArrayValue> {
         let x = lhs.as_f32()?;
         let y = rhs.as_f32()?;
@@ -762,18 +866,19 @@ impl<'p> Executor<'p> {
 
         let lp = pack_f32(x, &lhs.dims, &nums.lhs_batch, &lfree, &nums.lhs_contracting);
         let rp = pack_f32(y, &rhs.dims, &nums.rhs_batch, &rfree, &nums.rhs_contracting);
+        let rt = tile_rhs(&rp, bn, nn, kn);
         let rows = bn * mn;
         let mut out = vec![0.0f32; total];
         let workers =
             if total >= DOT_PAR_MIN && self.threads > 1 { self.threads.min(rows) } else { 1 };
         if workers <= 1 {
-            dot_rows(&lp, &rp, mn, nn, kn, 0, &mut out);
+            dot_rows(&lp, &rp, &rt, mn, nn, kn, 0, &mut out);
         } else {
             let chunk_rows = rows.div_ceil(workers);
-            let (lp, rp) = (&lp, &rp);
+            let (lp, rp, rt) = (&lp, &rp, &rt);
             std::thread::scope(|s| {
                 for (ci, chunk) in out.chunks_mut(chunk_rows * nn).enumerate() {
-                    s.spawn(move || dot_rows(lp, rp, mn, nn, kn, ci * chunk_rows, chunk));
+                    s.spawn(move || dot_rows(lp, rp, rt, mn, nn, kn, ci * chunk_rows, chunk));
                 }
             });
         }
@@ -840,6 +945,76 @@ impl<'p> Executor<'p> {
     /// slots, then per iteration run only the body's compute steps —
     /// the state reads become direct register writes, the root tuple
     /// becomes direct register reads, and the condition never runs.
+    /// Execute one elementwise-chain superinstruction: splat the
+    /// folded scalars, borrow the full input lanes, and run the
+    /// compiled tape once per output element ([`ops::chain_apply`]).
+    /// When the spec names an in-place slot, that register is moved
+    /// out and overwritten (copy-on-write if its buffer is shared);
+    /// its previous values reach the tape through [`ops::LaneRef::Dst`]
+    /// — read per element before the element's store, so the rewrite
+    /// is bit-identical to the standalone steps.
+    fn chain_exec(
+        &self,
+        comp: &CompPlan,
+        si: usize,
+        spec: &fuse::ChainSpec,
+        regs: &mut [Option<Value>],
+    ) -> Result<Value> {
+        let (ty, dims) = comp.instrs[si].shape.array()?;
+        let mut dst = match spec.inplace {
+            Some(slot) => {
+                let r = spec.inputs[slot].reg();
+                let v = regs[r].take().context("chain in-place operand register")?;
+                let a = v.into_array()?;
+                ensure!(
+                    a.ty() == ty && a.dims == dims,
+                    "chain in-place operand shape mismatch"
+                );
+                a
+            }
+            None => {
+                let n = dims.iter().product();
+                let buf = match ty {
+                    ElemType::F32 => Buf::F32(vec![0.0; n]),
+                    ElemType::S32 => Buf::S32(vec![0; n]),
+                    ElemType::U32 => Buf::U32(vec![0; n]),
+                    ElemType::Pred => Buf::Pred(vec![false; n]),
+                };
+                ArrayValue { dims: dims.to_vec(), buf: std::sync::Arc::new(buf) }
+            }
+        };
+        let mut lanes = Vec::with_capacity(spec.inputs.len());
+        for (i, inp) in spec.inputs.iter().enumerate() {
+            if spec.inplace == Some(i) {
+                lanes.push(ops::LaneRef::Dst);
+                continue;
+            }
+            let a = regs[inp.reg()].as_ref().context("chain operand register")?.array()?;
+            lanes.push(match *inp {
+                fuse::ChainInput::Full(_) => {
+                    ensure!(a.dims == dims, "chain input shape mismatch");
+                    match &*a.buf {
+                        Buf::F32(x) => ops::LaneRef::F32(x),
+                        Buf::S32(x) => ops::LaneRef::S32(x),
+                        Buf::U32(x) => ops::LaneRef::U32(x),
+                        Buf::Pred(x) => ops::LaneRef::Pred(x),
+                    }
+                }
+                fuse::ChainInput::Scalar(_) => {
+                    ensure!(a.numel() == 1, "chain splat source must be one element");
+                    ops::LaneRef::Splat(match &*a.buf {
+                        Buf::F32(x) => x[0].to_bits(),
+                        Buf::S32(x) => x[0] as u32,
+                        Buf::U32(x) => x[0],
+                        Buf::Pred(x) => x[0] as u32,
+                    })
+                }
+            });
+        }
+        ops::chain_apply(&spec.tape, &lanes, dst.buf_mut(), self.threads)?;
+        Ok(Value::Array(dst))
+    }
+
     fn counted_loop(&self, spec: &CountedLoop, init: Value) -> Result<Value> {
         let body = &self.plan.comps[spec.body];
         let state = match init {
@@ -864,6 +1039,9 @@ impl<'p> Executor<'p> {
                 regs[gi] = Some(v.expect("state slot populated"));
             }
             for &si in &spec.steps {
+                if matches!(body.fused[si], Fused::ChainInterior { .. }) {
+                    continue; // elided into a chain within the body
+                }
                 let v = self.exec_step(body, si, &mut regs, &mut []).with_context(|| {
                     format!("executing {}::{}", body.name, body.instrs[si].name)
                 })?;
@@ -1172,21 +1350,99 @@ fn pack_f32(
     out
 }
 
+/// Output columns per register tile in the blocked dot kernel — the
+/// `dot8` transposed-tile width from `quant/assign.rs`, generalized
+/// here to the packed `[batch][free][k]` dot.
+const LANE_BLOCK: usize = 8;
+
+/// Transpose the packed rhs panel `[bn][nn][kn]` into lane-major tiles
+/// `[bn][nn / LANE_BLOCK][kn][LANE_BLOCK]` (full blocks only; the
+/// `nn % LANE_BLOCK` remainder columns stay row-major in the packed
+/// panel and are contracted by the scalar 4-way dot).
+fn tile_rhs(rp: &[f32], bn: usize, nn: usize, kn: usize) -> Vec<f32> {
+    let nblk = nn / LANE_BLOCK;
+    let mut tiles = vec![0f32; bn * nblk * kn * LANE_BLOCK];
+    for b in 0..bn {
+        let rb = &rp[b * nn * kn..(b + 1) * nn * kn];
+        let tb = &mut tiles[b * nblk * kn * LANE_BLOCK..(b + 1) * nblk * kn * LANE_BLOCK];
+        for blk in 0..nblk {
+            for t in 0..kn {
+                for l in 0..LANE_BLOCK {
+                    tb[(blk * kn + t) * LANE_BLOCK + l] = rb[(blk * LANE_BLOCK + l) * kn + t];
+                }
+            }
+        }
+    }
+    tiles
+}
+
+/// Eight output columns at once against one transposed `[kn][8]` tile.
+/// Per lane this performs *exactly* the operation sequence of
+/// [`assign::dot`] / the rewritten [`ops::dot`] (four stride-4 partial
+/// sums combined as `(s0+s1)+(s2+s3)`, then a sequential tail), so
+/// `out[l]` matches the scalar contraction bit-for-bit.
+#[inline]
+fn dot_lanes(xr: &[f32], tile: &[f32], kn: usize, out: &mut [f32; LANE_BLOCK]) {
+    let mut s0 = [0f32; LANE_BLOCK];
+    let mut s1 = [0f32; LANE_BLOCK];
+    let mut s2 = [0f32; LANE_BLOCK];
+    let mut s3 = [0f32; LANE_BLOCK];
+    let kn4 = kn - kn % 4;
+    let mut t = 0;
+    while t < kn4 {
+        let r0 = &tile[t * LANE_BLOCK..(t + 1) * LANE_BLOCK];
+        let r1 = &tile[(t + 1) * LANE_BLOCK..(t + 2) * LANE_BLOCK];
+        let r2 = &tile[(t + 2) * LANE_BLOCK..(t + 3) * LANE_BLOCK];
+        let r3 = &tile[(t + 3) * LANE_BLOCK..(t + 4) * LANE_BLOCK];
+        for l in 0..LANE_BLOCK {
+            s0[l] += xr[t] * r0[l];
+            s1[l] += xr[t + 1] * r1[l];
+            s2[l] += xr[t + 2] * r2[l];
+            s3[l] += xr[t + 3] * r3[l];
+        }
+        t += 4;
+    }
+    for l in 0..LANE_BLOCK {
+        out[l] = (s0[l] + s1[l]) + (s2[l] + s3[l]);
+    }
+    while t < kn {
+        let r = &tile[t * LANE_BLOCK..(t + 1) * LANE_BLOCK];
+        for l in 0..LANE_BLOCK {
+            out[l] += xr[t] * r[l];
+        }
+        t += 1;
+    }
+}
+
 /// Contract packed panels over rows `[row0, row0 + out.len()/nn)`.
-/// Sequential ascending-k accumulation per output element.
-fn dot_rows(lp: &[f32], rp: &[f32], mn: usize, nn: usize, kn: usize, row0: usize, out: &mut [f32]) {
+/// Full `LANE_BLOCK`-wide column tiles go through the transposed-tile
+/// lane kernel; remainder columns use the scalar 4-way dot — both
+/// reproduce [`ops::dot`]'s accumulation order per output element.
+fn dot_rows(
+    lp: &[f32],
+    rp: &[f32],
+    rt: &[f32],
+    mn: usize,
+    nn: usize,
+    kn: usize,
+    row0: usize,
+    out: &mut [f32],
+) {
+    let nblk = nn / LANE_BLOCK;
     for (r, orow) in out.chunks_mut(nn).enumerate() {
         let row = row0 + r;
         let b = row / mn;
         let xr = &lp[row * kn..(row + 1) * kn];
+        let tb = &rt[b * nblk * kn * LANE_BLOCK..(b + 1) * nblk * kn * LANE_BLOCK];
+        for blk in 0..nblk {
+            let tile = &tb[blk * kn * LANE_BLOCK..(blk + 1) * kn * LANE_BLOCK];
+            let mut lanes = [0f32; LANE_BLOCK];
+            dot_lanes(xr, tile, kn, &mut lanes);
+            orow[blk * LANE_BLOCK..(blk + 1) * LANE_BLOCK].copy_from_slice(&lanes);
+        }
         let rb = &rp[b * nn * kn..(b + 1) * nn * kn];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let yr = &rb[j * kn..(j + 1) * kn];
-            let mut acc = 0.0f32;
-            for (xv, yv) in xr.iter().zip(yr) {
-                acc += xv * yv;
-            }
-            *o = acc;
+        for (j, o) in orow.iter_mut().enumerate().skip(nblk * LANE_BLOCK) {
+            *o = assign::dot(xr, &rb[j * kn..(j + 1) * kn]);
         }
     }
 }

@@ -26,7 +26,12 @@
 //!   through `call`/`while`/`reduce`/`scatter` sub-computations.
 //! * **Fused-region preconditions** ([`DiagKind::Fusion`]): each
 //!   `Fused` annotation (single-binary-op region, counted loop,
-//!   threefry round body) is re-proved from the instructions.
+//!   threefry round body, elementwise-chain superinstruction) is
+//!   re-proved from the instructions — for chains, the claimed
+//!   membership must be a bijection with the interior markers, every
+//!   elided register must be unobservable outside the chain, and the
+//!   slot assignment, tape, take flags and in-place slot must agree
+//!   with an independent re-derivation.
 //! * **Shard safety** ([`DiagKind::ShardSafety`]): every step that can
 //!   dispatch a kernel that shards under the `threads` knob must name
 //!   a kernel in [`SHARD_REGISTRY`], where each entry carries its
@@ -52,7 +57,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use crate::runtime::interp::fuse::CountedLoop;
+use crate::runtime::interp::fuse::{ChainInput, ChainSpec, CountedLoop};
+use crate::runtime::interp::ops::TapeOp;
 use crate::runtime::interp::parser::{BinaryOp, CmpDir, Instr, Op};
 use crate::runtime::interp::plan::{op_label, CompPlan, Fused, Plan};
 use crate::runtime::interp::value::{Buf, ElemType, Shape};
@@ -181,9 +187,17 @@ pub const SHARD_REGISTRY: &[ShardKernel] = &[
         rationale: "each element picks one branch independently of every other element",
     },
     ShardKernel {
+        name: "chain[elementwise]",
+        determinism: ShardDeterminism::PerElement,
+        rationale: "each element evaluates the whole compiled tape independently with the \
+                    same scalar helpers as the standalone kernels, never reading another \
+                    element (in-place lanes are read before the element's own store)",
+    },
+    ShardKernel {
         name: "dot[packed]",
         determinism: ShardDeterminism::PerElement,
-        rationale: "each output row's ascending-k accumulation runs wholly on one worker",
+        rationale: "each output element's 4-way ascending-k accumulation runs wholly on one \
+                    worker; lane tiles batch independent columns without regrouping any sum",
     },
     ShardKernel {
         name: "reduce[fused]",
@@ -216,6 +230,11 @@ pub const SHARD_REGISTRY: &[ShardKernel] = &[
 /// return None. Keep in sync with `Executor::step`.
 pub fn sharding_kernel(ins: &Instr, fused: &Fused) -> Option<&'static str> {
     match (&ins.op, fused) {
+        // chain dispatch precedes the per-op arms: a chain root runs
+        // the tape kernel instead of its own op's kernel, and an
+        // elided interior never dispatches anything
+        (_, Fused::Chain(_)) => Some("chain[elementwise]"),
+        (_, Fused::ChainInterior { .. }) => None,
         (Op::Unary(_), _) => Some("unary[elementwise]"),
         (Op::Binary(_), _) => Some("binary[elementwise]"),
         (Op::Select, _) => Some("select[elementwise]"),
@@ -446,62 +465,38 @@ impl<'p> Verifier<'p> {
     /// check `free_after` / `take` against them. This is deliberately
     /// NOT a call into `plan::analyze` — the point is that a planner
     /// bug cannot vouch for itself.
+    ///
+    /// Uses are counted at their *effective* site: a read by a step
+    /// elided into an elementwise chain physically happens when the
+    /// chain root runs, so that is where its register must still be
+    /// live. The `ChainInterior` back-pointers consulted for the
+    /// mapping are themselves re-proved by `check_fusion`.
     fn check_liveness(&mut self, ci: usize) {
         let comp = &self.plan.comps[ci];
         let n = comp.instrs.len();
-        // my own last-use table: latest step index reading register r
+        // where step si's operand reads physically happen (defensive
+        // against a corrupt back-pointer, which check_fusion reports)
+        let eff = |si: usize| match comp.fused[si] {
+            Fused::ChainInterior { root } if root < n => root,
+            _ => si,
+        };
+        // my own last-use table: latest *effective* step reading
+        // register r (effective sites are not monotone in si, so fold
+        // the maximum instead of keeping the final write)
         let mut last_use: Vec<Option<usize>> = vec![None; n];
         for (si, ins) in comp.instrs.iter().enumerate() {
             for &o in &ins.operands {
                 if o < n {
-                    last_use[o] = Some(si);
+                    let s = eff(si);
+                    last_use[o] = Some(last_use[o].map_or(s, |l| l.max(s)));
                 }
             }
         }
         let mut findings = Vec::new();
-        let mut freed = vec![false; n];
-        for si in 0..n {
-            for (k, &o) in comp.instrs[si].operands.iter().enumerate() {
-                if o >= si {
-                    continue; // reported by check_structure
-                }
-                if freed[o] {
-                    findings.push((
-                        si,
-                        DiagKind::StaleRead,
-                        format!("reads register {o} after its free point"),
-                    ));
-                }
-                if comp.take[si].get(k) == Some(&true) {
-                    let dup =
-                        comp.instrs[si].operands.iter().filter(|&&x| x == o).count() > 1;
-                    if o == comp.root {
-                        findings.push((
-                            si,
-                            DiagKind::InPlace,
-                            format!("operand {k} moves the root register {o}"),
-                        ));
-                    } else if dup {
-                        findings.push((
-                            si,
-                            DiagKind::InPlace,
-                            format!(
-                                "operand {k} moves register {o}, which this step reads twice"
-                            ),
-                        ));
-                    } else if last_use[o] != Some(si) {
-                        findings.push((
-                            si,
-                            DiagKind::InPlace,
-                            format!(
-                                "operand {k} moves register {o}, but step {} still reads it",
-                                last_use[o].unwrap_or(o)
-                            ),
-                        ));
-                    }
-                }
-            }
-            for &r in &comp.free_after[si] {
+        // first free site per register, with the structural free checks
+        let mut free_at: Vec<Option<usize>> = vec![None; n];
+        for (si, frees) in comp.free_after.iter().enumerate() {
+            for &r in frees {
                 if r >= n {
                     findings.push((
                         si,
@@ -532,17 +527,72 @@ impl<'p> Verifier<'p> {
                         format!("frees register {r}, but a later step still reads it"),
                     ));
                 }
-                if std::mem::replace(&mut freed[r], true) {
+                if free_at[r].is_some() {
                     findings.push((
                         si,
                         DiagKind::Structure,
                         format!("register {r} is freed twice"),
                     ));
+                } else {
+                    free_at[r] = Some(si);
                 }
             }
         }
-        for (r, &f) in freed.iter().enumerate() {
-            if !f && r != comp.root {
+        for (si, ins) in comp.instrs.iter().enumerate() {
+            let elided = matches!(comp.fused[si], Fused::ChainInterior { .. });
+            for (k, &o) in ins.operands.iter().enumerate() {
+                if o >= si {
+                    continue; // reported by check_structure
+                }
+                if free_at[o].is_some_and(|f| f < eff(si)) {
+                    findings.push((
+                        si,
+                        DiagKind::StaleRead,
+                        format!("reads register {o} after its free point"),
+                    ));
+                }
+                if comp.take[si].get(k) == Some(&true) {
+                    let dup = ins.operands.iter().filter(|&&x| x == o).count() > 1;
+                    if elided {
+                        // the step never executes — its reads happen at
+                        // the chain root, governed by the spec's own
+                        // take flags, so a move flag here is a lie
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!(
+                                "operand {k} carries a move flag on a step elided into a chain"
+                            ),
+                        ));
+                    } else if o == comp.root {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!("operand {k} moves the root register {o}"),
+                        ));
+                    } else if dup {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!(
+                                "operand {k} moves register {o}, which this step reads twice"
+                            ),
+                        ));
+                    } else if last_use[o] != Some(si) {
+                        findings.push((
+                            si,
+                            DiagKind::InPlace,
+                            format!(
+                                "operand {k} moves register {o}, but step {} still reads it",
+                                last_use[o].unwrap_or(o)
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        for (r, f) in free_at.iter().enumerate() {
+            if f.is_none() && r != comp.root {
                 findings.push((
                     r,
                     DiagKind::Structure,
@@ -1370,6 +1420,35 @@ impl<'p> Verifier<'p> {
                     );
                 }
             }
+            (Fused::Chain(spec), _) => {
+                if let Err(msg) = self.prove_chain(ci, si, spec) {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        format!("chain preconditions do not hold: {msg}"),
+                    );
+                }
+            }
+            (Fused::ChainInterior { root }, _) => {
+                // the root-side re-proof validates the whole membership;
+                // here only the back-pointer itself: it must name a
+                // chain in this computation that claims this step
+                let claimed = comp.fused.get(*root).is_some_and(
+                    |f| matches!(f, Fused::Chain(spec) if spec.steps.contains(&si)),
+                );
+                if !claimed {
+                    self.diag(
+                        ci,
+                        si,
+                        DiagKind::Fusion,
+                        format!(
+                            "chain-interior marker names step {root}, which is not a chain \
+                             claiming this step"
+                        ),
+                    );
+                }
+            }
             (fused, _) => {
                 self.diag(
                     ci,
@@ -1432,6 +1511,240 @@ impl<'p> Verifier<'p> {
         let want = if acc_first { [p0, p1] } else { [p1, p0] };
         if root.operands != want {
             return Err("region operand order disagrees with acc_first".into());
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------- chain re-proof ---
+
+    /// Re-prove one elementwise-chain superinstruction from scratch.
+    /// The claimed membership (`spec.steps`) is taken as the planner's
+    /// policy choice; everything that makes it *sound* is re-derived
+    /// here with its own forward walk (not `fuse::match_chains`'s
+    /// descending cone growth) and must agree exactly:
+    ///
+    /// * membership is a bijection with the `ChainInterior` markers;
+    /// * every elided register is unobservable — exactly one reader,
+    ///   inside the chain, and never the computation root (an elided
+    ///   register is never written);
+    /// * members are elementwise steps of the chain's shape, or
+    ///   broadcast splats of a one-element source living outside the
+    ///   chain;
+    /// * the slot assignment (inputs in first-reference order, one
+    ///   tape slot per elementwise member in program order) and the
+    ///   compiled tape match the re-derivation;
+    /// * take flags match this module's own effective liveness, and
+    ///   the in-place slot is the canonical first consumable full slot
+    ///   whose register matches the output exactly.
+    fn prove_chain(&self, ci: usize, si: usize, spec: &ChainSpec) -> Result<(), String> {
+        let comp = &self.plan.comps[ci];
+        let n = comp.instrs.len();
+        let (oty, odims) = match &comp.instrs[si].shape {
+            Shape::Array { ty, dims } => (*ty, dims.clone()),
+            Shape::Tuple(_) => return Err("chain root result is a tuple".into()),
+        };
+        let dims_of = |s: usize| {
+            comp.instrs[s].shape.array().ok().map(|(_, d)| d.to_vec())
+        };
+
+        // membership must be a bijection with the interior markers
+        let mut member = vec![false; n];
+        let mut prev = None;
+        for &s in &spec.steps {
+            if s >= si {
+                return Err(format!("claimed step {s} does not precede the root"));
+            }
+            if prev.is_some_and(|p: usize| p >= s) {
+                return Err("claimed steps are not strictly ascending".into());
+            }
+            prev = Some(s);
+            if !matches!(comp.fused[s], Fused::ChainInterior { root } if root == si) {
+                return Err(format!("claimed step {s} is not marked as this chain's interior"));
+            }
+            member[s] = true;
+        }
+        for (s, f) in comp.fused.iter().enumerate() {
+            if matches!(f, Fused::ChainInterior { root } if *root == si) && !member[s] {
+                return Err(format!("step {s} carries this chain's interior marker but is not claimed"));
+            }
+        }
+        member[si] = true;
+
+        // elided registers must be unobservable outside the chain
+        let mut readers = vec![0usize; n];
+        for ins in &comp.instrs {
+            for &o in &ins.operands {
+                if o < n {
+                    readers[o] += 1;
+                }
+            }
+        }
+        for &s in &spec.steps {
+            if s == comp.root {
+                return Err(format!(
+                    "claimed step {s} is the computation root; eliding it would drop the result"
+                ));
+            }
+            if readers[s] != 1 {
+                return Err(format!(
+                    "elided step {s} has {} readers, want exactly one",
+                    readers[s]
+                ));
+            }
+        }
+
+        // classify members: elementwise steps of the chain shape join
+        // the tape in program order; broadcasts are splat elisions
+        let elementwise = |s: usize| {
+            matches!(
+                comp.instrs[s].op,
+                Op::Unary(_) | Op::Binary(_) | Op::Select | Op::Compare { .. } | Op::Convert
+            )
+        };
+        let mut tape_members: Vec<usize> = Vec::new();
+        for &s in spec.steps.iter().chain(std::iter::once(&si)) {
+            if elementwise(s) {
+                if dims_of(s) != Some(odims.clone()) {
+                    return Err(format!("member {s} does not produce the chain shape"));
+                }
+                tape_members.push(s);
+            } else if s == si || !matches!(comp.instrs[s].op, Op::Broadcast { .. }) {
+                return Err(format!(
+                    "step {s} is neither an elementwise op nor a broadcast splat"
+                ));
+            }
+        }
+
+        // re-derive the slot assignment with a forward walk: external
+        // inputs in first-reference order, then one tape slot per
+        // elementwise member
+        let mut tape_pos = vec![usize::MAX; n];
+        for (t, &s) in tape_members.iter().enumerate() {
+            tape_pos[s] = t;
+        }
+        let mut inputs: Vec<ChainInput> = Vec::new();
+        let mut input_pos = vec![usize::MAX; n];
+        let mut read_in_chain = vec![false; n];
+        for &s in &tape_members {
+            for &o in &comp.instrs[s].operands {
+                read_in_chain[o] = true;
+                if tape_pos[o] != usize::MAX || input_pos[o] != usize::MAX {
+                    continue; // a tape member, or already assigned
+                }
+                input_pos[o] = inputs.len();
+                if member[o] {
+                    // a claimed broadcast splat: one one-element source
+                    // living outside the chain, broadcast to its shape
+                    let b = &comp.instrs[o];
+                    let &[src] = b.operands.as_slice() else {
+                        return Err(format!("broadcast splat {o} must have one operand"));
+                    };
+                    if dims_of(o) != Some(odims.clone()) {
+                        return Err(format!(
+                            "broadcast splat {o} does not produce the chain shape"
+                        ));
+                    }
+                    if comp.instrs[src].shape.numel() != 1 {
+                        return Err(format!("broadcast splat {o}'s source is not one element"));
+                    }
+                    if member[src] {
+                        return Err(format!(
+                            "broadcast splat {o}'s source {src} is elided and never written"
+                        ));
+                    }
+                    inputs.push(ChainInput::Scalar(src));
+                } else {
+                    if dims_of(o) != Some(odims.clone()) {
+                        return Err(format!("input register {o} does not have the chain shape"));
+                    }
+                    inputs.push(ChainInput::Full(o));
+                }
+            }
+        }
+        for &s in &spec.steps {
+            if !read_in_chain[s] {
+                return Err(format!("claimed step {s} is never read inside the chain"));
+            }
+        }
+
+        // re-derive the tape
+        let n_in = inputs.len();
+        if n_in + tape_members.len() > u16::MAX as usize {
+            return Err("chain slot count overflows the tape encoding".into());
+        }
+        let slot = |o: usize| -> u16 {
+            if tape_pos[o] != usize::MAX {
+                (n_in + tape_pos[o]) as u16
+            } else {
+                input_pos[o] as u16
+            }
+        };
+        let mut tape: Vec<TapeOp> = Vec::with_capacity(tape_members.len());
+        for &s in &tape_members {
+            let ins = &comp.instrs[s];
+            let mty = ins.shape.array().map(|(t, _)| t).map_err(|e| e.to_string())?;
+            let sty = |k: usize| -> Result<ElemType, String> {
+                comp.instrs[ins.operands[k]]
+                    .shape
+                    .array()
+                    .map(|(t, _)| t)
+                    .map_err(|_| format!("member {s}'s operand {k} is a tuple"))
+            };
+            let t = match (&ins.op, ins.operands.as_slice()) {
+                (Op::Unary(u), &[a]) => TapeOp::Unary { op: *u, ty: mty, a: slot(a) },
+                (Op::Binary(bo), &[a, b]) => {
+                    TapeOp::Binary { op: *bo, ty: mty, a: slot(a), b: slot(b) }
+                }
+                (Op::Compare { dir }, &[a, b]) => {
+                    TapeOp::Compare { dir: *dir, ty: sty(0)?, a: slot(a), b: slot(b) }
+                }
+                (Op::Select, &[p, t, f]) => {
+                    TapeOp::Select { p: slot(p), t: slot(t), f: slot(f) }
+                }
+                (Op::Convert, &[a]) => TapeOp::Convert { from: sty(0)?, to: mty, a: slot(a) },
+                _ => return Err(format!("member {s} has an unexpected operand count")),
+            };
+            tape.push(t);
+        }
+
+        // take: an input may be consumed iff the chain root is its last
+        // *effective* use and it feeds only one slot; in-place: the
+        // first consumable full slot matching the output exactly
+        let eff = |s: usize| match comp.fused[s] {
+            Fused::ChainInterior { root } if root < n => root,
+            _ => s,
+        };
+        let mut last: Vec<Option<usize>> = vec![None; n];
+        for (s, ins) in comp.instrs.iter().enumerate() {
+            for &o in &ins.operands {
+                if o < n {
+                    let e = eff(s);
+                    last[o] = Some(last[o].map_or(e, |l| l.max(e)));
+                }
+            }
+        }
+        let take: Vec<bool> = inputs
+            .iter()
+            .map(|inp| {
+                let r = inp.reg();
+                r != comp.root
+                    && last[r] == Some(si)
+                    && inputs.iter().filter(|i2| i2.reg() == r).count() == 1
+            })
+            .collect();
+        let inplace = inputs.iter().enumerate().find_map(|(i, inp)| match *inp {
+            ChainInput::Full(r) if take[i] => comp.instrs[r]
+                .shape
+                .array()
+                .is_ok_and(|(t, d)| t == oty && d == odims)
+                .then_some(i),
+            _ => None,
+        });
+
+        let want =
+            ChainSpec { steps: spec.steps.clone(), inputs, take, inplace, tape };
+        if *spec != want {
+            return Err(format!("chain spec disagrees with re-derivation ({want:?})"));
         }
         Ok(())
     }
@@ -1766,13 +2079,16 @@ impl fmt::Display for PlanCensus {
         writeln!(
             f,
             "fusion: {} counted loops, {} generic whiles, {} threefry calls, \
-             {} fused reduces, {} fused scatters, {} fused windows",
+             {} fused reduces, {} fused scatters, {} fused windows, \
+             {} chains ({} steps)",
             self.fusion.counted_loops,
             self.fusion.generic_whiles,
             self.fusion.threefry_calls,
             self.fusion.fused_reduces,
             self.fusion.fused_scatters,
-            self.fusion.fused_windows
+            self.fusion.fused_windows,
+            self.fusion.fused_chains,
+            self.fusion.chain_steps
         )?;
         writeln!(f, "sharding kernels:")?;
         for (name, count) in &self.shard_kernels {
@@ -1835,8 +2151,38 @@ mod tests {
         ROOT p.5 = f32[1,3,3,4]{3,2,1,0} reduce-window(c.3, z.4), \
         window={size=1x2x2x1 stride=1x2x2x1}, to_apply=max.1\n}\n";
 
+    /// The elementwise-chain fixture from `fuse.rs`'s tests: a select
+    /// roots a multiply + compare diamond over a shared exp, with a
+    /// folded broadcast-of-scalar splat.
+    const ECHAIN: &str = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+        c.2 = f32[] constant(2)\n  b.3 = f32[4]{0} broadcast(c.2), dimensions={}\n  \
+        e.4 = f32[4]{0} exponential(x.1)\n  m.5 = f32[4]{0} multiply(e.4, b.3)\n  \
+        p.6 = pred[4]{0} compare(x.1, e.4), direction=LT\n  \
+        ROOT s.7 = f32[4]{0} select(p.6, m.5, x.1)\n}\n";
+
+    /// A register whose last *instruction-level* read (the reshape)
+    /// precedes its last *effective* read (the chain root that loads
+    /// it for the elided negate): the case instruction-level liveness
+    /// cannot police.
+    const SPLIT: &str = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[4]{0} parameter(0)\n  \
+        c.2 = f32[4]{0} constant({1, 2, 3, 4})\n  n.3 = f32[4]{0} negate(x.1)\n  \
+        r.4 = f32[1,4]{1,0} reshape(x.1)\n  a.5 = f32[4]{0} add(n.3, c.2)\n  \
+        ROOT t.6 = (f32[4], f32[1,4]) tuple(a.5, r.4)\n}\n";
+
     fn compile(text: &str) -> Plan {
         Plan::compile_unverified(&parse_module(text).unwrap(), PlanOptions::default())
+    }
+
+    /// Compile the chain fixture and locate its `Fused::Chain` root.
+    fn chain_plan() -> (Plan, usize) {
+        let plan = compile(ECHAIN);
+        let e = plan.entry;
+        let ri = plan.comps[e]
+            .fused
+            .iter()
+            .position(|f| matches!(f, Fused::Chain(_)))
+            .expect("the select must root a chain");
+        (plan, ri)
     }
 
     fn kinds(diags: &[Diagnostic]) -> Vec<DiagKind> {
@@ -1852,13 +2198,14 @@ mod tests {
 
     #[test]
     fn clean_plans_verify_clean_at_every_option() {
-        for text in [COUNTED, CHAIN, CONV] {
+        for text in [COUNTED, CHAIN, CONV, ECHAIN, SPLIT] {
             let m = parse_module(text).unwrap();
-            for (cl, tf) in [(false, false), (false, true), (true, false), (true, true)] {
-                let opts = PlanOptions { counted_loops: cl, threefry: tf };
+            for bits in 0u8..8 {
+                let (cl, tf, ch) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+                let opts = PlanOptions { counted_loops: cl, threefry: tf, chains: ch };
                 let plan = Plan::compile_unverified(&m, opts);
                 let diags = verify(&plan);
-                assert!(diags.is_empty(), "cl={cl} tf={tf}:\n{}", render(&diags));
+                assert!(diags.is_empty(), "cl={cl} tf={tf} ch={ch}:\n{}", render(&diags));
             }
         }
     }
@@ -2011,7 +2358,7 @@ mod tests {
     #[test]
     fn registry_covers_every_dispatch_site() {
         // every key sharding_kernel can produce must be declared
-        for text in [CHAIN, CONV] {
+        for text in [CHAIN, CONV, ECHAIN] {
             let m = parse_module(text).unwrap();
             let plan = Plan::compile_unverified(&m, PlanOptions::default());
             for comp in &plan.comps {
@@ -2133,5 +2480,168 @@ mod tests {
         // census renders without panicking and mentions the kernels
         let s = c.to_string();
         assert!(s.contains("dot[packed]") && s.contains("fused reduces"), "{s}");
+    }
+
+    // ------------------------------------------- chain superinstruction ---
+
+    #[test]
+    fn census_counts_the_elementwise_chain() {
+        let (plan, _) = chain_plan();
+        assert!(verify(&plan).is_empty());
+        let c = census(&plan);
+        assert_eq!(c.fusion.fused_chains, 1);
+        assert_eq!(c.fusion.chain_steps, 4, "three elided steps plus the root");
+        assert_eq!(c.op_counts.get("chain[elementwise]"), Some(&1));
+        assert_eq!(c.op_counts.get("chain[interior]"), Some(&3));
+        assert_eq!(c.shard_kernels.get("chain[elementwise]"), Some(&1));
+        // an elided interior never dispatches a kernel
+        assert!(!c.shard_kernels.contains_key("chain[interior]"));
+        let s = c.to_string();
+        assert!(s.contains("1 chains (4 steps)"), "{s}");
+    }
+
+    #[test]
+    fn unmarked_claimed_chain_step_is_a_fusion_error() {
+        let (mut plan, ri) = chain_plan();
+        let e = plan.entry;
+        // strip the folded broadcast's interior marker: the claim list
+        // and the markers no longer agree
+        plan.comps[e].fused[2] = Fused::None;
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert_eq!(d.index, ri, "{d}");
+        assert!(d.message.contains("not marked"), "{d}");
+    }
+
+    #[test]
+    fn orphan_chain_interior_marker_is_a_fusion_error() {
+        let (mut plan, ri) = chain_plan();
+        let e = plan.entry;
+        // e.4 is a materialized multi-use input of the chain; forging
+        // an interior marker on it must be rejected from both sides —
+        // the marker names a chain that does not claim it, and the
+        // chain sees an unclaimed marker
+        plan.comps[e].fused[3] = Fused::ChainInterior { root: ri };
+        let diags = verify(&plan);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::Fusion && d.index == 3),
+            "{}",
+            render(&diags)
+        );
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::Fusion && d.index == ri),
+            "{}",
+            render(&diags)
+        );
+    }
+
+    #[test]
+    fn forged_chain_take_flag_is_a_fusion_error() {
+        let (mut plan, ri) = chain_plan();
+        let e = plan.entry;
+        match &mut plan.comps[e].fused[ri] {
+            Fused::Chain(spec) => {
+                // all three inputs die at the root in this fixture
+                assert_eq!(spec.take, vec![true, true, true]);
+                spec.take[1] = false;
+            }
+            other => panic!("not a chain: {other:?}"),
+        }
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert_eq!(d.index, ri, "{d}");
+        assert!(d.message.contains("disagrees with re-derivation"), "{d}");
+    }
+
+    #[test]
+    fn forged_chain_inplace_slot_is_a_fusion_error() {
+        let (mut plan, ri) = chain_plan();
+        let e = plan.entry;
+        match &mut plan.comps[e].fused[ri] {
+            Fused::Chain(spec) => {
+                assert_eq!(spec.inplace, Some(0));
+                // slot 2 (x.1) is also consumable and shape-compatible,
+                // but the canonical choice is the *first* such slot —
+                // accepting any sound-looking slot would let planner
+                // and verifier drift apart silently
+                spec.inplace = Some(2);
+            }
+            other => panic!("not a chain: {other:?}"),
+        }
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert_eq!(d.index, ri, "{d}");
+    }
+
+    #[test]
+    fn corrupted_chain_tape_is_a_fusion_error() {
+        let (mut plan, ri) = chain_plan();
+        let e = plan.entry;
+        match &mut plan.comps[e].fused[ri] {
+            Fused::Chain(spec) => {
+                // the multiply becomes an add: same slots, wrong op
+                spec.tape[0] =
+                    TapeOp::Binary { op: BinaryOp::Add, ty: ElemType::F32, a: 0, b: 1 };
+            }
+            other => panic!("not a chain: {other:?}"),
+        }
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::Fusion).expect("must reject");
+        assert_eq!(d.index, ri, "{d}");
+        assert!(d.message.contains("disagrees with re-derivation"), "{d}");
+    }
+
+    #[test]
+    fn move_flag_on_an_elided_step_is_an_inplace_error() {
+        let (mut plan, _) = chain_plan();
+        let e = plan.entry;
+        // the broadcast never executes; its read of c.2 happens at the
+        // chain root under the spec's take flags — and c.2's effective
+        // last use IS the root, so only the elision check catches a
+        // forged flag here
+        plan.comps[e].take[2] = vec![true];
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::InPlace).expect("must reject");
+        assert_eq!(d.index, 2, "{d}");
+        assert!(d.message.contains("elided"), "{d}");
+    }
+
+    #[test]
+    fn move_under_a_chain_reader_is_an_inplace_error() {
+        // x.1 feeds the chain only through its elided negate (step 2),
+        // so its last instruction-level read is the reshape (step 3) —
+        // but the chain root (step 4) physically loads it. A move flag
+        // on the reshape would steal the buffer the chain is about to
+        // read; only effective liveness catches this
+        let mut plan = compile(SPLIT);
+        let e = plan.entry;
+        assert!(verify(&plan).is_empty());
+        assert!(matches!(plan.comps[e].fused[4], Fused::Chain(_)));
+        plan.comps[e].take[3] = vec![true];
+        let diags = verify(&plan);
+        let d = diags.iter().find(|d| d.kind == DiagKind::InPlace).expect("must reject");
+        assert_eq!((d.instr.as_str(), d.index), ("r.4", 3), "{d}");
+        assert!(d.message.contains("step 4 still reads it"), "{d}");
+    }
+
+    #[test]
+    fn free_before_the_chain_root_is_a_stale_read() {
+        // c.2's only instruction-level read is the elided broadcast
+        // (step 2), but the splat is actually loaded when the chain
+        // root runs (step 6); freeing it anywhere in between must be
+        // flagged even though no instruction past step 2 names it
+        let (mut plan, _) = chain_plan();
+        let e = plan.entry;
+        plan.comps[e].free_after[3].push(1);
+        let diags = verify(&plan);
+        assert!(kinds(&diags).contains(&DiagKind::StaleRead), "{}", render(&diags));
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.kind == DiagKind::StaleRead && d.index == 3
+                    && d.message.contains("later step still reads it")),
+            "{}",
+            render(&diags)
+        );
     }
 }

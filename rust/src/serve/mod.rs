@@ -206,6 +206,23 @@ pub fn run(artifacts: &Path, cfg: ServeConfig) -> Result<()> {
     Ok(())
 }
 
+/// CLI entry with graceful shutdown: serve until `stop` is raised (the
+/// binary flips it from its SIGINT/SIGTERM handler), then stop
+/// admitting work (new jobs get 503), drain queued jobs through the
+/// batcher, and join every service thread before returning.
+pub fn run_until(artifacts: &Path, cfg: ServeConfig, stop: &AtomicBool) -> Result<()> {
+    let server = Server::start(artifacts, cfg)?;
+    let ids = server.state.registry.ids();
+    log_info!("qn serve listening on http://{} serving {:?}", server.addr(), ids);
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    log_info!("qn serve: stop signal received; draining queue and shutting down");
+    server.shutdown();
+    log_info!("qn serve: shutdown complete");
+    Ok(())
+}
+
 // ------------------------------------------------------------ http ---
 
 fn acceptor_main(state: &ServerState, listener: TcpListener, tx: mpsc::Sender<TcpStream>) {

@@ -59,7 +59,7 @@ fn assert_fused_matches(m: &HloModule, args: &[Value], label: &str) -> FusionSta
     let golden = Interp::new(m).run_entry(args).unwrap();
     let fused = Plan::compile(m);
     let nofuse =
-        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false });
+        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false, chains: false });
     for threads in [1usize, 3, 8] {
         let got = fused.run_entry(args.to_vec(), threads).unwrap();
         assert_bit_identical(&got, &golden, &format!("{label}[fused,t={threads}]"));
@@ -111,6 +111,8 @@ fn img_grad_fused_bit_identical_across_threads() {
     let fs = assert_fused_matches(&m, &args, "img.grad_mix@0.5,42");
     assert_eq!(fs.generic_whiles, 0, "fallback storm: {fs:?}");
     assert!(fs.counted_loops >= 1 && fs.threefry_calls >= 1, "{fs:?}");
+    // relu/mask/noise cones chain in the conv graph too
+    assert!(fs.fused_chains > 0 && fs.chain_steps >= fs.fused_chains, "{fs:?}");
 }
 
 #[test]

@@ -1,11 +1,13 @@
 //! Loop-fusion golden and property tests (DESIGN.md §4): the fused
 //! planned executor (counted `while` superinstruction + native
-//! threefry2x32 kernel + sharded fused reduces/elementwise) must be
-//! bit-identical to both the fusion-disabled plan and the tree-walking
-//! oracle on the checked-in `lm_tiny` fixture across threads
-//! {1, 3, 8}; near-miss loops must fall back to the generic `while`
-//! path and still match; and the threefry u32 trajectory is pinned to
-//! mirror-computed constants so the PRNG can never drift across PRs.
+//! threefry2x32 kernel + elementwise-chain superinstructions + sharded
+//! fused reduces/elementwise) must be bit-identical to both the
+//! fusion-disabled plan and the tree-walking oracle on the checked-in
+//! `lm_tiny` fixture across threads {1, 3, 8}; near-miss loops and
+//! chains (multi-use intermediates, dtype-reinterpreting
+//! bitcast-convert) must fall back and still match; and the threefry
+//! u32 trajectory is pinned to mirror-computed constants so the PRNG
+//! can never drift across PRs.
 
 use std::path::Path;
 
@@ -61,7 +63,7 @@ fn assert_fused_matches(m: &HloModule, args: &[Value], label: &str) -> FusionSta
     let golden = Interp::new(m).run_entry(args).unwrap();
     let fused = Plan::compile(m);
     let nofuse =
-        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false });
+        Plan::compile_opts(m, PlanOptions { counted_loops: false, threefry: false, chains: false });
     let nf = nofuse.fusion_stats();
     assert_eq!((nf.counted_loops, nf.threefry_calls), (0, 0), "{label}: opts ignored");
     for threads in [1usize, 3, 8] {
@@ -110,6 +112,31 @@ fn fixture_grad_fused_bit_identical_and_fully_fused() {
     assert!(fs.counted_loops >= 10, "{fs:?}");
     assert!(fs.threefry_calls >= 10, "{fs:?}");
     assert!(fs.fused_reduces > 0 && fs.fused_scatters > 0, "{fs:?}");
+    // the elementwise-chain census: the grad graph is full of
+    // single-use softmax/mask/noise cones, and every chain elides at
+    // least one interior step
+    assert!(fs.fused_chains > 0, "{fs:?}");
+    assert!(fs.chain_steps >= fs.fused_chains, "{fs:?}");
+}
+
+#[test]
+fn fixture_eval_fused_bit_identical_and_chained() {
+    let dir = fixture_dir();
+    let man = Manifest::load(&dir).unwrap();
+    let meta = man.model("lm_tiny").unwrap().clone();
+    let params = ParamStore::load_qnp1(&man.init_path(&meta)).unwrap();
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 7 + 3) % meta.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i * 5 + 1) % meta.vocab) as i32).collect();
+    let keep = vec![1.0f32; meta.n_layers];
+    let mut args: Vec<Value> =
+        params.iter().map(|(_, t)| f32v(&t.shape, t.data.clone())).collect();
+    args.push(i32v(&meta.tokens_shape, tokens));
+    args.push(i32v(&meta.targets_shape, targets));
+    args.push(f32v(&[keep.len()], keep));
+    let m = HloModule::parse_file(&man.hlo_path(&meta, "eval").unwrap()).unwrap();
+    let fs = assert_fused_matches(&m, &args, "eval");
+    assert!(fs.fused_chains > 0 && fs.chain_steps >= fs.fused_chains, "{fs:?}");
 }
 
 #[test]
@@ -226,6 +253,48 @@ fn threefry_pin_exact_u32_trajectory() {
     assert_eq!(x1, vec![0xCDA2_7419], "x1 after 5 fused round groups");
 }
 
+// -------------------------------------------------- elementwise chains ---
+
+/// exp feeds both a multiply and a compare (diamond): the multi-use
+/// exp must stay an external materialized input of the chain while the
+/// single-use multiply/compare/select and the broadcast-of-scalar are
+/// elided.
+const DIAMOND: &str = "HloModule t\n\nENTRY main.1 {\n  x.1 = f32[64]{0} parameter(0)\n  \
+    c.2 = f32[] constant(2)\n  b.3 = f32[64]{0} broadcast(c.2), dimensions={}\n  \
+    e.4 = f32[64]{0} exponential(x.1)\n  m.5 = f32[64]{0} multiply(e.4, b.3)\n  \
+    p.6 = pred[64]{0} compare(x.1, e.4), direction=LT\n  \
+    ROOT s.7 = f32[64]{0} select(p.6, m.5, x.1)\n}\n";
+
+#[test]
+fn multi_use_intermediate_stays_external_and_matches() {
+    let m = HloModule::parse_str(DIAMOND).unwrap();
+    let data: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 16.0).collect();
+    let args = vec![f32v(&[64], data)];
+    let fs = assert_fused_matches(&m, &args, "diamond");
+    // one chain rooting the select; the multi-use exp executes
+    // standalone (3 elided: folded broadcast + multiply + compare)
+    assert_eq!((fs.fused_chains, fs.chain_steps), (1, 3), "{fs:?}");
+}
+
+/// bitcast-convert reinterprets the payload across dtypes and is never
+/// a chain member: the u32 adds below it and the f32 cone above it
+/// stay separate, and the plan still bit-matches the oracle.
+const BITCAST: &str = "HloModule t\n\nENTRY main.1 {\n  x.1 = u32[64]{0} parameter(0)\n  \
+    a.2 = u32[64]{0} add(x.1, x.1)\n  b.3 = f32[64]{0} bitcast-convert(a.2)\n  \
+    m.4 = f32[64]{0} multiply(b.3, b.3)\n  ROOT n.5 = f32[64]{0} negate(m.4)\n}\n";
+
+#[test]
+fn dtype_crossing_bitcast_is_not_elided_and_matches() {
+    let m = HloModule::parse_str(BITCAST).unwrap();
+    // payloads that reinterpret to finite f32 values
+    let data: Vec<u32> = (0..64).map(|i| 0x3F00_0000 + (i as u32) * 0x0001_0001).collect();
+    let args = vec![u32v(&[64], data)];
+    let fs = assert_fused_matches(&m, &args, "bitcast");
+    // only multiply+negate chain; the add is a lone step below the
+    // bitcast boundary and executes standalone
+    assert_eq!((fs.fused_chains, fs.chain_steps), (1, 1), "{fs:?}");
+}
+
 // ------------------------------------------------------- shard scaling ---
 
 /// Fused reduces (contiguous + strided) and elementwise chains large
@@ -248,5 +317,7 @@ fn sharded_reduce_and_elementwise_bit_identical_across_threads() {
     let n = 96 * 128;
     let data: Vec<f32> = (0..n).map(|i| ((i * 37 % 501) as f32 - 250.0) / 83.0).collect();
     let args = vec![f32v(&[96, 128], data)];
-    assert_fused_matches(&m, &args, "big");
+    let fs = assert_fused_matches(&m, &args, "big");
+    // 12288 elements puts the select-rooted chain on the sharded path
+    assert!(fs.fused_chains >= 1, "{fs:?}");
 }

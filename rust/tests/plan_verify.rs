@@ -22,20 +22,29 @@ fn fixture_module(file: &str) -> HloModule {
 const FIXTURES: [&str; 3] =
     ["lm_tiny.grad_mix.hlo.txt", "lm_tiny.eval.hlo.txt", "threefry_pin.hlo.txt"];
 
-const ALL_OPTIONS: [(bool, bool); 4] =
-    [(true, true), (true, false), (false, true), (false, false)];
+const ALL_OPTIONS: [(bool, bool, bool); 8] = [
+    (true, true, true),
+    (true, true, false),
+    (true, false, true),
+    (true, false, false),
+    (false, true, true),
+    (false, true, false),
+    (false, false, true),
+    (false, false, false),
+];
 
 #[test]
 fn fixture_plans_verify_clean_at_every_option() {
     for file in FIXTURES {
         let m = fixture_module(file);
-        for (counted_loops, threefry) in ALL_OPTIONS {
-            let opts = PlanOptions { counted_loops, threefry };
+        for (counted_loops, threefry, chains) in ALL_OPTIONS {
+            let opts = PlanOptions { counted_loops, threefry, chains };
             let plan = Plan::compile_unverified(&m, opts);
             let diags = verify::verify(&plan);
             assert!(
                 diags.is_empty(),
-                "{file} (counted_loops={counted_loops} threefry={threefry}):\n{}",
+                "{file} (counted_loops={counted_loops} threefry={threefry} \
+                 chains={chains}):\n{}",
                 verify::render(&diags)
             );
         }

@@ -159,7 +159,7 @@ fn prop_size_accounting_additive_and_positive() {
             QuantSpec::int(4, IntObserver::MinMax),
             QuantSpec::int(8, IntObserver::MinMax),
             QuantSpec::pq(64),
-            QuantSpec::Pq(PqSpec { int8_codebook: true, ..PqSpec::new(64) }),
+            QuantSpec::Pq(PqSpec { codebook_bits: Some(8), ..PqSpec::new(64) }),
         ] {
             let bits = param_bits(&p, &scheme);
             if bits == 0 {

@@ -42,6 +42,30 @@ fn pq_then_int8_centroids_error_budget() {
 }
 
 #[test]
+fn pq_then_int4_centroids_error_budget_and_size() {
+    // cb=int4: half the codebook bits of cb=int8, coarser grid, but the
+    // same additive error-budget structure
+    let w = weight(3, 128, 64);
+    let cfg = PqConfig { block_size: 8, n_centroids: 32, kmeans_iters: 10, threads: 0 };
+    let mut m4 = fit(&w, 128, 64, &cfg, &mut Pcg::new(4));
+    let mut m8 = m4.clone();
+    let err_pq = m4.objective(&w);
+    let cmse8 = m8.codebook.compress(8);
+    let cmse4 = m4.codebook.compress(4);
+    assert!(cmse4 > cmse8, "{cmse4} vs {cmse8}");
+    let err_combo = m4.objective(&w);
+    let n = w.len() as f64;
+    let bound = (err_pq.sqrt() + (cmse4 * n).sqrt()).powi(2) + 1e-6;
+    assert!(err_combo <= bound, "{err_combo} > {bound}");
+    // accounting: only the codebook term differs between the variants
+    assert_eq!(m8.codebook.storage_bits(), 2 * m4.codebook.storage_bits());
+    assert_eq!(
+        m8.storage_bits() - m8.codebook.storage_bits(),
+        m4.storage_bits() - m4.codebook.storage_bits()
+    );
+}
+
+#[test]
 fn kmeans_objective_equals_pq_objective() {
     let w = weight(5, 64, 64);
     let mut rng = Pcg::new(6);
@@ -84,12 +108,17 @@ fn compression_ratios_ordering() {
             pq_block: 8,
         })
         .collect();
-    let pq8 = QuantSpec::Pq(PqSpec { int8_codebook: true, ..PqSpec::new(64) });
+    let pq8 = QuantSpec::Pq(PqSpec { codebook_bits: Some(8), ..PqSpec::new(64) });
+    let pq4 = QuantSpec::Pq(PqSpec { codebook_bits: Some(4), ..PqSpec::new(64) });
     let r8 = compression_ratio(&params, &QuantSpec::int(8, IntObserver::MinMax));
     let r4 = compression_ratio(&params, &QuantSpec::int(4, IntObserver::MinMax));
     let rpq = compression_ratio(&params, &QuantSpec::pq(64));
     let rpq8 = compression_ratio(&params, &pq8);
-    assert!(1.0 < r8 && r8 < r4 && r4 < rpq && rpq < rpq8, "{r8} {r4} {rpq} {rpq8}");
+    let rpq4 = compression_ratio(&params, &pq4);
+    assert!(
+        1.0 < r8 && r8 < r4 && r4 < rpq && rpq < rpq8 && rpq8 < rpq4,
+        "{r8} {r4} {rpq} {rpq8} {rpq4}"
+    );
 }
 
 #[test]

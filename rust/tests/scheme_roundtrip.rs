@@ -45,7 +45,7 @@ fn all_pq_specs() -> Vec<QuantSpec> {
     for k in [1usize, 2, 64, 256, 1 << 12] {
         for block in [None, Some(4), Some(9)] {
             for iters in [0usize, 6, 12, 15] {
-                for int8_codebook in [false, true] {
+                for codebook_bits in [None, Some(8u8), Some(4u8)] {
                     for threads in [0usize, 3] {
                         for overrides in [
                             BTreeMap::new(),
@@ -59,7 +59,7 @@ fn all_pq_specs() -> Vec<QuantSpec> {
                                 k,
                                 block,
                                 kmeans_iters: iters,
-                                int8_codebook,
+                                codebook_bits,
                                 block_override: overrides,
                                 threads,
                             }));
@@ -96,7 +96,7 @@ fn prop_random_pq_specs_roundtrip() {
             k: 1 + rng.below(4096) as usize,
             block: if rng.below(2) == 0 { None } else { Some(1 + rng.below(64) as usize) },
             kmeans_iters: rng.below(40) as usize,
-            int8_codebook: rng.below(2) == 0,
+            codebook_bits: [None, Some(8u8), Some(4u8)][rng.below(3) as usize],
             block_override: BTreeMap::new(),
             threads: rng.below(9) as usize,
         };
@@ -294,7 +294,7 @@ fn quantize_params_bit_identical_to_legacy_pipeline() {
             "pq k=8 int8-cb + ffn override",
             QuantSpec::Pq(PqSpec {
                 kmeans_iters: 6,
-                int8_codebook: true,
+                codebook_bits: Some(8),
                 block_override: override_map.clone(),
                 ..PqSpec::new(8)
             }),
@@ -351,7 +351,7 @@ fn model_bytes_bit_identical_to_legacy_formulas() {
         assert_eq!(scheme_bytes(&meta, &spec), legacy_int(bits), "int{bits}");
     }
     for int8 in [false, true] {
-        let spec = QuantSpec::Pq(PqSpec { int8_codebook: int8, ..PqSpec::new(64) });
+        let spec = QuantSpec::Pq(PqSpec { codebook_bits: int8.then_some(8), ..PqSpec::new(64) });
         assert_eq!(
             scheme_bytes(&meta, &spec),
             legacy_pq(64, int8, &|p| p.pq_block),

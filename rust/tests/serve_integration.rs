@@ -383,3 +383,19 @@ fn protocol_errors_are_typed_not_fatal() {
     assert_eq!(status, 200);
     server.shutdown();
 }
+
+#[test]
+fn run_until_drains_and_returns_when_stop_flag_raised() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    // `qn serve` wires its SIGINT/SIGTERM handler to exactly this flag;
+    // flipping it here stands in for delivering the signal.
+    let stop = AtomicBool::new(false);
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..cfg_interp() };
+    std::thread::scope(|s| {
+        let h = s.spawn(|| quant_noise::serve::run_until(&fixture_dir(), cfg, &stop));
+        std::thread::sleep(Duration::from_millis(300));
+        assert!(!h.is_finished(), "run_until must serve until the flag is raised");
+        stop.store(true, Ordering::Relaxed);
+        h.join().expect("serve thread").expect("graceful shutdown");
+    });
+}

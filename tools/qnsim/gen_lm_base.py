@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Generate the paper-scale `lm_base`-shaped benchmark HLO.
+
+Emits a self-contained HLO-text module — a 12-layer, 1024-dim residual
+MLP stack with an explicit hand-derived backward pass — shaped like the
+lm_base config (ROADMAP item 1's "RoBERTa-ish dims"): per layer one
+[B,D]x[D,D] forward dot, a relu/scale/residual elementwise chain, and in
+the backward sweep the two transposed dots (dW = xT.dy, dx = dy.wT) plus
+the select/scale chains the grad entry lowers to. Weights are runtime
+parameters (the bench synthesizes values); no training and no JAX are
+needed, so `make fixture` can regenerate the file anywhere.
+
+The module is exactly the workload the compiled-tier kernels target:
+36 blocked [batch][free][k] dots at 1024-dim and one elementwise chain
+per layer per direction, so `benches/interp_step.rs` uses it to record
+the paper-scale grad-step wall clock and the `chain_speedup_grad_1t` /
+`dot_tile_speedup` fields of BENCH_interp.json.
+
+Usage: python3 tools/qnsim/gen_lm_base.py \
+           [--config python/configs/lm_base.json] \
+           [--out rust/benches/fixtures/lm_base.grad.hlo.txt]
+
+Validation: tools/qnsim/plan_mirror.py runs this module through the
+reference and fused mirrors and asserts bit-identity + chain census.
+"""
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(os.path.dirname(HERE))
+
+
+def generate(batch, dim, layers):
+    B, D, L = batch, dim, layers
+    lines = []
+    counter = [4]  # sum.1 region uses .1-.4
+
+    def fresh(prefix):
+        counter[0] += 1
+        return f"{prefix}.{counter[0]}"
+
+    def emit(prefix, shape, expr):
+        name = fresh(prefix)
+        lines.append(f"  {name} = {shape} {expr}")
+        return name
+
+    mat = f"f32[{D},{D}]{{1,0}}"
+    vec = f"f32[{D}]{{0}}"
+    act = f"f32[{B},{D}]{{1,0}}"
+    actT = f"f32[{D},{B}]{{1,0}}"
+    pred = f"pred[{B},{D}]{{1,0}}"
+
+    header = (
+        "HloModule lm_base_grad\n"
+        "\n"
+        "sum.1 {\n"
+        "  a.2 = f32[] parameter(0)\n"
+        "  b.3 = f32[] parameter(1)\n"
+        "  ROOT add.4 = f32[] add(a.2, b.3)\n"
+        "}\n"
+        "\n"
+    )
+
+    x0 = fresh("x")
+    lines.append(f"  {x0} = {act} parameter(0)")
+    ws, bs = [], []
+    for l in range(L):
+        w = fresh("w")
+        lines.append(f"  {w} = {mat} parameter({1 + 2 * l})")
+        b = fresh("b")
+        lines.append(f"  {b} = {vec} parameter({2 + 2 * l})")
+        ws.append(w)
+        bs.append(b)
+
+    c0 = emit("c0", "f32[]", "constant(0)")
+    c1 = emit("c1", "f32[]", "constant(1)")
+    ch = emit("ch", "f32[]", "constant(0.5)")
+
+    # ---- forward: x_{l+1} = x_l + 0.5*relu(x_l.w_l + b_l) ----
+    xs = [x0]       # layer inputs
+    hbs, preds = [], []   # pre-activations + relu masks (reused in bwd)
+    x = x0
+    for l in range(L):
+        h = emit("dot", act, f"dot({x}, {ws[l]}), "
+                 "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+        bb = emit("bcast", act, f"broadcast({bs[l]}), dimensions={{1}}")
+        hb = emit("add", act, f"add({h}, {bb})")
+        zero = emit("bcast", act, f"broadcast({c0}), dimensions={{}}")
+        p = emit("compare", pred, f"compare({hb}, {zero}), direction=GT")
+        r = emit("select", act, f"select({p}, {hb}, {zero})")
+        half = emit("bcast", act, f"broadcast({ch}), dimensions={{}}")
+        s = emit("multiply", act, f"multiply({r}, {half})")
+        x = emit("add", act, f"add({s}, {x})")
+        xs.append(x)
+        hbs.append(hb)
+        preds.append(p)
+
+    # ---- loss = sum(x_L) ----
+    loss = emit("reduce", "f32[]", f"reduce({x}, {c0}), dimensions={{0,1}}, "
+                "to_apply=sum.1")
+
+    # ---- backward sweep ----
+    g = emit("bcast", act, f"broadcast({c1}), dimensions={{}}")  # d loss/d x_L
+    gw_total, gb_total = None, None
+    for l in reversed(range(L)):
+        half = emit("bcast", act, f"broadcast({ch}), dimensions={{}}")
+        dr = emit("multiply", act, f"multiply({g}, {half})")
+        zero = emit("bcast", act, f"broadcast({c0}), dimensions={{}}")
+        dhb = emit("select", act, f"select({preds[l]}, {dr}, {zero})")
+        db = emit("reduce", vec, f"reduce({dhb}, {c0}), dimensions={{0}}, "
+                  "to_apply=sum.1")
+        xT = emit("transpose", actT, f"transpose({xs[l]}), dimensions={{1,0}}")
+        dW = emit("dot", mat, f"dot({xT}, {dhb}), "
+                  "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+        wT = emit("transpose", mat, f"transpose({ws[l]}), dimensions={{1,0}}")
+        dx = emit("dot", act, f"dot({dhb}, {wT}), "
+                  "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+        g = emit("add", act, f"add({dx}, {g})")  # residual skip path
+        gw_total = dW if gw_total is None else emit(
+            "add", mat, f"add({gw_total}, {dW})")
+        gb_total = db if gb_total is None else emit(
+            "add", vec, f"add({gb_total}, {db})")
+
+    root = fresh("tuple")
+    lines.append(
+        f"  ROOT {root} = (f32[], {mat}, {vec}) "
+        f"tuple({loss}, {gw_total}, {gb_total})"
+    )
+    entry = f"ENTRY main.{counter[0] + 1} {{\n" + "\n".join(lines) + "\n}\n"
+    return header + entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--config",
+                    default=os.path.join(REPO, "python/configs/lm_base.json"))
+    ap.add_argument("--out",
+                    default=os.path.join(
+                        REPO, "rust/benches/fixtures/lm_base.grad.hlo.txt"))
+    args = ap.parse_args()
+    with open(args.config) as f:
+        cfg = json.load(f)
+    text = generate(cfg["batch"], cfg["d_model"], cfg["n_layers"])
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    n_instr = text.count(" = ")
+    print(f"wrote {args.out}: d_model={cfg['d_model']} "
+          f"n_layers={cfg['n_layers']} batch={cfg['batch']} "
+          f"({n_instr} instructions)")
+
+
+if __name__ == "__main__":
+    main()

@@ -655,15 +655,30 @@ class Interp:
                 lbase += oi[nb + k] * lst[lfree[k]]
             for k in range(len(rfree)):
                 rbase += oi[nb + nlf + k] * rst[rfree[k]]
-            acc = np.float32(0.0)
-            for kf in range(kn):
+            # 4-way partial sums over ascending k, combined as
+            # (s0+s1)+(s2+s3) with a sequential tail — the operation
+            # order of quant::assign::dot, mirrored by ops::dot and the
+            # planned executor's blocked lane kernel.
+            def term(kf):
                 ki = unflatten(kf, kdims, kst)
                 li = lbase
                 ri = rbase
                 for t in range(len(lc)):
                     li += ki[t] * lst[lc[t]]
                     ri += ki[t] * rst[rc[t]]
-                acc = np.float32(acc + np.float32(lhs.data[li] * rhs.data[ri]))
+                return np.float32(lhs.data[li] * rhs.data[ri])
+
+            s = [np.float32(0.0)] * 4
+            kn4 = kn - kn % 4
+            kf = 0
+            while kf < kn4:
+                for t in range(4):
+                    s[t] = np.float32(s[t] + term(kf + t))
+                kf += 4
+            acc = np.float32(np.float32(s[0] + s[1]) + np.float32(s[2] + s[3]))
+            while kf < kn:
+                acc = np.float32(acc + term(kf))
+                kf += 1
             out[f] = acc
         return Arr(sh.ty, sh.dims, out)
 

@@ -14,7 +14,12 @@ checks them against the reference algorithms — catching any index-math
 or accumulation-order mistake before it ships as Rust that this
 container cannot compile. Since the vision PR it also runs the img_tiny
 conv fixture (shared `convolution` kernel, fused `reduce-window` fold)
-through all three tiers. Run:
+through all three tiers. Since the compiled-tier-kernels PR the fused
+tier additionally mirrors `fuse::match_chains`: single-use elementwise
+cones collapse into one tape superinstruction per chain root, interior
+steps are elided (never evaluated, never counted), and the executed
+instruction counts printed per fixture are the acceptance metric for
+the chain pass. Run:
 
     cd tools/qnsim && python3 plan_mirror.py        # ~5 min (pure python)
 """
@@ -28,8 +33,9 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, HERE)
 
 from hlo_mirror import (
-    Arr, BINARY, Interp, int_list, parse_module, parse_slice_attr,
-    parse_window, resolve_window_pos, strides_of, unflatten,
+    Arr, BINARY, Interp, NP_TY, UNARY_F32, int_list, parse_module,
+    parse_slice_attr, parse_window, resolve_window_pos, strides_of,
+    unflatten,
 )
 
 ROOT = os.path.dirname(os.path.dirname(HERE))
@@ -101,19 +107,30 @@ class PlannedInterp(Interp):
         if kdims and kn_raw == 0:
             return Arr(sh.ty, sh.dims, np.zeros(total, np.float32))
         kn = max(kn_raw, 1)
+        # Blocked microkernel mirror: full 8-column tiles go through the
+        # rust_dot8 lane kernel against a transposed [kn][8] tile,
+        # remainder columns through the scalar 4-way rust_dot — exactly
+        # plan.rs::dot_rows (and, per element, exactly ops::dot).
         lp = pack_f32(lhs.data, lhs.dims, lb, lfree, lc)
         rp = pack_f32(rhs.data, rhs.dims, rb, rfree, rc)
         out = np.empty(total, np.float32)
+        nblk = nn // 8
+        panels = []
+        for b in range(bn):
+            rbp = rp[b * nn * kn:(b + 1) * nn * kn].reshape(nn, kn)
+            tiles = [
+                np.ascontiguousarray(rbp[blk * 8:(blk + 1) * 8, :].T).reshape(-1)
+                for blk in range(nblk)
+            ]
+            panels.append((rbp, tiles))
         for row in range(bn * mn):
-            b = row // mn
+            rbp, tiles = panels[row // mn]
             xr = lp[row * kn:(row + 1) * kn]
-            rbp = rp[b * nn * kn:(b + 1) * nn * kn]
-            for j in range(nn):
-                yr = rbp[j * kn:(j + 1) * kn]
-                acc = np.float32(0.0)
-                for t in range(kn):
-                    acc = np.float32(acc + np.float32(xr[t] * yr[t]))
-                out[row * nn + j] = acc
+            orow = out[row * nn:(row + 1) * nn]
+            for blk in range(nblk):
+                orow[blk * 8:(blk + 1) * 8] = rust_dot8(xr, tiles[blk], kn)
+            for j in range(nblk * 8, nn):
+                orow[j] = rust_dot(xr, rbp[j])
         return Arr(sh.ty, sh.dims, out)
 
     # -------------------------------------------------- fused regions ---
@@ -294,12 +311,16 @@ def threefry2x32(x0, x1, rot, k0, k1):
 
 
 def match_counted_loop(cond, body):
-    """fuse::match_counted_loop 1:1 — returns (idx, bound) or None.
+    """fuse::match_counted_loop 1:1 — returns the full execution spec
+    {idx, bound, state_reads, steps, root_ops} or None.
 
     cond must be {param; gte(param, idx); const scalar; ROOT
     compare(gte, const) LT} modulo dead instructions; body must be a
     single param used only by gte's, ROOT tuple, whose element `idx` is
-    add(gte(param, idx), 1)."""
+    add(gte(param, idx), 1). Like the Rust executor, a fused trip
+    plumbs the state slots straight into the gte registers and runs
+    only `steps` — the parameter, the state reads and the root tuple
+    are elided, never executed."""
     params = [i for i, s in enumerate(cond.instrs) if s.opcode == "parameter"]
     if cond.n_params != 1 or len(params) != 1:
         return None
@@ -349,7 +370,14 @@ def match_counted_loop(cond, body):
     x, y = inc.operands
     if not ((is_counter(x) and is_one(y)) or (is_counter(y) and is_one(x))):
         return None
-    return idx, bound
+    state_reads = [
+        (i, int(s.attrs["index"])) for i, s in enumerate(body.instrs)
+        if s.opcode == "get-tuple-element" and s.operands == [bp]]
+    read_regs = {i for i, _ in state_reads}
+    steps = [i for i in range(len(body.instrs))
+             if i != bp and i != body.root and i not in read_regs]
+    return {"idx": idx, "bound": bound, "state_reads": state_reads,
+            "steps": steps, "root_ops": broot.operands}
 
 
 def match_threefry(comp):
@@ -453,19 +481,286 @@ def match_threefry(comp):
     return [ex(o) for o in root.operands] == want
 
 
+# ------------------------------------------------- elementwise chains ---
+
+# fuse.rs `fusable`: Op::Unary | Op::Binary | Op::Select | Op::Compare
+# | Op::Convert — broadcast and bitcast-convert are deliberately out.
+CHAIN_UNARY = ("negate",) + tuple(UNARY_F32)
+CHAIN_FUSABLE = frozenset(CHAIN_UNARY) | frozenset(BINARY) | {
+    "select", "compare", "convert"}
+
+
+def match_chains(comp):
+    """fuse.rs match_chains, 1:1: greedily grow maximal single-use
+    elementwise cones from the last instruction down; returns
+    (root, {steps, inputs, tape}) in ascending root order, where
+    inputs are ("full", reg) | ("scalar", reg) slots in first-reference
+    order and tape op `t` writes slot `len(inputs) + t`."""
+    n = len(comp.instrs)
+    uses = [0] * n
+    for ins in comp.instrs:
+        for o in ins.operands:
+            uses[o] += 1
+    uses[comp.root] += 1  # the root's value escapes
+
+    def arr_dims(i):
+        sh = comp.instrs[i].shape
+        return None if sh.ty == "tuple" else tuple(sh.dims)
+
+    def fusable(i):
+        return comp.instrs[i].opcode in CHAIN_FUSABLE
+
+    claimed = [False] * n
+    out = []
+    for root in range(n - 1, -1, -1):
+        if claimed[root] or not fusable(root):
+            continue
+        dims = arr_dims(root)
+        if dims is None:
+            continue
+        member = [False] * n
+        member[root] = True
+        count = 1
+        stack = [root]
+        while stack:
+            for o in comp.instrs[stack.pop()].operands:
+                if (not member[o] and not claimed[o] and fusable(o)
+                        and uses[o] == 1 and arr_dims(o) == dims):
+                    member[o] = True
+                    count += 1
+                    stack.append(o)
+        if count < 2:
+            continue  # a lone step gains nothing from a tape
+        members = [i for i in range(root + 1) if member[i]]
+
+        tape_slot = {s: t for t, s in enumerate(members)}
+        inputs = []
+        folded = []
+        in_slot = {}
+        ok = True
+        for s in members:
+            for o in comp.instrs[s].operands:
+                if o in tape_slot or o in in_slot:
+                    continue
+                io = comp.instrs[o]
+                fold = (io.opcode == "broadcast" and uses[o] == 1
+                        and not claimed[o] and arr_dims(o) == dims
+                        and len(io.operands) == 1
+                        and comp.instrs[io.operands[0]].shape.numel() == 1
+                        and not member[io.operands[0]])
+                in_slot[o] = len(inputs)
+                if fold:
+                    folded.append(o)
+                    inputs.append(("scalar", io.operands[0]))
+                elif arr_dims(o) == dims:
+                    inputs.append(("full", o))
+                else:
+                    ok = False  # ill-shaped operand: no fusion at all
+                    break
+            if not ok:
+                break
+        if not ok or len(inputs) + len(members) > 0xFFFF:
+            continue
+
+        n_in = len(inputs)
+
+        def sl(o):
+            return n_in + tape_slot[o] if o in tape_slot else in_slot[o]
+
+        tape = []
+        for s in members:
+            ins = comp.instrs[s]
+            op, oty, opr = ins.opcode, ins.shape.ty, ins.operands
+            if op in CHAIN_UNARY and len(opr) == 1:
+                tape.append(("unary", op, oty, sl(opr[0])))
+            elif op in BINARY and len(opr) == 2:
+                tape.append(("binary", op, oty, sl(opr[0]), sl(opr[1])))
+            elif op == "compare" and len(opr) == 2:
+                sty = comp.instrs[opr[0]].shape.ty
+                tape.append(("compare", ins.attrs["direction"], sty,
+                             sl(opr[0]), sl(opr[1])))
+            elif op == "select" and len(opr) == 3:
+                tape.append(("select", sl(opr[0]), sl(opr[1]), sl(opr[2])))
+            elif op == "convert" and len(opr) == 1:
+                sty = comp.instrs[opr[0]].shape.ty
+                tape.append(("convert", sty, oty, sl(opr[0])))
+            else:
+                ok = False  # unexpected arity: fall back
+                break
+        if not ok:
+            continue
+
+        steps = sorted([s for s in members if s != root] + folded)
+        for s in steps:
+            claimed[s] = True
+        claimed[root] = True
+        out.append((root, {"steps": steps, "inputs": inputs, "tape": tape}))
+    out.reverse()
+    return out
+
+
+def tape_step(op, slots):
+    """One chain tape op over full slot arrays — the same arithmetic as
+    the reference eval_instr arms, so per-element Rust == this."""
+    kind = op[0]
+    if kind == "unary":
+        _, name, ty, a = op
+        x = slots[a]
+        out = -x if name == "negate" else UNARY_F32[name](x)
+        return out.astype(NP_TY[ty], copy=False)
+    if kind == "binary":
+        _, name, ty, a, b = op
+        l, r = slots[a], slots[b]
+        if name in ("shift-left", "shift-right-logical"):
+            amt = r.astype(np.uint64)
+            big = amt >= 32
+            sh_amt = np.where(big, 0, amt).astype(np.uint32)
+            shifted = (np.left_shift(l, sh_amt) if name == "shift-left"
+                       else np.right_shift(l, sh_amt))
+            out = np.where(big, np.uint32(0), shifted)
+        else:
+            with np.errstate(all="ignore"):
+                out = BINARY[name](l, r)
+        return out.astype(NP_TY[ty], copy=False)
+    if kind == "compare":
+        _, dirn, _sty, a, b = op
+        fn = {"EQ": np.equal, "NE": np.not_equal, "LT": np.less,
+              "LE": np.less_equal, "GT": np.greater,
+              "GE": np.greater_equal}[dirn]
+        return fn(slots[a], slots[b])
+    if kind == "select":
+        _, p, t, f = op
+        return np.where(slots[p].astype(bool), slots[t], slots[f])
+    _, sty, ty, a = op  # convert
+    x = slots[a]
+    if ty == "u32" and sty == "s32":
+        return x.astype(np.int64).astype(np.uint32)
+    if ty == "s32" and sty == "f32":
+        return np.trunc(x).astype(np.int32)
+    return x.astype(NP_TY[ty])
+
+
+# The diamond fixture from fuse.rs `chain_matches_cone_with_diamond_and_splat`
+CHAIN_FIXTURE = """HloModule t
+
+ENTRY main.1 {
+  x.1 = f32[4]{0} parameter(0)
+  c.2 = f32[] constant(2)
+  b.3 = f32[4]{0} broadcast(c.2), dimensions={}
+  e.4 = f32[4]{0} exponential(x.1)
+  m.5 = f32[4]{0} multiply(e.4, b.3)
+  p.6 = pred[4]{0} compare(x.1, e.4), direction=LT
+  ROOT s.7 = f32[4]{0} select(p.6, m.5, x.1)
+}
+"""
+
+
+def check_chain_matcher():
+    """Pin the matcher's canonical form to the fuse.rs unit test and
+    check the tape execution bitwise against the plain interpreter."""
+    m = parse_module(CHAIN_FIXTURE)
+    comp = m.comps[m.entry]
+    chains = match_chains(comp)
+    assert len(chains) == 1, chains
+    root, spec = chains[0]
+    assert root == 6, root
+    assert spec["steps"] == [2, 4, 5], spec["steps"]
+    assert spec["inputs"] == [("full", 3), ("scalar", 1), ("full", 0)], \
+        spec["inputs"]
+    assert spec["tape"] == [
+        ("binary", "multiply", "f32", 0, 1),
+        ("compare", "LT", "f32", 2, 0),
+        ("select", 4, 3, 2),
+    ], spec["tape"]
+    x = Arr("f32", [4], np.array([-1.5, 0.0, 0.25, 3.0], np.float32))
+    fi = FusedInterp(m)
+    got = fi.run_entry([x])
+    want = Interp(m).run_entry([x])
+    assert_same(got, want, "chain fixture")
+    assert fi.fused_chains == 1 and fi.chain_steps == 3
+    print("chain matcher == fuse.rs canonical form; tape bitwise vs "
+          "tree-walk  OK")
+
+
 class FusedInterp(PlannedInterp):
     """Planned mirror with the loop-fusion layer: counted `while` loops
     skip per-iteration condition evaluation (trip count read from the
-    initial state) and threefry round-body calls run the native
-    kernel."""
+    initial state), threefry round-body calls run the native kernel,
+    and single-use elementwise cones run as one chain superinstruction
+    with their interior steps elided."""
 
     def __init__(self, module):
         super().__init__(module)
         self._counted = {}
         self._threefry = {}
+        self._chains = {}
         self.fused_whiles = 0
         self.generic_whiles = 0
         self.threefry_calls = 0
+        self.fused_chains = 0
+        self.chain_steps = 0
+
+    def chains_of(self, comp):
+        hit = self._chains.get(comp.name)
+        if hit is None:
+            matches = match_chains(comp)
+            roots = dict(matches)
+            elided = frozenset(
+                s for _, spec in matches for s in spec["steps"])
+            hit = self._chains[comp.name] = (roots, elided)
+        return hit
+
+    def elided_of(self, comp):
+        return self.chains_of(comp)[1]
+
+    def run(self, comp, args):
+        roots, elided = self.chains_of(comp)
+        if not roots:
+            return super().run(comp, args)
+        env = [None] * len(comp.instrs)
+        for i, ins in enumerate(comp.instrs):
+            if i in elided:
+                continue  # interior: never evaluated, register never written
+            if i in roots:
+                env[i] = self.chain_exec(comp, i, roots[i], env)
+            else:
+                env[i] = self.eval_instr(comp, ins, env, args)
+        return env[comp.root]
+
+    def chain_exec(self, comp, root, spec, env):
+        sh = comp.instrs[root].shape
+        n = sh.numel()
+        slots = []
+        for kind, reg in spec["inputs"]:
+            v = env[reg]
+            if kind == "scalar":
+                # folded broadcast: splat the source's lone element
+                slots.append(np.broadcast_to(v.data.ravel()[:1], (n,)))
+            else:
+                slots.append(v.data)
+        for op in spec["tape"]:
+            slots.append(tape_step(op, slots))
+        self.fused_chains += 1
+        self.chain_steps += len(spec["steps"])
+        return Arr(sh.ty, sh.dims, slots[-1])
+
+    def counted_trip(self, body, spec, state):
+        """One fused counted-loop iteration, exactly the Rust
+        `Executor::counted_loop` body: state slots plumbed straight
+        into the gte registers, only `steps` executed (parameter, state
+        reads and the root tuple are elided), chains apply inside."""
+        env = [None] * len(body.instrs)
+        for gi, e in spec["state_reads"]:
+            env[gi] = state[e]
+        roots, elided = self.chains_of(body)
+        for i in spec["steps"]:
+            if i in elided:
+                continue
+            if i in roots:
+                env[i] = self.chain_exec(body, i, roots[i], env)
+            else:
+                env[i] = self.eval_instr(body, body.instrs[i], env, ())
+        return [env[o] for o in spec["root_ops"]]
 
     def counted(self, cond_name, body_name):
         key = (cond_name, body_name)
@@ -483,15 +778,14 @@ class FusedInterp(PlannedInterp):
         if ins.opcode == "while":
             hit = self.counted(ins.attrs["condition"], ins.attrs["body"])
             if hit is not None:
-                idx, bound = hit
                 body = self.m.comps[ins.attrs["body"]]
-                state = env[ins.operands[0]]
-                start = int(state[1][idx].data[0])
-                trips = max(0, bound - start)
+                state = list(env[ins.operands[0]][1])
+                start = int(state[hit["idx"]].data[0])
+                trips = max(0, hit["bound"] - start)
                 self.fused_whiles += 1
                 for _ in range(trips):
-                    state = self.run(body, [state])
-                return state
+                    state = self.counted_trip(body, hit, state)
+                return ("tuple", state)
             self.generic_whiles += 1
         elif ins.opcode == "call" and self.is_threefry(ins.attrs["to_apply"]):
             self.threefry_calls += 1
@@ -622,15 +916,32 @@ def fixture_args(model, grad, rate=0.5, seed=42):
 
 
 class Counting:
-    """Mixin: count instruction executions, bucketed by opcode."""
+    """Mixin: count instruction executions, bucketed by opcode. The
+    count follows what the Rust executor actually runs: chain interiors
+    and a fused counted trip's state plumbing (parameter, state gte's,
+    root tuple) are elided — never executed — so a chain-aware interp's
+    count reflects one superinstruction per chain (its root opcode)
+    plus only the live body steps per loop trip."""
 
-    def run(self, comp, args):
+    def _bump(self, opcode):
         hist = getattr(self, "hist", None)
         if hist is None:
             hist = self.hist = {}
-        for ins in comp.instrs:
-            hist[ins.opcode] = hist.get(ins.opcode, 0) + 1
+        hist[opcode] = hist.get(opcode, 0) + 1
+
+    def run(self, comp, args):
+        elided = self.elided_of(comp) if hasattr(self, "elided_of") else ()
+        for i, ins in enumerate(comp.instrs):
+            if i not in elided:
+                self._bump(ins.opcode)
         return super().run(comp, args)
+
+    def counted_trip(self, body, spec, state):
+        elided = self.elided_of(body)
+        for i in spec["steps"]:
+            if i not in elided:
+                self._bump(body.instrs[i].opcode)
+        return super().counted_trip(body, spec, state)
 
 
 class CountingInterp(Counting, Interp):
@@ -664,6 +975,9 @@ def check_fixture(model, entry, grad, rate=0.5, seed=42):
     print(f"  instr executions: reference {n_ref}, fused {n_fused} "
           f"({n_ref / max(n_fused, 1):.2f}x fewer); mirror wall-clock "
           f"{t_ref:.2f}s -> {t_fused:.2f}s")
+    print(f"  fused chains: {fused_i.fused_chains} superinstruction runs, "
+          f"{fused_i.chain_steps} interior steps elided")
+    assert fused_i.fused_chains > 0, "no elementwise chain fused"
     if grad:
         # every threefry while must fuse — a fallback storm here means
         # the matchers regressed against the real jax lowering
@@ -673,6 +987,50 @@ def check_fixture(model, entry, grad, rate=0.5, seed=42):
         print(f"  fused whiles: {fused_i.fused_whiles}, native threefry "
               f"calls: {fused_i.threefry_calls}")
         print(f"  reference opcode histogram (top): {top}")
+    return n_fused
+
+
+def check_lm_base():
+    """The paper-scale bench module (tools/qnsim/gen_lm_base.py): run
+    the generator at reduced dims — the emitted structure is identical,
+    only the shape numbers in the text change, and the full-size bit-
+    faithful mirror dot is prohibitively slow — and assert the fused
+    mirror is bit-identical to the reference walk, that the per-layer
+    relu/scale/residual and select/scale chains actually fuse, and the
+    (dim-independent) executed-instruction census."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "gen_lm_base", os.path.join(HERE, "gen_lm_base.py"))
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    B, D, L = 4, 64, 12
+    m = parse_module(gen.generate(B, D, L))
+    args = [Arr("f32", [B, D],
+                (np.arange(B * D, dtype=np.int64) % 97)
+                .astype(np.float32) / 97.0 - 0.5)]
+    for l in range(L):
+        w = (((np.arange(D * D, dtype=np.int64) * 31 + l) % 113)
+             .astype(np.float32) / 113.0 - 0.5) * 0.02
+        args.append(Arr("f32", [D, D], w))
+        b = ((np.arange(D, dtype=np.int64) + l) % 7)\
+            .astype(np.float32) / 7.0 - 0.5
+        args.append(Arr("f32", [D], b))
+    args = tuple(args)
+    ref_i = CountingInterp(m)
+    ref = ref_i.run_entry(args)
+    fused_i = CountingFused(m)
+    fused = fused_i.run_entry(args)
+    assert_same(fused, ref, "lm_base_grad(fused)")
+    n_ref = sum(ref_i.hist.values())
+    n_fused = sum(fused_i.hist.values())
+    # one fwd chain + one bwd chain per layer, plus grad accumulators
+    assert fused_i.fused_chains >= 2 * L, fused_i.fused_chains
+    print(f"lm_base (generator, D={D}): fused bit-identical to reference "
+          f"(3 outputs)  OK")
+    print(f"  instr executions: reference walk {n_ref}, fused {n_fused}; "
+          f"{fused_i.fused_chains} chains / {fused_i.chain_steps} elided "
+          f"(counts are dim-independent — same at D=1024)")
 
 
 # A self-contained counted threefry while (regions copied verbatim from
@@ -866,7 +1224,8 @@ def check_threefry_pin():
     m = parse_module(THREEFRY_PIN)
     fused_i = FusedInterp(m)
     assert match_threefry(m.comps["None.163"]), "round body must match"
-    assert fused_i.counted("region_1.243", "region_0.220") == (0, 5)
+    spec = fused_i.counted("region_1.243", "region_0.220")
+    assert (spec["idx"], spec["bound"]) == (0, 5), spec
     ref = Interp(m).run_entry(PIN_ARGS)
     fused = fused_i.run_entry(PIN_ARGS)
     assert_same(fused, ref, "threefry_pin")
@@ -876,15 +1235,26 @@ def check_threefry_pin():
           f"OK (hardcoded in tests/interp_fuse.rs)")
 
 
+# Executed-instruction count for lm_tiny.grad_mix before the chain
+# pass; the pass must cut it by >= 1.5x (the tentpole acceptance bar).
+PRE_CHAIN_GRAD_MIX = 9389
+
+
 def main():
     check_dot8()
+    check_chain_matcher()
     check_threefry_pin()
     check_window_pin()
     check_fixture("lm_tiny", "eval", grad=False)
-    check_fixture("lm_tiny", "grad_mix", grad=True)
+    n = check_fixture("lm_tiny", "grad_mix", grad=True)
+    assert 2 * PRE_CHAIN_GRAD_MIX >= 3 * n, \
+        f"chain elision below 1.5x: {PRE_CHAIN_GRAD_MIX} -> {n}"
+    print(f"  chain acceptance: grad_mix {PRE_CHAIN_GRAD_MIX} -> {n} "
+          f"executed instructions ({PRE_CHAIN_GRAD_MIX / n:.2f}x)  OK")
     check_fixture("img_tiny", "eval", grad=False)
     check_fixture("img_tiny", "grad_mix", grad=True)
     check_fixture("img_tiny", "grad_mix", grad=True, rate=0.9, seed=7)
+    check_lm_base()
     print("PLANNED+FUSED KERNELS VALIDATED (bitwise) against the "
           "reference mirror")
 

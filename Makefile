@@ -1,6 +1,7 @@
 # Quant-Noise reproduction — top-level targets.
 #
 #   make verify        tier-1 gate: build + test the Rust coordinator
+#   make test-faults   crash-safety + fault-injection suites (DESIGN.md §10)
 #   make artifacts     export all model artifacts (needs python + jax)
 #   make fixture       regenerate the checked-in interpreter test fixture
 #   make bench-interp  interpreter step latency -> BENCH_interp.json
@@ -19,10 +20,21 @@ CONFIGS := python/configs/lm_tiny.json \
            python/configs/cls_tiny.json \
            python/configs/img_tiny.json
 
-.PHONY: verify artifacts fixture bench-interp bench-serve lint lint-plan doc
+.PHONY: verify test-faults artifacts fixture bench-interp bench-serve lint lint-plan doc
 
 verify:
 	cd rust && cargo build --release && cargo test -q
+
+# The fault-tolerance tier (DESIGN.md §10): kill-and-resume bit
+# identity, every save-protocol fault leaving a loadable last-good,
+# corruption sweeps over QNP1/QNC1/HLO loaders, and the serve edge
+# under hostile clients — all with the plan verifier on.
+test-faults:
+	cd rust && QN_PLAN_VERIFY=1 cargo test -q \
+		--test resume_determinism \
+		--test fault_injection \
+		--test artifact_corruption \
+		--test serve_faults
 
 # Static plan verification + census for every checked-in HLO fixture,
 # at every fusion setting (DESIGN.md §8; CI runs this after the build).

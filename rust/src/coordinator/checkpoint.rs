@@ -1,0 +1,700 @@
+//! Crash-safe training checkpoints (DESIGN.md §10).
+//!
+//! A `QNC1` checkpoint captures *complete* trainer state — parameters,
+//! optimizer moments, step counter, RNG stream position, data-batcher
+//! cursor, and the current hat tensors — so `qn train --resume`
+//! replays the remaining steps bit-identically to the uninterrupted
+//! run at any `threads`.
+//!
+//! On-disk format (all integers little-endian):
+//!
+//! ```text
+//!   "QNC1" | u32 header_len | JSON header | payload | u64 fnv1a64
+//! ```
+//!
+//! The JSON header describes the payload layout:
+//! `{"version":1,"model","step","batches","rng_state":"<hex>",
+//!   "rng_inc":"<hex>","cfg_digest":"<hex>",
+//!   "opt":{"kind":"sgd"|"adam","t":N,"slots":1|2},
+//!   "params":[{"name","shape"}...],"hats":[{"idx","len"}...]}`
+//! and the payload is the concatenated f32 LE data: params in manifest
+//! order, then optimizer slots (SGD velocity, or Adam m then v), then
+//! hat tensors. The trailer is FNV-1a over every preceding byte; a
+//! torn write or bit flip fails validation and the loader falls back
+//! to the previous checkpoint.
+//!
+//! Atomic-save protocol: encode → write `step-K.qnc1.tmp` → fsync →
+//! rename → fsync dir → rewrite the `LATEST` pointer the same way →
+//! prune. The last-good checkpoint is never touched until the new one
+//! is durable, so a crash at *any* byte leaves a loadable state
+//! (exercised via the `ckpt.*` fault points in `util::fault`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::TrainConfig;
+use crate::model::params::{LoadError, ParamStore};
+use crate::model::tensor::Tensor;
+use crate::util::hash::{fnv1a64, from_hex, to_hex};
+use crate::util::json::Json;
+use crate::util::{fault, rng::Pcg};
+use crate::{log_info, log_warn};
+
+/// How many `step-*.qnc1` files to keep on disk (the newest and one
+/// fallback in case the newest is torn by a crash mid-protocol).
+const KEEP: usize = 2;
+
+/// Where and how often the trainer checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    pub dir: PathBuf,
+    /// save every N completed steps; 0 disables periodic saves
+    pub every: usize,
+}
+
+/// Optimizer state captured alongside the parameters (slot tensors are
+/// in param-store order, shapes mirror the params).
+#[derive(Debug, Clone)]
+pub enum OptState {
+    Sgd { velocity: Vec<Tensor> },
+    Adam { m: Vec<Tensor>, v: Vec<Tensor>, t: usize },
+}
+
+impl OptState {
+    fn kind(&self) -> &'static str {
+        match self {
+            OptState::Sgd { .. } => "sgd",
+            OptState::Adam { .. } => "adam",
+        }
+    }
+}
+
+/// Complete trainer state at a step boundary.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    /// completed steps — resume continues at this step index
+    pub step: usize,
+    /// batches drawn from the data source (the batcher cursor: resume
+    /// re-draws and discards this many to realign the stream)
+    pub batches: usize,
+    /// trainer RNG position (`Pcg::state_parts`)
+    pub rng: (u64, u64),
+    /// digest of every bit-affecting `TrainConfig` field (see
+    /// [`cfg_digest`]) — resume refuses a mismatched config
+    pub cfg_digest: u64,
+    pub params: ParamStore,
+    pub opt: OptState,
+    /// current hat tensors by manifest param index (sorted), as
+    /// uploaded at the last refresh — without these, a resume before
+    /// the next refresh boundary would diverge
+    pub hats: Vec<(usize, Vec<f32>)>,
+}
+
+/// Digest of every `TrainConfig` field that affects the bit-exact
+/// trajectory. `threads` and `log_every` are excluded on purpose: both
+/// are proven bit-invariant (the whole point of the one-knob contract),
+/// so a checkpoint taken at `--threads 8` may resume at `--threads 1`.
+pub fn cfg_digest(model: &str, cfg: &TrainConfig) -> u64 {
+    let s = format!(
+        "v1|{model}|steps={}|sched={:?}|opt={:?}|clip={:08x}|noise={}|rate={:08x}|ld={:08x}|ldste={}|share={}|hat={}|seed={}",
+        cfg.steps,
+        cfg.schedule,
+        cfg.optimizer,
+        cfg.clip.to_bits(),
+        cfg.noise,
+        cfg.noise_rate.to_bits(),
+        cfg.layerdrop.to_bits(),
+        cfg.ldste,
+        cfg.share_chunk,
+        cfg.hat_refresh,
+        cfg.seed,
+    );
+    fnv1a64(s.as_bytes())
+}
+
+// ------------------------------------------------------------ codec ---
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn corrupt(offset: usize, what: impl Into<String>) -> LoadError {
+    LoadError { offset, what: what.into() }
+}
+
+fn take_f32s(
+    bytes: &[u8],
+    off: &mut usize,
+    n: usize,
+    what: &str,
+) -> Result<Vec<f32>, LoadError> {
+    let need = n
+        .checked_mul(4)
+        .ok_or_else(|| corrupt(*off, format!("{what}: element count {n} overflows")))?;
+    let end = off
+        .checked_add(need)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| {
+            corrupt(
+                bytes.len(),
+                format!("truncated payload: {what} needs {need} bytes at offset {off}"),
+            )
+        })?;
+    let v = bytes[*off..end]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    *off = end;
+    Ok(v)
+}
+
+fn header_hex(j: &Json, key: &str) -> Result<u64, LoadError> {
+    j.get(key)
+        .as_str()
+        .and_then(from_hex)
+        .ok_or_else(|| corrupt(8, format!("header: missing/invalid hex field '{key}'")))
+}
+
+fn header_usize(j: &Json, key: &str) -> Result<usize, LoadError> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| corrupt(8, format!("header: missing/invalid field '{key}'")))
+}
+
+/// Serialize to the QNC1 wire format (hats are emitted sorted by index
+/// so encode is canonical: same state → same bytes → same hash).
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut hats: Vec<&(usize, Vec<f32>)> = ck.hats.iter().collect();
+    hats.sort_by_key(|(i, _)| *i);
+    let (kind, t, slots) = match &ck.opt {
+        OptState::Sgd { .. } => (ck.opt.kind(), 0usize, 1usize),
+        OptState::Adam { t, .. } => (ck.opt.kind(), *t, 2usize),
+    };
+    let params_json: Vec<Json> = ck
+        .params
+        .iter()
+        .map(|(n, tsr)| {
+            Json::obj(vec![
+                ("name", Json::str(n.clone())),
+                (
+                    "shape",
+                    Json::Arr(tsr.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let hats_json: Vec<Json> = hats
+        .iter()
+        .map(|(i, h)| {
+            Json::obj(vec![
+                ("idx", Json::num(*i as f64)),
+                ("len", Json::num(h.len() as f64)),
+            ])
+        })
+        .collect();
+    let header = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("model", Json::str(ck.model.clone())),
+        ("step", Json::num(ck.step as f64)),
+        ("batches", Json::num(ck.batches as f64)),
+        ("rng_state", Json::str(to_hex(ck.rng.0))),
+        ("rng_inc", Json::str(to_hex(ck.rng.1))),
+        ("cfg_digest", Json::str(to_hex(ck.cfg_digest))),
+        (
+            "opt",
+            Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("t", Json::num(t as f64)),
+                ("slots", Json::num(slots as f64)),
+            ]),
+        ),
+        ("params", Json::Arr(params_json)),
+        ("hats", Json::Arr(hats_json)),
+    ])
+    .to_string();
+
+    let mut out = Vec::new();
+    out.extend_from_slice(b"QNC1");
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for (_, tsr) in ck.params.iter() {
+        push_f32s(&mut out, &tsr.data);
+    }
+    match &ck.opt {
+        OptState::Sgd { velocity } => {
+            for v in velocity {
+                push_f32s(&mut out, &v.data);
+            }
+        }
+        OptState::Adam { m, v, .. } => {
+            for x in m {
+                push_f32s(&mut out, &x.data);
+            }
+            for x in v {
+                push_f32s(&mut out, &x.data);
+            }
+        }
+    }
+    for (_, h) in hats {
+        push_f32s(&mut out, h);
+    }
+    let hash = fnv1a64(&out);
+    out.extend_from_slice(&hash.to_le_bytes());
+    out
+}
+
+/// Parse and validate QNC1 bytes. Every failure carries the byte
+/// offset where decoding stopped; the trailer is verified *first* so a
+/// torn write is reported as corruption, never as a half-parsed state.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint, LoadError> {
+    if bytes.len() < 16 {
+        return Err(corrupt(bytes.len(), format!("file too short ({} bytes)", bytes.len())));
+    }
+    let body_len = bytes.len() - 8;
+    let mut tb = [0u8; 8];
+    tb.copy_from_slice(&bytes[body_len..]);
+    let want = u64::from_le_bytes(tb);
+    let got = fnv1a64(&bytes[..body_len]);
+    if got != want {
+        return Err(corrupt(
+            body_len,
+            format!(
+                "trailer hash mismatch (stored {}, computed {}) — torn write or bit rot",
+                to_hex(want),
+                to_hex(got)
+            ),
+        ));
+    }
+    if &bytes[..4] != b"QNC1" {
+        return Err(corrupt(0, format!("bad magic {:?}", &bytes[..4])));
+    }
+    let mut lb = [0u8; 4];
+    lb.copy_from_slice(&bytes[4..8]);
+    let hlen = u32::from_le_bytes(lb) as usize;
+    let hend = 8usize
+        .checked_add(hlen)
+        .filter(|&e| e <= body_len)
+        .ok_or_else(|| corrupt(4, format!("header length {hlen} exceeds file")))?;
+    let htext = std::str::from_utf8(&bytes[8..hend])
+        .map_err(|e| corrupt(8 + e.valid_up_to(), "header is not UTF-8"))?;
+    let j = Json::parse(htext).map_err(|e| corrupt(8, format!("header JSON: {e}")))?;
+    if j.get("version").as_usize() != Some(1) {
+        return Err(corrupt(8, "unsupported checkpoint version (want 1)"));
+    }
+    let model = j
+        .get("model")
+        .as_str()
+        .ok_or_else(|| corrupt(8, "header: missing 'model'"))?
+        .to_string();
+    let step = header_usize(&j, "step")?;
+    let batches = header_usize(&j, "batches")?;
+    let rng = (header_hex(&j, "rng_state")?, header_hex(&j, "rng_inc")?);
+    let cfg = header_hex(&j, "cfg_digest")?;
+
+    let mut off = hend;
+    let body = &bytes[..body_len];
+    let mut params = ParamStore::new();
+    let plist = j
+        .get("params")
+        .as_arr()
+        .ok_or_else(|| corrupt(8, "header: missing 'params' array"))?;
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(plist.len());
+    for (i, p) in plist.iter().enumerate() {
+        let name = p
+            .get("name")
+            .as_str()
+            .ok_or_else(|| corrupt(8, format!("header: param {i} missing 'name'")))?;
+        let shape_j = p
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| corrupt(8, format!("header: param '{name}' missing 'shape'")))?;
+        let mut shape = Vec::with_capacity(shape_j.len());
+        for d in shape_j {
+            shape.push(d.as_usize().ok_or_else(|| {
+                corrupt(8, format!("header: param '{name}' has a non-integer dim"))
+            })?);
+        }
+        if params.get(name).is_some() {
+            return Err(corrupt(8, format!("header: duplicate param '{name}'")));
+        }
+        let numel: usize = shape.iter().product();
+        let data = take_f32s(body, &mut off, numel, &format!("param '{name}'"))?;
+        params.insert(name, Tensor::from_vec(&shape, data));
+        shapes.push(shape);
+    }
+
+    let oj = j.get("opt");
+    let kind = oj
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| corrupt(8, "header: missing 'opt.kind'"))?;
+    let slots = header_usize(oj, "slots")?;
+    let mut read_slot = |off: &mut usize, tag: &str| -> Result<Vec<Tensor>, LoadError> {
+        let mut out = Vec::with_capacity(shapes.len());
+        for shape in &shapes {
+            let numel: usize = shape.iter().product();
+            let data = take_f32s(body, off, numel, &format!("opt slot '{tag}'"))?;
+            out.push(Tensor::from_vec(shape, data));
+        }
+        Ok(out)
+    };
+    let opt = match (kind, slots) {
+        ("sgd", 1) => OptState::Sgd { velocity: read_slot(&mut off, "velocity")? },
+        ("adam", 2) => {
+            let t = header_usize(oj, "t")?;
+            let m = read_slot(&mut off, "m")?;
+            let v = read_slot(&mut off, "v")?;
+            OptState::Adam { m, v, t }
+        }
+        _ => {
+            return Err(corrupt(
+                8,
+                format!("header: unknown optimizer kind '{kind}' with {slots} slots"),
+            ))
+        }
+    };
+
+    let mut hats = Vec::new();
+    if let Some(hlist) = j.get("hats").as_arr() {
+        for (i, h) in hlist.iter().enumerate() {
+            let idx = h
+                .get("idx")
+                .as_usize()
+                .ok_or_else(|| corrupt(8, format!("header: hat {i} missing 'idx'")))?;
+            let len = h
+                .get("len")
+                .as_usize()
+                .ok_or_else(|| corrupt(8, format!("header: hat {i} missing 'len'")))?;
+            let data = take_f32s(body, &mut off, len, &format!("hat {idx}"))?;
+            hats.push((idx, data));
+        }
+    }
+    if off != body_len {
+        return Err(corrupt(off, format!("{} trailing payload bytes", body_len - off)));
+    }
+    Ok(Checkpoint { model, step, batches, rng, cfg_digest: cfg, params, opt, hats })
+}
+
+/// Extract just the parameters from QNC1 bytes (serve-side uploads
+/// accept either QNP1 or a full checkpoint).
+pub fn params_from_qnc1_bytes(bytes: &[u8]) -> Result<ParamStore, LoadError> {
+    decode(bytes).map(|ck| ck.params)
+}
+
+// --------------------------------------------------- atomic save/load ---
+
+fn ckpt_name(step: usize) -> String {
+    // zero-padded so lexicographic order == numeric step order
+    format!("step-{step:08}.qnc1")
+}
+
+/// fsync the directory so the rename itself is durable (best-effort:
+/// not every filesystem supports fsync on a directory handle).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+fn atomic_write(dir: &Path, name: &str, bytes: &[u8], point: &str) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    let fin = dir.join(name);
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        fault::write_all(point, &mut f, bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        fault::check("ckpt.sync").context("pre-sync fault")?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    fault::check("ckpt.rename").context("pre-rename fault")?;
+    fs::rename(&tmp, &fin)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), fin.display()))?;
+    sync_dir(dir);
+    Ok(())
+}
+
+/// Write a checkpoint crash-atomically and update the `LATEST`
+/// pointer. The previous checkpoint file and pointer stay untouched
+/// until the new file is durable, so an injected failure anywhere in
+/// this function leaves the directory loadable. Returns the final path.
+pub fn save_checkpoint(dir: &Path, ck: &Checkpoint) -> Result<PathBuf> {
+    fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let bytes = encode(ck);
+    let hash = fnv1a64(&bytes);
+    let name = ckpt_name(ck.step);
+    atomic_write(dir, &name, &bytes, "ckpt.write")?;
+    fault::check("ckpt.latest").context("pre-latest fault")?;
+    let latest = Json::obj(vec![
+        ("file", Json::str(name.clone())),
+        ("hash", Json::str(to_hex(hash))),
+        ("step", Json::num(ck.step as f64)),
+    ])
+    .to_string();
+    atomic_write(dir, "LATEST", latest.as_bytes(), "ckpt.latest.write")?;
+    prune(dir);
+    log_info!(
+        "checkpoint: step {} -> {} ({} bytes, hash {})",
+        ck.step,
+        dir.join(&name).display(),
+        bytes.len(),
+        to_hex(hash)
+    );
+    Ok(dir.join(name))
+}
+
+/// Drop all but the newest [`KEEP`] checkpoints plus any stale temp
+/// files left behind by a crashed save.
+fn prune(dir: &Path) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut ckpts: Vec<String> = Vec::new();
+    for ent in rd.flatten() {
+        let name = ent.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".tmp") {
+            let _ = fs::remove_file(ent.path());
+        } else if name.starts_with("step-") && name.ends_with(".qnc1") {
+            ckpts.push(name);
+        }
+    }
+    ckpts.sort();
+    let n = ckpts.len();
+    for name in ckpts.into_iter().take(n.saturating_sub(KEEP)) {
+        let _ = fs::remove_file(dir.join(name));
+    }
+}
+
+/// Load a specific checkpoint file, validating the trailer.
+pub fn load_file(path: &Path) -> Result<Checkpoint> {
+    let bytes = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    decode(&bytes).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+fn try_latest_pointer(dir: &Path) -> Option<Checkpoint> {
+    let text = fs::read_to_string(dir.join("LATEST")).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let file = j.get("file").as_str()?;
+    let want = j.get("hash").as_str().and_then(from_hex)?;
+    let bytes = fs::read(dir.join(file)).ok()?;
+    if fnv1a64(&bytes) != want {
+        log_warn!("checkpoint: {file} does not match LATEST hash; falling back");
+        return None;
+    }
+    match decode(&bytes) {
+        Ok(ck) => Some(ck),
+        Err(e) => {
+            log_warn!("checkpoint: {file} corrupt ({e}); falling back");
+            None
+        }
+    }
+}
+
+/// Load the newest valid checkpoint from `dir`, or `None` when the
+/// directory holds no usable checkpoint. Prefers the `LATEST` pointer;
+/// on a stale/corrupt pointer (crash mid-protocol) scans `step-*.qnc1`
+/// newest-first and takes the first file that self-validates.
+pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    if let Some(ck) = try_latest_pointer(dir) {
+        return Ok(Some(ck));
+    }
+    let rd = fs::read_dir(dir).with_context(|| format!("scan {}", dir.display()))?;
+    let mut names: Vec<String> = rd
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("step-") && n.ends_with(".qnc1"))
+        .collect();
+    names.sort();
+    for name in names.into_iter().rev() {
+        match fs::read(dir.join(&name)) {
+            Ok(bytes) => match decode(&bytes) {
+                Ok(ck) => {
+                    log_warn!("checkpoint: recovered from fallback scan: {name}");
+                    return Ok(Some(ck));
+                }
+                Err(e) => log_warn!("checkpoint: skipping {name}: {e}"),
+            },
+            Err(e) => log_warn!("checkpoint: skipping {name}: {e}"),
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::testing::temp_dir;
+
+    fn sample(step: usize) -> Checkpoint {
+        let mut params = ParamStore::new();
+        params.insert("w0", Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]));
+        params.insert("b0", Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]));
+        let velocity =
+            vec![Tensor::from_vec(&[2, 3], vec![0.0; 6]), Tensor::from_vec(&[3], vec![9.0; 3])];
+        Checkpoint {
+            model: "lm".to_string(),
+            step,
+            batches: step + 1,
+            rng: (0x0123_4567_89ab_cdef, 0xfedc_ba98_7654_3211),
+            cfg_digest: 0xdead_beef_cafe_f00d,
+            params,
+            opt: OptState::Sgd { velocity },
+            hats: vec![(0, vec![1.5, 2.5, 3.5, 4.5, 5.5, 6.5])],
+        }
+    }
+
+    fn assert_same(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.rng, b.rng);
+        assert_eq!(a.cfg_digest, b.cfg_digest);
+        assert_eq!(a.params.names(), b.params.names());
+        for (n, t) in a.params.iter() {
+            assert_eq!(b.params.get(n).unwrap(), t);
+        }
+        assert_eq!(a.hats, b.hats);
+        match (&a.opt, &b.opt) {
+            (OptState::Sgd { velocity: x }, OptState::Sgd { velocity: y }) => assert_eq!(x, y),
+            (OptState::Adam { m: m1, v: v1, t: t1 }, OptState::Adam { m: m2, v: v2, t: t2 }) => {
+                assert_eq!((m1, v1, t1), (m2, v2, t2))
+            }
+            _ => panic!("optimizer kind mismatch"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_sgd() {
+        let ck = sample(7);
+        let got = decode(&encode(&ck)).unwrap();
+        assert_same(&ck, &got);
+    }
+
+    #[test]
+    fn roundtrip_adam() {
+        let mut ck = sample(3);
+        let zeros =
+            vec![Tensor::from_vec(&[2, 3], vec![0.5; 6]), Tensor::from_vec(&[3], vec![0.25; 3])];
+        ck.opt = OptState::Adam { m: zeros.clone(), v: zeros, t: 11 };
+        let got = decode(&encode(&ck)).unwrap();
+        assert_same(&ck, &got);
+    }
+
+    #[test]
+    fn encode_is_canonical() {
+        let mut a = sample(5);
+        a.hats = vec![(1, vec![2.0]), (0, vec![1.0])];
+        let mut b = sample(5);
+        b.hats = vec![(0, vec![1.0]), (1, vec![2.0])];
+        assert_eq!(encode(&a), encode(&b));
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let bytes = encode(&sample(2));
+        for cut in 0..bytes.len() {
+            assert!(
+                decode(&bytes[..cut]).is_err(),
+                "truncation to {cut}/{} bytes not rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_is_detected() {
+        let bytes = encode(&sample(2));
+        // flipping any single bit must trip the fnv trailer
+        for i in (0..bytes.len()).step_by(7) {
+            let mut m = bytes.clone();
+            m[i] ^= 0x10;
+            let e = decode(&m).expect_err("bit flip undetected");
+            assert!(e.to_string().contains("trailer hash"), "{e}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let ck = sample(1);
+        let mut bytes = encode(&ck);
+        // append junk and re-seal the trailer: framing must still fail
+        let body = bytes.len() - 8;
+        bytes.truncate(body);
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let h = fnv1a64(&bytes);
+        bytes.extend_from_slice(&h.to_le_bytes());
+        let e = decode(&bytes).expect_err("trailing bytes accepted");
+        assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn save_load_latest_roundtrip_and_prune() {
+        let dir = temp_dir("qnc1");
+        for s in [2usize, 4, 6] {
+            save_checkpoint(&dir, &sample(s)).unwrap();
+        }
+        let got = load_latest(&dir).unwrap().expect("latest");
+        assert_eq!(got.step, 6);
+        // prune keeps the newest KEEP files
+        let kept: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".qnc1"))
+            .collect();
+        assert_eq!(kept.len(), KEEP);
+        assert!(kept.contains(&ckpt_name(6)) && kept.contains(&ckpt_name(4)));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_scan() {
+        let dir = temp_dir("qnc1fb");
+        save_checkpoint(&dir, &sample(3)).unwrap();
+        save_checkpoint(&dir, &sample(5)).unwrap();
+        // corrupt the newest file AND leave LATEST pointing at it:
+        // load must fall back to step 3
+        let newest = dir.join(ckpt_name(5));
+        let mut bytes = fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&newest, &bytes).unwrap();
+        let got = load_latest(&dir).unwrap().expect("fallback");
+        assert_eq!(got.step, 3);
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_is_none() {
+        let dir = temp_dir("qnc1empty");
+        assert!(load_latest(&dir).unwrap().is_none());
+        assert!(load_latest(&dir.join("nope")).unwrap().is_none());
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn cfg_digest_tracks_bit_affecting_fields_only() {
+        let base = TrainConfig::default();
+        let d0 = cfg_digest("lm", &base);
+        assert_eq!(d0, cfg_digest("lm", &base));
+        let mut threads = base.clone();
+        threads.threads = 8;
+        threads.log_every = 1;
+        assert_eq!(d0, cfg_digest("lm", &threads), "threads/log_every must not matter");
+        let mut seed = base.clone();
+        seed.seed = 99;
+        assert_ne!(d0, cfg_digest("lm", &seed));
+        let mut rate = base.clone();
+        rate.noise_rate += 0.01;
+        assert_ne!(d0, cfg_digest("lm", &rate));
+        assert_ne!(d0, cfg_digest("cls", &base));
+    }
+}

@@ -159,6 +159,7 @@ pub fn img_eval_batches(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -80,6 +80,9 @@ impl Optimizer {
     /// In-place parameter update. `grads` must be in param-store order.
     /// `frozen[i]` skips parameter i (used by the iPQ pipeline, which
     /// updates quantized layers through their codewords instead).
+    // param lookups use names() keys and the grads length is asserted:
+    // a miss is a caller bug, not an I/O condition
+    #[allow(clippy::unwrap_used)]
     pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor], lr: f32, frozen: &[bool]) {
         let names: Vec<String> = params.names().to_vec();
         assert_eq!(names.len(), grads.len());
@@ -132,6 +135,7 @@ impl Optimizer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -117,6 +117,7 @@ fn inventory_bytes(meta: &ModelMeta, scheme: &dyn QuantizerFactory) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::config::ParamMeta;

@@ -6,10 +6,15 @@
 //! per epoch), runs the AOT grad artifact, folds shared-layer
 //! gradients, clips, applies the optimizer and re-uploads parameters.
 
-use anyhow::Result;
+use std::path::PathBuf;
 
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::{self, Checkpoint, CheckpointConfig, OptState};
 use crate::coordinator::optim::{clip_grad_norm, Optimizer, Schedule};
 use crate::log_info;
+use crate::util::fault;
+use crate::util::hash::to_hex;
 use crate::model::params::ParamStore;
 use crate::model::tensor::Tensor;
 use crate::quant::assign;
@@ -117,6 +122,17 @@ pub struct Trainer<'s, 'rt> {
     /// when sharing is off)
     share_idx: Vec<usize>,
     step: usize,
+    /// hat tensors uploaded at the last refresh, by manifest param
+    /// index — checkpointed so a resume between refresh boundaries
+    /// replays bit-identically
+    hats: Vec<(usize, Vec<f32>)>,
+    /// batches drawn from the data source since step 0 (the cursor
+    /// recorded in checkpoints)
+    batches_drawn: usize,
+    /// batches to draw-and-discard at the next `train_for` call to
+    /// realign a fresh data source after a resume
+    data_skip: usize,
+    ckpt: Option<CheckpointConfig>,
 }
 
 impl<'s, 'rt> Trainer<'s, 'rt> {
@@ -133,10 +149,34 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         let rng = Pcg::new(cfg.seed ^ 0x7261_696e);
         // the same knob drives the backend's deterministic sharding
         sess.set_backend_threads(cfg.threads);
-        Trainer { sess, params, opt, cfg, rng, share_idx, step: 0 }
+        Trainer {
+            sess,
+            params,
+            opt,
+            cfg,
+            rng,
+            share_idx,
+            step: 0,
+            hats: Vec::new(),
+            batches_drawn: 0,
+            data_skip: 0,
+            ckpt: None,
+        }
+    }
+
+    /// Enable periodic checkpointing to `dir` every `every` completed
+    /// steps (0 = only a final checkpoint at the end of the run).
+    pub fn set_checkpoint(&mut self, dir: impl Into<PathBuf>, every: usize) {
+        self.ckpt = Some(CheckpointConfig { dir: dir.into(), every });
+    }
+
+    pub fn completed_steps(&self) -> usize {
+        self.step
     }
 
     /// Map each per-layer param to its canonical (shared) sibling.
+    // lookups use names sourced from params.names(): they cannot miss
+    #[allow(clippy::unwrap_used)]
     fn build_share_idx(sess: &ModelSession, params: &ParamStore, chunk: usize) -> Vec<usize> {
         let n_layers = sess.meta.n_layers;
         let names = params.names();
@@ -170,6 +210,8 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
     }
 
     /// Copy canonical params onto their shared siblings (host side).
+    // lookups use names sourced from params.names(): they cannot miss
+    #[allow(clippy::unwrap_used)]
     fn sync_shared(&mut self) {
         let names: Vec<String> = self.params.names().to_vec();
         for (i, &ci) in self.share_idx.iter().enumerate() {
@@ -232,6 +274,10 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
     /// via the shared assignment engine. Every matrix draws its own RNG
     /// stream split from the trainer RNG in manifest order, so the
     /// result is deterministic and independent of scheduling.
+    // the param lookup keys come from the manifest the store was
+    // checked against, and scoped-thread joins only fail on a worker
+    // panic (which should propagate)
+    #[allow(clippy::unwrap_used)]
     pub fn refresh_hats(&mut self) -> Result<()> {
         if !self.cfg.noise.needs_hat() {
             return Ok(()); // zero hats uploaded at session creation
@@ -272,6 +318,7 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         // worker per matrix) and uploads before the next wave starts, so
         // peak extra memory is bounded by `outer` hats — not a full copy
         // of every noised weight at once.
+        let mut new_hats: Vec<(usize, Vec<f32>)> = Vec::with_capacity(jobs.len());
         for wave in jobs.chunks_mut(outer) {
             // Give each matrix inner k-means threads proportional to its
             // share of the wave's work: a skewed wave hands the dominant
@@ -328,8 +375,11 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
             for r in wave_hats {
                 let (i, hat) = r?;
                 self.sess.upload_hat(i, &hat)?;
+                new_hats.push((i, hat));
             }
         }
+        new_hats.sort_by_key(|(i, _)| *i);
+        self.hats = new_hats;
         Ok(())
     }
 
@@ -364,16 +414,121 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
         Ok(loss)
     }
 
+    /// Snapshot complete trainer state at the current step boundary.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let opt = match &self.opt {
+            Optimizer::Sgd { velocity, .. } => OptState::Sgd { velocity: velocity.clone() },
+            Optimizer::Adam { m, v, t, .. } => {
+                OptState::Adam { m: m.clone(), v: v.clone(), t: *t }
+            }
+        };
+        Checkpoint {
+            model: self.sess.meta.name.clone(),
+            step: self.step,
+            batches: self.batches_drawn,
+            rng: self.rng.state_parts(),
+            cfg_digest: checkpoint::cfg_digest(&self.sess.meta.name, &self.cfg),
+            params: self.params.clone(),
+            opt,
+            hats: self.hats.clone(),
+        }
+    }
+
+    /// Restore trainer state from a checkpoint. The next `train_for`
+    /// call continues at `ck.step` and replays bit-identically to the
+    /// uninterrupted run at any `threads`. Refuses a checkpoint whose
+    /// model or config digest differs from this trainer's.
+    pub fn resume_from(&mut self, ck: Checkpoint) -> Result<()> {
+        let model = self.sess.meta.name.clone();
+        if ck.model != model {
+            bail!("checkpoint is for model '{}', trainer is '{model}'", ck.model);
+        }
+        let want = checkpoint::cfg_digest(&model, &self.cfg);
+        if ck.cfg_digest != want {
+            bail!(
+                "checkpoint config digest {} != current {} — resume requires an \
+                 identical training configuration (threads/log_every may differ)",
+                to_hex(ck.cfg_digest),
+                to_hex(want)
+            );
+        }
+        ck.params.check_against(&self.sess.meta)?;
+        let n = ck.params.len();
+        self.opt = match (self.cfg.optimizer, ck.opt) {
+            (OptKind::Sgd { momentum, nesterov }, OptState::Sgd { velocity }) => {
+                if velocity.len() != n {
+                    bail!("checkpoint has {} velocity slots for {n} params", velocity.len());
+                }
+                Optimizer::Sgd { momentum, nesterov, velocity }
+            }
+            (OptKind::Adam, OptState::Adam { m, v, t }) => {
+                if m.len() != n || v.len() != n {
+                    bail!("checkpoint has {}/{} adam slots for {n} params", m.len(), v.len());
+                }
+                // constants must mirror Optimizer::adam
+                Optimizer::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-8, m, v, t }
+            }
+            _ => bail!("checkpoint optimizer kind does not match the configured optimizer"),
+        };
+        self.params = ck.params;
+        self.rng = Pcg::from_parts(ck.rng.0, ck.rng.1);
+        self.step = ck.step;
+        self.batches_drawn = ck.batches;
+        self.data_skip = ck.batches;
+        self.hats = ck.hats;
+        log_info!(
+            "resume[{model}] at step {}/{} ({} batches consumed)",
+            self.step,
+            self.cfg.steps,
+            self.batches_drawn
+        );
+        Ok(())
+    }
+
     /// Full training run.
     pub fn train(&mut self, data: &mut dyn BatchSource) -> Result<TrainStats> {
+        self.train_for(data, usize::MAX)
+    }
+
+    /// Run at most `limit` further steps (stopping at `cfg.steps`).
+    ///
+    /// Taking a limit instead of mutating `cfg.steps` keeps the LR
+    /// schedule — whose shape depends on the *total* step count —
+    /// bit-identical between an interrupted run and the full run, which
+    /// is what makes kill-at-step-k resume tests meaningful.
+    pub fn train_for(&mut self, data: &mut dyn BatchSource, limit: usize) -> Result<TrainStats> {
         self.sync_shared();
         self.sess.upload_all_params(&self.params)?;
+        // re-arm the session's hat tensors after a resume: uploads are
+        // device state, not part of the params — without this, steps
+        // between resume and the next refresh would see zero hats
+        for (i, hat) in &self.hats {
+            self.sess.upload_hat(*i, hat)?;
+        }
+        // realign a fresh data source to the checkpointed cursor
+        for _ in 0..self.data_skip {
+            let _ = data.next_batch();
+        }
+        self.data_skip = 0;
         let mut history = Vec::new();
         let mut last = f32::NAN;
-        for s in 0..self.cfg.steps {
+        let mut done = 0usize;
+        while self.step < self.cfg.steps && done < limit {
+            let s = self.step;
             let batch = data.next_batch();
+            self.batches_drawn += 1;
             last = self.step_once(&batch)?;
-            if s % self.cfg.log_every.max(1) == 0 || s + 1 == self.cfg.steps {
+            done += 1;
+            if let Some(ck) = self.ckpt.clone() {
+                if ck.every > 0 && self.step % ck.every == 0 && self.step < self.cfg.steps {
+                    checkpoint::save_checkpoint(&ck.dir, &self.to_checkpoint())?;
+                }
+            }
+            // the kill-at-step fault point sits *after* the periodic
+            // save so an injected crash exercises resume, not the
+            // (separately-faulted) save protocol
+            fault::check("train.step")?;
+            if s % self.cfg.log_every.max(1) == 0 || self.step == self.cfg.steps {
                 history.push((s, last));
                 log_info!(
                     "train[{}] step {s}/{} loss {last:.4} (noise {} rate {})",
@@ -384,7 +539,12 @@ impl<'s, 'rt> Trainer<'s, 'rt> {
                 );
             }
         }
-        Ok(TrainStats { history, final_loss: last, steps: self.cfg.steps })
+        if self.step >= self.cfg.steps {
+            if let Some(ck) = self.ckpt.clone() {
+                checkpoint::save_checkpoint(&ck.dir, &self.to_checkpoint())?;
+            }
+        }
+        Ok(TrainStats { history, final_loss: last, steps: self.step })
     }
 
     pub fn into_params(self) -> ParamStore {
@@ -432,6 +592,7 @@ impl BatchSource for ImgSource {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

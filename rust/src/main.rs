@@ -20,8 +20,10 @@ use anyhow::{Context, Result};
 use quant_noise::bench_harness::common::{Row, Workbench};
 use quant_noise::bench_harness::specs::{base_train, default_rate, default_steps, with_noise};
 use quant_noise::bench_harness::{figures, report, tables};
+use quant_noise::coordinator::checkpoint;
 use quant_noise::coordinator::ipq::{run_ipq, IpqConfig};
 use quant_noise::coordinator::quantize::quantize_params;
+use quant_noise::coordinator::trainer::Trainer;
 use quant_noise::model::params::ParamStore;
 use quant_noise::quant::scheme::{IntObserver, PqSpec, QuantSpec, SchemeError};
 use quant_noise::util::cli::Command;
@@ -125,10 +127,18 @@ fn train(rest: &[String]) -> Result<()> {
         .opt_default("share", "0", "weight-sharing chunk (0=off)")
         .opt_default("threads", "0", "hat-refresh / PQ worker threads (0=all cores)")
         .opt("save", "path to save trained params (QNP1)")
+        .opt("checkpoint", "directory for periodic QNC1 checkpoints (crash-safe)")
+        .opt_default("checkpoint-every", "25", "steps between checkpoints (0 = final only)")
+        .opt("resume", "resume from the latest checkpoint in this directory")
+        .opt("cache", "trained-parameter cache directory (default: <artifacts>/cache)")
         .flag("ldste", "STE through LayerDrop (Table 11 ablation)");
     let args = parse(cmd, rest)?;
 
-    let wb = Workbench::new(&artifacts_dir(&args))?;
+    let artifacts = artifacts_dir(&args);
+    let wb = match args.get("cache") {
+        Some(c) => Workbench::at(&artifacts, Path::new(c))?,
+        None => Workbench::new(&artifacts)?,
+    };
     let model = args.get_or("model", "lm_tiny").to_string();
     let mut lab = wb.lab(&model)?;
     let task = lab.sess.meta.task.clone();
@@ -144,7 +154,34 @@ fn train(rest: &[String]) -> Result<()> {
     cfg.threads = args.num_or("threads", 0usize);
     cfg.ldste = args.flag("ldste");
 
-    let params = lab.train_cached(&cfg)?;
+    let ckpt_dir = args.get("checkpoint").map(String::from);
+    let resume_dir = args.get("resume").map(String::from);
+    let params = if ckpt_dir.is_some() || resume_dir.is_some() {
+        // checkpointing needs the live Trainer (the train cache stores
+        // only final weights), so drive the loop directly
+        lab.sess.upload_all_params(&lab.init)?;
+        lab.sess.zero_hats()?;
+        let mut trainer = Trainer::new(&mut lab.sess, lab.init.clone(), cfg.clone());
+        if let Some(dir) = &resume_dir {
+            match checkpoint::load_latest(Path::new(dir))? {
+                Some(ck) => trainer.resume_from(ck)?,
+                None => log_info!("--resume: no checkpoint in {dir}; starting from step 0"),
+            }
+        }
+        // resuming without --checkpoint keeps checkpointing to the
+        // resume directory, so repeated crashes keep making progress
+        if let Some(dir) = ckpt_dir.as_deref().or(resume_dir.as_deref()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {dir}"))?;
+            trainer.set_checkpoint(dir, args.num_or("checkpoint-every", 25usize));
+        }
+        trainer.train(lab.train_src.as_mut())?;
+        let params = trainer.into_params();
+        lab.sess.zero_hats()?;
+        params
+    } else {
+        lab.train_cached(&cfg)?
+    };
     let keep = lab.keep_all();
     let ev = lab.eval_params(&params, "eval", &keep)?;
     log_info!(
@@ -385,8 +422,16 @@ fn serve(rest: &[String]) -> Result<()> {
     .opt_default("threads", "0", "interpreter worker threads (0=all cores)")
     .opt_default("max-batch", "8", "macro-batch size cap for coalesced evals")
     .opt_default("max-queue", "64", "admission queue bound (beyond it: 429)")
+    .opt_default("max-per-model", "0", "per-model admission quota (0 = disabled)")
     .opt_default("http-threads", "8", "HTTP worker threads (one live connection each)")
     .opt_default("linger-ms", "2", "how long a ready batch waits for stragglers")
+    .opt_default("io-timeout-ms", "5000", "whole-request read/write deadline (slowloris guard)")
+    .opt_default(
+        "drain-timeout-ms",
+        "30000",
+        "max time shutdown waits for the batcher to drain before abandoning it",
+    )
+    .opt_default("max-conn-requests", "1000", "keep-alive requests served per connection")
     .flag("selfcheck", "re-run every coalesced shard solo and assert bit-identity");
     let args = parse(cmd, rest)?;
     let cfg = quant_noise::serve::ServeConfig {
@@ -394,8 +439,14 @@ fn serve(rest: &[String]) -> Result<()> {
         threads: args.num_or("threads", 0usize),
         max_batch: args.num_or("max-batch", 8usize),
         max_queue: args.num_or("max-queue", 64usize),
+        max_per_model: args.num_or("max-per-model", 0usize),
         http_threads: args.num_or("http-threads", 8usize),
         linger: std::time::Duration::from_millis(args.num_or("linger-ms", 2u64)),
+        io_timeout: std::time::Duration::from_millis(args.num_or("io-timeout-ms", 5000u64)),
+        drain_timeout: std::time::Duration::from_millis(
+            args.num_or("drain-timeout-ms", 30_000u64),
+        ),
+        max_conn_requests: args.num_or("max-conn-requests", 1000usize),
         backend: None, // QN_BACKEND decides, same as every other subcommand
         selfcheck: args.flag("selfcheck"),
     };

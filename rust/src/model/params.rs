@@ -7,14 +7,38 @@
 //! in header order.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::config::ModelMeta;
 use crate::model::tensor::Tensor;
+use crate::util::fault;
 use crate::util::json::Json;
+
+/// Typed artifact-corruption error: what went wrong and the byte
+/// offset where decoding stopped. Returned by the pure byte-level
+/// loaders (`load_qnp1_bytes`, `checkpoint::decode`) so callers — the
+/// CLI, serve upload handlers — can map corruption to a 4xx with
+/// context instead of a panic or an opaque I/O error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadError {
+    pub offset: usize,
+    pub what: String,
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "corrupt artifact at byte {}: {}", self.offset, self.what)
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+fn corrupt(offset: usize, what: impl Into<String>) -> LoadError {
+    LoadError { offset, what: what.into() }
+}
 
 #[derive(Debug, Clone)]
 pub struct ParamStore {
@@ -91,45 +115,85 @@ impl ParamStore {
 
     // ------------------------------------------------------ QNP1 I/O ---
 
-    pub fn load_qnp1(path: &Path) -> Result<ParamStore> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("open {}", path.display()))?;
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != b"QNP1" {
-            bail!("{}: bad magic {:?}", path.display(), magic);
+    /// Decode QNP1 bytes with full bounds checking. Truncated or
+    /// bit-flipped input returns a [`LoadError`] carrying the byte
+    /// offset where decoding stopped — never a panic, never a
+    /// partially-filled store.
+    pub fn load_qnp1_bytes(bytes: &[u8]) -> std::result::Result<ParamStore, LoadError> {
+        if bytes.len() < 8 {
+            return Err(corrupt(bytes.len(), format!("file too short ({} bytes)", bytes.len())));
         }
-        let mut len_buf = [0u8; 4];
-        f.read_exact(&mut len_buf)?;
-        let hlen = u32::from_le_bytes(len_buf) as usize;
-        let mut header = vec![0u8; hlen];
-        f.read_exact(&mut header)?;
-        let j = Json::parse(std::str::from_utf8(&header)?)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        if &bytes[..4] != b"QNP1" {
+            return Err(corrupt(0, format!("bad magic {:?}", &bytes[..4])));
+        }
+        let mut lb = [0u8; 4];
+        lb.copy_from_slice(&bytes[4..8]);
+        let hlen = u32::from_le_bytes(lb) as usize;
+        let hend = 8usize
+            .checked_add(hlen)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| corrupt(4, format!("header length {hlen} exceeds file")))?;
+        let htext = std::str::from_utf8(&bytes[8..hend])
+            .map_err(|e| corrupt(8 + e.valid_up_to(), "header is not UTF-8"))?;
+        let j = Json::parse(htext).map_err(|e| corrupt(8, format!("header JSON: {e}")))?;
+        let plist = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| corrupt(8, "header: missing 'params' array"))?;
         let mut store = ParamStore::new();
-        for p in j.get("params").as_arr().context("missing params")? {
-            let name = p.get("name").as_str().context("missing name")?;
-            let shape: Vec<usize> = p
+        let mut off = hend;
+        for (i, p) in plist.iter().enumerate() {
+            let name = p
+                .get("name")
+                .as_str()
+                .ok_or_else(|| corrupt(8, format!("header: param {i} missing 'name'")))?;
+            let shape_j = p
                 .get("shape")
                 .as_arr()
-                .context("missing shape")?
-                .iter()
-                .filter_map(|v| v.as_usize())
-                .collect();
+                .ok_or_else(|| corrupt(8, format!("header: param '{name}' missing 'shape'")))?;
+            let mut shape = Vec::with_capacity(shape_j.len());
+            for d in shape_j {
+                shape.push(d.as_usize().ok_or_else(|| {
+                    corrupt(8, format!("header: param '{name}' has a non-integer dim"))
+                })?);
+            }
+            if store.get(name).is_some() {
+                return Err(corrupt(8, format!("header: duplicate param '{name}'")));
+            }
             let numel: usize = shape.iter().product::<usize>().max(1);
-            let mut raw = vec![0u8; numel * 4];
-            f.read_exact(&mut raw)
-                .with_context(|| format!("reading {name} ({numel} f32)"))?;
-            let data: Vec<f32> = raw
+            let need = numel
+                .checked_mul(4)
+                .ok_or_else(|| corrupt(8, format!("param '{name}': {numel} elements overflows")))?;
+            let end = off.checked_add(need).filter(|&e| e <= bytes.len()).ok_or_else(|| {
+                corrupt(
+                    bytes.len(),
+                    format!("truncated: param '{name}' needs {need} bytes at offset {off}"),
+                )
+            })?;
+            let data: Vec<f32> = bytes[off..end]
                 .chunks_exact(4)
                 .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
             store.insert(name, Tensor::from_vec(&shape, data));
+            off = end;
+        }
+        if off != bytes.len() {
+            return Err(corrupt(off, format!("{} trailing payload bytes", bytes.len() - off)));
         }
         Ok(store)
     }
 
-    pub fn save_qnp1(&self, path: &Path) -> Result<()> {
+    pub fn load_qnp1(path: &Path) -> Result<ParamStore> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        fault::check("load.qnp1").with_context(|| format!("load {}", path.display()))?;
+        Self::load_qnp1_bytes(&bytes)
+            .map_err(|e| anyhow::Error::new(e).context(format!("load {}", path.display())))
+    }
+
+    /// Serialize to QNP1 bytes (in-memory; the wire form serve uploads
+    /// consume).
+    pub fn to_qnp1_bytes(&self) -> Vec<u8> {
         let params: Vec<Json> = self
             .iter()
             .map(|(n, t)| {
@@ -143,18 +207,37 @@ impl ParamStore {
             })
             .collect();
         let header = Json::obj(vec![("params", Json::Arr(params))]).to_string();
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("create {}", path.display()))?;
-        f.write_all(b"QNP1")?;
-        f.write_all(&(header.len() as u32).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
+        let mut out = Vec::new();
+        out.extend_from_slice(b"QNP1");
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
         for (_, t) in self.iter() {
-            let mut raw = Vec::with_capacity(t.data.len() * 4);
             for &x in &t.data {
-                raw.extend_from_slice(&x.to_le_bytes());
+                out.extend_from_slice(&x.to_le_bytes());
             }
-            f.write_all(&raw)?;
         }
+        out
+    }
+
+    /// Crash-atomic save: write a sibling temp file, fsync, rename. A
+    /// crash mid-save can leave a stale `.tmp` but never a torn
+    /// artifact under the final name.
+    pub fn save_qnp1(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_qnp1_bytes();
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "params".to_string());
+        let tmp = path.with_file_name(format!("{name}.tmp"));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
         Ok(())
     }
 }
@@ -209,6 +292,74 @@ mod tests {
         let path = dir.join("x.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(ParamStore::load_qnp1(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let bytes = sample().to_qnp1_bytes();
+        for cut in 0..bytes.len() {
+            let e = ParamStore::load_qnp1_bytes(&bytes[..cut])
+                .expect_err("truncated input accepted");
+            assert!(e.offset <= cut, "offset {} past cut {cut}", e.offset);
+        }
+    }
+
+    #[test]
+    fn header_length_cannot_run_past_the_file() {
+        let mut bytes = sample().to_qnp1_bytes();
+        bytes[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = ParamStore::load_qnp1_bytes(&bytes).unwrap_err();
+        assert_eq!(e.offset, 4);
+        assert!(e.what.contains("header length"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_params_rejected() {
+        let mut dup = ParamStore::new();
+        dup.insert("a", Tensor::from_vec(&[1], vec![1.0]));
+        let mut bytes = dup.to_qnp1_bytes();
+        // hand-craft a header that lists "a" twice
+        let header = r#"{"params":[{"name":"a","shape":[1]},{"name":"a","shape":[1]}]}"#;
+        let mut forged = Vec::new();
+        forged.extend_from_slice(b"QNP1");
+        forged.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        forged.extend_from_slice(header.as_bytes());
+        forged.extend_from_slice(&1.0f32.to_le_bytes());
+        forged.extend_from_slice(&2.0f32.to_le_bytes());
+        let e = ParamStore::load_qnp1_bytes(&forged).unwrap_err();
+        assert!(e.what.contains("duplicate"), "{e}");
+        // and junk shapes are a strict error, not silently skipped
+        bytes.clear();
+        let header = r#"{"params":[{"name":"a","shape":[1,"x"]}]}"#;
+        bytes.extend_from_slice(b"QNP1");
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        let e = ParamStore::load_qnp1_bytes(&bytes).unwrap_err();
+        assert!(e.what.contains("non-integer"), "{e}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample().to_qnp1_bytes();
+        let clean_len = bytes.len();
+        bytes.extend_from_slice(&[0u8; 3]);
+        let e = ParamStore::load_qnp1_bytes(&bytes).unwrap_err();
+        assert_eq!(e.offset, clean_len);
+        assert!(e.what.contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let dir = temp_dir("qnp1atomic");
+        let path = dir.join("p.bin");
+        sample().save_qnp1(&path).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["p.bin".to_string()]);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -9,13 +9,16 @@
 //! the engine produced (the determinism tests rely on this).
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::quantize::reencode_params;
+use crate::coordinator::checkpoint;
+use crate::coordinator::quantize::{reencode_params, scheme_bytes};
+use crate::model::params::ParamStore;
 use crate::quant::scheme::QuantSpec;
 use crate::runtime::client::plan_cache_stats;
+use crate::util::hash::{fnv1a64, from_hex, to_hex};
 use crate::util::json::{self, Json};
 use crate::util::rng::Pcg;
 
@@ -28,6 +31,10 @@ use super::ServerState;
 
 /// How long an admitted eval waits for its batch before 504.
 const EVAL_TIMEOUT: Duration = Duration::from_secs(120);
+/// Rendezvous poll tick: between outcomes the eval handler re-checks
+/// the abandoned flag so a wedged batcher cannot pin workers past the
+/// shutdown drain.
+const EVAL_TICK: Duration = Duration::from_millis(100);
 /// Default PTQ seed; matches `IpqConfig::default().seed` so a serve
 /// re-encode reproduces the CLI's bits out of the box.
 const DEFAULT_SEED: u64 = 17;
@@ -39,6 +46,7 @@ pub fn dispatch(state: &ServerState, req: &Request) -> (Route, Response) {
         Ok(RouteMatch::Eval) => (Route::Eval, eval(state, req)),
         Ok(RouteMatch::Quantize) => (Route::Quantize, quantize(state, req)),
         Ok(RouteMatch::Reencode(id)) => (Route::Reencode, reencode(state, req, &id)),
+        Ok(RouteMatch::Upload(id)) => (Route::Upload, upload(state, req, &id)),
         Ok(RouteMatch::Models) => (Route::Models, models(state)),
         Ok(RouteMatch::ModelInfo(id)) => (Route::Models, model_info(state, &id)),
         Ok(RouteMatch::Stats) => (Route::Stats, stats(state)),
@@ -139,12 +147,32 @@ fn eval(state: &ServerState, req: &Request) -> Response {
         Err(PushError::Full(_)) => {
             Response::error(429, "admission queue full").with_header("Retry-After", "1")
         }
+        Err(PushError::Quota(_)) => {
+            state.metrics.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            Response::error(429, &format!("per-model quota for '{id}' exhausted"))
+                .with_header("Retry-After", "1")
+        }
         Err(PushError::Closed(_)) => Response::error(503, "server is shutting down"),
-        Ok(()) => match rx.recv_timeout(EVAL_TIMEOUT) {
+        Ok(()) => await_outcome(state, &rx, &model.meta, &id),
+    }
+}
+
+/// Wait for an admitted eval job's outcome, polling in short ticks so
+/// the handler notices a batcher that shutdown abandoned (it would
+/// otherwise block the full `EVAL_TIMEOUT` and hold shutdown hostage).
+fn await_outcome(
+    state: &ServerState,
+    rx: &Receiver<JobOutcome>,
+    meta: &crate::model::config::ModelMeta,
+    id: &str,
+) -> Response {
+    let deadline = super::http::deadline_after(EVAL_TIMEOUT);
+    loop {
+        match rx.recv_timeout(EVAL_TICK) {
             Ok(JobOutcome::Done { sum_nll, sum_correct, batch_size, version }) => {
-                let denom = model.meta.eval_denominator() as f64;
+                let denom = meta.eval_denominator() as f64;
                 let nll = sum_nll / denom;
-                Response::json(
+                return Response::json(
                     200,
                     &Json::obj(vec![
                         ("model", Json::str(id)),
@@ -156,11 +184,21 @@ fn eval(state: &ServerState, req: &Request) -> Response {
                         ("ppl", Json::num(nll.exp())),
                         ("accuracy", Json::num(sum_correct / denom)),
                     ]),
-                )
+                );
             }
-            Ok(JobOutcome::Failed { status, msg }) => Response::error(status, &msg),
-            Err(_) => Response::error(504, "eval timed out in the batcher"),
-        },
+            Ok(JobOutcome::Failed { status, msg }) => return Response::error(status, &msg),
+            Err(RecvTimeoutError::Disconnected) => {
+                return Response::error(503, "batcher exited before answering");
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if state.abandoned.load(Ordering::Relaxed) {
+                    return Response::error(503, "batcher abandoned during shutdown drain");
+                }
+                if super::http::time_left(deadline).is_zero() {
+                    return Response::error(504, "eval timed out in the batcher");
+                }
+            }
+        }
     }
 }
 
@@ -202,8 +240,89 @@ fn quantize(state: &ServerState, req: &Request) -> Response {
     if state.registry.insert_new(&new_id, model).is_err() {
         return Response::error(409, &format!("model '{new_id}' already exists"));
     }
-    let m = state.registry.get(&new_id).expect("registry is append-only");
-    Response::json(200, &model_json(&new_id, &m))
+    match state.registry.get(&new_id) {
+        Some(m) => Response::json(200, &model_json(&new_id, &m)),
+        // unreachable: the registry is append-only — but a 500 beats a
+        // worker panic if that invariant ever breaks
+        None => Response::error(500, &format!("model '{new_id}' vanished after insert")),
+    }
+}
+
+fn query_param(query: &str, name: &str) -> Option<String> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == name).then(|| v.to_string())
+    })
+}
+
+/// Checksum-validated weight upload: `POST /v1/models/{id}/params`
+/// replaces a served model's snapshot with the raw bytes of a QNP1
+/// store or QNC1 checkpoint (the trainer's native outputs). An
+/// optional `?checksum=<hex>` query must match the body's FNV-1a 64
+/// hash; corrupt payloads are rejected with a typed 400 carrying the
+/// byte offset where decoding stopped.
+fn upload(state: &ServerState, req: &Request, id: &str) -> Response {
+    let Some(model) = state.registry.get(id) else {
+        return Response::error(404, &format!("no such model '{id}'"));
+    };
+    if req.body.is_empty() {
+        return Response::error(400, "empty body; expected QNP1 or QNC1 bytes");
+    }
+    if let Some(want_s) = query_param(&req.query, "checksum") {
+        let Some(want) = from_hex(&want_s) else {
+            return Response::error(
+                400,
+                &format!("bad checksum '{want_s}': want up to 16 hex digits"),
+            );
+        };
+        let got = fnv1a64(&req.body);
+        if got != want {
+            return Response::error(
+                400,
+                &format!(
+                    "checksum mismatch: body hashes to {}, expected {}",
+                    to_hex(got),
+                    to_hex(want)
+                ),
+            );
+        }
+    }
+    let loaded = if req.body.starts_with(b"QNC1") {
+        checkpoint::params_from_qnc1_bytes(&req.body)
+    } else {
+        ParamStore::load_qnp1_bytes(&req.body)
+    };
+    let store = match loaded {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    if let Err(e) = store.check_against(&model.meta) {
+        return Response::error(400, &format!("payload does not fit '{id}': {e:#}"));
+    }
+    // uploaded weights are served raw; sq_error tracks their drift
+    // from the pristine fp32 copy the model was loaded with
+    let mut sq = 0.0f64;
+    for (n, t) in store.iter() {
+        if let Some(ft) = model.fp.get(n) {
+            for (a, b) in t.data.iter().zip(&ft.data) {
+                let d = (*a - *b) as f64;
+                sq += d * d;
+            }
+        }
+    }
+    let bytes = scheme_bytes(&model.meta, &QuantSpec::None);
+    let version = model.swap(store, QuantSpec::None.to_string(), bytes, sq);
+    state.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("id", Json::str(id)),
+            ("version", Json::num(version as f64)),
+            ("scheme", Json::str(QuantSpec::None.to_string())),
+            ("storage_bytes", Json::num(bytes as f64)),
+            ("sq_error", Json::num(sq)),
+        ]),
+    )
 }
 
 /// Online re-encode: refit the (possibly new) scheme on the pristine
@@ -312,8 +431,18 @@ fn stats(state: &ServerState) -> Response {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn query_params_parse() {
+        assert_eq!(query_param("checksum=ab12", "checksum"), Some("ab12".into()));
+        assert_eq!(query_param("a=1&checksum=ff&b=2", "checksum"), Some("ff".into()));
+        assert_eq!(query_param("a=1", "checksum"), None);
+        assert_eq!(query_param("", "checksum"), None);
+        assert_eq!(query_param("checksum", "checksum"), None); // no '='
+    }
 
     #[test]
     fn flatteners_handle_nesting_and_reject_junk() {

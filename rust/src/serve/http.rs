@@ -4,12 +4,16 @@
 //! crates, and the subset we need is small): request-line + headers +
 //! `Content-Length` bodies, keep-alive by default on HTTP/1.1, hard
 //! caps on header and body size so a hostile peer cannot balloon
-//! memory. No chunked encoding, no TLS — `qn serve` fronts a trusted
-//! network or a reverse proxy (DESIGN.md §9).
+//! memory. Reads run through a [`DeadlineReader`] with a whole-request
+//! deadline, so a slowloris peer dripping one header byte per second
+//! cannot pin a worker (a plain per-read socket timeout resets on
+//! every byte and never fires against a drip-feed). No chunked
+//! encoding, no TLS — `qn serve` fronts a trusted network or a reverse
+//! proxy (DESIGN.md §9).
 
-use std::io::{BufRead, Read, Write};
-
-use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufRead, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
@@ -18,6 +22,65 @@ pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Reject bodies larger than this (a macro-batch of eval requests for
 /// the tiny fixtures is a few KB; real token payloads stay well under).
 pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+/// Body bytes read per chunk between deadline checks.
+const BODY_CHUNK: usize = 64 * 1024;
+
+// Wall-clock helpers: `Instant::now` is clippy-banned repo-wide as a
+// determinism hazard; deadlines are timing-only and never touch result
+// bits, so the allow is carried here once.
+#[allow(clippy::disallowed_methods)]
+pub fn deadline_after(budget: Duration) -> Instant {
+    Instant::now() + budget
+}
+
+#[allow(clippy::disallowed_methods)]
+pub fn time_left(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
+}
+
+/// A [`TcpStream`] reader that enforces an absolute per-request
+/// deadline on top of a per-read socket timeout. Before every read the
+/// socket timeout is set to `min(io_timeout, time-to-deadline)`, so a
+/// peer dripping bytes still hits the deadline, and a silent peer hits
+/// the io timeout. Re-arm the deadline per request with [`arm`].
+///
+/// [`arm`]: DeadlineReader::arm
+pub struct DeadlineReader {
+    stream: TcpStream,
+    io_timeout: Duration,
+    deadline: Option<Instant>,
+}
+
+impl DeadlineReader {
+    pub fn new(stream: TcpStream, io_timeout: Duration) -> DeadlineReader {
+        DeadlineReader { stream, io_timeout, deadline: None }
+    }
+
+    /// Start a fresh deadline `budget` from now (call at the top of
+    /// every keep-alive request — this is also the idle cap).
+    pub fn arm(&mut self, budget: Duration) {
+        self.deadline = Some(deadline_after(budget));
+    }
+}
+
+impl Read for DeadlineReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut t = self.io_timeout;
+        if let Some(d) = self.deadline {
+            let left = time_left(d);
+            if left.is_zero() {
+                return Err(std::io::Error::new(
+                    ErrorKind::TimedOut,
+                    "request read deadline exceeded",
+                ));
+            }
+            t = t.min(left);
+        }
+        // set_read_timeout(ZERO) would mean "block forever" — clamp up
+        self.stream.set_read_timeout(Some(t.max(Duration::from_millis(1))))?;
+        self.stream.read(buf)
+    }
+}
 
 /// One parsed request. `path` excludes the query string.
 #[derive(Debug)]
@@ -64,6 +127,7 @@ pub fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
@@ -74,40 +138,109 @@ pub fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Read one request off a (possibly keep-alive) connection.
-/// `Ok(None)` on clean EOF before the first byte; `Err` on anything
-/// malformed or over the caps — the caller answers 400 and closes.
-pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
+/// Why a request could not be read. `timeout` distinguishes deadline
+/// expiry (idle keep-alive or a slow peer) from protocol garbage;
+/// `started` distinguishes a silent idle connection (close quietly)
+/// from a peer that began a request and stalled (answer 408).
+#[derive(Debug)]
+pub struct RequestError {
+    pub timeout: bool,
+    pub started: bool,
+    pub err: anyhow::Error,
+}
+
+impl RequestError {
+    fn from_io(e: std::io::Error, started: bool, what: &str) -> RequestError {
+        let timeout = matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut);
+        RequestError { timeout, started, err: anyhow::Error::new(e).context(what.to_string()) }
+    }
+
+    fn expired(started: bool, what: &str) -> RequestError {
+        RequestError { timeout: true, started, err: anyhow::anyhow!("{what}: deadline exceeded") }
+    }
+
+    fn malformed(started: bool, msg: String) -> RequestError {
+        RequestError { timeout: false, started, err: anyhow::anyhow!(msg) }
+    }
+}
+
+/// Read one request off a (possibly keep-alive) connection, spending at
+/// most `budget` wall clock. `Ok(None)` on clean EOF before the first
+/// byte; `Err` on timeout, caps, or anything malformed.
+///
+/// The budget is enforced twice: byte-level by [`DeadlineReader`] when
+/// the reader wraps one (the real slowloris guard), and here between
+/// header lines / body chunks as defense when it does not (tests,
+/// non-socket readers).
+pub fn read_request(
+    r: &mut impl BufRead,
+    budget: Duration,
+) -> Result<Option<Request>, RequestError> {
+    let deadline = deadline_after(budget);
     let mut line = String::new();
-    let n = r.read_line(&mut line).context("reading request line")?;
+    let n = match r.read_line(&mut line) {
+        Ok(n) => n,
+        Err(e) => return Err(RequestError::from_io(e, !line.is_empty(), "reading request line")),
+    };
     if n == 0 {
         return Ok(None); // clean close between requests
     }
-    ensure!(n <= MAX_HEAD_BYTES, "request line too long");
+    let started = true;
+    if n > MAX_HEAD_BYTES {
+        return Err(RequestError::malformed(started, "request line too long".into()));
+    }
     let mut parts = line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
-    let target = parts.next().context("request line missing target")?.to_string();
-    let version = parts.next().context("request line missing version")?;
-    ensure!(version.starts_with("HTTP/1."), "unsupported protocol version {version}");
+    let method = parts
+        .next()
+        .ok_or_else(|| RequestError::malformed(started, "empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| RequestError::malformed(started, "request line missing target".into()))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| RequestError::malformed(started, "request line missing version".into()))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(RequestError::malformed(
+            started,
+            format!("unsupported protocol version {version}"),
+        ));
+    }
     let mut keep_alive = version == "HTTP/1.1"; // 1.1 defaults to keep-alive
     let mut content_len = 0usize;
     let mut total = n;
     loop {
+        if time_left(deadline).is_zero() {
+            return Err(RequestError::expired(started, "reading headers"));
+        }
         let mut h = String::new();
-        let n = r.read_line(&mut h).context("reading header")?;
-        ensure!(n > 0, "connection closed mid-headers");
+        let n = match r.read_line(&mut h) {
+            Ok(n) => n,
+            Err(e) => return Err(RequestError::from_io(e, started, "reading header")),
+        };
+        if n == 0 {
+            return Err(RequestError::malformed(started, "connection closed mid-headers".into()));
+        }
         total += n;
-        ensure!(total <= MAX_HEAD_BYTES, "headers larger than {MAX_HEAD_BYTES} bytes");
+        if total > MAX_HEAD_BYTES {
+            return Err(RequestError::malformed(
+                started,
+                format!("headers larger than {MAX_HEAD_BYTES} bytes"),
+            ));
+        }
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
         let Some((name, value)) = h.split_once(':') else {
-            bail!("malformed header line");
+            return Err(RequestError::malformed(started, "malformed header line".into()));
         };
         let value = value.trim();
         if name.eq_ignore_ascii_case("content-length") {
-            content_len = value.parse().context("bad content-length")?;
+            content_len = value.parse().map_err(|_| {
+                RequestError::malformed(started, format!("bad content-length '{value}'"))
+            })?;
         } else if name.eq_ignore_ascii_case("connection") {
             let v = value.to_ascii_lowercase();
             if v.split(',').any(|t| t.trim() == "close") {
@@ -117,9 +250,26 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
             }
         }
     }
-    ensure!(content_len <= MAX_BODY_BYTES, "body larger than {MAX_BODY_BYTES} bytes");
+    if content_len > MAX_BODY_BYTES {
+        return Err(RequestError::malformed(
+            started,
+            format!("body larger than {MAX_BODY_BYTES} bytes"),
+        ));
+    }
+    // chunked body read with deadline checks between chunks, so a peer
+    // that sends headers fast then drips the body still times out
     let mut body = vec![0u8; content_len];
-    r.read_exact(&mut body).context("reading body")?;
+    let mut off = 0usize;
+    while off < content_len {
+        if time_left(deadline).is_zero() {
+            return Err(RequestError::expired(started, "reading body"));
+        }
+        let end = (off + BODY_CHUNK).min(content_len);
+        match r.read_exact(&mut body[off..end]) {
+            Ok(()) => off = end,
+            Err(e) => return Err(RequestError::from_io(e, started, "reading body")),
+        }
+    }
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target, String::new()),
@@ -146,12 +296,13 @@ pub fn write_response(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::io::BufReader;
 
-    fn parse(s: &str) -> Result<Option<Request>> {
-        read_request(&mut BufReader::new(s.as_bytes()))
+    fn parse(s: &str) -> Result<Option<Request>, RequestError> {
+        read_request(&mut BufReader::new(s.as_bytes()), Duration::from_secs(5))
     }
 
     #[test]
@@ -187,6 +338,9 @@ mod tests {
         assert!(parse("GET / HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
         // truncated body
         assert!(parse("POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc").is_err());
+        // none of the above are timeouts
+        let e = parse("GET / SPDY/3\r\n\r\n").unwrap_err();
+        assert!(!e.timeout && e.started);
     }
 
     #[test]
@@ -195,6 +349,21 @@ mod tests {
         assert!(parse(&big).is_err());
         let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
         assert!(parse(&huge).is_err());
+    }
+
+    #[test]
+    fn expired_budget_is_a_started_timeout() {
+        let req = "POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        let e = read_request(&mut BufReader::new(req.as_bytes()), Duration::ZERO)
+            .expect_err("zero budget must expire");
+        assert!(e.timeout, "{:#}", e.err);
+        assert!(e.started);
+    }
+
+    #[test]
+    fn status_text_covers_new_codes() {
+        assert_eq!(status_text(408), "Request Timeout");
+        assert_eq!(status_text(429), "Too Many Requests");
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub enum Route {
     Eval,
     Quantize,
     Reencode,
+    Upload,
     Models,
     Stats,
     /// 404/405 and anything else that never reached a handler.
@@ -29,6 +30,7 @@ impl Route {
             Route::Eval => "eval",
             Route::Quantize => "quantize",
             Route::Reencode => "reencode",
+            Route::Upload => "upload",
             Route::Models => "models",
             Route::Stats => "stats",
             Route::Other => "other",
@@ -36,8 +38,15 @@ impl Route {
     }
 }
 
-const ALL_ROUTES: [Route; 6] =
-    [Route::Eval, Route::Quantize, Route::Reencode, Route::Models, Route::Stats, Route::Other];
+const ALL_ROUTES: [Route; 7] = [
+    Route::Eval,
+    Route::Quantize,
+    Route::Reencode,
+    Route::Upload,
+    Route::Models,
+    Route::Stats,
+    Route::Other,
+];
 
 #[derive(Debug, Default)]
 pub struct RouteStats {
@@ -53,11 +62,17 @@ pub struct Metrics {
     eval: RouteStats,
     quantize: RouteStats,
     reencode: RouteStats,
+    upload: RouteStats,
     models: RouteStats,
     stats: RouteStats,
     other: RouteStats,
     /// 429s from the admission queue.
     pub rejected: AtomicU64,
+    /// 429s from the per-model admission quota specifically.
+    pub rejected_quota: AtomicU64,
+    /// Requests that blew their read/write deadline (408s and idle
+    /// keep-alive closes after a started request).
+    pub timeouts: AtomicU64,
     /// Macro-batches executed by the batcher.
     pub batches: AtomicU64,
     /// Eval requests that rode those macro-batches.
@@ -79,6 +94,7 @@ impl Metrics {
             Route::Eval => &self.eval,
             Route::Quantize => &self.quantize,
             Route::Reencode => &self.reencode,
+            Route::Upload => &self.upload,
             Route::Models => &self.models,
             Route::Stats => &self.stats,
             Route::Other => &self.other,
@@ -146,6 +162,8 @@ impl Metrics {
             ),
             ("swaps", Json::num(self.swaps.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("rejected_quota", Json::num(self.rejected_quota.load(Ordering::Relaxed) as f64)),
+            ("timeouts", Json::num(self.timeouts.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -185,9 +203,11 @@ mod tests {
         m.observe(Route::Stats, 200, 10);
         let j = m.to_json();
         let s = j.to_string();
-        for name in ["eval", "quantize", "reencode", "models", "stats", "other"] {
+        for name in ["eval", "quantize", "reencode", "upload", "models", "stats", "other"] {
             assert!(s.contains(&format!("\"{name}\"")), "{s}");
         }
         assert_eq!(j.get_path("routes.stats.requests").as_f64(), Some(1.0));
+        assert_eq!(j.get_path("timeouts").as_f64(), Some(0.0));
+        assert_eq!(j.get_path("rejected_quota").as_f64(), Some(0.0));
     }
 }

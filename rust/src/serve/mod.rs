@@ -21,6 +21,19 @@
 //! `/v1/models/{id}/reencode` refits the quantizer on the pristine
 //! fp32 weights and atomically swaps the served snapshot (no
 //! downtime: in-flight batches keep their `Arc`).
+//!
+//! Robustness (DESIGN.md §10): every request runs under an absolute
+//! read/write deadline ([`http::DeadlineReader`] — slowloris guard),
+//! one model cannot monopolize the admission queue
+//! (`ServeConfig::max_per_model`), and shutdown drains the batcher for
+//! at most `ServeConfig::drain_timeout` before abandoning it — a
+//! wedged backend cannot hold `SIGTERM` hostage.
+
+// The serving layer must degrade, not die: a panic in one worker takes
+// its connection, a panic while holding a lock must not poison every
+// later request. Bare unwrap/expect are banned here; the few justified
+// ones carry a local `#[allow]` with a reason.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod handlers;
 pub mod http;
@@ -34,7 +47,7 @@ use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -42,16 +55,13 @@ use anyhow::{Context, Result};
 use crate::runtime::client::{Backend, BackendError, Runtime};
 use crate::runtime::executable::{BatchInput, ModelSession};
 use crate::runtime::manifest::Manifest;
+use crate::util::fault;
 use crate::{log_error, log_info, log_warn};
 
-use http::Response;
+use http::{DeadlineReader, Response};
 use metrics::Metrics;
 use queue::{AdmissionQueue, EvalJob, JobInput, JobOutcome};
 use registry::Registry;
-
-/// Per-connection socket read/write timeout: bounds slow-loris peers
-/// and how long shutdown waits on an idle keep-alive connection.
-const IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -62,11 +72,22 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Admission-queue bound; pushes beyond it get 429.
     pub max_queue: usize,
+    /// Per-model admission quota (0 ⇒ disabled): one hot model cannot
+    /// occupy more than this many queued jobs.
+    pub max_per_model: usize,
     /// HTTP worker threads — one live connection each, so keep this at
     /// or above the expected concurrent-client count.
     pub http_threads: usize,
     /// How long the batcher waits for stragglers once a job is ready.
     pub linger: Duration,
+    /// Whole-request read/write deadline and idle keep-alive cap.
+    pub io_timeout: Duration,
+    /// How long graceful shutdown waits for the batcher to drain
+    /// before abandoning it (bounds `run_until`'s exit latency).
+    pub drain_timeout: Duration,
+    /// Requests served per connection before keep-alive is refused
+    /// (bounds how long one peer can pin a worker).
+    pub max_conn_requests: usize,
     /// Backend override; `None` ⇒ `QN_BACKEND` (interp by default).
     pub backend: Option<Backend>,
     /// Re-run every coalesced shard solo and assert bit-identity.
@@ -80,8 +101,12 @@ impl Default for ServeConfig {
             threads: 0,
             max_batch: 8,
             max_queue: 64,
+            max_per_model: 0,
             http_threads: 8,
             linger: Duration::from_millis(2),
+            io_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(30),
+            max_conn_requests: 1000,
             backend: None,
             selfcheck: false,
         }
@@ -96,17 +121,23 @@ pub struct ServerState {
     pub metrics: Metrics,
     pub queue: AdmissionQueue,
     pub shutdown: AtomicBool,
+    /// Set when shutdown gave up waiting on a wedged batcher; eval
+    /// handlers still blocked on rendezvous channels answer 503.
+    pub abandoned: AtomicBool,
 }
 
 pub struct Server {
     addr: SocketAddr,
     state: Arc<ServerState>,
+    /// Kept apart from `threads` so shutdown can bound its drain.
+    batcher: Option<std::thread::JoinHandle<()>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 // Service threads are detached-by-name rather than scoped: they never
 // produce result bits (the determinism-lint's concern), and
-// `Server::stop` joins every one of them.
+// `Server::stop` joins every one of them (or deliberately abandons a
+// wedged batcher after `drain_timeout`).
 fn spawn_named(
     name: &str,
     f: impl FnOnce() + Send + 'static,
@@ -132,7 +163,7 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let http_threads = cfg.http_threads.max(1);
-        let queue = AdmissionQueue::new(cfg.max_queue);
+        let queue = AdmissionQueue::with_quota(cfg.max_queue, cfg.max_per_model);
         let state = Arc::new(ServerState {
             cfg,
             manifest,
@@ -140,12 +171,13 @@ impl Server {
             metrics: Metrics::default(),
             queue,
             shutdown: AtomicBool::new(false),
+            abandoned: AtomicBool::new(false),
         });
-        let mut threads = Vec::with_capacity(http_threads + 2);
-        {
+        let batcher = {
             let st = state.clone();
-            threads.push(spawn_named("batcher", move || batcher_main(&st))?);
-        }
+            Some(spawn_named("batcher", move || batcher_main(&st))?)
+        };
+        let mut threads = Vec::with_capacity(http_threads + 1);
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         for i in 0..http_threads {
@@ -157,7 +189,7 @@ impl Server {
             let st = state.clone();
             threads.push(spawn_named("acceptor", move || acceptor_main(&st, listener, conn_tx))?);
         }
-        Ok(Server { addr, state, threads })
+        Ok(Server { addr, state, batcher, threads })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -165,26 +197,51 @@ impl Server {
     }
 
     fn stop(&mut self) {
-        if self.threads.is_empty() {
+        if self.batcher.is_none() && self.threads.is_empty() {
             return;
         }
         self.state.shutdown.store(true, Ordering::Relaxed);
         self.state.queue.close();
         // wake the blocking accept so the acceptor sees the flag
         let _ = TcpStream::connect(self.addr);
+        // bounded drain: the batcher normally finishes the queued work
+        // within milliseconds of `close()`, but a wedged backend must
+        // not hold shutdown hostage — after `drain_timeout` the handle
+        // is dropped (thread detached) and blocked handlers answer 503
+        if let Some(b) = self.batcher.take() {
+            let deadline = http::deadline_after(self.state.cfg.drain_timeout);
+            loop {
+                if b.is_finished() {
+                    let _ = b.join();
+                    break;
+                }
+                if http::time_left(deadline).is_zero() {
+                    self.state.abandoned.store(true, Ordering::Relaxed);
+                    log_warn!(
+                        "qn serve: batcher still draining after {:?}; abandoning it",
+                        self.state.cfg.drain_timeout
+                    );
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 
-    /// Graceful shutdown: stop admitting, drain the queue, join all
-    /// service threads.
+    /// Graceful shutdown: stop admitting, drain the queue (bounded by
+    /// `drain_timeout`), join all service threads.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     /// Block until the server is stopped externally (CLI mode).
     pub fn wait(mut self) {
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -209,7 +266,9 @@ pub fn run(artifacts: &Path, cfg: ServeConfig) -> Result<()> {
 /// CLI entry with graceful shutdown: serve until `stop` is raised (the
 /// binary flips it from its SIGINT/SIGTERM handler), then stop
 /// admitting work (new jobs get 503), drain queued jobs through the
-/// batcher, and join every service thread before returning.
+/// batcher for at most `cfg.drain_timeout`, and join every service
+/// thread before returning. Exit latency is bounded even when the
+/// backend wedges mid-batch.
 pub fn run_until(artifacts: &Path, cfg: ServeConfig, stop: &AtomicBool) -> Result<()> {
     let server = Server::start(artifacts, cfg)?;
     let ids = server.state.registry.ids();
@@ -230,6 +289,11 @@ fn acceptor_main(state: &ServerState, listener: TcpListener, tx: mpsc::Sender<Tc
         if state.shutdown.load(Ordering::Relaxed) {
             break;
         }
+        // fault point: drop the connection on the floor before any
+        // worker sees it (client observes a reset / empty reply)
+        if fault::check("serve.accept").is_err() {
+            continue;
+        }
         match stream {
             Ok(s) => {
                 if tx.send(s).is_err() {
@@ -245,8 +309,10 @@ fn acceptor_main(state: &ServerState, listener: TcpListener, tx: mpsc::Sender<Tc
 fn http_worker(state: &ServerState, rx: &Mutex<mpsc::Receiver<TcpStream>>) {
     loop {
         // holding the lock while blocked in recv() is fine: connection
-        // handling happens outside it, so workers still run in parallel
-        let stream = match rx.lock().unwrap().recv() {
+        // handling happens outside it, so workers still run in parallel.
+        // A worker that panicked mid-recv cannot leave the receiver torn
+        // (mpsc is internally synchronized) — recover, don't poison.
+        let stream = match rx.lock().unwrap_or_else(PoisonError::into_inner).recv() {
             Ok(s) => s,
             Err(_) => return, // acceptor gone ⇒ shutdown
         };
@@ -255,46 +321,59 @@ fn http_worker(state: &ServerState, rx: &Mutex<mpsc::Receiver<TcpStream>>) {
 }
 
 fn handle_conn(state: &ServerState, stream: TcpStream) {
+    let io = state.cfg.io_timeout;
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(io));
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
-    let mut reader = BufReader::new(read_half);
+    let mut reader = BufReader::new(DeadlineReader::new(read_half, io));
     let mut writer = BufWriter::new(stream);
+    let max_requests = state.cfg.max_conn_requests.max(1);
+    let mut served = 0usize;
     loop {
         if state.shutdown.load(Ordering::Relaxed) {
             break;
         }
-        let req = match http::read_request(&mut reader) {
+        // each keep-alive request gets a fresh whole-request deadline;
+        // this doubles as the idle keep-alive cap
+        reader.get_mut().arm(io);
+        let req = match http::read_request(&mut reader, io) {
             Ok(Some(r)) => r,
             Ok(None) => break, // clean close
             Err(e) => {
-                // idle keep-alive timeouts close silently; actual
-                // protocol garbage gets a 400 first
-                let idle = e
-                    .downcast_ref::<std::io::Error>()
-                    .map(|io| {
-                        matches!(
-                            io.kind(),
-                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                        )
-                    })
-                    .unwrap_or(false);
-                if !idle {
-                    let resp = Response::error(400, &format!("{e:#}"));
+                if e.timeout {
+                    if e.started {
+                        // the peer began a request and stalled: 408
+                        state.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                        let resp =
+                            Response::error(408, "request deadline exceeded");
+                        let _ = http::write_response(&mut writer, &resp, false);
+                    }
+                    // idle keep-alive expiry closes silently
+                } else {
+                    let resp = Response::error(400, &format!("{:#}", e.err));
                     let _ = http::write_response(&mut writer, &resp, false);
                 }
                 break;
             }
         };
+        // fault point: connection dies right after the request is read
+        // (tests assert the worker survives and serves the next peer)
+        if fault::check("serve.read").is_err() {
+            break;
+        }
         // request latency metric: timing only, never result bits
         #[allow(clippy::disallowed_methods)]
         let t0 = std::time::Instant::now();
-        let keep = req.keep_alive;
+        served += 1;
+        let keep = req.keep_alive && served < max_requests;
         let (route, resp) = handlers::dispatch(state, &req);
         state.metrics.observe(route, resp.status, t0.elapsed().as_nanos() as u64);
+        // fault point: connection dies before the response goes out
+        if fault::check("serve.write").is_err() {
+            break;
+        }
         if http::write_response(&mut writer, &resp, keep).is_err() || !keep {
             break;
         }
@@ -350,6 +429,14 @@ fn serve_batch<'rt>(
     sessions: &mut BTreeMap<String, Slot<'rt>>,
     batch: Vec<EvalJob>,
 ) {
+    // fault point: a wedged (`hang`) or failing (`err`) backend — the
+    // drain-timeout and 503-path tests drive shutdown through this
+    if let Err(e) = fault::check("serve.batch") {
+        for job in batch {
+            let _ = job.resp.send(JobOutcome::Failed { status: 503, msg: e.to_string() });
+        }
+        return;
+    }
     let m = batch.len();
     for job in &batch {
         state.metrics.queue_wait_ns.record(job.enqueued_at.elapsed().as_nanos() as u64);

@@ -11,12 +11,14 @@
 //! queue is free to group greedily.
 //!
 //! Backpressure: `push` fails fast when `max_queue` jobs are already
-//! waiting (the handler answers 429 + `Retry-After`) instead of letting
-//! latency grow without bound. `close` wakes the batcher; it drains
-//! what's left and then gets `None`.
+//! waiting, or when one model has `max_per_model` jobs queued (the
+//! per-model admission quota: one hot model cannot starve the rest of
+//! the fleet) — the handler answers 429 + `Retry-After` instead of
+//! letting latency grow without bound. `close` wakes the batcher; it
+//! drains what's left and then gets `None`.
 
-use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 /// Eval input matching [`crate::runtime::executable::BatchInput`]:
@@ -44,46 +46,85 @@ pub struct EvalJob {
     pub enqueued_at: std::time::Instant,
 }
 
-/// Why a push was refused (maps to 429 / 503 respectively).
+/// Why a push was refused (maps to 429 / 429 / 503 respectively).
 #[derive(Debug)]
 pub enum PushError {
     Full(EvalJob),
+    /// The per-model admission quota is exhausted (queue has room, but
+    /// this model already holds its share).
+    Quota(EvalJob),
     Closed(EvalJob),
 }
 
 struct Inner {
     q: VecDeque<EvalJob>,
+    /// queued-job count per model (quota accounting)
+    per_model: BTreeMap<String, usize>,
     closed: bool,
+}
+
+fn dec(map: &mut BTreeMap<String, usize>, model: &str) {
+    if let Some(c) = map.get_mut(model) {
+        *c = c.saturating_sub(1);
+        if *c == 0 {
+            map.remove(model);
+        }
+    }
 }
 
 pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     not_empty: Condvar,
     max_queue: usize,
+    /// 0 = quota disabled
+    max_per_model: usize,
 }
 
 impl AdmissionQueue {
     pub fn new(max_queue: usize) -> AdmissionQueue {
+        AdmissionQueue::with_quota(max_queue, 0)
+    }
+
+    pub fn with_quota(max_queue: usize, max_per_model: usize) -> AdmissionQueue {
         AdmissionQueue {
-            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                per_model: BTreeMap::new(),
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             max_queue: max_queue.max(1),
+            max_per_model,
         }
     }
 
-    pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+    /// Queue state is plain data: a panicked holder cannot leave it
+    /// logically torn, so recover the guard rather than poisoning every
+    /// later request.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// Admit a job, or hand it back if the queue is full / closed.
+    pub fn depth(&self) -> usize {
+        self.lock().q.len()
+    }
+
+    /// Admit a job, or hand it back if the queue is full, the model's
+    /// quota is spent, or the queue is closed.
     pub fn push(&self, job: EvalJob) -> Result<(), PushError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         if inner.closed {
             return Err(PushError::Closed(job));
         }
         if inner.q.len() >= self.max_queue {
             return Err(PushError::Full(job));
         }
+        if self.max_per_model > 0
+            && inner.per_model.get(&job.model).copied().unwrap_or(0) >= self.max_per_model
+        {
+            return Err(PushError::Quota(job));
+        }
+        *inner.per_model.entry(job.model.clone()).or_insert(0) += 1;
         inner.q.push_back(job);
         self.not_empty.notify_one();
         Ok(())
@@ -91,7 +132,7 @@ impl AdmissionQueue {
 
     /// Stop admitting; wake the batcher so it can drain and exit.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.lock().closed = true;
         self.not_empty.notify_all();
     }
 
@@ -105,53 +146,70 @@ impl AdmissionQueue {
     /// queue never shrinks under us between the waits below).
     pub fn pop_batch(&self, max_batch: usize, linger: Duration) -> Option<Vec<EvalJob>> {
         let max_batch = max_batch.max(1);
-        let mut inner = self.inner.lock().unwrap();
-        while inner.q.is_empty() {
-            if inner.closed {
-                return None;
-            }
-            inner = self.not_empty.wait(inner).unwrap();
-        }
-        if !linger.is_zero() && !inner.closed {
-            // deadline math is scheduling-only and never reaches result
-            // bits, hence the determinism-lint exemption
-            #[allow(clippy::disallowed_methods)]
-            let deadline = std::time::Instant::now() + linger;
-            loop {
-                let head = &inner.q.front().expect("queue non-empty").model;
-                let ready = inner.q.iter().filter(|j| &j.model == head).count();
-                if ready >= max_batch || inner.closed {
-                    break;
+        let mut inner = self.lock();
+        loop {
+            while inner.q.is_empty() {
+                if inner.closed {
+                    return None;
                 }
+                inner = self
+                    .not_empty
+                    .wait(inner)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            if !linger.is_zero() && !inner.closed {
+                // deadline math is scheduling-only and never reaches
+                // result bits, hence the determinism-lint exemption
                 #[allow(clippy::disallowed_methods)]
-                let now = std::time::Instant::now();
-                let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
-                else {
-                    break;
-                };
-                let (guard, timeout) = self.not_empty.wait_timeout(inner, left).unwrap();
-                inner = guard;
-                if timeout.timed_out() {
-                    break;
+                let deadline = std::time::Instant::now() + linger;
+                loop {
+                    let Some(front) = inner.q.front() else { break };
+                    let head = front.model.clone();
+                    let ready = inner.q.iter().filter(|j| j.model == head).count();
+                    if ready >= max_batch || inner.closed {
+                        break;
+                    }
+                    #[allow(clippy::disallowed_methods)]
+                    let now = std::time::Instant::now();
+                    let Some(left) =
+                        deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+                    else {
+                        break;
+                    };
+                    let (guard, timeout) = self
+                        .not_empty
+                        .wait_timeout(inner, left)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    inner = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
                 }
             }
-        }
-        let head = inner.q.front().expect("queue non-empty").model.clone();
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(inner.q.len());
-        while let Some(job) = inner.q.pop_front() {
-            if batch.len() < max_batch && job.model == head {
-                batch.push(job);
-            } else {
-                rest.push_back(job);
+            // single consumer ⇒ still non-empty here; if that invariant
+            // is ever violated, loop back to the wait rather than panic
+            let Some(front) = inner.q.front() else { continue };
+            let head = front.model.clone();
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::with_capacity(inner.q.len());
+            while let Some(job) = inner.q.pop_front() {
+                if batch.len() < max_batch && job.model == head {
+                    batch.push(job);
+                } else {
+                    rest.push_back(job);
+                }
             }
+            inner.q = rest;
+            for job in &batch {
+                dec(&mut inner.per_model, &job.model);
+            }
+            return Some(batch);
         }
-        inner.q = rest;
-        Some(batch)
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::mpsc::sync_channel;
@@ -211,6 +269,32 @@ mod tests {
         assert_eq!(q.depth(), 2);
         let _ = q.pop_batch(8, Duration::ZERO).unwrap();
         q.push(job("a", 3)).unwrap();
+    }
+
+    #[test]
+    fn per_model_quota_rejects_only_the_hot_model() {
+        let q = AdmissionQueue::with_quota(16, 2);
+        q.push(job("hot", 0)).unwrap();
+        q.push(job("hot", 1)).unwrap();
+        match q.push(job("hot", 2)) {
+            Err(PushError::Quota(j)) => assert_eq!(j.targets[0], 2),
+            other => panic!("expected Quota, got {other:?}"),
+        }
+        // other models still admitted: the queue itself has room
+        q.push(job("cold", 3)).unwrap();
+        // draining the hot model frees its quota
+        let b = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(tags(&b), vec![0, 1]);
+        q.push(job("hot", 4)).unwrap();
+    }
+
+    #[test]
+    fn quota_zero_means_disabled() {
+        let q = AdmissionQueue::with_quota(4, 0);
+        for i in 0..4 {
+            q.push(job("a", i)).unwrap();
+        }
+        assert!(matches!(q.push(job("a", 9)), Err(PushError::Full(_))));
     }
 
     #[test]

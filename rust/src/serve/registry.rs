@@ -14,7 +14,7 @@
 //! race-free without generation counters.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, PoisonError, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -55,13 +55,17 @@ impl ServedModel {
     }
 
     /// The current snapshot (pointer clone; holds no lock afterwards).
+    ///
+    /// Snapshots are published whole (one `Arc` store under the lock),
+    /// so a panicked writer cannot leave torn state — recover from
+    /// poisoning instead of propagating it to every later request.
     pub fn snapshot(&self) -> Arc<ServedState> {
-        self.state.read().unwrap().clone()
+        self.state.read().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Atomically publish a new snapshot; returns its version.
     pub fn swap(&self, params: ParamStore, scheme: String, bytes: u64, sq_error: f64) -> u64 {
-        let mut guard = self.state.write().unwrap();
+        let mut guard = self.state.write().unwrap_or_else(PoisonError::into_inner);
         let version = guard.version + 1;
         *guard = Arc::new(ServedState {
             params: Arc::new(params),
@@ -110,15 +114,15 @@ impl Registry {
     }
 
     pub fn get(&self, id: &str) -> Option<Arc<ServedModel>> {
-        self.models.read().unwrap().get(id).cloned()
+        self.models.read().unwrap_or_else(PoisonError::into_inner).get(id).cloned()
     }
 
     pub fn ids(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        self.models.read().unwrap_or_else(PoisonError::into_inner).keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        self.models.read().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -129,7 +133,7 @@ impl Registry {
     /// and insert are one critical section, so two concurrent uploads
     /// of the same id cannot both win.
     pub fn insert_new(&self, id: &str, model: ServedModel) -> Result<(), ()> {
-        let mut models = self.models.write().unwrap();
+        let mut models = self.models.write().unwrap_or_else(PoisonError::into_inner);
         if models.contains_key(id) {
             return Err(());
         }

@@ -1,6 +1,6 @@
 //! URL routing for the `qn serve` API surface.
 //!
-//! Five routes, one dynamic segment — a hand-matched prefix tree beats
+//! Seven routes, one dynamic segment — a hand-matched prefix tree beats
 //! a table-driven router at this size and keeps 405-vs-404 semantics
 //! explicit (wrong method on a known path is 405, unknown path is 404).
 
@@ -13,6 +13,8 @@ pub enum RouteMatch {
     Quantize,
     /// `POST /v1/models/{id}/reencode`
     Reencode(String),
+    /// `POST /v1/models/{id}/params` — checksum-validated weight upload
+    Upload(String),
     /// `GET /v1/models`
     Models,
     /// `GET /v1/models/{id}`
@@ -37,6 +39,10 @@ pub fn route(method: &str, path: &str) -> Result<RouteMatch, u16> {
                 if let Some(id) = rest.strip_suffix("/reencode") {
                     if !id.is_empty() && !id.contains('/') {
                         return only(post, RouteMatch::Reencode(id.to_string()));
+                    }
+                } else if let Some(id) = rest.strip_suffix("/params") {
+                    if !id.is_empty() && !id.contains('/') {
+                        return only(post, RouteMatch::Upload(id.to_string()));
                     }
                 } else if !rest.is_empty() && !rest.contains('/') {
                     return only(get, RouteMatch::ModelInfo(rest.to_string()));
@@ -66,6 +72,10 @@ mod tests {
             route("POST", "/v1/models/lm_tiny@pq:k=8/reencode"),
             Ok(RouteMatch::Reencode("lm_tiny@pq:k=8".into()))
         );
+        assert_eq!(
+            route("POST", "/v1/models/lm_tiny/params"),
+            Ok(RouteMatch::Upload("lm_tiny".into()))
+        );
     }
 
     #[test]
@@ -74,6 +84,8 @@ mod tests {
         assert_eq!(route("POST", "/v1/models"), Err(405));
         assert_eq!(route("POST", "/v1/models/x"), Err(405));
         assert_eq!(route("GET", "/v1/models/x/reencode"), Err(405));
+        assert_eq!(route("GET", "/v1/models/x/params"), Err(405));
+        assert_eq!(route("POST", "/v1/models//params"), Err(404));
         assert_eq!(route("GET", "/"), Err(404));
         assert_eq!(route("GET", "/v1/models/"), Err(404));
         assert_eq!(route("POST", "/v1/models//reencode"), Err(404));

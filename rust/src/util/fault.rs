@@ -1,0 +1,333 @@
+//! Deterministic fault injection (DESIGN.md §10).
+//!
+//! Crash-safety claims are only as good as the failures exercised, so
+//! every fragile seam — checkpoint I/O, artifact loading, the serve
+//! accept/read/write/batch paths — calls a *named fault point* here.
+//! In production the registry is empty and a check is one relaxed
+//! atomic-free read of an unset `RwLock` option; under test the
+//! `QN_FAULT` environment variable (or [`install`] in-process) arms
+//! points with a spec:
+//!
+//! ```text
+//!   QN_FAULT="point=kind[:arg][@N[+]][~permille:seed];point2=..."
+//! ```
+//!
+//! Kinds:
+//! - `err`        — the call fails with an injected `io::Error`
+//! - `short`      — [`write_all`] writes only half the bytes, then fails
+//!                  (a torn write / full-disk simulation)
+//! - `kill`       — the process exits immediately with code 137
+//!                  (SIGKILL-alike: no destructors, no flushes)
+//! - `hang:<ms>`  — the call sleeps `<ms>` milliseconds, then succeeds
+//!                  (a wedged backend / stuck peer simulation)
+//!
+//! Triggers (default: every hit):
+//! - `@N`  — only the N-th hit (1-based) fires
+//! - `@N+` — the N-th and every later hit fire
+//! - `~permille:seed` — each hit fires with probability permille/1000,
+//!   decided by a PRNG keyed on (seed, point name, hit index): the same
+//!   spec replays the same fault schedule bit-for-bit on every run.
+//!
+//! Point names are dotted `layer.action` (e.g. `ckpt.write`,
+//! `serve.batch`); the full inventory lives in DESIGN.md §10.
+
+use std::collections::BTreeMap;
+use std::io::{Error, ErrorKind, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, PoisonError, RwLock};
+use std::time::Duration;
+
+use crate::util::hash::fnv1a64;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Kind {
+    Err,
+    Short,
+    Kill,
+    Hang(u64),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum When {
+    Always,
+    Nth(u64),
+    From(u64),
+    Permille { permille: u32, seed: u64 },
+}
+
+#[derive(Debug)]
+struct Point {
+    kind: Kind,
+    when: When,
+    hits: AtomicU64,
+}
+
+/// A parsed fault plan: named points with kinds and triggers.
+#[derive(Debug, Default)]
+pub struct Faults {
+    points: BTreeMap<String, Point>,
+}
+
+impl Faults {
+    /// Parse a `QN_FAULT` spec (grammar in the module docs).
+    pub fn parse(spec: &str) -> Result<Faults, String> {
+        let mut points = BTreeMap::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (name, rhs) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause '{clause}' is missing '='"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("fault clause '{clause}' has an empty point name"));
+            }
+            // split the trigger suffix off the kind
+            let (kind_s, when) = if let Some((k, t)) = rhs.split_once('@') {
+                let (n_s, from) = match t.strip_suffix('+') {
+                    Some(n) => (n, true),
+                    None => (t, false),
+                };
+                let n: u64 = n_s
+                    .parse()
+                    .map_err(|_| format!("'{clause}': bad hit index '{n_s}'"))?;
+                if n == 0 {
+                    return Err(format!("'{clause}': hit indices are 1-based"));
+                }
+                (k, if from { When::From(n) } else { When::Nth(n) })
+            } else if let Some((k, t)) = rhs.split_once('~') {
+                let (p_s, s_s) = t
+                    .split_once(':')
+                    .ok_or_else(|| format!("'{clause}': want ~permille:seed"))?;
+                let permille: u32 = p_s
+                    .parse()
+                    .ok()
+                    .filter(|&p| p <= 1000)
+                    .ok_or_else(|| format!("'{clause}': bad permille '{p_s}'"))?;
+                let seed: u64 =
+                    s_s.parse().map_err(|_| format!("'{clause}': bad seed '{s_s}'"))?;
+                (k, When::Permille { permille, seed })
+            } else {
+                (rhs, When::Always)
+            };
+            let kind = match kind_s.trim() {
+                "err" => Kind::Err,
+                "short" => Kind::Short,
+                "kill" => Kind::Kill,
+                other => match other.strip_prefix("hang:") {
+                    Some(ms) => Kind::Hang(
+                        ms.parse()
+                            .map_err(|_| format!("'{clause}': bad hang duration '{ms}'"))?,
+                    ),
+                    None => {
+                        return Err(format!(
+                            "'{clause}': unknown kind '{other}' (err|short|kill|hang:<ms>)"
+                        ))
+                    }
+                },
+            };
+            points.insert(name.to_string(), Point { kind, when, hits: AtomicU64::new(0) });
+        }
+        Ok(Faults { points })
+    }
+
+    /// Record a hit at `name`; returns the fault to inject, if any.
+    fn fire(&self, name: &str) -> Option<Kind> {
+        let p = self.points.get(name)?;
+        let n = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match p.when {
+            When::Always => true,
+            When::Nth(k) => n == k,
+            When::From(k) => n >= k,
+            When::Permille { permille, seed } => {
+                // keyed on (seed, point, hit index): deterministic per
+                // hit, independent of thread scheduling
+                let mut rng = Pcg::new(seed ^ fnv1a64(name.as_bytes()) ^ n);
+                rng.below(1000) < permille
+            }
+        };
+        hit.then(|| p.kind.clone())
+    }
+}
+
+/// Process-global registry. `None` (the overwhelmingly common case)
+/// means fault injection is disabled.
+fn registry() -> &'static RwLock<Option<Arc<Faults>>> {
+    static REG: OnceLock<RwLock<Option<Arc<Faults>>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let initial = std::env::var("QN_FAULT").ok().and_then(|spec| {
+            if spec.trim().is_empty() {
+                return None;
+            }
+            match Faults::parse(&spec) {
+                Ok(f) => Some(Arc::new(f)),
+                Err(e) => {
+                    crate::log_warn!("QN_FAULT ignored: {e}");
+                    None
+                }
+            }
+        });
+        RwLock::new(initial)
+    })
+}
+
+fn current() -> Option<Arc<Faults>> {
+    registry().read().unwrap_or_else(PoisonError::into_inner).clone()
+}
+
+/// Arm a fault plan in-process (tests). Replaces any active plan,
+/// including one loaded from `QN_FAULT`. Hit counters start at zero.
+pub fn install(spec: &str) -> Result<(), String> {
+    let f = Arc::new(Faults::parse(spec)?);
+    *registry().write().unwrap_or_else(PoisonError::into_inner) = Some(f);
+    Ok(())
+}
+
+/// Disarm all fault points.
+pub fn clear() {
+    *registry().write().unwrap_or_else(PoisonError::into_inner) = None;
+}
+
+/// True when any fault plan is armed (cheap gate for hot paths).
+pub fn active() -> bool {
+    registry().read().unwrap_or_else(PoisonError::into_inner).is_some()
+}
+
+fn injected(name: &str) -> Error {
+    Error::new(ErrorKind::Other, format!("injected fault at '{name}'"))
+}
+
+/// Pass through the named fault point. `Ok(())` unless an armed fault
+/// fires: `err`/`short` return an injected `io::Error`, `hang` sleeps
+/// first, `kill` exits the process (no unwinding — a crash, not an
+/// error path).
+pub fn check(name: &str) -> std::io::Result<()> {
+    let Some(f) = current() else {
+        return Ok(());
+    };
+    match f.fire(name) {
+        None => Ok(()),
+        Some(Kind::Err) | Some(Kind::Short) => Err(injected(name)),
+        Some(Kind::Hang(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(Kind::Kill) => die(name),
+    }
+}
+
+fn die(name: &str) -> ! {
+    // stderr directly: the logger may hold locks we must not touch in a
+    // simulated crash
+    eprintln!("qn: injected kill at fault point '{name}'");
+    std::process::exit(137);
+}
+
+/// Fault-aware `write_all`: `short` writes the first half of `bytes`
+/// and then fails (the torn-write case atomic protocols must survive);
+/// `kill` writes the first half and exits; `err` fails before writing
+/// anything; `hang` sleeps, then writes normally.
+pub fn write_all(name: &str, w: &mut impl Write, bytes: &[u8]) -> std::io::Result<()> {
+    let fired = current().and_then(|f| f.fire(name));
+    match fired {
+        None => w.write_all(bytes),
+        Some(Kind::Err) => Err(injected(name)),
+        Some(Kind::Short) => {
+            w.write_all(&bytes[..bytes.len() / 2])?;
+            let _ = w.flush();
+            Err(injected(name))
+        }
+        Some(Kind::Kill) => {
+            let _ = w.write_all(&bytes[..bytes.len() / 2]);
+            let _ = w.flush();
+            die(name)
+        }
+        Some(Kind::Hang(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            w.write_all(bytes)
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; unit tests here only exercise the
+    // pure parser/fire layer so they cannot race integration tests that
+    // install/clear plans (those live in their own test binaries).
+
+    #[test]
+    fn parse_kinds_and_triggers() {
+        let f = Faults::parse("a.b=err;c.d=short@2;e.f=kill@3+;g.h=hang:50").unwrap();
+        assert_eq!(f.points.len(), 4);
+        assert_eq!(f.points["a.b"].kind, Kind::Err);
+        assert_eq!(f.points["a.b"].when, When::Always);
+        assert_eq!(f.points["c.d"].when, When::Nth(2));
+        assert_eq!(f.points["e.f"].when, When::From(3));
+        assert_eq!(f.points["g.h"].kind, Kind::Hang(50));
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(Faults::parse("noequals").is_err());
+        assert!(Faults::parse("=err").is_err());
+        assert!(Faults::parse("a=zap").is_err());
+        assert!(Faults::parse("a=err@0").is_err());
+        assert!(Faults::parse("a=err@x").is_err());
+        assert!(Faults::parse("a=hang:xs").is_err());
+        assert!(Faults::parse("a=err~1001:3").is_err());
+        assert!(Faults::parse("a=err~5").is_err()); // missing :seed
+        assert!(Faults::parse("").unwrap().points.is_empty());
+        assert!(Faults::parse(" ; ").unwrap().points.is_empty());
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let f = Faults::parse("p=err@3").unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| f.fire("p").is_some()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+    }
+
+    #[test]
+    fn from_fires_onward_and_unknown_points_never_fire() {
+        let f = Faults::parse("p=err@2+").unwrap();
+        let fired: Vec<bool> = (0..4).map(|_| f.fire("p").is_some()).collect();
+        assert_eq!(fired, vec![false, true, true, true]);
+        assert!(f.fire("other").is_none());
+    }
+
+    #[test]
+    fn permille_is_deterministic_and_roughly_calibrated() {
+        let run = || {
+            let f = Faults::parse("p=err~250:42").unwrap();
+            (0..2000).map(|_| f.fire("p").is_some()).collect::<Vec<bool>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same spec must replay the same schedule");
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!((300..700).contains(&hits), "~25% of 2000, got {hits}");
+    }
+
+    #[test]
+    fn short_write_is_torn_then_fails() {
+        let f = Faults::parse("w=short").unwrap();
+        // drive write_all's logic through a local plan
+        let mut out: Vec<u8> = Vec::new();
+        let bytes = b"0123456789";
+        let r = match f.fire("w") {
+            Some(Kind::Short) => {
+                out.extend_from_slice(&bytes[..bytes.len() / 2]);
+                Err(injected("w"))
+            }
+            _ => panic!("short must fire"),
+        };
+        assert!(r.is_err());
+        assert_eq!(out, b"01234");
+    }
+}

@@ -1,0 +1,108 @@
+//! FNV-1a 64-bit content hashing for artifact integrity.
+//!
+//! Used by the QNC1 checkpoint trailer, the `LATEST` last-good pointer
+//! and checksum-validated serve uploads. FNV-1a is not cryptographic —
+//! it guards against torn writes and bit rot, not adversaries — but it
+//! detects every single-bit flip: both the xor and the multiply by an
+//! odd prime are bijections on u64, so two byte streams that differ
+//! anywhere keep distinct running states (mirror-validated empirically
+//! in `tools/qnsim/ckpt_mirror.py`).
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Streaming FNV-1a (hash large payloads without concatenating).
+#[derive(Debug, Clone)]
+pub struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    pub fn new() -> Fnv1a64 {
+        Fnv1a64(FNV_OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Lower-case 16-digit hex (the on-disk/manifest encoding of a hash —
+/// `util::json` numbers are f64 and cannot carry a full u64).
+pub fn to_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Parse a hex string as written by [`to_hex`] (leading zeros optional).
+pub fn from_hex(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"the quick brown fox";
+        let mut h = Fnv1a64::new();
+        h.update(&data[..7]);
+        h.update(&data[7..]);
+        assert_eq!(h.finish(), fnv1a64(data));
+    }
+
+    #[test]
+    fn single_bit_flips_always_detected() {
+        let base = b"QNC1 checkpoint payload 0123456789".to_vec();
+        let want = fnv1a64(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut m = base.clone();
+                m[i] ^= 1 << bit;
+                assert_ne!(fnv1a64(&m), want, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for x in [0u64, 1, 0xdead_beef, u64::MAX, 0x0123_4567_89ab_cdef] {
+            assert_eq!(from_hex(&to_hex(x)), Some(x));
+        }
+        assert_eq!(from_hex(""), None);
+        assert_eq!(from_hex("zz"), None);
+        assert_eq!(from_hex("00000000000000000"), None); // 17 digits
+    }
+}

@@ -3,6 +3,8 @@
 //! closure, so these replace serde/clap/rand/env_logger/criterion/proptest).
 pub mod bench;
 pub mod cli;
+pub mod fault;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -1,0 +1,182 @@
+//! Checkpoint/artifact I/O under injected faults (DESIGN.md §10).
+//!
+//! The tentpole crash-safety claim: a failure at *any* point of the
+//! save protocol — mid-write, pre-fsync, pre-rename, while rewriting
+//! the `LATEST` pointer — leaves the checkpoint directory loadable,
+//! with `load_latest` returning the last durable state.
+//!
+//! The fault registry is process-global, so these tests live in their
+//! own binary and serialize on a mutex; each arms its plan through a
+//! drop guard so a panicking assertion cannot leak faults into the
+//! next test.
+
+use std::fs;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use quant_noise::coordinator::checkpoint::{load_latest, save_checkpoint, Checkpoint, OptState};
+use quant_noise::model::params::ParamStore;
+use quant_noise::model::tensor::Tensor;
+use quant_noise::util::fault;
+use quant_noise::util::testing::temp_dir;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests and guarantee `fault::clear()` on every exit path.
+struct Armed<'a> {
+    _guard: MutexGuard<'a, ()>,
+}
+
+fn arm(spec: &str) -> Armed<'static> {
+    let guard = LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    fault::clear();
+    fault::install(spec).expect("valid fault spec");
+    Armed { _guard: guard }
+}
+
+impl Drop for Armed<'_> {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn sample(step: usize) -> Checkpoint {
+    let mut params = ParamStore::new();
+    params.insert("w0", Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]));
+    params.insert("b0", Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]));
+    let velocity =
+        vec![Tensor::from_vec(&[2, 3], vec![0.0; 6]), Tensor::from_vec(&[3], vec![9.0; 3])];
+    Checkpoint {
+        model: "lm".to_string(),
+        step,
+        batches: step + 1,
+        rng: (0x0123_4567_89ab_cdef, 0xfedc_ba98_7654_3211),
+        cfg_digest: 0xdead_beef_cafe_f00d,
+        params,
+        opt: OptState::Sgd { velocity },
+        hats: vec![(0, vec![1.5, 2.5])],
+    }
+}
+
+fn loadable_step(dir: &Path) -> usize {
+    load_latest(dir)
+        .expect("load_latest must not error on a crashed directory")
+        .expect("directory must stay loadable")
+        .step
+}
+
+#[test]
+fn short_write_leaves_loadable_last_good() {
+    let dir = temp_dir("fault-short");
+    {
+        let _armed = arm("ckpt.write=short@2");
+        save_checkpoint(&dir, &sample(2)).expect("first save clean");
+        let err = save_checkpoint(&dir, &sample(4)).expect_err("short write must fail");
+        assert!(err.to_string().contains("write"), "unexpected error: {err:#}");
+    }
+    // the torn step-4 temp file must not shadow the durable step-2
+    assert_eq!(loadable_step(&dir), 2);
+    assert!(
+        !dir.join("step-00000004.qnc1").exists(),
+        "a torn write must never be renamed into place"
+    );
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn fsync_failure_keeps_previous_checkpoint() {
+    let dir = temp_dir("fault-sync");
+    {
+        // ckpt.sync is hit twice per save (checkpoint file + LATEST
+        // pointer), so hit 3 is the second save's checkpoint fsync
+        let _armed = arm("ckpt.sync=err@3");
+        save_checkpoint(&dir, &sample(1)).expect("first save clean");
+        save_checkpoint(&dir, &sample(3)).expect_err("fsync fault must fail the save");
+    }
+    assert_eq!(loadable_step(&dir), 1);
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn rename_failure_keeps_previous_checkpoint() {
+    let dir = temp_dir("fault-rename");
+    {
+        // like ckpt.sync, the rename point fires for both the file and
+        // the LATEST pointer: hit 3 = second save's checkpoint rename
+        let _armed = arm("ckpt.rename=err@3");
+        save_checkpoint(&dir, &sample(1)).expect("first save clean");
+        save_checkpoint(&dir, &sample(3)).expect_err("rename fault must fail the save");
+    }
+    assert_eq!(loadable_step(&dir), 1);
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn torn_latest_pointer_still_loads() {
+    let dir = temp_dir("fault-latest");
+    {
+        // second save: checkpoint file lands durably, then the LATEST
+        // rewrite tears — the old pointer (still valid) wins
+        let _armed = arm("ckpt.latest.write=short@2");
+        save_checkpoint(&dir, &sample(2)).expect("first save clean");
+        save_checkpoint(&dir, &sample(4)).expect_err("torn LATEST must surface as an error");
+    }
+    assert_eq!(loadable_step(&dir), 2, "stale-but-valid LATEST is the crash contract");
+    // if the pointer is lost entirely, the scan must recover the newest
+    // durable file — which is step 4, whose write succeeded
+    fs::remove_file(dir.join("LATEST")).expect("remove LATEST");
+    assert_eq!(loadable_step(&dir), 4, "fallback scan must find the durable step-4 file");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn repeated_crashes_never_lose_the_directory() {
+    // every third write tears, deterministically; progress continues
+    // and the directory stays loadable after every attempt
+    let dir = temp_dir("fault-repeat");
+    let mut last_good = None;
+    {
+        let _armed = arm("ckpt.write=err~333:7");
+        for step in 1..=12 {
+            match save_checkpoint(&dir, &sample(step)) {
+                Ok(_) => last_good = Some(step),
+                Err(_) => {}
+            }
+            if let Some(want) = last_good {
+                assert_eq!(loadable_step(&dir), want, "after save attempt {step}");
+            }
+        }
+    }
+    assert!(last_good.is_some(), "permille plan should let some saves through");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn qnp1_load_fault_is_an_error_not_a_panic() {
+    let dir = temp_dir("fault-qnp1");
+    let path = dir.join("w.qnp1");
+    let mut store = ParamStore::new();
+    store.insert("w", Tensor::from_vec(&[2], vec![1.0, 2.0]));
+    store.save_qnp1(&path).expect("save");
+    {
+        let _armed = arm("load.qnp1=err");
+        let err = ParamStore::load_qnp1(&path).expect_err("injected read fault");
+        assert!(err.to_string().contains("injected fault"), "unexpected error: {err:#}");
+    }
+    // with the plan cleared the same file loads fine
+    let back = ParamStore::load_qnp1(&path).expect("clean load");
+    assert_eq!(back.get("w"), store.get("w"));
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn unarmed_points_cost_nothing_and_fire_nothing() {
+    let _guard = LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    fault::clear();
+    assert!(!fault::active());
+    assert!(fault::check("ckpt.write").is_ok());
+    let dir = temp_dir("fault-off");
+    save_checkpoint(&dir, &sample(9)).expect("saves succeed with no plan armed");
+    assert_eq!(loadable_step(&dir), 9);
+    fs::remove_dir_all(dir).ok();
+}

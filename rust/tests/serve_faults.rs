@@ -1,0 +1,396 @@
+//! `qn serve` robustness under hostile clients and injected faults
+//! (DESIGN.md §10): slow-header and mid-body-drop peers, per-model
+//! admission quotas, checksum-validated uploads, dropped connections,
+//! and a wedged backend that must not hold shutdown hostage.
+//!
+//! The fault registry is process-global, so every test in this binary
+//! — whether it arms faults or not — serializes on one mutex, and
+//! armed plans clear through a drop guard.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use quant_noise::coordinator::checkpoint::{self, Checkpoint, OptState};
+use quant_noise::model::params::ParamStore;
+use quant_noise::model::tensor::Tensor;
+use quant_noise::runtime::client::Backend;
+use quant_noise::runtime::manifest::Manifest;
+use quant_noise::serve::{ServeConfig, Server};
+use quant_noise::util::fault;
+use quant_noise::util::hash::{fnv1a64, to_hex};
+use quant_noise::util::json::Json;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    let g = LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    fault::clear();
+    g
+}
+
+/// Arm a fault plan for the test's lifetime; clears even on panic.
+struct Armed<'a> {
+    _guard: MutexGuard<'a, ()>,
+}
+
+fn arm(spec: &str) -> Armed<'static> {
+    let g = guard();
+    fault::install(spec).expect("valid fault spec");
+    Armed { _guard: g }
+}
+
+impl Drop for Armed<'_> {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/interp")
+}
+
+fn cfg_interp() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        backend: Some(Backend::Interp),
+        ..ServeConfig::default()
+    }
+}
+
+/// One-shot HTTP exchange over raw bytes: returns (status, head, body).
+fn http_bytes(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(150))).expect("timeout");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).expect("send head");
+    stream.write_all(body).expect("send body");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("recv");
+    let raw = String::from_utf8_lossy(&raw).into_owned();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw}"));
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    (status, head.to_string(), body.to_string())
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    http_bytes(addr, method, path, body.as_bytes())
+}
+
+fn lm_eval_body(man: &Manifest) -> String {
+    let meta = man.model("lm_tiny").expect("lm_tiny in fixture");
+    let n = meta.batch * meta.seq_len;
+    let tokens: Vec<String> = (0..n).map(|i| (i % meta.vocab).to_string()).collect();
+    let targets: Vec<String> = (0..n).map(|i| ((i + 1) % meta.vocab).to_string()).collect();
+    format!(
+        r#"{{"model": "lm_tiny", "tokens": [{}], "targets": [{}]}}"#,
+        tokens.join(","),
+        targets.join(",")
+    )
+}
+
+fn stat_f64(addr: SocketAddr, path: &str) -> f64 {
+    let (status, _, body) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(&body).unwrap_or_else(|e| panic!("bad stats {body}: {e}"));
+    j.get_path(path).as_f64().unwrap_or_else(|| panic!("no {path} in {body}"))
+}
+
+// -------------------------------------------------- hostile clients ---
+
+#[test]
+fn slow_header_client_gets_408_and_is_counted() {
+    let _g = guard();
+    let cfg = ServeConfig { io_timeout: Duration::from_millis(300), ..cfg_interp() };
+    let server = Server::start(&fixture_dir(), cfg).expect("start");
+    let addr = server.addr();
+
+    // start a request, then stall past the whole-request deadline — the
+    // classic slowloris shape a per-read timeout alone cannot catch
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"POST /v1/eval HTTP/1.1\r\nHost: t\r\n").expect("partial head");
+    std::thread::sleep(Duration::from_millis(800));
+    let mut raw = String::new();
+    let _ = stream.read_to_string(&mut raw);
+    assert!(raw.starts_with("HTTP/1.1 408"), "want 408, got: {raw:?}");
+    assert!(stat_f64(addr, "timeouts") >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn idle_keepalive_connection_closes_silently() {
+    let _g = guard();
+    let cfg = ServeConfig { io_timeout: Duration::from_millis(300), ..cfg_interp() };
+    let server = Server::start(&fixture_dir(), cfg).expect("start");
+    let addr = server.addr();
+
+    // a connection that never starts a request is idle, not stalled:
+    // it must be closed without a 408 (and without a timeout count)
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    std::thread::sleep(Duration::from_millis(800));
+    let mut raw = String::new();
+    let _ = stream.read_to_string(&mut raw);
+    assert!(raw.is_empty(), "idle expiry must close silently, got: {raw:?}");
+    server.shutdown();
+}
+
+#[test]
+fn mid_body_drop_leaves_the_worker_alive() {
+    let _g = guard();
+    let server = Server::start(&fixture_dir(), cfg_interp()).expect("start");
+    let addr = server.addr();
+
+    // claim a body, send a fragment, vanish
+    {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(
+                b"POST /v1/eval HTTP/1.1\r\nHost: t\r\nContent-Length: 500\r\n\r\n{\"mo",
+            )
+            .expect("fragment");
+    } // <- dropped: connection closed mid-body
+
+    // the worker that hit the truncated read must survive to serve this
+    let man = Manifest::load(&fixture_dir()).expect("manifest");
+    let (status, _, resp) = http(addr, "POST", "/v1/eval", &lm_eval_body(&man));
+    assert_eq!(status, 200, "{resp}");
+    server.shutdown();
+}
+
+// --------------------------------------------------- injected faults ---
+
+#[test]
+fn dropped_accept_does_not_take_down_the_acceptor() {
+    let _armed = arm("serve.accept=err@1");
+    let server = Server::start(&fixture_dir(), cfg_interp()).expect("start");
+    let addr = server.addr();
+
+    // first connection is dropped on the floor by the fault point
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let _ = stream.write_all(b"GET /v1/stats HTTP/1.1\r\nHost: t\r\n\r\n");
+    let mut raw = String::new();
+    let got = stream.read_to_string(&mut raw);
+    assert!(
+        raw.is_empty() || got.is_err(),
+        "faulted connection must see no response, got: {raw:?}"
+    );
+
+    // the acceptor itself survives and serves the next peer
+    let (status, _, _) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn connection_faults_after_read_and_before_write_are_contained() {
+    // hit counts are per-point: connection 1 dies at serve.read before
+    // its serve.write check ever runs, so connection 2 is the write
+    // point's FIRST hit
+    let _armed = arm("serve.read=err@1;serve.write=err@1");
+    let server = Server::start(&fixture_dir(), cfg_interp()).expect("start");
+    let addr = server.addr();
+
+    // hit 1: connection dies right after the request is read
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let _ = stream.write_all(b"GET /v1/stats HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let mut raw = String::new();
+    let got = stream.read_to_string(&mut raw);
+    assert!(raw.is_empty() || got.is_err(), "no response expected, got: {raw:?}");
+
+    // hit 2 of serve.read passes; serve.write's hit 1 then fires —
+    // response computed, then dropped before send
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let _ = stream.write_all(b"GET /v1/stats HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let mut raw = String::new();
+    let got = stream.read_to_string(&mut raw);
+    assert!(raw.is_empty() || got.is_err(), "no response expected, got: {raw:?}");
+
+    // both workers survive
+    let (status, _, _) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn per_model_quota_answers_429_and_is_counted() {
+    // wedge each batch briefly so admitted jobs pile up behind the
+    // batcher and the quota actually binds
+    let _armed = arm("serve.batch=hang:500");
+    let man = Manifest::load(&fixture_dir()).expect("manifest");
+    let body = lm_eval_body(&man);
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_per_model: 1,
+        http_threads: 8,
+        linger: Duration::ZERO,
+        ..cfg_interp()
+    };
+    let server = Server::start(&fixture_dir(), cfg).expect("start");
+    let addr = server.addr();
+
+    let mut saw_quota = false;
+    for _ in 0..5 {
+        let results = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..4).map(|_| s.spawn(|| http(addr, "POST", "/v1/eval", &body))).collect();
+            handles.into_iter().map(|h| h.join().expect("client")).collect::<Vec<_>>()
+        });
+        for (status, head, resp) in results {
+            match status {
+                200 => {}
+                429 => {
+                    assert!(head.contains("Retry-After"), "{head}");
+                    if resp.contains("quota") {
+                        saw_quota = true;
+                    }
+                }
+                other => panic!("unexpected status {other}: {resp}"),
+            }
+        }
+        if saw_quota {
+            break;
+        }
+    }
+    assert!(saw_quota, "4-way burst against max_per_model=1 never hit the quota");
+    assert!(stat_f64(addr, "rejected_quota") >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn wedged_backend_cannot_hold_shutdown_hostage() {
+    // every batch sleeps 10s — far past the 300ms drain budget
+    let _armed = arm("serve.batch=hang:10000");
+    let man = Manifest::load(&fixture_dir()).expect("manifest");
+    let body = lm_eval_body(&man);
+    let cfg = ServeConfig {
+        drain_timeout: Duration::from_millis(300),
+        linger: Duration::ZERO,
+        ..cfg_interp()
+    };
+    let server = Server::start(&fixture_dir(), cfg).expect("start");
+    let addr = server.addr();
+
+    std::thread::scope(|s| {
+        let stuck = s.spawn(move || http(addr, "POST", "/v1/eval", &body));
+        // let the job reach the batcher and wedge
+        std::thread::sleep(Duration::from_millis(300));
+        // elapsed-time check only — never reaches result bits
+        #[allow(clippy::disallowed_methods)]
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_secs(5),
+            "shutdown took {took:?} against a 300ms drain budget"
+        );
+        // the abandoned handler answers 503, not a hang or a panic
+        let (status, _, resp) = stuck.join().expect("stuck client");
+        assert_eq!(status, 503, "{resp}");
+        assert!(resp.contains("abandon"), "{resp}");
+    });
+}
+
+// ------------------------------------------------------------ upload ---
+
+fn scaled(store: &ParamStore, f: f32) -> ParamStore {
+    let mut out = ParamStore::new();
+    for (n, t) in store.iter() {
+        out.insert(n, Tensor::from_vec(&t.shape, t.data.iter().map(|x| x * f).collect()));
+    }
+    out
+}
+
+#[test]
+fn upload_swaps_weights_and_rejects_corruption() {
+    let _g = guard();
+    let man = Manifest::load(&fixture_dir()).expect("manifest");
+    let meta = man.model("lm_tiny").expect("meta");
+    let init = ParamStore::load_qnp1(&man.init_path(meta)).expect("init");
+    let body = lm_eval_body(&man);
+    let server = Server::start(&fixture_dir(), cfg_interp()).expect("start");
+    let addr = server.addr();
+
+    let (_, _, before) = http(addr, "POST", "/v1/eval", &body);
+    let v1_bits = Json::parse(&before).expect("json").get("sum_nll").as_f64();
+
+    // 1. valid QNP1 upload with a matching checksum
+    let up = scaled(&init, 0.5).to_qnp1_bytes();
+    let path = format!("/v1/models/lm_tiny/params?checksum={}", to_hex(fnv1a64(&up)));
+    let (status, _, resp) = http_bytes(addr, "POST", &path, &up);
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).expect("json");
+    assert_eq!(j.get("version").as_f64(), Some(2.0), "{resp}");
+    assert_eq!(j.get("scheme").as_str(), Some("none"), "{resp}");
+    assert!(j.get("sq_error").as_f64().expect("sq_error") > 0.0, "{resp}");
+
+    // evals now run on the uploaded weights (version 2, new bits)
+    let (status, _, after) = http(addr, "POST", "/v1/eval", &body);
+    assert_eq!(status, 200, "{after}");
+    let j = Json::parse(&after).expect("json");
+    assert_eq!(j.get("version").as_f64(), Some(2.0), "{after}");
+    assert_ne!(j.get("sum_nll").as_f64(), v1_bits, "halved weights must change the loss");
+
+    // 2. QNC1 checkpoint bodies are accepted too (params extracted)
+    let velocity: Vec<Tensor> =
+        init.iter().map(|(_, t)| Tensor::from_vec(&t.shape, vec![0.0; t.numel()])).collect();
+    let ck = Checkpoint {
+        model: "lm_tiny".into(),
+        step: 3,
+        batches: 3,
+        rng: (1, 3),
+        cfg_digest: 0,
+        params: init.clone(),
+        opt: OptState::Sgd { velocity },
+        hats: vec![],
+    };
+    let (status, _, resp) =
+        http_bytes(addr, "POST", "/v1/models/lm_tiny/params", &checkpoint::encode(&ck));
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(Json::parse(&resp).expect("json").get("version").as_f64(), Some(3.0));
+
+    // 3. checksum mismatch is a typed 400, nothing swaps
+    let path = format!("/v1/models/lm_tiny/params?checksum={}", to_hex(0xdead_beef));
+    let (status, _, resp) = http_bytes(addr, "POST", &path, &up);
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("checksum mismatch"), "{resp}");
+
+    // 4. truncated QNP1 → 400 with byte-offset context
+    let (status, _, resp) =
+        http_bytes(addr, "POST", "/v1/models/lm_tiny/params", &up[..up.len() / 2]);
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("byte"), "{resp}");
+
+    // 5. bit-flipped QNC1 → 400 (the trailer catches it)
+    let mut rot = checkpoint::encode(&ck);
+    let mid = rot.len() / 2;
+    rot[mid] ^= 0x20;
+    let (status, _, resp) = http_bytes(addr, "POST", "/v1/models/lm_tiny/params", &rot);
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("trailer hash"), "{resp}");
+
+    // 6. wrong-shaped payload / unknown model / empty body
+    let mut tiny = ParamStore::new();
+    tiny.insert("w", Tensor::from_vec(&[2], vec![1.0, 2.0]));
+    let (status, _, resp) =
+        http_bytes(addr, "POST", "/v1/models/lm_tiny/params", &tiny.to_qnp1_bytes());
+    assert_eq!(status, 400, "{resp}");
+    let (status, _, _) = http_bytes(addr, "POST", "/v1/models/ghost/params", &up);
+    assert_eq!(status, 404);
+    let (status, _, resp) = http_bytes(addr, "POST", "/v1/models/lm_tiny/params", b"");
+    assert_eq!(status, 400, "{resp}");
+
+    // none of the rejects swapped anything: still version 3
+    let (_, _, info) = http(addr, "GET", "/v1/models/lm_tiny", "");
+    assert_eq!(Json::parse(&info).expect("json").get("version").as_f64(), Some(3.0), "{info}");
+    assert!(stat_f64(addr, "swaps") >= 2.0);
+    server.shutdown();
+}

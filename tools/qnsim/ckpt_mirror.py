@@ -1,0 +1,373 @@
+"""Mirror of the QNC1 checkpoint framing + resume math (DESIGN.md §10).
+
+The risky logic behind `rust/src/coordinator/checkpoint.rs` and the
+`Trainer::resume_from` contract, re-implemented independently from the
+on-disk spec so the properties the Rust tests assert can be validated
+without a Rust toolchain:
+
+1. fnv1a64 — known vectors, and the injectivity argument behind
+   "every single-bit flip is detected": each FNV-1a update step
+   h' = (h ^ b) * prime is injective in h (odd prime, invertible mod
+   2^64) and in b, so a flip anywhere in a fixed-length body always
+   changes the trailer.
+2. QNC1 wire format — magic | u32 LE header len | compact JSON header
+   | f32 LE payload (params, opt slots, hats sorted by idx) | fnv1a64
+   LE trailer, trailer verified FIRST. Properties: canonical encode,
+   roundtrip, every truncation rejected, every single-bit flip
+   rejected.
+3. resume math — a toy trainer drawing from the real Pcg in the
+   trainer's per-step order (hat-refresh splits, layerdrop f32 draws,
+   per-step seed mask) with f32 SGD-momentum updates and a counted
+   data cursor. Capturing (rng state_parts, batches drawn, params,
+   velocity, hats) at step k and rebuilding from the decoded bytes
+   must replay the remaining steps bit-identically.
+
+Run: python3 ckpt_mirror.py  (prints PASS/FAIL per assertion)
+"""
+import json
+import struct
+
+import numpy as np
+
+from pcg import Pcg
+
+M64 = (1 << 64) - 1
+
+# ------------------------------------------------------------ fnv1a64
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & M64
+    return h
+
+
+# ------------------------------------------------------- QNC1 framing
+
+
+def compact_json(obj) -> str:
+    """Match rust util/json.rs Display: no spaces, f64 with zero
+    fraction printed as integers, insertion-ordered keys."""
+    return json.dumps(obj, separators=(",", ":"))
+
+
+def f32_bytes(xs) -> bytes:
+    return np.asarray(xs, dtype="<f4").tobytes()
+
+
+def encode(ck: dict) -> bytes:
+    hats = sorted(ck["hats"], key=lambda h: h[0])
+    opt = ck["opt"]
+    slots = 1 if opt["kind"] == "sgd" else 2
+    header = compact_json(
+        {
+            "version": 1,
+            "model": ck["model"],
+            "step": ck["step"],
+            "batches": ck["batches"],
+            "rng_state": "%016x" % ck["rng"][0],
+            "rng_inc": "%016x" % ck["rng"][1],
+            "cfg_digest": "%016x" % ck["cfg_digest"],
+            "opt": {"kind": opt["kind"], "t": opt.get("t", 0), "slots": slots},
+            "params": [
+                {"name": n, "shape": list(t.shape)} for n, t in ck["params"]
+            ],
+            "hats": [{"idx": i, "len": len(h)} for i, h in hats],
+        }
+    ).encode()
+    out = b"QNC1" + struct.pack("<I", len(header)) + header
+    for _, t in ck["params"]:
+        out += f32_bytes(t.ravel())
+    for slot in opt["slots_data"]:
+        for t in slot:
+            out += f32_bytes(t.ravel())
+    for _, h in hats:
+        out += f32_bytes(h)
+    return out + struct.pack("<Q", fnv1a64(out))
+
+
+class Corrupt(Exception):
+    pass
+
+
+def decode(bytes_: bytes) -> dict:
+    if len(bytes_) < 16:
+        raise Corrupt("file too short")
+    body = bytes_[:-8]
+    (want,) = struct.unpack("<Q", bytes_[-8:])
+    if fnv1a64(body) != want:
+        raise Corrupt("trailer hash mismatch")
+    if bytes_[:4] != b"QNC1":
+        raise Corrupt("bad magic")
+    (hlen,) = struct.unpack("<I", bytes_[4:8])
+    if 8 + hlen > len(body):
+        raise Corrupt("header length exceeds file")
+    j = json.loads(body[8 : 8 + hlen].decode())
+    if j["version"] != 1:
+        raise Corrupt("unsupported version")
+    off = 8 + hlen
+
+    def take(n):
+        nonlocal off
+        need = n * 4
+        if off + need > len(body):
+            raise Corrupt("truncated payload")
+        v = np.frombuffer(body[off : off + need], dtype="<f4").copy()
+        off += need
+        return v
+
+    params = []
+    for p in j["params"]:
+        numel = int(np.prod(p["shape"])) if p["shape"] else 1
+        params.append((p["name"], take(numel).reshape(p["shape"])))
+    slots = []
+    for _ in range(j["opt"]["slots"]):
+        slots.append([take(t.size).reshape(t.shape) for _, t in params])
+    hats = [(h["idx"], take(h["len"])) for h in j["hats"]]
+    if off != len(body):
+        raise Corrupt("trailing bytes after payload")
+    return {
+        "model": j["model"],
+        "step": j["step"],
+        "batches": j["batches"],
+        "rng": (int(j["rng_state"], 16), int(j["rng_inc"], 16)),
+        "cfg_digest": int(j["cfg_digest"], 16),
+        "params": params,
+        "opt": {"kind": j["opt"]["kind"], "t": j["opt"]["t"], "slots_data": slots},
+        "hats": hats,
+    }
+
+
+# ----------------------------------------------------- toy resume sim
+
+
+class ToyTrainer:
+    """Draws from the real Pcg in the trainer's per-step order:
+    hat-refresh splits at the refresh boundary, per-chunk layerdrop
+    f32s, then the per-step noise-seed mask; f32 SGD with momentum."""
+
+    HAT_REFRESH = 4
+    LR = np.float32(0.1)
+    MOM = np.float32(0.9)
+
+    def __init__(self, seed):
+        self.rng = Pcg(seed)
+        self.params = [
+            np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+            np.ones(4, dtype=np.float32) * np.float32(0.5),
+        ]
+        self.vel = [np.zeros_like(p) for p in self.params]
+        self.hats = []
+        self.step = 0
+        self.batches = 0
+        self.data_cursor = 0  # the "batcher": a counted token stream
+
+    def next_batch(self):
+        self.data_cursor += 7
+        self.batches += 1
+        return np.float32(1.0 + (self.data_cursor % 13) * 0.25)
+
+    def one_step(self):
+        if self.step % self.HAT_REFRESH == 0:
+            # hat refresh: one split per noised param, two f32 draws each
+            self.hats = []
+            for i in range(len(self.params)):
+                sub = self.rng.split(i)
+                self.hats.append(
+                    (i, [np.float32(sub.next_f32()), np.float32(sub.next_f32())])
+                )
+        drop = np.float32(self.rng.next_f32())  # layerdrop draw
+        seed = self.rng.next_u32() & 0x7FFFFFFF  # per-step noise seed
+        x = self.next_batch()
+        scale = np.float32(seed % 97) * np.float32(0.01) + drop
+        for i, p in enumerate(self.params):
+            g = (p * x + scale + self.hats[i][1][0]).astype(np.float32)
+            self.vel[i] = (self.MOM * self.vel[i] + g).astype(np.float32)
+            self.params[i] = (p - self.LR * self.vel[i]).astype(np.float32)
+        self.step += 1
+
+    def run(self, steps):
+        while self.step < steps:
+            self.one_step()
+
+    def to_checkpoint(self):
+        return {
+            "model": "toy",
+            "step": self.step,
+            "batches": self.batches,
+            "rng": (self.rng.state, self.rng.inc),
+            "cfg_digest": 0xDEADBEEFCAFEF00D,
+            "params": [("w%d" % i, p.copy()) for i, p in enumerate(self.params)],
+            "opt": {
+                "kind": "sgd",
+                "t": 0,
+                "slots_data": [[v.copy() for v in self.vel]],
+            },
+            "hats": [(i, list(h)) for i, h in self.hats],
+        }
+
+    @classmethod
+    def resume(cls, ck, seed):
+        t = cls(seed)  # fresh world, as after a crash
+        # the resume math under test: restore the rng position from
+        # state_parts, re-draw and discard `batches` from the data
+        # source, and reload params/velocity/hats
+        t.rng.state, t.rng.inc = ck["rng"]
+        for _ in range(ck["batches"]):
+            t.next_batch()
+        t.batches = ck["batches"]
+        t.step = ck["step"]
+        t.params = [p.copy() for _, p in ck["params"]]
+        t.vel = [v.copy() for v in ck["opt"]["slots_data"][0]]
+        t.hats = [(i, [np.float32(x) for x in h]) for i, h in ck["hats"]]
+        return t
+
+
+# ------------------------------------------------------------- checks
+
+PASS = 0
+FAIL = 0
+
+
+def check(name, ok, detail=""):
+    global PASS, FAIL
+    if ok:
+        PASS += 1
+        print("PASS %s" % name)
+    else:
+        FAIL += 1
+        print("FAIL %s %s" % (name, detail))
+
+
+def bits(arrs):
+    return [a.astype(np.float32).view(np.uint32).tolist() for a in arrs]
+
+
+def sample_ck():
+    t = ToyTrainer(11)
+    t.run(5)
+    return t.to_checkpoint()
+
+
+def main():
+    # 1. fnv1a64 vectors (reference values of the 64-bit FNV-1a spec)
+    check("fnv.empty", fnv1a64(b"") == 0xCBF29CE484222325)
+    check("fnv.a", fnv1a64(b"a") == 0xAF63DC4C8601EC8C)
+    check("fnv.foobar", fnv1a64(b"foobar") == 0x85944171F73967E8)
+
+    # 2. QNC1 framing
+    ck = sample_ck()
+    enc = encode(ck)
+    check("qnc1.canonical", enc == encode(decode(enc)))
+    back = decode(enc)
+    check(
+        "qnc1.roundtrip.scalars",
+        (back["step"], back["batches"], back["rng"], back["cfg_digest"])
+        == (ck["step"], ck["batches"], ck["rng"], ck["cfg_digest"]),
+    )
+    check("qnc1.roundtrip.params", bits([p for _, p in back["params"]])
+          == bits([p for _, p in ck["params"]]))
+    check(
+        "qnc1.roundtrip.opt",
+        bits(back["opt"]["slots_data"][0]) == bits(ck["opt"]["slots_data"][0]),
+    )
+    check(
+        "qnc1.roundtrip.hats",
+        bits([np.asarray(h, np.float32) for _, h in back["hats"]])
+        == bits([np.asarray(h, np.float32) for _, h in sorted(ck["hats"])]),
+    )
+
+    every_cut = all(_rejected(enc[:cut]) for cut in range(len(enc)))
+    check("qnc1.every_truncation_rejected", every_cut)
+
+    every_flip = True
+    for i in range(len(enc)):
+        for bit in range(8):
+            m = bytearray(enc)
+            m[i] ^= 1 << bit
+            if not _rejected(bytes(m)):
+                every_flip = False
+                print("  surviving flip at byte %d bit %d" % (i, bit))
+    check("qnc1.every_bitflip_rejected", every_flip)
+
+    # hats arrive sorted regardless of capture order
+    shuffled = dict(ck, hats=list(reversed(ck["hats"])))
+    check("qnc1.hats_canonical_order", encode(shuffled) == enc)
+
+    # adam framing: two slots roundtrip with t
+    adam = dict(
+        ck,
+        opt={
+            "kind": "adam",
+            "t": 5,
+            "slots_data": [
+                [p * np.float32(0.1) for _, p in ck["params"]],
+                [p * np.float32(0.2) for _, p in ck["params"]],
+            ],
+        },
+    )
+    aback = decode(encode(adam))
+    check(
+        "qnc1.adam_two_slots",
+        aback["opt"]["t"] == 5
+        and bits(aback["opt"]["slots_data"][1])
+        == bits(adam["opt"]["slots_data"][1]),
+    )
+
+    # 3. resume math: kill at k, rebuild from decoded bytes, finish —
+    # bit-identical to the uninterrupted run for every kill point,
+    # including kills straddling the hat-refresh boundary (refresh=4)
+    TOTAL = 9
+    ref = ToyTrainer(23)
+    ref.run(TOTAL)
+    ref_bits = bits(ref.params)
+    ref_rng = (ref.rng.state, ref.rng.inc)
+    all_ok = True
+    for kill in range(1, TOTAL):
+        t = ToyTrainer(23)
+        t.run(kill)
+        wire = encode(t.to_checkpoint())
+        del t  # the crash
+        r = ToyTrainer.resume(decode(wire), 23)
+        r.run(TOTAL)
+        if bits(r.params) != ref_bits or (r.rng.state, r.rng.inc) != ref_rng:
+            all_ok = False
+            print("  divergence after kill@%d" % kill)
+    check("resume.kill_matrix_bit_identical", all_ok)
+
+    # the negative control: dropping any piece of state breaks replay,
+    # proving each checkpointed field is load-bearing
+    t = ToyTrainer(23)
+    t.run(3)
+    ck3 = t.to_checkpoint()
+    stale_rng = dict(ck3, rng=(Pcg(23).state, Pcg(23).inc))
+    r = ToyTrainer.resume(stale_rng, 23)
+    r.run(TOTAL)
+    check("resume.rng_is_load_bearing", bits(r.params) != ref_bits)
+    stale_cursor = dict(ck3, batches=0)
+    r = ToyTrainer.resume(stale_cursor, 23)
+    r.run(TOTAL)
+    check("resume.cursor_is_load_bearing", bits(r.params) != ref_bits)
+    no_hats = dict(ck3, hats=[(i, [0.0, 0.0]) for i, _ in ck3["hats"]])
+    r = ToyTrainer.resume(no_hats, 23)
+    r.run(TOTAL)
+    check("resume.hats_are_load_bearing", bits(r.params) != ref_bits)
+
+    print("summary: %d passed, %d failed" % (PASS, FAIL))
+    raise SystemExit(1 if FAIL else 0)
+
+
+def _rejected(b):
+    try:
+        decode(b)
+        return False
+    except (Corrupt, Exception):
+        return True
+
+
+if __name__ == "__main__":
+    main()
